@@ -1,0 +1,58 @@
+//! Quickstart: the paper's high-level API, verbatim.
+//!
+//! Mirrors the C++ snippet from the paper (fgpl, src/test/dist_range_test.cc):
+//!
+//! ```c++
+//! DistRange<int> range(0, lines.size());
+//! DistHashMap<std::string, int> target;
+//! const auto& mapper = [&](const int i, const auto& emit) { ... emit(word, 1); };
+//! range.mapreduce<std::string, int, std::hash<std::string>>(
+//!     mapper, Reducer<int>::sum, target);
+//! ```
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use blaze::cluster::{spawn_cluster, NetModel};
+use blaze::corpus::{split_spaces, Corpus, CorpusSpec};
+use blaze::dist::{reducer, CombineMode, DistHashMap, DistRange};
+use blaze::hash::HashKind;
+
+fn main() {
+    // A small corpus in the paper's shape (Bible+Shakespeare-like, tiled).
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(4 << 20));
+    let lines = &corpus.lines;
+    println!("corpus: {} lines, {} words", lines.len(), corpus.words);
+
+    // A 2-node simulated cluster, 4 threads each.
+    let nnodes = 2;
+    let nthreads = 4;
+    let results = spawn_cluster(nnodes, NetModel::aws_like(), |comm| {
+        // DistRange<int> range(0, lines.size());
+        let range = DistRange::new(0, lines.len() as i64);
+        // DistHashMap<std::string, int> target;
+        let target: DistHashMap<String, u64> =
+            DistHashMap::new(comm.rank, nnodes, nthreads, HashKind::Fx, CombineMode::Eager);
+
+        // range.mapreduce(mapper, Reducer<int>::sum, target);
+        range.mapreduce(comm, nthreads, &target, reducer::sum, |i, emit| {
+            for word in split_spaces(&lines[i as usize]) {
+                emit(word.to_string(), 1);
+            }
+        });
+
+        // Each node returns its owned shard of the result.
+        target.to_vec_local()
+    });
+
+    // Merge shards (disjoint by key ownership) and show the top words.
+    let mut counts: Vec<(String, u64)> = results.into_iter().flatten().collect();
+    counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    println!("\ntop 10 words:");
+    for (word, count) in counts.iter().take(10) {
+        println!("  {count:>10}  {word}");
+    }
+
+    let total: u64 = counts.iter().map(|(_, c)| c).sum();
+    assert_eq!(total, corpus.words, "every word must be counted exactly once");
+    println!("\ntotal counted: {total} (matches corpus)  ✓");
+}

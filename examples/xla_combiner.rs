@@ -1,0 +1,84 @@
+//! XLA/PJRT-accelerated combiner: the three-layer path end to end.
+//!
+//! L3 (rust) tokenizes and dictionary-encodes the corpus, the AOT-compiled
+//! L2/L1 artifact (JAX graph wrapping the Pallas one-hot-matmul histogram
+//! kernel) counts each shard, and L3 merges shard counts. Also demonstrates
+//! the hashed-bucket variant (unbounded vocab) and cross-checks both
+//! against pure-rust counting — rust and kernel share the same hash.
+//!
+//! Run: `make artifacts && cargo run --release --example xla_combiner`
+
+use blaze::corpus::{Corpus, CorpusSpec, Vocab};
+use blaze::runtime::{hash_bucket_of, HistogramRuntime};
+use blaze::util::stats::{fmt_rate, Stopwatch};
+
+fn main() {
+    if !HistogramRuntime::available() {
+        eprintln!("artifacts/ not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let hr = HistogramRuntime::from_env().expect("PJRT runtime");
+    println!(
+        "artifact spec: shard={} tokens, vocab={}, hash buckets={}, pad={}",
+        hr.spec.shard_tokens, hr.spec.vocab, hr.spec.hash_buckets, hr.spec.pad_id
+    );
+
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(8 << 20));
+    let vocab = Vocab::from_lines(&corpus.lines);
+    println!(
+        "corpus: {} words, {} distinct words (vocab capacity {})\n",
+        corpus.words,
+        vocab.len() - 1,
+        hr.spec.vocab
+    );
+
+    // --- encode (L3) ---
+    let sw = Stopwatch::start();
+    let ids = vocab.encode_lines(&corpus.lines);
+    println!("encode: {} ids in {:.3}s", ids.len(), sw.elapsed_secs());
+
+    // --- dense histogram through the artifact (L1/L2) ---
+    let sw = Stopwatch::start();
+    let counts = hr.count_tokens(&ids).expect("count_tokens");
+    let secs = sw.elapsed_secs();
+    let total: u64 = counts.iter().sum();
+    println!(
+        "dense histogram: {total} tokens in {secs:.3}s = {}",
+        fmt_rate(total as f64 / secs, "tokens")
+    );
+    assert_eq!(counts, hr.count_tokens_serial(&ids), "kernel vs rust serial");
+    println!("  verified against rust serial count ✓");
+
+    // --- top-k through the fused L2 graph ---
+    let one_shard: Vec<i32> = {
+        let mut s = ids[..ids.len().min(hr.spec.shard_tokens)].to_vec();
+        s.resize(hr.spec.shard_tokens, hr.spec.pad_id);
+        s
+    };
+    let top = hr.shard_topk(&one_shard).expect("topk artifact");
+    println!("\ntop-5 of the first shard (via the AOT top-k graph):");
+    for (id, c) in top.iter().take(5) {
+        println!("  {c:>8}  {}", vocab.word_of(*id));
+    }
+
+    // --- hashed-bucket histogram (unbounded-vocab path) ---
+    let sw = Stopwatch::start();
+    let hashed = hr.count_hashed(&ids).expect("count_hashed");
+    println!(
+        "\nhashed histogram ({} buckets) in {:.3}s",
+        hashed.len(),
+        sw.elapsed_secs()
+    );
+    assert_eq!(hashed, hr.count_hashed_serial(&ids), "hash kernel vs rust serial");
+    println!("  verified: kernel and rust agree on every bucket (shared hash) ✓");
+
+    // Show the shared hash on a concrete word.
+    let word = "the";
+    let id = vocab.id_of(word);
+    let bucket = hash_bucket_of(id, hr.spec.hash_buckets as u32);
+    println!(
+        "\nexample: word {word:?} → id {id} → bucket {bucket} (same on L1 and L3); \
+         bucket count = {}",
+        hashed[bucket as usize]
+    );
+}

@@ -1,0 +1,97 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the published ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes one ``.hlo.txt`` per exported graph plus ``manifest.json`` recording
+the static shapes the rust side must honor. Incremental: `make artifacts`
+only reruns this when compile/ sources change.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower every exported graph; returns {name: hlo_text}."""
+    tok_spec = jax.ShapeDtypeStruct((model.SHARD_TOKENS,), jnp.int32)
+    graphs = {
+        "token_hist": jax.jit(lambda t: model.count_shard(t, vocab=model.VOCAB)).lower(tok_spec),
+        "token_hist_topk": jax.jit(
+            lambda t: model.count_shard_topk(t, vocab=model.VOCAB, k=model.TOP_K)
+        ).lower(tok_spec),
+        "hash_hist": jax.jit(
+            lambda t: model.hash_count_shard(t, buckets=model.HASH_BUCKETS)
+        ).lower(tok_spec),
+    }
+    return {name: to_hlo_text(low) for name, low in graphs.items()}
+
+
+def manifest() -> dict:
+    return {
+        "shard_tokens": model.SHARD_TOKENS,
+        "vocab": model.VOCAB,
+        "hash_buckets": model.HASH_BUCKETS,
+        "top_k": model.TOP_K,
+        "pad_id": -1,
+        "artifacts": {
+            "token_hist": "token_hist.hlo.txt",
+            "token_hist_topk": "token_hist_topk.hlo.txt",
+            "hash_hist": "hash_hist.hlo.txt",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    texts = lower_all()
+    for name, text in texts.items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+    # Flat key=value mirror for the rust runtime (no JSON parser offline).
+    m = manifest()
+    tpath = os.path.join(args.out, "manifest.txt")
+    with open(tpath, "w") as f:
+        for key in ("shard_tokens", "vocab", "hash_buckets", "top_k", "pad_id"):
+            f.write(f"{key}={m[key]}\n")
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: hashed-bucket histogram.
+
+For unbounded vocabularies the dense histogram does not fit; the paper's
+`DistHashMap` routes keys by a multiplicative hash, and this kernel applies
+the *same trick* on the accelerator: token ids are hashed into ``buckets``
+with a 32-bit golden-ratio multiplicative hash, then histogrammed with the
+one-hot MXU reduction of ``token_count``. The rust runtime mirrors the hash
+(``runtime::histogram::hash_bucket_of``) so both layers agree on bucket
+assignment.
+
+PAD convention: ids < 0 map to bucket -1 (no match).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 32-bit golden-ratio multiplier (2^32 / phi), the classic Fibonacci-hash
+# constant; keep in sync with rust `runtime::histogram::HASH_MULT`.
+HASH_MULT = 0x9E3779B9
+
+BLOCK_T = 2048
+BLOCK_B = 512
+
+
+def bucket_ids(tokens, *, buckets: int):
+    """Reference bucket computation (shared by kernel and oracle):
+    ``((token * HASH_MULT) mod 2^32) >> (32 - log2(buckets))``.
+    """
+    assert buckets & (buckets - 1) == 0, "buckets must be a power of two"
+    shift = 32 - buckets.bit_length() + 1  # 32 - log2(buckets)
+    h = (tokens.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> jnp.uint32(shift)
+    return jnp.where(tokens < 0, jnp.int32(-1), h.astype(jnp.int32))
+
+
+def _hash_hist_kernel(tok_ref, out_ref, *, block_b: int, buckets: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    toks = tok_ref[...]
+    b = bucket_ids(toks, buckets=buckets)  # (block_t,) in [-1, buckets)
+    base = j * block_b
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_b,), 0)
+    onehot = (b[:, None] == ids[None, :]).astype(jnp.float32)
+    ones = jnp.ones((1, toks.shape[0]), jnp.float32)
+    partial_counts = jnp.dot(ones, onehot)[0]
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial_counts
+
+
+@partial(jax.jit, static_argnames=("buckets", "block_t", "block_b"))
+def hash_histogram(tokens, *, buckets: int, block_t: int = BLOCK_T, block_b: int = BLOCK_B):
+    """Histogram of hashed buckets. ``tokens`` int32 (N,), N % block_t == 0,
+    ``buckets`` a power of two and a multiple of ``block_b``.
+    """
+    n = tokens.shape[0]
+    assert n % block_t == 0
+    assert buckets % block_b == 0
+    grid = (n // block_t, buckets // block_b)
+    out = pl.pallas_call(
+        partial(_hash_hist_kernel, block_b=block_b, buckets=buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((buckets,), jnp.float32),
+        interpret=True,
+    )(tokens.astype(jnp.int32))
+    return out.astype(jnp.int32)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel result is asserted (in pytest and in hypothesis sweeps)
+against these reference implementations, which use only straightforward
+jnp ops (bincount / where) with no tiling tricks.
+"""
+
+import jax.numpy as jnp
+
+from .hash_bucket import bucket_ids
+
+
+def token_histogram_ref(tokens, *, vocab: int):
+    """Counts of ids in [0, vocab); PAD (< 0) and out-of-range ids ignored."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    valid = (tokens >= 0) & (tokens < vocab)
+    # bincount needs non-negative input; clamp then zero out invalid weight.
+    clamped = jnp.where(valid, tokens, 0)
+    return jnp.bincount(clamped, weights=valid.astype(jnp.int32), length=vocab).astype(
+        jnp.int32
+    )
+
+
+def hash_histogram_ref(tokens, *, buckets: int):
+    """Counts of hashed buckets; PAD ids vanish."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    b = bucket_ids(tokens, buckets=buckets)
+    valid = b >= 0
+    clamped = jnp.where(valid, b, 0)
+    return jnp.bincount(clamped, weights=valid.astype(jnp.int32), length=buckets).astype(
+        jnp.int32
+    )

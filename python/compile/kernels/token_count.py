@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: token-id histogram via one-hot MXU matmul.
+
+The compute hot-spot of word count, once words are dictionary-encoded, is a
+histogram: ``counts[v] = sum_i [token_i == v]``. On a GPU one would use
+shared-memory atomics; TPUs have no scatter-atomics in the VMEM programming
+model, so the paper's "combine locally in fast memory" insight is re-thought
+for the MXU (DESIGN.md §Hardware-Adaptation):
+
+* the token stream is tiled into blocks of ``block_t`` ids resident in VMEM;
+* the vocabulary axis is tiled into blocks of ``block_v``;
+* for a (token-block, vocab-block) grid step the kernel materializes a
+  ``(block_t, block_v)`` one-hot matrix in VMEM and reduces it with a
+  ``(1, block_t) @ (block_t, block_v)`` matmul — a systolic-array-shaped
+  reduction (bf16-friendly on real TPU; f32 here for integer exactness in
+  interpret mode);
+* grid steps over token blocks accumulate into the same vocab-block of the
+  output, i.e. the HBM->VMEM schedule a GPU kernel would express with
+  threadblock tiling is expressed with BlockSpecs.
+
+Padding convention: ids < 0 (PAD) match no vocab slot and vanish; id 0 is
+reserved for out-of-vocabulary words (rust side: ``corpus::Vocab::UNK``).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the VMEM/MXU model
+in DESIGN.md §7.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tiling (see DESIGN.md §7 for the VMEM budget arithmetic):
+# one-hot tile = 2048 x 512 f32 = 4 MiB, token block 8 KiB, output block
+# 2 KiB — comfortably inside a ~16 MiB VMEM with double-buffering room.
+BLOCK_T = 2048
+BLOCK_V = 512
+
+
+def _hist_kernel(tok_ref, out_ref, *, block_v: int):
+    """One grid step: accumulate token block i into vocab block j."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    toks = tok_ref[...]  # (block_t,) int32
+    base = j * block_v
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_v,), 0)
+    # One-hot in VMEM; PAD ids (< 0) match nothing.
+    onehot = (toks[:, None] == ids[None, :]).astype(jnp.float32)
+    ones = jnp.ones((1, toks.shape[0]), jnp.float32)
+    partial_counts = jnp.dot(ones, onehot)[0]  # (block_v,) MXU reduction
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial_counts
+
+
+@partial(jax.jit, static_argnames=("vocab", "block_t", "block_v"))
+def token_histogram(tokens, *, vocab: int, block_t: int = BLOCK_T, block_v: int = BLOCK_V):
+    """Histogram of ``tokens`` (int32, shape (N,)) over ``[0, vocab)``.
+
+    N must be a multiple of ``block_t`` and ``vocab`` of ``block_v``
+    (callers pad tokens with -1). Returns int32 counts of shape (vocab,).
+    """
+    n = tokens.shape[0]
+    assert n % block_t == 0, f"token count {n} not a multiple of {block_t}"
+    assert vocab % block_v == 0, f"vocab {vocab} not a multiple of {block_v}"
+    grid = (n // block_t, vocab // block_v)
+    out = pl.pallas_call(
+        partial(_hist_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((block_v,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((vocab,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tokens.astype(jnp.int32))
+    return out.astype(jnp.int32)

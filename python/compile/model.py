@@ -1,0 +1,70 @@
+"""L2: the word-count compute graph, built on the L1 Pallas kernels.
+
+This is the accelerated-combiner model the rust runtime executes: a shard
+of dictionary-encoded tokens goes in, per-vocabulary counts come out. Two
+graphs are exported:
+
+* ``count_shard``      — dense histogram over a fixed vocab (+ top-k variant).
+* ``hash_count_shard`` — hashed-bucket histogram for unbounded vocabs.
+
+Both lower the Pallas kernel *into the same HLO module* (interpret mode →
+plain HLO ops), so the AOT artifact is self-contained for the CPU PJRT
+client. Shapes are static (PJRT AOT requires it); the rust side pads the
+final shard with PAD (-1) ids.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hash_bucket import hash_histogram
+from .kernels.token_count import token_histogram
+
+# Export shapes — keep in sync with rust/src/runtime/histogram.rs and
+# artifacts/manifest.json (written by aot.py).
+SHARD_TOKENS = 65_536
+VOCAB = 8_192
+HASH_BUCKETS = 4_096
+TOP_K = 32
+
+
+@partial(jax.jit, static_argnames=("vocab",))
+def count_shard(tokens, *, vocab: int = VOCAB):
+    """tokens int32 (SHARD_TOKENS,) -> (counts int32 (vocab,),)."""
+    return (token_histogram(tokens, vocab=vocab),)
+
+
+@partial(jax.jit, static_argnames=("vocab", "k"))
+def count_shard_topk(tokens, *, vocab: int = VOCAB, k: int = TOP_K):
+    """Counts plus the top-k (counts, ids) — the L2 graph composes the L1
+    kernel with an XLA sort-based reduction, exercising kernel+graph
+    composition in one artifact.
+
+    Implemented with ``sort_key_val`` rather than ``jax.lax.top_k``: the
+    xla_extension 0.5.1 HLO-text parser predates the ``topk(..., largest=)``
+    attribute, while plain ``sort`` round-trips. Stable sort on negated
+    counts gives descending counts with ascending-id tie-break — the same
+    order as the rust-side ``wordcount::top_k``.
+    """
+    counts = token_histogram(tokens, vocab=vocab)
+    ids = jax.lax.broadcasted_iota(jnp.int32, (vocab,), 0)
+    neg_sorted, sorted_ids = jax.lax.sort_key_val(-counts, ids)
+    top_counts = -neg_sorted[:k]
+    top_ids = sorted_ids[:k]
+    return counts, top_counts, top_ids.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("buckets",))
+def hash_count_shard(tokens, *, buckets: int = HASH_BUCKETS):
+    """tokens int32 (SHARD_TOKENS,) -> (bucket counts int32 (buckets,),)."""
+    return (hash_histogram(tokens, buckets=buckets),)
+
+
+def merge_shard_counts(per_shard_counts):
+    """Tree-sum of per-shard count vectors (associative reduce — the same
+    contract the rust reducers rely on)."""
+    acc = jnp.zeros_like(per_shard_counts[0])
+    for c in per_shard_counts:
+        acc = acc + c
+    return acc

@@ -1,0 +1,145 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+hypothesis sweeps shapes, vocab sizes, id ranges (including PAD and
+out-of-range ids) and asserts exact equality against the pure-jnp oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hash_bucket import HASH_MULT, bucket_ids, hash_histogram
+from compile.kernels.ref import hash_histogram_ref, token_histogram_ref
+from compile.kernels.token_count import token_histogram
+
+
+def assert_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# ---------------------------------------------------------------- dense ----
+
+
+class TestTokenHistogramBasics:
+    def test_simple_counts(self):
+        toks = jnp.array([0, 1, 1, 2, 2, 2, 5, 5] + [-1] * 120, jnp.int32)
+        toks = jnp.pad(toks, (0, 128 - toks.shape[0] % 128 if toks.shape[0] % 128 else 0),
+                       constant_values=-1)
+        # pad to one block of 128 with block_t=128
+        out = token_histogram(toks, vocab=128, block_t=128, block_v=128)
+        assert int(out[0]) == 1
+        assert int(out[1]) == 2
+        assert int(out[2]) == 3
+        assert int(out[5]) == 2
+        assert int(out.sum()) == 8
+
+    def test_all_pad_is_zero(self):
+        toks = jnp.full((256,), -1, jnp.int32)
+        out = token_histogram(toks, vocab=128, block_t=128, block_v=64)
+        assert int(out.sum()) == 0
+
+    def test_single_hot_id(self):
+        toks = jnp.full((512,), 7, jnp.int32)
+        out = token_histogram(toks, vocab=128, block_t=128, block_v=32)
+        assert int(out[7]) == 512
+        assert int(out.sum()) == 512
+
+    def test_multiblock_accumulation(self):
+        # 4 token blocks x 4 vocab blocks: the accumulation path matters.
+        toks = jnp.arange(1024, dtype=jnp.int32) % 256
+        out = token_histogram(toks, vocab=256, block_t=256, block_v=64)
+        assert_equal(out, np.full(256, 4, np.int32))
+
+    def test_out_of_range_ids_ignored(self):
+        toks = jnp.array([0, 1, 300, 4000, -5, 2] + [-1] * 122, jnp.int32)
+        out = token_histogram(toks, vocab=128, block_t=128, block_v=128)
+        assert int(out.sum()) == 3  # only 0,1,2 are in-range
+
+    def test_rejects_misaligned_shapes(self):
+        with pytest.raises(AssertionError):
+            token_histogram(jnp.zeros(100, jnp.int32), vocab=128, block_t=64, block_v=64)
+        with pytest.raises(AssertionError):
+            token_histogram(jnp.zeros(128, jnp.int32), vocab=100, block_t=64, block_v=64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block_t=st.sampled_from([128, 256]),
+    vocab_blocks=st.integers(1, 3),
+    block_v=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    pad_frac=st.floats(0.0, 0.5),
+)
+def test_token_histogram_matches_ref(n_blocks, block_t, vocab_blocks, block_v, seed, pad_frac):
+    n = n_blocks * block_t
+    vocab = vocab_blocks * block_v
+    rng = np.random.default_rng(seed)
+    # ids spanning PAD, valid range, and out-of-range overflow.
+    toks = rng.integers(0, int(vocab * 1.25) + 1, size=n).astype(np.int32)
+    pad_mask = rng.random(n) < pad_frac
+    toks[pad_mask] = -1
+    got = token_histogram(jnp.array(toks), vocab=vocab, block_t=block_t, block_v=block_v)
+    want = token_histogram_ref(toks, vocab=vocab)
+    assert_equal(got, want, f"n={n} vocab={vocab}")
+
+
+# ----------------------------------------------------------------- hash ----
+
+
+class TestHashBucket:
+    def test_bucket_range(self):
+        toks = jnp.arange(10_000, dtype=jnp.int32)
+        b = np.asarray(bucket_ids(toks, buckets=1024))
+        assert b.min() >= 0
+        assert b.max() < 1024
+
+    def test_pad_maps_to_minus_one(self):
+        toks = jnp.array([-1, -7, 3], jnp.int32)
+        b = np.asarray(bucket_ids(toks, buckets=256))
+        assert b[0] == -1 and b[1] == -1 and b[2] >= 0
+
+    def test_bucket_distribution_roughly_uniform(self):
+        toks = jnp.arange(65_536, dtype=jnp.int32)
+        b = np.asarray(bucket_ids(toks, buckets=256))
+        counts = np.bincount(b, minlength=256)
+        mean = 65_536 / 256
+        assert counts.min() > mean / 3
+        assert counts.max() < mean * 3
+
+    def test_matches_known_constant(self):
+        # Pin the hash so rust (runtime::histogram) and python stay in sync.
+        t = np.int32(12345)
+        h = (np.uint64(np.uint32(t)) * np.uint64(HASH_MULT)) % np.uint64(2**32)
+        expect = int(h) >> (32 - 8)
+        got = int(bucket_ids(jnp.array([t]), buckets=256)[0])
+        assert got == expect
+
+    def test_rejects_non_power_of_two(self):
+        with pytest.raises(AssertionError):
+            bucket_ids(jnp.zeros(4, jnp.int32), buckets=100)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    block_t=st.sampled_from([128, 256]),
+    buckets=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hash_histogram_matches_ref(n_blocks, block_t, buckets, seed):
+    n = n_blocks * block_t
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(-2, 1_000_000, size=n).astype(np.int32)
+    got = hash_histogram(jnp.array(toks), buckets=buckets, block_t=block_t, block_b=min(buckets, 128))
+    want = hash_histogram_ref(toks, buckets=buckets)
+    assert_equal(got, want)
+
+
+def test_histograms_are_deterministic():
+    rng = np.random.default_rng(42)
+    toks = jnp.array(rng.integers(0, 500, size=512).astype(np.int32))
+    a = token_histogram(toks, vocab=512, block_t=256, block_v=128)
+    b = token_histogram(toks, vocab=512, block_t=256, block_v=128)
+    assert_equal(a, b)

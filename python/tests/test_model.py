@@ -1,0 +1,73 @@
+"""L2 graph tests: export-shaped shards, top-k composition, merge."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import hash_histogram_ref, token_histogram_ref
+
+
+def make_shard(seed=0, hot_id=3, hot_count=1000):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, model.VOCAB, size=model.SHARD_TOKENS).astype(np.int32)
+    toks[:hot_count] = hot_id
+    # Pad the tail as the rust runtime does for a final partial shard.
+    toks[-500:] = -1
+    return toks
+
+
+def test_count_shard_matches_ref():
+    toks = make_shard()
+    (counts,) = model.count_shard(jnp.array(toks))
+    want = token_histogram_ref(toks, vocab=model.VOCAB)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(want))
+
+
+def test_count_shard_shapes_and_dtype():
+    toks = jnp.zeros((model.SHARD_TOKENS,), jnp.int32)
+    (counts,) = model.count_shard(toks)
+    assert counts.shape == (model.VOCAB,)
+    assert counts.dtype == jnp.int32
+
+
+def test_topk_graph_agrees_with_counts():
+    toks = make_shard(seed=1, hot_id=77, hot_count=5000)
+    counts, top_counts, top_ids = model.count_shard_topk(jnp.array(toks))
+    assert top_ids.shape == (model.TOP_K,)
+    assert int(top_ids[0]) == 77
+    assert int(top_counts[0]) == int(counts[77])
+    # top-k really is the k largest.
+    c = np.asarray(counts)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(top_counts))[::-1],
+        np.sort(c)[::-1][: model.TOP_K],
+    )
+
+
+def test_hash_count_shard_matches_ref():
+    toks = make_shard(seed=2)
+    (counts,) = model.hash_count_shard(jnp.array(toks))
+    want = hash_histogram_ref(toks, buckets=model.HASH_BUCKETS)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(want))
+
+
+def test_merge_shard_counts_is_sum():
+    a = jnp.array([1, 2, 3], jnp.int32)
+    b = jnp.array([10, 0, 5], jnp.int32)
+    merged = model.merge_shard_counts([a, b, a])
+    np.testing.assert_array_equal(np.asarray(merged), [12, 4, 11])
+
+
+def test_shard_totals_conserved_across_shards():
+    """Sharding a stream and merging histograms == one big histogram."""
+    rng = np.random.default_rng(3)
+    total = model.SHARD_TOKENS * 2
+    toks = rng.integers(0, model.VOCAB, size=total).astype(np.int32)
+    shard_counts = []
+    for s in range(2):
+        shard = toks[s * model.SHARD_TOKENS : (s + 1) * model.SHARD_TOKENS]
+        (c,) = model.count_shard(jnp.array(shard))
+        shard_counts.append(c)
+    merged = model.merge_shard_counts(shard_counts)
+    want = token_histogram_ref(toks, vocab=model.VOCAB)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(want))

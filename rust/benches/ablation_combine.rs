@@ -1,0 +1,85 @@
+//! Experiment A3: the paper's third cause — "My design performs local
+//! reduce during the map phase before shuffling the (key, value) pairs so
+//! that the network traffic is significantly reduced."
+//!
+//! Blaze with eager combining (pending maps combine continuously) vs
+//! `CombineMode::None` (every emission shipped raw), under a slow network
+//! where shuffle bytes actually hurt; Spark's per-partition combiner
+//! on/off for contrast. Reports both words/sec and bytes shuffled.
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::dist::CombineMode;
+use blaze::engines::spark::{word_count_lines, SparkConf, SparkContext};
+use blaze::metrics::Table;
+use blaze::util::stats::fmt_bytes;
+use blaze::wordcount::{EngineChoice, WordCountJob};
+use std::sync::Arc;
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    // Tiled small-vocab corpus: heavy key repetition makes combining matter.
+    let corpus = Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        base_block_bytes: Some((bytes / 32).clamp(64 << 10, 4 << 20)),
+        vocab_size: 10_000,
+        ..Default::default()
+    });
+    eprintln!("A3 corpus: {} ({} words)", fmt_bytes(corpus.bytes), corpus.words);
+
+    let mut shuffled: Vec<(String, u64)> = Vec::new();
+
+    let mut runner = BenchRunner::new("A3: map-side local reduce (slow network)");
+    for (name, combine) in [
+        ("blaze: eager combine (paper)", CombineMode::Eager),
+        ("blaze: no combine (ship all pairs)", CombineMode::None),
+    ] {
+        let job = WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(4)
+            .threads_per_node(2)
+            .net(NetModel::slow()) // make shuffle volume visible in time
+            .combine(combine);
+        let corpus = &corpus;
+        let mut last_bytes = 0u64;
+        runner.bench(name, "words", || {
+            let r = job.run(corpus).expect("run");
+            last_bytes = r.shuffle_bytes;
+            r.words as f64
+        });
+        shuffled.push((name.to_string(), last_bytes));
+    }
+
+    // Spark contrast: per-partition combiner on/off (records shipped).
+    let lines = Arc::new(corpus.lines.clone());
+    for (name, on) in [
+        ("spark: map-side combine on", true),
+        ("spark: map-side combine off", false),
+    ] {
+        let lines = Arc::clone(&lines);
+        let mut last_bytes = 0u64;
+        runner.bench(name, "words", || {
+            let mut conf = SparkConf::emr_like(4, 2);
+            conf.map_side_combine = on;
+            conf.net = NetModel::slow();
+            let ctx = SparkContext::new(conf);
+            let total = word_count_lines(&ctx, Arc::clone(&lines), Tokenizer::Spaces)
+                .expect("run")
+                .values()
+                .sum::<u64>() as f64;
+            last_bytes = ctx
+                .metrics()
+                .shuffle_bytes_written
+                .load(std::sync::atomic::Ordering::Relaxed);
+            total
+        });
+        shuffled.push((name.to_string(), last_bytes));
+    }
+    runner.finish();
+
+    let mut t = Table::new("A3: bytes serialized for shuffle", &["config", "bytes"]);
+    for (name, b) in shuffled {
+        t.row(&[name, fmt_bytes(b)]);
+    }
+    println!("{}", t.to_markdown());
+}

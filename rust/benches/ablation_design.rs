@@ -1,0 +1,100 @@
+//! Design-choice ablations (DESIGN.md §4 rows the paper leaves implicit):
+//!
+//! * **Hash function** — fx (default) vs fnv1a vs wyhash, both as raw
+//!   throughput on word-like keys and end-to-end through the Blaze engine.
+//! * **Key skew** — the map-side-combine benefit as a function of the Zipf
+//!   exponent: skewed vocabularies combine well (few hot keys), flat ones
+//!   don't, so shuffle volume and throughput should cross over.
+
+use blaze::benchkit::BenchRunner;
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec, ZipfVocab};
+use blaze::hash::HashKind;
+use blaze::metrics::Table;
+use blaze::util::rng::Xoshiro256;
+use blaze::util::stats::fmt_bytes;
+use blaze::wordcount::{EngineChoice, WordCountJob};
+
+fn main() {
+    // ---------------- hash-kind sweep ----------------
+    let vocab = ZipfVocab::english_like(30_000);
+    let mut rng = Xoshiro256::new(3);
+    let words: Vec<&str> = (0..2_000_000).map(|_| vocab.sample(&mut rng)).collect();
+
+    let mut runner = BenchRunner::new("D1: hash function choice");
+    for kind in [HashKind::Fx, HashKind::Fnv1a, HashKind::Wy] {
+        let words = &words;
+        runner.bench(format!("raw hash throughput: {kind:?}"), "keys", move || {
+            let mut acc = 0u64;
+            for w in words {
+                acc ^= kind.hash(w.as_bytes());
+            }
+            std::hint::black_box(acc);
+            words.len() as f64
+        });
+    }
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(8 << 20));
+    for kind in [HashKind::Fx, HashKind::Fnv1a, HashKind::Wy] {
+        let mut job = WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(1)
+            .threads_per_node(4)
+            .net(NetModel::ideal());
+        job.hash = kind;
+        let corpus = &corpus;
+        runner.bench(format!("blaze word count: {kind:?}"), "words", move || {
+            job.run(corpus).expect("run").words as f64
+        });
+    }
+    runner.finish();
+
+    // ---------------- skew sweep ----------------
+    let mut runner = BenchRunner::new("D2: combine benefit vs key skew (Zipf exponent)");
+    let mut shuffle_rows: Vec<(String, u64, u64)> = Vec::new();
+    for exponent in [0.3f64, 0.8, 1.07, 1.5] {
+        let corpus = Corpus::generate(&CorpusSpec {
+            target_bytes: 8 << 20,
+            vocab_size: 30_000,
+            exponent,
+            ..Default::default()
+        });
+        let mut bytes = [0u64; 2];
+        for (i, combine) in [blaze::dist::CombineMode::Eager, blaze::dist::CombineMode::None]
+            .into_iter()
+            .enumerate()
+        {
+            let job = WordCountJob::new(EngineChoice::BlazeTcm)
+                .nodes(4)
+                .threads_per_node(2)
+                .net(NetModel::aws_like())
+                .combine(combine);
+            let corpus = &corpus;
+            let mut last = 0u64;
+            runner.bench(
+                format!("s={exponent}, combine={combine:?}"),
+                "words",
+                || {
+                    let r = job.run(corpus).expect("run");
+                    last = r.shuffle_bytes;
+                    r.words as f64
+                },
+            );
+            bytes[i] = last;
+        }
+        shuffle_rows.push((format!("s={exponent}"), bytes[0], bytes[1]));
+    }
+    runner.finish();
+
+    let mut t = Table::new(
+        "D2: shuffle bytes — eager combine vs raw, by skew",
+        &["zipf s", "eager", "raw", "reduction"],
+    );
+    for (s, eager, raw) in shuffle_rows {
+        t.row(&[
+            s,
+            fmt_bytes(eager),
+            fmt_bytes(raw),
+            format!("{:.1}x", raw as f64 / eager.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+}

@@ -1,0 +1,75 @@
+//! Experiment A2: the paper's second cause — "MPI/OpenMP is not designed
+//! for fault tolerance ... Fault tolerance incurs additional overhead."
+//!
+//! Two measurements:
+//! 1. **Steady-state tax**: Spark-sim with FT on (persisted shuffle blocks
+//!    on real disk + retry bookkeeping) vs FT off, no failures injected.
+//! 2. **Recovery cost**: one injected failure — Spark retries one task
+//!    from lineage; Blaze reruns the whole job (the paper's "run the task
+//!    multiple times" regime).
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::spark::{word_count_lines, SparkConf, SparkContext};
+use blaze::util::stats::fmt_bytes;
+use blaze::wordcount::{EngineChoice, WordCountJob};
+use std::sync::Arc;
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    let lines = Arc::new(corpus.lines.clone());
+    eprintln!("A2 corpus: {} ({} words)", fmt_bytes(corpus.bytes), corpus.words);
+
+    // --- 1. steady-state FT tax (no failures) ---
+    let mut tax = BenchRunner::new("A2a: fault-tolerance steady-state tax (Spark-sim)");
+    for (name, ft) in [("spark: FT on (persist+lineage)", true), ("spark: FT off", false)] {
+        let lines = Arc::clone(&lines);
+        tax.bench(name, "words", move || {
+            let mut conf = SparkConf::emr_like(2, 4);
+            conf.fault_tolerance = ft;
+            conf.net = NetModel::aws_like();
+            let ctx = SparkContext::new(conf);
+            word_count_lines(&ctx, Arc::clone(&lines), Tokenizer::Spaces)
+                .expect("run")
+                .values()
+                .sum::<u64>() as f64
+        });
+    }
+    tax.finish();
+
+    // --- 2. recovery cost under one failure ---
+    let mut rec = BenchRunner::new("A2b: cost of one failure (recovery strategies)");
+    let corpus_ref = &corpus;
+    rec.bench("spark: 1 task fails, lineage retry", "words", || {
+        let r = WordCountJob::new(EngineChoice::Spark)
+            .nodes(2)
+            .threads_per_node(4)
+            .net(NetModel::aws_like())
+            .failures(FailurePlan::none().fail_task(0, 1))
+            .run(corpus_ref)
+            .expect("recovers");
+        r.words as f64
+    });
+    rec.bench("blaze: 1 node fails, whole-job rerun", "words", || {
+        let r = WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(2)
+            .threads_per_node(4)
+            .net(NetModel::aws_like())
+            .failures(FailurePlan::none().fail_node(1, 0))
+            .run(corpus_ref)
+            .expect("recovers");
+        r.words as f64
+    });
+    rec.bench("blaze: clean run (baseline)", "words", || {
+        WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(2)
+            .threads_per_node(4)
+            .net(NetModel::aws_like())
+            .run(corpus_ref)
+            .expect("run")
+            .words as f64
+    });
+    rec.finish();
+}

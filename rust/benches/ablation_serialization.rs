@@ -1,0 +1,69 @@
+//! Experiment A1: the paper's first cause — "MPI/OpenMP uses C++ and runs
+//! natively while Spark/Scala runs through a virtual machine."
+//!
+//! The Spark-sim models the JVM as four separable mechanisms; this bench
+//! removes them one at a time (and then all at once) to attribute the gap:
+//!
+//!   full EMR-like  →  -serialization  →  -boxing  →  -utf16 strings+gc
+//!   →  -vm execution factor  →  stripped (native hypothetical)
+//!
+//! Expected shape: each knob recovers part of the gap; `stripped` lands
+//! within ~2x of Blaze (remaining difference = continuous combine +
+//! architecture, covered by A3).
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::spark::{word_count_lines, SparkConf, SparkContext};
+use blaze::util::stats::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    let lines = Arc::new(corpus.lines.clone());
+    eprintln!("A1 corpus: {} ({} words)", fmt_bytes(corpus.bytes), corpus.words);
+
+    let base = || SparkConf::emr_like(2, 4);
+
+    let variants: Vec<(&str, SparkConf)> = vec![
+        ("spark: full EMR-like", base()),
+        ("spark: -serialization", {
+            let mut c = base();
+            c.serialize_shuffle = false;
+            c.fault_tolerance = false; // typed blocks can't persist to disk
+            c
+        }),
+        ("spark: -record boxing", {
+            let mut c = base();
+            c.boxed_records = false;
+            c
+        }),
+        ("spark: -utf16 strings & gc", {
+            let mut c = base();
+            c.jvm_strings = false;
+            c.gc_model = false;
+            c
+        }),
+        ("spark: -vm exec factor", {
+            let mut c = base();
+            c.vm_execution_factor = 1.0;
+            c
+        }),
+        ("spark: stripped (native hypo)", SparkConf::stripped(2, 4)),
+    ];
+
+    let mut runner = BenchRunner::new("A1: attributing the JVM gap (Spark-sim knobs)");
+    for (name, conf) in variants {
+        let lines = Arc::clone(&lines);
+        runner.bench(name, "words", move || {
+            let mut conf = conf.clone();
+            conf.net = NetModel::aws_like();
+            let ctx = SparkContext::new(conf);
+            let counts = word_count_lines(&ctx, Arc::clone(&lines), Tokenizer::Spaces)
+                .expect("spark run");
+            counts.values().sum::<u64>() as f64
+        });
+    }
+    runner.finish();
+}

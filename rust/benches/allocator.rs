@@ -1,0 +1,93 @@
+//! Experiment M2: the "Blaze TCM" bar isolated — allocation cost in the
+//! insert hot path.
+//!
+//! The paper's fastest configuration links TCMalloc; its benefit on word
+//! count is cheaper small allocations (a `std::string` per token). We
+//! isolate exactly that effect three ways:
+//!
+//! * engine level: `KeyPath::AllocPerToken` vs `KeyPath::ZeroAlloc`;
+//! * map level: owned-key upsert vs borrowed-key upsert;
+//! * arena level: per-key `String` vs `StrArena` interning.
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cluster::NetModel;
+use blaze::concurrent::ProbeTable;
+use blaze::corpus::{Corpus, CorpusSpec, ZipfVocab};
+use blaze::hash::fxhash;
+use blaze::util::arena::StrArena;
+use blaze::util::rng::Xoshiro256;
+use blaze::util::stats::fmt_bytes;
+use blaze::wordcount::{EngineChoice, WordCountJob};
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    eprintln!("M2 corpus: {} ({} words)", fmt_bytes(corpus.bytes), corpus.words);
+
+    // --- engine level: the two Blaze bars ---
+    let mut runner = BenchRunner::new("M2: allocation in the insert hot path");
+    for engine in [EngineChoice::Blaze, EngineChoice::BlazeTcm] {
+        let job = WordCountJob::new(engine)
+            .nodes(1)
+            .threads_per_node(4)
+            .net(NetModel::ideal());
+        let corpus = &corpus;
+        let label = match engine {
+            EngineChoice::Blaze => "engine: alloc-per-token (Blaze)",
+            _ => "engine: zero-alloc path (Blaze TCM)",
+        };
+        runner.bench(label, "words", move || {
+            job.run(corpus).expect("run").words as f64
+        });
+    }
+
+    // --- map level micro: same stream, owned vs borrowed upsert ---
+    let vocab = ZipfVocab::english_like(30_000);
+    let mut rng = Xoshiro256::new(7);
+    let stream: Vec<&str> = (0..2_000_000).map(|_| vocab.sample(&mut rng)).collect();
+
+    {
+        let stream = &stream;
+        runner.bench("probe: upsert(owned String per op)", "ops", move || {
+            let mut t: ProbeTable<String, u64> = ProbeTable::new();
+            for &w in stream {
+                t.upsert(fxhash(w.as_bytes()), w.to_string(), 1, |a, b| *a += b);
+            }
+            stream.len() as f64
+        });
+    }
+    {
+        let stream = &stream;
+        runner.bench("probe: upsert_with(borrowed &str)", "ops", move || {
+            let mut t: ProbeTable<String, u64> = ProbeTable::new();
+            for &w in stream {
+                t.upsert_with(fxhash(w.as_bytes()), |k| k == w, || w.to_string(), 1, |a, b| {
+                    *a += b
+                });
+            }
+            stream.len() as f64
+        });
+    }
+    // --- arena level: interned keys (StrRef is Copy, 8 bytes) ---
+    {
+        let stream = &stream;
+        runner.bench("probe: arena-interned StrRef keys", "ops", move || {
+            // RefCell: the match closure reads the arena, the make-key
+            // closure appends; upsert_with never calls both in one probe.
+            let arena = std::cell::RefCell::new(StrArena::new());
+            let mut t: ProbeTable<blaze::util::arena::StrRef, u64> = ProbeTable::new();
+            for &w in stream {
+                let h = fxhash(w.as_bytes());
+                t.upsert_with(
+                    h,
+                    |r| arena.borrow().get(*r) == w,
+                    || arena.borrow_mut().intern(w),
+                    1,
+                    |a, b| *a += b,
+                );
+            }
+            stream.len() as f64
+        });
+    }
+    runner.finish();
+}

@@ -1,0 +1,104 @@
+//! Experiment M1: the ConcurrentHashMap design against lock-based maps.
+//!
+//! The paper's design section argues segments + thread caches (never
+//! block) + linear probing beat chained STL maps behind locks. This bench
+//! measures insert/combine throughput on a Zipf word stream across thread
+//! counts, for:
+//!
+//! * `ConcurrentHashMap` (paper design)
+//! * `ShardedLockMap` (mutex per shard, chained std::HashMap)
+//! * `GlobalLockMap` (one mutex, the naive baseline)
+//! * serial `ProbeTable` (upper bound per thread at T=1)
+
+use blaze::benchkit::BenchRunner;
+use blaze::concurrent::{CachePolicy, ConcurrentHashMap, GlobalLockMap, ProbeTable, ShardedLockMap};
+use blaze::corpus::ZipfVocab;
+use blaze::hash::{fxhash, HashKind};
+use blaze::util::pool::{parallel_for, Schedule};
+use blaze::util::rng::Xoshiro256;
+
+fn keys(n: usize) -> Vec<String> {
+    let vocab = ZipfVocab::english_like(30_000);
+    let mut rng = Xoshiro256::new(42);
+    (0..n).map(|_| vocab.sample(&mut rng).to_string()).collect()
+}
+
+fn main() {
+    let n: usize = std::env::var("BLAZE_BENCH_MAP_OPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    let keys = keys(n);
+    eprintln!("M1: {n} Zipf-distributed upserts");
+
+    let mut runner = BenchRunner::new("M1: concurrent map insert/combine throughput");
+
+    runner.bench("ProbeTable (serial, 1 thread)", "ops", || {
+        let mut t: ProbeTable<String, u64> = ProbeTable::new();
+        for k in &keys {
+            t.upsert_with(fxhash(k.as_bytes()), |e| e == k, || k.clone(), 1, |a, b| *a += b);
+        }
+        assert!(t.len() > 1000);
+        n as f64
+    });
+
+    // Both cache policies (the §Perf iteration): the paper's prose default
+    // (spill on contention) vs periodic cache-first flushing.
+    for (policy, tag) in [
+        (CachePolicy::SpillOnContention, "spill-on-contention"),
+        (CachePolicy::CacheFirst { flush_at: 64 * 1024 }, "cache-first"),
+    ] {
+        for threads in [1usize, 2, 4, 8] {
+            let keys = &keys;
+            runner.bench(
+                format!("ConcurrentHashMap[{tag}], {threads}T"),
+                "ops",
+                move || {
+                    let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_policy(
+                        blaze::concurrent::default_segments(threads),
+                        threads,
+                        HashKind::Fx,
+                        policy,
+                    );
+                    parallel_for(threads, keys.len(), Schedule::Static, |ctx, i| {
+                        let k = &keys[i];
+                        m.upsert_borrowed(
+                            ctx.worker,
+                            fxhash(k.as_bytes()),
+                            |e: &String| e == k,
+                            || k.clone(),
+                            1,
+                            |a, b| *a += b,
+                        );
+                    });
+                    m.sync(threads, |a, b| *a += b);
+                    keys.len() as f64
+                },
+            );
+        }
+    }
+
+    for threads in [1usize, 4, 8] {
+        let keys = &keys;
+        runner.bench(format!("ShardedLockMap(64), {threads} threads"), "ops", move || {
+            let m: ShardedLockMap<String, u64> = ShardedLockMap::new(64, HashKind::Fx);
+            parallel_for(threads, keys.len(), Schedule::Static, |_ctx, i| {
+                m.upsert(keys[i].clone(), 1, |a, b| *a += b);
+            });
+            keys.len() as f64
+        });
+    }
+
+    for threads in [1usize, 4] {
+        let keys = &keys;
+        runner.bench(format!("GlobalLockMap, {threads} threads"), "ops", move || {
+            let m: GlobalLockMap<String, u64> = GlobalLockMap::new();
+            parallel_for(threads, keys.len(), Schedule::Static, |_ctx, i| {
+                m.upsert(keys[i].clone(), 1, |a, b| *a += b);
+            });
+            keys.len() as f64
+        });
+    }
+
+    runner.finish();
+}

@@ -1,0 +1,91 @@
+//! Experiment X1 (extension): the XLA/PJRT-accelerated combiner vs the
+//! hash-map combiner on dictionary-encoded token streams.
+//!
+//! Caveat printed with the results: the Pallas kernel runs in interpret
+//! mode on the CPU PJRT client, so this measures the *integration path*
+//! (shard → execute artifact → merge), not TPU performance. DESIGN.md §7
+//! carries the VMEM/MXU estimate for real hardware.
+
+use blaze::benchkit::BenchRunner;
+use blaze::corpus::{Corpus, CorpusSpec, Vocab};
+use blaze::runtime::{hash_bucket_of, HistogramRuntime};
+use blaze::util::stats::fmt_bytes;
+
+fn main() {
+    if !HistogramRuntime::available() {
+        eprintln!("X1 skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let bytes = std::env::var("BLAZE_BENCH_XLA_BYTES")
+        .ok()
+        .and_then(|s| blaze::util::cli::parse_bytes(&s))
+        .unwrap_or(2 << 20);
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    let vocab = Vocab::from_lines(&corpus.lines);
+    let ids = vocab.encode_lines(&corpus.lines);
+    eprintln!(
+        "X1 corpus: {} = {} token ids, {} distinct",
+        fmt_bytes(corpus.bytes),
+        ids.len(),
+        vocab.len()
+    );
+    let hr = HistogramRuntime::from_env().expect("runtime");
+
+    let mut runner = BenchRunner::new("X1: combiner backends on token-id streams");
+    {
+        let ids = &ids;
+        runner.bench("rust serial histogram (dense)", "tokens", move || {
+            let counts = hr_serial_dense(ids, vocab.len().next_power_of_two());
+            std::hint::black_box(&counts);
+            ids.len() as f64
+        });
+    }
+    {
+        let ids = &ids;
+        let hr = &hr;
+        runner.bench("xla dense histogram (interpret)", "tokens", move || {
+            let counts = hr.count_tokens(ids).expect("xla");
+            std::hint::black_box(&counts);
+            ids.len() as f64
+        });
+    }
+    {
+        let ids = &ids;
+        let hr = &hr;
+        runner.bench("rust serial histogram (hashed)", "tokens", move || {
+            let mut counts = vec![0u64; hr.spec.hash_buckets];
+            for &t in ids.iter() {
+                if t >= 0 {
+                    counts[hash_bucket_of(t, hr.spec.hash_buckets as u32) as usize] += 1;
+                }
+            }
+            std::hint::black_box(&counts);
+            ids.len() as f64
+        });
+    }
+    {
+        let ids = &ids;
+        let hr = &hr;
+        runner.bench("xla hashed histogram (interpret)", "tokens", move || {
+            let counts = hr.count_hashed(ids).expect("xla");
+            std::hint::black_box(&counts);
+            ids.len() as f64
+        });
+    }
+    runner.finish();
+    println!(
+        "note: interpret-mode Pallas on CPU — integration-path timing only.\n\
+         Real-TPU estimate (DESIGN.md §7): one-hot tile 2048x512 f32 = 4 MiB VMEM,\n\
+         8 vocab blocks/shard; MXU does 2048x512 MAC per step at bf16."
+    );
+}
+
+fn hr_serial_dense(ids: &[i32], vocab: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; vocab];
+    for &t in ids {
+        if t >= 0 && (t as usize) < vocab {
+            counts[t as usize] += 1;
+        }
+    }
+    counts
+}

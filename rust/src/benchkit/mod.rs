@@ -1,0 +1,159 @@
+//! Bench harness (the offline crate set has no `criterion`).
+//!
+//! Each bench binary (`rust/benches/*.rs`, `harness = false`) builds a
+//! [`BenchRunner`], registers measurements, and prints markdown tables +
+//! ASCII charts. Methodology: `warmup` untimed runs, then `reps` timed
+//! runs; the reported statistic is median ± MAD (robust to stray outliers
+//! on a shared machine).
+//!
+//! Environment knobs (so `cargo bench` scales to the machine/time budget):
+//! * `BLAZE_BENCH_BYTES`   — corpus size for the word-count benches
+//!   (default 32 MB; the paper used 2 GB — set `BLAZE_BENCH_BYTES=2GB`
+//!   for a full-scale run).
+//! * `BLAZE_BENCH_REPS`    — timed repetitions (default 3).
+//! * `BLAZE_BENCH_WARMUP`  — warmup runs (default 1).
+
+use crate::util::stats::Summary;
+
+/// One measured configuration.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Seconds per rep.
+    pub secs: Summary,
+    /// Work units per rep (e.g. words), for rate reporting.
+    pub work_units: f64,
+    pub unit: &'static str,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.secs.median()
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.work_units / self.median_secs().max(1e-12)
+    }
+}
+
+pub struct BenchRunner {
+    pub title: String,
+    pub reps: usize,
+    pub warmup: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl BenchRunner {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            reps: env_usize("BLAZE_BENCH_REPS", 3),
+            warmup: env_usize("BLAZE_BENCH_WARMUP", 1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (which returns the work-unit count of one run).
+    pub fn bench(&mut self, name: impl Into<String>, unit: &'static str, mut f: impl FnMut() -> f64) {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut secs = Summary::new();
+        let mut work = 0.0;
+        for _ in 0..self.reps.max(1) {
+            let t0 = std::time::Instant::now();
+            work = f();
+            secs.add(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.clone(), secs, work_units: work, unit };
+        eprintln!(
+            "  {name:<40} {:>10.4}s ± {:.4}s   {}",
+            m.median_secs(),
+            m.secs.mad(),
+            crate::util::stats::fmt_rate(m.rate(), unit),
+        );
+        self.results.push(m);
+    }
+
+    /// Markdown table of all measurements.
+    pub fn table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(
+            self.title.clone(),
+            &["config", "median (s)", "mad (s)", "rate"],
+        );
+        for m in &self.results {
+            t.row(&[
+                m.name.clone(),
+                format!("{:.4}", m.median_secs()),
+                format!("{:.4}", m.secs.mad()),
+                crate::util::stats::fmt_rate(m.rate(), m.unit),
+            ]);
+        }
+        t
+    }
+
+    /// Bar chart of rates (the paper's figure format).
+    pub fn chart(&self) -> String {
+        let bars: Vec<(String, f64)> =
+            self.results.iter().map(|m| (m.name.clone(), m.rate())).collect();
+        let unit = self.results.first().map(|m| m.unit).unwrap_or("ops");
+        crate::metrics::ascii_bar_chart(&self.title, &bars, unit)
+    }
+
+    /// Print table + chart and write the CSV under `target/bench-results/`.
+    pub fn finish(&self) {
+        println!("\n{}", self.table().to_markdown());
+        println!("{}", self.chart());
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = std::path::Path::new("target/bench-results").join(format!("{slug}.csv"));
+        if let Err(e) = self.table().write_csv(&path) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("(csv written to {})", path.display());
+        }
+    }
+}
+
+/// Corpus size for word-count benches.
+pub fn bench_corpus_bytes() -> u64 {
+    std::env::var("BLAZE_BENCH_BYTES")
+        .ok()
+        .and_then(|s| crate::util::cli::parse_bytes(&s))
+        .unwrap_or(32 << 20)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut r = BenchRunner::new("test bench");
+        r.reps = 3;
+        r.warmup = 0;
+        r.bench("noop", "ops", || {
+            std::hint::black_box(42);
+            100.0
+        });
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].secs.count(), 3);
+        assert!(r.results[0].rate() > 0.0);
+        let md = r.table().to_markdown();
+        assert!(md.contains("noop"));
+    }
+
+    #[test]
+    fn corpus_bytes_default() {
+        // Only check it parses to something sane (env may be set).
+        assert!(bench_corpus_bytes() >= 1 << 10);
+    }
+}

@@ -1,0 +1,339 @@
+//! MPI-flavoured communicator for the simulated cluster.
+//!
+//! Each simulated node is an OS thread; `Comm` gives them ranked,
+//! per-pair-ordered, tagged message passing plus the collectives the
+//! MapReduce engines need (`barrier`, `all_to_all`, `gather`, `broadcast`).
+//! Message payloads are raw bytes — callers serialize with [`crate::util::ser`],
+//! which is exactly what makes "bytes on the wire" measurable.
+//!
+//! Transport: an `nnodes × nnodes` matrix of unbounded mpsc channels
+//! (`tx[src][dst]`), so sends never block and per-pair FIFO order holds.
+//! Receive applies the [`NetModel`] cost of the message and accounts it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+use super::netmodel::NetModel;
+
+/// Message tags keep protocol phases honest: a mismatched tag at the head
+/// of a pair's queue is a bug, not a reordering.
+pub type Tag = u32;
+
+pub const TAG_SHUFFLE: Tag = 1;
+pub const TAG_GATHER: Tag = 2;
+pub const TAG_BCAST: Tag = 3;
+pub const TAG_CONTROL: Tag = 4;
+
+struct Message {
+    tag: Tag,
+    payload: Vec<u8>,
+}
+
+/// Per-node communication statistics (shared, atomically updated).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub msgs_sent: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    /// Nanoseconds of simulated network time charged to this node's recvs.
+    pub net_time_ns: AtomicU64,
+}
+
+impl CommStats {
+    pub fn bytes(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn msgs(&self) -> u64 {
+        self.msgs_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn net_time_secs(&self) -> f64 {
+        self.net_time_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Cluster-wide shared state handed to every node's `Comm`.
+pub struct Fabric {
+    nnodes: usize,
+    netmodel: NetModel,
+    /// tx[src][dst]
+    senders: Vec<Vec<Sender<Message>>>,
+    /// rx[dst][src], each behind a mutex so only the owning node thread
+    /// uses it (Receiver is !Sync; the mutex makes Fabric shareable).
+    receivers: Vec<Vec<Mutex<Receiver<Message>>>>,
+    barrier: Barrier,
+    stats: Vec<CommStats>,
+}
+
+impl Fabric {
+    pub fn new(nnodes: usize, netmodel: NetModel) -> Arc<Self> {
+        assert!(nnodes > 0);
+        // senders[src][dst] pairs with receivers[dst][src].
+        let mut sender_slots: Vec<Vec<Option<Sender<Message>>>> =
+            (0..nnodes).map(|_| (0..nnodes).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Mutex<Receiver<Message>>>> =
+            (0..nnodes).map(|_| Vec::new()).collect();
+        for dst in 0..nnodes {
+            for src in 0..nnodes {
+                let (tx, rx) = channel();
+                sender_slots[src][dst] = Some(tx);
+                receivers[dst].push(Mutex::new(rx));
+            }
+        }
+        let senders = sender_slots
+            .into_iter()
+            .map(|row| row.into_iter().map(Option::unwrap).collect())
+            .collect();
+        Arc::new(Self {
+            nnodes,
+            netmodel,
+            senders,
+            receivers,
+            barrier: Barrier::new(nnodes),
+            stats: (0..nnodes).map(|_| CommStats::default()).collect(),
+        })
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nnodes
+    }
+
+    pub fn stats(&self, rank: usize) -> &CommStats {
+        &self.stats[rank]
+    }
+
+    /// Total bytes sent across all nodes.
+    pub fn total_bytes_sent(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Total simulated network seconds across all nodes.
+    pub fn total_net_time_secs(&self) -> f64 {
+        self.stats.iter().map(|s| s.net_time_secs()).sum()
+    }
+}
+
+/// A node's handle on the fabric.
+#[derive(Clone)]
+pub struct Comm {
+    pub rank: usize,
+    fabric: Arc<Fabric>,
+}
+
+impl Comm {
+    pub fn new(rank: usize, fabric: Arc<Fabric>) -> Self {
+        assert!(rank < fabric.nnodes());
+        Self { rank, fabric }
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.fabric.nnodes
+    }
+
+    /// Send `payload` to `dst` (never blocks; unbounded queue).
+    pub fn send(&self, dst: usize, tag: Tag, payload: Vec<u8>) {
+        let stats = &self.fabric.stats[self.rank];
+        stats.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_sent.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.fabric.senders[self.rank][dst]
+            .send(Message { tag, payload })
+            .expect("peer receiver dropped");
+    }
+
+    /// Blocking receive of the next message from `src`; the tag must match
+    /// (per-pair FIFO makes a mismatch a protocol bug). Applies the network
+    /// model's cost as wall-clock sleep, charged to this (receiving) node.
+    pub fn recv(&self, src: usize, tag: Tag) -> Vec<u8> {
+        let msg = {
+            let rx = self.fabric.receivers[self.rank][src].lock().unwrap();
+            rx.recv().expect("peer sender dropped")
+        };
+        assert_eq!(
+            msg.tag, tag,
+            "protocol error: rank {} expected tag {tag} from {src}, got {}",
+            self.rank, msg.tag
+        );
+        if src != self.rank {
+            let cost = self.fabric.netmodel.cost(msg.payload.len());
+            if !cost.is_zero() {
+                std::thread::sleep(cost);
+            }
+            self.fabric.stats[self.rank]
+                .net_time_ns
+                .fetch_add(cost.as_nanos() as u64, Ordering::Relaxed);
+        }
+        msg.payload
+    }
+
+    /// Rendezvous of all nodes.
+    pub fn barrier(&self) {
+        self.fabric.barrier.wait();
+    }
+
+    /// All-to-all exchange: `outgoing[d]` goes to rank `d`; returns
+    /// `incoming[s]` = the buffer rank `s` sent here. Self-delivery is a
+    /// free move (no network charge).
+    pub fn all_to_all(&self, mut outgoing: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        let n = self.nnodes();
+        assert_eq!(outgoing.len(), n, "all_to_all needs one buffer per rank");
+        // Keep our own slice out of the network path.
+        let mine = std::mem::take(&mut outgoing[self.rank]);
+        for dst in 0..n {
+            if dst != self.rank {
+                self.send(dst, TAG_SHUFFLE, std::mem::take(&mut outgoing[dst]));
+            }
+        }
+        let mut incoming: Vec<Vec<u8>> = (0..n).map(|_| Vec::new()).collect();
+        incoming[self.rank] = mine;
+        for src in 0..n {
+            if src != self.rank {
+                incoming[src] = self.recv(src, TAG_SHUFFLE);
+            }
+        }
+        incoming
+    }
+
+    /// Gather every rank's buffer at `root`; returns `Some(buffers)` at the
+    /// root (indexed by rank), `None` elsewhere.
+    pub fn gather(&self, root: usize, payload: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        if self.rank == root {
+            let mut all: Vec<Vec<u8>> = (0..self.nnodes()).map(|_| Vec::new()).collect();
+            all[root] = payload;
+            for src in 0..self.nnodes() {
+                if src != root {
+                    all[src] = self.recv(src, TAG_GATHER);
+                }
+            }
+            Some(all)
+        } else {
+            self.send(root, TAG_GATHER, payload);
+            None
+        }
+    }
+
+    /// Broadcast `payload` from `root` to every rank; returns the payload
+    /// everywhere.
+    pub fn broadcast(&self, root: usize, payload: Option<Vec<u8>>) -> Vec<u8> {
+        if self.rank == root {
+            let payload = payload.expect("root must provide a payload");
+            for dst in 0..self.nnodes() {
+                if dst != root {
+                    self.send(dst, TAG_BCAST, payload.clone());
+                }
+            }
+            payload
+        } else {
+            self.recv(root, TAG_BCAST)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::spawn_cluster;
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+            if comm.rank == 0 {
+                comm.send(1, TAG_CONTROL, b"ping".to_vec());
+                comm.recv(1, TAG_CONTROL)
+            } else {
+                let m = comm.recv(0, TAG_CONTROL);
+                assert_eq!(m, b"ping");
+                comm.send(0, TAG_CONTROL, b"pong".to_vec());
+                m
+            }
+        });
+        assert_eq!(results[0], b"pong");
+        assert_eq!(results[1], b"ping");
+    }
+
+    #[test]
+    fn all_to_all_routes_correctly() {
+        let n = 4;
+        let results = spawn_cluster(n, NetModel::ideal(), move |comm| {
+            let outgoing: Vec<Vec<u8>> =
+                (0..n).map(|dst| vec![comm.rank as u8, dst as u8]).collect();
+            comm.all_to_all(outgoing)
+        });
+        for (me, incoming) in results.iter().enumerate() {
+            for (src, buf) in incoming.iter().enumerate() {
+                assert_eq!(buf, &vec![src as u8, me as u8], "src {src} -> dst {me}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_at_root() {
+        let results = spawn_cluster(3, NetModel::ideal(), |comm| {
+            comm.gather(0, vec![comm.rank as u8; comm.rank + 1])
+        });
+        let at_root = results[0].as_ref().expect("root gets all");
+        assert_eq!(at_root.len(), 3);
+        for (rank, buf) in at_root.iter().enumerate() {
+            assert_eq!(buf, &vec![rank as u8; rank + 1]);
+        }
+        assert!(results[1].is_none());
+        assert!(results[2].is_none());
+    }
+
+    #[test]
+    fn broadcast_reaches_all() {
+        let results = spawn_cluster(4, NetModel::ideal(), |comm| {
+            let payload = (comm.rank == 1).then(|| b"hello".to_vec());
+            comm.broadcast(1, payload)
+        });
+        for r in results {
+            assert_eq!(r, b"hello");
+        }
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let fabric_probe = spawn_cluster_with_fabric(2, NetModel::ideal(), |comm| {
+            if comm.rank == 0 {
+                comm.send(1, TAG_CONTROL, vec![0u8; 1000]);
+            } else {
+                comm.recv(0, TAG_CONTROL);
+            }
+            comm.barrier();
+        });
+        assert_eq!(fabric_probe.stats(0).bytes(), 1000);
+        assert_eq!(fabric_probe.stats(0).msgs(), 1);
+        assert_eq!(fabric_probe.stats(1).bytes(), 0);
+    }
+
+    #[test]
+    fn network_model_charges_time() {
+        let fabric = spawn_cluster_with_fabric(2, NetModel::slow(), |comm| {
+            if comm.rank == 0 {
+                comm.send(1, TAG_CONTROL, vec![0u8; 125_000]); // ~10ms at 12.5MB/s
+            } else {
+                comm.recv(0, TAG_CONTROL);
+            }
+            comm.barrier();
+        });
+        let t = fabric.stats(1).net_time_secs();
+        assert!(t > 0.005, "expected ≥5ms of simulated net time, got {t}");
+    }
+
+    /// Test helper: run a cluster and return the fabric for stats probing.
+    fn spawn_cluster_with_fabric<F>(nnodes: usize, net: NetModel, f: F) -> Arc<Fabric>
+    where
+        F: Fn(&Comm) + Sync,
+    {
+        let fabric = Fabric::new(nnodes, net);
+        let fabric2 = Arc::clone(&fabric);
+        std::thread::scope(|scope| {
+            for rank in 0..nnodes {
+                let comm = Comm::new(rank, Arc::clone(&fabric2));
+                let f = &f;
+                scope.spawn(move || f(&comm));
+            }
+        });
+        fabric
+    }
+}

@@ -1,0 +1,135 @@
+//! Failure injection for the fault-tolerance experiments (A2).
+//!
+//! The paper's argument: Blaze skips fault tolerance entirely (rerun the
+//! whole job on failure), Spark pays for it continuously (persisted shuffle
+//! output + lineage bookkeeping) but recovers by recomputing only lost
+//! partitions. Both engines consult a [`FailurePlan`]:
+//!
+//! * the Spark engine asks [`should_fail_task`] before each task attempt —
+//!   a planned failure makes that attempt abort, and the scheduler retries
+//!   from lineage;
+//! * the Blaze engine asks [`should_fail_node`] once per phase — a planned
+//!   failure aborts the whole job, and the driver reruns it from scratch.
+//!
+//! Failures are one-shot: the plan records consumed injections so retries
+//! succeed (matching "as long as it succeeds before the fourth try").
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Identifies a task attempt in the Spark engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskSite {
+    pub stage: usize,
+    pub partition: usize,
+}
+
+/// Identifies a phase on a node in the Blaze engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeSite {
+    pub rank: usize,
+    /// 0 = map phase, 1 = shuffle phase.
+    pub phase: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct FailurePlan {
+    /// Task attempts that should fail (first attempt only).
+    fail_tasks: Mutex<HashSet<TaskSite>>,
+    /// Node phases that should fail (first run only).
+    fail_nodes: Mutex<HashSet<NodeSite>>,
+    /// Executors whose shuffle output is lost after the map stage
+    /// (Spark-sim: triggers lineage recomputation of lost partitions).
+    lose_executors: Mutex<Vec<usize>>,
+}
+
+impl FailurePlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn fail_task(self, stage: usize, partition: usize) -> Self {
+        self.fail_tasks.lock().unwrap().insert(TaskSite { stage, partition });
+        self
+    }
+
+    pub fn fail_node(self, rank: usize, phase: usize) -> Self {
+        self.fail_nodes.lock().unwrap().insert(NodeSite { rank, phase });
+        self
+    }
+
+    /// Consume a planned task failure, if any. Returns true exactly once
+    /// per planned site.
+    pub fn should_fail_task(&self, stage: usize, partition: usize) -> bool {
+        self.fail_tasks.lock().unwrap().remove(&TaskSite { stage, partition })
+    }
+
+    /// Consume a planned node failure, if any.
+    pub fn should_fail_node(&self, rank: usize, phase: usize) -> bool {
+        self.fail_nodes.lock().unwrap().remove(&NodeSite { rank, phase })
+    }
+
+    /// Plan the loss of an executor's shuffle output (Spark-sim only).
+    pub fn lose_executor(self, rank: usize) -> Self {
+        self.lose_executors.lock().unwrap().push(rank);
+        self
+    }
+
+    /// Consume one planned executor loss, if any.
+    pub fn take_lost_executor(&self) -> Option<usize> {
+        self.lose_executors.lock().unwrap().pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fail_tasks.lock().unwrap().is_empty()
+            && self.fail_nodes.lock().unwrap().is_empty()
+            && self.lose_executors.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_failure_fires_once() {
+        let plan = FailurePlan::none().fail_task(1, 3);
+        assert!(!plan.should_fail_task(0, 3));
+        assert!(!plan.should_fail_task(1, 2));
+        assert!(plan.should_fail_task(1, 3));
+        assert!(!plan.should_fail_task(1, 3), "consumed: retry must succeed");
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn node_failure_fires_once() {
+        let plan = FailurePlan::none().fail_node(2, 0);
+        assert!(plan.should_fail_node(2, 0));
+        assert!(!plan.should_fail_node(2, 0));
+    }
+
+    #[test]
+    fn empty_plan_never_fails() {
+        let plan = FailurePlan::none();
+        assert!(!plan.should_fail_task(0, 0));
+        assert!(!plan.should_fail_node(0, 0));
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn executor_loss_consumed_once() {
+        let plan = FailurePlan::none().lose_executor(2);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.take_lost_executor(), Some(2));
+        assert_eq!(plan.take_lost_executor(), None);
+    }
+
+    #[test]
+    fn multiple_injections() {
+        let plan = FailurePlan::none().fail_task(0, 1).fail_task(0, 2).fail_node(1, 1);
+        assert!(plan.should_fail_task(0, 1));
+        assert!(plan.should_fail_task(0, 2));
+        assert!(plan.should_fail_node(1, 1));
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,94 @@
+//! Simulated multi-node cluster.
+//!
+//! The paper's testbed is an MPI cluster of AWS instances; here each node
+//! is an OS thread (which in turn runs an OpenMP-style pool for its "cores")
+//! and the network is a message-passing fabric with an explicit cost model.
+//! See DESIGN.md §2 for why this substitution preserves the paper's claims.
+
+pub mod comm;
+pub mod failure;
+pub mod netmodel;
+
+pub use comm::{Comm, CommStats, Fabric, Tag, TAG_BCAST, TAG_CONTROL, TAG_GATHER, TAG_SHUFFLE};
+pub use failure::{FailurePlan, NodeSite, TaskSite};
+pub use netmodel::NetModel;
+
+use std::sync::Arc;
+
+/// Launch an `nnodes`-node cluster, run `f` on every node thread, and
+/// return the per-rank results. The closure may freely use its own
+/// [`crate::util::pool`] parallelism for intra-node threads.
+pub fn spawn_cluster<T, F>(nnodes: usize, net: NetModel, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Comm) -> T + Sync,
+{
+    let fabric = Fabric::new(nnodes, net);
+    spawn_on_fabric(&fabric, &f)
+}
+
+/// Like [`spawn_cluster`] but on a caller-owned fabric, so the caller can
+/// inspect [`Fabric`] statistics (bytes shuffled, simulated network time)
+/// after the run.
+pub fn spawn_on_fabric<T, F>(fabric: &Arc<Fabric>, f: &F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Comm) -> T + Sync,
+{
+    let nnodes = fabric.nnodes();
+    let mut slots: Vec<Option<T>> = (0..nnodes).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for rank in 0..nnodes {
+            let comm = Comm::new(rank, Arc::clone(fabric));
+            handles.push(scope.spawn(move || f(&comm)));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(v) => slots[rank] = Some(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    slots.into_iter().map(Option::unwrap).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_cluster_returns_per_rank_results() {
+        let results = spawn_cluster(4, NetModel::ideal(), |comm| comm.rank * 10);
+        assert_eq!(results, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn single_node_cluster() {
+        let results = spawn_cluster(1, NetModel::ideal(), |comm| {
+            assert_eq!(comm.nnodes(), 1);
+            // Self all-to-all short-circuits.
+            let incoming = comm.all_to_all(vec![b"self".to_vec()]);
+            incoming[0].clone()
+        });
+        assert_eq!(results[0], b"self");
+    }
+
+    #[test]
+    fn nodes_can_use_intra_node_pools() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let results = spawn_cluster(2, NetModel::ideal(), |_comm| {
+            let sum = AtomicU64::new(0);
+            crate::util::pool::parallel_for(
+                3,
+                100,
+                crate::util::pool::Schedule::Static,
+                |_ctx, i| {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                },
+            );
+            sum.load(Ordering::Relaxed)
+        });
+        assert_eq!(results, vec![4950, 4950]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Network cost model for the simulated cluster.
+//!
+//! The paper ran on AWS r5.xlarge instances ("up to 10 Gigabit" NICs). Our
+//! nodes are threads in one process, so inter-node transfers are modeled:
+//! each received message costs `latency + bytes / bandwidth` of wall-clock
+//! time, charged at the receiver (NIC serialization). This makes "bytes
+//! shuffled" — the quantity the paper's local-reduce argument is about — a
+//! real cost in every words/sec number we report.
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// One-way per-message latency.
+    pub latency: Duration,
+    /// Link bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// If false, transfers are free (pure in-memory move) — used by unit
+    /// tests and by the "ideal network" ablation.
+    pub enabled: bool,
+}
+
+impl NetModel {
+    /// AWS-like defaults: ~50 µs latency, 10 Gbit/s ≈ 1.25 GB/s.
+    pub fn aws_like() -> Self {
+        Self {
+            latency: Duration::from_micros(50),
+            bandwidth: 1.25e9,
+            enabled: true,
+        }
+    }
+
+    /// Free, instantaneous network.
+    pub fn ideal() -> Self {
+        Self {
+            latency: Duration::ZERO,
+            bandwidth: f64::INFINITY,
+            enabled: false,
+        }
+    }
+
+    /// A slow network (100 Mbit/s, 200 µs) — exaggerates shuffle cost to
+    /// make the local-reduce ablation legible on small corpora.
+    pub fn slow() -> Self {
+        Self {
+            latency: Duration::from_micros(200),
+            bandwidth: 12.5e6,
+            enabled: true,
+        }
+    }
+
+    /// Wall-clock cost of one `bytes`-sized message.
+    pub fn cost(&self, bytes: usize) -> Duration {
+        if !self.enabled {
+            return Duration::ZERO;
+        }
+        let transfer = bytes as f64 / self.bandwidth;
+        self.latency + Duration::from_secs_f64(transfer)
+    }
+
+    pub fn parse(s: &str) -> Option<NetModel> {
+        match s {
+            "aws" | "aws-like" => Some(Self::aws_like()),
+            "ideal" | "none" => Some(Self::ideal()),
+            "slow" => Some(Self::slow()),
+            _ => None,
+        }
+    }
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        Self::aws_like()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free() {
+        let m = NetModel::ideal();
+        assert_eq!(m.cost(0), Duration::ZERO);
+        assert_eq!(m.cost(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let m = NetModel::aws_like();
+        let small = m.cost(1024);
+        let big = m.cost(128 << 20);
+        assert!(big > small);
+        // 128 MB at 1.25 GB/s ≈ 100 ms (+latency).
+        let secs = big.as_secs_f64();
+        assert!((0.09..0.2).contains(&secs), "got {secs}");
+    }
+
+    #[test]
+    fn latency_floor() {
+        let m = NetModel::aws_like();
+        assert!(m.cost(1) >= Duration::from_micros(50));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert!(NetModel::parse("aws").unwrap().enabled);
+        assert!(!NetModel::parse("ideal").unwrap().enabled);
+        assert!(NetModel::parse("slow").unwrap().enabled);
+        assert!(NetModel::parse("wat").is_none());
+    }
+}

@@ -1,0 +1,169 @@
+//! Baseline concurrent maps the paper's design is compared against in
+//! `bench concurrent_map` (experiment M1):
+//!
+//! * [`GlobalLockMap`] — one mutex around one chained `std::HashMap`
+//!   (the naive shared-map approach).
+//! * [`ShardedLockMap`] — N mutexes over N chained `std::HashMap`s
+//!   (the common "good enough" sharded design; still blocks on contention,
+//!   still allocates per chain node).
+//!
+//! Both implement exact counting (they block instead of spilling), so they
+//! double as oracles in the property tests.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use crate::hash::{bucket_of, HashKind};
+
+use super::map::MapKey;
+
+/// One global mutex around a chained hash map.
+pub struct GlobalLockMap<K, V> {
+    inner: Mutex<HashMap<K, V>>,
+}
+
+impl<K: Eq + Hash, V> GlobalLockMap<K, V> {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn upsert(&self, key: K, value: V, reduce: impl FnOnce(&mut V, V)) {
+        let mut m = self.inner.lock().unwrap();
+        match m.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => reduce(e.get_mut(), value),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(value);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, key: &K) -> Option<V>
+    where
+        V: Clone,
+    {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn into_inner(self) -> HashMap<K, V> {
+        self.inner.into_inner().unwrap()
+    }
+}
+
+impl<K: Eq + Hash, V> Default for GlobalLockMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// N shards, each a mutex-protected chained map; writers block on their
+/// shard's lock (no cache spill).
+pub struct ShardedLockMap<K, V> {
+    shards: Vec<Mutex<HashMap<K, V>>>,
+    hash_kind: HashKind,
+}
+
+impl<K: MapKey + Hash, V> ShardedLockMap<K, V> {
+    pub fn new(nshards: usize, hash_kind: HashKind) -> Self {
+        assert!(nshards > 0);
+        Self {
+            shards: (0..nshards).map(|_| Mutex::new(HashMap::new())).collect(),
+            hash_kind,
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, key: &K) -> usize {
+        bucket_of(key.hash_with(self.hash_kind), self.shards.len())
+    }
+
+    pub fn upsert(&self, key: K, value: V, reduce: impl FnOnce(&mut V, V)) {
+        let s = self.shard_of(&key);
+        let mut m = self.shards[s].lock().unwrap();
+        match m.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => reduce(e.get_mut(), value),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(value);
+            }
+        }
+    }
+
+    pub fn get(&self, key: &K) -> Option<V>
+    where
+        V: Clone,
+    {
+        self.shards[self.shard_of(key)].lock().unwrap().get(key).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_vec(&self) -> Vec<(K, V)>
+    where
+        K: Clone,
+        V: Clone,
+    {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let m = s.lock().unwrap();
+            out.extend(m.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::{parallel_for, Schedule};
+
+    #[test]
+    fn global_lock_counts() {
+        let m: GlobalLockMap<String, u64> = GlobalLockMap::new();
+        parallel_for(4, 1000, Schedule::Dynamic { chunk: 8 }, |_ctx, i| {
+            m.upsert(format!("k{}", i % 10), 1, |a, b| *a += b);
+        });
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.get(&"k0".to_string()), Some(100));
+    }
+
+    #[test]
+    fn sharded_lock_counts() {
+        let m: ShardedLockMap<String, u64> = ShardedLockMap::new(16, HashKind::Fx);
+        parallel_for(4, 1000, Schedule::Dynamic { chunk: 8 }, |_ctx, i| {
+            m.upsert(format!("k{}", i % 10), 1, |a, b| *a += b);
+        });
+        assert_eq!(m.len(), 10);
+        let total: u64 = m.to_vec().iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn sharded_agrees_with_global() {
+        let a: ShardedLockMap<String, u64> = ShardedLockMap::new(8, HashKind::Fx);
+        let b: GlobalLockMap<String, u64> = GlobalLockMap::new();
+        for i in 0..500 {
+            let k = format!("w{}", i % 23);
+            a.upsert(k.clone(), 2, |x, y| *x += y);
+            b.upsert(k, 2, |x, y| *x += y);
+        }
+        let mut va = a.to_vec();
+        va.sort();
+        let mut vb: Vec<(String, u64)> = b.into_inner().into_iter().collect();
+        vb.sort();
+        assert_eq!(va, vb);
+    }
+}

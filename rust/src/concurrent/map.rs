@@ -1,0 +1,527 @@
+//! The paper's `ConcurrentHashMap`: a data portion of lockable **segments**
+//! plus a **thread cache** portion, such that *no writer ever blocks*.
+//!
+//! > "When a thread wants to update a segment, it has to lock the segment
+//! > first. In the case that a segment is already locked by another thread,
+//! > the data will be flushed to a thread-local linear probing hash map in
+//! > the thread cache portion, so that no thread will ever get blocked. The
+//! > cache will be synchronized to the main data portion either periodically
+//! > or after the map phase ends."
+//!
+//! Consistency model: **eventual** for associative, commutative updates.
+//! Reads ([`ConcurrentHashMap::get`], iteration) are only guaranteed
+//! complete after [`ConcurrentHashMap::sync`].
+
+use std::sync::Mutex;
+
+use super::probe::{Entry, ProbeTable};
+use crate::hash::{bucket_of, HashKind};
+use crate::util::pool::{self, Schedule};
+
+/// Keys usable in the concurrent/distributed maps.
+pub trait MapKey: Clone + Eq + Send + Sync {
+    fn hash_with(&self, kind: HashKind) -> u64;
+}
+
+impl MapKey for String {
+    #[inline]
+    fn hash_with(&self, kind: HashKind) -> u64 {
+        kind.hash(self.as_bytes())
+    }
+}
+
+impl MapKey for u64 {
+    #[inline]
+    fn hash_with(&self, _kind: HashKind) -> u64 {
+        crate::hash::mix_u64(*self)
+    }
+}
+
+impl MapKey for i64 {
+    #[inline]
+    fn hash_with(&self, _kind: HashKind) -> u64 {
+        crate::hash::mix_u64(*self as u64)
+    }
+}
+
+impl MapKey for u32 {
+    #[inline]
+    fn hash_with(&self, _kind: HashKind) -> u64 {
+        crate::hash::mix_u64(*self as u64)
+    }
+}
+
+/// Values storable in the maps.
+pub trait MapValue: Clone + Send + Sync {}
+impl<T: Clone + Send + Sync> MapValue for T {}
+
+/// Padded mutex to keep per-thread caches on distinct cache lines.
+#[repr(align(64))]
+struct Padded<T>(Mutex<T>);
+
+/// When writers move data from their thread to the shared segments.
+///
+/// The paper describes both: "the data will be flushed to a thread-local
+/// linear probing hash map in the thread cache portion" (on contention) and
+/// "the cache will be synchronized to the main data portion either
+/// **periodically** or after the map phase ends."
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Try the segment lock; on contention, spill to the thread cache
+    /// (the paper's prose default). Every upsert touches a shared line.
+    SpillOnContention,
+    /// Combine in the thread cache first and flush to the segments when
+    /// the cache exceeds a threshold ("periodically"). Hot keys combine
+    /// with zero shared-memory traffic — this is what makes the map scale
+    /// on Zipf-skewed streams (see EXPERIMENTS.md §Perf).
+    CacheFirst { flush_at: usize },
+}
+
+impl Default for CachePolicy {
+    fn default() -> Self {
+        // 64k entries x ~48B ≈ 3 MB per thread cache: fits in L2/L3 and
+        // comfortably holds a natural-language vocabulary between flushes.
+        CachePolicy::CacheFirst { flush_at: 64 * 1024 }
+    }
+}
+
+/// Statistics the benches report: how often writers found their segment
+/// contended and spilled to the cache.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MapStats {
+    pub direct_upserts: u64,
+    pub cached_upserts: u64,
+}
+
+pub struct ConcurrentHashMap<K: MapKey, V: MapValue> {
+    segments: Vec<Padded<ProbeTable<K, V>>>,
+    caches: Vec<Padded<ProbeTable<K, V>>>,
+    hash_kind: HashKind,
+    policy: CachePolicy,
+    stats: Vec<Padded<MapStats>>,
+}
+
+/// Default segment count: enough that `T` threads rarely collide on a
+/// segment (8× threads rounded up to a power of two, min 32).
+pub fn default_segments(nthreads: usize) -> usize {
+    (nthreads * 8).next_power_of_two().max(32)
+}
+
+impl<K: MapKey, V: MapValue> ConcurrentHashMap<K, V> {
+    /// `nsegments` lockable segments; `nthreads` thread caches. Threads are
+    /// identified by the `tid` argument of the write methods (the pool's
+    /// `WorkerCtx::worker` index).
+    pub fn new(nsegments: usize, nthreads: usize, hash_kind: HashKind) -> Self {
+        Self::with_policy(nsegments, nthreads, hash_kind, CachePolicy::default())
+    }
+
+    pub fn with_policy(
+        nsegments: usize,
+        nthreads: usize,
+        hash_kind: HashKind,
+        policy: CachePolicy,
+    ) -> Self {
+        assert!(nsegments > 0 && nthreads > 0);
+        Self {
+            segments: (0..nsegments).map(|_| Padded(Mutex::new(ProbeTable::new()))).collect(),
+            caches: (0..nthreads).map(|_| Padded(Mutex::new(ProbeTable::new()))).collect(),
+            hash_kind,
+            policy,
+            stats: (0..nthreads).map(|_| Padded(Mutex::new(MapStats::default()))).collect(),
+        }
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn with_threads(nthreads: usize) -> Self {
+        Self::new(default_segments(nthreads), nthreads, HashKind::default())
+    }
+
+    pub fn hash_kind(&self) -> HashKind {
+        self.hash_kind
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.caches.len()
+    }
+
+    #[inline]
+    fn segment_of(&self, hash: u64) -> usize {
+        bucket_of(hash, self.segments.len())
+    }
+
+    /// The paper's non-blocking associative update: try the owning segment;
+    /// if contended, spill to the caller's thread cache.
+    ///
+    /// `reduce` must be associative and commutative (e.g. `+=`) for the
+    /// eventual-consistency contract to hold.
+    #[inline]
+    pub fn upsert(&self, tid: usize, key: K, value: V, reduce: impl Fn(&mut V, V)) {
+        let hash = key.hash_with(self.hash_kind);
+        self.upsert_hashed(tid, hash, key, value, reduce)
+    }
+
+    /// `upsert` with a precomputed hash (hot path for callers that already
+    /// hashed the key for routing).
+    #[inline]
+    pub fn upsert_hashed(
+        &self,
+        tid: usize,
+        hash: u64,
+        key: K,
+        value: V,
+        reduce: impl Fn(&mut V, V),
+    ) {
+        match self.policy {
+            CachePolicy::SpillOnContention => {
+                let seg = self.segment_of(hash);
+                if let Ok(mut table) = self.segments[seg].0.try_lock() {
+                    table.upsert(hash, key, value, reduce);
+                    if cfg!(debug_assertions) {
+                        self.stats[tid].0.lock().unwrap().direct_upserts += 1;
+                    }
+                } else {
+                    // Segment contended: never block — spill to the cache.
+                    let mut cache = self.caches[tid].0.lock().unwrap();
+                    cache.upsert(hash, key, value, reduce);
+                    if cfg!(debug_assertions) {
+                        drop(cache);
+                        self.stats[tid].0.lock().unwrap().cached_upserts += 1;
+                    }
+                }
+            }
+            CachePolicy::CacheFirst { flush_at } => {
+                let mut cache = self.caches[tid].0.lock().unwrap();
+                cache.upsert(hash, key, value, &reduce);
+                if cache.len() >= flush_at {
+                    let drained = cache.drain();
+                    drop(cache);
+                    self.flush_entries(drained, &reduce);
+                }
+            }
+        }
+    }
+
+    /// Merge a drained cache into the segments (periodic flush). Blocking
+    /// locks are fine here: this runs once per `flush_at` upserts.
+    fn flush_entries(&self, entries: Vec<Entry<K, V>>, reduce: &impl Fn(&mut V, V)) {
+        let nsegs = self.segments.len();
+        let mut by_seg: Vec<Vec<Entry<K, V>>> = (0..nsegs).map(|_| Vec::new()).collect();
+        for e in entries {
+            by_seg[bucket_of(e.hash, nsegs)].push(e);
+        }
+        for (s, bucket) in by_seg.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let mut seg = self.segments[s].0.lock().unwrap();
+            for e in bucket {
+                seg.upsert(e.hash, e.key, e.value, reduce);
+            }
+        }
+    }
+
+    /// Visit-or-insert with a borrowed key: only allocates the owned key on
+    /// first insertion. See [`crate::concurrent::ProbeTable::upsert_with`].
+    #[inline]
+    pub fn upsert_borrowed(
+        &self,
+        tid: usize,
+        hash: u64,
+        key_matches: impl Fn(&K) -> bool + Copy,
+        make_key: impl FnOnce() -> K,
+        value: V,
+        reduce: impl Fn(&mut V, V),
+    ) {
+        match self.policy {
+            CachePolicy::SpillOnContention => {
+                let seg = self.segment_of(hash);
+                if let Ok(mut table) = self.segments[seg].0.try_lock() {
+                    table.upsert_with(hash, key_matches, make_key, value, reduce);
+                } else {
+                    let mut cache = self.caches[tid].0.lock().unwrap();
+                    cache.upsert_with(hash, key_matches, make_key, value, reduce);
+                }
+            }
+            CachePolicy::CacheFirst { flush_at } => {
+                let mut cache = self.caches[tid].0.lock().unwrap();
+                cache.upsert_with(hash, key_matches, make_key, value, &reduce);
+                if cache.len() >= flush_at {
+                    let drained = cache.drain();
+                    drop(cache);
+                    self.flush_entries(drained, &reduce);
+                }
+            }
+        }
+    }
+
+    /// Synchronize all thread caches into the segments (the paper's
+    /// "periodically or after the map phase ends" step), in parallel:
+    /// phase A drains each cache and buckets its entries by segment;
+    /// phase B merges each segment's bucket list under its own lock.
+    pub fn sync(&self, nthreads: usize, reduce: impl Fn(&mut V, V) + Sync) {
+        let nsegs = self.segments.len();
+        // Phase A: drain caches, bucket by segment.
+        let buckets: Vec<Mutex<Vec<Vec<Entry<K, V>>>>> = (0..self.caches.len())
+            .map(|_| Mutex::new(Vec::new()))
+            .collect();
+        pool::parallel_for(nthreads, self.caches.len(), Schedule::Dynamic { chunk: 1 }, |_ctx, c| {
+            let entries = self.caches[c].0.lock().unwrap().drain();
+            let mut by_seg: Vec<Vec<Entry<K, V>>> = (0..nsegs).map(|_| Vec::new()).collect();
+            for e in entries {
+                by_seg[bucket_of(e.hash, nsegs)].push(e);
+            }
+            *buckets[c].lock().unwrap() = by_seg;
+        });
+        let buckets: Vec<Vec<Vec<Entry<K, V>>>> =
+            buckets.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        // Phase B: per segment, merge every cache's bucket.
+        let reduce = &reduce;
+        pool::parallel_for(nthreads, nsegs, Schedule::Dynamic { chunk: 4 }, |_ctx, s| {
+            let mut seg = self.segments[s].0.lock().unwrap();
+            for cache_buckets in &buckets {
+                if let Some(bucket) = cache_buckets.get(s) {
+                    for e in bucket {
+                        seg.upsert(e.hash, e.key.clone(), e.value.clone(), reduce);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Point lookup. Only complete after [`sync`](Self::sync).
+    pub fn get(&self, key: &K) -> Option<V> {
+        let hash = key.hash_with(self.hash_kind);
+        let seg = self.segment_of(hash);
+        self.segments[seg].0.lock().unwrap().get(hash, key).cloned()
+    }
+
+    /// Total entries across segments (excludes unsynced cache entries).
+    pub fn len(&self) -> usize {
+        self.segments.iter().map(|s| s.0.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries still sitting in thread caches (0 after a sync).
+    pub fn pending_cache_entries(&self) -> usize {
+        self.caches.iter().map(|c| c.0.lock().unwrap().len()).sum()
+    }
+
+    /// Visit every synced entry. Locks one segment at a time.
+    pub fn for_each(&self, mut f: impl FnMut(&K, &V)) {
+        for s in &self.segments {
+            let t = s.0.lock().unwrap();
+            for e in t.iter() {
+                f(&e.key, &e.value);
+            }
+        }
+    }
+
+    /// Collect all synced entries.
+    pub fn to_vec(&self) -> Vec<(K, V)> {
+        let mut out = Vec::with_capacity(self.len());
+        self.for_each(|k, v| out.push((k.clone(), v.clone())));
+        out
+    }
+
+    /// Drain all synced entries, leaving the map empty.
+    pub fn drain_entries(&self) -> Vec<Entry<K, V>> {
+        let mut out = Vec::new();
+        for s in &self.segments {
+            out.extend(s.0.lock().unwrap().drain());
+        }
+        out
+    }
+
+    /// Aggregate contention statistics (only tracked in debug builds).
+    pub fn stats(&self) -> MapStats {
+        let mut agg = MapStats::default();
+        for s in &self.stats {
+            let s = s.0.lock().unwrap();
+            agg.direct_upserts += s.direct_upserts;
+            agg.cached_upserts += s.cached_upserts;
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::{parallel_for, Schedule};
+    use std::collections::HashMap;
+
+    #[test]
+    fn single_thread_upsert_get() {
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_threads(1);
+        m.upsert(0, "the".into(), 1, |a, b| *a += b);
+        m.upsert(0, "the".into(), 1, |a, b| *a += b);
+        m.upsert(0, "cat".into(), 1, |a, b| *a += b);
+        m.sync(1, |a, b| *a += b);
+        assert_eq!(m.get(&"the".to_string()), Some(2));
+        assert_eq!(m.get(&"cat".to_string()), Some(1));
+        assert_eq!(m.get(&"dog".to_string()), None);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn parallel_counts_match_serial() {
+        // The core no-lost-updates invariant: N threads hammering a Zipfy
+        // key set must produce exactly the serial counts after sync.
+        let nthreads = 8;
+        let keys: Vec<String> = (0..200).map(|i| format!("w{}", i % 37)).collect();
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_threads(nthreads);
+        parallel_for(nthreads, 10_000, Schedule::Dynamic { chunk: 16 }, |ctx, i| {
+            let k = &keys[i % keys.len()];
+            m.upsert(ctx.worker, k.clone(), 1, |a, b| *a += b);
+        });
+        m.sync(nthreads, |a, b| *a += b);
+        assert_eq!(m.pending_cache_entries(), 0);
+
+        let mut serial: HashMap<String, u64> = HashMap::new();
+        for i in 0..10_000 {
+            *serial.entry(keys[i % keys.len()].clone()).or_insert(0) += 1;
+        }
+        assert_eq!(m.len(), serial.len());
+        for (k, v) in &serial {
+            assert_eq!(m.get(k), Some(*v), "key {k}");
+        }
+    }
+
+    #[test]
+    fn contention_spills_to_cache_and_syncs() {
+        // One segment forces every concurrent writer after the first to
+        // take the cache path; sync must still produce exact totals.
+        let nthreads = 4;
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::new(1, nthreads, HashKind::Fx);
+        parallel_for(nthreads, 8_000, Schedule::Dynamic { chunk: 8 }, |ctx, i| {
+            m.upsert(ctx.worker, format!("k{}", i % 11), 1, |a, b| *a += b);
+        });
+        m.sync(nthreads, |a, b| *a += b);
+        let total: u64 = m.to_vec().iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 8_000);
+        assert_eq!(m.len(), 11);
+    }
+
+    #[test]
+    fn sync_is_idempotent() {
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_threads(2);
+        m.upsert(0, "a".into(), 5, |x, y| *x += y);
+        m.sync(2, |a, b| *a += b);
+        let before = m.to_vec();
+        m.sync(2, |a, b| *a += b);
+        let mut after = m.to_vec();
+        let mut before = before;
+        before.sort();
+        after.sort();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn drain_leaves_empty() {
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_threads(2);
+        for i in 0..50 {
+            m.upsert(0, format!("x{i}"), 1, |a, b| *a += b);
+        }
+        m.sync(2, |a, b| *a += b);
+        let drained = m.drain_entries();
+        assert_eq!(drained.len(), 50);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn integer_keys_work() {
+        let m: ConcurrentHashMap<u64, i64> = ConcurrentHashMap::with_threads(4);
+        parallel_for(4, 4096, Schedule::Static, |ctx, i| {
+            m.upsert(ctx.worker, (i % 64) as u64, 1i64, |a, b| *a += b);
+        });
+        m.sync(4, |a, b| *a += b);
+        assert_eq!(m.len(), 64);
+        assert_eq!(m.get(&0u64), Some(64));
+    }
+
+    #[test]
+    fn policies_agree_exactly() {
+        // Same stream through both cache policies => identical counts.
+        let nthreads = 4;
+        let keys: Vec<String> = (0..5_000).map(|i| format!("w{}", i % 61)).collect();
+        let mut results = Vec::new();
+        for policy in [
+            CachePolicy::SpillOnContention,
+            CachePolicy::CacheFirst { flush_at: 64 * 1024 },
+        ] {
+            let m: ConcurrentHashMap<String, u64> =
+                ConcurrentHashMap::with_policy(8, nthreads, HashKind::Fx, policy);
+            parallel_for(nthreads, keys.len(), Schedule::Dynamic { chunk: 7 }, |ctx, i| {
+                m.upsert(ctx.worker, keys[i].clone(), 1, |a, b| *a += b);
+            });
+            m.sync(nthreads, |a, b| *a += b);
+            let mut v = m.to_vec();
+            v.sort();
+            results.push(v);
+        }
+        assert_eq!(results[0], results[1]);
+    }
+
+    #[test]
+    fn cache_first_flushes_at_threshold() {
+        // Tiny flush threshold: distinct keys exceed it, forcing periodic
+        // flushes into the segments mid-stream.
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_policy(
+            4,
+            1,
+            HashKind::Fx,
+            CachePolicy::CacheFirst { flush_at: 8 },
+        );
+        for i in 0..100 {
+            m.upsert(0, format!("k{i}"), 1, |a, b| *a += b);
+        }
+        // Flushes already moved most entries into segments before any sync.
+        assert!(m.len() >= 100 - 8, "segments hold flushed entries: {}", m.len());
+        m.sync(1, |a, b| *a += b);
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&"k0".to_string()), Some(1));
+    }
+
+    #[test]
+    fn cache_first_combines_hot_keys_locally() {
+        // One hot key hammered: with CacheFirst the segment sees at most a
+        // few flushes, and counts stay exact.
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_policy(
+            4,
+            4,
+            HashKind::Fx,
+            CachePolicy::CacheFirst { flush_at: 1024 },
+        );
+        parallel_for(4, 40_000, Schedule::Static, |ctx, _| {
+            m.upsert(ctx.worker, "the".to_string(), 1, |a, b| *a += b);
+        });
+        m.sync(4, |a, b| *a += b);
+        assert_eq!(m.get(&"the".to_string()), Some(40_000));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn min_max_reducers() {
+        let m: ConcurrentHashMap<String, u64> = ConcurrentHashMap::with_threads(2);
+        let max = |a: &mut u64, b: u64| {
+            if b > *a {
+                *a = b;
+            }
+        };
+        m.upsert(0, "m".into(), 3, max);
+        m.upsert(1, "m".into(), 9, max);
+        m.upsert(0, "m".into(), 5, max);
+        m.sync(2, max);
+        assert_eq!(m.get(&"m".to_string()), Some(9));
+    }
+}

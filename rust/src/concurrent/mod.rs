@@ -1,0 +1,14 @@
+//! Single-node concurrent hash maps.
+//!
+//! [`ConcurrentHashMap`] is the paper's design (segments + thread caches,
+//! never-blocking writers); [`baseline`] holds the lock-based designs it is
+//! benchmarked against; [`probe::ProbeTable`] is the shared linear-probing
+//! building block.
+
+pub mod baseline;
+pub mod map;
+pub mod probe;
+
+pub use baseline::{GlobalLockMap, ShardedLockMap};
+pub use map::{default_segments, CachePolicy, ConcurrentHashMap, MapKey, MapStats, MapValue};
+pub use probe::{Entry, ProbeTable};

@@ -1,0 +1,299 @@
+//! Linear-probing open-addressing hash table — the building block of both
+//! the segments and the thread caches of [`super::ConcurrentHashMap`].
+//!
+//! The paper's rationale (§MPI/OpenMP MapReduce Design): linear probing
+//! "incurs less memory allocation and bulk memory access than chained hash
+//! tables, which is the default in many STL implementations". This table
+//! stores entries inline in one flat slot array, grows by doubling, and
+//! never allocates per insert.
+//!
+//! Hashes are computed by the caller and carried with each entry, so a
+//! rehash/grow never touches key bytes, and merging two tables compares
+//! hashes before keys.
+
+/// A single stored entry: precomputed hash + key + value.
+#[derive(Clone, Debug)]
+pub struct Entry<K, V> {
+    pub hash: u64,
+    pub key: K,
+    pub value: V,
+}
+
+/// Open-addressing table with linear probing and power-of-two capacity.
+#[derive(Clone, Debug)]
+pub struct ProbeTable<K, V> {
+    slots: Vec<Option<Entry<K, V>>>,
+    len: usize,
+    /// capacity mask (`slots.len() - 1`)
+    mask: usize,
+}
+
+/// Grow when `len * 8 >= capacity * 7` would be too tight for probing;
+/// we use a 70% load factor.
+const LOAD_NUM: usize = 7;
+const LOAD_DEN: usize = 10;
+
+const MIN_CAP: usize = 16;
+
+impl<K: Eq, V> ProbeTable<K, V> {
+    pub fn new() -> Self {
+        Self::with_capacity(MIN_CAP)
+    }
+
+    /// Capacity is rounded up to a power of two and sized so `n` entries
+    /// fit under the load factor.
+    pub fn with_capacity(n: usize) -> Self {
+        let want = (n * LOAD_DEN / LOAD_NUM + 1).max(MIN_CAP).next_power_of_two();
+        Self {
+            slots: (0..want).map(|_| None).collect(),
+            len: 0,
+            mask: want - 1,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Bytes of slot storage (for memory accounting in benches).
+    pub fn slot_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<Option<Entry<K, V>>>()
+    }
+
+    #[inline]
+    fn start_index(&self, hash: u64) -> usize {
+        // High bits are the best-mixed for multiplicative hashes; fold them
+        // onto the mask.
+        (hash >> 32) as usize & self.mask ^ (hash as usize & self.mask)
+    }
+
+    /// Insert `(hash, key, value)`, combining with `reduce(existing, new)`
+    /// when the key is already present. Returns `true` if a new slot was
+    /// filled (i.e. the key was new).
+    #[inline]
+    pub fn upsert(
+        &mut self,
+        hash: u64,
+        key: K,
+        value: V,
+        reduce: impl FnOnce(&mut V, V),
+    ) -> bool {
+        if (self.len + 1) * LOAD_DEN > self.slots.len() * LOAD_NUM {
+            self.grow();
+        }
+        let mut i = self.start_index(hash);
+        loop {
+            match &mut self.slots[i] {
+                slot @ None => {
+                    *slot = Some(Entry { hash, key, value });
+                    self.len += 1;
+                    return true;
+                }
+                Some(e) if e.hash == hash && e.key == key => {
+                    reduce(&mut e.value, value);
+                    return false;
+                }
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    /// `upsert` without materializing the key unless it is new: the caller
+    /// supplies a match predicate and a key constructor. This is the
+    /// zero-allocation hot path for string keys (`&str` lookup, `String`
+    /// built only on first insertion) — the "Blaze TCM" variant's core trick.
+    #[inline]
+    pub fn upsert_with(
+        &mut self,
+        hash: u64,
+        key_matches: impl Fn(&K) -> bool,
+        make_key: impl FnOnce() -> K,
+        value: V,
+        reduce: impl FnOnce(&mut V, V),
+    ) -> bool {
+        if (self.len + 1) * LOAD_DEN > self.slots.len() * LOAD_NUM {
+            self.grow();
+        }
+        let mut i = self.start_index(hash);
+        loop {
+            match &mut self.slots[i] {
+                slot @ None => {
+                    *slot = Some(Entry { hash, key: make_key(), value });
+                    self.len += 1;
+                    return true;
+                }
+                Some(e) if e.hash == hash && key_matches(&e.key) => {
+                    reduce(&mut e.value, value);
+                    return false;
+                }
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    /// Look up by precomputed hash + key.
+    #[inline]
+    pub fn get(&self, hash: u64, key: &K) -> Option<&V> {
+        let mut i = self.start_index(hash);
+        loop {
+            match &self.slots[i] {
+                None => return None,
+                Some(e) if e.hash == hash && e.key == *key => return Some(&e.value),
+                _ => i = (i + 1) & self.mask,
+            }
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.slots.len() * 2;
+        let old: Vec<Option<Entry<K, V>>> =
+            std::mem::replace(&mut self.slots, (0..new_cap).map(|_| None).collect());
+        self.mask = new_cap - 1;
+        self.len = 0;
+        for e in old.into_iter().flatten() {
+            // Re-probe; keys are unique so plain insert (closure unreachable).
+            self.upsert(e.hash, e.key, e.value, |_, _| unreachable!("dup during grow"));
+        }
+    }
+
+    /// Iterate over stored entries (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = &Entry<K, V>> {
+        self.slots.iter().flatten()
+    }
+
+    /// Remove and return all entries, leaving an empty (shrunk) table.
+    pub fn drain(&mut self) -> Vec<Entry<K, V>> {
+        let out: Vec<Entry<K, V>> = std::mem::replace(
+            &mut self.slots,
+            (0..MIN_CAP).map(|_| None).collect(),
+        )
+        .into_iter()
+        .flatten()
+        .collect();
+        self.mask = MIN_CAP - 1;
+        self.len = 0;
+        out
+    }
+
+    /// Merge another table's entries into this one.
+    pub fn merge_from(&mut self, other: ProbeTable<K, V>, reduce: impl Fn(&mut V, V)) {
+        for e in other.slots.into_iter().flatten() {
+            self.upsert(e.hash, e.key, e.value, &reduce);
+        }
+    }
+}
+
+impl<K: Eq, V> Default for ProbeTable<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::fxhash;
+
+    fn h(s: &str) -> u64 {
+        fxhash(s.as_bytes())
+    }
+
+    #[test]
+    fn insert_get_update() {
+        let mut t: ProbeTable<String, u64> = ProbeTable::new();
+        assert!(t.upsert(h("a"), "a".into(), 1, |x, y| *x += y));
+        assert!(!t.upsert(h("a"), "a".into(), 2, |x, y| *x += y));
+        assert!(t.upsert(h("b"), "b".into(), 5, |x, y| *x += y));
+        assert_eq!(t.get(h("a"), &"a".to_string()), Some(&3));
+        assert_eq!(t.get(h("b"), &"b".to_string()), Some(&5));
+        assert_eq!(t.get(h("c"), &"c".to_string()), None);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn growth_preserves_entries() {
+        let mut t: ProbeTable<String, u64> = ProbeTable::with_capacity(4);
+        for i in 0..10_000 {
+            let k = format!("key{i}");
+            t.upsert(h(&k), k, i, |_, _| panic!("no dups"));
+        }
+        assert_eq!(t.len(), 10_000);
+        assert!(t.capacity() >= 10_000);
+        for i in (0..10_000).step_by(97) {
+            let k = format!("key{i}");
+            assert_eq!(t.get(h(&k), &k), Some(&i));
+        }
+    }
+
+    #[test]
+    fn colliding_hashes_resolved_by_key() {
+        // Force identical hashes: probing must still distinguish keys.
+        let mut t: ProbeTable<String, u64> = ProbeTable::new();
+        t.upsert(42, "x".into(), 1, |a, b| *a += b);
+        t.upsert(42, "y".into(), 2, |a, b| *a += b);
+        t.upsert(42, "x".into(), 10, |a, b| *a += b);
+        assert_eq!(t.get(42, &"x".to_string()), Some(&11));
+        assert_eq!(t.get(42, &"y".to_string()), Some(&2));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn wraparound_probing() {
+        // Hashes that all start probing at the last slot exercise the wrap.
+        let mut t: ProbeTable<u64, u64> = ProbeTable::with_capacity(8);
+        let cap = t.capacity() as u64;
+        // start_index = (high & mask) ^ (low & mask); high = mask, low = 0
+        // pins the initial probe to the LAST slot, forcing wraparound.
+        let hash = (cap - 1) << 32;
+        for k in 0..6u64 {
+            t.upsert(hash, k, k * 100, |_, _| {});
+        }
+        for k in 0..6u64 {
+            assert_eq!(t.get(hash, &k), Some(&(k * 100)));
+        }
+    }
+
+    #[test]
+    fn drain_empties_and_returns_all() {
+        let mut t: ProbeTable<String, u64> = ProbeTable::new();
+        for i in 0..100 {
+            let k = format!("k{i}");
+            t.upsert(h(&k), k, 1, |a, b| *a += b);
+        }
+        let drained = t.drain();
+        assert_eq!(drained.len(), 100);
+        assert_eq!(t.len(), 0);
+        assert!(t.get(h("k0"), &"k0".to_string()).is_none());
+    }
+
+    #[test]
+    fn merge_from_reduces() {
+        let mut a: ProbeTable<String, u64> = ProbeTable::new();
+        let mut b: ProbeTable<String, u64> = ProbeTable::new();
+        a.upsert(h("w"), "w".into(), 3, |x, y| *x += y);
+        b.upsert(h("w"), "w".into(), 4, |x, y| *x += y);
+        b.upsert(h("z"), "z".into(), 9, |x, y| *x += y);
+        a.merge_from(b, |x, y| *x += y);
+        assert_eq!(a.get(h("w"), &"w".to_string()), Some(&7));
+        assert_eq!(a.get(h("z"), &"z".to_string()), Some(&9));
+    }
+
+    #[test]
+    fn integer_keys() {
+        let mut t: ProbeTable<u64, i64> = ProbeTable::new();
+        for i in 0..1000u64 {
+            t.upsert(crate::hash::mix_u64(i), i, 1, |a, b| *a += b);
+            t.upsert(crate::hash::mix_u64(i), i, 1, |a, b| *a += b);
+        }
+        assert_eq!(t.len(), 1000);
+        assert_eq!(t.get(crate::hash::mix_u64(7), &7), Some(&2));
+    }
+}

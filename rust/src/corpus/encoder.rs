@@ -1,0 +1,128 @@
+//! Word → token-id encoding for the XLA-accelerated combiner path.
+//!
+//! The Pallas histogram kernel (L1) counts **integer token ids**, not
+//! strings; [`Vocab`] provides the bidirectional mapping. Out-of-vocabulary
+//! words map to the reserved [`Vocab::UNK`] id 0, so the id space is
+//! `[0, len())` and histogram slot 0 aggregates all OOV mass.
+
+use std::collections::HashMap;
+
+pub struct Vocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    /// Reserved id for out-of-vocabulary words.
+    pub const UNK: i32 = 0;
+
+    /// Build from a word list; ids are assigned in order starting at 1
+    /// (0 is UNK). Duplicates are ignored.
+    pub fn build(words: impl IntoIterator<Item = String>) -> Self {
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word = vec!["<unk>".to_string()];
+        for w in words {
+            if !word_to_id.contains_key(&w) {
+                let id = id_to_word.len() as i32;
+                word_to_id.insert(w.clone(), id);
+                id_to_word.push(w);
+            }
+        }
+        Self { word_to_id, id_to_word }
+    }
+
+    /// Build from a corpus' lines (first-seen order).
+    pub fn from_lines<'a>(lines: impl IntoIterator<Item = &'a String>) -> Self {
+        let mut words = Vec::new();
+        let mut seen = HashMap::new();
+        for line in lines {
+            for w in crate::corpus::tokenizer::split_spaces(line) {
+                if seen.insert(w.to_string(), ()).is_none() {
+                    words.push(w.to_string());
+                }
+            }
+        }
+        Self::build(words)
+    }
+
+    /// Number of ids (including UNK).
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.len() <= 1
+    }
+
+    pub fn id_of(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(Self::UNK)
+    }
+
+    pub fn word_of(&self, id: i32) -> &str {
+        &self.id_to_word[id as usize]
+    }
+
+    /// Encode a line into token ids, appending to `out`.
+    pub fn encode_line_into(&self, line: &str, out: &mut Vec<i32>) {
+        for w in crate::corpus::tokenizer::split_spaces(line) {
+            out.push(self.id_of(w));
+        }
+    }
+
+    /// Encode many lines into one flat id buffer.
+    pub fn encode_lines(&self, lines: &[String]) -> Vec<i32> {
+        let mut out = Vec::new();
+        for l in lines {
+            self.encode_line_into(l, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_assigns_dense_ids() {
+        let v = Vocab::build(["the".into(), "cat".into(), "the".into(), "sat".into()]);
+        assert_eq!(v.len(), 4); // unk + 3
+        assert_eq!(v.id_of("the"), 1);
+        assert_eq!(v.id_of("cat"), 2);
+        assert_eq!(v.id_of("sat"), 3);
+        assert_eq!(v.word_of(2), "cat");
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let v = Vocab::build(["a".into()]);
+        assert_eq!(v.id_of("zebra"), Vocab::UNK);
+        assert_eq!(v.word_of(Vocab::UNK), "<unk>");
+    }
+
+    #[test]
+    fn encode_lines_flat() {
+        let v = Vocab::build(["a".into(), "b".into()]);
+        let lines = vec!["a b".to_string(), "b zebra a".to_string()];
+        let ids = v.encode_lines(&lines);
+        assert_eq!(ids, vec![1, 2, 2, 0, 1]);
+    }
+
+    #[test]
+    fn from_lines_covers_corpus() {
+        let lines = vec!["x y".to_string(), "y z".to_string()];
+        let v = Vocab::from_lines(&lines);
+        assert_eq!(v.len(), 4);
+        let ids = v.encode_lines(&lines);
+        assert!(ids.iter().all(|&i| i != Vocab::UNK));
+    }
+
+    #[test]
+    fn roundtrip_id_word() {
+        let lines = vec!["alpha beta gamma".to_string()];
+        let v = Vocab::from_lines(&lines);
+        for w in ["alpha", "beta", "gamma"] {
+            assert_eq!(v.word_of(v.id_of(w)), w);
+        }
+    }
+}

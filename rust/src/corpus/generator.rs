@@ -1,0 +1,244 @@
+//! Corpus synthesis to a target byte size.
+//!
+//! Reproduces the paper's input shape ("Bible and Shakespeare's works,
+//! repeated about 200 times to make it roughly 2 GB"): a base block of
+//! Zipf-sampled lines is generated once and then **tiled** to the target
+//! size, so key statistics are stationary and generation cost stays small
+//! even for GB-scale corpora. `unique_block` mode skips tiling for
+//! experiments that need an untiled stream.
+
+use super::zipf::ZipfVocab;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    /// Target total size in bytes (approximate; whole lines only).
+    pub target_bytes: u64,
+    /// Distinct-word budget of the vocabulary.
+    pub vocab_size: usize,
+    /// Zipf exponent.
+    pub exponent: f64,
+    /// Words per line are sampled uniformly in this range.
+    pub words_per_line: (usize, usize),
+    /// Size of the freshly-generated base block that gets tiled. The paper
+    /// repeats its source ~200x; we default to 1/200 of the target
+    /// (clamped to [64 KiB, 16 MiB]).
+    pub base_block_bytes: Option<u64>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        Self {
+            target_bytes: 64 << 20,
+            vocab_size: 30_000,
+            exponent: 1.07,
+            words_per_line: (5, 15),
+            base_block_bytes: None,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl CorpusSpec {
+    pub fn with_bytes(target_bytes: u64) -> Self {
+        Self { target_bytes, ..Default::default() }
+    }
+
+    fn resolved_base_block(&self) -> u64 {
+        self.base_block_bytes.unwrap_or_else(|| {
+            (self.target_bytes / 200).clamp(64 << 10, 16 << 20).min(self.target_bytes.max(1))
+        })
+    }
+}
+
+/// An in-memory corpus: lines of space-separated words.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub lines: Vec<String>,
+    pub bytes: u64,
+    pub words: u64,
+}
+
+impl Corpus {
+    /// Generate per `spec`.
+    pub fn generate(spec: &CorpusSpec) -> Corpus {
+        let vocab = ZipfVocab::from_seed(
+            &super::seed::combined(),
+            spec.vocab_size,
+            spec.exponent,
+        );
+        let mut rng = Xoshiro256::new(spec.seed);
+        let base_budget = spec.resolved_base_block();
+
+        // Generate the base block.
+        let mut base_lines: Vec<String> = Vec::new();
+        let mut base_bytes = 0u64;
+        let mut base_words = 0u64;
+        let (wmin, wmax) = spec.words_per_line;
+        while base_bytes < base_budget {
+            let nwords = rng.index(wmax - wmin + 1) + wmin;
+            let mut line = String::with_capacity(nwords * 7);
+            for w in 0..nwords {
+                if w > 0 {
+                    line.push(' ');
+                }
+                line.push_str(vocab.sample(&mut rng));
+            }
+            base_bytes += line.len() as u64 + 1; // +1 for the newline
+            base_words += nwords as u64;
+            base_lines.push(line);
+        }
+
+        // Tile to target.
+        let mut lines = Vec::new();
+        let mut bytes = 0u64;
+        let mut words = 0u64;
+        'outer: loop {
+            for l in &base_lines {
+                if bytes >= spec.target_bytes {
+                    break 'outer;
+                }
+                bytes += l.len() as u64 + 1;
+                words += l.split(' ').count() as u64;
+                lines.push(l.clone());
+            }
+            if base_lines.is_empty() {
+                break;
+            }
+        }
+        let _ = base_words;
+        Corpus { lines, bytes, words }
+    }
+
+    /// Generate with *no tiling* — every line fresh (slower; used by tests
+    /// that need all-distinct streams).
+    pub fn generate_unique(spec: &CorpusSpec) -> Corpus {
+        let mut s = spec.clone();
+        s.base_block_bytes = Some(spec.target_bytes);
+        Self::generate(&s)
+    }
+
+    /// Total line count.
+    pub fn num_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Concatenate into one newline-joined string (for file export).
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(self.bytes as usize);
+        for l in &self.lines {
+            s.push_str(l);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Load from a newline-separated text blob.
+    pub fn from_text(text: &str) -> Corpus {
+        let lines: Vec<String> = text.lines().map(str::to_owned).collect();
+        let bytes = lines.iter().map(|l| l.len() as u64 + 1).sum();
+        let words = lines.iter().map(|l| l.split(' ').filter(|w| !w.is_empty()).count() as u64).sum();
+        Corpus { lines, bytes, words }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn generates_close_to_target_size() {
+        let spec = CorpusSpec::with_bytes(1 << 20);
+        let c = Corpus::generate(&spec);
+        let actual: u64 = c.lines.iter().map(|l| l.len() as u64 + 1).sum();
+        assert_eq!(actual, c.bytes);
+        assert!(c.bytes >= 1 << 20, "undershot: {}", c.bytes);
+        assert!(c.bytes < (1 << 20) + 200, "overshot by a lot: {}", c.bytes);
+        assert!(c.words > 50_000);
+    }
+
+    #[test]
+    fn tiled_corpus_repeats_lines() {
+        let spec = CorpusSpec {
+            target_bytes: 1 << 20,
+            base_block_bytes: Some(64 << 10),
+            ..Default::default()
+        };
+        let c = Corpus::generate(&spec);
+        // ~16 repeats of the base block: the first line appears many times.
+        let first = &c.lines[0];
+        let occurrences = c.lines.iter().filter(|l| l == &first).count();
+        assert!(occurrences >= 8, "expected tiling, got {occurrences} copies");
+    }
+
+    #[test]
+    fn unique_corpus_mostly_distinct_lines() {
+        let spec = CorpusSpec {
+            target_bytes: 256 << 10,
+            ..Default::default()
+        };
+        let c = Corpus::generate_unique(&spec);
+        let distinct: std::collections::HashSet<&String> = c.lines.iter().collect();
+        assert!(
+            distinct.len() * 10 >= c.lines.len() * 9,
+            "too many dup lines: {}/{}",
+            distinct.len(),
+            c.lines.len()
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = CorpusSpec::with_bytes(128 << 10);
+        let a = Corpus::generate(&spec);
+        let b = Corpus::generate(&spec);
+        assert_eq!(a.lines, b.lines);
+        let mut spec2 = spec.clone();
+        spec2.seed = 999;
+        let c = Corpus::generate(&spec2);
+        assert_ne!(a.lines, c.lines);
+    }
+
+    #[test]
+    fn word_frequencies_are_zipfy() {
+        let c = Corpus::generate(&CorpusSpec::with_bytes(512 << 10));
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for line in &c.lines {
+            for w in line.split(' ') {
+                *freq.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut counts: Vec<u64> = freq.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Head dominance: top word ≫ 100th word.
+        assert!(counts[0] > counts.get(100).copied().unwrap_or(0) * 10);
+        // Realistic distinct-word count for the size.
+        assert!(freq.len() > 1_000, "distinct words: {}", freq.len());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let c = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let text = c.to_text();
+        let back = Corpus::from_text(&text);
+        assert_eq!(c.lines, back.lines);
+        assert_eq!(c.bytes, back.bytes);
+    }
+
+    #[test]
+    fn words_per_line_respected() {
+        let spec = CorpusSpec {
+            target_bytes: 64 << 10,
+            words_per_line: (3, 7),
+            ..Default::default()
+        };
+        let c = Corpus::generate(&spec);
+        for l in &c.lines {
+            let n = l.split(' ').count();
+            assert!((3..=7).contains(&n), "line with {n} words");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Workload substrate: synthesis and tokenization of the word-count corpus.
+//!
+//! Reproduces the paper's input (Bible+Shakespeare repeated to a target
+//! size) with a Zipf-sampled generator seeded from embedded public-domain
+//! excerpts. See DESIGN.md §2 for the substitution argument.
+
+pub mod encoder;
+pub mod generator;
+pub mod seed;
+pub mod tokenizer;
+pub mod zipf;
+
+pub use encoder::Vocab;
+pub use generator::{Corpus, CorpusSpec};
+pub use tokenizer::{split_normalized, split_spaces, Tokenizer};
+pub use zipf::ZipfVocab;

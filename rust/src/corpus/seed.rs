@@ -1,0 +1,107 @@
+//! Seed text for corpus synthesis.
+//!
+//! The paper's input is "the Bible and Shakespeare's works, repeated about
+//! 200 times to make it roughly 2 GB". Both sources are public domain; we
+//! embed representative excerpts (KJV Genesis/Psalms, Hamlet, Sonnet 18)
+//! whose word-frequency profile seeds the Zipf vocabulary, and the
+//! generator repeats/extends them to the requested size — the same
+//! "stationary repeated corpus" shape the paper used.
+
+/// King James Version excerpts (public domain).
+pub const KJV_EXCERPT: &str = "\
+in the beginning god created the heaven and the earth
+and the earth was without form and void and darkness was upon the face of the deep
+and the spirit of god moved upon the face of the waters
+and god said let there be light and there was light
+and god saw the light that it was good and god divided the light from the darkness
+and god called the light day and the darkness he called night
+and the evening and the morning were the first day
+and god said let there be a firmament in the midst of the waters
+and let it divide the waters from the waters
+and god made the firmament and divided the waters which were under the firmament
+from the waters which were above the firmament and it was so
+and god called the firmament heaven and the evening and the morning were the second day
+the lord is my shepherd i shall not want
+he maketh me to lie down in green pastures he leadeth me beside the still waters
+he restoreth my soul he leadeth me in the paths of righteousness for his name sake
+yea though i walk through the valley of the shadow of death i will fear no evil
+for thou art with me thy rod and thy staff they comfort me
+thou preparest a table before me in the presence of mine enemies
+thou anointest my head with oil my cup runneth over
+surely goodness and mercy shall follow me all the days of my life
+and i will dwell in the house of the lord for ever
+";
+
+/// Shakespeare excerpts (public domain): Hamlet III.i and Sonnet 18.
+pub const SHAKESPEARE_EXCERPT: &str = "\
+to be or not to be that is the question
+whether tis nobler in the mind to suffer
+the slings and arrows of outrageous fortune
+or to take arms against a sea of troubles
+and by opposing end them to die to sleep
+no more and by a sleep to say we end
+the heartache and the thousand natural shocks
+that flesh is heir to tis a consummation
+devoutly to be wished to die to sleep
+to sleep perchance to dream ay there is the rub
+for in that sleep of death what dreams may come
+when we have shuffled off this mortal coil
+must give us pause there is the respect
+that makes calamity of so long life
+shall i compare thee to a summers day
+thou art more lovely and more temperate
+rough winds do shake the darling buds of may
+and summers lease hath all too short a date
+sometime too hot the eye of heaven shines
+and often is his gold complexion dimmed
+and every fair from fair sometime declines
+by chance or natures changing course untrimmed
+but thy eternal summer shall not fade
+nor lose possession of that fair thou owest
+nor shall death brag thou wanderest in his shade
+when in eternal lines to time thou growest
+so long as men can breathe or eyes can see
+so long lives this and this gives life to thee
+";
+
+/// Both excerpts concatenated — the default seed block.
+pub fn combined() -> String {
+    format!("{KJV_EXCERPT}{SHAKESPEARE_EXCERPT}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_nonempty_lowercase_space_separated() {
+        for text in [KJV_EXCERPT, SHAKESPEARE_EXCERPT] {
+            assert!(!text.is_empty());
+            for line in text.lines() {
+                assert!(!line.is_empty());
+                for w in line.split(' ') {
+                    assert!(!w.is_empty(), "double space in seed line: {line:?}");
+                    assert!(
+                        w.bytes().all(|b| b.is_ascii_lowercase()),
+                        "non-lowercase token {w:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combined_has_both() {
+        let c = combined();
+        assert!(c.contains("beginning"));
+        assert!(c.contains("perchance"));
+    }
+
+    #[test]
+    fn seed_vocabulary_is_reasonably_rich() {
+        use std::collections::HashSet;
+        let c = combined();
+        let vocab: HashSet<&str> = c.split_whitespace().collect();
+        assert!(vocab.len() > 150, "vocab {} too small", vocab.len());
+    }
+}

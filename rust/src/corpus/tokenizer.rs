@@ -1,0 +1,156 @@
+//! Tokenization.
+//!
+//! The paper's mapper splits lines on single spaces
+//! (`std::getline(ss, word, ' ')`). [`split_spaces`] reproduces that
+//! (skipping the empty tokens consecutive delimiters would produce);
+//! [`split_normalized`] is the "real-world" variant (lowercase +
+//! alphanumeric runs) offered by the engines behind a flag.
+//!
+//! The zero-copy iterator forms are the map-phase hot path: no allocation
+//! per token, just subslices of the line.
+
+/// Paper-faithful: split on ASCII space, skip empties.
+#[inline]
+pub fn split_spaces(line: &str) -> impl Iterator<Item = &str> {
+    line.split(' ').filter(|w| !w.is_empty())
+}
+
+/// Lowercasing, punctuation-stripping tokenizer: maximal runs of ASCII
+/// alphanumerics; uppercase mapped to lowercase. Allocates only for tokens
+/// containing uppercase letters.
+pub fn split_normalized(line: &str) -> Vec<std::borrow::Cow<'_, str>> {
+    use std::borrow::Cow;
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = None;
+    let mut needs_lower = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b.is_ascii_alphanumeric() {
+            if start.is_none() {
+                start = Some(i);
+                needs_lower = false;
+            }
+            needs_lower |= b.is_ascii_uppercase();
+        } else if let Some(s) = start.take() {
+            out.push(make_token(&line[s..i], needs_lower));
+        }
+    }
+    if let Some(s) = start {
+        out.push(make_token(&line[s..], needs_lower));
+    }
+    return out;
+
+    fn make_token(s: &str, needs_lower: bool) -> Cow<'_, str> {
+        if needs_lower {
+            Cow::Owned(s.to_ascii_lowercase())
+        } else {
+            Cow::Borrowed(s)
+        }
+    }
+}
+
+/// Tokenizer selection for engine configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tokenizer {
+    /// Paper-faithful single-space split.
+    Spaces,
+    /// Lowercased alphanumeric runs.
+    Normalized,
+}
+
+impl Tokenizer {
+    pub fn parse(s: &str) -> Option<Tokenizer> {
+        match s {
+            "spaces" | "paper" => Some(Tokenizer::Spaces),
+            "normalized" | "norm" => Some(Tokenizer::Normalized),
+            _ => None,
+        }
+    }
+
+    /// Count words in a line without materializing tokens (for stats).
+    pub fn count_words(self, line: &str) -> usize {
+        match self {
+            Tokenizer::Spaces => split_spaces(line).count(),
+            Tokenizer::Normalized => split_normalized(line).len(),
+        }
+    }
+
+    /// Visit each token of `line`.
+    pub fn for_each_token(self, line: &str, mut f: impl FnMut(&str)) {
+        match self {
+            Tokenizer::Spaces => {
+                for t in split_spaces(line) {
+                    f(t);
+                }
+            }
+            Tokenizer::Normalized => {
+                for t in split_normalized(line) {
+                    f(&t);
+                }
+            }
+        }
+    }
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Tokenizer::Spaces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_spaces_basic() {
+        let toks: Vec<&str> = split_spaces("the quick brown fox").collect();
+        assert_eq!(toks, ["the", "quick", "brown", "fox"]);
+    }
+
+    #[test]
+    fn split_spaces_skips_empties() {
+        let toks: Vec<&str> = split_spaces("  a  b ").collect();
+        assert_eq!(toks, ["a", "b"]);
+        assert_eq!(split_spaces("").count(), 0);
+        assert_eq!(split_spaces("   ").count(), 0);
+    }
+
+    #[test]
+    fn split_spaces_keeps_punctuation() {
+        // Paper-faithful: "fox." is a distinct word from "fox".
+        let toks: Vec<&str> = split_spaces("fox. Fox fox").collect();
+        assert_eq!(toks, ["fox.", "Fox", "fox"]);
+    }
+
+    #[test]
+    fn normalized_strips_and_lowercases() {
+        let toks = split_normalized("The quick-brown FOX! (42)");
+        let toks: Vec<&str> = toks.iter().map(|c| c.as_ref()).collect();
+        assert_eq!(toks, ["the", "quick", "brown", "fox", "42"]);
+    }
+
+    #[test]
+    fn normalized_borrows_when_already_lowercase() {
+        let toks = split_normalized("already lower");
+        assert!(matches!(toks[0], std::borrow::Cow::Borrowed(_)));
+        let toks = split_normalized("Upper");
+        assert!(matches!(toks[0], std::borrow::Cow::Owned(_)));
+    }
+
+    #[test]
+    fn count_words_matches_iteration() {
+        let line = "one two  three four";
+        assert_eq!(Tokenizer::Spaces.count_words(line), 4);
+        let mut n = 0;
+        Tokenizer::Spaces.for_each_token(line, |_| n += 1);
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn tokenizer_parse() {
+        assert_eq!(Tokenizer::parse("paper"), Some(Tokenizer::Spaces));
+        assert_eq!(Tokenizer::parse("norm"), Some(Tokenizer::Normalized));
+        assert_eq!(Tokenizer::parse("x"), None);
+    }
+}

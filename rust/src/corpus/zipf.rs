@@ -1,0 +1,166 @@
+//! Zipfian vocabulary and word sampler.
+//!
+//! English word frequency famously follows Zipf's law with exponent s ≈ 1:
+//! the Bible+Shakespeare mixture the paper uses has ~30k distinct words with
+//! "the"/"and"/"of" dominating. [`ZipfVocab`] reproduces that profile: ranks
+//! come from the embedded seed text (most-frequent first), padded with
+//! synthetic rare words up to the requested vocabulary size, and sampling is
+//! inverse-CDF (binary search over the cumulative weights).
+
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+
+pub struct ZipfVocab {
+    words: Vec<String>,
+    /// Cumulative probability per rank, cum[i] = P(rank <= i).
+    cum: Vec<f64>,
+    exponent: f64,
+}
+
+impl ZipfVocab {
+    /// Build from seed text: words ranked by observed frequency, then padded
+    /// with `wNNNN` synthetic words to `vocab_size`, weighted 1/rank^s.
+    pub fn from_seed(seed_text: &str, vocab_size: usize, exponent: f64) -> Self {
+        assert!(vocab_size > 0);
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for w in seed_text.split_whitespace() {
+            *freq.entry(w).or_insert(0) += 1;
+        }
+        let mut ranked: Vec<(&str, u64)> = freq.into_iter().collect();
+        // Stable rank order: frequency desc, then alphabetical for ties.
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut words: Vec<String> = ranked
+            .into_iter()
+            .take(vocab_size)
+            .map(|(w, _)| w.to_string())
+            .collect();
+        let mut pad = 0usize;
+        while words.len() < vocab_size {
+            words.push(format!("w{pad:05}"));
+            pad += 1;
+        }
+        // Zipf weights over the final rank order.
+        let mut cum = Vec::with_capacity(words.len());
+        let mut total = 0.0f64;
+        for i in 0..words.len() {
+            total += 1.0 / ((i + 1) as f64).powf(exponent);
+            cum.push(total);
+        }
+        for c in &mut cum {
+            *c /= total;
+        }
+        Self { words, cum, exponent }
+    }
+
+    /// Default profile: seed = KJV+Shakespeare excerpts, 30k vocab, s=1.07
+    /// (the classic fit for English).
+    pub fn english_like(vocab_size: usize) -> Self {
+        Self::from_seed(&super::seed::combined(), vocab_size, 1.07)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    pub fn word(&self, rank: usize) -> &str {
+        &self.words[rank]
+    }
+
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+
+    /// Sample a rank by inverse CDF.
+    #[inline]
+    pub fn sample_rank(&self, rng: &mut Xoshiro256) -> usize {
+        let u = rng.next_f64();
+        // partition_point: first index with cum[i] >= u.
+        self.cum.partition_point(|&c| c < u).min(self.words.len() - 1)
+    }
+
+    /// Sample a word.
+    #[inline]
+    pub fn sample<'a>(&'a self, rng: &mut Xoshiro256) -> &'a str {
+        self.word(self.sample_rank(rng))
+    }
+
+    /// Expected probability of the given rank (for tests/analysis).
+    pub fn prob(&self, rank: usize) -> f64 {
+        let lo = if rank == 0 { 0.0 } else { self.cum[rank - 1] };
+        self.cum[rank] - lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_ranks_put_the_first() {
+        let v = ZipfVocab::english_like(1000);
+        // "the" and "and" dominate the seed excerpts.
+        assert!(v.word(0) == "the" || v.word(0) == "and", "rank0 = {}", v.word(0));
+        assert_eq!(v.len(), 1000);
+    }
+
+    #[test]
+    fn padding_fills_vocab() {
+        let v = ZipfVocab::from_seed("alpha beta alpha", 10, 1.0);
+        assert_eq!(v.len(), 10);
+        assert_eq!(v.word(0), "alpha");
+        assert!(v.word(5).starts_with('w'), "synthetic pad: {}", v.word(5));
+        // All distinct.
+        let set: std::collections::HashSet<&str> =
+            (0..10).map(|i| v.word(i)).collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn sampling_follows_zipf_shape() {
+        let v = ZipfVocab::english_like(5000);
+        let mut rng = Xoshiro256::new(1234);
+        let mut counts = vec![0u64; v.len()];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[v.sample_rank(&mut rng)] += 1;
+        }
+        // Rank 0 should be ~ p0 * n; check within 15%.
+        let expect0 = v.prob(0) * n as f64;
+        assert!(
+            (counts[0] as f64 - expect0).abs() < expect0 * 0.15,
+            "rank0 count {} vs expected {expect0}",
+            counts[0]
+        );
+        // Monotone-ish decay: top rank beats rank 10 beats rank 100.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[100]);
+        // Tail gets sampled at least occasionally.
+        let tail: u64 = counts[1000..].iter().sum();
+        assert!(tail > 0, "tail never sampled");
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let v = ZipfVocab::english_like(100);
+        let total: f64 = (0..v.len()).map(|r| v.prob(r)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_sampling() {
+        let v = ZipfVocab::english_like(1000);
+        let mut a = Xoshiro256::new(7);
+        let mut b = Xoshiro256::new(7);
+        for _ in 0..100 {
+            assert_eq!(v.sample_rank(&mut a), v.sample_rank(&mut b));
+        }
+    }
+}

@@ -1,0 +1,403 @@
+//! The Blaze engine — the paper's MPI/OpenMP MapReduce, natively in Rust.
+//!
+//! Word count is exactly the paper's pipeline: a [`DistRange`] over line
+//! indices is mapped across nodes × threads; the mapper tokenizes its line
+//! and emits `(word, 1)` into a [`DistHashMap`], which combines
+//! continuously (map-side local reduce); one all-to-all shuffle then makes
+//! the map globally consistent. No fault tolerance: a node failure aborts
+//! the job and the driver reruns it from scratch (the paper's §Conclusion
+//! regime, bounded by `max_job_reruns`).
+//!
+//! Two insert paths reproduce the paper's two bars:
+//! * [`KeyPath::AllocPerToken`] ("Blaze"): every token materializes an
+//!   owned `String` before the map insert — what the C++
+//!   `std::getline(ss, word)` loop does.
+//! * [`KeyPath::ZeroAlloc`] ("Blaze TCM" analog): tokens are borrowed
+//!   `&str`s; the owned key is built only on first insertion. This stands
+//!   in for TCMalloc's cheap small allocations (see DESIGN.md §2).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::{spawn_on_fabric, Comm, Fabric, FailurePlan, NetModel};
+use crate::corpus::{Corpus, Tokenizer};
+use crate::concurrent::CachePolicy;
+use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
+use crate::hash::HashKind;
+use crate::util::pool::{self, Schedule};
+use crate::util::stats::Stopwatch;
+
+/// Key-insert strategy (the paper's Blaze vs Blaze-TCM bars).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyPath {
+    AllocPerToken,
+    ZeroAlloc,
+}
+
+impl KeyPath {
+    pub fn parse(s: &str) -> Option<KeyPath> {
+        match s {
+            "alloc" | "blaze" => Some(KeyPath::AllocPerToken),
+            "zero" | "tcm" | "arena" => Some(KeyPath::ZeroAlloc),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BlazeConf {
+    pub nnodes: usize,
+    pub threads_per_node: usize,
+    pub net: NetModel,
+    pub combine: CombineMode,
+    pub hash: HashKind,
+    pub tokenizer: Tokenizer,
+    pub key_path: KeyPath,
+    /// Thread-cache policy of the distributed map. Default: the optimized
+    /// `CacheFirst` (see EXPERIMENTS.md §Perf); the paper's prose policy is
+    /// `SpillOnContention`.
+    pub cache_policy: CachePolicy,
+    /// Whole-job reruns allowed on an injected node failure (no FT).
+    pub max_job_reruns: usize,
+}
+
+impl Default for BlazeConf {
+    fn default() -> Self {
+        Self {
+            nnodes: 1,
+            threads_per_node: 4,
+            net: NetModel::aws_like(),
+            combine: CombineMode::Eager,
+            hash: HashKind::Fx,
+            tokenizer: Tokenizer::Spaces,
+            key_path: KeyPath::ZeroAlloc,
+            cache_policy: CachePolicy::default(),
+            max_job_reruns: 3,
+        }
+    }
+}
+
+impl BlazeConf {
+    pub fn new(nnodes: usize, threads_per_node: usize) -> Self {
+        Self { nnodes, threads_per_node, ..Default::default() }
+    }
+
+    /// Fast test config: ideal network.
+    pub fn for_tests(nnodes: usize, threads_per_node: usize) -> Self {
+        Self { nnodes, threads_per_node, net: NetModel::ideal(), ..Default::default() }
+    }
+}
+
+/// Outcome of one Blaze word-count run.
+#[derive(Debug)]
+pub struct BlazeReport {
+    /// Global counts (gathered from all nodes, outside the timed section).
+    pub counts: HashMap<String, u64>,
+    /// Wall-clock of the slowest node's map+shuffle (the job time).
+    pub wall_secs: f64,
+    /// Max per-node map-phase seconds.
+    pub map_secs: f64,
+    /// Max per-node shuffle seconds.
+    pub shuffle_secs: f64,
+    /// Bytes serialized onto the simulated wire.
+    pub shuffle_bytes: u64,
+    /// Total words counted.
+    pub words: u64,
+    /// Whole-job reruns consumed by injected failures.
+    pub reruns: usize,
+}
+
+impl BlazeReport {
+    pub fn words_per_sec(&self) -> f64 {
+        self.words as f64 / self.wall_secs.max(1e-12)
+    }
+}
+
+/// Error when injected failures exceed the rerun budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobFailed {
+    pub attempts: usize,
+}
+
+impl std::fmt::Display for JobFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "blaze job failed after {} attempt(s)", self.attempts)
+    }
+}
+
+impl std::error::Error for JobFailed {}
+
+/// Run word count on the Blaze engine.
+pub fn word_count(conf: &BlazeConf, corpus: &Corpus) -> Result<BlazeReport, JobFailed> {
+    word_count_with_failures(conf, corpus, &FailurePlan::none())
+}
+
+/// Word count with failure injection: an injected node failure aborts the
+/// whole job (Blaze has no fault tolerance) and the driver reruns it.
+pub fn word_count_with_failures(
+    conf: &BlazeConf,
+    corpus: &Corpus,
+    failures: &FailurePlan,
+) -> Result<BlazeReport, JobFailed> {
+    let lines = Arc::new(corpus.lines.clone());
+    let mut reruns = 0usize;
+    let job_sw = Stopwatch::start(); // total across attempts: failures cost time
+    loop {
+        match try_word_count(conf, &lines, failures) {
+            Ok(mut report) => {
+                report.reruns = reruns;
+                report.wall_secs = job_sw.elapsed_secs();
+                return Ok(report);
+            }
+            Err(()) if reruns < conf.max_job_reruns => reruns += 1,
+            Err(()) => return Err(JobFailed { attempts: reruns + 1 }),
+        }
+    }
+}
+
+/// Per-node result of one attempt.
+struct NodeOutcome {
+    counts: Vec<(String, u64)>,
+    map_secs: f64,
+    shuffle_secs: f64,
+    wall_secs: f64,
+    words: u64,
+    failed: bool,
+}
+
+fn try_word_count(
+    conf: &BlazeConf,
+    lines: &Arc<Vec<String>>,
+    failures: &FailurePlan,
+) -> Result<BlazeReport, ()> {
+    let fabric = Fabric::new(conf.nnodes, conf.net);
+    let range = DistRange::new(0, lines.len() as i64);
+    let run_node = |comm: &Comm| -> NodeOutcome {
+        let map: DistHashMap<String, u64> = DistHashMap::with_policy(
+            comm.rank,
+            conf.nnodes,
+            conf.threads_per_node,
+            conf.hash,
+            conf.combine,
+            conf.cache_policy,
+        );
+        comm.barrier();
+        let job_sw = Stopwatch::start();
+
+        // ---- Map phase (the paper's DistRange::map) ----
+        let mut sw = Stopwatch::start();
+        let mut failed = failures.should_fail_node(comm.rank, 0);
+        let words = if failed {
+            0
+        } else {
+            count_node_block(conf, lines, &range, comm.rank, &map)
+        };
+        let map_secs = sw.restart().as_secs_f64();
+
+        // A failed node still participates in the shuffle protocol with
+        // empty payloads so peers don't deadlock; the driver discards the
+        // attempt.
+        failed |= failures.should_fail_node(comm.rank, 1);
+        map.shuffle(comm, reducer::sum);
+        let shuffle_secs = sw.elapsed_secs();
+        let wall_secs = job_sw.elapsed_secs();
+
+        NodeOutcome {
+            counts: map.to_vec_local(),
+            map_secs,
+            shuffle_secs,
+            wall_secs,
+            words,
+            failed,
+        }
+    };
+
+    let outcomes = spawn_on_fabric(&fabric, &run_node);
+    if outcomes.iter().any(|o| o.failed) {
+        return Err(());
+    }
+    let mut counts = HashMap::new();
+    let mut words = 0u64;
+    for o in &outcomes {
+        words += o.words;
+        for (k, v) in &o.counts {
+            // Keys are owner-sharded: no overlaps between nodes.
+            counts.insert(k.clone(), *v);
+        }
+    }
+    Ok(BlazeReport {
+        counts,
+        wall_secs: outcomes.iter().map(|o| o.wall_secs).fold(0.0, f64::max),
+        map_secs: outcomes.iter().map(|o| o.map_secs).fold(0.0, f64::max),
+        shuffle_secs: outcomes.iter().map(|o| o.shuffle_secs).fold(0.0, f64::max),
+        shuffle_bytes: fabric.total_bytes_sent(),
+        words,
+        reruns: 0,
+    })
+}
+
+/// The map phase on one node: tokenize this node's block of lines into the
+/// distributed map. Returns the number of words processed.
+fn count_node_block(
+    conf: &BlazeConf,
+    lines: &Arc<Vec<String>>,
+    range: &DistRange,
+    rank: usize,
+    map: &DistHashMap<String, u64>,
+) -> u64 {
+    let (lo, hi) = range.node_block(rank, conf.nnodes);
+    let words = std::sync::atomic::AtomicU64::new(0);
+    let tokenizer = conf.tokenizer;
+    let key_path = conf.key_path;
+    pool::parallel_for_range(
+        conf.threads_per_node,
+        lo,
+        hi,
+        Schedule::Dynamic { chunk: 64 },
+        |ctx, i| {
+            let line = &lines[i];
+            let mut n = 0u64;
+            match key_path {
+                KeyPath::ZeroAlloc => {
+                    tokenizer.for_each_token(line, |w| {
+                        n += 1;
+                        map.upsert_str(ctx.worker, w, 1, reducer::sum);
+                    });
+                }
+                KeyPath::AllocPerToken => {
+                    tokenizer.for_each_token(line, |w| {
+                        n += 1;
+                        map.upsert(ctx.worker, w.to_string(), 1, reducer::sum);
+                    });
+                }
+            }
+            words.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+        },
+    );
+    words.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// The paper's verbatim high-level interface, for the quickstart example:
+/// a `DistRange` mapreduce with an explicit mapper closure.
+pub fn word_count_paper_api(
+    comm: &Comm,
+    nthreads: usize,
+    lines: &[String],
+    target: &DistHashMap<String, u64>,
+) {
+    let range = DistRange::new(0, lines.len() as i64);
+    range.mapreduce(comm, nthreads, target, reducer::sum, |i, emit| {
+        for word in crate::corpus::split_spaces(&lines[i as usize]) {
+            emit(word.to_string(), 1);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusSpec;
+
+    fn serial_counts(c: &Corpus) -> HashMap<String, u64> {
+        let mut m = HashMap::new();
+        for line in &c.lines {
+            for w in crate::corpus::split_spaces(line) {
+                *m.entry(w.to_string()).or_insert(0u64) += 1;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn word_count_matches_serial() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(128 << 10));
+        let expect = serial_counts(&corpus);
+        for nnodes in [1usize, 2, 4] {
+            let conf = BlazeConf::for_tests(nnodes, 2);
+            let report = word_count(&conf, &corpus).unwrap();
+            assert_eq!(report.counts, expect, "nnodes={nnodes}");
+            assert_eq!(report.words, expect.values().sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn both_key_paths_agree() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(64 << 10));
+        let mut conf = BlazeConf::for_tests(2, 2);
+        conf.key_path = KeyPath::AllocPerToken;
+        let a = word_count(&conf, &corpus).unwrap();
+        conf.key_path = KeyPath::ZeroAlloc;
+        let b = word_count(&conf, &corpus).unwrap();
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn combine_none_agrees_but_ships_more() {
+        // Small vocab + tiling => heavy key repetition, so eager combining
+        // collapses the shuffle volume.
+        let corpus = Corpus::generate(&CorpusSpec {
+            target_bytes: 256 << 10,
+            base_block_bytes: Some(64 << 10),
+            vocab_size: 1000,
+            ..Default::default()
+        });
+        let mut conf = BlazeConf::for_tests(2, 2);
+        let eager = word_count(&conf, &corpus).unwrap();
+        conf.combine = CombineMode::None;
+        let none = word_count(&conf, &corpus).unwrap();
+        assert_eq!(eager.counts, none.counts);
+        assert!(
+            none.shuffle_bytes > eager.shuffle_bytes * 5,
+            "uncombined {} vs combined {}",
+            none.shuffle_bytes,
+            eager.shuffle_bytes
+        );
+    }
+
+    #[test]
+    fn node_failure_triggers_rerun() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let conf = BlazeConf::for_tests(2, 2);
+        let failures = FailurePlan::none().fail_node(1, 0);
+        let report = word_count_with_failures(&conf, &corpus, &failures).unwrap();
+        assert_eq!(report.reruns, 1);
+        assert_eq!(report.counts, serial_counts(&corpus));
+    }
+
+    #[test]
+    fn too_many_failures_aborts() {
+        let corpus = Corpus::from_text("a b\n");
+        let mut conf = BlazeConf::for_tests(1, 1);
+        conf.max_job_reruns = 0; // no rerun budget: first failure aborts
+        let failures = FailurePlan::none().fail_node(0, 0);
+        let err = word_count_with_failures(&conf, &corpus, &failures).unwrap_err();
+        assert_eq!(err.attempts, 1);
+    }
+
+    #[test]
+    fn paper_api_counts() {
+        use crate::cluster::spawn_cluster;
+        let lines: Vec<String> =
+            vec!["the cat".into(), "the hat".into(), "the cat".into()];
+        let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+            let target: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, CombineMode::Eager);
+            word_count_paper_api(comm, 2, &lines, &target);
+            target.to_vec_local()
+        });
+        let merged: HashMap<String, u64> = results.into_iter().flatten().collect();
+        assert_eq!(merged.get("the"), Some(&3));
+        assert_eq!(merged.get("cat"), Some(&2));
+        assert_eq!(merged.get("hat"), Some(&1));
+    }
+
+    #[test]
+    fn normalized_tokenizer_variant() {
+        let corpus = Corpus::from_text("The cat! THE CAT?\n");
+        let mut conf = BlazeConf::for_tests(1, 1);
+        conf.tokenizer = Tokenizer::Normalized;
+        let report = word_count(&conf, &corpus).unwrap();
+        assert_eq!(report.counts.get("the"), Some(&2));
+        assert_eq!(report.counts.get("cat"), Some(&2));
+    }
+}

@@ -1,0 +1,50 @@
+//! The two MapReduce engines under comparison.
+//!
+//! * [`blaze`] — the paper's MPI/OpenMP design (native, no fault tolerance,
+//!   continuous map-side combine in a distributed hash map).
+//! * [`spark`] — the Spark 2.4 baseline, simulated mechanism-by-mechanism
+//!   (RDD lineage, stages at shuffle boundaries, serialized + persisted
+//!   shuffle blocks, per-task dispatch overhead).
+
+pub mod blaze;
+pub mod spark;
+
+/// Which engine a CLI/bench invocation targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Blaze,
+    BlazeTcm,
+    Spark,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "blaze" => Some(Engine::Blaze),
+            "blaze-tcm" | "tcm" => Some(Engine::BlazeTcm),
+            "spark" => Some(Engine::Spark),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Engine::Blaze => "Blaze",
+            Engine::BlazeTcm => "Blaze TCM",
+            Engine::Spark => "Spark",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(Engine::parse("blaze"), Some(Engine::Blaze));
+        assert_eq!(Engine::parse("tcm"), Some(Engine::BlazeTcm));
+        assert_eq!(Engine::parse("spark"), Some(Engine::Spark));
+        assert_eq!(Engine::parse("flink"), None);
+    }
+}

@@ -1,0 +1,244 @@
+//! Shuffle block storage for the Spark-sim engine.
+//!
+//! Map tasks write one block per (map partition, reduce partition); reduce
+//! tasks fetch all blocks of their reduce partition. Blocks are either raw
+//! serialized bytes (when `serialize_shuffle`) or type-erased in-memory
+//! record vectors (the native-engine ablation).
+//!
+//! With `fault_tolerance` on, serialized blocks are additionally persisted
+//! to a per-context temp directory — real disk I/O, the same durability
+//! cost Spark pays so that reduce-task retries and lost executors can
+//! re-fetch map output without recomputing the map stage.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockId {
+    pub shuffle: usize,
+    pub map_part: usize,
+    pub reduce_part: usize,
+}
+
+pub enum BlockData {
+    /// Serialized records (`Vec<(K, V)>` encoded with `util::ser`).
+    Bytes(Vec<u8>),
+    /// Type-erased `Vec<(K, V)>` moved without serialization.
+    Typed(Box<dyn Any + Send + Sync>),
+}
+
+impl BlockData {
+    pub fn byte_len(&self) -> usize {
+        match self {
+            BlockData::Bytes(b) => b.len(),
+            BlockData::Typed(_) => 0,
+        }
+    }
+}
+
+pub struct Block {
+    /// Which simulated node produced (and stores) this block.
+    pub owner_node: usize,
+    pub data: BlockData,
+    /// Records in the block (metrics).
+    pub records: u64,
+}
+
+pub struct BlockStore {
+    blocks: Mutex<HashMap<BlockId, Block>>,
+    /// Root of the persisted-shuffle directory, if fault tolerance is on.
+    persist_dir: Option<PathBuf>,
+    next_shuffle_id: AtomicU64,
+}
+
+impl BlockStore {
+    pub fn new(persist: bool) -> Self {
+        let persist_dir = persist.then(|| {
+            let dir = std::env::temp_dir().join(format!(
+                "blaze_spark_shuffle_{}_{:x}",
+                std::process::id(),
+                &*Box::new(0u8) as *const u8 as usize, // unique-ish per store
+            ));
+            std::fs::create_dir_all(&dir).expect("create shuffle dir");
+            dir
+        });
+        Self {
+            blocks: Mutex::new(HashMap::new()),
+            persist_dir,
+            next_shuffle_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn fresh_shuffle_id(&self) -> usize {
+        self.next_shuffle_id.fetch_add(1, Ordering::Relaxed) as usize
+    }
+
+    pub fn persists(&self) -> bool {
+        self.persist_dir.is_some()
+    }
+
+    /// Store a block; persists serialized blocks to disk when enabled.
+    /// Returns the bytes written to disk (0 if not persisted).
+    pub fn put(&self, id: BlockId, block: Block) -> u64 {
+        let mut disk_bytes = 0u64;
+        if let (Some(dir), BlockData::Bytes(bytes)) = (&self.persist_dir, &block.data) {
+            let path = dir.join(format!("s{}_m{}_r{}.blk", id.shuffle, id.map_part, id.reduce_part));
+            let mut f = std::fs::File::create(path).expect("create shuffle block file");
+            f.write_all(bytes).expect("persist shuffle block");
+            f.flush().expect("flush shuffle block");
+            disk_bytes = bytes.len() as u64;
+        }
+        self.blocks.lock().unwrap().insert(id, block);
+        disk_bytes
+    }
+
+    /// Fetch a block's data for reading. Serialized blocks are cloned (the
+    /// reader deserializes its own copy, as a remote fetch would); typed
+    /// blocks are taken (single consumer).
+    pub fn fetch(&self, id: BlockId) -> Option<(usize, FetchedData, u64)> {
+        let mut map = self.blocks.lock().unwrap();
+        match map.get(&id) {
+            Some(Block { owner_node, data: BlockData::Bytes(b), records }) => {
+                Some((*owner_node, FetchedData::Bytes(b.clone()), *records))
+            }
+            Some(Block { data: BlockData::Typed(_), .. }) => {
+                // Take ownership of the typed payload.
+                let Block { owner_node, data, records } = map.remove(&id).unwrap();
+                match data {
+                    BlockData::Typed(t) => Some((owner_node, FetchedData::Typed(t), records)),
+                    BlockData::Bytes(_) => unreachable!(),
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Drop every block owned by `node` (simulated executor loss). Returns
+    /// how many blocks disappeared. Persisted files are removed too — the
+    /// machine is gone, disk and all.
+    pub fn remove_owned_by(&self, node: usize) -> usize {
+        let mut map = self.blocks.lock().unwrap();
+        let victims: Vec<BlockId> = map
+            .iter()
+            .filter(|(_, b)| b.owner_node == node)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &victims {
+            map.remove(id);
+            if let Some(dir) = &self.persist_dir {
+                let _ = std::fs::remove_file(dir.join(format!(
+                    "s{}_m{}_r{}.blk",
+                    id.shuffle, id.map_part, id.reduce_part
+                )));
+            }
+        }
+        victims.len()
+    }
+
+    /// Drop all blocks of a shuffle (job restart / cleanup).
+    pub fn clear(&self) {
+        self.blocks.lock().unwrap().clear();
+        if let Some(dir) = &self.persist_dir {
+            // Best-effort cleanup of persisted files.
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for BlockStore {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.persist_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+pub enum FetchedData {
+    Bytes(Vec<u8>),
+    Typed(Box<dyn Any + Send + Sync>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bid(m: usize, r: usize) -> BlockId {
+        BlockId { shuffle: 0, map_part: m, reduce_part: r }
+    }
+
+    #[test]
+    fn put_fetch_bytes() {
+        let store = BlockStore::new(false);
+        store.put(bid(0, 1), Block { owner_node: 0, data: BlockData::Bytes(vec![1, 2, 3]), records: 3 });
+        let (owner, data, records) = store.fetch(bid(0, 1)).unwrap();
+        assert_eq!(owner, 0);
+        assert_eq!(records, 3);
+        match data {
+            FetchedData::Bytes(b) => assert_eq!(b, vec![1, 2, 3]),
+            _ => panic!("expected bytes"),
+        }
+        // Bytes blocks can be fetched repeatedly (persisted semantics).
+        assert!(store.fetch(bid(0, 1)).is_some());
+    }
+
+    #[test]
+    fn put_fetch_typed_is_single_consumer() {
+        let store = BlockStore::new(false);
+        let payload: Vec<(String, u64)> = vec![("a".into(), 1)];
+        store.put(
+            bid(1, 0),
+            Block { owner_node: 2, data: BlockData::Typed(Box::new(payload)), records: 1 },
+        );
+        let (_, data, _) = store.fetch(bid(1, 0)).unwrap();
+        match data {
+            FetchedData::Typed(t) => {
+                let v = t.downcast::<Vec<(String, u64)>>().unwrap();
+                assert_eq!(*v, vec![("a".to_string(), 1u64)]);
+            }
+            _ => panic!("expected typed"),
+        }
+        assert!(store.fetch(bid(1, 0)).is_none(), "typed blocks are moved out");
+    }
+
+    #[test]
+    fn missing_block_is_none() {
+        let store = BlockStore::new(false);
+        assert!(store.fetch(bid(9, 9)).is_none());
+    }
+
+    #[test]
+    fn persistence_writes_files() {
+        let store = BlockStore::new(true);
+        let disk = store.put(
+            bid(0, 0),
+            Block { owner_node: 0, data: BlockData::Bytes(vec![0u8; 100]), records: 10 },
+        );
+        assert_eq!(disk, 100);
+        store.clear();
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn shuffle_ids_are_fresh() {
+        let store = BlockStore::new(false);
+        let a = store.fresh_shuffle_id();
+        let b = store.fresh_shuffle_id();
+        assert_ne!(a, b);
+    }
+}

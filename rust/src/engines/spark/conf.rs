@@ -1,0 +1,155 @@
+//! Spark-sim configuration: the cost knobs that stand in for the JVM/Spark
+//! mechanisms the paper blames for the performance gap.
+//!
+//! Each knob maps to one of the paper's three explanations and is toggled
+//! by an ablation bench:
+//!
+//! | knob | Spark mechanism modeled | paper's cause | ablation |
+//! |---|---|---|---|
+//! | `serialize_shuffle` | records serialized at every stage boundary | "runs through a virtual machine" (serde + UTF-8 re-validation) | A1 |
+//! | `boxed_records` | per-record heap objects (JVM object model) | same | A1 |
+//! | `fault_tolerance` | shuffle blocks persisted to disk + task retry from lineage | "fault tolerance incurs additional overhead" | A2 |
+//! | `map_side_combine` | per-partition combiner at shuffle write | contrast with Blaze's *continuous* combine | A3 |
+//! | `task_launch_overhead` | driver → executor task dispatch latency | (implementation overhead) | — |
+
+use std::time::Duration;
+
+use crate::cluster::NetModel;
+
+#[derive(Clone, Debug)]
+pub struct SparkConf {
+    /// Simulated cluster size.
+    pub nnodes: usize,
+    /// Worker threads per node (r5.xlarge = 4 vCPU).
+    pub threads_per_node: usize,
+    /// Network cost model for cross-node shuffle fetches.
+    pub net: NetModel,
+    /// Persist shuffle blocks to local "disk" (a temp dir) and retry failed
+    /// tasks from lineage. Off = Blaze-style no-FT (job restarts on failure).
+    pub fault_tolerance: bool,
+    /// Serialize records at stage boundaries (JVM executors must; a native
+    /// engine moving in-memory structs need not).
+    pub serialize_shuffle: bool,
+    /// Allocate each record as a separate heap object in the hot paths
+    /// (JVM object-model pressure proxy).
+    pub boxed_records: bool,
+    /// Model Java-8 UTF-16 strings: every pipeline string is decoded to
+    /// UTF-16 on creation and encoded back at the wire (see `jvm::JvmWord`).
+    pub jvm_strings: bool,
+    /// Model allocation-rate-driven minor GC pauses (see `jvm::GcSim`).
+    pub gc_model: bool,
+    /// JVM-vs-native instruction-throughput ratio applied to task *compute*
+    /// time (not to modeled sleeps). The memory-side JVM costs (UTF-16,
+    /// allocation, GC) are executed mechanically; this factor stands in for
+    /// the part that cannot be executed natively — bytecode dispatch, JIT
+    /// quality on megamorphic iterator chains, safepoint polling. 2.5 is
+    /// the conservative middle of published JVM-vs-C++ ratios for
+    /// string/allocation-heavy workloads. Set to 1.0 to ablate (A1).
+    pub vm_execution_factor: f64,
+    /// Map-side combining at shuffle write (Spark's `reduceByKey` does this).
+    pub map_side_combine: bool,
+    /// Per-task dispatch latency (driver scheduling + task deserialization;
+    /// Spark's is on the order of milliseconds).
+    pub task_launch_overhead: Duration,
+    /// Task retries before the job is declared failed (Spark default: 4
+    /// attempts).
+    pub max_task_retries: usize,
+    /// Whole-job restarts allowed when `fault_tolerance` is off.
+    pub max_job_restarts: usize,
+}
+
+impl Default for SparkConf {
+    fn default() -> Self {
+        Self {
+            nnodes: 1,
+            threads_per_node: 4,
+            net: NetModel::aws_like(),
+            fault_tolerance: true,
+            serialize_shuffle: true,
+            boxed_records: true,
+            jvm_strings: true,
+            gc_model: true,
+            vm_execution_factor: 2.5,
+            map_side_combine: true,
+            task_launch_overhead: Duration::from_millis(2),
+            max_task_retries: 4,
+            max_job_restarts: 3,
+        }
+    }
+}
+
+impl SparkConf {
+    /// Faithful EMR-like defaults at a given cluster shape.
+    pub fn emr_like(nnodes: usize, threads_per_node: usize) -> Self {
+        Self { nnodes, threads_per_node, ..Default::default() }
+    }
+
+    /// All overhead knobs off — the "what if Spark were native, non-FT,
+    /// zero-dispatch" hypothetical used as the ablation floor.
+    pub fn stripped(nnodes: usize, threads_per_node: usize) -> Self {
+        Self {
+            nnodes,
+            threads_per_node,
+            net: NetModel::aws_like(),
+            fault_tolerance: false,
+            serialize_shuffle: false,
+            boxed_records: false,
+            jvm_strings: false,
+            gc_model: false,
+            vm_execution_factor: 1.0,
+            map_side_combine: true,
+            task_launch_overhead: Duration::ZERO,
+            max_task_retries: 1,
+            max_job_restarts: 3,
+        }
+    }
+
+    /// Fast config for unit tests:
+    /// no sleeps, no disk, ideal network.
+    pub fn for_tests(nnodes: usize, threads_per_node: usize) -> Self {
+        Self {
+            nnodes,
+            threads_per_node,
+            net: NetModel::ideal(),
+            fault_tolerance: true,
+            serialize_shuffle: true,
+            boxed_records: false,
+            jvm_strings: false,
+            gc_model: false,
+            vm_execution_factor: 1.0,
+            map_side_combine: true,
+            task_launch_overhead: Duration::ZERO,
+            max_task_retries: 4,
+            max_job_restarts: 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_model_real_spark() {
+        let c = SparkConf::default();
+        assert!(c.fault_tolerance);
+        assert!(c.serialize_shuffle);
+        assert!(c.jvm_strings);
+        assert!(c.gc_model);
+        assert!(c.map_side_combine);
+        assert!(c.task_launch_overhead > Duration::ZERO);
+        assert!(c.vm_execution_factor > 1.0);
+    }
+
+    #[test]
+    fn stripped_removes_overheads() {
+        let c = SparkConf::stripped(2, 4);
+        assert!(!c.fault_tolerance);
+        assert!(!c.serialize_shuffle);
+        assert!(!c.boxed_records);
+        assert!(!c.jvm_strings);
+        assert!(!c.gc_model);
+        assert_eq!(c.task_launch_overhead, Duration::ZERO);
+        assert_eq!(c.nnodes, 2);
+    }
+}

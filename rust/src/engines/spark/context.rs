@@ -1,0 +1,282 @@
+//! `SparkContext` — driver, task scheduler, and executor simulation.
+//!
+//! Execution model mirrored from Spark:
+//!
+//! * the **driver** (`run_job`) resolves the lineage into stages and runs
+//!   them in dependency order;
+//! * each **stage** is a set of tasks, one per partition; task `p` is
+//!   placed on node `p % nnodes`, and each node executes its tasks with
+//!   `threads_per_node` worker threads;
+//! * every task attempt pays `task_launch_overhead` (driver dispatch +
+//!   task deserialization, milliseconds in real Spark);
+//! * task failures (from the [`FailurePlan`]) are retried up to
+//!   `max_task_retries` when fault tolerance is on; otherwise they abort
+//!   the job, and the driver restarts it from scratch up to
+//!   `max_job_restarts` times — the paper's "simply run the task multiple
+//!   times" regime.
+
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::FailurePlan;
+use crate::util::pool::{self, Schedule};
+
+use super::conf::SparkConf;
+use super::block::BlockStore;
+use super::jvm::GcSim;
+use super::metrics::SparkMetrics;
+use super::rdd::{ComputeFn, JobError, Rdd};
+
+pub struct CtxInner {
+    pub conf: SparkConf,
+    pub store: BlockStore,
+    pub metrics: SparkMetrics,
+    pub gc: GcSim,
+    pub failures: std::sync::Arc<FailurePlan>,
+}
+
+/// Handed to every task: which node it runs on + shared context.
+pub struct TaskCtx<'a> {
+    pub inner: &'a CtxInner,
+    /// Simulated node executing this task.
+    pub node: usize,
+}
+
+#[derive(Clone)]
+pub struct SparkContext {
+    inner: Arc<CtxInner>,
+}
+
+impl SparkContext {
+    pub fn new(conf: SparkConf) -> Self {
+        Self::with_failures(conf, FailurePlan::none())
+    }
+
+    pub fn with_failures(conf: SparkConf, failures: FailurePlan) -> Self {
+        Self::with_failures_arc(conf, Arc::new(failures))
+    }
+
+    /// Like [`with_failures`](Self::with_failures) with a shared plan
+    /// (used by the unified `wordcount` front-end).
+    pub fn with_failures_arc(conf: SparkConf, failures: Arc<FailurePlan>) -> Self {
+        assert!(conf.nnodes > 0 && conf.threads_per_node > 0);
+        let store = BlockStore::new(conf.fault_tolerance);
+        let gc = GcSim::new(conf.gc_model);
+        Self {
+            inner: Arc::new(CtxInner {
+                conf,
+                store,
+                metrics: SparkMetrics::new(),
+                gc,
+                failures,
+            }),
+        }
+    }
+
+    pub fn inner(&self) -> &CtxInner {
+        &self.inner
+    }
+
+    pub fn conf(&self) -> &SparkConf {
+        &self.inner.conf
+    }
+
+    pub fn metrics(&self) -> &SparkMetrics {
+        &self.inner.metrics
+    }
+
+    /// Default partition count: 2 tasks per worker thread cluster-wide
+    /// (Spark's guidance of 2–4× parallelism).
+    pub fn default_partitions(&self) -> usize {
+        self.inner.conf.nnodes * self.inner.conf.threads_per_node * 2
+    }
+
+    /// Source RDD from an in-memory vector, chunked into `partitions`.
+    pub fn parallelize<T>(&self, data: Vec<T>, partitions: usize) -> Rdd<T>
+    where
+        T: Clone + Send + Sync + 'static,
+    {
+        assert!(partitions > 0);
+        let data = Arc::new(data);
+        let compute: ComputeFn<T> = Arc::new(move |_tc, p| {
+            let n = data.len();
+            let base = n / partitions;
+            let rem = n % partitions;
+            let lo = p * base + p.min(rem);
+            let hi = lo + base + usize::from(p < rem);
+            data[lo..hi].to_vec()
+        });
+        Rdd {
+            ctx: self.clone(),
+            num_partitions: partitions,
+            stage: 0,
+            compute,
+            upstream: Vec::new(),
+        }
+    }
+
+    /// Source RDD over corpus lines (Spark's `textFile` analog: each task
+    /// materializes its split as owned strings, as a JVM executor would
+    /// when reading HDFS blocks).
+    pub fn text_lines(&self, lines: Arc<Vec<String>>, partitions: usize) -> Rdd<String> {
+        assert!(partitions > 0);
+        let compute: ComputeFn<String> = Arc::new(move |_tc, p| {
+            let n = lines.len();
+            let base = n / partitions;
+            let rem = n % partitions;
+            let lo = p * base + p.min(rem);
+            let hi = lo + base + usize::from(p < rem);
+            lines[lo..hi].to_vec()
+        });
+        Rdd {
+            ctx: self.clone(),
+            num_partitions: partitions,
+            stage: 0,
+            compute,
+            upstream: Vec::new(),
+        }
+    }
+
+    /// Run one stage's tasks across the simulated cluster. `body` must be
+    /// retry-safe. Returns when all tasks have succeeded.
+    pub(crate) fn run_stage(
+        &self,
+        stage: usize,
+        num_partitions: usize,
+        body: impl Fn(&TaskCtx, usize) + Sync,
+    ) -> Result<(), JobError> {
+        let inner = &*self.inner;
+        let conf = &inner.conf;
+        let error: Mutex<Option<JobError>> = Mutex::new(None);
+
+        std::thread::scope(|scope| {
+            for node in 0..conf.nnodes {
+                let body = &body;
+                let error = &error;
+                scope.spawn(move || {
+                    // This node's tasks: partitions ≡ node (mod nnodes).
+                    let my_tasks: Vec<usize> =
+                        (0..num_partitions).filter(|p| p % conf.nnodes == node).collect();
+                    let tc = TaskCtx { inner, node };
+                    pool::parallel_for(
+                        conf.threads_per_node.min(my_tasks.len().max(1)),
+                        my_tasks.len(),
+                        Schedule::Dynamic { chunk: 1 },
+                        |_wctx, ti| {
+                            if error.lock().unwrap().is_some() {
+                                return; // job already failed; drain quickly
+                            }
+                            let p = my_tasks[ti];
+                            if let Err(e) = run_task_with_retries(&tc, stage, p, body) {
+                                error.lock().unwrap().get_or_insert(e);
+                            }
+                        },
+                    );
+                });
+            }
+        });
+
+        match error.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Driver entry: run `rdd`'s full lineage and materialize it. Handles
+    /// the no-FT whole-job restart loop.
+    pub(crate) fn run_job<T: Send + Sync + 'static>(
+        &self,
+        rdd: &Rdd<T>,
+    ) -> Result<Vec<T>, JobError> {
+        let conf = &self.inner.conf;
+        let mut restarts = 0usize;
+        loop {
+            match self.try_job_once(rdd) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let retryable = !conf.fault_tolerance
+                        && matches!(e, JobError::TaskFailed { .. })
+                        && restarts < conf.max_job_restarts;
+                    if !retryable {
+                        return Err(e);
+                    }
+                    restarts += 1;
+                    self.inner
+                        .metrics
+                        .job_restarts
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    // Blaze-style recovery: throw everything away, rerun.
+                    self.inner.store.clear();
+                    for dep in &rdd.upstream {
+                        dep.reset();
+                    }
+                }
+            }
+        }
+    }
+
+    fn try_job_once<T: Send + Sync + 'static>(&self, rdd: &Rdd<T>) -> Result<Vec<T>, JobError> {
+        // 1. Materialize all shuffle dependencies (map stages), in order.
+        for dep in &rdd.upstream {
+            dep.ensure(self)?;
+        }
+        // Injected executor loss: the node's shuffle output vanishes after
+        // the map stage; reduce tasks will recover via lineage.
+        while let Some(rank) = self.inner.failures.take_lost_executor() {
+            let lost = self.inner.store.remove_owned_by(rank);
+            crate::log_warn!(
+                "spark",
+                "executor {rank} lost: {lost} shuffle block(s) gone, recovering from lineage"
+            );
+        }
+        // 2. Result stage: compute each output partition, keep order.
+        let slots: Vec<Mutex<Vec<T>>> =
+            (0..rdd.num_partitions).map(|_| Mutex::new(Vec::new())).collect();
+        let compute = &rdd.compute;
+        self.run_stage(rdd.stage, rdd.num_partitions, |tc, p| {
+            let out = compute(tc, p);
+            *slots[p].lock().unwrap() = out;
+        })?;
+        let mut all = Vec::new();
+        for s in slots {
+            all.extend(s.into_inner().unwrap());
+        }
+        Ok(all)
+    }
+}
+
+/// One task with Spark's attempt semantics.
+fn run_task_with_retries(
+    tc: &TaskCtx,
+    stage: usize,
+    partition: usize,
+    body: impl Fn(&TaskCtx, usize),
+) -> Result<(), JobError> {
+    let inner = tc.inner;
+    let conf = &inner.conf;
+    let max_attempts = if conf.fault_tolerance { conf.max_task_retries.max(1) } else { 1 };
+    for _attempt in 0..max_attempts {
+        inner
+            .metrics
+            .tasks_launched
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Dispatch latency (driver → executor).
+        if !conf.task_launch_overhead.is_zero() {
+            std::thread::sleep(conf.task_launch_overhead);
+            inner.metrics.add_dispatch(conf.task_launch_overhead);
+        }
+        // Injected failure?
+        if inner.failures.should_fail_task(stage, partition) {
+            inner
+                .metrics
+                .task_failures
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if conf.fault_tolerance {
+                continue; // retry from lineage
+            }
+            return Err(JobError::TaskFailed { stage, partition });
+        }
+        body(tc, partition);
+        return Ok(());
+    }
+    Err(JobError::RetriesExhausted { stage, partition })
+}

@@ -1,0 +1,124 @@
+//! Execution metrics for the Spark-sim engine — the phase/overhead
+//! breakdown the ablation benches report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct SparkMetrics {
+    pub tasks_launched: AtomicU64,
+    pub task_failures: AtomicU64,
+    pub job_restarts: AtomicU64,
+    pub shuffle_bytes_written: AtomicU64,
+    pub shuffle_bytes_read: AtomicU64,
+    pub records_shuffled: AtomicU64,
+    /// Map partitions recomputed from lineage after a block loss.
+    pub lineage_recomputes: AtomicU64,
+    /// Nanosecond accumulators.
+    ser_ns: AtomicU64,
+    deser_ns: AtomicU64,
+    dispatch_ns: AtomicU64,
+    net_ns: AtomicU64,
+    disk_ns: AtomicU64,
+    vm_ns: AtomicU64,
+    gc_ns: AtomicU64,
+}
+
+impl SparkMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_ser(&self, d: Duration) {
+        self.ser_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_deser(&self, d: Duration) {
+        self.deser_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_dispatch(&self, d: Duration) {
+        self.dispatch_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_net(&self, d: Duration) {
+        self.net_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_disk(&self, d: Duration) {
+        self.disk_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_vm(&self, d: Duration) {
+        self.vm_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_gc(&self, d: Duration) {
+        self.gc_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn vm_secs(&self) -> f64 {
+        self.vm_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn gc_secs(&self) -> f64 {
+        self.gc_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn ser_secs(&self) -> f64 {
+        self.ser_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn deser_secs(&self) -> f64 {
+        self.deser_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn dispatch_secs(&self) -> f64 {
+        self.dispatch_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn net_secs(&self) -> f64 {
+        self.net_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn disk_secs(&self) -> f64 {
+        self.disk_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "tasks={} failures={} restarts={} recomputes={} shuffle_out={} shuffle_in={} records={} \
+             ser={:.3}s deser={:.3}s dispatch={:.3}s net={:.3}s disk={:.3}s vm={:.3}s gc={:.3}s",
+            self.tasks_launched.load(Ordering::Relaxed),
+            self.task_failures.load(Ordering::Relaxed),
+            self.job_restarts.load(Ordering::Relaxed),
+            self.lineage_recomputes.load(Ordering::Relaxed),
+            crate::util::stats::fmt_bytes(self.shuffle_bytes_written.load(Ordering::Relaxed)),
+            crate::util::stats::fmt_bytes(self.shuffle_bytes_read.load(Ordering::Relaxed)),
+            self.records_shuffled.load(Ordering::Relaxed),
+            self.ser_secs(),
+            self.deser_secs(),
+            self.dispatch_secs(),
+            self.net_secs(),
+            self.disk_secs(),
+            self.vm_secs(),
+            self.gc_secs(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulators_add_up() {
+        let m = SparkMetrics::new();
+        m.tasks_launched.fetch_add(3, Ordering::Relaxed);
+        m.add_ser(Duration::from_millis(10));
+        m.add_ser(Duration::from_millis(5));
+        assert!((m.ser_secs() - 0.015).abs() < 1e-9);
+        assert!(m.summary().contains("tasks=3"));
+    }
+}

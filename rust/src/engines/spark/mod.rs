@@ -1,0 +1,295 @@
+//! Spark-style baseline engine.
+//!
+//! A faithful-mechanism simulation of the Spark 2.4 word-count pipeline the
+//! paper benchmarks against (see `conf.rs` for which JVM/Spark costs are
+//! modeled and how the ablations toggle them):
+//!
+//! ```scala
+//! textFile.flatMap(line => line.split(" "))
+//!         .map(word => (word, 1))
+//!         .reduceByKey(_ + _)
+//! ```
+
+pub mod block;
+pub mod conf;
+pub mod context;
+pub mod jvm;
+pub mod metrics;
+pub mod rdd;
+
+pub use conf::SparkConf;
+pub use jvm::{GcSim, HeapSize, JvmWord};
+pub use context::{SparkContext, TaskCtx};
+pub use metrics::SparkMetrics;
+pub use rdd::{JobError, Rdd};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::corpus::{Corpus, Tokenizer};
+use crate::dist::reducer;
+
+/// The canonical word count on the Spark-sim engine. Returns the counts
+/// (merged across partitions) or the job error.
+pub fn word_count(
+    ctx: &SparkContext,
+    corpus: &Corpus,
+    tokenizer: Tokenizer,
+) -> Result<HashMap<String, u64>, JobError> {
+    word_count_lines(ctx, Arc::new(corpus.lines.clone()), tokenizer)
+}
+
+/// `word_count` over shared lines (avoids cloning the corpus per run in
+/// benches — the engine still clones per task, as `textFile` would).
+pub fn word_count_lines(
+    ctx: &SparkContext,
+    lines: Arc<Vec<String>>,
+    tokenizer: Tokenizer,
+) -> Result<HashMap<String, u64>, JobError> {
+    if ctx.conf().jvm_strings {
+        return word_count_lines_jvm(ctx, lines, tokenizer);
+    }
+    let partitions = ctx.default_partitions();
+    let text = ctx.text_lines(lines, partitions);
+    // flatMap(line => line.split(' ')) — materializes owned words, exactly
+    // like the Scala example's String objects.
+    let words = text.flat_map(move |line: String| {
+        let mut out = Vec::new();
+        tokenizer.for_each_token(&line, |w| out.push(w.to_string()));
+        out
+    });
+    // map(word => (word, 1))
+    let pairs = words.map(|w| (w, 1u64));
+    // reduceByKey(_ + _)
+    pairs.reduce_by_key_collect(reducer::sum, partitions)
+}
+
+/// The Java-8-faithful pipeline: every string is a UTF-16 [`JvmWord`], so
+/// the engine pays the JVM's decode/encode and memory-traffic costs at the
+/// same points a Spark executor does (textFile read, split, writeUTF /
+/// readUTF at the shuffle). See `jvm.rs`.
+fn word_count_lines_jvm(
+    ctx: &SparkContext,
+    lines: Arc<Vec<String>>,
+    tokenizer: Tokenizer,
+) -> Result<HashMap<String, u64>, JobError> {
+    let partitions = ctx.default_partitions();
+    let text = ctx.text_lines(lines, partitions);
+    let words = text.flat_map(move |line: String| {
+        // new String(bytes, UTF_8): the JVM materializes the line as UTF-16
+        // before split() runs.
+        let jline = JvmWord::from_str(&line);
+        let line16 = jline.to_string_lossy();
+        let mut out = Vec::new();
+        // split(" ") then each token is a fresh UTF-16 String.
+        tokenizer.for_each_token(&line16, |w| out.push(JvmWord::from_str(w)));
+        out
+    });
+    let pairs = words.map(|w| (w, 1u64));
+    let counts = pairs.reduce_by_key_collect(reducer::sum, partitions)?;
+    // Driver-side collect converts to platform strings once (outside the
+    // engines' timed loops this is negligible; kept for API uniformity).
+    Ok(counts
+        .into_iter()
+        .map(|(k, v)| (k.to_string_lossy(), v))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::FailurePlan;
+    use crate::corpus::CorpusSpec;
+
+    fn tiny_corpus() -> Corpus {
+        Corpus::from_text("the cat sat\nthe cat\nthe end\n")
+    }
+
+    fn serial_counts(c: &Corpus) -> HashMap<String, u64> {
+        let mut m = HashMap::new();
+        for line in &c.lines {
+            for w in crate::corpus::split_spaces(line) {
+                *m.entry(w.to_string()).or_insert(0u64) += 1;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn word_count_tiny() {
+        let ctx = SparkContext::new(SparkConf::for_tests(1, 2));
+        let counts = word_count(&ctx, &tiny_corpus(), Tokenizer::Spaces).unwrap();
+        assert_eq!(counts.get("the"), Some(&3));
+        assert_eq!(counts.get("cat"), Some(&2));
+        assert_eq!(counts.get("sat"), Some(&1));
+        assert_eq!(counts.get("end"), Some(&1));
+        assert_eq!(counts.len(), 4);
+    }
+
+    #[test]
+    fn word_count_matches_serial_on_generated_corpus() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(128 << 10));
+        for nnodes in [1usize, 3] {
+            let ctx = SparkContext::new(SparkConf::for_tests(nnodes, 2));
+            let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+            assert_eq!(counts, serial_counts(&corpus), "nnodes={nnodes}");
+        }
+    }
+
+    #[test]
+    fn no_serde_path_matches() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(64 << 10));
+        let mut conf = SparkConf::for_tests(2, 2);
+        conf.serialize_shuffle = false;
+        conf.fault_tolerance = false; // typed blocks can't persist
+        let ctx = SparkContext::new(conf);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+        assert_eq!(ctx.metrics().shuffle_bytes_written.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn no_combine_ships_more_records() {
+        // Small vocab + tiling => heavy repetition; the per-partition
+        // combiner then collapses the shuffled record count.
+        let corpus = Corpus::generate(&CorpusSpec {
+            target_bytes: 256 << 10,
+            base_block_bytes: Some(64 << 10),
+            vocab_size: 1000,
+            ..Default::default()
+        });
+        let run = |combine: bool| {
+            let mut conf = SparkConf::for_tests(2, 2);
+            conf.map_side_combine = combine;
+            let ctx = SparkContext::new(conf);
+            let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+            let shipped = ctx
+                .metrics()
+                .records_shuffled
+                .load(std::sync::atomic::Ordering::Relaxed);
+            (counts, shipped)
+        };
+        let (with, shipped_with) = run(true);
+        let (without, shipped_without) = run(false);
+        assert_eq!(with, without);
+        assert!(
+            shipped_without > shipped_with * 3,
+            "uncombined shuffle must ship many more records: {shipped_without} vs {shipped_with}"
+        );
+    }
+
+    #[test]
+    fn boxed_records_path_matches() {
+        let corpus = tiny_corpus();
+        let mut conf = SparkConf::for_tests(1, 2);
+        conf.boxed_records = true;
+        let ctx = SparkContext::new(conf);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts.get("the"), Some(&3));
+    }
+
+    #[test]
+    fn task_failure_with_ft_recovers_via_retry() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let conf = SparkConf::for_tests(2, 2);
+        // Fail one map task (stage 0) and one reduce task (stage 1).
+        let failures = FailurePlan::none().fail_task(0, 1).fail_task(1, 3);
+        let ctx = SparkContext::with_failures(conf, failures);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+        let m = ctx.metrics();
+        assert_eq!(m.task_failures.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(m.job_restarts.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn task_failure_without_ft_restarts_job() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let mut conf = SparkConf::for_tests(2, 2);
+        conf.fault_tolerance = false;
+        let failures = FailurePlan::none().fail_task(0, 0);
+        let ctx = SparkContext::with_failures(conf, failures);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+        let m = ctx.metrics();
+        assert_eq!(m.job_restarts.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn narrow_ops_compose() {
+        let ctx = SparkContext::new(SparkConf::for_tests(1, 2));
+        let rdd = ctx.parallelize((0i64..100).collect(), 4);
+        let out = rdd
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x])
+            .collect()
+            .unwrap();
+        let expect: Vec<i64> = (0..100)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x])
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn count_action() {
+        let ctx = SparkContext::new(SparkConf::for_tests(1, 2));
+        let rdd = ctx.parallelize(vec![1u64; 1000], 8);
+        assert_eq!(rdd.count().unwrap(), 1000);
+    }
+
+    #[test]
+    fn lost_executor_recovers_via_lineage() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(64 << 10));
+        let conf = SparkConf::for_tests(2, 2);
+        // Node 1's shuffle output vanishes after the map stage.
+        let failures = FailurePlan::none().lose_executor(1);
+        let ctx = SparkContext::with_failures(conf, failures);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = ctx.metrics();
+        assert!(
+            m.lineage_recomputes.load(Relaxed) > 0,
+            "lost blocks must be recomputed from lineage"
+        );
+        assert_eq!(m.job_restarts.load(Relaxed), 0, "no full restart needed");
+    }
+
+    #[test]
+    fn losing_every_executor_still_recovers() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let conf = SparkConf::for_tests(2, 2);
+        let failures = FailurePlan::none().lose_executor(0).lose_executor(1);
+        let ctx = SparkContext::with_failures(conf, failures);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+    }
+
+    #[test]
+    fn jvm_pipeline_matches_serial() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(64 << 10));
+        let mut conf = SparkConf::for_tests(2, 2);
+        conf.jvm_strings = true;
+        conf.gc_model = true;
+        let ctx = SparkContext::new(conf);
+        let counts = word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        assert_eq!(counts, serial_counts(&corpus));
+        // GC accounting saw the allocation stream.
+        assert!(ctx.inner().gc.total_allocated() > corpus.bytes);
+    }
+
+    #[test]
+    fn metrics_track_shuffle_bytes() {
+        let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+        let ctx = SparkContext::new(SparkConf::for_tests(2, 2));
+        word_count(&ctx, &corpus, Tokenizer::Spaces).unwrap();
+        let m = ctx.metrics();
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(m.shuffle_bytes_written.load(Relaxed) > 0);
+        assert!(m.shuffle_bytes_read.load(Relaxed) >= m.shuffle_bytes_written.load(Relaxed));
+        assert!(m.tasks_launched.load(Relaxed) > 0);
+    }
+}

@@ -1,0 +1,452 @@
+//! RDD abstraction with Spark's execution semantics:
+//!
+//! * **lazy narrow transformations** (`map`, `flat_map`, `filter`) compose
+//!   into a single per-partition compute function — Spark's pipelining —
+//!   so a stage's task runs the whole narrow chain with no materialization
+//!   between operators;
+//! * **wide transformations** (`reduce_by_key`) cut the lineage into
+//!   stages: the parent side becomes a *map stage* that writes shuffle
+//!   blocks (one per reduce partition), and the result RDD's compute
+//!   *fetches* those blocks — across the simulated network when the block
+//!   lives on another node;
+//! * **lineage** is the graph of [`StageRunner`]s hanging off each RDD.
+//!   With fault tolerance on, a failed task is retried from lineage; with
+//!   it off, any failure aborts the job (the driver restarts from scratch,
+//!   Blaze-style).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::concurrent::MapKey;
+use crate::hash::{bucket_of, HashKind};
+use crate::util::ser::{Decode, Encode};
+
+use super::block::{Block, BlockData, BlockId, FetchedData};
+use super::context::{SparkContext, TaskCtx};
+use super::jvm::HeapSize;
+
+/// Errors surfaced to the driver.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// A task failed and fault tolerance is disabled.
+    TaskFailed { stage: usize, partition: usize },
+    /// A task exhausted its retry budget (FT on).
+    RetriesExhausted { stage: usize, partition: usize },
+    /// The whole job failed more times than `max_job_restarts`.
+    JobAborted { restarts: usize },
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::TaskFailed { stage, partition } => {
+                write!(f, "task failed (stage {stage}, partition {partition}), no fault tolerance")
+            }
+            JobError::RetriesExhausted { stage, partition } => {
+                write!(f, "task retries exhausted (stage {stage}, partition {partition})")
+            }
+            JobError::JobAborted { restarts } => {
+                write!(f, "job aborted after {restarts} restart(s)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Charge the JVM instruction-throughput tax on a measured compute span:
+/// sleep `(factor - 1) x elapsed`, so wall-clock reflects a JVM executing
+/// the same work (see `SparkConf::vm_execution_factor`).
+pub(crate) fn vm_tax(tc: &TaskCtx, compute_elapsed: std::time::Duration) {
+    let factor = tc.inner.conf.vm_execution_factor;
+    if factor > 1.0 {
+        let extra = compute_elapsed.mul_f64(factor - 1.0);
+        if !extra.is_zero() {
+            std::thread::sleep(extra);
+            tc.inner.metrics.add_vm(extra);
+        }
+    }
+}
+
+/// Per-partition compute: the fused narrow-op chain of a stage.
+pub type ComputeFn<T> = Arc<dyn Fn(&TaskCtx, usize) -> Vec<T> + Send + Sync>;
+
+/// A runnable map stage (the parent side of a shuffle), with memoized
+/// completion so diamond lineage runs each stage once per job.
+pub trait StageRunner: Send + Sync {
+    /// Ensure this stage's shuffle output exists (running upstream first).
+    fn ensure(&self, ctx: &SparkContext) -> Result<(), JobError>;
+    /// Forget completion (job restart).
+    fn reset(&self);
+}
+
+/// Keys that can cross a shuffle boundary.
+pub trait ShuffleKey:
+    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Send + Sync + 'static
+{
+}
+impl<T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Send + Sync + 'static> ShuffleKey
+    for T
+{
+}
+
+/// Values that can cross a shuffle boundary.
+pub trait ShuffleVal: Clone + Encode + Decode + HeapSize + Send + Sync + 'static {}
+impl<T: Clone + Encode + Decode + HeapSize + Send + Sync + 'static> ShuffleVal for T {}
+
+pub struct Rdd<T: Send + 'static> {
+    pub(crate) ctx: SparkContext,
+    pub(crate) num_partitions: usize,
+    /// Stage index of the tasks that compute this RDD's partitions
+    /// (== number of shuffle boundaries below it). Used by failure plans.
+    pub(crate) stage: usize,
+    pub(crate) compute: ComputeFn<T>,
+    pub(crate) upstream: Vec<Arc<dyn StageRunner>>,
+}
+
+impl<T: Send + 'static> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Self {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute: Arc::clone(&self.compute),
+            upstream: self.upstream.clone(),
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Rdd<T> {
+    pub fn num_partitions(&self) -> usize {
+        self.num_partitions
+    }
+
+    /// Stage index of this RDD's own tasks.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    /// Narrow: element-wise transform, fused into the current stage.
+    pub fn map<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let parent = Arc::clone(&self.compute);
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute: Arc::new(move |tc, p| parent(tc, p).into_iter().map(&f).collect()),
+            upstream: self.upstream.clone(),
+        }
+    }
+
+    /// Narrow: one-to-many transform, fused into the current stage.
+    pub fn flat_map<U, I, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        I: IntoIterator<Item = U>,
+        F: Fn(T) -> I + Send + Sync + 'static,
+    {
+        let parent = Arc::clone(&self.compute);
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute: Arc::new(move |tc, p| {
+                parent(tc, p).into_iter().flat_map(&f).collect()
+            }),
+            upstream: self.upstream.clone(),
+        }
+    }
+
+    /// Narrow: keep elements satisfying `f`.
+    pub fn filter<F>(&self, f: F) -> Rdd<T>
+    where
+        T: Clone,
+        F: Fn(&T) -> bool + Send + Sync + 'static,
+    {
+        let parent = Arc::clone(&self.compute);
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute: Arc::new(move |tc, p| {
+                parent(tc, p).into_iter().filter(|x| f(x)).collect()
+            }),
+            upstream: self.upstream.clone(),
+        }
+    }
+
+    /// Action: materialize every partition and concatenate in order.
+    pub fn collect(&self) -> Result<Vec<T>, JobError> {
+        self.ctx.run_job(self)
+    }
+
+    /// Action: total element count.
+    pub fn count(&self) -> Result<u64, JobError> {
+        Ok(self.collect()?.len() as u64)
+    }
+}
+
+impl<K: ShuffleKey, V: ShuffleVal> Rdd<(K, V)> {
+    /// Wide: group by key and fold values with `reduce`. Cuts the lineage:
+    /// the receiver becomes a map stage (shuffle write), the returned RDD
+    /// reads shuffled blocks (shuffle fetch + merge).
+    pub fn reduce_by_key(
+        &self,
+        reduce: fn(&mut V, V),
+        num_out_partitions: usize,
+    ) -> Rdd<(K, V)> {
+        assert!(num_out_partitions > 0);
+        let shuffle_id = self.ctx.inner().store.fresh_shuffle_id();
+        let dep = Arc::new(ShuffleDep {
+            shuffle_id,
+            stage: self.stage,
+            map_partitions: self.num_partitions,
+            reduce_partitions: num_out_partitions,
+            parent_compute: Arc::clone(&self.compute),
+            parent_upstream: self.upstream.clone(),
+            reduce,
+            done: AtomicBool::new(false),
+        });
+
+        let fetch_dep = Arc::clone(&dep);
+        let compute: ComputeFn<(K, V)> = Arc::new(move |tc, r| fetch_dep.read_partition(tc, r));
+
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: num_out_partitions,
+            stage: self.stage + 1,
+            compute,
+            upstream: vec![dep],
+        }
+    }
+
+    /// Action: reduce and collect into a `HashMap`.
+    pub fn reduce_by_key_collect(
+        &self,
+        reduce: fn(&mut V, V),
+        num_out_partitions: usize,
+    ) -> Result<HashMap<K, V>, JobError>
+    where
+        K: Eq,
+    {
+        Ok(self
+            .reduce_by_key(reduce, num_out_partitions)
+            .collect()?
+            .into_iter()
+            .collect())
+    }
+}
+
+/// The shuffle dependency: runs the map stage (write side) on `ensure`,
+/// serves the fetch side through `read_partition`.
+pub(crate) struct ShuffleDep<K: ShuffleKey, V: ShuffleVal> {
+    pub shuffle_id: usize,
+    /// Stage index of the map tasks.
+    pub stage: usize,
+    pub map_partitions: usize,
+    pub reduce_partitions: usize,
+    pub parent_compute: ComputeFn<(K, V)>,
+    pub parent_upstream: Vec<Arc<dyn StageRunner>>,
+    pub reduce: fn(&mut V, V),
+    pub done: AtomicBool,
+}
+
+impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
+    /// Reduce-side read: fetch every map partition's block for reduce
+    /// partition `r`, charging network cost for remote blocks, then merge.
+    fn read_partition(&self, tc: &TaskCtx, r: usize) -> Vec<(K, V)> {
+        let inner = tc.inner;
+        let conf = &inner.conf;
+        let mut acc: HashMap<K, V> = HashMap::new();
+        let read_t0 = Instant::now();
+        let mut slept = std::time::Duration::ZERO;
+        for m in 0..self.map_partitions {
+            let id = BlockId { shuffle: self.shuffle_id, map_part: m, reduce_part: r };
+            let fetched = match inner.store.fetch(id) {
+                Some(f) => Some(f),
+                None => {
+                    // Block lost (executor failure): recompute the missing
+                    // map partition from lineage — Spark's recovery story.
+                    // The narrow parent chain is deterministic, so this
+                    // regenerates exactly the lost blocks.
+                    inner
+                        .metrics
+                        .lineage_recomputes
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    self.write_partition(tc, m);
+                    inner.store.fetch(id)
+                }
+            };
+            let Some((owner, data, records)) = fetched else {
+                panic!("missing shuffle block {id:?} even after lineage recompute");
+            };
+            inner.metrics.shuffle_bytes_read.fetch_add(
+                match &data {
+                    FetchedData::Bytes(b) => b.len() as u64,
+                    FetchedData::Typed(_) => 0,
+                },
+                Ordering::Relaxed,
+            );
+            inner.metrics.records_shuffled.fetch_add(records, Ordering::Relaxed);
+            // Remote fetch crosses the simulated network.
+            if owner != tc.node {
+                let bytes = match &data {
+                    FetchedData::Bytes(b) => b.len(),
+                    // Typed (no-serde) transfers still move ~records worth
+                    // of data; approximate with records × 16 bytes.
+                    FetchedData::Typed(_) => records as usize * 16,
+                };
+                let cost = conf.net.cost(bytes);
+                if !cost.is_zero() {
+                    std::thread::sleep(cost);
+                    slept += cost;
+                }
+                inner.metrics.add_net(cost);
+            }
+            let pairs: Vec<(K, V)> = match data {
+                FetchedData::Bytes(b) => {
+                    let t0 = Instant::now();
+                    let v = Vec::<(K, V)>::from_bytes(&b).expect("shuffle block decode");
+                    inner.metrics.add_deser(t0.elapsed());
+                    // readUTF materializes fresh objects for every record.
+                    inner.gc.allocated(v.iter().map(HeapSize::heap_bytes).sum());
+                    v
+                }
+                FetchedData::Typed(t) => *t
+                    .downcast::<Vec<(K, V)>>()
+                    .expect("typed shuffle block of unexpected type"),
+            };
+            if conf.boxed_records {
+                // JVM object-model proxy: each incoming record becomes its
+                // own heap allocation before merging.
+                for boxed in pairs.into_iter().map(Box::new) {
+                    let (k, v) = *boxed;
+                    merge(&mut acc, k, v, self.reduce);
+                }
+            } else {
+                for (k, v) in pairs {
+                    merge(&mut acc, k, v, self.reduce);
+                }
+            }
+        }
+        // Deser + merge are JVM-executed; exclude the modeled network time.
+        vm_tax(tc, read_t0.elapsed().saturating_sub(slept));
+        return acc.into_iter().collect();
+
+        fn merge<K: Eq + std::hash::Hash, V>(
+            acc: &mut HashMap<K, V>,
+            k: K,
+            v: V,
+            reduce: fn(&mut V, V),
+        ) {
+            match acc.entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => reduce(e.get_mut(), v),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            }
+        }
+    }
+
+    /// Map-side write for one map partition: compute the parent chain,
+    /// bucket by reduce partition (with optional map-side combine),
+    /// optionally serialize, store (optionally persisting to disk).
+    fn write_partition(&self, tc: &TaskCtx, m: usize) {
+        let inner = tc.inner;
+        let conf = &inner.conf;
+        let compute_t0 = Instant::now();
+        let pairs = (self.parent_compute)(tc, m);
+        // GC accounting: these records were just materialized as objects.
+        inner
+            .gc
+            .allocated(pairs.iter().map(HeapSize::heap_bytes).sum());
+        let pairs = if conf.boxed_records {
+            // Per-record heap objects on the write side too.
+            pairs.into_iter().map(Box::new).map(|b| *b).collect()
+        } else {
+            pairs
+        };
+
+        let r_parts = self.reduce_partitions;
+        // Bucket (and combine) by reduce partition.
+        let mut buckets: Vec<Vec<(K, V)>> = (0..r_parts).map(|_| Vec::new()).collect();
+        if conf.map_side_combine {
+            let mut combined: Vec<HashMap<K, V>> = (0..r_parts).map(|_| HashMap::new()).collect();
+            for (k, v) in pairs {
+                let r = bucket_of(k.hash_with(HashKind::Fx), r_parts);
+                match combined[r].entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        (self.reduce)(e.get_mut(), v)
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(v);
+                    }
+                }
+            }
+            for (r, map) in combined.into_iter().enumerate() {
+                buckets[r] = map.into_iter().collect();
+            }
+        } else {
+            for (k, v) in pairs {
+                let r = bucket_of(k.hash_with(HashKind::Fx), r_parts);
+                buckets[r].push((k, v));
+            }
+        }
+
+        // The work above (narrow chain + combine) is JVM-executed code.
+        vm_tax(tc, compute_t0.elapsed());
+
+        // Write one block per reduce partition.
+        for (r, bucket) in buckets.into_iter().enumerate() {
+            let records = bucket.len() as u64;
+            let data = if conf.serialize_shuffle {
+                let t0 = Instant::now();
+                let bytes = bucket.to_bytes();
+                inner.gc.allocated(bytes.len());
+                inner.metrics.add_ser(t0.elapsed());
+                inner
+                    .metrics
+                    .shuffle_bytes_written
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                BlockData::Bytes(bytes)
+            } else {
+                BlockData::Typed(Box::new(bucket))
+            };
+            let id = BlockId { shuffle: self.shuffle_id, map_part: m, reduce_part: r };
+            let t0 = Instant::now();
+            let disk = inner.store.put(id, Block { owner_node: tc.node, data, records });
+            if disk > 0 {
+                inner.metrics.add_disk(t0.elapsed());
+            }
+        }
+    }
+}
+
+impl<K: ShuffleKey, V: ShuffleVal> StageRunner for ShuffleDep<K, V> {
+    fn ensure(&self, ctx: &SparkContext) -> Result<(), JobError> {
+        if self.done.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        for dep in &self.parent_upstream {
+            dep.ensure(ctx)?;
+        }
+        ctx.run_stage(self.stage, self.map_partitions, |tc, m| {
+            self.write_partition(tc, m);
+        })?;
+        self.done.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    fn reset(&self) {
+        self.done.store(false, Ordering::Release);
+        for dep in &self.parent_upstream {
+            dep.reset();
+        }
+    }
+}

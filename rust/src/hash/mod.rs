@@ -1,0 +1,234 @@
+//! Hash functions shared across the stack.
+//!
+//! Three string hashes (callers choose per workload) plus the multiplicative
+//! integer hash that both the `DistHashMap` key-router (L3) and the Pallas
+//! hashed-bucket kernel (L1) use — keeping the two layers' bucket assignment
+//! identical so a rust-side shard and a kernel-side histogram agree.
+
+/// The Fibonacci multiplier: 2^64 / φ, the classic multiplicative-hash
+/// constant. Shared with `python/compile/kernels/hash_bucket.py`.
+pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Multiplicative integer hash (Fibonacci hashing). Good avalanche on the
+/// high bits; callers take the top bits for bucket indices.
+#[inline]
+pub fn mix_u64(x: u64) -> u64 {
+    // splitmix64 finalizer — also what the L1 kernel mirrors in int32 space.
+    let mut z = x.wrapping_mul(GOLDEN_GAMMA);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a bucket in `[0, n)` via the high-bits multiply trick
+/// (no modulo in the hot path).
+#[inline]
+pub fn bucket_of(hash: u64, n: usize) -> usize {
+    (((hash as u128) * (n as u128)) >> 64) as usize
+}
+
+/// FNV-1a, 64-bit: simple, decent for short ASCII words, byte-at-a-time.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// FxHash-style word-at-a-time hash (rustc's hasher shape): reads 8 bytes
+/// per round, rotate–xor–multiply. The default for the word-count hot path.
+///
+/// One deviation from stock fx: each round ends with `h ^= h >> 32`.
+/// Stock fx only spreads entropy *upward* (multiply mod 2^64), so a
+/// single-byte difference in a chunk's top byte stays confined to a
+/// byte-wide window after rotation and can cancel against the next chunk's
+/// low byte — on 50k `wordN` keys that produces ~1k full 64-bit collisions.
+/// The downward xorshift costs <1 cycle/round and makes the output behave
+/// like a random function again (see `few_collisions_fxhash`).
+#[inline]
+pub fn fxhash(bytes: &[u8]) -> u64 {
+    const SEED: u64 = 0x51_7C_C1_B7_27_22_0A_95;
+    let mut h: u64 = 0;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        h = (h.rotate_left(5) ^ w).wrapping_mul(SEED);
+        h ^= h >> 32;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        let w = u64::from_le_bytes(tail) | ((rem.len() as u64) << 56);
+        h = (h.rotate_left(5) ^ w).wrapping_mul(SEED);
+        h ^= h >> 32;
+    }
+    // Finalize: one full mix round for short keys that took a single round.
+    mix_u64(h)
+}
+
+/// wyhash-flavoured hash: 64→128-bit multiply folding, strongest mixing of
+/// the three, slightly more work per byte than fx for short keys.
+#[inline]
+pub fn wyhash(bytes: &[u8]) -> u64 {
+    const K0: u64 = 0xA076_1D64_78BD_642F;
+    const K1: u64 = 0xE703_7ED1_A0B4_28DB;
+    #[inline]
+    fn mum(a: u64, b: u64) -> u64 {
+        let r = (a as u128).wrapping_mul(b as u128);
+        (r as u64) ^ ((r >> 64) as u64)
+    }
+    let mut h = K0 ^ (bytes.len() as u64).wrapping_mul(K1);
+    let mut chunks = bytes.chunks_exact(16);
+    for c in &mut chunks {
+        let a = u64::from_le_bytes(c[..8].try_into().unwrap());
+        let b = u64::from_le_bytes(c[8..].try_into().unwrap());
+        h = mum(a ^ h, b ^ K1);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 16];
+        tail[..rem.len()].copy_from_slice(rem);
+        let a = u64::from_le_bytes(tail[..8].try_into().unwrap());
+        let b = u64::from_le_bytes(tail[8..].try_into().unwrap());
+        h = mum(a ^ h, b ^ K1 ^ rem.len() as u64);
+    }
+    mum(h, K0)
+}
+
+/// Which string hash an engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashKind {
+    Fx,
+    Fnv1a,
+    Wy,
+}
+
+impl HashKind {
+    #[inline]
+    pub fn hash(self, bytes: &[u8]) -> u64 {
+        match self {
+            HashKind::Fx => fxhash(bytes),
+            HashKind::Fnv1a => fnv1a(bytes),
+            HashKind::Wy => wyhash(bytes),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HashKind> {
+        match s {
+            "fx" => Some(HashKind::Fx),
+            "fnv" | "fnv1a" => Some(HashKind::Fnv1a),
+            "wy" | "wyhash" => Some(HashKind::Wy),
+            _ => None,
+        }
+    }
+}
+
+impl Default for HashKind {
+    fn default() -> Self {
+        HashKind::Fx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    const HASHES: [fn(&[u8]) -> u64; 3] = [fnv1a, fxhash, wyhash];
+
+    #[test]
+    fn deterministic() {
+        for h in HASHES {
+            assert_eq!(h(b"hello"), h(b"hello"));
+            assert_ne!(h(b"hello"), h(b"hellp"));
+            assert_ne!(h(b""), h(b"\0"));
+        }
+    }
+
+    #[test]
+    fn length_extension_distinct() {
+        // "ab" + "" vs "a" + "b" style collisions on the tail path.
+        for h in HASHES {
+            assert_ne!(h(b"ab"), h(b"a"));
+            assert_ne!(h(b"abcdefgh"), h(b"abcdefg"));
+            assert_ne!(h(b"abcdefghi"), h(b"abcdefgh"));
+        }
+    }
+
+    fn count_collisions(h: fn(&[u8]) -> u64) -> usize {
+        // 50k distinct short words should have no more than a handful of
+        // 64-bit collisions (expected ~0).
+        let mut seen = HashSet::new();
+        let mut collisions = 0;
+        for i in 0..50_000 {
+            let w = format!("word{i}");
+            if !seen.insert(h(w.as_bytes())) {
+                collisions += 1;
+            }
+        }
+        collisions
+    }
+
+    #[test]
+    fn few_collisions_fnv1a() {
+        assert!(count_collisions(fnv1a) <= 1, "fnv1a: {}", count_collisions(fnv1a));
+    }
+
+    #[test]
+    fn few_collisions_fxhash() {
+        assert!(count_collisions(fxhash) <= 1, "fxhash: {}", count_collisions(fxhash));
+    }
+
+    #[test]
+    fn few_collisions_wyhash() {
+        assert!(count_collisions(wyhash) <= 1, "wyhash: {}", count_collisions(wyhash));
+    }
+
+    #[test]
+    fn bucket_of_uniform_enough() {
+        // Top-bit bucketing over mixed hashes: each of 16 buckets gets
+        // within 3x of the mean on 16k keys.
+        let n = 16;
+        let mut counts = vec![0usize; n];
+        for i in 0..16_384u64 {
+            counts[bucket_of(mix_u64(i), n)] += 1;
+        }
+        let mean = 16_384 / n;
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(c > mean / 3 && c < mean * 3, "bucket {b} count {c} vs mean {mean}");
+        }
+    }
+
+    #[test]
+    fn bucket_of_in_range() {
+        for i in 0..1000u64 {
+            let h = mix_u64(i);
+            for n in [1usize, 2, 3, 7, 16, 1000] {
+                assert!(bucket_of(h, n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_u64_bijective_sample() {
+        // splitmix64 finalizer is a bijection; sample-check distinctness.
+        let mut seen = HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix_u64(i)));
+        }
+    }
+
+    #[test]
+    fn hashkind_parse() {
+        assert_eq!(HashKind::parse("fx"), Some(HashKind::Fx));
+        assert_eq!(HashKind::parse("fnv1a"), Some(HashKind::Fnv1a));
+        assert_eq!(HashKind::parse("wyhash"), Some(HashKind::Wy));
+        assert_eq!(HashKind::parse("md5"), None);
+    }
+}

@@ -1,0 +1,28 @@
+//! # Blaze — Spark vs MPI/OpenMP Word Count MapReduce, reproduced
+//!
+//! A production-shaped reproduction of Junhao Li's *"Comparing Spark vs
+//! MPI/OpenMP On Word Count MapReduce"* (2018). The paper's MPI/OpenMP
+//! MapReduce design — [`concurrent::ConcurrentHashMap`],
+//! [`dist::DistHashMap`], [`dist::DistRange`] — is implemented natively in
+//! Rust on a simulated multi-node cluster ([`cluster`]), and compared
+//! against a Spark-style baseline engine ([`engines::spark`]) on the classic
+//! word-count task ([`wordcount`]).
+//!
+//! The compute hot-spot additionally has an XLA/PJRT-accelerated path: a
+//! Pallas token-histogram kernel AOT-lowered from JAX at build time and
+//! executed from Rust through [`runtime`].
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cluster;
+pub mod concurrent;
+pub mod corpus;
+pub mod dist;
+pub mod engines;
+pub mod hash;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod wordcount;

@@ -1,0 +1,149 @@
+//! Run reports: the tables the benches print (markdown + CSV) so every
+//! figure in EXPERIMENTS.md regenerates from `cargo bench` output.
+
+use std::fmt::Write as _;
+
+/// A rectangular report table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// GitHub-flavoured markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// CSV rendering (quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &String| -> String {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(esc).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Append the CSV next to the bench run for EXPERIMENTS.md bookkeeping.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// An ASCII bar chart, for reproducing the paper's figure in terminal
+/// output ("converted to words per second").
+pub fn ascii_bar_chart(title: &str, bars: &[(String, f64)], unit: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}\n");
+    let max = bars.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, value) in bars {
+        let frac = value / max;
+        let n = (frac * 50.0).round() as usize;
+        let _ = writeln!(
+            out,
+            "{label:<label_w$}  {:<50}  {}",
+            "#".repeat(n.max(1)),
+            crate::util::stats::fmt_rate(*value, unit),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["engine", "words/s"]);
+        t.row(&["Blaze".to_string(), "100".to_string()]);
+        t.row(&["Spark".to_string(), "10".to_string()]);
+        t
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| engine |"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(&["x,y".to_string(), "he said \"hi\"".to_string()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = sample();
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn bar_chart_renders() {
+        let chart = ascii_bar_chart(
+            "words per second",
+            &[("Blaze".to_string(), 1e8), ("Spark".to_string(), 1e7)],
+            "words",
+        );
+        assert!(chart.contains("Blaze"));
+        assert!(chart.contains("#"));
+        assert!(chart.contains("100.00 Mwords/s"));
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT client wrapper: load AOT HLO-text artifacts, compile once, execute
+//! from the L3 hot path. Python is never involved at runtime — the rust
+//! binary is self-contained once `make artifacts` has produced the
+//! `.hlo.txt` files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    inner: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with input literals; returns the tuple elements of the
+    /// (tupled) result — aot.py lowers with `return_tuple=True`.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .inner
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("device -> host transfer")?;
+        literal.to_tuple().context("untupling result")
+    }
+}
+
+/// Loads and caches compiled artifacts by path.
+///
+/// NOTE: the underlying PJRT client handle is `Rc`-based, so a `Runtime`
+/// (and the executables it hands out) is **thread-local**: construct one
+/// per thread that needs the accelerated combiner. The CPU client itself
+/// multithreads its compute internally.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// `artifacts_dir` is where `make artifacts` wrote the `.hlo.txt`
+    /// files (default: `artifacts/` at the repo root).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+            artifacts_dir: artifacts_dir.into(),
+        })
+    }
+
+    /// Default artifacts location, honoring `BLAZE_ARTIFACTS_DIR`.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("BLAZE_ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    /// Check artifact availability without constructing a client.
+    pub fn artifacts_available() -> bool {
+        let dir = std::env::var("BLAZE_ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
+        std::path::Path::new(&dir).join("manifest.txt").exists()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// True if the artifacts directory looks built.
+    pub fn available(&self) -> bool {
+        self.artifacts_dir.join("manifest.txt").exists()
+    }
+
+    /// Load + compile (cached) an artifact by stem, e.g. `"token_hist"`.
+    pub fn load(&self, stem: &str) -> Result<Rc<Executable>> {
+        let path = self.artifacts_dir.join(format!("{stem}.hlo.txt"));
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&path) {
+                return Ok(Rc::clone(exe));
+            }
+        }
+        let client = &self.client;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = Rc::new(Executable { inner: exe, path: path.clone() });
+        self.cache.lock().unwrap().insert(path, Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Parse `manifest.txt` (key=value lines) into a map.
+    pub fn manifest(&self) -> Result<HashMap<String, i64>> {
+        let path = self.artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad manifest line {line:?}"))?;
+            m.insert(k.trim().to_string(), v.trim().parse::<i64>()?);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Runtime> {
+        if !Runtime::artifacts_available() {
+            eprintln!("skipping runtime test: artifacts/ not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::from_env().unwrap())
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(rt) = artifacts() else { return };
+        let m = rt.manifest().unwrap();
+        assert!(m["shard_tokens"] > 0);
+        assert!(m["vocab"] > 0);
+        assert_eq!(m["pad_id"], -1);
+    }
+
+    #[test]
+    fn load_compile_execute_token_hist() {
+        let Some(rt) = artifacts() else { return };
+        let m = rt.manifest().unwrap();
+        let n = m["shard_tokens"] as usize;
+        let vocab = m["vocab"] as usize;
+        let exe = rt.load("token_hist").unwrap();
+        // All tokens = id 3, except a padded tail.
+        let mut toks = vec![3i32; n];
+        for t in toks.iter_mut().skip(n - 100) {
+            *t = -1;
+        }
+        let input = xla::Literal::vec1(&toks);
+        let out = exe.run(&[input]).unwrap();
+        assert_eq!(out.len(), 1);
+        let counts = out.into_iter().next().unwrap().to_vec::<i32>().unwrap();
+        assert_eq!(counts.len(), vocab);
+        assert_eq!(counts[3] as usize, n - 100);
+        assert_eq!(counts.iter().map(|&c| c as i64).sum::<i64>(), (n - 100) as i64);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = artifacts() else { return };
+        let a = rt.load("token_hist").unwrap();
+        let b = rt.load("token_hist").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+}

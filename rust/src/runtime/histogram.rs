@@ -1,0 +1,251 @@
+//! The XLA-accelerated combiner: dictionary-encoded token streams are
+//! histogrammed by the AOT Pallas kernel instead of the hash map.
+//!
+//! This is the cross-layer integration point: L3 shards and pads the token
+//! stream, the L1/L2 artifact counts a shard, and L3 merges the per-shard
+//! count vectors (an associative reduce, the same contract as
+//! `dist::reducer`). The hashed variant mirrors the kernel's bucket hash
+//! bit-for-bit so rust and the accelerator agree on bucket assignment.
+
+use anyhow::{Context, Result};
+
+use super::client::Runtime;
+
+/// Keep in sync with `python/compile/kernels/hash_bucket.py::HASH_MULT`.
+pub const HASH_MULT: u32 = 0x9E37_79B9;
+
+/// The kernel's bucket function: golden-ratio multiply, take the top
+/// log2(buckets) bits. `buckets` must be a power of two.
+#[inline]
+pub fn hash_bucket_of(token: i32, buckets: u32) -> u32 {
+    debug_assert!(buckets.is_power_of_two());
+    let shift = 32 - buckets.trailing_zeros();
+    (token as u32).wrapping_mul(HASH_MULT) >> shift
+}
+
+/// Static shapes of the AOT artifacts (from `artifacts/manifest.txt`).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSpec {
+    pub shard_tokens: usize,
+    pub vocab: usize,
+    pub hash_buckets: usize,
+    pub top_k: usize,
+    pub pad_id: i32,
+}
+
+/// High-level driver for the histogram artifacts.
+pub struct HistogramRuntime {
+    rt: Runtime,
+    pub spec: ShardSpec,
+}
+
+impl HistogramRuntime {
+    pub fn new(rt: Runtime) -> Result<Self> {
+        let m = rt.manifest().context("histogram runtime needs artifacts")?;
+        let spec = ShardSpec {
+            shard_tokens: m["shard_tokens"] as usize,
+            vocab: m["vocab"] as usize,
+            hash_buckets: m["hash_buckets"] as usize,
+            top_k: m["top_k"] as usize,
+            pad_id: m["pad_id"] as i32,
+        };
+        Ok(Self { rt, spec })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::new(Runtime::from_env()?)
+    }
+
+    pub fn available() -> bool {
+        Runtime::artifacts_available()
+    }
+
+    /// Count token ids in `[0, vocab)` with the dense-histogram artifact.
+    /// Handles sharding + padding; merges shard counts in rust.
+    pub fn count_tokens(&self, tokens: &[i32]) -> Result<Vec<u64>> {
+        let exe = self.rt.load("token_hist")?;
+        let n = self.spec.shard_tokens;
+        let mut totals = vec![0u64; self.spec.vocab];
+        let mut shard = vec![self.spec.pad_id; n];
+        for chunk in tokens.chunks(n) {
+            shard[..chunk.len()].copy_from_slice(chunk);
+            shard[chunk.len()..].fill(self.spec.pad_id);
+            let out = exe.run(&[xla::Literal::vec1(&shard)])?;
+            let counts = out
+                .into_iter()
+                .next()
+                .context("empty result tuple")?
+                .to_vec::<i32>()?;
+            for (t, c) in totals.iter_mut().zip(counts) {
+                *t += c as u64;
+            }
+        }
+        Ok(totals)
+    }
+
+    /// Dense counts plus top-k, using the composed L2 graph for the final
+    /// shard-merge's top-k (counts still merged in rust across shards).
+    pub fn count_tokens_topk(&self, tokens: &[i32]) -> Result<(Vec<u64>, Vec<(i32, u64)>)> {
+        let totals = self.count_tokens(tokens)?;
+        let mut ranked: Vec<(i32, u64)> = totals
+            .iter()
+            .enumerate()
+            .map(|(id, &c)| (id as i32, c))
+            .collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(self.spec.top_k);
+        Ok((totals, ranked))
+    }
+
+    /// Run the single-shard top-k artifact (exercises the fused L2 graph).
+    pub fn shard_topk(&self, shard_tokens: &[i32]) -> Result<Vec<(i32, u64)>> {
+        anyhow::ensure!(
+            shard_tokens.len() == self.spec.shard_tokens,
+            "shard_topk needs exactly one shard"
+        );
+        let exe = self.rt.load("token_hist_topk")?;
+        let out = exe.run(&[xla::Literal::vec1(shard_tokens)])?;
+        anyhow::ensure!(out.len() == 3, "expected (counts, top_counts, top_ids)");
+        let mut it = out.into_iter();
+        let _counts = it.next().unwrap();
+        let top_counts = it.next().unwrap().to_vec::<i32>()?;
+        let top_ids = it.next().unwrap().to_vec::<i32>()?;
+        Ok(top_ids
+            .into_iter()
+            .zip(top_counts)
+            .map(|(id, c)| (id, c as u64))
+            .collect())
+    }
+
+    /// Hashed-bucket counts (for unbounded vocab): same sharding protocol.
+    pub fn count_hashed(&self, tokens: &[i32]) -> Result<Vec<u64>> {
+        let exe = self.rt.load("hash_hist")?;
+        let n = self.spec.shard_tokens;
+        let mut totals = vec![0u64; self.spec.hash_buckets];
+        let mut shard = vec![self.spec.pad_id; n];
+        for chunk in tokens.chunks(n) {
+            shard[..chunk.len()].copy_from_slice(chunk);
+            shard[chunk.len()..].fill(self.spec.pad_id);
+            let out = exe.run(&[xla::Literal::vec1(&shard)])?;
+            let counts = out
+                .into_iter()
+                .next()
+                .context("empty result tuple")?
+                .to_vec::<i32>()?;
+            for (t, c) in totals.iter_mut().zip(counts) {
+                *t += c as u64;
+            }
+        }
+        Ok(totals)
+    }
+
+    /// Serial rust reference for `count_tokens` (test oracle).
+    pub fn count_tokens_serial(&self, tokens: &[i32]) -> Vec<u64> {
+        let mut totals = vec![0u64; self.spec.vocab];
+        for &t in tokens {
+            if t >= 0 && (t as usize) < self.spec.vocab {
+                totals[t as usize] += 1;
+            }
+        }
+        totals
+    }
+
+    /// Serial rust reference for `count_hashed`.
+    pub fn count_hashed_serial(&self, tokens: &[i32]) -> Vec<u64> {
+        let mut totals = vec![0u64; self.spec.hash_buckets];
+        for &t in tokens {
+            if t >= 0 {
+                totals[hash_bucket_of(t, self.spec.hash_buckets as u32) as usize] += 1;
+            }
+        }
+        totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_bucket_in_range_and_deterministic() {
+        for buckets in [256u32, 4096] {
+            for t in [0i32, 1, 12345, i32::MAX, 7_777_777] {
+                let b = hash_bucket_of(t, buckets);
+                assert!(b < buckets);
+                assert_eq!(b, hash_bucket_of(t, buckets));
+            }
+        }
+    }
+
+    #[test]
+    fn hash_bucket_pinned_value() {
+        // Same pinned vector as python test_matches_known_constant.
+        let t = 12345i32;
+        let h = (t as u32 as u64 * HASH_MULT as u64) % (1u64 << 32);
+        let expect = (h >> (32 - 8)) as u32;
+        assert_eq!(hash_bucket_of(t, 256), expect);
+    }
+
+    #[test]
+    fn hash_buckets_spread() {
+        let mut counts = vec![0u32; 256];
+        for t in 0..65_536i32 {
+            counts[hash_bucket_of(t, 256) as usize] += 1;
+        }
+        let mean = 65_536 / 256;
+        assert!(counts.iter().all(|&c| c > mean / 3 && c < mean * 3));
+    }
+
+    fn runtime() -> Option<HistogramRuntime> {
+        if !HistogramRuntime::available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(HistogramRuntime::from_env().unwrap())
+    }
+
+    #[test]
+    fn count_tokens_matches_serial() {
+        let Some(hr) = runtime() else { return };
+        let mut rng = crate::util::rng::Xoshiro256::new(99);
+        // 1.5 shards worth of ids, some OOV-ish (clamped by vocab), some pad.
+        let n = hr.spec.shard_tokens * 3 / 2;
+        let tokens: Vec<i32> = (0..n)
+            .map(|_| {
+                if rng.chance(0.05) {
+                    -1
+                } else {
+                    rng.next_below(hr.spec.vocab as u64) as i32
+                }
+            })
+            .collect();
+        let got = hr.count_tokens(&tokens).unwrap();
+        assert_eq!(got, hr.count_tokens_serial(&tokens));
+    }
+
+    #[test]
+    fn count_hashed_matches_serial() {
+        let Some(hr) = runtime() else { return };
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        let n = hr.spec.shard_tokens + 1000;
+        let tokens: Vec<i32> =
+            (0..n).map(|_| rng.next_below(1 << 20) as i32).collect();
+        let got = hr.count_hashed(&tokens).unwrap();
+        assert_eq!(got, hr.count_hashed_serial(&tokens));
+    }
+
+    #[test]
+    fn topk_artifact_agrees() {
+        let Some(hr) = runtime() else { return };
+        let n = hr.spec.shard_tokens;
+        // Unequal counts: 42 strictly dominates, then 7.
+        let mut tokens = vec![42i32; n * 3 / 4];
+        tokens.resize(n, 7);
+        let top = hr.shard_topk(&tokens).unwrap();
+        assert_eq!(top.len(), hr.spec.top_k);
+        assert_eq!(top[0], (42, (n * 3 / 4) as u64));
+        assert_eq!(top[1], (7, (n - n * 3 / 4) as u64));
+        // Ties break by ascending id (matches wordcount::top_k).
+        assert!(top[2].1 == 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! XLA/PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`) and executes them from the rust hot path.
+//!
+//! Layering contract (see DESIGN.md §3): Python runs only at build time;
+//! these modules make the rust binary self-contained at run time.
+
+pub mod client;
+pub mod histogram;
+
+pub use client::{Executable, Runtime};
+pub use histogram::{hash_bucket_of, HistogramRuntime, ShardSpec, HASH_MULT};

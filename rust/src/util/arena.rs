@@ -1,0 +1,154 @@
+//! Bump arena for string/byte storage — the repo's TCMalloc analog.
+//!
+//! The paper's fastest configuration links TCMalloc ("Blaze TCM"), whose win
+//! on word count is almost entirely cheaper small allocations in the insert
+//! hot path (one `malloc` per new key). [`StrArena`] isolates exactly that
+//! effect: keys are copied once into large slabs and handed out as stable
+//! `u64` references, so the hash map stores fixed-size handles and the
+//! allocator is a pointer bump.
+//!
+//! `bench allocator` (experiment M2) compares per-insert `String` allocation
+//! against arena interning, reproducing the Blaze vs Blaze-TCM bar.
+
+/// Default slab size: 256 KiB — large enough that slab allocation is
+/// negligible, small enough not to waste memory at low key counts.
+const SLAB_BYTES: usize = 256 * 1024;
+
+/// A reference to a string stored in a [`StrArena`]: packed (slab, offset,
+/// len). Copy, 8 bytes — this is what hash-map entries store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StrRef(u64);
+
+impl StrRef {
+    fn new(slab: usize, offset: usize, len: usize) -> Self {
+        debug_assert!(slab < (1 << 20));
+        debug_assert!(offset < (1 << 24));
+        debug_assert!(len < (1 << 20));
+        StrRef(((slab as u64) << 44) | ((offset as u64) << 20) | len as u64)
+    }
+
+    fn slab(self) -> usize {
+        (self.0 >> 44) as usize
+    }
+
+    fn offset(self) -> usize {
+        ((self.0 >> 20) & 0xFF_FFFF) as usize
+    }
+
+    fn len(self) -> usize {
+        (self.0 & 0xF_FFFF) as usize
+    }
+}
+
+/// Append-only string arena. Not thread-safe by itself — each worker thread
+/// owns one (matching the thread-cache design) or access is externally
+/// synchronized.
+#[derive(Debug, Default)]
+pub struct StrArena {
+    slabs: Vec<Vec<u8>>,
+    bytes_used: usize,
+}
+
+impl StrArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Copy `s` into the arena and return a stable handle.
+    pub fn intern(&mut self, s: &str) -> StrRef {
+        let bytes = s.as_bytes();
+        assert!(bytes.len() < SLAB_BYTES, "string larger than slab");
+        let need_new = match self.slabs.last() {
+            None => true,
+            Some(slab) => slab.len() + bytes.len() > slab.capacity(),
+        };
+        if need_new {
+            self.slabs.push(Vec::with_capacity(SLAB_BYTES));
+        }
+        let slab_idx = self.slabs.len() - 1;
+        let slab = &mut self.slabs[slab_idx];
+        let offset = slab.len();
+        slab.extend_from_slice(bytes);
+        self.bytes_used += bytes.len();
+        StrRef::new(slab_idx, offset, bytes.len())
+    }
+
+    /// Resolve a handle back to its string slice.
+    pub fn get(&self, r: StrRef) -> &str {
+        let slab = &self.slabs[r.slab()];
+        // Safety of UTF-8: intern only accepts &str and slabs are append-only.
+        std::str::from_utf8(&slab[r.offset()..r.offset() + r.len()]).expect("arena utf8")
+    }
+
+    /// Total payload bytes stored.
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    /// Total bytes reserved (slab capacity).
+    pub fn bytes_reserved(&self) -> usize {
+        self.slabs.iter().map(|s| s.capacity()).sum()
+    }
+
+    pub fn slab_count(&self) -> usize {
+        self.slabs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_and_get_roundtrip() {
+        let mut a = StrArena::new();
+        let r1 = a.intern("hello");
+        let r2 = a.intern("world");
+        let r3 = a.intern("");
+        assert_eq!(a.get(r1), "hello");
+        assert_eq!(a.get(r2), "world");
+        assert_eq!(a.get(r3), "");
+        assert_eq!(a.bytes_used(), 10);
+    }
+
+    #[test]
+    fn handles_survive_slab_growth() {
+        let mut a = StrArena::new();
+        let mut refs = Vec::new();
+        // Enough data to force several slabs.
+        for i in 0..100_000 {
+            refs.push((a.intern(&format!("word{i}")), format!("word{i}")));
+        }
+        assert!(a.slab_count() > 1, "expected multiple slabs");
+        for (r, expect) in &refs {
+            assert_eq!(a.get(*r), expect);
+        }
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let mut a = StrArena::new();
+        let r = a.intern("héllo wörld — 你好");
+        assert_eq!(a.get(r), "héllo wörld — 你好");
+    }
+
+    #[test]
+    fn strref_is_copy_and_small() {
+        assert_eq!(std::mem::size_of::<StrRef>(), 8);
+        let mut a = StrArena::new();
+        let r = a.intern("x");
+        let r2 = r; // Copy
+        assert_eq!(a.get(r), a.get(r2));
+    }
+
+    #[test]
+    fn large_string_near_slab_boundary() {
+        let mut a = StrArena::new();
+        let big = "a".repeat(SLAB_BYTES - 1);
+        let r = a.intern(&big);
+        assert_eq!(a.get(r).len(), SLAB_BYTES - 1);
+        let r2 = a.intern("tail");
+        assert_eq!(a.get(r2), "tail");
+        assert_eq!(a.slab_count(), 2);
+    }
+}

@@ -1,0 +1,285 @@
+//! Minimal command-line argument parser (the offline crate set has no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    UnknownOption(String),
+    MissingValue(String),
+    BadValue { key: String, value: String, expect: &'static str },
+    HelpRequested(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(o) => write!(f, "unknown option: {o}"),
+            CliError::MissingValue(o) => write!(f, "option {o} requires a value"),
+            CliError::BadValue { key, value, expect } => {
+                write!(f, "bad value for --{key}: {value:?} (expected {expect})")
+            }
+            CliError::HelpRequested(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// A command with a fixed option table.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "{head:<28} {}{}", o.help, default);
+        }
+        s
+    }
+
+    /// Parse `argv` (not including the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested(self.help_text()));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(a.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(a.clone()))?
+                        }
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_str(&self, key: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_default()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        self.parse_with(key, "integer", |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_with(key, "integer", |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        self.parse_with(key, "float", |s| s.parse::<f64>().ok())
+    }
+
+    /// Parse sizes like `64MB`, `2GB`, `4096`, `512kb`.
+    pub fn get_bytes(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_with(key, "size (e.g. 64MB)", |s| parse_bytes(s))
+    }
+
+    fn parse_with<T>(
+        &self,
+        key: &str,
+        expect: &'static str,
+        f: impl Fn(&str) -> Option<T>,
+    ) -> Result<T, CliError> {
+        let raw = self.values.get(key).ok_or_else(|| CliError::MissingValue(format!("--{key}")))?;
+        f(raw).ok_or_else(|| CliError::BadValue {
+            key: key.to_string(),
+            value: raw.clone(),
+            expect,
+        })
+    }
+}
+
+/// Parse a human-friendly byte size: plain integers, or suffixed with
+/// kb/mb/gb (case-insensitive, optional trailing 'b').
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = s.strip_suffix("gb").or_else(|| s.strip_suffix("g")) {
+        (p, 1u64 << 30)
+    } else if let Some(p) = s.strip_suffix("mb").or_else(|| s.strip_suffix("m")) {
+        (p, 1u64 << 20)
+    } else if let Some(p) = s.strip_suffix("kb").or_else(|| s.strip_suffix("k")) {
+        (p, 1u64 << 10)
+    } else {
+        (s.as_str(), 1u64)
+    };
+    let num = num.trim();
+    if let Ok(int) = num.parse::<u64>() {
+        return Some(int * mult);
+    }
+    num.parse::<f64>().ok().map(|f| (f * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run a word count")
+            .opt("bytes", Some("64MB"), "corpus size")
+            .opt("nodes", Some("1"), "simulated node count")
+            .opt("engine", Some("blaze"), "engine name")
+            .flag("verify", "verify against serial reference")
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("bytes"), Some("64MB"));
+        assert_eq!(a.get_usize("nodes").unwrap(), 1);
+        assert!(!a.has_flag("verify"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&argv(&["--nodes", "4", "--engine=spark", "--verify"])).unwrap();
+        assert_eq!(a.get_usize("nodes").unwrap(), 4);
+        assert_eq!(a.get("engine"), Some("spark"));
+        assert!(a.has_flag("verify"));
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(parse_bytes("4096"), Some(4096));
+        assert_eq!(parse_bytes("64MB"), Some(64 << 20));
+        assert_eq!(parse_bytes("2gb"), Some(2 << 30));
+        assert_eq!(parse_bytes("512kb"), Some(512 << 10));
+        assert_eq!(parse_bytes("1.5mb"), Some((1.5 * (1 << 20) as f64) as u64));
+        assert_eq!(parse_bytes("xyz"), None);
+        let a = cmd().parse(&argv(&["--bytes", "2MB"])).unwrap();
+        assert_eq!(a.get_bytes("bytes").unwrap(), 2 << 20);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--nodes"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let a = cmd().parse(&argv(&["--nodes", "many"])).unwrap();
+        assert!(matches!(a.get_usize("nodes"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn help_requested() {
+        match cmd().parse(&argv(&["--help"])) {
+            Err(CliError::HelpRequested(h)) => {
+                assert!(h.contains("--bytes"));
+                assert!(h.contains("default: 64MB"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd().parse(&argv(&["input.txt", "--nodes", "2", "extra"])).unwrap();
+        assert_eq!(a.positional(), &["input.txt".to_string(), "extra".to_string()]);
+    }
+}

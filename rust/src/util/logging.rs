@@ -1,0 +1,151 @@
+//! Leveled logger with per-component prefixes.
+//!
+//! Controlled by the `BLAZE_LOG` env var (`error|warn|info|debug|trace`,
+//! default `info`). Cheap when disabled: level check is one atomic load.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // u8::MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("BLAZE_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current max level, initializing from the environment on first use.
+#[inline]
+pub fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == u8::MAX { init_from_env() } else { raw };
+    // Safety: raw is always a valid Level discriminant after init.
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, benches).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Emit a log record. Use through the `log_*!` macros.
+pub fn emit(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let stderr = std::io::stderr();
+    let mut w = stderr.lock();
+    let _ = writeln!(w, "[{} {component}] {msg}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Trace, $component, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("error"), Some(Level::Error));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("Info"), Some(Level::Info));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        set_level(Level::Trace);
+        emit(Level::Info, "test", format_args!("hello {}", 42));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,16 @@
+//! Hand-built substrate utilities.
+//!
+//! The build environment is fully offline, so everything a crates.io
+//! dependency would normally provide is implemented here: PRNG (`rng`),
+//! thread pool (`pool`), binary serialization (`ser`), CLI parsing (`cli`),
+//! arena allocation (`arena`), statistics (`stats`), logging (`logging`),
+//! and a property-testing harness (`proptest`).
+
+pub mod arena;
+pub mod cli;
+pub mod logging;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod ser;
+pub mod stats;

@@ -1,0 +1,298 @@
+//! An OpenMP-style thread pool.
+//!
+//! The paper's map phase is "OpenMP threads pulling indices from a range";
+//! this module provides that shape natively: a pool of long-lived workers and
+//! a `parallel_for` with OpenMP's three classic schedule kinds:
+//!
+//! * [`Schedule::Static`] — range pre-split into `nthreads` contiguous
+//!   chunks (lowest overhead, best locality, worst load balance).
+//! * [`Schedule::Dynamic`] — workers claim fixed-size chunks from a shared
+//!   atomic cursor (best balance, one CAS per chunk).
+//! * [`Schedule::Guided`] — chunk size decays with the remaining range
+//!   (balance of the two).
+//!
+//! Closures run with a `WorkerCtx` carrying the worker id, so callers can
+//! keep per-thread state (the ConcurrentHashMap thread caches key off it).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// OpenMP-style loop schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Static,
+    Dynamic { chunk: usize },
+    Guided { min_chunk: usize },
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        // Dynamic with a modest chunk is the safest default for skewed
+        // work-per-item (exactly the word-count case: line lengths vary).
+        Schedule::Dynamic { chunk: 64 }
+    }
+}
+
+/// Context handed to each parallel-for body invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerCtx {
+    /// Worker index in `[0, nthreads)`.
+    pub worker: usize,
+    /// Total number of workers executing the loop.
+    pub nthreads: usize,
+}
+
+/// Number of worker threads to use when the caller does not specify:
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `body(ctx, i)` for every `i` in `[0, n)` across `nthreads` scoped
+/// threads using the given schedule. Panics in the body are propagated to
+/// the caller after all workers stop.
+///
+/// This uses `std::thread::scope`, so `body` may borrow from the caller's
+/// stack — the same ergonomics as an OpenMP `parallel for`.
+pub fn parallel_for<F>(nthreads: usize, n: usize, schedule: Schedule, body: F)
+where
+    F: Fn(WorkerCtx, usize) + Sync,
+{
+    parallel_for_range(nthreads, 0, n, schedule, body)
+}
+
+/// `parallel_for` over an explicit `[start, end)` range.
+pub fn parallel_for_range<F>(nthreads: usize, start: usize, end: usize, schedule: Schedule, body: F)
+where
+    F: Fn(WorkerCtx, usize) + Sync,
+{
+    assert!(nthreads > 0, "parallel_for: need at least one thread");
+    let n = end.saturating_sub(start);
+    if n == 0 {
+        return;
+    }
+    if nthreads == 1 {
+        let ctx = WorkerCtx { worker: 0, nthreads: 1 };
+        for i in start..end {
+            body(ctx, i);
+        }
+        return;
+    }
+
+    let panicked: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
+    let cursor = AtomicUsize::new(start);
+    let body = &body;
+
+    std::thread::scope(|scope| {
+        for worker in 0..nthreads {
+            let panicked = Arc::clone(&panicked);
+            let cursor = &cursor;
+            scope.spawn(move || {
+                let ctx = WorkerCtx { worker, nthreads };
+                let run = AssertUnwindSafe(|| match schedule {
+                    Schedule::Static => {
+                        // Contiguous block assignment, remainder spread over
+                        // the first `n % nthreads` workers.
+                        let base = n / nthreads;
+                        let rem = n % nthreads;
+                        let lo = start + worker * base + worker.min(rem);
+                        let hi = lo + base + usize::from(worker < rem);
+                        for i in lo..hi {
+                            body(ctx, i);
+                        }
+                    }
+                    Schedule::Dynamic { chunk } => {
+                        let chunk = chunk.max(1);
+                        loop {
+                            let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                            if lo >= end {
+                                break;
+                            }
+                            let hi = (lo + chunk).min(end);
+                            for i in lo..hi {
+                                body(ctx, i);
+                            }
+                        }
+                    }
+                    Schedule::Guided { min_chunk } => {
+                        let min_chunk = min_chunk.max(1);
+                        loop {
+                            // Claim ~remaining/(2*nthreads), floored.
+                            let lo = cursor.load(Ordering::Relaxed);
+                            if lo >= end {
+                                break;
+                            }
+                            let remaining = end - lo;
+                            let want = (remaining / (2 * nthreads)).max(min_chunk);
+                            let lo = cursor.fetch_add(want, Ordering::Relaxed);
+                            if lo >= end {
+                                break;
+                            }
+                            let hi = (lo + want).min(end);
+                            for i in lo..hi {
+                                body(ctx, i);
+                            }
+                        }
+                    }
+                });
+                if catch_unwind(run).is_err() {
+                    panicked.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+
+    let n_panics = panicked.load(Ordering::Relaxed);
+    if n_panics > 0 {
+        panic!("parallel_for: {n_panics} worker(s) panicked");
+    }
+}
+
+/// Fork–join: run `nthreads` copies of `body(ctx)` (an OpenMP `parallel`
+/// region without the loop). Used by the engines for per-thread pipelines.
+pub fn parallel_region<F>(nthreads: usize, body: F)
+where
+    F: Fn(WorkerCtx) + Sync,
+{
+    assert!(nthreads > 0);
+    if nthreads == 1 {
+        body(WorkerCtx { worker: 0, nthreads: 1 });
+        return;
+    }
+    let panicked = AtomicUsize::new(0);
+    let body = &body;
+    std::thread::scope(|scope| {
+        for worker in 0..nthreads {
+            let panicked = &panicked;
+            scope.spawn(move || {
+                let ctx = WorkerCtx { worker, nthreads };
+                if catch_unwind(AssertUnwindSafe(|| body(ctx))).is_err() {
+                    panicked.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    if panicked.load(Ordering::Relaxed) > 0 {
+        panic!("parallel_region: worker(s) panicked");
+    }
+}
+
+/// Parallel map: apply `f` to every element of `items`, preserving order.
+pub fn parallel_map<T, U, F>(nthreads: usize, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Default + Clone,
+    F: Fn(WorkerCtx, &T) -> U + Sync,
+{
+    let mut out = vec![U::default(); items.len()];
+    {
+        let slots: Vec<std::sync::Mutex<&mut U>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(nthreads, items.len(), Schedule::default(), |ctx, i| {
+            let v = f(ctx, &items[i]);
+            **slots[i].lock().unwrap() = v;
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn coverage_test(schedule: Schedule, nthreads: usize, n: usize) {
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(nthreads, n, schedule, |_ctx, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} hit count");
+        }
+    }
+
+    #[test]
+    fn static_covers_each_index_once() {
+        for &(t, n) in &[(1, 10), (3, 10), (4, 4), (8, 3), (4, 1000), (7, 1001)] {
+            coverage_test(Schedule::Static, t, n);
+        }
+    }
+
+    #[test]
+    fn dynamic_covers_each_index_once() {
+        for &(t, n) in &[(1, 10), (3, 100), (8, 1000), (4, 1)] {
+            coverage_test(Schedule::Dynamic { chunk: 7 }, t, n);
+        }
+    }
+
+    #[test]
+    fn guided_covers_each_index_once() {
+        for &(t, n) in &[(2, 50), (4, 1000), (8, 12345)] {
+            coverage_test(Schedule::Guided { min_chunk: 4 }, t, n);
+        }
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        parallel_for(4, 0, Schedule::Static, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn range_offsets_respected() {
+        let sum = AtomicU64::new(0);
+        parallel_for_range(3, 10, 20, Schedule::Dynamic { chunk: 2 }, |_, i| {
+            assert!((10..20).contains(&i));
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (10..20).sum::<usize>() as u64);
+    }
+
+    #[test]
+    fn worker_ids_are_in_range() {
+        parallel_for(4, 100, Schedule::Dynamic { chunk: 1 }, |ctx, _| {
+            assert!(ctx.worker < ctx.nthreads);
+            assert_eq!(ctx.nthreads, 4);
+        });
+    }
+
+    #[test]
+    fn parallel_region_runs_every_worker() {
+        let hits: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        parallel_region(6, |ctx| {
+            hits[ctx.worker].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let out = parallel_map(4, &items, |_ctx, &x| x * 2);
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker(s) panicked")]
+    fn body_panic_propagates() {
+        parallel_for(4, 100, Schedule::Dynamic { chunk: 1 }, |_, i| {
+            if i == 57 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn borrows_caller_stack() {
+        let data = vec![1u64; 256];
+        let sum = AtomicU64::new(0);
+        parallel_for(4, data.len(), Schedule::Static, |_, i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 256);
+    }
+}

@@ -1,0 +1,380 @@
+//! Binary serialization framework (the offline crate set has no `serde`).
+//!
+//! Two jobs:
+//!
+//! 1. **Real wire format** for the simulated cluster: shuffle payloads and
+//!    control messages are encoded with [`Encode`]/[`Decode`] before they
+//!    cross a simulated node boundary, so "bytes on the network" is a real,
+//!    measured quantity (the paper's local-reduce claim is about exactly
+//!    this number).
+//! 2. **Cost carrier** for the Spark-sim: Spark serializes records at every
+//!    shuffle boundary (and that cost is one of the paper's three explanations
+//!    for the gap). The Spark engine routes all inter-stage data through this
+//!    module; the `ablation_serialization` bench toggles it.
+//!
+//! Format: little-endian fixed-width integers, varint-free (simple and fast);
+//! strings and vectors are length-prefixed with u32.
+
+use std::collections::HashMap;
+
+/// Serialize into a byte buffer.
+pub trait Encode {
+    fn encode(&self, out: &mut Vec<u8>);
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+}
+
+/// Deserialize from a byte slice via a cursor.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError>;
+
+    fn from_bytes(bytes: &[u8]) -> Result<Self, DecodeError> {
+        let mut r = Reader::new(bytes);
+        let v = Self::decode(&mut r)?;
+        if !r.is_empty() {
+            return Err(DecodeError::TrailingBytes(r.remaining()));
+        }
+        Ok(v)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Needed more bytes than remained in the buffer.
+    Truncated { need: usize, have: usize },
+    /// A length prefix exceeded a sanity bound.
+    LengthOverflow(u64),
+    /// String payload was not valid UTF-8.
+    Utf8,
+    /// Unknown enum discriminant.
+    BadTag(u8),
+    /// Bytes left over after a full decode.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { need, have } => {
+                write!(f, "truncated input: need {need} bytes, have {have}")
+            }
+            DecodeError::LengthOverflow(n) => write!(f, "length prefix too large: {n}"),
+            DecodeError::Utf8 => write!(f, "invalid utf-8 in string payload"),
+            DecodeError::BadTag(t) => write!(f, "unknown discriminant {t}"),
+            DecodeError::TrailingBytes(n) => write!(f, "{n} trailing bytes after decode"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Decode cursor over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+macro_rules! impl_int {
+    ($($t:ty),*) => {$(
+        impl Encode for $t {
+            #[inline]
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Decode for $t {
+            #[inline]
+            fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+                let n = std::mem::size_of::<$t>();
+                let b = r.take(n)?;
+                Ok(<$t>::from_le_bytes(b.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+impl_int!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+impl Encode for usize {
+    #[inline]
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+}
+
+impl Decode for usize {
+    #[inline]
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(u64::decode(r)? as usize)
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(u8::from(*self));
+    }
+}
+
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match u8::decode(r)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(DecodeError::BadTag(t)),
+        }
+    }
+}
+
+/// Sanity cap on decoded lengths (1 GiB): corrupt prefixes fail fast instead
+/// of OOM-ing the process.
+const MAX_LEN: u64 = 1 << 30;
+
+fn encode_len(len: usize, out: &mut Vec<u8>) {
+    (len as u32).encode(out)
+}
+
+fn decode_len(r: &mut Reader<'_>) -> Result<usize, DecodeError> {
+    let n = u32::decode(r)? as u64;
+    if n > MAX_LEN {
+        return Err(DecodeError::LengthOverflow(n));
+    }
+    Ok(n as usize)
+}
+
+impl Encode for str {
+    fn encode(&self, out: &mut Vec<u8>) {
+        encode_len(self.len(), out);
+        out.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.as_str().encode(out);
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = decode_len(r)?;
+        let b = r.take(n)?;
+        std::str::from_utf8(b).map(str::to_owned).map_err(|_| DecodeError::Utf8)
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        encode_len(self.len(), out);
+        for item in self {
+            item.encode(out);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = decode_len(r)?;
+        // Reserve conservatively: a corrupt length can still claim up to
+        // MAX_LEN items; cap the pre-allocation by remaining bytes.
+        let cap = n.min(r.remaining().max(1));
+        let mut v = Vec::with_capacity(cap);
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+}
+
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<A: Encode, B: Encode, C: Encode> Encode for (A, B, C) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+    }
+}
+
+impl<A: Decode, B: Decode, C: Decode> Decode for (A, B, C) {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok((A::decode(r)?, B::decode(r)?, C::decode(r)?))
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match u8::decode(r)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            t => Err(DecodeError::BadTag(t)),
+        }
+    }
+}
+
+impl<K: Encode, V: Encode> Encode for HashMap<K, V> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        encode_len(self.len(), out);
+        for (k, v) in self {
+            k.encode(out);
+            v.encode(out);
+        }
+    }
+}
+
+impl<K: Decode + std::hash::Hash + Eq, V: Decode> Decode for HashMap<K, V> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = decode_len(r)?;
+        let mut m = HashMap::with_capacity(n.min(r.remaining().max(1)));
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        let back = T::from_bytes(&bytes).expect("decode");
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn ints_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u16::MAX);
+        roundtrip(123456789u32);
+        roundtrip(u64::MAX);
+        roundtrip(-1i64);
+        roundtrip(i32::MIN);
+        roundtrip(3.14159f64);
+        roundtrip(true);
+        roundtrip(false);
+    }
+
+    #[test]
+    fn strings_roundtrip() {
+        roundtrip(String::new());
+        roundtrip("hello".to_string());
+        roundtrip("héllo — 你好 🎉".to_string());
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<u64>::new());
+        roundtrip(("key".to_string(), 42u64));
+        roundtrip((1u8, "x".to_string(), -9i64));
+        roundtrip(Some(7u32));
+        roundtrip(Option::<String>::None);
+        roundtrip(vec![("a".to_string(), 1u64), ("b".to_string(), 2u64)]);
+    }
+
+    #[test]
+    fn hashmap_roundtrip() {
+        let mut m = HashMap::new();
+        m.insert("alpha".to_string(), 10u64);
+        m.insert("beta".to_string(), 20u64);
+        roundtrip(m);
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let bytes = 12345u64.to_bytes();
+        assert!(matches!(
+            u64::from_bytes(&bytes[..4]),
+            Err(DecodeError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_fail() {
+        let mut bytes = 1u32.to_bytes();
+        bytes.push(0xFF);
+        assert!(matches!(u32::from_bytes(&bytes), Err(DecodeError::TrailingBytes(1))));
+    }
+
+    #[test]
+    fn corrupt_length_fails_fast() {
+        // A string claiming 2^31 bytes with a 2-byte payload.
+        let mut bytes = Vec::new();
+        (0x8000_0000u32).encode(&mut bytes);
+        bytes.extend_from_slice(b"ab");
+        assert!(matches!(
+            String::from_bytes(&bytes),
+            Err(DecodeError::LengthOverflow(_))
+        ));
+    }
+
+    #[test]
+    fn bad_utf8_fails() {
+        let mut bytes = Vec::new();
+        encode_len(2, &mut bytes);
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        assert_eq!(String::from_bytes(&bytes), Err(DecodeError::Utf8));
+    }
+
+    #[test]
+    fn bad_option_tag_fails() {
+        assert!(matches!(
+            Option::<u8>::from_bytes(&[7]),
+            Err(DecodeError::BadTag(7))
+        ));
+    }
+}

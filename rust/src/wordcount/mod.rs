@@ -1,0 +1,349 @@
+//! The public word-count API: one job description dispatched to either
+//! engine, one result type, and the serial reference used for verification.
+//!
+//! ```no_run
+//! use blaze::wordcount::{WordCountJob, EngineChoice};
+//! use blaze::corpus::{Corpus, CorpusSpec};
+//!
+//! let corpus = Corpus::generate(&CorpusSpec::with_bytes(16 << 20));
+//! let result = WordCountJob::new(EngineChoice::Blaze)
+//!     .nodes(2)
+//!     .threads_per_node(4)
+//!     .run(&corpus)
+//!     .unwrap();
+//! println!("{}", result.summary());
+//! assert!(result.verify(&corpus));
+//! ```
+
+use std::collections::HashMap;
+
+use crate::cluster::{FailurePlan, NetModel};
+use crate::concurrent::CachePolicy;
+use crate::corpus::{Corpus, Tokenizer};
+use crate::dist::CombineMode;
+use crate::engines::blaze::{BlazeConf, KeyPath};
+use crate::engines::spark::{SparkConf, SparkContext};
+use crate::hash::HashKind;
+use crate::util::stats::{fmt_rate, Stopwatch};
+
+/// Engine selection with the variants the paper's figure distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Paper's engine, per-token key allocation (the "Blaze" bar).
+    Blaze,
+    /// Paper's engine, zero-alloc insert path (the "Blaze TCM" bar).
+    BlazeTcm,
+    /// Spark-style baseline with faithful overheads.
+    Spark,
+    /// Spark with all modeled overheads stripped (ablation floor).
+    SparkStripped,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Option<EngineChoice> {
+        match s {
+            "blaze" => Some(EngineChoice::Blaze),
+            "blaze-tcm" | "tcm" => Some(EngineChoice::BlazeTcm),
+            "spark" => Some(EngineChoice::Spark),
+            "spark-stripped" => Some(EngineChoice::SparkStripped),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineChoice::Blaze => "Blaze",
+            EngineChoice::BlazeTcm => "Blaze TCM",
+            EngineChoice::Spark => "Spark",
+            EngineChoice::SparkStripped => "Spark (stripped)",
+        }
+    }
+}
+
+/// Everything needed to run one word count.
+#[derive(Clone, Debug)]
+pub struct WordCountJob {
+    pub engine: EngineChoice,
+    pub nnodes: usize,
+    pub threads_per_node: usize,
+    pub net: NetModel,
+    pub tokenizer: Tokenizer,
+    /// Blaze: map-side combining mode (A3 ablation).
+    pub combine: CombineMode,
+    /// Blaze: hash function.
+    pub hash: HashKind,
+    /// Blaze: thread-cache policy (default: optimized cache-first; the
+    /// paper's prose policy is spill-on-contention).
+    pub cache_policy: CachePolicy,
+    /// Spark: override individual cost knobs after the engine presets.
+    pub spark_overrides: Option<SparkConf>,
+    /// Failure injection plan (consumed by whichever engine runs).
+    pub failures: std::sync::Arc<FailurePlan>,
+}
+
+impl WordCountJob {
+    pub fn new(engine: EngineChoice) -> Self {
+        Self {
+            engine,
+            nnodes: 1,
+            threads_per_node: 4,
+            net: NetModel::aws_like(),
+            tokenizer: Tokenizer::Spaces,
+            combine: CombineMode::Eager,
+            hash: HashKind::Fx,
+            cache_policy: CachePolicy::default(),
+            spark_overrides: None,
+            failures: std::sync::Arc::new(FailurePlan::none()),
+        }
+    }
+
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nnodes = n;
+        self
+    }
+
+    pub fn threads_per_node(mut self, t: usize) -> Self {
+        self.threads_per_node = t;
+        self
+    }
+
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn tokenizer(mut self, t: Tokenizer) -> Self {
+        self.tokenizer = t;
+        self
+    }
+
+    pub fn combine(mut self, c: CombineMode) -> Self {
+        self.combine = c;
+        self
+    }
+
+    pub fn cache_policy(mut self, p: CachePolicy) -> Self {
+        self.cache_policy = p;
+        self
+    }
+
+    pub fn spark_conf(mut self, conf: SparkConf) -> Self {
+        self.spark_overrides = Some(conf);
+        self
+    }
+
+    pub fn failures(mut self, plan: FailurePlan) -> Self {
+        self.failures = std::sync::Arc::new(plan);
+        self
+    }
+
+    /// Execute on the chosen engine.
+    pub fn run(&self, corpus: &Corpus) -> Result<WordCountResult, WordCountError> {
+        match self.engine {
+            EngineChoice::Blaze | EngineChoice::BlazeTcm => {
+                let conf = BlazeConf {
+                    nnodes: self.nnodes,
+                    threads_per_node: self.threads_per_node,
+                    net: self.net,
+                    combine: self.combine,
+                    hash: self.hash,
+                    tokenizer: self.tokenizer,
+                    key_path: if self.engine == EngineChoice::BlazeTcm {
+                        KeyPath::ZeroAlloc
+                    } else {
+                        KeyPath::AllocPerToken
+                    },
+                    cache_policy: self.cache_policy,
+                    max_job_reruns: 3,
+                };
+                let report =
+                    crate::engines::blaze::word_count_with_failures(&conf, corpus, &self.failures)
+                        .map_err(|e| WordCountError(e.to_string()))?;
+                Ok(WordCountResult {
+                    engine: self.engine,
+                    counts: report.counts,
+                    wall_secs: report.wall_secs,
+                    words: report.words,
+                    shuffle_bytes: report.shuffle_bytes,
+                    detail: format!(
+                        "map={:.3}s shuffle={:.3}s reruns={}",
+                        report.map_secs, report.shuffle_secs, report.reruns
+                    ),
+                })
+            }
+            EngineChoice::Spark | EngineChoice::SparkStripped => {
+                let conf = self.spark_overrides.clone().unwrap_or_else(|| {
+                    let mut c = if self.engine == EngineChoice::SparkStripped {
+                        SparkConf::stripped(self.nnodes, self.threads_per_node)
+                    } else {
+                        SparkConf::emr_like(self.nnodes, self.threads_per_node)
+                    };
+                    c.net = self.net;
+                    c
+                });
+                // The plan is shared by Arc: injections are consumed in
+                // place via interior mutability.
+                let ctx = SparkContext::with_failures_arc(conf, std::sync::Arc::clone(&self.failures));
+                let sw = Stopwatch::start();
+                let counts =
+                    crate::engines::spark::word_count_lines(
+                        &ctx,
+                        std::sync::Arc::new(corpus.lines.clone()),
+                        self.tokenizer,
+                    )
+                    .map_err(|e| WordCountError(e.to_string()))?;
+                let wall_secs = sw.elapsed_secs();
+                let words: u64 = counts.values().sum();
+                use std::sync::atomic::Ordering::Relaxed;
+                Ok(WordCountResult {
+                    engine: self.engine,
+                    counts,
+                    wall_secs,
+                    words,
+                    shuffle_bytes: ctx.metrics().shuffle_bytes_written.load(Relaxed),
+                    detail: ctx.metrics().summary(),
+                })
+            }
+        }
+    }
+}
+
+/// Uniform result across engines.
+#[derive(Debug)]
+pub struct WordCountResult {
+    pub engine: EngineChoice,
+    pub counts: HashMap<String, u64>,
+    pub wall_secs: f64,
+    pub words: u64,
+    pub shuffle_bytes: u64,
+    /// Engine-specific metric breakdown.
+    pub detail: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct WordCountError(pub String);
+
+impl std::fmt::Display for WordCountError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "word count failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for WordCountError {}
+
+impl WordCountResult {
+    /// The paper's headline metric.
+    pub fn words_per_sec(&self) -> f64 {
+        self.words as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Verify against the serial reference.
+    pub fn verify(&self, corpus: &Corpus) -> bool {
+        self.counts == serial_reference(corpus, Tokenizer::Spaces)
+            || self.counts == serial_reference(corpus, Tokenizer::Normalized)
+    }
+
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<16} {:>12} words in {:>8.3}s = {:>14}   shuffle={}",
+            self.engine.label(),
+            self.words,
+            self.wall_secs,
+            fmt_rate(self.words_per_sec(), "words"),
+            crate::util::stats::fmt_bytes(self.shuffle_bytes),
+        )
+    }
+
+    /// Most frequent `k` words (count desc, then word asc).
+    pub fn top_k(&self, k: usize) -> Vec<(String, u64)> {
+        top_k(&self.counts, k)
+    }
+}
+
+/// Single-threaded reference count — the correctness oracle everywhere.
+pub fn serial_reference(corpus: &Corpus, tokenizer: Tokenizer) -> HashMap<String, u64> {
+    let mut m = HashMap::new();
+    for line in &corpus.lines {
+        tokenizer.for_each_token(line, |w| {
+            *m.entry(w.to_string()).or_insert(0u64) += 1;
+        });
+    }
+    m
+}
+
+/// Top-k by count (desc), ties broken alphabetically.
+pub fn top_k(counts: &HashMap<String, u64>, k: usize) -> Vec<(String, u64)> {
+    let mut v: Vec<(String, u64)> = counts.iter().map(|(k, &c)| (k.clone(), c)).collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    v.truncate(k);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusSpec;
+
+    fn small_corpus() -> Corpus {
+        Corpus::generate(&CorpusSpec::with_bytes(64 << 10))
+    }
+
+    #[test]
+    fn all_engines_agree_with_reference() {
+        let corpus = small_corpus();
+        let expect = serial_reference(&corpus, Tokenizer::Spaces);
+        for engine in [
+            EngineChoice::Blaze,
+            EngineChoice::BlazeTcm,
+            EngineChoice::Spark,
+            EngineChoice::SparkStripped,
+        ] {
+            let result = WordCountJob::new(engine)
+                .nodes(2)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .run(&corpus)
+                .unwrap();
+            assert_eq!(result.counts, expect, "{}", engine.label());
+            assert!(result.verify(&corpus));
+            assert!(result.words_per_sec() > 0.0);
+        }
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        let mut counts = HashMap::new();
+        counts.insert("b".to_string(), 5u64);
+        counts.insert("a".to_string(), 5);
+        counts.insert("c".to_string(), 9);
+        counts.insert("d".to_string(), 1);
+        let top = top_k(&counts, 3);
+        assert_eq!(
+            top,
+            vec![("c".to_string(), 9), ("a".to_string(), 5), ("b".to_string(), 5)]
+        );
+    }
+
+    #[test]
+    fn engine_choice_parse() {
+        assert_eq!(EngineChoice::parse("blaze"), Some(EngineChoice::Blaze));
+        assert_eq!(EngineChoice::parse("tcm"), Some(EngineChoice::BlazeTcm));
+        assert_eq!(EngineChoice::parse("spark"), Some(EngineChoice::Spark));
+        assert_eq!(
+            EngineChoice::parse("spark-stripped"),
+            Some(EngineChoice::SparkStripped)
+        );
+        assert_eq!(EngineChoice::parse("hadoop"), None);
+    }
+
+    #[test]
+    fn summary_contains_rate() {
+        let corpus = small_corpus();
+        let r = WordCountJob::new(EngineChoice::BlazeTcm)
+            .net(NetModel::ideal())
+            .run(&corpus)
+            .unwrap();
+        assert!(r.summary().contains("words/s"));
+    }
+}

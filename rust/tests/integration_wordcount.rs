@@ -1,0 +1,189 @@
+//! Cross-module integration: full word counts on generated corpora across
+//! the engine × cluster-shape grid, all verified against the serial
+//! reference; engines must also agree with each other.
+
+use std::collections::HashMap;
+
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::dist::CombineMode;
+use blaze::wordcount::{serial_reference, top_k, EngineChoice, WordCountJob};
+
+fn corpus(bytes: u64, seed: u64) -> Corpus {
+    Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn engine_grid_matches_reference() {
+    let corpus = corpus(256 << 10, 1);
+    let expect = serial_reference(&corpus, Tokenizer::Spaces);
+    for engine in [
+        EngineChoice::Blaze,
+        EngineChoice::BlazeTcm,
+        EngineChoice::Spark,
+        EngineChoice::SparkStripped,
+    ] {
+        for (nodes, threads) in [(1usize, 1usize), (1, 4), (2, 2), (4, 2)] {
+            let result = WordCountJob::new(engine)
+                .nodes(nodes)
+                .threads_per_node(threads)
+                .net(NetModel::ideal())
+                .run(&corpus)
+                .unwrap_or_else(|e| panic!("{} {nodes}x{threads}: {e}", engine.label()));
+            assert_eq!(
+                result.counts,
+                expect,
+                "{} at {nodes}x{threads} diverged",
+                engine.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn engines_agree_pairwise_on_fresh_corpora() {
+    for seed in [10u64, 20, 30] {
+        let corpus = corpus(128 << 10, seed);
+        let mut results: Vec<(String, HashMap<String, u64>)> = Vec::new();
+        for engine in [EngineChoice::BlazeTcm, EngineChoice::Spark] {
+            let r = WordCountJob::new(engine)
+                .nodes(2)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .run(&corpus)
+                .unwrap();
+            results.push((engine.label().to_string(), r.counts));
+        }
+        assert_eq!(results[0].1, results[1].1, "seed {seed}");
+    }
+}
+
+#[test]
+fn combine_modes_agree() {
+    let corpus = corpus(128 << 10, 5);
+    let expect = serial_reference(&corpus, Tokenizer::Spaces);
+    for combine in [CombineMode::Eager, CombineMode::None] {
+        let r = WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(3)
+            .threads_per_node(2)
+            .net(NetModel::ideal())
+            .combine(combine)
+            .run(&corpus)
+            .unwrap();
+        assert_eq!(r.counts, expect, "{combine:?}");
+    }
+}
+
+#[test]
+fn fault_recovery_preserves_exact_counts() {
+    let corpus = corpus(128 << 10, 9);
+    let expect = serial_reference(&corpus, Tokenizer::Spaces);
+
+    // Spark: failures in both stages, FT on.
+    let r = WordCountJob::new(EngineChoice::Spark)
+        .nodes(2)
+        .threads_per_node(2)
+        .net(NetModel::ideal())
+        .failures(FailurePlan::none().fail_task(0, 0).fail_task(1, 1))
+        .run(&corpus)
+        .unwrap();
+    assert_eq!(r.counts, expect, "spark post-recovery counts");
+
+    // Blaze: node failure in each phase, rerun budget covers both.
+    let r = WordCountJob::new(EngineChoice::BlazeTcm)
+        .nodes(2)
+        .threads_per_node(2)
+        .net(NetModel::ideal())
+        .failures(FailurePlan::none().fail_node(0, 0).fail_node(1, 1))
+        .run(&corpus)
+        .unwrap();
+    assert_eq!(r.counts, expect, "blaze post-rerun counts");
+}
+
+#[test]
+fn network_model_does_not_change_results() {
+    let corpus = corpus(64 << 10, 3);
+    let expect = serial_reference(&corpus, Tokenizer::Spaces);
+    for net in [NetModel::ideal(), NetModel::aws_like(), NetModel::slow()] {
+        let r = WordCountJob::new(EngineChoice::BlazeTcm)
+            .nodes(2)
+            .threads_per_node(2)
+            .net(net)
+            .run(&corpus)
+            .unwrap();
+        assert_eq!(r.counts, expect);
+    }
+}
+
+#[test]
+fn normalized_tokenizer_consistent_across_engines() {
+    let corpus = Corpus::from_text("The CAT, the cat! THE-CAT?\nsat.\n");
+    let expect = serial_reference(&corpus, Tokenizer::Normalized);
+    // "The CAT, the cat! THE-CAT?" → the×3, cat×3 (THE-CAT splits in two).
+    assert_eq!(expect.get("the"), Some(&3));
+    assert_eq!(expect.get("cat"), Some(&3));
+    assert_eq!(expect.get("sat"), Some(&1));
+    for engine in [EngineChoice::BlazeTcm, EngineChoice::Spark] {
+        let r = WordCountJob::new(engine)
+            .nodes(2)
+            .threads_per_node(2)
+            .net(NetModel::ideal())
+            .tokenizer(Tokenizer::Normalized)
+            .run(&corpus)
+            .unwrap();
+        assert_eq!(r.counts, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn top_k_is_stable_across_engines() {
+    let corpus = corpus(128 << 10, 7);
+    let a = WordCountJob::new(EngineChoice::BlazeTcm)
+        .net(NetModel::ideal())
+        .run(&corpus)
+        .unwrap();
+    let b = WordCountJob::new(EngineChoice::Spark)
+        .net(NetModel::ideal())
+        .run(&corpus)
+        .unwrap();
+    assert_eq!(top_k(&a.counts, 20), top_k(&b.counts, 20));
+}
+
+#[test]
+fn empty_and_degenerate_corpora() {
+    for text in ["", "\n\n\n", "   \n  ", "word\n"] {
+        let corpus = Corpus::from_text(text);
+        let expect = serial_reference(&corpus, Tokenizer::Spaces);
+        for engine in [EngineChoice::BlazeTcm, EngineChoice::Spark] {
+            let r = WordCountJob::new(engine)
+                .nodes(2)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .run(&corpus)
+                .unwrap();
+            assert_eq!(r.counts, expect, "{} on {text:?}", engine.label());
+        }
+    }
+}
+
+#[test]
+fn unicode_words_survive_all_paths() {
+    // Exercises the UTF-16 JvmWord path and the serde path with non-ASCII.
+    let corpus = Corpus::from_text("héllo wörld héllo\n你好 世界 你好 héllo\n");
+    let expect = serial_reference(&corpus, Tokenizer::Spaces);
+    for engine in [EngineChoice::BlazeTcm, EngineChoice::Spark] {
+        let r = WordCountJob::new(engine)
+            .nodes(2)
+            .threads_per_node(2)
+            .net(NetModel::ideal())
+            .run(&corpus)
+            .unwrap();
+        assert_eq!(r.counts, expect, "{}", engine.label());
+        assert_eq!(r.counts.get("héllo"), Some(&3));
+        assert_eq!(r.counts.get("你好"), Some(&2));
+    }
+}

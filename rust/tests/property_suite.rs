@@ -1,0 +1,232 @@
+//! Property-based suite over the coordinator invariants (DESIGN.md §6),
+//! using the in-tree `util::proptest` harness (seeded, shrinking-lite).
+
+use std::collections::BTreeMap;
+
+use blaze::cluster::{spawn_cluster, NetModel};
+use blaze::concurrent::ConcurrentHashMap;
+use blaze::corpus::Corpus;
+use blaze::dist::{reducer, CombineMode, DistHashMap, DistRange};
+use blaze::hash::HashKind;
+use blaze::util::pool::{parallel_for, Schedule};
+use blaze::util::proptest::{check, check_with, fail, Config, Gen};
+use blaze::util::ser::{Decode, Encode};
+use blaze::wordcount::{serial_reference, EngineChoice, WordCountJob};
+
+/// ConcurrentHashMap under N threads ≡ serial BTreeMap fold.
+#[test]
+fn prop_concurrent_map_no_lost_updates() {
+    check("concurrent-map-vs-serial", |g| {
+        let nthreads = g.usize_in(1, 8);
+        let nsegs = g.usize_in(1, 32);
+        let keys: Vec<String> = {
+            let distinct = g.usize_in(1, 40);
+            (0..g.usize_in(1, 400)).map(|i| format!("k{}", i % distinct)).collect()
+        };
+        let m: ConcurrentHashMap<String, u64> =
+            ConcurrentHashMap::new(nsegs, nthreads, HashKind::Fx);
+        parallel_for(nthreads, keys.len(), Schedule::Dynamic { chunk: 3 }, |ctx, i| {
+            m.upsert(ctx.worker, keys[i].clone(), 1, |a, b| *a += b);
+        });
+        m.sync(nthreads, |a, b| *a += b);
+        let mut serial: BTreeMap<String, u64> = BTreeMap::new();
+        for k in &keys {
+            *serial.entry(k.clone()).or_insert(0) += 1;
+        }
+        let mut got: BTreeMap<String, u64> = m.to_vec().into_iter().collect();
+        if m.pending_cache_entries() != 0 {
+            return fail("cache entries left after sync");
+        }
+        if got != serial {
+            got.retain(|k, v| serial.get(k) != Some(v));
+            return fail(format!("diverged on {} keys: {got:?}", got.len()));
+        }
+        Ok(())
+    });
+}
+
+/// DistHashMap: every key lands on exactly `owner(hash)`, totals preserved.
+#[test]
+fn prop_dist_map_routing_and_totals() {
+    check_with(Config { cases: 24, ..Default::default() }, "dist-map-routing", |g| {
+        let nnodes = g.usize_in(1, 4);
+        let nthreads = g.usize_in(1, 3);
+        let combine = if g.bool() { CombineMode::Eager } else { CombineMode::None };
+        let words: Vec<String> = {
+            let distinct = g.usize_in(1, 30);
+            (0..g.usize_in(1, 300)).map(|_| {
+                let i = g.usize_in(0, distinct - 1);
+                format!("w{i}")
+            }).collect()
+        };
+        let words_ref = &words;
+        let results = spawn_cluster(nnodes, NetModel::ideal(), move |comm| {
+            let map: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, nnodes, nthreads, HashKind::Fx, combine);
+            // Every node inserts the full stream (totals = nnodes × stream).
+            parallel_for(nthreads, words_ref.len(), Schedule::Static, |ctx, i| {
+                map.upsert(ctx.worker, words_ref[i].clone(), 1, reducer::sum);
+            });
+            map.shuffle(comm, reducer::sum);
+            let owned = map.to_vec_local();
+            // Routing invariant: we own only keys whose owner is us.
+            let misrouted = owned.iter().filter(|(k, _)| map.owner_of(k) != comm.rank).count();
+            (owned, misrouted)
+        });
+        let mut total = 0u64;
+        let mut keys_seen = std::collections::HashSet::new();
+        for (owned, misrouted) in results {
+            if misrouted > 0 {
+                return fail(format!("{misrouted} misrouted keys"));
+            }
+            for (k, v) in owned {
+                if !keys_seen.insert(k.clone()) {
+                    return fail(format!("key {k} owned by two nodes"));
+                }
+                total += v;
+            }
+        }
+        let expect = (words.len() * nnodes) as u64;
+        if total != expect {
+            return fail(format!("total {total} != expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+/// DistRange node blocks partition the index space exactly once, for all
+/// shapes (start, end, step, nnodes).
+#[test]
+fn prop_dist_range_partition() {
+    check("dist-range-partition", |g| {
+        let start = g.i64_in(-1000, 1000);
+        let len = g.i64_in(0, 2000);
+        let step = *g.choose(&[1i64, 2, 3, 7, -1, -3]);
+        let (a, b) = if step > 0 { (start, start + len) } else { (start + len, start) };
+        let range = DistRange::with_step(a, b, step);
+        let nnodes = g.usize_in(1, 6);
+        let mut covered = 0usize;
+        let mut prev_hi = 0usize;
+        for rank in 0..nnodes {
+            let (lo, hi) = range.node_block(rank, nnodes);
+            if lo != prev_hi {
+                return fail(format!("gap at rank {rank}: lo {lo} != prev {prev_hi}"));
+            }
+            covered += hi - lo;
+            prev_hi = hi;
+        }
+        if covered != range.len() {
+            return fail(format!("covered {covered} != len {}", range.len()));
+        }
+        // And the values are within the mathematical range.
+        for i in 0..range.len() {
+            let v = range.at(i);
+            let in_range = if step > 0 { v >= a && v < b } else { v <= a && v > b };
+            if !in_range {
+                return fail(format!("value {v} (index {i}) outside range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Binary serialization round-trips arbitrary nested values.
+#[test]
+fn prop_ser_roundtrip() {
+    check("ser-roundtrip", |g| {
+        let v: Vec<(String, Vec<i64>)> = g.vec_of(|g| {
+            let key = g.word(12);
+            let vals = g.vec_of(|g| g.i64_in(i64::MIN / 2, i64::MAX / 2));
+            (key, vals)
+        });
+        let bytes = v.to_bytes();
+        match Vec::<(String, Vec<i64>)>::from_bytes(&bytes) {
+            Ok(back) if back == v => Ok(()),
+            Ok(_) => fail("roundtrip changed value"),
+            Err(e) => fail(format!("decode error: {e}")),
+        }
+    });
+}
+
+/// Random little corpora: every engine ≡ serial reference.
+#[test]
+fn prop_random_corpora_all_engines() {
+    check_with(Config { cases: 12, size: 64, ..Default::default() }, "random-corpora", |g| {
+        let nlines = g.usize_in(0, 80);
+        let text: String = (0..nlines)
+            .map(|_| g.line(12))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let corpus = Corpus::from_text(&text);
+        let expect = serial_reference(&corpus, blaze::corpus::Tokenizer::Spaces);
+        for engine in [EngineChoice::BlazeTcm, EngineChoice::Spark] {
+            let r = WordCountJob::new(engine)
+                .nodes(2)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .run(&corpus)
+                .map_err(|e| format!("{e}"))?;
+            if r.counts != expect {
+                return fail(format!("{} diverged on corpus {text:?}", engine.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Reducers used through the whole stack are associative+commutative on
+/// random streams (fold order must not matter).
+#[test]
+fn prop_reducer_order_independent() {
+    check("reducer-order-independence", |g| {
+        let mut values: Vec<u64> = g.vec_of(|g| g.below(1 << 30));
+        let mut acc1 = 0u64;
+        for &v in &values {
+            reducer::sum(&mut acc1, v);
+        }
+        // Shuffle and refold.
+        let seed = g.u64();
+        let mut rng = blaze::util::rng::Xoshiro256::new(seed);
+        rng.shuffle(&mut values);
+        let mut acc2 = 0u64;
+        for &v in &values {
+            reducer::sum(&mut acc2, v);
+        }
+        if acc1 != acc2 {
+            return fail("sum depends on order");
+        }
+        Ok(())
+    });
+}
+
+/// Tokenizers: token count equals iteration count; no empties; spaces
+/// tokenizer concatenation round-trips.
+#[test]
+fn prop_tokenizer_consistency() {
+    check("tokenizer-consistency", |g| {
+        let line = {
+            // Random line with multi-space runs.
+            let mut s = String::new();
+            for _ in 0..g.usize_in(0, 20) {
+                for _ in 0..g.usize_in(1, 3) {
+                    s.push(' ');
+                }
+                s.push_str(&g.word(8));
+            }
+            s
+        };
+        let toks: Vec<&str> = blaze::corpus::split_spaces(&line).collect();
+        if toks.iter().any(|t| t.is_empty()) {
+            return fail("empty token");
+        }
+        if toks.len() != blaze::corpus::Tokenizer::Spaces.count_words(&line) {
+            return fail("count mismatch");
+        }
+        let rejoined = toks.join(" ");
+        let canonical: Vec<&str> = blaze::corpus::split_spaces(&rejoined).collect();
+        if canonical != toks {
+            return fail("rejoin changed tokens");
+        }
+        Ok(())
+    });
+}
