@@ -1,0 +1,87 @@
+//! Experiment W1: workload diversity — the generic job layer's four
+//! workloads on both engines, same corpus, same cluster shape.
+//!
+//! The paper's comparison is word count only; related work (DataMPI,
+//! arXiv:1403.3480) shows MPI-backed engines winning across a benchmark
+//! *suite*. This bench regenerates that comparison shape on the simulated
+//! cluster: each row reports map-phase emissions per second, so rows of
+//! one workload are comparable across engines (not across workloads —
+//! emission volumes differ by design).
+//!
+//! Scale knobs: BLAZE_BENCH_BYTES (default 32MB), BLAZE_BENCH_REPS.
+
+use std::sync::Arc;
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::Engine;
+use blaze::mapreduce::JobSpec;
+use blaze::util::stats::fmt_bytes;
+use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords, WordCount};
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine)
+        .nodes(2)
+        .threads_per_node(4)
+        .net(NetModel::aws_like())
+}
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    eprintln!(
+        "W1 corpus: {} ({} words); 2 nodes x 4 threads, aws-like net",
+        fmt_bytes(corpus.bytes),
+        corpus.words
+    );
+    let engines = [Engine::Spark, Engine::BlazeTcm];
+
+    let mut runner = BenchRunner::new("W1: generic workloads — Spark vs Blaze TCM");
+
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    for engine in engines {
+        let corpus = &corpus;
+        let wc = &wc;
+        runner.bench(format!("wordcount / {}", engine.label()), "recs", move || {
+            spec(engine).run_str(wc, corpus).expect("wordcount").records as f64
+        });
+    }
+
+    let idx = Arc::new(InvertedIndex::new(Tokenizer::Spaces));
+    for engine in engines {
+        let corpus = &corpus;
+        let idx = &idx;
+        runner.bench(format!("index / {}", engine.label()), "recs", move || {
+            spec(engine).run_str(idx, corpus).expect("index").records as f64
+        });
+    }
+
+    let topk = Arc::new(TopKWords::new(Tokenizer::Spaces, 20));
+    for engine in engines {
+        let corpus = &corpus;
+        let topk = &topk;
+        runner.bench(format!("top-k / {}", engine.label()), "recs", move || {
+            spec(engine).run_str(topk, corpus).expect("top-k").records as f64
+        });
+    }
+
+    let hist = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+    for engine in engines {
+        let corpus = &corpus;
+        let hist = &hist;
+        runner.bench(format!("length-hist / {}", engine.label()), "recs", move || {
+            spec(engine).run(hist, corpus).expect("length-hist").records as f64
+        });
+    }
+
+    runner.finish();
+
+    // Per-workload speedups (Blaze TCM over Spark).
+    println!("\nW1 headline (Blaze TCM / Spark, per workload):");
+    for (i, name) in ["wordcount", "index", "top-k", "length-hist"].iter().enumerate() {
+        let spark = runner.results[i * 2].rate();
+        let tcm = runner.results[i * 2 + 1].rate();
+        println!("  {name:<12} {:.1}x", tcm / spark.max(1e-12));
+    }
+}

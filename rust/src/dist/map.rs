@@ -1,0 +1,291 @@
+//! `DistHashMap` — the paper's distributed hash map.
+//!
+//! Every node holds a local [`ConcurrentHashMap`]; keys are owner-sharded
+//! by hash (`owner = bucket_of(hash(key), nnodes)`, the same high-bits
+//! bucketing the single-node segments use). During the map phase each node
+//! upserts whatever its mappers emit — for keys it owns *and* keys it
+//! doesn't — and the local map combines continuously ([`CombineMode::Eager`],
+//! the paper's "local reduce during the map phase"). One
+//! [`DistHashMap::shuffle`] then re-shards: each node serializes the
+//! entries it doesn't own, all-to-all exchanges them over the simulated
+//! fabric (bytes measured on the wire), and merges what it receives, after
+//! which every key lives exactly once, on its owner.
+//!
+//! With [`CombineMode::None`] the map phase instead buffers every raw
+//! `(K, V)` emission per thread and the shuffle ships them all — the
+//! ablation that quantifies the paper's local-reduce claim.
+
+use std::sync::Mutex;
+
+use crate::cluster::Comm;
+use crate::concurrent::{default_segments, CachePolicy, ConcurrentHashMap, MapKey, MapValue};
+use crate::hash::{bucket_of, HashKind};
+use crate::util::ser::{Decode, Encode};
+
+use super::CombineMode;
+
+pub struct DistHashMap<K: MapKey, V: MapValue> {
+    rank: usize,
+    nnodes: usize,
+    nthreads: usize,
+    hash: HashKind,
+    combine: CombineMode,
+    /// Local table: pending (pre-shuffle) entries under `Eager`, and the
+    /// owned shard after a shuffle in either mode.
+    local: ConcurrentHashMap<K, V>,
+    /// Per-thread raw emission buffers (`CombineMode::None` only).
+    raw: Vec<Mutex<Vec<(K, V)>>>,
+}
+
+impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
+    pub fn new(
+        rank: usize,
+        nnodes: usize,
+        nthreads: usize,
+        hash: HashKind,
+        combine: CombineMode,
+    ) -> Self {
+        Self::with_policy(rank, nnodes, nthreads, hash, combine, CachePolicy::default())
+    }
+
+    pub fn with_policy(
+        rank: usize,
+        nnodes: usize,
+        nthreads: usize,
+        hash: HashKind,
+        combine: CombineMode,
+        policy: CachePolicy,
+    ) -> Self {
+        assert!(nnodes > 0 && rank < nnodes && nthreads > 0);
+        Self {
+            rank,
+            nnodes,
+            nthreads,
+            hash,
+            combine,
+            local: ConcurrentHashMap::with_policy(
+                default_segments(nthreads),
+                nthreads,
+                hash,
+                policy,
+            ),
+            raw: (0..nthreads).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nnodes(&self) -> usize {
+        self.nnodes
+    }
+
+    pub fn combine_mode(&self) -> CombineMode {
+        self.combine
+    }
+
+    /// Which rank owns `key` after the shuffle.
+    pub fn owner_of(&self, key: &K) -> usize {
+        bucket_of(key.hash_with(self.hash), self.nnodes)
+    }
+
+    /// Map-phase insert from worker thread `tid`. Under `Eager` the value
+    /// combines into the local map immediately; under `None` the raw pair
+    /// is buffered for the shuffle.
+    #[inline]
+    pub fn upsert(&self, tid: usize, key: K, value: V, reduce: impl Fn(&mut V, V)) {
+        match self.combine {
+            CombineMode::Eager => self.local.upsert(tid, key, value, reduce),
+            CombineMode::None => self.raw[tid].lock().unwrap().push((key, value)),
+        }
+    }
+
+    /// Entries currently owned locally. Complete only after
+    /// [`shuffle`](Self::shuffle); the per-node shards are disjoint, so
+    /// concatenating every node's `to_vec_local` yields the global result.
+    pub fn to_vec_local(&self) -> Vec<(K, V)> {
+        self.local.to_vec()
+    }
+
+    /// The all-to-all re-shard: collect every pending entry, ship each to
+    /// its owner (self-delivery stays typed and off the wire), merge what
+    /// arrives. After this, the map holds exactly this rank's shard.
+    pub fn shuffle(&self, comm: &Comm, reduce: impl Fn(&mut V, V) + Sync)
+    where
+        K: Encode + Decode,
+        V: Encode + Decode,
+    {
+        assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
+        let n = self.nnodes;
+
+        // 1. Drain pending entries, carrying each key's routing hash.
+        let mut pending: Vec<(u64, K, V)> = Vec::new();
+        match self.combine {
+            CombineMode::Eager => {
+                self.local.sync(self.nthreads, &reduce);
+                for e in self.local.drain_entries() {
+                    pending.push((e.hash, e.key, e.value));
+                }
+            }
+            CombineMode::None => {
+                for cell in &self.raw {
+                    for (k, v) in cell.lock().unwrap().drain(..) {
+                        let h = k.hash_with(self.hash);
+                        pending.push((h, k, v));
+                    }
+                }
+            }
+        }
+
+        // 2. Partition by owner rank.
+        let mut by_owner: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+        for (h, k, v) in pending {
+            by_owner[bucket_of(h, n)].push((k, v));
+        }
+
+        // 3. Exchange. The local shard bypasses serialization and the
+        //    wire — that asymmetry is the measurable local-reduce saving.
+        let mine = std::mem::take(&mut by_owner[self.rank]);
+        let outgoing: Vec<Vec<u8>> = by_owner
+            .iter()
+            .enumerate()
+            .map(|(dst, shard)| if dst == self.rank { Vec::new() } else { shard.to_bytes() })
+            .collect();
+        let incoming = comm.all_to_all(outgoing);
+
+        // 4. Merge own + received into the (now empty) local table.
+        for (k, v) in mine {
+            self.local.upsert(0, k, v, &reduce);
+        }
+        for (src, buf) in incoming.into_iter().enumerate() {
+            if src == self.rank {
+                continue;
+            }
+            let shard: Vec<(K, V)> = Vec::<(K, V)>::from_bytes(&buf).expect("dist shuffle decode");
+            for (k, v) in shard {
+                self.local.upsert(0, k, v, &reduce);
+            }
+        }
+        self.local.sync(self.nthreads, &reduce);
+    }
+}
+
+impl<V: MapValue> DistHashMap<String, V> {
+    /// Borrowed-key upsert — the zero-alloc "TCM" hot path: the owned key
+    /// is materialized only when the token is seen for the first time.
+    #[inline]
+    pub fn upsert_str(&self, tid: usize, key: &str, value: V, reduce: impl Fn(&mut V, V)) {
+        match self.combine {
+            CombineMode::Eager => {
+                let hash = self.hash.hash(key.as_bytes());
+                self.local.upsert_borrowed(
+                    tid,
+                    hash,
+                    |k: &String| k == key,
+                    || key.to_string(),
+                    value,
+                    reduce,
+                );
+            }
+            CombineMode::None => self.raw[tid].lock().unwrap().push((key.to_string(), value)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{spawn_cluster, NetModel};
+    use crate::dist::reducer;
+    use std::collections::HashMap;
+
+    fn count_words(
+        nnodes: usize,
+        combine: CombineMode,
+        words: &[&str],
+    ) -> HashMap<String, u64> {
+        let results = spawn_cluster(nnodes, NetModel::ideal(), |comm| {
+            let map: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, nnodes, 2, HashKind::Fx, combine);
+            // Every node inserts the full stream.
+            for w in words {
+                map.upsert(0, w.to_string(), 1, reducer::sum);
+            }
+            map.shuffle(comm, reducer::sum);
+            map.to_vec_local()
+        });
+        results.into_iter().flatten().collect()
+    }
+
+    #[test]
+    fn shuffle_shards_and_totals() {
+        let words = ["a", "b", "a", "c", "a", "b"];
+        for combine in [CombineMode::Eager, CombineMode::None] {
+            for nnodes in [1usize, 2, 3] {
+                let counts = count_words(nnodes, combine, &words);
+                assert_eq!(counts.len(), 3, "{combine:?} nnodes={nnodes}");
+                assert_eq!(counts["a"], 3 * nnodes as u64);
+                assert_eq!(counts["b"], 2 * nnodes as u64);
+                assert_eq!(counts["c"], nnodes as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn owned_keys_land_on_owner() {
+        let nnodes = 4;
+        let results = spawn_cluster(nnodes, NetModel::ideal(), |comm| {
+            let map: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, nnodes, 2, HashKind::Fx, CombineMode::Eager);
+            for i in 0..100 {
+                map.upsert(0, format!("k{i}"), 1, reducer::sum);
+            }
+            map.shuffle(comm, reducer::sum);
+            let owned = map.to_vec_local();
+            owned.iter().all(|(k, _)| map.owner_of(k) == comm.rank)
+        });
+        assert!(results.into_iter().all(|ok| ok));
+    }
+
+    #[test]
+    fn upsert_str_matches_owned() {
+        let words = ["x", "y", "x"];
+        let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+            let a: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, CombineMode::Eager);
+            let b: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, CombineMode::Eager);
+            for w in words {
+                a.upsert(0, w.to_string(), 1, reducer::sum);
+                b.upsert_str(0, w, 1, reducer::sum);
+            }
+            a.shuffle(comm, reducer::sum);
+            b.shuffle(comm, reducer::sum);
+            let mut av = a.to_vec_local();
+            let mut bv = b.to_vec_local();
+            av.sort();
+            bv.sort();
+            (av, bv)
+        });
+        for (av, bv) in results {
+            assert_eq!(av, bv);
+        }
+    }
+
+    #[test]
+    fn integer_keyed_map() {
+        let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+            let map: DistHashMap<u32, u64> =
+                DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, CombineMode::Eager);
+            for i in 0..50u32 {
+                map.upsert(0, i % 5, 1, reducer::sum);
+            }
+            map.shuffle(comm, reducer::sum);
+            map.to_vec_local()
+        });
+        let merged: HashMap<u32, u64> = results.into_iter().flatten().collect();
+        assert_eq!(merged.len(), 5);
+        assert!(merged.values().all(|&c| c == 20)); // 10 per node × 2 nodes
+    }
+}

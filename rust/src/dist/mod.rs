@@ -1,0 +1,64 @@
+//! The paper's distributed data structures: [`DistRange`] (an index space
+//! partitioned across nodes, mapped by OpenMP-style threads) and
+//! [`DistHashMap`] (a key-sharded hash map with continuous map-side
+//! combining and a one-shot all-to-all shuffle).
+//!
+//! Together they are the MPI/OpenMP MapReduce substrate:
+//!
+//! ```text
+//! DistRange::mapreduce:
+//!   node block of [start, end)  --map-->  (K, V) emissions
+//!       --continuous combine-->  DistHashMap (local, ConcurrentHashMap)
+//!       --all-to-all shuffle-->  key's owner node (bytes measured on wire)
+//! ```
+//!
+//! [`CombineMode`] toggles the paper's third claim (A3): `Eager` combines
+//! emissions continuously in the local map before anything is shipped;
+//! `None` buffers every raw `(K, V)` pair and ships them all, so the
+//! shuffle-byte delta between the two modes is exactly the local-reduce
+//! saving the paper describes.
+
+pub mod map;
+pub mod range;
+pub mod reducer;
+
+pub use map::DistHashMap;
+pub use range::DistRange;
+
+/// When map-side combining happens (ablation A3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombineMode {
+    /// Combine continuously during the map phase (the paper's design).
+    Eager,
+    /// Ship every raw emission; reduce only after the shuffle.
+    None,
+}
+
+impl CombineMode {
+    pub fn parse(s: &str) -> Option<CombineMode> {
+        match s {
+            "eager" => Some(CombineMode::Eager),
+            "none" => Some(CombineMode::None),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CombineMode::Eager => "eager",
+            CombineMode::None => "none",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_mode_parse() {
+        assert_eq!(CombineMode::parse("eager"), Some(CombineMode::Eager));
+        assert_eq!(CombineMode::parse("none"), Some(CombineMode::None));
+        assert_eq!(CombineMode::parse("lazy"), None);
+    }
+}

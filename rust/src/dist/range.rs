@@ -1,0 +1,155 @@
+//! `DistRange` — the paper's distributed index space.
+//!
+//! A `DistRange` describes the iteration space `start..end` (with an
+//! optional non-unit step). [`DistRange::node_block`] splits it into one
+//! contiguous block per node — the MPI decomposition — and
+//! [`DistRange::mapreduce`] runs the paper's whole pipeline on one node:
+//! OpenMP-style threads map this node's block, emissions combine into a
+//! [`DistHashMap`], and one all-to-all shuffle re-shards by key owner.
+
+use crate::cluster::Comm;
+use crate::concurrent::{MapKey, MapValue};
+use crate::util::pool::{self, Schedule};
+use crate::util::ser::{Decode, Encode};
+
+use super::DistHashMap;
+
+/// A `[start, end)` index space with a step, partitionable across nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DistRange {
+    start: i64,
+    end: i64,
+    step: i64,
+}
+
+impl DistRange {
+    /// Unit-step range over `[start, end)`.
+    pub fn new(start: i64, end: i64) -> DistRange {
+        DistRange::with_step(start, end, 1)
+    }
+
+    /// Range with an explicit step. A positive step iterates `start`,
+    /// `start+step`, ... while `< end`; a negative step iterates downward
+    /// while `> end`.
+    pub fn with_step(start: i64, end: i64, step: i64) -> DistRange {
+        assert!(step != 0, "DistRange step must be non-zero");
+        DistRange { start, end, step }
+    }
+
+    /// Number of iterations in the range.
+    pub fn len(&self) -> usize {
+        if self.step > 0 {
+            if self.end <= self.start {
+                0
+            } else {
+                ((self.end - self.start + self.step - 1) / self.step) as usize
+            }
+        } else {
+            let step = -self.step;
+            if self.start <= self.end {
+                0
+            } else {
+                ((self.start - self.end + step - 1) / step) as usize
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th iteration value.
+    pub fn at(&self, i: usize) -> i64 {
+        self.start + (i as i64) * self.step
+    }
+
+    /// This node's contiguous block of iteration indices, as `[lo, hi)`
+    /// over `0..len()`. Blocks partition the space exactly: block `r`
+    /// starts where block `r-1` ends, the remainder is spread over the
+    /// first `len % nnodes` nodes.
+    pub fn node_block(&self, rank: usize, nnodes: usize) -> (usize, usize) {
+        assert!(nnodes > 0 && rank < nnodes);
+        let n = self.len();
+        let base = n / nnodes;
+        let rem = n % nnodes;
+        let lo = rank * base + rank.min(rem);
+        let hi = lo + base + usize::from(rank < rem);
+        (lo, hi)
+    }
+
+    /// The paper's high-level operation, executed on one node of the
+    /// cluster: map this node's block with `nthreads` workers, emitting
+    /// `(K, V)` pairs into `target` (combined continuously per
+    /// [`super::CombineMode`]), then shuffle so every key lives on its
+    /// owner node. Call from every rank; collect results with
+    /// [`DistHashMap::to_vec_local`].
+    pub fn mapreduce<K, V, R, F>(
+        &self,
+        comm: &Comm,
+        nthreads: usize,
+        target: &DistHashMap<K, V>,
+        reduce: R,
+        mapper: F,
+    ) where
+        K: MapKey + Encode + Decode,
+        V: MapValue + Encode + Decode,
+        R: Fn(&mut V, V) + Sync,
+        F: Fn(i64, &mut dyn FnMut(K, V)) + Sync,
+    {
+        let (lo, hi) = self.node_block(comm.rank, comm.nnodes());
+        pool::parallel_for_range(nthreads, lo, hi, Schedule::Dynamic { chunk: 64 }, |ctx, i| {
+            mapper(self.at(i), &mut |k, v| target.upsert(ctx.worker, k, v, &reduce));
+        });
+        target.shuffle(comm, reduce);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_range_basics() {
+        let r = DistRange::new(0, 10);
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.at(0), 0);
+        assert_eq!(r.at(9), 9);
+    }
+
+    #[test]
+    fn empty_ranges() {
+        assert_eq!(DistRange::new(5, 5).len(), 0);
+        assert_eq!(DistRange::new(7, 3).len(), 0);
+        assert!(DistRange::new(7, 3).is_empty());
+    }
+
+    #[test]
+    fn stepped_ranges() {
+        let r = DistRange::with_step(0, 10, 3); // 0 3 6 9
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.at(3), 9);
+        let r = DistRange::with_step(10, 0, -3); // 10 7 4 1
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.at(3), 1);
+        let r = DistRange::with_step(-5, 5, 2); // -5 -3 -1 1 3
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.at(4), 3);
+    }
+
+    #[test]
+    fn node_blocks_partition_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            let r = DistRange::new(0, n as i64);
+            for nnodes in [1usize, 2, 3, 8] {
+                let mut prev = 0usize;
+                for rank in 0..nnodes {
+                    let (lo, hi) = r.node_block(rank, nnodes);
+                    assert_eq!(lo, prev, "n={n} nnodes={nnodes} rank={rank}");
+                    assert!(hi >= lo);
+                    prev = hi;
+                }
+                assert_eq!(prev, r.len(), "n={n} nnodes={nnodes}");
+            }
+        }
+    }
+}

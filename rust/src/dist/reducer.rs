@@ -1,0 +1,68 @@
+//! Stock reducers (the paper's `Reducer<T>::sum` family).
+//!
+//! A reducer folds one incoming value into an accumulator in place. Every
+//! reducer used through the stack must be **associative and commutative**:
+//! the engines fold in whatever order threads, caches, and shuffles happen
+//! to deliver values, and the eventual-consistency contract of
+//! [`crate::concurrent::ConcurrentHashMap`] depends on order independence.
+
+/// `acc += v` — the word-count reducer.
+#[inline]
+pub fn sum<T: std::ops::AddAssign>(acc: &mut T, v: T) {
+    *acc += v;
+}
+
+/// Keep the maximum.
+#[inline]
+pub fn max<T: Ord>(acc: &mut T, v: T) {
+    if v > *acc {
+        *acc = v;
+    }
+}
+
+/// Keep the minimum.
+#[inline]
+pub fn min<T: Ord>(acc: &mut T, v: T) {
+    if v < *acc {
+        *acc = v;
+    }
+}
+
+/// Concatenate lists (associative; commutative up to element order, so
+/// callers that need determinism sort at finalize time — see
+/// `workloads::InvertedIndex`).
+#[inline]
+pub fn concat<T>(acc: &mut Vec<T>, mut more: Vec<T>) {
+    acc.append(&mut more);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_accumulates() {
+        let mut a = 3u64;
+        sum(&mut a, 4);
+        assert_eq!(a, 7);
+    }
+
+    #[test]
+    fn max_min_keep_extremes() {
+        let mut a = 5i64;
+        max(&mut a, 9);
+        max(&mut a, 2);
+        assert_eq!(a, 9);
+        let mut b = 5i64;
+        min(&mut b, 9);
+        min(&mut b, 2);
+        assert_eq!(b, 2);
+    }
+
+    #[test]
+    fn concat_appends() {
+        let mut a = vec![1u32, 2];
+        concat(&mut a, vec![3, 4]);
+        assert_eq!(a, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,30 +1,37 @@
-//! The Blaze engine — the paper's MPI/OpenMP MapReduce, natively in Rust.
+//! The Blaze engine — the paper's MPI/OpenMP design (native, no fault
+//! tolerance, continuous map-side combine in a distributed hash map) —
+//! generalized to arbitrary [`Workload`]s.
 //!
-//! Word count is exactly the paper's pipeline: a [`DistRange`] over line
-//! indices is mapped across nodes × threads; the mapper tokenizes its line
-//! and emits `(word, 1)` into a [`DistHashMap`], which combines
-//! continuously (map-side local reduce); one all-to-all shuffle then makes
-//! the map globally consistent. No fault tolerance: a node failure aborts
-//! the job and the driver reruns it from scratch (the paper's §Conclusion
-//! regime, bounded by `max_job_reruns`).
+//! The pipeline is exactly the paper's: a [`DistRange`] over record indices
+//! is split into per-node blocks and mapped across nodes × threads; every
+//! emission combines continuously into a [`DistHashMap`]; one all-to-all
+//! shuffle then re-shards by key owner. No fault tolerance: an injected
+//! node failure aborts the attempt and the driver reruns the whole job
+//! (the paper's §Conclusion regime, bounded by `max_job_reruns`).
 //!
-//! Two insert paths reproduce the paper's two bars:
-//! * [`KeyPath::AllocPerToken`] ("Blaze"): every token materializes an
-//!   owned `String` before the map insert — what the C++
-//!   `std::getline(ss, word)` loop does.
-//! * [`KeyPath::ZeroAlloc`] ("Blaze TCM" analog): tokens are borrowed
-//!   `&str`s; the owned key is built only on first insertion. This stands
-//!   in for TCMalloc's cheap small allocations (see DESIGN.md §2).
+//! Word count is just [`crate::workloads::WordCount`] through this
+//! machinery; the two [`KeyPath`]s reproduce the paper's two bars:
+//!
+//! * [`KeyPath::AllocPerToken`] ("Blaze"): every emission materializes an
+//!   owned key — what the C++ `std::getline(ss, word)` loop does. This is
+//!   [`run_workload`], the path any workload can take.
+//! * [`KeyPath::ZeroAlloc`] ("Blaze TCM" analog): string keys stay borrowed
+//!   `&str`s; the owned key is built only on first insertion. This is
+//!   [`run_workload_str`], available to [`StrWorkload`]s, and stands in
+//!   for TCMalloc's cheap small allocations (see DESIGN.md §2).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::cluster::{spawn_on_fabric, Comm, Fabric, FailurePlan, NetModel};
+use crate::concurrent::{CachePolicy, MapKey, MapValue};
 use crate::corpus::{Corpus, Tokenizer};
-use crate::concurrent::CachePolicy;
 use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
 use crate::hash::HashKind;
+use crate::mapreduce::{StrWorkload, Workload};
 use crate::util::pool::{self, Schedule};
+use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
 
 /// Key-insert strategy (the paper's Blaze vs Blaze-TCM bars).
@@ -113,6 +120,20 @@ impl BlazeReport {
     }
 }
 
+/// Outcome of one generic workload run: per-node finalized shards
+/// (disjoint key sets), concatenated, plus the phase timings.
+#[derive(Debug)]
+pub struct WorkloadReport<K, V> {
+    pub entries: Vec<(K, V)>,
+    pub wall_secs: f64,
+    pub map_secs: f64,
+    pub shuffle_secs: f64,
+    pub shuffle_bytes: u64,
+    /// Map-phase emissions.
+    pub records: u64,
+    pub reruns: usize,
+}
+
 /// Error when injected failures exceed the rerun budget.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JobFailed {
@@ -127,23 +148,146 @@ impl std::fmt::Display for JobFailed {
 
 impl std::error::Error for JobFailed {}
 
+/// Run a generic [`Workload`] (owned-key emissions, the
+/// [`KeyPath::AllocPerToken`] path).
+pub fn run_workload<W: Workload>(
+    conf: &BlazeConf,
+    corpus: &Corpus,
+    failures: &FailurePlan,
+    w: &W,
+) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
+    let lines = Arc::new(corpus.lines.clone());
+    run_attempts(
+        conf,
+        failures,
+        W::combine,
+        |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
+            map_node_block(conf, &lines, comm.rank, |ctx, i, line| {
+                let mut n = 0u64;
+                w.map(i as u64, line, &mut |k, v| {
+                    n += 1;
+                    map.upsert(ctx.worker, k, v, W::combine);
+                });
+                n
+            })
+        },
+        |shard| w.finalize_local(shard),
+    )
+}
+
+/// Run a string-keyed [`StrWorkload`] through the zero-alloc borrowed-key
+/// insert path (the [`KeyPath::ZeroAlloc`] / "TCM" path).
+pub fn run_workload_str<W: StrWorkload>(
+    conf: &BlazeConf,
+    corpus: &Corpus,
+    failures: &FailurePlan,
+    w: &W,
+) -> Result<WorkloadReport<String, W::Value>, JobFailed> {
+    let lines = Arc::new(corpus.lines.clone());
+    run_attempts(
+        conf,
+        failures,
+        W::combine,
+        |comm: &Comm, map: &DistHashMap<String, W::Value>| {
+            map_node_block(conf, &lines, comm.rank, |ctx, i, line| {
+                let mut n = 0u64;
+                w.map_str(i as u64, line, &mut |t, v| {
+                    n += 1;
+                    map.upsert_str(ctx.worker, t, v, W::combine);
+                });
+                n
+            })
+        },
+        |shard| w.finalize_local(shard),
+    )
+}
+
 /// Run word count on the Blaze engine.
 pub fn word_count(conf: &BlazeConf, corpus: &Corpus) -> Result<BlazeReport, JobFailed> {
     word_count_with_failures(conf, corpus, &FailurePlan::none())
 }
 
-/// Word count with failure injection: an injected node failure aborts the
-/// whole job (Blaze has no fault tolerance) and the driver reruns it.
+/// Word count with failure injection — a thin facade over the generic
+/// runners; `conf.key_path` picks the insert path (the paper's two bars).
 pub fn word_count_with_failures(
     conf: &BlazeConf,
     corpus: &Corpus,
     failures: &FailurePlan,
 ) -> Result<BlazeReport, JobFailed> {
-    let lines = Arc::new(corpus.lines.clone());
+    let w = crate::workloads::WordCount::new(conf.tokenizer);
+    let r = match conf.key_path {
+        KeyPath::ZeroAlloc => run_workload_str(conf, corpus, failures, &w)?,
+        KeyPath::AllocPerToken => run_workload(conf, corpus, failures, &w)?,
+    };
+    Ok(BlazeReport {
+        counts: r.entries.into_iter().collect(),
+        wall_secs: r.wall_secs,
+        map_secs: r.map_secs,
+        shuffle_secs: r.shuffle_secs,
+        shuffle_bytes: r.shuffle_bytes,
+        words: r.records,
+        reruns: r.reruns,
+    })
+}
+
+/// Map this node's block of the record range: `per_record(ctx, i, line)`
+/// for every owned index, across `threads_per_node` OpenMP-style workers.
+/// Returns the total emission count reported by `per_record`.
+fn map_node_block<F>(
+    conf: &BlazeConf,
+    lines: &Arc<Vec<String>>,
+    rank: usize,
+    per_record: F,
+) -> u64
+where
+    F: Fn(pool::WorkerCtx, usize, &str) -> u64 + Sync,
+{
+    let range = DistRange::new(0, lines.len() as i64);
+    let (lo, hi) = range.node_block(rank, conf.nnodes);
+    let records = AtomicU64::new(0);
+    pool::parallel_for_range(
+        conf.threads_per_node,
+        lo,
+        hi,
+        Schedule::Dynamic { chunk: 64 },
+        |ctx, i| {
+            let n = per_record(ctx, i, &lines[i]);
+            records.fetch_add(n, Ordering::Relaxed);
+        },
+    );
+    records.load(Ordering::Relaxed)
+}
+
+/// Per-node result of one attempt.
+struct NodeOutcome<K, V> {
+    entries: Vec<(K, V)>,
+    map_secs: f64,
+    shuffle_secs: f64,
+    wall_secs: f64,
+    records: u64,
+    failed: bool,
+}
+
+/// The engine core, shared by every workload: the whole-job rerun loop
+/// around single attempts of map → shuffle → per-node finalize.
+fn run_attempts<K, V, R, M, F>(
+    conf: &BlazeConf,
+    failures: &FailurePlan,
+    reduce: R,
+    map_node: M,
+    finalize_shard: F,
+) -> Result<WorkloadReport<K, V>, JobFailed>
+where
+    K: MapKey + Encode + Decode,
+    V: MapValue + Encode + Decode,
+    R: Fn(&mut V, V) + Sync + Copy,
+    M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
+    F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
+{
     let mut reruns = 0usize;
     let job_sw = Stopwatch::start(); // total across attempts: failures cost time
     loop {
-        match try_word_count(conf, &lines, failures) {
+        match try_attempt(conf, failures, reduce, &map_node, &finalize_shard) {
             Ok(mut report) => {
                 report.reruns = reruns;
                 report.wall_secs = job_sw.elapsed_secs();
@@ -155,25 +299,26 @@ pub fn word_count_with_failures(
     }
 }
 
-/// Per-node result of one attempt.
-struct NodeOutcome {
-    counts: Vec<(String, u64)>,
-    map_secs: f64,
-    shuffle_secs: f64,
-    wall_secs: f64,
-    words: u64,
-    failed: bool,
-}
-
-fn try_word_count(
+/// One attempt. An injected node failure fails the whole attempt — Blaze
+/// has no fault tolerance — but the failed node still participates in the
+/// shuffle protocol with empty payloads so peers don't deadlock.
+fn try_attempt<K, V, R, M, F>(
     conf: &BlazeConf,
-    lines: &Arc<Vec<String>>,
     failures: &FailurePlan,
-) -> Result<BlazeReport, ()> {
+    reduce: R,
+    map_node: &M,
+    finalize_shard: &F,
+) -> Result<WorkloadReport<K, V>, ()>
+where
+    K: MapKey + Encode + Decode,
+    V: MapValue + Encode + Decode,
+    R: Fn(&mut V, V) + Sync + Copy,
+    M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
+    F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
+{
     let fabric = Fabric::new(conf.nnodes, conf.net);
-    let range = DistRange::new(0, lines.len() as i64);
-    let run_node = |comm: &Comm| -> NodeOutcome {
-        let map: DistHashMap<String, u64> = DistHashMap::with_policy(
+    let run_node = |comm: &Comm| -> NodeOutcome<K, V> {
+        let map: DistHashMap<K, V> = DistHashMap::with_policy(
             comm.rank,
             conf.nnodes,
             conf.threads_per_node,
@@ -187,27 +332,21 @@ fn try_word_count(
         // ---- Map phase (the paper's DistRange::map) ----
         let mut sw = Stopwatch::start();
         let mut failed = failures.should_fail_node(comm.rank, 0);
-        let words = if failed {
-            0
-        } else {
-            count_node_block(conf, lines, &range, comm.rank, &map)
-        };
+        let records = if failed { 0 } else { map_node(comm, &map) };
         let map_secs = sw.restart().as_secs_f64();
 
-        // A failed node still participates in the shuffle protocol with
-        // empty payloads so peers don't deadlock; the driver discards the
-        // attempt.
+        // ---- Shuffle phase ----
         failed |= failures.should_fail_node(comm.rank, 1);
-        map.shuffle(comm, reducer::sum);
+        map.shuffle(comm, reduce);
         let shuffle_secs = sw.elapsed_secs();
         let wall_secs = job_sw.elapsed_secs();
 
         NodeOutcome {
-            counts: map.to_vec_local(),
+            entries: finalize_shard(map.to_vec_local()),
             map_secs,
             shuffle_secs,
             wall_secs,
-            words,
+            records,
             failed,
         }
     };
@@ -216,65 +355,26 @@ fn try_word_count(
     if outcomes.iter().any(|o| o.failed) {
         return Err(());
     }
-    let mut counts = HashMap::new();
-    let mut words = 0u64;
-    for o in &outcomes {
-        words += o.words;
-        for (k, v) in &o.counts {
-            // Keys are owner-sharded: no overlaps between nodes.
-            counts.insert(k.clone(), *v);
-        }
+    let mut entries = Vec::new();
+    let mut records = 0u64;
+    let (mut map_secs, mut shuffle_secs, mut wall_secs) = (0.0f64, 0.0f64, 0.0f64);
+    for o in outcomes {
+        records += o.records;
+        map_secs = map_secs.max(o.map_secs);
+        shuffle_secs = shuffle_secs.max(o.shuffle_secs);
+        wall_secs = wall_secs.max(o.wall_secs);
+        // Keys are owner-sharded: no overlaps between nodes.
+        entries.extend(o.entries);
     }
-    Ok(BlazeReport {
-        counts,
-        wall_secs: outcomes.iter().map(|o| o.wall_secs).fold(0.0, f64::max),
-        map_secs: outcomes.iter().map(|o| o.map_secs).fold(0.0, f64::max),
-        shuffle_secs: outcomes.iter().map(|o| o.shuffle_secs).fold(0.0, f64::max),
+    Ok(WorkloadReport {
+        entries,
+        wall_secs,
+        map_secs,
+        shuffle_secs,
         shuffle_bytes: fabric.total_bytes_sent(),
-        words,
+        records,
         reruns: 0,
     })
-}
-
-/// The map phase on one node: tokenize this node's block of lines into the
-/// distributed map. Returns the number of words processed.
-fn count_node_block(
-    conf: &BlazeConf,
-    lines: &Arc<Vec<String>>,
-    range: &DistRange,
-    rank: usize,
-    map: &DistHashMap<String, u64>,
-) -> u64 {
-    let (lo, hi) = range.node_block(rank, conf.nnodes);
-    let words = std::sync::atomic::AtomicU64::new(0);
-    let tokenizer = conf.tokenizer;
-    let key_path = conf.key_path;
-    pool::parallel_for_range(
-        conf.threads_per_node,
-        lo,
-        hi,
-        Schedule::Dynamic { chunk: 64 },
-        |ctx, i| {
-            let line = &lines[i];
-            let mut n = 0u64;
-            match key_path {
-                KeyPath::ZeroAlloc => {
-                    tokenizer.for_each_token(line, |w| {
-                        n += 1;
-                        map.upsert_str(ctx.worker, w, 1, reducer::sum);
-                    });
-                }
-                KeyPath::AllocPerToken => {
-                    tokenizer.for_each_token(line, |w| {
-                        n += 1;
-                        map.upsert(ctx.worker, w.to_string(), 1, reducer::sum);
-                    });
-                }
-            }
-            words.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
-        },
-    );
-    words.load(std::sync::atomic::Ordering::Relaxed)
 }
 
 /// The paper's verbatim high-level interface, for the quickstart example:
@@ -399,5 +499,17 @@ mod tests {
         let report = word_count(&conf, &corpus).unwrap();
         assert_eq!(report.counts.get("the"), Some(&2));
         assert_eq!(report.counts.get("cat"), Some(&2));
+    }
+
+    #[test]
+    fn generic_runner_runs_non_string_keys() {
+        use crate::workloads::LengthHistogram;
+        let corpus = Corpus::from_text("aa bbb aa\ncccc a\n");
+        let conf = BlazeConf::for_tests(2, 2);
+        let w = LengthHistogram::new(Tokenizer::Spaces);
+        let r = run_workload(&conf, &corpus, &FailurePlan::none(), &w).unwrap();
+        let mut hist: Vec<(u32, u64)> = r.entries;
+        hist.sort_unstable();
+        assert_eq!(hist, vec![(1, 1), (2, 2), (3, 1), (4, 1)]);
     }
 }

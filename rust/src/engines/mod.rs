@@ -5,16 +5,26 @@
 //! * [`spark`] — the Spark 2.4 baseline, simulated mechanism-by-mechanism
 //!   (RDD lineage, stages at shuffle boundaries, serialized + persisted
 //!   shuffle blocks, per-task dispatch overhead).
+//!
+//! Both execute arbitrary [`crate::mapreduce::Workload`]s; the shared
+//! driver surface is [`crate::mapreduce::JobSpec`].
 
 pub mod blaze;
 pub mod spark;
 
-/// Which engine a CLI/bench invocation targets.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which engine a job targets — the paper's figure bars plus the stripped
+/// Spark ablation floor. This is the single engine enum for the whole
+/// stack; `wordcount::EngineChoice` re-exports it under its legacy name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Engine {
+    /// Paper's engine, per-token key allocation (the "Blaze" bar).
     Blaze,
+    /// Paper's engine, zero-alloc insert path (the "Blaze TCM" bar).
     BlazeTcm,
+    /// Spark-style baseline with faithful overheads.
     Spark,
+    /// Spark with all modeled overheads stripped (ablation floor).
+    SparkStripped,
 }
 
 impl Engine {
@@ -23,6 +33,7 @@ impl Engine {
             "blaze" => Some(Engine::Blaze),
             "blaze-tcm" | "tcm" => Some(Engine::BlazeTcm),
             "spark" => Some(Engine::Spark),
+            "spark-stripped" => Some(Engine::SparkStripped),
             _ => None,
         }
     }
@@ -32,6 +43,7 @@ impl Engine {
             Engine::Blaze => "Blaze",
             Engine::BlazeTcm => "Blaze TCM",
             Engine::Spark => "Spark",
+            Engine::SparkStripped => "Spark (stripped)",
         }
     }
 }
@@ -45,6 +57,16 @@ mod tests {
         assert_eq!(Engine::parse("blaze"), Some(Engine::Blaze));
         assert_eq!(Engine::parse("tcm"), Some(Engine::BlazeTcm));
         assert_eq!(Engine::parse("spark"), Some(Engine::Spark));
+        assert_eq!(Engine::parse("spark-stripped"), Some(Engine::SparkStripped));
         assert_eq!(Engine::parse("flink"), None);
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let all = [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped];
+        let mut labels: Vec<&str> = all.iter().map(|e| e.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), all.len());
     }
 }

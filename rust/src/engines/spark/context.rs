@@ -98,11 +98,7 @@ impl SparkContext {
         assert!(partitions > 0);
         let data = Arc::new(data);
         let compute: ComputeFn<T> = Arc::new(move |_tc, p| {
-            let n = data.len();
-            let base = n / partitions;
-            let rem = n % partitions;
-            let lo = p * base + p.min(rem);
-            let hi = lo + base + usize::from(p < rem);
+            let (lo, hi) = partition_bounds(data.len(), partitions, p);
             data[lo..hi].to_vec()
         });
         Rdd {
@@ -120,12 +116,30 @@ impl SparkContext {
     pub fn text_lines(&self, lines: Arc<Vec<String>>, partitions: usize) -> Rdd<String> {
         assert!(partitions > 0);
         let compute: ComputeFn<String> = Arc::new(move |_tc, p| {
-            let n = lines.len();
-            let base = n / partitions;
-            let rem = n % partitions;
-            let lo = p * base + p.min(rem);
-            let hi = lo + base + usize::from(p < rem);
+            let (lo, hi) = partition_bounds(lines.len(), partitions, p);
             lines[lo..hi].to_vec()
+        });
+        Rdd {
+            ctx: self.clone(),
+            num_partitions: partitions,
+            stage: 0,
+            compute,
+            upstream: Vec::new(),
+        }
+    }
+
+    /// Like [`text_lines`](Self::text_lines), but each item carries its
+    /// global line index. Generic workloads need record identity (e.g. the
+    /// inverted index keys postings by line id).
+    pub fn text_lines_indexed(
+        &self,
+        lines: Arc<Vec<String>>,
+        partitions: usize,
+    ) -> Rdd<(u64, String)> {
+        assert!(partitions > 0);
+        let compute: ComputeFn<(u64, String)> = Arc::new(move |_tc, p| {
+            let (lo, hi) = partition_bounds(lines.len(), partitions, p);
+            (lo..hi).map(|i| (i as u64, lines[i].clone())).collect()
         });
         Rdd {
             ctx: self.clone(),
@@ -242,6 +256,18 @@ impl SparkContext {
         }
         Ok(all)
     }
+}
+
+/// Element bounds `[lo, hi)` of partition `p` when `n` items split into
+/// `partitions` contiguous chunks, remainder spread over the first
+/// `n % partitions` partitions. Shared by every source RDD so indexed and
+/// unindexed sources partition identically.
+fn partition_bounds(n: usize, partitions: usize, p: usize) -> (usize, usize) {
+    let base = n / partitions;
+    let rem = n % partitions;
+    let lo = p * base + p.min(rem);
+    let hi = lo + base + usize::from(p < rem);
+    (lo, hi)
 }
 
 /// One task with Spark's attempt semantics.

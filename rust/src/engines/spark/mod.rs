@@ -1,14 +1,17 @@
 //! Spark-style baseline engine.
 //!
-//! A faithful-mechanism simulation of the Spark 2.4 word-count pipeline the
-//! paper benchmarks against (see `conf.rs` for which JVM/Spark costs are
-//! modeled and how the ablations toggle them):
+//! A faithful-mechanism simulation of the Spark 2.4 pipeline the paper
+//! benchmarks against (see `conf.rs` for which JVM/Spark costs are modeled
+//! and how the ablations toggle them), generalized over [`Workload`]s:
 //!
 //! ```scala
-//! textFile.flatMap(line => line.split(" "))
-//!         .map(word => (word, 1))
-//!         .reduceByKey(_ + _)
+//! textFile.flatMap(line => workload.map(line))   // narrow, fused
+//!         .reduceByKey(workload.combine)         // stage cut + shuffle
+//!         .mapPartitions(workload.finalizeLocal) // narrow, fused
 //! ```
+//!
+//! Word count is [`crate::workloads::WordCount`] through [`run_workload`]
+//! (or [`run_workload_jvm`] when `jvm_strings` models UTF-16 strings).
 
 pub mod block;
 pub mod conf;
@@ -24,10 +27,11 @@ pub use metrics::SparkMetrics;
 pub use rdd::{JobError, Rdd};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::corpus::{Corpus, Tokenizer};
-use crate::dist::reducer;
+use crate::mapreduce::{StrWorkload, Workload};
 
 /// The canonical word count on the Spark-sim engine. Returns the counts
 /// (merged across partitions) or the job error.
@@ -46,53 +50,79 @@ pub fn word_count_lines(
     lines: Arc<Vec<String>>,
     tokenizer: Tokenizer,
 ) -> Result<HashMap<String, u64>, JobError> {
-    if ctx.conf().jvm_strings {
-        return word_count_lines_jvm(ctx, lines, tokenizer);
-    }
-    let partitions = ctx.default_partitions();
-    let text = ctx.text_lines(lines, partitions);
-    // flatMap(line => line.split(' ')) — materializes owned words, exactly
-    // like the Scala example's String objects.
-    let words = text.flat_map(move |line: String| {
-        let mut out = Vec::new();
-        tokenizer.for_each_token(&line, |w| out.push(w.to_string()));
-        out
-    });
-    // map(word => (word, 1))
-    let pairs = words.map(|w| (w, 1u64));
-    // reduceByKey(_ + _)
-    pairs.reduce_by_key_collect(reducer::sum, partitions)
+    let w = Arc::new(crate::workloads::WordCount::new(tokenizer));
+    let (entries, _emitted) = if ctx.conf().jvm_strings {
+        run_workload_jvm(ctx, lines, &w)?
+    } else {
+        run_workload(ctx, lines, &w)?
+    };
+    Ok(entries.into_iter().collect())
 }
 
-/// The Java-8-faithful pipeline: every string is a UTF-16 [`JvmWord`], so
-/// the engine pays the JVM's decode/encode and memory-traffic costs at the
-/// same points a Spark executor does (textFile read, split, writeUTF /
-/// readUTF at the shuffle). See `jvm.rs`.
-fn word_count_lines_jvm(
+/// Run a generic [`Workload`]: indexed textFile → fused flatMap of the
+/// workload's `map` → `reduceByKey(combine)` (stage cut: shuffle write +
+/// fetch with all modeled costs) → per-partition `finalize_local` →
+/// collect. Returns the finalized entries (key sets disjoint across
+/// partitions) and the number of map-phase emissions observed.
+pub fn run_workload<W: Workload>(
     ctx: &SparkContext,
     lines: Arc<Vec<String>>,
-    tokenizer: Tokenizer,
-) -> Result<HashMap<String, u64>, JobError> {
+    w: &Arc<W>,
+) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
     let partitions = ctx.default_partitions();
-    let text = ctx.text_lines(lines, partitions);
-    let words = text.flat_map(move |line: String| {
-        // new String(bytes, UTF_8): the JVM materializes the line as UTF-16
-        // before split() runs.
-        let jline = JvmWord::from_str(&line);
-        let line16 = jline.to_string_lossy();
+    let text = ctx.text_lines_indexed(lines, partitions);
+    let emitted = Arc::new(AtomicU64::new(0));
+    let counter = Arc::clone(&emitted);
+    let wm = Arc::clone(w);
+    // flatMap(record => workload.map(record)) — materializes owned keys,
+    // exactly like the Scala example's String objects.
+    let pairs = text.flat_map(move |(doc, line): (u64, String)| {
         let mut out = Vec::new();
-        // split(" ") then each token is a fresh UTF-16 String.
-        tokenizer.for_each_token(&line16, |w| out.push(JvmWord::from_str(w)));
+        wm.map(doc, &line, &mut |k, v| out.push((k, v)));
+        counter.fetch_add(out.len() as u64, Ordering::Relaxed);
         out
     });
-    let pairs = words.map(|w| (w, 1u64));
-    let counts = pairs.reduce_by_key_collect(reducer::sum, partitions)?;
+    let wf = Arc::clone(w);
+    let entries = pairs
+        .reduce_by_key(W::combine, partitions)
+        .map_partitions(move |shard| wf.finalize_local(shard))
+        .collect()?;
+    Ok((entries, emitted.load(Ordering::Relaxed)))
+}
+
+/// The Java-8-faithful pipeline for string-keyed workloads: every pipeline
+/// string is a UTF-16 [`JvmWord`], so the engine pays the JVM's
+/// decode/encode and memory-traffic costs at the same points a Spark
+/// executor does (textFile read, split, writeUTF / readUTF at the
+/// shuffle). Keys convert back to platform strings at the driver, where
+/// `finalize_local` then runs once over the collected set (exact for
+/// filtering partial reduces — see the trait contract).
+pub fn run_workload_jvm<W: StrWorkload>(
+    ctx: &SparkContext,
+    lines: Arc<Vec<String>>,
+    w: &Arc<W>,
+) -> Result<(Vec<(String, W::Value)>, u64), JobError> {
+    let partitions = ctx.default_partitions();
+    let text = ctx.text_lines_indexed(lines, partitions);
+    let emitted = Arc::new(AtomicU64::new(0));
+    let counter = Arc::clone(&emitted);
+    let wm = Arc::clone(w);
+    let pairs = text.flat_map(move |(doc, line): (u64, String)| {
+        // new String(bytes, UTF_8): the JVM materializes the line as UTF-16
+        // before any tokenization runs.
+        let line16 = JvmWord::from_str(&line).to_string_lossy();
+        let mut out = Vec::new();
+        // Each emitted token is a fresh UTF-16 String.
+        wm.map_str(doc, &line16, &mut |t, v| out.push((JvmWord::from_str(t), v)));
+        counter.fetch_add(out.len() as u64, Ordering::Relaxed);
+        out
+    });
+    let collected = pairs.reduce_by_key(W::combine, partitions).collect()?;
     // Driver-side collect converts to platform strings once (outside the
     // engines' timed loops this is negligible; kept for API uniformity).
-    Ok(counts
-        .into_iter()
-        .map(|(k, v)| (k.to_string_lossy(), v))
-        .collect())
+    let entries: Vec<(String, W::Value)> =
+        collected.into_iter().map(|(k, v)| (k.to_string_lossy(), v)).collect();
+    Ok((w.finalize_local(entries), emitted.load(Ordering::Relaxed)))
 }
 
 #[cfg(test)]
@@ -279,6 +309,21 @@ mod tests {
         assert_eq!(counts, serial_counts(&corpus));
         // GC accounting saw the allocation stream.
         assert!(ctx.inner().gc.total_allocated() > corpus.bytes);
+    }
+
+    #[test]
+    fn generic_runner_runs_non_string_keys() {
+        use crate::workloads::LengthHistogram;
+        let corpus = Corpus::from_text("aa bbb aa\ncccc a\n");
+        let ctx = SparkContext::new(SparkConf::for_tests(2, 2));
+        let w = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+        let (entries, emitted) =
+            run_workload(&ctx, Arc::new(corpus.lines.clone()), &w).unwrap();
+        let mut hist = entries;
+        hist.sort_unstable();
+        assert_eq!(hist, vec![(1, 1), (2, 2), (3, 1), (4, 1)]);
+        // Dense per-record pre-combine: fewer emissions than tokens.
+        assert!(emitted <= 5);
     }
 
     #[test]

@@ -163,6 +163,24 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         }
     }
 
+    /// Narrow: whole-partition transform, fused into the current stage
+    /// (Spark's `mapPartitions`). The generic job layer uses this for
+    /// per-shard partial reduces (e.g. top-K candidate selection).
+    pub fn map_partitions<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(Vec<T>) -> Vec<U> + Send + Sync + 'static,
+    {
+        let parent = Arc::clone(&self.compute);
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute: Arc::new(move |tc, p| f(parent(tc, p))),
+            upstream: self.upstream.clone(),
+        }
+    }
+
     /// Narrow: keep elements satisfying `f`.
     pub fn filter<F>(&self, f: F) -> Rdd<T>
     where

@@ -8,6 +8,20 @@
 //! against a Spark-style baseline engine ([`engines::spark`]) on the classic
 //! word-count task ([`wordcount`]).
 //!
+//! ## The generic job layer
+//!
+//! The paper demonstrates its claim on one workload; this crate generalizes
+//! it. [`mapreduce`] defines a [`mapreduce::Workload`] trait (per-record
+//! map → `(K, V)` emissions, associative combine, optional per-shard
+//! partial reduce) plus a [`mapreduce::JobSpec`]/[`mapreduce::JobReport`]
+//! pair that both engines execute behind a shared
+//! [`mapreduce::JobEngine`] trait object. [`workloads`] ships four jobs on
+//! top of it — word count, inverted index, top-K words, and a token-length
+//! histogram — each runnable from the CLI (`blaze run --workload ...`) on
+//! every engine and verified against [`mapreduce::run_serial`].
+//! [`wordcount::WordCountJob`] remains the stable word-count facade, now a
+//! thin wrapper over the job layer.
+//!
 //! The compute hot-spot additionally has an XLA/PJRT-accelerated path: a
 //! Pallas token-histogram kernel AOT-lowered from JAX at build time and
 //! executed from Rust through [`runtime`].
@@ -22,7 +36,9 @@ pub mod corpus;
 pub mod dist;
 pub mod engines;
 pub mod hash;
+pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod util;
 pub mod wordcount;
+pub mod workloads;

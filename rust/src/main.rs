@@ -1,8 +1,9 @@
-//! `blaze` — CLI launcher for the word-count MapReduce reproduction.
+//! `blaze` — CLI launcher for the MapReduce reproduction.
 //!
 //! Subcommands:
 //!
-//! * `run`       — one word count on a chosen engine/cluster shape.
+//! * `run`       — one job (`--workload wordcount|index|top-k|length-hist`)
+//!   on a chosen engine/cluster shape.
 //! * `compare`   — the paper's experiment: all engines on one corpus,
 //!   printed as the words/sec bar chart.
 //! * `generate`  — synthesize a corpus to a file.
@@ -11,12 +12,16 @@
 //!
 //! `blaze <subcommand> --help` lists options.
 
+use std::sync::Arc;
+
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::dist::CombineMode;
+use blaze::mapreduce::{run_serial, JobSpec};
 use blaze::metrics::ascii_bar_chart;
 use blaze::util::cli::{Args, CliError, Command};
 use blaze::wordcount::{serial_reference, EngineChoice, WordCountJob};
+use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -106,15 +111,113 @@ fn job_from_args(engine: EngineChoice, args: &Args) -> Result<WordCountJob, Stri
 // ------------------------------------------------------------------ run ----
 
 fn cmd_run() -> Command {
-    let cmd = Command::new("run", "run one word count")
+    let cmd = Command::new("run", "run one MapReduce job")
         .opt("engine", Some("blaze-tcm"), "blaze|blaze-tcm|spark|spark-stripped")
+        .opt(
+            "workload",
+            Some("wordcount"),
+            "wordcount|index|top-k|length-hist",
+        )
         .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
-        .opt("top", Some("10"), "print the top-K words")
+        .opt("top", Some("10"), "print the top-K entries")
         .flag("verify", "check against the serial reference");
     corpus_opts(cluster_opts(cmd))
 }
 
 fn do_run(args: &Args) -> Result<(), String> {
+    match args.get_str("workload").as_str() {
+        "wordcount" | "wc" => do_run_wordcount(args),
+        other => do_run_workload(other, args),
+    }
+}
+
+/// Build the generic job spec from the shared cluster/engine options.
+fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
+    let engine = EngineChoice::parse(&args.get_str("engine")).ok_or("bad --engine")?;
+    let combine = CombineMode::parse(&args.get_str("combine"))
+        .ok_or_else(|| format!("bad --combine {}", args.get_str("combine")))?;
+    Ok(JobSpec::new(engine)
+        .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
+        .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
+        .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
+        .combine(combine))
+}
+
+/// The non-wordcount workloads, through the generic job layer.
+fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let corpus = load_corpus(args)?;
+    let tokenizer = Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?;
+    let k = args.get_usize("top").map_err(|e| e.to_string())?;
+    println!(
+        "corpus: {} lines, {} ({} words)",
+        corpus.num_lines(),
+        blaze::util::stats::fmt_bytes(corpus.bytes),
+        corpus.words
+    );
+    match name {
+        "index" | "inverted-index" => {
+            let w = Arc::new(InvertedIndex::new(tokenizer));
+            let r = spec.run_str(&w, &corpus).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            let mut terms: Vec<(&String, &Vec<u32>)> = r.output.iter().collect();
+            terms.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(b.0)));
+            println!("\n{} terms; {k} with the most postings:", r.output.len());
+            for (term, postings) in terms.into_iter().take(k) {
+                println!(
+                    "  {:>8} lines  {term}  (first: {:?})",
+                    postings.len(),
+                    &postings[..postings.len().min(5)]
+                );
+            }
+            verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
+        }
+        "top-k" | "topk" => {
+            let w = Arc::new(TopKWords::new(tokenizer, k));
+            let r = spec.run_str(&w, &corpus).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            println!("\ntop {k} words:");
+            for (word, count) in &r.output {
+                println!("  {count:>10}  {word}");
+            }
+            verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
+        }
+        "length-hist" | "lengths" | "histogram" => {
+            let w = Arc::new(LengthHistogram::new(tokenizer));
+            // Integer keys: no borrowed-string path to exploit.
+            let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            let total: u64 = r.output.iter().map(|(_, n)| n).sum();
+            println!("\ntoken length histogram:");
+            for (len, n) in &r.output {
+                let bar = "▪".repeat((n * 40 / total.max(1)) as usize);
+                println!("  {len:>3} chars: {n:>10} {bar}");
+            }
+            verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
+        }
+        other => Err(format!(
+            "unknown --workload {other} (wordcount|index|top-k|length-hist)"
+        )),
+    }
+}
+
+/// `expect` is a closure so the serial reference pass only runs when the
+/// user actually asked for verification.
+fn verify<T: PartialEq>(args: &Args, got: &T, expect: impl FnOnce() -> T) -> Result<(), String> {
+    if args.has_flag("verify") {
+        if *got == expect() {
+            println!("\nverify: OK (matches serial reference)");
+        } else {
+            return Err("verification FAILED".into());
+        }
+    }
+    Ok(())
+}
+
+fn do_run_wordcount(args: &Args) -> Result<(), String> {
     let engine = EngineChoice::parse(&args.get_str("engine")).ok_or("bad --engine")?;
     let corpus = load_corpus(args)?;
     let combine = match args.get_str("combine").as_str() {

@@ -1,0 +1,460 @@
+//! The workload-generic MapReduce job layer.
+//!
+//! The paper demonstrates its claim on exactly one workload; this module
+//! generalizes both engines to run *any* associative map/combine/shuffle/
+//! reduce job. The pieces:
+//!
+//! * [`Workload`] — what a job computes: a per-record `map` that emits
+//!   `(K, V)` pairs, an associative+commutative `combine`, an optional
+//!   per-shard partial reduce (`finalize_local`, e.g. top-K heap
+//!   selection), and a driver-side `finalize` into the output type.
+//! * [`StrWorkload`] — string-keyed workloads that can also emit borrowed
+//!   `&str` keys, unlocking the zero-alloc "TCM" insert path on Blaze and
+//!   the UTF-16 `JvmWord` modeling on the Spark sim.
+//! * [`JobSpec`] / [`JobReport`] — one engine-agnostic job description
+//!   (cluster shape, network, combine mode, failure plan) and one uniform
+//!   result (output + wall time + shuffle bytes + engine detail).
+//! * [`JobEngine`] — the shared engine abstraction both backends implement;
+//!   [`engine_for`]/[`engine_for_str`] hand back the right trait object for
+//!   an [`Engine`] choice.
+//! * [`run_serial`] — the single-threaded reference executor, the
+//!   correctness oracle for every engine × workload combination.
+//!
+//! Concrete workloads live in [`crate::workloads`]; `wordcount::WordCountJob`
+//! is a thin facade over this layer.
+//!
+//! # The `finalize_local` contract
+//!
+//! Engines apply `finalize_local` independently to each owned shard (a
+//! node's key shard on Blaze, a reduce partition on Spark, the whole entry
+//! set serially). It must therefore be a *filtering partial reduce*: for
+//! any partition of the reduced entries into disjoint shards,
+//! `finalize(concat(map(finalize_local, shards)))` must equal
+//! `finalize(all entries)`. Identity (the default) and bounded top-K
+//! selection both satisfy this; anything that mixes information across
+//! keys it then discards does not.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::{FailurePlan, NetModel};
+use crate::concurrent::{CachePolicy, MapKey, MapValue};
+use crate::corpus::{Corpus, Tokenizer};
+use crate::dist::CombineMode;
+use crate::engines::blaze::{BlazeConf, KeyPath};
+use crate::engines::spark::{HeapSize, SparkConf, SparkContext};
+use crate::engines::Engine;
+use crate::hash::HashKind;
+use crate::util::ser::{Decode, Encode};
+use crate::util::stats::{fmt_bytes, fmt_rate, Stopwatch};
+
+/// Keys a generic job can shuffle: routable (`MapKey`), wire-encodable,
+/// JVM-cost-modelable, hashable for Spark partitioning, and totally
+/// ordered so finalizers can be deterministic.
+pub trait JobKey:
+    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + std::fmt::Debug + 'static
+{
+}
+impl<T> JobKey for T where
+    T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + std::fmt::Debug + 'static
+{
+}
+
+/// Values a generic job can shuffle.
+pub trait JobValue: MapValue + Encode + Decode + HeapSize + std::fmt::Debug + 'static {}
+impl<T> JobValue for T where T: MapValue + Encode + Decode + HeapSize + std::fmt::Debug + 'static {}
+
+/// A MapReduce workload: how records become `(K, V)` emissions, how values
+/// combine, and how reduced entries become the final output.
+pub trait Workload: Send + Sync + 'static {
+    type Key: JobKey;
+    type Value: JobValue;
+    type Output;
+
+    /// Stable name (CLI `--workload` token, bench/report label).
+    fn name(&self) -> &'static str;
+
+    /// Map one record. `doc` is the record's global index (line number) —
+    /// identity for workloads like inverted indexing.
+    fn map(&self, doc: u64, record: &str, emit: &mut dyn FnMut(Self::Key, Self::Value));
+
+    /// Fold `v` into `acc`. Must be associative and commutative; engines
+    /// fold in thread, cache, and shuffle arrival order.
+    fn combine(acc: &mut Self::Value, v: Self::Value);
+
+    /// Optional per-shard partial reduce, applied by each engine to every
+    /// owned shard independently (see the module docs for the contract).
+    fn finalize_local(
+        &self,
+        shard: Vec<(Self::Key, Self::Value)>,
+    ) -> Vec<(Self::Key, Self::Value)> {
+        shard
+    }
+
+    /// Driver-side finalize over the concatenated shards.
+    fn finalize(&self, entries: Vec<(Self::Key, Self::Value)>) -> Self::Output;
+}
+
+/// String-keyed workloads that can emit keys as borrowed `&str` slices of
+/// the input record. Blaze uses this for the zero-alloc insert path (the
+/// paper's "TCM" bar); the Spark sim uses it to route tokens through
+/// UTF-16 [`crate::engines::spark::JvmWord`]s when `jvm_strings` is on.
+pub trait StrWorkload: Workload<Key = String> {
+    /// Must emit exactly what [`Workload::map`] emits, with keys borrowed.
+    fn map_str(&self, doc: u64, record: &str, emit: &mut dyn FnMut(&str, Self::Value));
+}
+
+/// Error surfaced by the generic layer (wraps either engine's failure).
+#[derive(Debug, Clone)]
+pub struct MapReduceError(pub String);
+
+impl std::fmt::Display for MapReduceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "mapreduce job failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for MapReduceError {}
+
+/// Everything needed to run one job on one engine, minus the workload.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub engine: Engine,
+    pub nnodes: usize,
+    pub threads_per_node: usize,
+    pub net: NetModel,
+    /// Blaze: map-side combining mode (A3 ablation).
+    pub combine: CombineMode,
+    /// Blaze: hash function.
+    pub hash: HashKind,
+    /// Blaze: thread-cache policy of the distributed map.
+    pub cache_policy: CachePolicy,
+    /// Spark: override individual cost knobs after the engine presets.
+    pub spark_overrides: Option<SparkConf>,
+    /// Failure injection plan (consumed by whichever engine runs).
+    pub failures: Arc<FailurePlan>,
+    /// Blaze: whole-job reruns allowed on an injected node failure.
+    pub max_job_reruns: usize,
+}
+
+impl JobSpec {
+    pub fn new(engine: Engine) -> Self {
+        Self {
+            engine,
+            nnodes: 1,
+            threads_per_node: 4,
+            net: NetModel::aws_like(),
+            combine: CombineMode::Eager,
+            hash: HashKind::Fx,
+            cache_policy: CachePolicy::default(),
+            spark_overrides: None,
+            failures: Arc::new(FailurePlan::none()),
+            max_job_reruns: 3,
+        }
+    }
+
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nnodes = n;
+        self
+    }
+
+    pub fn threads_per_node(mut self, t: usize) -> Self {
+        self.threads_per_node = t;
+        self
+    }
+
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn combine(mut self, c: CombineMode) -> Self {
+        self.combine = c;
+        self
+    }
+
+    pub fn cache_policy(mut self, p: CachePolicy) -> Self {
+        self.cache_policy = p;
+        self
+    }
+
+    pub fn spark_conf(mut self, conf: SparkConf) -> Self {
+        self.spark_overrides = Some(conf);
+        self
+    }
+
+    pub fn failures(mut self, plan: FailurePlan) -> Self {
+        self.failures = Arc::new(plan);
+        self
+    }
+
+    /// Run `w` on this spec's engine (owned-key emission path everywhere).
+    pub fn run<W: Workload>(
+        &self,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobReport<W::Output>, MapReduceError> {
+        let run = engine_for::<W>(self.engine).run(self, w, corpus)?;
+        Ok(self.finish(w, run))
+    }
+
+    /// Run a string-keyed workload with the engines' specialized string
+    /// paths: zero-alloc inserts on Blaze TCM, UTF-16 `JvmWord` modeling
+    /// on the faithful Spark sim.
+    pub fn run_str<W: StrWorkload>(
+        &self,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobReport<W::Output>, MapReduceError> {
+        let run = engine_for_str::<W>(self.engine).run(self, w, corpus)?;
+        Ok(self.finish(w, run))
+    }
+
+    fn finish<W: Workload>(
+        &self,
+        w: &Arc<W>,
+        run: JobRun<W::Key, W::Value>,
+    ) -> JobReport<W::Output> {
+        JobReport {
+            engine: self.engine,
+            workload: w.name(),
+            output: w.finalize(run.entries),
+            wall_secs: run.wall_secs,
+            records: run.records,
+            shuffle_bytes: run.shuffle_bytes,
+            detail: run.detail,
+        }
+    }
+
+    pub(crate) fn blaze_conf(&self, key_path: KeyPath) -> BlazeConf {
+        BlazeConf {
+            nnodes: self.nnodes,
+            threads_per_node: self.threads_per_node,
+            net: self.net,
+            combine: self.combine,
+            hash: self.hash,
+            // Unused by the generic runners: tokenization happens inside
+            // `Workload::map` (the facade's word-count path builds its
+            // workload from its own conf).
+            tokenizer: Tokenizer::Spaces,
+            key_path,
+            cache_policy: self.cache_policy,
+            max_job_reruns: self.max_job_reruns,
+        }
+    }
+
+    pub(crate) fn spark_context(&self) -> SparkContext {
+        let conf = self.spark_overrides.clone().unwrap_or_else(|| {
+            let mut c = if self.engine == Engine::SparkStripped {
+                SparkConf::stripped(self.nnodes, self.threads_per_node)
+            } else {
+                SparkConf::emr_like(self.nnodes, self.threads_per_node)
+            };
+            c.net = self.net;
+            c
+        });
+        SparkContext::with_failures_arc(conf, Arc::clone(&self.failures))
+    }
+}
+
+/// Raw engine outcome before the driver-side finalize: the concatenated
+/// per-shard (already `finalize_local`-ed) entries plus run metrics.
+#[derive(Debug)]
+pub struct JobRun<K, V> {
+    pub entries: Vec<(K, V)>,
+    pub wall_secs: f64,
+    /// Map-phase emissions observed (may exceed the steady-state count
+    /// when failure injection forces reruns/retries).
+    pub records: u64,
+    pub shuffle_bytes: u64,
+    pub detail: String,
+}
+
+/// Uniform result of one job on one engine.
+#[derive(Debug)]
+pub struct JobReport<O> {
+    pub engine: Engine,
+    pub workload: &'static str,
+    pub output: O,
+    pub wall_secs: f64,
+    /// Map-phase emissions.
+    pub records: u64,
+    pub shuffle_bytes: u64,
+    /// Engine-specific metric breakdown.
+    pub detail: String,
+}
+
+impl<O> JobReport<O> {
+    pub fn records_per_sec(&self) -> f64 {
+        self.records as f64 / self.wall_secs.max(1e-12)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {:<16} {:>12} emissions in {:>8.3}s = {:>14}   shuffle={}",
+            self.workload,
+            self.engine.label(),
+            self.records,
+            self.wall_secs,
+            fmt_rate(self.records_per_sec(), "recs"),
+            fmt_bytes(self.shuffle_bytes),
+        )
+    }
+}
+
+/// The shared engine abstraction: anything that can execute a [`Workload`]
+/// against a [`JobSpec`]. Both backends implement it; callers hold it as a
+/// trait object from [`engine_for`]/[`engine_for_str`].
+pub trait JobEngine<W: Workload>: Send + Sync {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobRun<W::Key, W::Value>, MapReduceError>;
+}
+
+/// Blaze backend (owned-key emissions).
+struct BlazeExec {
+    key_path: KeyPath,
+}
+
+impl<W: Workload> JobEngine<W> for BlazeExec {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
+        let conf = spec.blaze_conf(self.key_path);
+        let r = crate::engines::blaze::run_workload(&conf, corpus, &spec.failures, w.as_ref())
+            .map_err(|e| MapReduceError(e.to_string()))?;
+        Ok(blaze_job_run(r))
+    }
+}
+
+/// Blaze backend through the zero-alloc borrowed-key path.
+struct BlazeStrExec;
+
+impl<W: StrWorkload> JobEngine<W> for BlazeStrExec {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobRun<String, W::Value>, MapReduceError> {
+        let conf = spec.blaze_conf(KeyPath::ZeroAlloc);
+        let r = crate::engines::blaze::run_workload_str(&conf, corpus, &spec.failures, w.as_ref())
+            .map_err(|e| MapReduceError(e.to_string()))?;
+        Ok(blaze_job_run(r))
+    }
+}
+
+fn blaze_job_run<K, V>(r: crate::engines::blaze::WorkloadReport<K, V>) -> JobRun<K, V> {
+    JobRun {
+        entries: r.entries,
+        wall_secs: r.wall_secs,
+        records: r.records,
+        shuffle_bytes: r.shuffle_bytes,
+        detail: format!(
+            "map={:.3}s shuffle={:.3}s reruns={}",
+            r.map_secs, r.shuffle_secs, r.reruns
+        ),
+    }
+}
+
+/// Spark-sim backend (owned-key emissions; the UTF-16 string modeling only
+/// applies to string-keyed workloads, via [`SparkStrExec`]).
+struct SparkExec;
+
+impl<W: Workload> JobEngine<W> for SparkExec {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
+        let ctx = spec.spark_context();
+        let lines = Arc::new(corpus.lines.clone());
+        let sw = Stopwatch::start();
+        let (entries, records) = crate::engines::spark::run_workload(&ctx, lines, w)
+            .map_err(|e| MapReduceError(e.to_string()))?;
+        Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
+    }
+}
+
+/// Spark-sim backend honoring `jvm_strings` for string-keyed workloads.
+struct SparkStrExec;
+
+impl<W: StrWorkload> JobEngine<W> for SparkStrExec {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        w: &Arc<W>,
+        corpus: &Corpus,
+    ) -> Result<JobRun<String, W::Value>, MapReduceError> {
+        let ctx = spec.spark_context();
+        let lines = Arc::new(corpus.lines.clone());
+        let sw = Stopwatch::start();
+        let result = if ctx.conf().jvm_strings {
+            crate::engines::spark::run_workload_jvm(&ctx, lines, w)
+        } else {
+            crate::engines::spark::run_workload(&ctx, lines, w)
+        };
+        let (entries, records) = result.map_err(|e| MapReduceError(e.to_string()))?;
+        Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
+    }
+}
+
+fn spark_job_run<K, V>(
+    ctx: &SparkContext,
+    entries: Vec<(K, V)>,
+    records: u64,
+    wall_secs: f64,
+) -> JobRun<K, V> {
+    use std::sync::atomic::Ordering::Relaxed;
+    JobRun {
+        entries,
+        wall_secs,
+        records,
+        shuffle_bytes: ctx.metrics().shuffle_bytes_written.load(Relaxed),
+        detail: ctx.metrics().summary(),
+    }
+}
+
+/// The engine trait object for an [`Engine`] choice (owned-key path).
+/// `BlazeTcm` degrades to the alloc path here: without borrowed keys the
+/// two Blaze variants are indistinguishable.
+pub fn engine_for<W: Workload>(engine: Engine) -> Box<dyn JobEngine<W>> {
+    match engine {
+        Engine::Blaze => Box::new(BlazeExec { key_path: KeyPath::AllocPerToken }),
+        Engine::BlazeTcm => Box::new(BlazeExec { key_path: KeyPath::ZeroAlloc }),
+        Engine::Spark | Engine::SparkStripped => Box::new(SparkExec),
+    }
+}
+
+/// The engine trait object for string-keyed workloads: `BlazeTcm` gets the
+/// zero-alloc insert path, Spark gets the UTF-16 `JvmWord` pipeline when
+/// its conf asks for it.
+pub fn engine_for_str<W: StrWorkload>(engine: Engine) -> Box<dyn JobEngine<W>> {
+    match engine {
+        Engine::Blaze => Box::new(BlazeExec { key_path: KeyPath::AllocPerToken }),
+        Engine::BlazeTcm => Box::new(BlazeStrExec),
+        Engine::Spark | Engine::SparkStripped => Box::new(SparkStrExec),
+    }
+}
+
+/// Single-threaded reference executor — the correctness oracle for every
+/// engine × workload combination.
+pub fn run_serial<W: Workload>(w: &W, corpus: &Corpus) -> W::Output {
+    let mut acc: HashMap<W::Key, W::Value> = HashMap::new();
+    for (i, line) in corpus.lines.iter().enumerate() {
+        w.map(i as u64, line, &mut |k, v| match acc.entry(k) {
+            std::collections::hash_map::Entry::Occupied(mut e) => W::combine(e.get_mut(), v),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(v);
+            }
+        });
+    }
+    w.finalize(w.finalize_local(acc.into_iter().collect()))
+}

@@ -1,6 +1,12 @@
 //! The public word-count API: one job description dispatched to either
 //! engine, one result type, and the serial reference used for verification.
 //!
+//! Since the generic job layer landed, this module is a thin facade:
+//! [`WordCountJob`] builds a [`crate::mapreduce::JobSpec`], runs
+//! [`crate::workloads::WordCount`] through it, and repackages the
+//! [`crate::mapreduce::JobReport`] as a [`WordCountResult`] — the public
+//! API and results are unchanged.
+//!
 //! ```no_run
 //! use blaze::wordcount::{WordCountJob, EngineChoice};
 //! use blaze::corpus::{Corpus, CorpusSpec};
@@ -16,49 +22,21 @@
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cluster::{FailurePlan, NetModel};
 use crate::concurrent::CachePolicy;
 use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::CombineMode;
-use crate::engines::blaze::{BlazeConf, KeyPath};
-use crate::engines::spark::{SparkConf, SparkContext};
+use crate::engines::spark::SparkConf;
 use crate::hash::HashKind;
-use crate::util::stats::{fmt_rate, Stopwatch};
+use crate::mapreduce::JobSpec;
+use crate::util::stats::fmt_rate;
+use crate::workloads::WordCount;
 
-/// Engine selection with the variants the paper's figure distinguishes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineChoice {
-    /// Paper's engine, per-token key allocation (the "Blaze" bar).
-    Blaze,
-    /// Paper's engine, zero-alloc insert path (the "Blaze TCM" bar).
-    BlazeTcm,
-    /// Spark-style baseline with faithful overheads.
-    Spark,
-    /// Spark with all modeled overheads stripped (ablation floor).
-    SparkStripped,
-}
-
-impl EngineChoice {
-    pub fn parse(s: &str) -> Option<EngineChoice> {
-        match s {
-            "blaze" => Some(EngineChoice::Blaze),
-            "blaze-tcm" | "tcm" => Some(EngineChoice::BlazeTcm),
-            "spark" => Some(EngineChoice::Spark),
-            "spark-stripped" => Some(EngineChoice::SparkStripped),
-            _ => None,
-        }
-    }
-
-    pub fn label(self) -> &'static str {
-        match self {
-            EngineChoice::Blaze => "Blaze",
-            EngineChoice::BlazeTcm => "Blaze TCM",
-            EngineChoice::Spark => "Spark",
-            EngineChoice::SparkStripped => "Spark (stripped)",
-        }
-    }
-}
+/// Engine selection — the unified [`crate::engines::Engine`] under its
+/// legacy word-count name.
+pub use crate::engines::Engine as EngineChoice;
 
 /// Everything needed to run one word count.
 #[derive(Clone, Debug)]
@@ -137,74 +115,38 @@ impl WordCountJob {
         self
     }
 
-    /// Execute on the chosen engine.
-    pub fn run(&self, corpus: &Corpus) -> Result<WordCountResult, WordCountError> {
-        match self.engine {
-            EngineChoice::Blaze | EngineChoice::BlazeTcm => {
-                let conf = BlazeConf {
-                    nnodes: self.nnodes,
-                    threads_per_node: self.threads_per_node,
-                    net: self.net,
-                    combine: self.combine,
-                    hash: self.hash,
-                    tokenizer: self.tokenizer,
-                    key_path: if self.engine == EngineChoice::BlazeTcm {
-                        KeyPath::ZeroAlloc
-                    } else {
-                        KeyPath::AllocPerToken
-                    },
-                    cache_policy: self.cache_policy,
-                    max_job_reruns: 3,
-                };
-                let report =
-                    crate::engines::blaze::word_count_with_failures(&conf, corpus, &self.failures)
-                        .map_err(|e| WordCountError(e.to_string()))?;
-                Ok(WordCountResult {
-                    engine: self.engine,
-                    counts: report.counts,
-                    wall_secs: report.wall_secs,
-                    words: report.words,
-                    shuffle_bytes: report.shuffle_bytes,
-                    detail: format!(
-                        "map={:.3}s shuffle={:.3}s reruns={}",
-                        report.map_secs, report.shuffle_secs, report.reruns
-                    ),
-                })
-            }
-            EngineChoice::Spark | EngineChoice::SparkStripped => {
-                let conf = self.spark_overrides.clone().unwrap_or_else(|| {
-                    let mut c = if self.engine == EngineChoice::SparkStripped {
-                        SparkConf::stripped(self.nnodes, self.threads_per_node)
-                    } else {
-                        SparkConf::emr_like(self.nnodes, self.threads_per_node)
-                    };
-                    c.net = self.net;
-                    c
-                });
-                // The plan is shared by Arc: injections are consumed in
-                // place via interior mutability.
-                let ctx = SparkContext::with_failures_arc(conf, std::sync::Arc::clone(&self.failures));
-                let sw = Stopwatch::start();
-                let counts =
-                    crate::engines::spark::word_count_lines(
-                        &ctx,
-                        std::sync::Arc::new(corpus.lines.clone()),
-                        self.tokenizer,
-                    )
-                    .map_err(|e| WordCountError(e.to_string()))?;
-                let wall_secs = sw.elapsed_secs();
-                let words: u64 = counts.values().sum();
-                use std::sync::atomic::Ordering::Relaxed;
-                Ok(WordCountResult {
-                    engine: self.engine,
-                    counts,
-                    wall_secs,
-                    words,
-                    shuffle_bytes: ctx.metrics().shuffle_bytes_written.load(Relaxed),
-                    detail: ctx.metrics().summary(),
-                })
-            }
+    /// The equivalent generic job description.
+    pub fn to_spec(&self) -> JobSpec {
+        JobSpec {
+            engine: self.engine,
+            nnodes: self.nnodes,
+            threads_per_node: self.threads_per_node,
+            net: self.net,
+            combine: self.combine,
+            hash: self.hash,
+            cache_policy: self.cache_policy,
+            spark_overrides: self.spark_overrides.clone(),
+            failures: Arc::clone(&self.failures),
+            max_job_reruns: 3,
         }
+    }
+
+    /// Execute on the chosen engine via the generic job layer.
+    pub fn run(&self, corpus: &Corpus) -> Result<WordCountResult, WordCountError> {
+        let workload = Arc::new(WordCount::new(self.tokenizer));
+        let report = self
+            .to_spec()
+            .run_str(&workload, corpus)
+            .map_err(|e| WordCountError(e.0))?;
+        let words: u64 = report.output.values().sum();
+        Ok(WordCountResult {
+            engine: self.engine,
+            counts: report.output,
+            wall_secs: report.wall_secs,
+            words,
+            shuffle_bytes: report.shuffle_bytes,
+            detail: report.detail,
+        })
     }
 }
 
@@ -335,6 +277,13 @@ mod tests {
             Some(EngineChoice::SparkStripped)
         );
         assert_eq!(EngineChoice::parse("hadoop"), None);
+    }
+
+    #[test]
+    fn engine_choice_is_the_unified_enum() {
+        // Satellite of the job-layer refactor: one enum, two names.
+        let e: crate::engines::Engine = EngineChoice::BlazeTcm;
+        assert_eq!(e.label(), "Blaze TCM");
     }
 
     #[test]

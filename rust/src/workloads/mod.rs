@@ -1,0 +1,342 @@
+//! Concrete [`Workload`]s for the generic job layer.
+//!
+//! Four workloads, chosen to exercise different corners of the pipeline:
+//!
+//! * [`WordCount`] — the paper's job: `(word, 1)` with a sum reducer. The
+//!   canonical string-keyed, alloc-sensitive case.
+//! * [`InvertedIndex`] — word → sorted line-id postings: a non-numeric
+//!   value type (`Vec<u32>`) with a concatenating reducer, so shuffle
+//!   volume scales with *occurrences*, not distinct keys.
+//! * [`TopKWords`] — word count with a bounded per-shard heap in
+//!   `finalize_local`, so each node ships at most `k` candidates: the
+//!   partial-reduce pattern.
+//! * [`LengthHistogram`] — token-length → count over a dense, tiny integer
+//!   key domain; the map pre-combines per record into a stack array, so
+//!   emissions ≪ tokens.
+//!
+//! Every workload is verified against [`run_serial`] on every engine in
+//! `tests/integration_workloads.rs`. To add a fifth workload: implement
+//! [`Workload`] (and [`StrWorkload`] if keys are borrowed `&str`s), wire a
+//! `--workload` arm in `main.rs`, and add it to the parity test grid.
+
+use std::collections::HashMap;
+
+use crate::corpus::Tokenizer;
+use crate::mapreduce::{StrWorkload, Workload};
+
+#[cfg(test)]
+use crate::mapreduce::run_serial;
+
+// ------------------------------------------------------------ wordcount ----
+
+/// The paper's workload: count word occurrences.
+#[derive(Clone, Copy, Debug)]
+pub struct WordCount {
+    pub tokenizer: Tokenizer,
+}
+
+impl WordCount {
+    pub fn new(tokenizer: Tokenizer) -> Self {
+        Self { tokenizer }
+    }
+}
+
+impl Workload for WordCount {
+    type Key = String;
+    type Value = u64;
+    type Output = HashMap<String, u64>;
+
+    fn name(&self) -> &'static str {
+        "wordcount"
+    }
+
+    fn map(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(String, u64)) {
+        self.tokenizer.for_each_token(record, |t| emit(t.to_string(), 1));
+    }
+
+    fn combine(acc: &mut u64, v: u64) {
+        *acc += v;
+    }
+
+    fn finalize(&self, entries: Vec<(String, u64)>) -> HashMap<String, u64> {
+        entries.into_iter().collect()
+    }
+}
+
+impl StrWorkload for WordCount {
+    fn map_str(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(&str, u64)) {
+        self.tokenizer.for_each_token(record, |t| emit(t, 1));
+    }
+}
+
+// ------------------------------------------------------- inverted index ----
+
+/// Word → sorted, deduplicated list of line ids containing it.
+#[derive(Clone, Copy, Debug)]
+pub struct InvertedIndex {
+    pub tokenizer: Tokenizer,
+}
+
+impl InvertedIndex {
+    pub fn new(tokenizer: Tokenizer) -> Self {
+        Self { tokenizer }
+    }
+}
+
+impl Workload for InvertedIndex {
+    type Key = String;
+    type Value = Vec<u32>;
+    type Output = HashMap<String, Vec<u32>>;
+
+    fn name(&self) -> &'static str {
+        "index"
+    }
+
+    fn map(&self, doc: u64, record: &str, emit: &mut dyn FnMut(String, Vec<u32>)) {
+        self.tokenizer.for_each_token(record, |t| emit(t.to_string(), vec![doc as u32]));
+    }
+
+    fn combine(acc: &mut Vec<u32>, mut v: Vec<u32>) {
+        acc.append(&mut v);
+    }
+
+    /// Postings arrive in shuffle order; sort + dedup makes the index
+    /// deterministic across engines and cluster shapes.
+    fn finalize(&self, entries: Vec<(String, Vec<u32>)>) -> HashMap<String, Vec<u32>> {
+        entries
+            .into_iter()
+            .map(|(k, mut postings)| {
+                postings.sort_unstable();
+                postings.dedup();
+                (k, postings)
+            })
+            .collect()
+    }
+}
+
+impl StrWorkload for InvertedIndex {
+    fn map_str(&self, doc: u64, record: &str, emit: &mut dyn FnMut(&str, Vec<u32>)) {
+        self.tokenizer.for_each_token(record, |t| emit(t, vec![doc as u32]));
+    }
+}
+
+// ---------------------------------------------------------- top-K words ----
+
+/// The `k` most frequent words (count desc, ties broken alphabetically).
+///
+/// The interesting part is `finalize_local`: each shard keeps only its own
+/// top `k` via a bounded min-heap, so a node ships `O(k)` candidates
+/// instead of its whole vocabulary shard. Because shards partition the key
+/// space, the union of per-shard top-`k` sets always contains the global
+/// top `k` — the partial reduce is exact.
+#[derive(Clone, Copy, Debug)]
+pub struct TopKWords {
+    pub tokenizer: Tokenizer,
+    pub k: usize,
+}
+
+impl TopKWords {
+    pub fn new(tokenizer: Tokenizer, k: usize) -> Self {
+        Self { tokenizer, k }
+    }
+}
+
+impl Workload for TopKWords {
+    type Key = String;
+    type Value = u64;
+    type Output = Vec<(String, u64)>;
+
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+
+    fn map(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(String, u64)) {
+        self.tokenizer.for_each_token(record, |t| emit(t.to_string(), 1));
+    }
+
+    fn combine(acc: &mut u64, v: u64) {
+        *acc += v;
+    }
+
+    fn finalize_local(&self, shard: Vec<(String, u64)>) -> Vec<(String, u64)> {
+        select_top_k(shard, self.k)
+    }
+
+    fn finalize(&self, entries: Vec<(String, u64)>) -> Vec<(String, u64)> {
+        select_top_k(entries, self.k)
+    }
+}
+
+impl StrWorkload for TopKWords {
+    fn map_str(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(&str, u64)) {
+        self.tokenizer.for_each_token(record, |t| emit(t, 1));
+    }
+}
+
+/// Keep the `k` best entries by (count desc, then word asc) with a bounded
+/// min-heap: the heap top is always the worst kept candidate. `O(n log k)`
+/// and `O(k)` memory — the per-node heap the shuffle saving comes from.
+fn select_top_k(entries: Vec<(String, u64)>, k: usize) -> Vec<(String, u64)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if k == 0 {
+        return Vec::new();
+    }
+    // Rank = (count, Reverse(word)): larger is better, so the Reverse
+    // wrapper turns BinaryHeap's max-heap into a min-heap over ranks.
+    let mut heap: BinaryHeap<Reverse<(u64, Reverse<String>)>> = BinaryHeap::with_capacity(k + 1);
+    for (word, count) in entries {
+        heap.push(Reverse((count, Reverse(word))));
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+    let mut out: Vec<(String, u64)> =
+        heap.into_iter().map(|Reverse((count, Reverse(word)))| (word, count)).collect();
+    out.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    out
+}
+
+// ------------------------------------------------------ length histogram ----
+
+/// Token-length (in chars) → token count.
+///
+/// The dense small-key case: lengths under [`DENSE_LENGTHS`] accumulate in
+/// a per-record stack array and are emitted once per distinct length, so
+/// the engines see a tiny key domain and far fewer emissions than tokens.
+#[derive(Clone, Copy, Debug)]
+pub struct LengthHistogram {
+    pub tokenizer: Tokenizer,
+}
+
+/// Dense fast-path width: tokens longer than this are emitted directly
+/// (natural-language tokens essentially never are).
+pub const DENSE_LENGTHS: usize = 33;
+
+impl LengthHistogram {
+    pub fn new(tokenizer: Tokenizer) -> Self {
+        Self { tokenizer }
+    }
+}
+
+impl Workload for LengthHistogram {
+    type Key = u32;
+    type Value = u64;
+    type Output = Vec<(u32, u64)>;
+
+    fn name(&self) -> &'static str {
+        "length-hist"
+    }
+
+    fn map(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(u32, u64)) {
+        let mut dense = [0u64; DENSE_LENGTHS];
+        self.tokenizer.for_each_token(record, |t| {
+            let len = t.chars().count();
+            if len < DENSE_LENGTHS {
+                dense[len] += 1;
+            } else {
+                emit(len as u32, 1);
+            }
+        });
+        for (len, &n) in dense.iter().enumerate() {
+            if n > 0 {
+                emit(len as u32, n);
+            }
+        }
+    }
+
+    fn combine(acc: &mut u64, v: u64) {
+        *acc += v;
+    }
+
+    /// Sorted by length, for stable display and comparison.
+    fn finalize(&self, mut entries: Vec<(u32, u64)>) -> Vec<(u32, u64)> {
+        entries.sort_unstable();
+        entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Corpus;
+
+    fn tiny() -> Corpus {
+        Corpus::from_text("the cat sat\nthe cat\nthe end here\n")
+    }
+
+    #[test]
+    fn wordcount_serial() {
+        let out = run_serial(&WordCount::new(Tokenizer::Spaces), &tiny());
+        assert_eq!(out.get("the"), Some(&3));
+        assert_eq!(out.get("cat"), Some(&2));
+        assert_eq!(out.get("here"), Some(&1));
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn inverted_index_serial() {
+        let out = run_serial(&InvertedIndex::new(Tokenizer::Spaces), &tiny());
+        assert_eq!(out["the"], vec![0, 1, 2]);
+        assert_eq!(out["cat"], vec![0, 1]);
+        assert_eq!(out["sat"], vec![0]);
+        assert_eq!(out["end"], vec![2]);
+    }
+
+    #[test]
+    fn index_dedups_repeats_within_line() {
+        let corpus = Corpus::from_text("a a b\nb a\n");
+        let out = run_serial(&InvertedIndex::new(Tokenizer::Spaces), &corpus);
+        assert_eq!(out["a"], vec![0, 1]);
+        assert_eq!(out["b"], vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_serial_ordering() {
+        let out = run_serial(&TopKWords::new(Tokenizer::Spaces, 2), &tiny());
+        assert_eq!(out, vec![("the".to_string(), 3), ("cat".to_string(), 2)]);
+    }
+
+    #[test]
+    fn top_k_tie_break_is_alphabetical() {
+        let corpus = Corpus::from_text("b a c\nb a c\n");
+        let out = run_serial(&TopKWords::new(Tokenizer::Spaces, 2), &corpus);
+        assert_eq!(out, vec![("a".to_string(), 2), ("b".to_string(), 2)]);
+    }
+
+    #[test]
+    fn select_top_k_bounds() {
+        assert!(select_top_k(vec![("x".into(), 1)], 0).is_empty());
+        let few = select_top_k(vec![("x".into(), 1), ("y".into(), 9)], 5);
+        assert_eq!(few, vec![("y".to_string(), 9), ("x".to_string(), 1)]);
+    }
+
+    #[test]
+    fn length_histogram_serial() {
+        let out = run_serial(&LengthHistogram::new(Tokenizer::Spaces), &tiny());
+        // tokens: the cat sat the cat the end here → 3×7 letters of len 3, 1 of len 4
+        assert_eq!(out, vec![(3, 7), (4, 1)]);
+    }
+
+    #[test]
+    fn length_histogram_handles_long_tokens() {
+        let long = "x".repeat(50);
+        let corpus = Corpus::from_text(&format!("{long} {long} ok\n"));
+        let out = run_serial(&LengthHistogram::new(Tokenizer::Spaces), &corpus);
+        assert_eq!(out, vec![(2, 1), (50, 2)]);
+    }
+
+    #[test]
+    fn str_and_owned_maps_agree() {
+        // map_str must emit exactly what map emits, for every StrWorkload.
+        let corpus = Corpus::from_text("the cat the\nhat\n");
+        let wc = WordCount::new(Tokenizer::Spaces);
+        let mut owned = Vec::new();
+        let mut borrowed = Vec::new();
+        for (i, line) in corpus.lines.iter().enumerate() {
+            wc.map(i as u64, line, &mut |k, v| owned.push((k, v)));
+            wc.map_str(i as u64, line, &mut |k, v| borrowed.push((k.to_string(), v)));
+        }
+        assert_eq!(owned, borrowed);
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-engine parity for the generic job layer: every workload on every
+//! engine must produce exactly the serial reference's output — including
+//! under injected failures (Spark recovers via lineage retries, Blaze via
+//! whole-job reruns).
+
+use std::sync::Arc;
+
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::Engine;
+use blaze::mapreduce::{run_serial, JobSpec};
+use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords, WordCount};
+
+const ENGINES: [Engine; 3] = [Engine::Blaze, Engine::BlazeTcm, Engine::Spark];
+
+fn corpus(bytes: u64, seed: u64) -> Corpus {
+    Corpus::generate(&CorpusSpec { target_bytes: bytes, seed, ..Default::default() })
+}
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine).nodes(2).threads_per_node(2).net(NetModel::ideal())
+}
+
+/// A failure plan exercising the engine's recovery path: a map-phase and a
+/// reduce/shuffle-phase injection.
+fn failure_plan(engine: Engine) -> FailurePlan {
+    match engine {
+        // Node failures abort the attempt; the driver reruns the job.
+        Engine::Blaze | Engine::BlazeTcm => FailurePlan::none().fail_node(0, 0).fail_node(1, 1),
+        // Task failures retry from lineage (FT on in the default conf).
+        Engine::Spark | Engine::SparkStripped => {
+            FailurePlan::none().fail_task(0, 1).fail_task(1, 0)
+        }
+    }
+}
+
+#[test]
+fn wordcount_parity() {
+    let corpus = corpus(128 << 10, 11);
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    assert!(!expect.is_empty());
+    for engine in ENGINES {
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn inverted_index_parity() {
+    let corpus = corpus(96 << 10, 12);
+    let w = Arc::new(InvertedIndex::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+    // Postings are sorted line ids.
+    assert!(expect.values().all(|p| p.windows(2).all(|ab| ab[0] < ab[1])));
+}
+
+#[test]
+fn top_k_parity() {
+    let corpus = corpus(128 << 10, 13);
+    let w = Arc::new(TopKWords::new(Tokenizer::Spaces, 15));
+    let expect = run_serial(w.as_ref(), &corpus);
+    assert_eq!(expect.len(), 15);
+    for engine in ENGINES {
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn length_histogram_parity() {
+    let corpus = corpus(96 << 10, 14);
+    let w = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    // Integer-keyed workload: only the owned-key path exists; also cover
+    // the stripped Spark floor here.
+    for engine in [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped] {
+        let r = spec(engine).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+    // Total histogram mass = total tokens.
+    let total: u64 = expect.iter().map(|(_, n)| n).sum();
+    assert_eq!(total, corpus.words);
+}
+
+#[test]
+fn parity_under_injected_failures() {
+    let corpus = corpus(64 << 10, 15);
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let idx = Arc::new(InvertedIndex::new(Tokenizer::Spaces));
+    let topk = Arc::new(TopKWords::new(Tokenizer::Spaces, 10));
+    let hist = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+    for engine in ENGINES {
+        // Fresh plan per run: injections are one-shot and consumed.
+        let r = spec(engine).failures(failure_plan(engine)).run_str(&wc, &corpus).unwrap();
+        assert_eq!(r.output, run_serial(wc.as_ref(), &corpus), "wc {}", engine.label());
+
+        let r = spec(engine).failures(failure_plan(engine)).run_str(&idx, &corpus).unwrap();
+        assert_eq!(r.output, run_serial(idx.as_ref(), &corpus), "idx {}", engine.label());
+
+        let r = spec(engine).failures(failure_plan(engine)).run_str(&topk, &corpus).unwrap();
+        assert_eq!(r.output, run_serial(topk.as_ref(), &corpus), "topk {}", engine.label());
+
+        let r = spec(engine).failures(failure_plan(engine)).run(&hist, &corpus).unwrap();
+        assert_eq!(r.output, run_serial(hist.as_ref(), &corpus), "hist {}", engine.label());
+    }
+}
+
+#[test]
+fn str_and_owned_paths_agree() {
+    // `run` (owned keys) and `run_str` (borrowed keys / JvmWord modeling)
+    // must be observationally identical for string workloads.
+    let corpus = corpus(64 << 10, 16);
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    for engine in ENGINES {
+        let owned = spec(engine).run(&w, &corpus).unwrap();
+        let borrowed = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(owned.output, borrowed.output, "{}", engine.label());
+    }
+}
+
+#[test]
+fn top_k_exact_across_cluster_shapes() {
+    // The per-shard heap is a partial reduce: results must not depend on
+    // how keys shard across nodes/partitions.
+    let corpus = corpus(96 << 10, 17);
+    let w = Arc::new(TopKWords::new(Tokenizer::Spaces, 8));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for nodes in [1usize, 2, 4] {
+        for engine in ENGINES {
+            let r = JobSpec::new(engine)
+                .nodes(nodes)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .run_str(&w, &corpus)
+                .unwrap();
+            assert_eq!(r.output, expect, "{} nodes={nodes}", engine.label());
+        }
+    }
+}
+
+#[test]
+fn normalized_tokenizer_workloads() {
+    let corpus = Corpus::from_text("The CAT, the cat! THE-CAT?\nsat on THE mat.\n");
+    let idx = Arc::new(InvertedIndex::new(Tokenizer::Normalized));
+    let expect = run_serial(idx.as_ref(), &corpus);
+    assert_eq!(expect["the"], vec![0, 1]);
+    assert_eq!(expect["cat"], vec![0]);
+    for engine in ENGINES {
+        let r = spec(engine).run_str(&idx, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn degenerate_corpora_all_workloads() {
+    for text in ["", "\n\n\n", "   \n  ", "word\n"] {
+        let corpus = Corpus::from_text(text);
+        let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+        let topk = Arc::new(TopKWords::new(Tokenizer::Spaces, 3));
+        let hist = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+        for engine in ENGINES {
+            let r = spec(engine).run_str(&wc, &corpus).unwrap();
+            assert_eq!(r.output, run_serial(wc.as_ref(), &corpus), "wc {text:?}");
+            let r = spec(engine).run_str(&topk, &corpus).unwrap();
+            assert_eq!(r.output, run_serial(topk.as_ref(), &corpus), "topk {text:?}");
+            let r = spec(engine).run(&hist, &corpus).unwrap();
+            assert_eq!(r.output, run_serial(hist.as_ref(), &corpus), "hist {text:?}");
+        }
+    }
+}
+
+#[test]
+fn report_metrics_are_sane() {
+    let corpus = corpus(64 << 10, 18);
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    for engine in ENGINES {
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.records, corpus.words, "{}", engine.label());
+        assert!(r.records_per_sec() > 0.0);
+        assert!(r.shuffle_bytes > 0, "{}", engine.label());
+        assert!(r.summary().contains(engine.label()));
+        assert_eq!(r.workload, "wordcount");
+    }
+}
+
+#[test]
+fn facade_matches_generic_layer() {
+    // WordCountJob is a facade over JobSpec + WordCount: same counts.
+    use blaze::wordcount::{serial_reference, WordCountJob};
+    let corpus = corpus(64 << 10, 19);
+    for engine in ENGINES {
+        let facade = WordCountJob::new(engine)
+            .nodes(2)
+            .threads_per_node(2)
+            .net(NetModel::ideal())
+            .run(&corpus)
+            .unwrap();
+        assert_eq!(facade.counts, serial_reference(&corpus, Tokenizer::Spaces));
+        let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+        let generic = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(facade.counts, generic.output, "{}", engine.label());
+    }
+}
