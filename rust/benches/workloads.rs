@@ -1,5 +1,7 @@
-//! Experiment W1: workload diversity — the generic job layer's four
-//! workloads on both engines, same corpus, same cluster shape.
+//! Experiment W1: workload diversity — the generic job layer's seven
+//! workloads (word count, inverted index, top-k, length histogram, join,
+//! distinct-count sketch, grep) on both engines, same corpus, same
+//! cluster shape.
 //!
 //! The paper's comparison is word count only; related work (DataMPI,
 //! arXiv:1403.3480) shows MPI-backed engines winning across a benchmark
@@ -16,9 +18,11 @@ use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
 use blaze::cluster::NetModel;
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::engines::Engine;
-use blaze::mapreduce::JobSpec;
+use blaze::mapreduce::{JobInputs, JobSpec};
 use blaze::util::stats::fmt_bytes;
-use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords, WordCount};
+use blaze::workloads::{
+    DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, TopKWords, WordCount,
+};
 
 fn spec(engine: Engine) -> JobSpec {
     JobSpec::new(engine)
@@ -75,11 +79,49 @@ fn main() {
         });
     }
 
+    // Join: two key-overlapping relations (same size, different seed).
+    let right = Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        seed: CorpusSpec::default().seed + 1,
+        ..Default::default()
+    });
+    let join_inputs = JobInputs::new()
+        .relation_lines("left", Arc::new(corpus.lines.clone()))
+        .relation("right", &right);
+    let join = Arc::new(Join::new());
+    for engine in engines {
+        let join_inputs = &join_inputs;
+        let join = &join;
+        runner.bench(format!("join / {}", engine.label()), "recs", move || {
+            spec(engine).run_inputs(join, join_inputs).expect("join").records as f64
+        });
+    }
+
+    let distinct = Arc::new(DistinctCount::new(Tokenizer::Spaces));
+    for engine in engines {
+        let corpus = &corpus;
+        let distinct = &distinct;
+        runner.bench(format!("distinct / {}", engine.label()), "recs", move || {
+            spec(engine).run(distinct, corpus).expect("distinct").records as f64
+        });
+    }
+
+    // Grep rides the zero-shuffle fast path (needs_shuffle == false).
+    let grep = Arc::new(Grep::new("the"));
+    for engine in engines {
+        let corpus = &corpus;
+        let grep = &grep;
+        runner.bench(format!("grep / {}", engine.label()), "recs", move || {
+            spec(engine).run(grep, corpus).expect("grep").records as f64
+        });
+    }
+
     runner.finish();
 
     // Per-workload speedups (Blaze TCM over Spark).
     println!("\nW1 headline (Blaze TCM / Spark, per workload):");
-    for (i, name) in ["wordcount", "index", "top-k", "length-hist"].iter().enumerate() {
+    let names = ["wordcount", "index", "top-k", "length-hist", "join", "distinct", "grep"];
+    for (i, name) in names.iter().enumerate() {
         let spark = runner.results[i * 2].rate();
         let tcm = runner.results[i * 2 + 1].rate();
         println!("  {name:<12} {:.1}x", tcm / spark.max(1e-12));

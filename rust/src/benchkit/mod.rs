@@ -4,9 +4,46 @@
 //! [`BenchRunner`], registers measurements, and prints markdown tables +
 //! ASCII charts. Methodology: `warmup` untimed runs, then `reps` timed
 //! runs; the reported statistic is median ± MAD (robust to stray outliers
-//! on a shared machine).
+//! on a shared machine). CSVs land in `target/bench-results/`.
 //!
-//! Environment knobs (so `cargo bench` scales to the machine/time budget):
+//! # Mapping numbers to the paper's setup
+//!
+//! The paper measured word count over a ~2 GB corpus (Bible + Shakespeare
+//! repeated ~200×) on AWS r5.xlarge instances with "up to 10 Gigabit"
+//! NICs. This repo reproduces that shape, scaled so a default run takes
+//! seconds, with each paper-relevant quantity modeled rather than
+//! hand-waved:
+//!
+//! * **Corpus** — [`crate::corpus::Corpus::generate`] tiles a
+//!   Zipf-sampled base block exactly like the paper repeats its source
+//!   text; `BLAZE_BENCH_BYTES` rescales it. Defaults: 32 MB, 30k vocab.
+//! * **Network** — [`crate::cluster::NetModel::aws_like`] models the
+//!   r5.xlarge class (~50 µs latency, 10 Gbit/s ≈ 1.25 GB/s); every
+//!   inter-node transfer is really serialized and pays
+//!   `latency + bytes/bandwidth` of wall-clock, so shuffle bytes are a
+//!   *measured* cost in every reported rate.
+//! * **Engines** — `Engine::Blaze` / `Engine::BlazeTcm` are the paper's
+//!   two MPI/OpenMP bars (per-token alloc vs zero-alloc inserts);
+//!   `Engine::Spark` carries the modeled Spark 2.4 overheads
+//!   (serialization, task dispatch, UTF-16 strings, GC, persisted
+//!   shuffle blocks); `Engine::SparkStripped` is the ablation floor with
+//!   all of them off.
+//!
+//! A full-scale reproduction of the paper's headline figure:
+//!
+//! ```bash
+//! BLAZE_BENCH_BYTES=2GB BLAZE_BENCH_REPS=5 cargo bench --bench figure1_wordcount
+//! ```
+//!
+//! and the cross-workload grid (joins, sketches, grep included):
+//!
+//! ```bash
+//! BLAZE_BENCH_BYTES=2GB cargo bench --bench workloads
+//! ```
+//!
+//! # Environment knobs
+//!
+//! So `cargo bench` scales to the machine/time budget:
 //! * `BLAZE_BENCH_BYTES`   — corpus size for the word-count benches
 //!   (default 32 MB; the paper used 2 GB — set `BLAZE_BENCH_BYTES=2GB`
 //!   for a full-scale run).

@@ -108,6 +108,25 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         self.local.to_vec()
     }
 
+    /// Make this node's emissions readable **without** the exchange — the
+    /// zero-shuffle fast path for workloads whose keys never need
+    /// co-location (each key emitted at most once globally). Thread caches
+    /// are synced into the local table; under [`CombineMode::None`] the raw
+    /// per-thread buffers are folded in first. Unlike
+    /// [`shuffle`](Self::shuffle), entries stay on the node that produced
+    /// them (still globally disjoint under the uniqueness contract) and
+    /// nothing touches the fabric.
+    pub fn settle_local(&self, reduce: impl Fn(&mut V, V) + Sync) {
+        if self.combine == CombineMode::None {
+            for cell in &self.raw {
+                for (k, v) in cell.lock().unwrap().drain(..) {
+                    self.local.upsert(0, k, v, &reduce);
+                }
+            }
+        }
+        self.local.sync(self.nthreads, &reduce);
+    }
+
     /// The all-to-all re-shard: collect every pending entry, ship each to
     /// its owner (self-delivery stays typed and off the wire), merge what
     /// arrives. After this, the map holds exactly this rank's shard.

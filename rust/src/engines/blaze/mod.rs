@@ -3,11 +3,14 @@
 //! generalized to arbitrary [`Workload`]s.
 //!
 //! The pipeline is exactly the paper's: a [`DistRange`] over record indices
-//! is split into per-node blocks and mapped across nodes × threads; every
-//! emission combines continuously into a [`DistHashMap`]; one all-to-all
-//! shuffle then re-shards by key owner. No fault tolerance: an injected
-//! node failure aborts the attempt and the driver reruns the whole job
-//! (the paper's §Conclusion regime, bounded by `max_job_reruns`).
+//! (one range per input relation for multi-input jobs — see
+//! [`run_workload_multi`]) is split into per-node blocks and mapped across
+//! nodes × threads; every emission combines continuously into a
+//! [`DistHashMap`]; one all-to-all shuffle then re-shards by key owner
+//! (skipped entirely for zero-shuffle workloads — see
+//! [`Workload::needs_shuffle`]). No fault tolerance: an injected node
+//! failure aborts the attempt and the driver reruns the whole job (the
+//! paper's §Conclusion regime, bounded by `max_job_reruns`).
 //!
 //! Word count is just [`crate::workloads::WordCount`] through this
 //! machinery; the two [`KeyPath`]s reproduce the paper's two bars:
@@ -66,6 +69,9 @@ pub struct BlazeConf {
     pub cache_policy: CachePolicy,
     /// Whole-job reruns allowed on an injected node failure (no FT).
     pub max_job_reruns: usize,
+    /// Run the exchange even for workloads that opt out via
+    /// [`Workload::needs_shuffle`] (the zero-shuffle ablation knob).
+    pub force_shuffle: bool,
 }
 
 impl Default for BlazeConf {
@@ -80,6 +86,7 @@ impl Default for BlazeConf {
             key_path: KeyPath::ZeroAlloc,
             cache_policy: CachePolicy::default(),
             max_job_reruns: 3,
+            force_shuffle: false,
         }
     }
 }
@@ -148,28 +155,49 @@ impl std::fmt::Display for JobFailed {
 
 impl std::error::Error for JobFailed {}
 
-/// Run a generic [`Workload`] (owned-key emissions, the
-/// [`KeyPath::AllocPerToken`] path).
+/// Run a generic [`Workload`] over a single corpus (owned-key emissions,
+/// the [`KeyPath::AllocPerToken`] path).
 pub fn run_workload<W: Workload>(
     conf: &BlazeConf,
     corpus: &Corpus,
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
-    let lines = Arc::new(corpus.lines.clone());
+    run_workload_multi(conf, &[Arc::new(corpus.lines.clone())], failures, w)
+}
+
+/// Run a generic [`Workload`] over N tagged input relations. Each relation
+/// gets its own [`DistRange`] split across the nodes; emissions from every
+/// relation combine into the same [`DistHashMap`], so the one all-to-all
+/// exchange co-locates join keys from all sides. Workloads that declare
+/// [`Workload::needs_shuffle`] `false` skip the exchange entirely (zero
+/// bytes on the fabric) unless [`BlazeConf::force_shuffle`] is set.
+pub fn run_workload_multi<W: Workload>(
+    conf: &BlazeConf,
+    relations: &[Arc<Vec<String>>],
+    failures: &FailurePlan,
+    w: &W,
+) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
+    assert!(!relations.is_empty(), "a job needs at least one input relation");
+    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
     run_attempts(
         conf,
         failures,
+        skip_shuffle,
         W::combine,
         |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
-            map_node_block(conf, &lines, comm.rank, |ctx, i, line| {
-                let mut n = 0u64;
-                w.map(i as u64, line, &mut |k, v| {
-                    n += 1;
-                    map.upsert(ctx.worker, k, v, W::combine);
+            let mut records = 0u64;
+            for (rel, lines) in relations.iter().enumerate() {
+                records += map_node_block(conf, lines, comm.rank, |ctx, i, line| {
+                    let mut n = 0u64;
+                    w.map_rel(rel, i as u64, line, &mut |k, v| {
+                        n += 1;
+                        map.upsert(ctx.worker, k, v, W::combine);
+                    });
+                    n
                 });
-                n
-            })
+            }
+            records
         },
         |shard| w.finalize_local(shard),
     )
@@ -183,10 +211,23 @@ pub fn run_workload_str<W: StrWorkload>(
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<String, W::Value>, JobFailed> {
-    let lines = Arc::new(corpus.lines.clone());
+    run_workload_str_lines(conf, Arc::new(corpus.lines.clone()), failures, w)
+}
+
+/// [`run_workload_str`] over already-shared lines (what the job layer
+/// hands down). String paths are single-input: a multi-relation job runs
+/// through [`run_workload_multi`].
+pub fn run_workload_str_lines<W: StrWorkload>(
+    conf: &BlazeConf,
+    lines: Arc<Vec<String>>,
+    failures: &FailurePlan,
+    w: &W,
+) -> Result<WorkloadReport<String, W::Value>, JobFailed> {
+    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
     run_attempts(
         conf,
         failures,
+        skip_shuffle,
         W::combine,
         |comm: &Comm, map: &DistHashMap<String, W::Value>| {
             map_node_block(conf, &lines, comm.rank, |ctx, i, line| {
@@ -270,9 +311,11 @@ struct NodeOutcome<K, V> {
 
 /// The engine core, shared by every workload: the whole-job rerun loop
 /// around single attempts of map → shuffle → per-node finalize.
+/// `skip_shuffle` is the zero-shuffle fast path (keys declared unique).
 fn run_attempts<K, V, R, M, F>(
     conf: &BlazeConf,
     failures: &FailurePlan,
+    skip_shuffle: bool,
     reduce: R,
     map_node: M,
     finalize_shard: F,
@@ -287,7 +330,7 @@ where
     let mut reruns = 0usize;
     let job_sw = Stopwatch::start(); // total across attempts: failures cost time
     loop {
-        match try_attempt(conf, failures, reduce, &map_node, &finalize_shard) {
+        match try_attempt(conf, failures, skip_shuffle, reduce, &map_node, &finalize_shard) {
             Ok(mut report) => {
                 report.reruns = reruns;
                 report.wall_secs = job_sw.elapsed_secs();
@@ -305,6 +348,7 @@ where
 fn try_attempt<K, V, R, M, F>(
     conf: &BlazeConf,
     failures: &FailurePlan,
+    skip_shuffle: bool,
     reduce: R,
     map_node: &M,
     finalize_shard: &F,
@@ -337,7 +381,14 @@ where
 
         // ---- Shuffle phase ----
         failed |= failures.should_fail_node(comm.rank, 1);
-        map.shuffle(comm, reduce);
+        if skip_shuffle {
+            // Zero-shuffle fast path: every key was declared globally
+            // unique, so nothing needs co-location — settle thread caches
+            // locally and put zero bytes on the fabric.
+            map.settle_local(reduce);
+        } else {
+            map.shuffle(comm, reduce);
+        }
         let shuffle_secs = sw.elapsed_secs();
         let wall_secs = job_sw.elapsed_secs();
 
@@ -363,7 +414,8 @@ where
         map_secs = map_secs.max(o.map_secs);
         shuffle_secs = shuffle_secs.max(o.shuffle_secs);
         wall_secs = wall_secs.max(o.wall_secs);
-        // Keys are owner-sharded: no overlaps between nodes.
+        // Keys are owner-sharded (or producer-sharded with globally
+        // unique keys on the zero-shuffle path): no overlaps between nodes.
         entries.extend(o.entries);
     }
     Ok(WorkloadReport {

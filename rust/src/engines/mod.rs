@@ -6,8 +6,10 @@
 //!   (RDD lineage, stages at shuffle boundaries, serialized + persisted
 //!   shuffle blocks, per-task dispatch overhead).
 //!
-//! Both execute arbitrary [`crate::mapreduce::Workload`]s; the shared
-//! driver surface is [`crate::mapreduce::JobSpec`].
+//! Both execute arbitrary [`crate::mapreduce::Workload`]s — single- or
+//! multi-input ([`crate::mapreduce::JobInputs`]), with or without a
+//! shuffle exchange ([`crate::mapreduce::Workload::needs_shuffle`]); the
+//! shared driver surface is [`crate::mapreduce::JobSpec`].
 
 pub mod blaze;
 pub mod spark;

@@ -12,6 +12,11 @@
 //!
 //! Word count is [`crate::workloads::WordCount`] through [`run_workload`]
 //! (or [`run_workload_jvm`] when `jvm_strings` models UTF-16 strings).
+//! Multi-input jobs (joins) run through [`run_workload_multi`]: one
+//! indexed-textFile chain per relation, `union`ed so a single
+//! `reduceByKey` co-partitions every side. Zero-shuffle workloads
+//! ([`Workload::needs_shuffle`] == false, e.g. grep) skip the stage cut
+//! entirely and write no shuffle blocks.
 
 pub mod block;
 pub mod conf;
@@ -52,41 +57,77 @@ pub fn word_count_lines(
 ) -> Result<HashMap<String, u64>, JobError> {
     let w = Arc::new(crate::workloads::WordCount::new(tokenizer));
     let (entries, _emitted) = if ctx.conf().jvm_strings {
-        run_workload_jvm(ctx, lines, &w)?
+        run_workload_jvm(ctx, lines, &w, false)?
     } else {
         run_workload(ctx, lines, &w)?
     };
     Ok(entries.into_iter().collect())
 }
 
-/// Run a generic [`Workload`]: indexed textFile → fused flatMap of the
-/// workload's `map` → `reduceByKey(combine)` (stage cut: shuffle write +
-/// fetch with all modeled costs) → per-partition `finalize_local` →
-/// collect. Returns the finalized entries (key sets disjoint across
-/// partitions) and the number of map-phase emissions observed.
+/// Run a generic [`Workload`] over one input relation: indexed textFile →
+/// fused flatMap of the workload's map → `reduceByKey(combine)` (stage
+/// cut: shuffle write + fetch with all modeled costs) → per-partition
+/// `finalize_local` → collect. Returns the finalized entries (key sets
+/// disjoint across partitions) and the number of map-phase emissions
+/// observed.
 pub fn run_workload<W: Workload>(
     ctx: &SparkContext,
     lines: Arc<Vec<String>>,
     w: &Arc<W>,
 ) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
+    run_workload_multi(ctx, std::slice::from_ref(&lines), w, false)
+}
+
+/// Run a generic [`Workload`] over N tagged input relations — Spark's
+/// union-then-shuffle plan. Each relation becomes its own indexed
+/// `textFile` → flatMap chain (tagged with its relation index, so
+/// [`Workload::map_rel`] knows which side a record came from); the chains
+/// are `union`ed and one `reduceByKey` co-partitions every side's
+/// emissions into the same reduce partitions.
+///
+/// Workloads that declare [`Workload::needs_shuffle`] `false` take the
+/// zero-shuffle fast path instead: no stage cut, no serialization, no
+/// blocks written — `finalize_local` runs per *map* partition (exact,
+/// because such keys are globally unique) and
+/// `SparkMetrics::shuffle_bytes_written` stays 0. Pass
+/// `force_shuffle = true` to run the exchange anyway.
+pub fn run_workload_multi<W: Workload>(
+    ctx: &SparkContext,
+    relations: &[Arc<Vec<String>>],
+    w: &Arc<W>,
+    force_shuffle: bool,
+) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
+    assert!(!relations.is_empty(), "a job needs at least one input relation");
     let partitions = ctx.default_partitions();
-    let text = ctx.text_lines_indexed(lines, partitions);
     let emitted = Arc::new(AtomicU64::new(0));
-    let counter = Arc::clone(&emitted);
-    let wm = Arc::clone(w);
-    // flatMap(record => workload.map(record)) — materializes owned keys,
-    // exactly like the Scala example's String objects.
-    let pairs = text.flat_map(move |(doc, line): (u64, String)| {
-        let mut out = Vec::new();
-        wm.map(doc, &line, &mut |k, v| out.push((k, v)));
-        counter.fetch_add(out.len() as u64, Ordering::Relaxed);
-        out
-    });
+    let mut pairs: Option<Rdd<(W::Key, W::Value)>> = None;
+    for (rel, lines) in relations.iter().enumerate() {
+        let text = ctx.text_lines_indexed(Arc::clone(lines), partitions);
+        let counter = Arc::clone(&emitted);
+        let wm = Arc::clone(w);
+        // flatMap(record => workload.map_rel(rel, record)) — materializes
+        // owned keys, exactly like the Scala example's String objects.
+        let mapped = text.flat_map(move |(doc, line): (u64, String)| {
+            let mut out = Vec::new();
+            wm.map_rel(rel, doc, &line, &mut |k, v| out.push((k, v)));
+            counter.fetch_add(out.len() as u64, Ordering::Relaxed);
+            out
+        });
+        pairs = Some(match pairs {
+            Some(p) => p.union(&mapped),
+            None => mapped,
+        });
+    }
+    let pairs = pairs.expect("at least one relation");
     let wf = Arc::clone(w);
-    let entries = pairs
-        .reduce_by_key(W::combine, partitions)
-        .map_partitions(move |shard| wf.finalize_local(shard))
-        .collect()?;
+    let entries = if w.needs_shuffle() || force_shuffle {
+        pairs
+            .reduce_by_key(W::combine, partitions)
+            .map_partitions(move |shard| wf.finalize_local(shard))
+            .collect()?
+    } else {
+        pairs.map_partitions(move |shard| wf.finalize_local(shard)).collect()?
+    };
     Ok((entries, emitted.load(Ordering::Relaxed)))
 }
 
@@ -96,11 +137,14 @@ pub fn run_workload<W: Workload>(
 /// executor does (textFile read, split, writeUTF / readUTF at the
 /// shuffle). Keys convert back to platform strings at the driver, where
 /// `finalize_local` then runs once over the collected set (exact for
-/// filtering partial reduces — see the trait contract).
+/// filtering partial reduces — see the trait contract). Zero-shuffle
+/// workloads skip the `reduceByKey` stage cut like every other path,
+/// unless `force_shuffle` is set.
 pub fn run_workload_jvm<W: StrWorkload>(
     ctx: &SparkContext,
     lines: Arc<Vec<String>>,
     w: &Arc<W>,
+    force_shuffle: bool,
 ) -> Result<(Vec<(String, W::Value)>, u64), JobError> {
     let partitions = ctx.default_partitions();
     let text = ctx.text_lines_indexed(lines, partitions);
@@ -117,7 +161,11 @@ pub fn run_workload_jvm<W: StrWorkload>(
         counter.fetch_add(out.len() as u64, Ordering::Relaxed);
         out
     });
-    let collected = pairs.reduce_by_key(W::combine, partitions).collect()?;
+    let collected = if w.needs_shuffle() || force_shuffle {
+        pairs.reduce_by_key(W::combine, partitions).collect()?
+    } else {
+        pairs.collect()?
+    };
     // Driver-side collect converts to platform strings once (outside the
     // engines' timed loops this is negligible; kept for API uniformity).
     let entries: Vec<(String, W::Value)> =

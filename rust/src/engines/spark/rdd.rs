@@ -181,6 +181,41 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         }
     }
 
+    /// Concatenate this RDD's partitions with `other`'s (Spark's `union`):
+    /// the result has `self.num_partitions() + other.num_partitions()`
+    /// partitions and stays narrow — no data moves. A `reduce_by_key`
+    /// downstream shuffles *both* sides into the same reduce partitions
+    /// (co-partitioned by key hash), which is exactly Spark's
+    /// union-then-shuffle join plan; the job layer uses this to co-group
+    /// multi-input workloads.
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        assert!(
+            std::ptr::eq(
+                self.ctx.inner() as *const _,
+                other.ctx.inner() as *const _
+            ),
+            "union across different SparkContexts"
+        );
+        let n_left = self.num_partitions;
+        let left = Arc::clone(&self.compute);
+        let right = Arc::clone(&other.compute);
+        let mut upstream = self.upstream.clone();
+        upstream.extend(other.upstream.iter().cloned());
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: n_left + other.num_partitions,
+            stage: self.stage.max(other.stage),
+            compute: Arc::new(move |tc, p| {
+                if p < n_left {
+                    left(tc, p)
+                } else {
+                    right(tc, p - n_left)
+                }
+            }),
+            upstream,
+        }
+    }
+
     /// Narrow: keep elements satisfying `f`.
     pub fn filter<F>(&self, f: F) -> Rdd<T>
     where

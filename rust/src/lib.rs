@@ -12,13 +12,17 @@
 //!
 //! The paper demonstrates its claim on one workload; this crate generalizes
 //! it. [`mapreduce`] defines a [`mapreduce::Workload`] trait (per-record
-//! map → `(K, V)` emissions, associative combine, optional per-shard
-//! partial reduce) plus a [`mapreduce::JobSpec`]/[`mapreduce::JobReport`]
-//! pair that both engines execute behind a shared
-//! [`mapreduce::JobEngine`] trait object. [`workloads`] ships four jobs on
-//! top of it — word count, inverted index, top-K words, and a token-length
-//! histogram — each runnable from the CLI (`blaze run --workload ...`) on
-//! every engine and verified against [`mapreduce::run_serial`].
+//! map → `(K, V)` emissions — per tagged input relation for multi-input
+//! jobs — associative combine, optional per-shard partial reduce) plus a
+//! [`mapreduce::JobSpec`]/[`mapreduce::JobInputs`]/[`mapreduce::JobReport`]
+//! triple that both engines execute behind a shared
+//! [`mapreduce::JobEngine`] trait object. [`workloads`] ships seven jobs
+//! on top of it — word count, inverted index, top-K words, a token-length
+//! histogram, a two-relation inner join, a distinct-count sketch, and a
+//! zero-shuffle grep — each runnable from the CLI
+//! (`blaze run --workload ...`) on every engine and verified against
+//! [`mapreduce::run_serial`]/[`mapreduce::run_serial_inputs`]. The
+//! [`workloads`] module docs double as the workload-authoring guide.
 //! [`wordcount::WordCountJob`] remains the stable word-count facade, now a
 //! thin wrapper over the job layer.
 //!

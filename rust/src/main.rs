@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!
-//! * `run`       — one job (`--workload wordcount|index|top-k|length-hist`)
-//!   on a chosen engine/cluster shape.
+//! * `run`       — one job (`--workload
+//!   wordcount|index|top-k|length-hist|join|distinct|grep`) on a chosen
+//!   engine/cluster shape.
 //! * `compare`   — the paper's experiment: all engines on one corpus,
 //!   printed as the words/sec bar chart.
 //! * `generate`  — synthesize a corpus to a file.
@@ -17,11 +18,12 @@ use std::sync::Arc;
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::dist::CombineMode;
-use blaze::mapreduce::{run_serial, JobSpec};
+use blaze::engines::Engine;
+use blaze::mapreduce::{run_serial, run_serial_inputs, JobInputs, JobSpec};
 use blaze::metrics::ascii_bar_chart;
 use blaze::util::cli::{Args, CliError, Command};
-use blaze::wordcount::{serial_reference, EngineChoice, WordCountJob};
-use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords};
+use blaze::wordcount::{serial_reference, WordCountJob};
+use blaze::workloads::{DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, TopKWords};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -80,14 +82,24 @@ fn corpus_opts(cmd: Command) -> Command {
 }
 
 fn load_corpus(args: &Args) -> Result<Corpus, String> {
-    if let Some(path) = args.get("input") {
+    load_relation(args, "input", 0)
+}
+
+/// The join's right relation: `--input-right <file>`, or generated like the
+/// left one with `seed+1` so the relations overlap in keys but not lines.
+fn load_right_corpus(args: &Args) -> Result<Corpus, String> {
+    load_relation(args, "input-right", 1)
+}
+
+fn load_relation(args: &Args, input_opt: &str, seed_offset: u64) -> Result<Corpus, String> {
+    if let Some(path) = args.get(input_opt) {
         let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
         return Ok(Corpus::from_text(&text));
     }
     let spec = CorpusSpec {
         target_bytes: args.get_bytes("bytes").map_err(|e| e.to_string())?,
         vocab_size: args.get_usize("vocab").map_err(|e| e.to_string())?,
-        seed: args.get_u64("seed").map_err(|e| e.to_string())?,
+        seed: args.get_u64("seed").map_err(|e| e.to_string())?.wrapping_add(seed_offset),
         ..Default::default()
     };
     Ok(Corpus::generate(&spec))
@@ -100,7 +112,7 @@ fn cluster_opts(cmd: Command) -> Command {
         .opt("tokenizer", Some("paper"), "tokenizer: paper|normalized")
 }
 
-fn job_from_args(engine: EngineChoice, args: &Args) -> Result<WordCountJob, String> {
+fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
     Ok(WordCountJob::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
         .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
@@ -116,10 +128,17 @@ fn cmd_run() -> Command {
         .opt(
             "workload",
             Some("wordcount"),
-            "wordcount|index|top-k|length-hist",
+            "wordcount|index|top-k|length-hist|join|distinct|grep",
         )
         .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
         .opt("top", Some("10"), "print the top-K entries")
+        .opt("pattern", Some("the"), "grep: substring to match")
+        .opt(
+            "input-right",
+            None,
+            "join: right relation from file (default: generated, seed+1)",
+        )
+        .flag("force-shuffle", "run the exchange even for zero-shuffle workloads")
         .flag("verify", "check against the serial reference");
     corpus_opts(cluster_opts(cmd))
 }
@@ -133,14 +152,15 @@ fn do_run(args: &Args) -> Result<(), String> {
 
 /// Build the generic job spec from the shared cluster/engine options.
 fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
-    let engine = EngineChoice::parse(&args.get_str("engine")).ok_or("bad --engine")?;
+    let engine = Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?;
     let combine = CombineMode::parse(&args.get_str("combine"))
         .ok_or_else(|| format!("bad --combine {}", args.get_str("combine")))?;
     Ok(JobSpec::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
         .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
         .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
-        .combine(combine))
+        .combine(combine)
+        .force_shuffle(args.has_flag("force-shuffle")))
 }
 
 /// The non-wordcount workloads, through the generic job layer.
@@ -198,8 +218,64 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             }
             verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
         }
+        "join" => {
+            let right = load_right_corpus(args)?;
+            println!(
+                "right relation: {} lines, {}",
+                right.num_lines(),
+                blaze::util::stats::fmt_bytes(right.bytes)
+            );
+            let w = Arc::new(Join::new());
+            let inputs =
+                JobInputs::new().relation("left", &corpus).relation("right", &right);
+            let r = spec.run_inputs(&w, &inputs).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            let pairs: u64 = r.output.values().map(|s| s.pairs()).sum();
+            let mut keys: Vec<(&String, u64)> =
+                r.output.iter().map(|(k, s)| (k, s.pairs())).collect();
+            keys.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            println!(
+                "\n{} keys matched on both sides ({pairs} joined pairs); {k} widest:",
+                r.output.len()
+            );
+            for (key, n) in keys.into_iter().take(k) {
+                println!("  {n:>10} pairs  {key}");
+            }
+            verify(args, &r.output, || run_serial_inputs(w.as_ref(), &inputs))
+        }
+        "distinct" | "distinct-count" => {
+            let w = Arc::new(DistinctCount::new(tokenizer));
+            let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            println!(
+                "\n≈ {} distinct tokens ({}-register sketch; corpus holds {} total)",
+                r.output,
+                blaze::workloads::REGISTERS,
+                corpus.words
+            );
+            verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
+        }
+        "grep" => {
+            let pattern = args.get_str("pattern");
+            let w = Arc::new(Grep::new(pattern.clone()));
+            let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
+            println!("{}", r.summary());
+            println!("detail: {}", r.detail);
+            println!(
+                "\n{} lines match {pattern:?} (shuffle bytes: {} — zero-shuffle fast \
+                 path unless --force-shuffle); first {k}:",
+                r.output.len(),
+                r.shuffle_bytes
+            );
+            for (doc, line) in r.output.iter().take(k) {
+                println!("  {doc:>8}: {line}");
+            }
+            verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
+        }
         other => Err(format!(
-            "unknown --workload {other} (wordcount|index|top-k|length-hist)"
+            "unknown --workload {other} (wordcount|index|top-k|length-hist|join|distinct|grep)"
         )),
     }
 }
@@ -218,7 +294,7 @@ fn verify<T: PartialEq>(args: &Args, got: &T, expect: impl FnOnce() -> T) -> Res
 }
 
 fn do_run_wordcount(args: &Args) -> Result<(), String> {
-    let engine = EngineChoice::parse(&args.get_str("engine")).ok_or("bad --engine")?;
+    let engine = Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?;
     let corpus = load_corpus(args)?;
     let combine = match args.get_str("combine").as_str() {
         "eager" => CombineMode::Eager,
@@ -274,9 +350,9 @@ fn do_compare(args: &Args) -> Result<(), String> {
     );
     let mut bars = Vec::new();
     for engine in [
-        EngineChoice::Spark,
-        EngineChoice::Blaze,
-        EngineChoice::BlazeTcm,
+        Engine::Spark,
+        Engine::Blaze,
+        Engine::BlazeTcm,
     ] {
         let job = job_from_args(engine, args)?;
         let result = job.run(&corpus).map_err(|e| e.to_string())?;
@@ -327,19 +403,19 @@ fn cmd_fault() -> Command {
 fn do_fault(args: &Args) -> Result<(), String> {
     let corpus = load_corpus(args)?;
     println!("--- Spark: one map task fails; lineage retries just that task ---");
-    let job = job_from_args(EngineChoice::Spark, args)?
+    let job = job_from_args(Engine::Spark, args)?
         .failures(FailurePlan::none().fail_task(0, 0));
     let r = job.run(&corpus).map_err(|e| e.to_string())?;
     println!("{}\ndetail: {}\n", r.summary(), r.detail);
 
     println!("--- Spark: executor 1's shuffle output lost; lineage recomputes lost partitions ---");
-    let job = job_from_args(EngineChoice::Spark, args)?
+    let job = job_from_args(Engine::Spark, args)?
         .failures(FailurePlan::none().lose_executor(1));
     let r = job.run(&corpus).map_err(|e| e.to_string())?;
     println!("{}\ndetail: {}\n", r.summary(), r.detail);
 
     println!("--- Blaze: one node fails mid-map; no FT, whole job reruns ---");
-    let job = job_from_args(EngineChoice::BlazeTcm, args)?
+    let job = job_from_args(Engine::BlazeTcm, args)?
         .failures(FailurePlan::none().fail_node(0, 0));
     let r = job.run(&corpus).map_err(|e| e.to_string())?;
     println!("{}\ndetail: {}", r.summary(), r.detail);

@@ -4,24 +4,43 @@
 //! generalizes both engines to run *any* associative map/combine/shuffle/
 //! reduce job. The pieces:
 //!
-//! * [`Workload`] — what a job computes: a per-record `map` that emits
-//!   `(K, V)` pairs, an associative+commutative `combine`, an optional
-//!   per-shard partial reduce (`finalize_local`, e.g. top-K heap
-//!   selection), and a driver-side `finalize` into the output type.
+//! * [`Workload`] — what a job computes: a per-record map ([`Workload::map`]
+//!   for single-input jobs, [`Workload::map_rel`] when the job reads
+//!   several tagged relations) that emits `(K, V)` pairs, an
+//!   associative+commutative `combine`, an optional per-shard partial
+//!   reduce (`finalize_local`, e.g. top-K heap selection), and a
+//!   driver-side `finalize` into the output type.
 //! * [`StrWorkload`] — string-keyed workloads that can also emit borrowed
 //!   `&str` keys, unlocking the zero-alloc "TCM" insert path on Blaze and
 //!   the UTF-16 `JvmWord` modeling on the Spark sim.
+//! * [`JobInputs`] / [`Relation`] — the job's N tagged input relations.
+//!   Single-input jobs wrap their corpus with [`JobInputs::single`]; a
+//!   join supplies one relation per side and `map_rel` is told which side
+//!   each record came from.
 //! * [`JobSpec`] / [`JobReport`] — one engine-agnostic job description
 //!   (cluster shape, network, combine mode, failure plan) and one uniform
 //!   result (output + wall time + shuffle bytes + engine detail).
 //! * [`JobEngine`] — the shared engine abstraction both backends implement;
 //!   [`engine_for`]/[`engine_for_str`] hand back the right trait object for
 //!   an [`Engine`] choice.
-//! * [`run_serial`] — the single-threaded reference executor, the
-//!   correctness oracle for every engine × workload combination.
+//! * [`run_serial`] / [`run_serial_inputs`] — the single-threaded reference
+//!   executors, the correctness oracle for every engine × workload
+//!   combination.
 //!
-//! Concrete workloads live in [`crate::workloads`]; `wordcount::WordCountJob`
-//! is a thin facade over this layer.
+//! Concrete workloads live in [`crate::workloads`] (that module's docs are
+//! the workload-authoring guide); `wordcount::WordCountJob` is a thin
+//! facade over this layer.
+//!
+//! # The zero-shuffle fast path
+//!
+//! A workload whose keys never repeat (grep: one emission per matching
+//! line, keyed by line id) has nothing to co-locate: `combine` can never
+//! fire, so the shards each producer holds are already disjoint. Such a
+//! workload overrides [`Workload::needs_shuffle`] to `false` and both
+//! engines skip the exchange entirely — no serialization, no bytes on the
+//! simulated wire, `JobReport::shuffle_bytes == 0`. Set
+//! [`JobSpec::force_shuffle()`] to run the exchange anyway and measure
+//! what the skip saves.
 //!
 //! # The `finalize_local` contract
 //!
@@ -66,6 +85,11 @@ impl<T> JobValue for T where T: MapValue + Encode + Decode + HeapSize + std::fmt
 
 /// A MapReduce workload: how records become `(K, V)` emissions, how values
 /// combine, and how reduced entries become the final output.
+///
+/// Single-input workloads implement [`map`](Self::map); multi-input
+/// workloads override [`map_rel`](Self::map_rel) (whose default delegates
+/// to `map`) and stub `map` out with a panic — engines only ever call
+/// `map_rel`, and the job layer validates relation arity before running.
 pub trait Workload: Send + Sync + 'static {
     type Key: JobKey;
     type Value: JobValue;
@@ -74,9 +98,45 @@ pub trait Workload: Send + Sync + 'static {
     /// Stable name (CLI `--workload` token, bench/report label).
     fn name(&self) -> &'static str;
 
-    /// Map one record. `doc` is the record's global index (line number) —
-    /// identity for workloads like inverted indexing.
+    /// Number of input relations this workload consumes. The job layer
+    /// rejects a [`JobInputs`] whose relation count disagrees.
+    fn num_relations(&self) -> usize {
+        1
+    }
+
+    /// Does correctness depend on co-locating every value of a key before
+    /// `finalize_local`? Default `true`. Return `false` **only if** every
+    /// key is emitted at most once across the whole job (e.g. grep keyed
+    /// by line id): `combine` then never fires, per-producer shards are
+    /// already disjoint, and the engines skip the shuffle exchange
+    /// entirely (`JobReport::shuffle_bytes` reads 0 unless
+    /// [`JobSpec::force_shuffle()`] is set).
+    fn needs_shuffle(&self) -> bool {
+        true
+    }
+
+    /// Map one record of a single-input job. `doc` is the record's global
+    /// index (line number) — identity for workloads like inverted
+    /// indexing. Multi-input workloads stub this with a panic and
+    /// override [`map_rel`](Self::map_rel) instead.
     fn map(&self, doc: u64, record: &str, emit: &mut dyn FnMut(Self::Key, Self::Value));
+
+    /// Map one record of relation `rel` (its index into the job's
+    /// [`JobInputs`]; always 0 for single-input jobs). `doc` is the
+    /// record's index *within its relation*. Default delegates to
+    /// [`map`](Self::map), ignoring the tag — multi-input workloads (e.g.
+    /// a join, which must know which side a record came from) override
+    /// this instead of `map`.
+    fn map_rel(
+        &self,
+        rel: usize,
+        doc: u64,
+        record: &str,
+        emit: &mut dyn FnMut(Self::Key, Self::Value),
+    ) {
+        debug_assert_eq!(rel, 0, "single-input workload handed relation {rel}");
+        self.map(doc, record, emit);
+    }
 
     /// Fold `v` into `acc`. Must be associative and commutative; engines
     /// fold in thread, cache, and shuffle arrival order.
@@ -102,6 +162,62 @@ pub trait Workload: Send + Sync + 'static {
 pub trait StrWorkload: Workload<Key = String> {
     /// Must emit exactly what [`Workload::map`] emits, with keys borrowed.
     fn map_str(&self, doc: u64, record: &str, emit: &mut dyn FnMut(&str, Self::Value));
+}
+
+/// One tagged input relation: a name (surfaced in diagnostics, e.g. the
+/// relation-arity error) plus its records. Lines are shared, not copied —
+/// engines clone per task exactly as they would for a single-input corpus.
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub name: String,
+    pub lines: Arc<Vec<String>>,
+}
+
+/// The N tagged input relations of one job.
+///
+/// Single-input jobs wrap their corpus with [`JobInputs::single`] (which
+/// is what [`JobSpec::run`] does for you); multi-input workloads receive
+/// one relation per [`Workload::num_relations`] slot, in order, and
+/// [`Workload::map_rel`] is told which relation each record came from.
+#[derive(Clone, Debug, Default)]
+pub struct JobInputs {
+    pub relations: Vec<Relation>,
+}
+
+impl JobInputs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The classic single-relation input.
+    pub fn single(corpus: &Corpus) -> Self {
+        Self::new().relation("input", corpus)
+    }
+
+    /// Append a relation built from a corpus (lines are copied once, into
+    /// the shared `Arc`).
+    pub fn relation(self, name: &str, corpus: &Corpus) -> Self {
+        self.relation_lines(name, Arc::new(corpus.lines.clone()))
+    }
+
+    /// Append a relation over already-shared lines.
+    pub fn relation_lines(mut self, name: &str, lines: Arc<Vec<String>>) -> Self {
+        self.relations.push(Relation { name: name.to_string(), lines });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.relations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.relations.is_empty()
+    }
+
+    /// Just the line vectors, in relation order (what the engines map over).
+    pub fn line_sets(&self) -> Vec<Arc<Vec<String>>> {
+        self.relations.iter().map(|r| Arc::clone(&r.lines)).collect()
+    }
 }
 
 /// Error surfaced by the generic layer (wraps either engine's failure).
@@ -135,6 +251,10 @@ pub struct JobSpec {
     pub failures: Arc<FailurePlan>,
     /// Blaze: whole-job reruns allowed on an injected node failure.
     pub max_job_reruns: usize,
+    /// Run the shuffle exchange even for workloads that opt out via
+    /// [`Workload::needs_shuffle`] — the ablation that measures what the
+    /// zero-shuffle fast path saves.
+    pub force_shuffle: bool,
 }
 
 impl JobSpec {
@@ -150,6 +270,7 @@ impl JobSpec {
             spark_overrides: None,
             failures: Arc::new(FailurePlan::none()),
             max_job_reruns: 3,
+            force_shuffle: false,
         }
     }
 
@@ -188,26 +309,60 @@ impl JobSpec {
         self
     }
 
-    /// Run `w` on this spec's engine (owned-key emission path everywhere).
+    pub fn force_shuffle(mut self, force: bool) -> Self {
+        self.force_shuffle = force;
+        self
+    }
+
+    /// Run `w` on this spec's engine (owned-key emission path everywhere)
+    /// over a single input relation.
     pub fn run<W: Workload>(
         &self,
         w: &Arc<W>,
         corpus: &Corpus,
     ) -> Result<JobReport<W::Output>, MapReduceError> {
-        let run = engine_for::<W>(self.engine).run(self, w, corpus)?;
+        self.run_inputs(w, &JobInputs::single(corpus))
+    }
+
+    /// Run `w` over N tagged input relations — the general entry point;
+    /// multi-input workloads (joins) have no single-corpus shorthand.
+    pub fn run_inputs<W: Workload>(
+        &self,
+        w: &Arc<W>,
+        inputs: &JobInputs,
+    ) -> Result<JobReport<W::Output>, MapReduceError> {
+        self.check_arity(w.as_ref(), inputs)?;
+        let run = engine_for::<W>(self.engine).run(self, w, inputs)?;
         Ok(self.finish(w, run))
     }
 
     /// Run a string-keyed workload with the engines' specialized string
     /// paths: zero-alloc inserts on Blaze TCM, UTF-16 `JvmWord` modeling
-    /// on the faithful Spark sim.
+    /// on the faithful Spark sim. String paths are single-input only —
+    /// multi-input jobs go through [`run_inputs`](Self::run_inputs).
     pub fn run_str<W: StrWorkload>(
         &self,
         w: &Arc<W>,
         corpus: &Corpus,
     ) -> Result<JobReport<W::Output>, MapReduceError> {
-        let run = engine_for_str::<W>(self.engine).run(self, w, corpus)?;
+        let inputs = JobInputs::single(corpus);
+        self.check_arity(w.as_ref(), &inputs)?;
+        let run = engine_for_str::<W>(self.engine).run(self, w, &inputs)?;
         Ok(self.finish(w, run))
+    }
+
+    fn check_arity<W: Workload>(&self, w: &W, inputs: &JobInputs) -> Result<(), MapReduceError> {
+        if inputs.len() != w.num_relations() {
+            let names: Vec<&str> =
+                inputs.relations.iter().map(|r| r.name.as_str()).collect();
+            return Err(MapReduceError(format!(
+                "workload '{}' expects {} input relation(s), got {} ({names:?})",
+                w.name(),
+                w.num_relations(),
+                inputs.len()
+            )));
+        }
+        Ok(())
     }
 
     fn finish<W: Workload>(
@@ -240,6 +395,7 @@ impl JobSpec {
             key_path,
             cache_policy: self.cache_policy,
             max_job_reruns: self.max_job_reruns,
+            force_shuffle: self.force_shuffle,
         }
     }
 
@@ -303,14 +459,15 @@ impl<O> JobReport<O> {
 }
 
 /// The shared engine abstraction: anything that can execute a [`Workload`]
-/// against a [`JobSpec`]. Both backends implement it; callers hold it as a
-/// trait object from [`engine_for`]/[`engine_for_str`].
+/// against a [`JobSpec`] over the job's tagged input relations. Both
+/// backends implement it; callers hold it as a trait object from
+/// [`engine_for`]/[`engine_for_str`].
 pub trait JobEngine<W: Workload>: Send + Sync {
     fn run(
         &self,
         spec: &JobSpec,
         w: &Arc<W>,
-        corpus: &Corpus,
+        inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError>;
 }
 
@@ -324,16 +481,18 @@ impl<W: Workload> JobEngine<W> for BlazeExec {
         &self,
         spec: &JobSpec,
         w: &Arc<W>,
-        corpus: &Corpus,
+        inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
         let conf = spec.blaze_conf(self.key_path);
-        let r = crate::engines::blaze::run_workload(&conf, corpus, &spec.failures, w.as_ref())
-            .map_err(|e| MapReduceError(e.to_string()))?;
+        let rels = inputs.line_sets();
+        let r =
+            crate::engines::blaze::run_workload_multi(&conf, &rels, &spec.failures, w.as_ref())
+                .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(blaze_job_run(r))
     }
 }
 
-/// Blaze backend through the zero-alloc borrowed-key path.
+/// Blaze backend through the zero-alloc borrowed-key path (single-input).
 struct BlazeStrExec;
 
 impl<W: StrWorkload> JobEngine<W> for BlazeStrExec {
@@ -341,11 +500,13 @@ impl<W: StrWorkload> JobEngine<W> for BlazeStrExec {
         &self,
         spec: &JobSpec,
         w: &Arc<W>,
-        corpus: &Corpus,
+        inputs: &JobInputs,
     ) -> Result<JobRun<String, W::Value>, MapReduceError> {
         let conf = spec.blaze_conf(KeyPath::ZeroAlloc);
-        let r = crate::engines::blaze::run_workload_str(&conf, corpus, &spec.failures, w.as_ref())
-            .map_err(|e| MapReduceError(e.to_string()))?;
+        let lines = Arc::clone(&inputs.relations[0].lines);
+        let r =
+            crate::engines::blaze::run_workload_str_lines(&conf, lines, &spec.failures, w.as_ref())
+                .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(blaze_job_run(r))
     }
 }
@@ -372,18 +533,20 @@ impl<W: Workload> JobEngine<W> for SparkExec {
         &self,
         spec: &JobSpec,
         w: &Arc<W>,
-        corpus: &Corpus,
+        inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
         let ctx = spec.spark_context();
-        let lines = Arc::new(corpus.lines.clone());
+        let rels = inputs.line_sets();
         let sw = Stopwatch::start();
-        let (entries, records) = crate::engines::spark::run_workload(&ctx, lines, w)
-            .map_err(|e| MapReduceError(e.to_string()))?;
+        let (entries, records) =
+            crate::engines::spark::run_workload_multi(&ctx, &rels, w, spec.force_shuffle)
+                .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
     }
 }
 
-/// Spark-sim backend honoring `jvm_strings` for string-keyed workloads.
+/// Spark-sim backend honoring `jvm_strings` for string-keyed workloads
+/// (single-input).
 struct SparkStrExec;
 
 impl<W: StrWorkload> JobEngine<W> for SparkStrExec {
@@ -391,15 +554,20 @@ impl<W: StrWorkload> JobEngine<W> for SparkStrExec {
         &self,
         spec: &JobSpec,
         w: &Arc<W>,
-        corpus: &Corpus,
+        inputs: &JobInputs,
     ) -> Result<JobRun<String, W::Value>, MapReduceError> {
         let ctx = spec.spark_context();
-        let lines = Arc::new(corpus.lines.clone());
+        let lines = Arc::clone(&inputs.relations[0].lines);
         let sw = Stopwatch::start();
         let result = if ctx.conf().jvm_strings {
-            crate::engines::spark::run_workload_jvm(&ctx, lines, w)
+            crate::engines::spark::run_workload_jvm(&ctx, lines, w, spec.force_shuffle)
         } else {
-            crate::engines::spark::run_workload(&ctx, lines, w)
+            crate::engines::spark::run_workload_multi(
+                &ctx,
+                std::slice::from_ref(&lines),
+                w,
+                spec.force_shuffle,
+            )
         };
         let (entries, records) = result.map_err(|e| MapReduceError(e.to_string()))?;
         Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
@@ -445,16 +613,52 @@ pub fn engine_for_str<W: StrWorkload>(engine: Engine) -> Box<dyn JobEngine<W>> {
 }
 
 /// Single-threaded reference executor — the correctness oracle for every
-/// engine × workload combination.
+/// engine × workload combination (single input relation; multi-input
+/// workloads go through [`run_serial_inputs`]).
 pub fn run_serial<W: Workload>(w: &W, corpus: &Corpus) -> W::Output {
+    assert_eq!(
+        w.num_relations(),
+        1,
+        "workload '{}' is multi-input; oracle it with run_serial_inputs",
+        w.name()
+    );
     let mut acc: HashMap<W::Key, W::Value> = HashMap::new();
     for (i, line) in corpus.lines.iter().enumerate() {
-        w.map(i as u64, line, &mut |k, v| match acc.entry(k) {
-            std::collections::hash_map::Entry::Occupied(mut e) => W::combine(e.get_mut(), v),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(v);
-            }
-        });
+        serial_map(w, &mut acc, 0, i as u64, line);
     }
     w.finalize(w.finalize_local(acc.into_iter().collect()))
+}
+
+/// [`run_serial`] over N tagged relations — the oracle for multi-input
+/// workloads (joins).
+pub fn run_serial_inputs<W: Workload>(w: &W, inputs: &JobInputs) -> W::Output {
+    assert_eq!(
+        inputs.len(),
+        w.num_relations(),
+        "workload '{}' expects {} input relation(s)",
+        w.name(),
+        w.num_relations()
+    );
+    let mut acc: HashMap<W::Key, W::Value> = HashMap::new();
+    for (rel, r) in inputs.relations.iter().enumerate() {
+        for (i, line) in r.lines.iter().enumerate() {
+            serial_map(w, &mut acc, rel, i as u64, line);
+        }
+    }
+    w.finalize(w.finalize_local(acc.into_iter().collect()))
+}
+
+fn serial_map<W: Workload>(
+    w: &W,
+    acc: &mut HashMap<W::Key, W::Value>,
+    rel: usize,
+    doc: u64,
+    line: &str,
+) {
+    w.map_rel(rel, doc, line, &mut |k, v| match acc.entry(k) {
+        std::collections::hash_map::Entry::Occupied(mut e) => W::combine(e.get_mut(), v),
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert(v);
+        }
+    });
 }

@@ -8,11 +8,12 @@
 //! API and results are unchanged.
 //!
 //! ```no_run
-//! use blaze::wordcount::{WordCountJob, EngineChoice};
+//! use blaze::engines::Engine;
+//! use blaze::wordcount::WordCountJob;
 //! use blaze::corpus::{Corpus, CorpusSpec};
 //!
 //! let corpus = Corpus::generate(&CorpusSpec::with_bytes(16 << 20));
-//! let result = WordCountJob::new(EngineChoice::Blaze)
+//! let result = WordCountJob::new(Engine::Blaze)
 //!     .nodes(2)
 //!     .threads_per_node(4)
 //!     .run(&corpus)
@@ -20,6 +21,9 @@
 //! println!("{}", result.summary());
 //! assert!(result.verify(&corpus));
 //! ```
+//!
+//! (`EngineChoice` remains as a deprecated-in-spirit alias of
+//! [`crate::engines::Engine`] for older call sites.)
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -128,6 +132,7 @@ impl WordCountJob {
             spark_overrides: self.spark_overrides.clone(),
             failures: Arc::clone(&self.failures),
             max_job_reruns: 3,
+            force_shuffle: false,
         }
     }
 

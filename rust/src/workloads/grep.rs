@@ -1,0 +1,95 @@
+//! Grep — the filter-only, zero-shuffle workload.
+//!
+//! Map emits `(line id, line)` for lines containing the pattern; every key
+//! is emitted exactly once, so there is nothing to co-locate and the
+//! workload opts out of the exchange via [`Workload::needs_shuffle`].
+//! Both engines then skip the shuffle entirely: results stay on the node
+//! (Blaze) or in the map partition (Spark) that produced them, and
+//! [`crate::mapreduce::JobReport::shuffle_bytes`] reads 0 — the `NetModel`
+//! cost the paper's local-reduce argument is about simply disappears.
+//! Set [`crate::mapreduce::JobSpec::force_shuffle()`] to run the exchange
+//! anyway and measure what the skip saves.
+
+use crate::mapreduce::Workload;
+
+/// Emit every line containing `pattern` (plain substring match), keyed by
+/// line id. Output is sorted by line id, so it is deterministic across
+/// engines and cluster shapes.
+#[derive(Clone, Debug)]
+pub struct Grep {
+    pub pattern: String,
+}
+
+impl Grep {
+    pub fn new(pattern: impl Into<String>) -> Self {
+        Self { pattern: pattern.into() }
+    }
+}
+
+impl Workload for Grep {
+    type Key = u64;
+    type Value = String;
+    type Output = Vec<(u64, String)>;
+
+    fn name(&self) -> &'static str {
+        "grep"
+    }
+
+    /// Keys are globally unique (one emission per matching line), so the
+    /// engines may skip the exchange — the zero-shuffle fast path.
+    fn needs_shuffle(&self) -> bool {
+        false
+    }
+
+    fn map(&self, doc: u64, record: &str, emit: &mut dyn FnMut(u64, String)) {
+        if record.contains(self.pattern.as_str()) {
+            emit(doc, record.to_string());
+        }
+    }
+
+    /// Unreachable: every key is emitted exactly once. (It must still be
+    /// total — `force_shuffle` routes entries through the exchange, where
+    /// distinct keys still never collide.)
+    fn combine(acc: &mut String, v: String) {
+        debug_assert!(*acc == v, "grep key collided: {acc:?} vs {v:?}");
+        let _ = v;
+    }
+
+    fn finalize(&self, mut entries: Vec<(u64, String)>) -> Vec<(u64, String)> {
+        entries.sort_unstable_by_key(|&(doc, _)| doc);
+        entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Corpus;
+    use crate::mapreduce::run_serial;
+
+    #[test]
+    fn matches_are_sorted_by_line_id() {
+        let corpus = Corpus::from_text("the cat\ndog\nthe end\ncat the\n");
+        let out = run_serial(&Grep::new("the"), &corpus);
+        assert_eq!(
+            out,
+            vec![
+                (0, "the cat".to_string()),
+                (2, "the end".to_string()),
+                (3, "cat the".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn no_matches_is_empty() {
+        let corpus = Corpus::from_text("a\nb\n");
+        assert!(run_serial(&Grep::new("zebra"), &corpus).is_empty());
+    }
+
+    #[test]
+    fn empty_pattern_matches_every_line() {
+        let corpus = Corpus::from_text("a\nb\n");
+        assert_eq!(run_serial(&Grep::new(""), &corpus).len(), 2);
+    }
+}

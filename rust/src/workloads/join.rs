@@ -1,0 +1,210 @@
+//! Equi-join of two relations, co-grouped by key — the first true
+//! multi-input workload.
+//!
+//! Input shape: each line of either relation is `key payload...` — the
+//! first space-separated token is the join key, the rest of the line is
+//! the payload (possibly empty). [`Join`]'s [`Workload::map_rel`] tags
+//! every emission with the side it came from, the engines co-locate both sides of a key
+//! through one shuffle (Blaze: the shared [`crate::dist::DistHashMap`];
+//! Spark: union-then-`reduceByKey`), and `finalize_local` filters to
+//! inner-join semantics — a key survives only if both sides are
+//! non-empty. That filter is a valid *filtering partial reduce*: after the
+//! exchange each shard holds **all** values of its keys, so the per-key
+//! decision is globally correct.
+
+use std::collections::HashMap;
+
+use crate::engines::spark::HeapSize;
+use crate::mapreduce::Workload;
+use crate::util::ser::{Decode, DecodeError, Encode, Reader};
+
+/// Relation index of the left side in the job's [`crate::mapreduce::JobInputs`].
+pub const LEFT: usize = 0;
+/// Relation index of the right side.
+pub const RIGHT: usize = 1;
+
+/// Partial co-group for one key: the payloads seen on each side so far.
+/// This is the shuffle value type, so it carries its own wire format and
+/// JVM heap-cost model (the worked example for workload authors who need
+/// a value type the framework doesn't already cover).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct JoinSides {
+    pub left: Vec<String>,
+    pub right: Vec<String>,
+}
+
+impl JoinSides {
+    fn one(rel: usize, payload: &str) -> Self {
+        let mut sides = Self::default();
+        match rel {
+            LEFT => sides.left.push(payload.to_string()),
+            RIGHT => sides.right.push(payload.to_string()),
+            other => panic!("join got relation index {other}, expected {LEFT} or {RIGHT}"),
+        }
+        sides
+    }
+
+    /// Number of joined output pairs this key contributes (|left|·|right|).
+    pub fn pairs(&self) -> u64 {
+        self.left.len() as u64 * self.right.len() as u64
+    }
+}
+
+impl Encode for JoinSides {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.left.encode(out);
+        self.right.encode(out);
+    }
+}
+
+impl Decode for JoinSides {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(Self { left: Vec::decode(r)?, right: Vec::decode(r)? })
+    }
+}
+
+impl HeapSize for JoinSides {
+    fn heap_bytes(&self) -> usize {
+        self.left.heap_bytes() + self.right.heap_bytes() + 16 // object header
+    }
+}
+
+/// Inner equi-join of two relations, co-grouped by key.
+///
+/// Output: key → ([`JoinSides`] with both sides sorted), for every key
+/// present in *both* relations. Run it with
+/// `JobSpec::run_inputs(&w, &JobInputs::new().relation("left", ..).relation("right", ..))`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Join;
+
+impl Join {
+    pub fn new() -> Self {
+        Join
+    }
+
+    /// `key payload` split of one record; `None` for blank lines.
+    fn split_record(record: &str) -> Option<(&str, &str)> {
+        let rec = record.trim();
+        if rec.is_empty() {
+            return None;
+        }
+        match rec.split_once(' ') {
+            Some((key, rest)) => Some((key, rest.trim())),
+            None => Some((rec, "")),
+        }
+    }
+}
+
+impl Workload for Join {
+    type Key = String;
+    type Value = JoinSides;
+    type Output = HashMap<String, JoinSides>;
+
+    fn name(&self) -> &'static str {
+        "join"
+    }
+
+    fn num_relations(&self) -> usize {
+        2
+    }
+
+    /// Multi-input stub: engines and oracles route through `map_rel`, and
+    /// the job layer rejects single-relation inputs before any mapping.
+    fn map(&self, _doc: u64, _record: &str, _emit: &mut dyn FnMut(String, JoinSides)) {
+        unreachable!("join is multi-input; use map_rel (run it via run_inputs/run_serial_inputs)");
+    }
+
+    fn map_rel(
+        &self,
+        rel: usize,
+        _doc: u64,
+        record: &str,
+        emit: &mut dyn FnMut(String, JoinSides),
+    ) {
+        if let Some((key, payload)) = Self::split_record(record) {
+            emit(key.to_string(), JoinSides::one(rel, payload));
+        }
+    }
+
+    fn combine(acc: &mut JoinSides, mut v: JoinSides) {
+        acc.left.append(&mut v.left);
+        acc.right.append(&mut v.right);
+    }
+
+    /// Inner-join filter: post-shuffle each shard holds every value of its
+    /// keys, so dropping keys with an empty side here is exact.
+    fn finalize_local(
+        &self,
+        shard: Vec<(String, JoinSides)>,
+    ) -> Vec<(String, JoinSides)> {
+        shard
+            .into_iter()
+            .filter(|(_, s)| !s.left.is_empty() && !s.right.is_empty())
+            .collect()
+    }
+
+    /// Payloads arrive in shuffle order; sorting both sides makes the
+    /// co-groups deterministic across engines and cluster shapes.
+    fn finalize(&self, entries: Vec<(String, JoinSides)>) -> HashMap<String, JoinSides> {
+        entries
+            .into_iter()
+            .map(|(k, mut s)| {
+                s.left.sort_unstable();
+                s.right.sort_unstable();
+                (k, s)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Corpus;
+    use crate::mapreduce::{run_serial_inputs, JobInputs};
+
+    fn inputs(left: &str, right: &str) -> JobInputs {
+        JobInputs::new()
+            .relation("left", &Corpus::from_text(left))
+            .relation("right", &Corpus::from_text(right))
+    }
+
+    #[test]
+    fn inner_join_co_groups() {
+        let out = run_serial_inputs(
+            &Join::new(),
+            &inputs("a 1\nb 2\na 3\nc 9\n", "a x\nb y\nb z\nd q\n"),
+        );
+        assert_eq!(out.len(), 2, "only keys on both sides survive: {out:?}");
+        assert_eq!(
+            out["a"],
+            JoinSides { left: vec!["1".into(), "3".into()], right: vec!["x".into()] }
+        );
+        assert_eq!(
+            out["b"],
+            JoinSides { left: vec!["2".into()], right: vec!["y".into(), "z".into()] }
+        );
+        assert_eq!(out["a"].pairs(), 2);
+    }
+
+    #[test]
+    fn empty_side_yields_empty_join() {
+        let out = run_serial_inputs(&Join::new(), &inputs("a 1\nb 2\n", ""));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn keyless_payload_and_blank_lines() {
+        // Single-token lines join with empty payloads; blank lines vanish.
+        let out = run_serial_inputs(&Join::new(), &inputs("k\n\n", "k v\n   \n"));
+        assert_eq!(out["k"], JoinSides { left: vec!["".into()], right: vec!["v".into()] });
+    }
+
+    #[test]
+    fn sides_roundtrip_wire_format() {
+        let s = JoinSides { left: vec!["a b".into(), "".into()], right: vec!["c".into()] };
+        let bytes = s.to_bytes();
+        assert_eq!(JoinSides::from_bytes(&bytes).unwrap(), s);
+        assert!(s.heap_bytes() > 0);
+    }
+}

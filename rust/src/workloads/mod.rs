@@ -1,6 +1,9 @@
-//! Concrete [`Workload`]s for the generic job layer.
+//! Concrete [`Workload`]s for the generic job layer — and the
+//! **workload-authoring guide**.
 //!
-//! Four workloads, chosen to exercise different corners of the pipeline:
+//! # The workload table
+//!
+//! Seven workloads, chosen to exercise different corners of the pipeline:
 //!
 //! * [`WordCount`] — the paper's job: `(word, 1)` with a sum reducer. The
 //!   canonical string-keyed, alloc-sensitive case.
@@ -13,11 +16,72 @@
 //! * [`LengthHistogram`] — token-length → count over a dense, tiny integer
 //!   key domain; the map pre-combines per record into a stack array, so
 //!   emissions ≪ tokens.
+//! * [`Join`] — inner equi-join of **two tagged input relations**,
+//!   co-grouped by key: the multi-input pattern
+//!   ([`Workload::num_relations`] + [`Workload::map_rel`]) with a custom
+//!   shuffle value type ([`JoinSides`]) and a filtering `finalize_local`.
+//! * [`DistinctCount`] — HyperLogLog-style register sketch: a **max**
+//!   reducer and a `finalize` that genuinely merges (registers →
+//!   cardinality estimate), the part of the contract nothing else touches.
+//! * [`Grep`] — filter-only scan with globally unique keys: opts out of
+//!   the exchange via [`Workload::needs_shuffle`], so both engines take
+//!   the zero-shuffle fast path and report 0 shuffle bytes.
 //!
-//! Every workload is verified against [`run_serial`] on every engine in
-//! `tests/integration_workloads.rs`. To add a fifth workload: implement
-//! [`Workload`] (and [`StrWorkload`] if keys are borrowed `&str`s), wire a
-//! `--workload` arm in `main.rs`, and add it to the parity test grid.
+//! Every workload is verified against [`mapreduce::run_serial`] (or
+//! [`mapreduce::run_serial_inputs`] for the join) on every engine in
+//! `tests/integration_workloads.rs`, including under injected failures.
+//!
+//! # Adding a workload
+//!
+//! 1. **Implement [`Workload`].** Pick `Key`/`Value` types that satisfy
+//!    [`mapreduce::JobKey`]/[`mapreduce::JobValue`] (the built-in
+//!    integers, `String`, `Vec<T>` and tuples already do; for a custom
+//!    value type implement `Encode`/`Decode`/`HeapSize` yourself —
+//!    [`JoinSides`] is the worked example). Single-input workloads
+//!    implement `map`; multi-input workloads override `map_rel` and
+//!    `num_relations` and stub `map` with a panic (engines only call
+//!    `map_rel` — see [`Join`]). `combine` must be associative and
+//!    commutative: engines fold in thread, cache, and shuffle arrival
+//!    order.
+//! 2. **Respect the `finalize_local` contract.** Engines apply it
+//!    independently to each owned shard, so it must be a *filtering
+//!    partial reduce*: for any partition of the reduced entries into
+//!    disjoint shards, `finalize(concat(map(finalize_local, shards)))`
+//!    must equal `finalize(all entries)`. Identity (the default), bounded
+//!    top-K selection ([`TopKWords`]), and per-key filters over complete
+//!    groups ([`Join`]) all qualify; anything that mixes information
+//!    *across* keys it then discards does not.
+//! 3. **Make `finalize` deterministic.** Shuffle arrival order is not:
+//!    sort postings/sides, or reduce to an order-free type, so the parity
+//!    grid can use `assert_eq!`.
+//! 4. **Implement [`StrWorkload`] if keys are `&str` slices of the
+//!    record** (`map_str` must emit exactly what `map` emits, borrowed).
+//!    This unlocks Blaze's zero-alloc "TCM" insert path and the Spark
+//!    sim's UTF-16 `JvmWord` modeling — the paper's two headline
+//!    mechanisms. Integer-keyed and multi-input workloads skip this.
+//! 5. **Consider the fast paths.** If every key is emitted at most once
+//!    globally (a pure filter like [`Grep`]), override
+//!    [`Workload::needs_shuffle`] to `false` and the engines skip the
+//!    exchange entirely. If a record can pre-combine its own emissions
+//!    into a small dense structure ([`LengthHistogram`],
+//!    [`DistinctCount`]), do it in `map` — emissions are the unit of
+//!    engine work.
+//! 6. **Wire it up:** a `--workload` arm in `main.rs`, a row in the
+//!    parity grid in `tests/integration_workloads.rs` (with and without
+//!    injected failures), and an entry in `benches/workloads.rs`.
+//!
+//! [`mapreduce::run_serial`]: crate::mapreduce::run_serial
+//! [`mapreduce::run_serial_inputs`]: crate::mapreduce::run_serial_inputs
+//! [`mapreduce::JobKey`]: crate::mapreduce::JobKey
+//! [`mapreduce::JobValue`]: crate::mapreduce::JobValue
+
+mod distinct;
+mod grep;
+mod join;
+
+pub use distinct::{DistinctCount, REGISTERS};
+pub use grep::Grep;
+pub use join::{Join, JoinSides, LEFT, RIGHT};
 
 use std::collections::HashMap;
 

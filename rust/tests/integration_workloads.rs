@@ -8,8 +8,10 @@ use std::sync::Arc;
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::engines::Engine;
-use blaze::mapreduce::{run_serial, JobSpec};
-use blaze::workloads::{InvertedIndex, LengthHistogram, TopKWords, WordCount};
+use blaze::mapreduce::{run_serial, run_serial_inputs, JobInputs, JobSpec};
+use blaze::workloads::{
+    DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, TopKWords, WordCount,
+};
 
 const ENGINES: [Engine; 3] = [Engine::Blaze, Engine::BlazeTcm, Engine::Spark];
 
@@ -85,6 +87,132 @@ fn length_histogram_parity() {
     // Total histogram mass = total tokens.
     let total: u64 = expect.iter().map(|(_, n)| n).sum();
     assert_eq!(total, corpus.words);
+}
+
+/// Two key-overlapping relations for the join grid (same vocab, different
+/// seeds → shared keys, different lines).
+fn join_inputs(bytes: u64, seed: u64) -> JobInputs {
+    JobInputs::new()
+        .relation("left", &corpus(bytes, seed))
+        .relation("right", &corpus(bytes, seed + 1))
+}
+
+#[test]
+fn join_parity() {
+    let inputs = join_inputs(64 << 10, 21);
+    let w = Arc::new(Join::new());
+    let expect = run_serial_inputs(w.as_ref(), &inputs);
+    assert!(!expect.is_empty(), "relations share a vocabulary, keys must match");
+    // Inner join: every surviving key has both sides populated.
+    assert!(expect.values().all(|s| !s.left.is_empty() && !s.right.is_empty()));
+    for engine in [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped] {
+        let r = spec(engine).run_inputs(&w, &inputs).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        // Emissions came from both relations.
+        let total_lines: u64 =
+            inputs.relations.iter().map(|r| r.lines.len() as u64).sum();
+        assert!(r.records > 0 && r.records <= total_lines, "{}", engine.label());
+    }
+}
+
+#[test]
+fn join_parity_under_injected_failures() {
+    let inputs = join_inputs(32 << 10, 23);
+    let w = Arc::new(Join::new());
+    let expect = run_serial_inputs(w.as_ref(), &inputs);
+    for engine in ENGINES {
+        let r = spec(engine)
+            .failures(failure_plan(engine))
+            .run_inputs(&w, &inputs)
+            .unwrap();
+        assert_eq!(r.output, expect, "join {}", engine.label());
+    }
+}
+
+#[test]
+fn join_with_one_empty_relation_is_empty() {
+    let full = corpus(32 << 10, 24);
+    let empty = Corpus::from_text("");
+    let w = Arc::new(Join::new());
+    for (left, right) in [(&full, &empty), (&empty, &full)] {
+        let inputs = JobInputs::new().relation("left", left).relation("right", right);
+        let expect = run_serial_inputs(w.as_ref(), &inputs);
+        assert!(expect.is_empty());
+        for engine in ENGINES {
+            let r = spec(engine).run_inputs(&w, &inputs).unwrap();
+            assert_eq!(r.output, expect, "{}", engine.label());
+        }
+    }
+}
+
+#[test]
+fn relation_arity_is_validated() {
+    let c = Corpus::from_text("a 1\n");
+    let join = Arc::new(Join::new());
+    // Join through the single-input entry: 1 relation != 2.
+    let err = spec(Engine::Blaze).run(&join, &c).unwrap_err();
+    assert!(err.to_string().contains("expects 2 input relation(s)"), "{err}");
+    // Single-input workload handed 2 relations.
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let two = JobInputs::new().relation("a", &c).relation("b", &c);
+    let err = spec(Engine::Spark).run_inputs(&wc, &two).unwrap_err();
+    assert!(err.to_string().contains("expects 1 input relation(s)"), "{err}");
+}
+
+#[test]
+fn distinct_count_parity() {
+    let corpus = corpus(96 << 10, 25);
+    let w = Arc::new(DistinctCount::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    assert!(expect > 0);
+    for engine in [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped] {
+        let r = spec(engine).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+    // Sketch emissions are bounded by records × registers, and in practice
+    // collapse to a near-constant per-node register file after combining.
+    for engine in ENGINES {
+        let r = spec(engine).failures(failure_plan(engine)).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "under failures, {}", engine.label());
+    }
+}
+
+#[test]
+fn grep_parity_zero_shuffle_and_forced_exchange() {
+    let corpus = corpus(64 << 10, 26);
+    let w = Arc::new(Grep::new("the"));
+    let expect = run_serial(w.as_ref(), &corpus);
+    assert!(!expect.is_empty(), "generated corpora contain 'the'");
+    for engine in ENGINES {
+        // Fast path: identical output, zero bytes on the wire.
+        let r = spec(engine).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert_eq!(
+            r.shuffle_bytes,
+            0,
+            "zero-shuffle path must not touch the exchange ({})",
+            engine.label()
+        );
+        // Forced exchange: same output, but now bytes move.
+        let r = spec(engine).force_shuffle(true).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "forced, {}", engine.label());
+        assert!(
+            r.shuffle_bytes > 0,
+            "forced exchange must serialize entries ({})",
+            engine.label()
+        );
+    }
+}
+
+#[test]
+fn grep_zero_shuffle_survives_failures() {
+    let corpus = corpus(32 << 10, 27);
+    let w = Arc::new(Grep::new("the"));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spec(engine).failures(failure_plan(engine)).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
 }
 
 #[test]

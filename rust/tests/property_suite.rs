@@ -230,3 +230,40 @@ fn prop_tokenizer_consistency() {
         Ok(())
     });
 }
+
+/// Join parity when one relation is empty: the inner join must be empty on
+/// every engine, matching the serial oracle — regardless of which side is
+/// empty, cluster shape, or the non-empty side's content.
+#[test]
+fn prop_join_parity_with_one_empty_relation() {
+    use blaze::mapreduce::{run_serial_inputs, JobInputs, JobSpec};
+    use blaze::workloads::Join;
+    use std::sync::Arc;
+
+    check_with(Config { cases: 12, ..Default::default() }, "join-empty-relation", |g| {
+        let lines: Vec<String> = g.vec_of(|g| g.line(6));
+        let full = Corpus::from_text(&lines.join("\n"));
+        let empty = Corpus::from_text("");
+        let (left, right) =
+            if g.bool() { (&full, &empty) } else { (&empty, &full) };
+        let inputs = JobInputs::new().relation("left", left).relation("right", right);
+        let w = Arc::new(Join::new());
+        let expect = run_serial_inputs(w.as_ref(), &inputs);
+        if !expect.is_empty() {
+            return fail(format!("serial inner join against empty side: {expect:?}"));
+        }
+        let nnodes = g.usize_in(1, 3);
+        for engine in [EngineChoice::Blaze, EngineChoice::BlazeTcm, EngineChoice::Spark] {
+            let r = JobSpec::new(engine)
+                .nodes(nnodes)
+                .threads_per_node(g.usize_in(1, 2))
+                .net(NetModel::ideal())
+                .run_inputs(&w, &inputs)
+                .map_err(|e| e.to_string())?;
+            if r.output != expect {
+                return fail(format!("{} diverged: {:?}", engine.label(), r.output));
+            }
+        }
+        Ok(())
+    });
+}
