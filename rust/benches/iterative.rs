@@ -1,0 +1,122 @@
+//! Experiment I1: iterative jobs and the in-memory partition cache.
+//!
+//! The paper calls Spark "an in-memory implementation of MapReduce", but
+//! benchmarks only a single-pass job — where caching never fires. This
+//! bench asks the question the paper couldn't: on workloads that re-read
+//! their input every round (PageRank, k-means), what does the cache buy,
+//! and does Blaze's advantage survive? Each workload runs on both engines
+//! at two cache budgets:
+//!
+//! * `unbounded` — parsed input splits are cached after round 0 and every
+//!   later round is served from memory (Spark's persisted-RDD regime);
+//! * `0` — every `put` is rejected, every round re-parses from scratch
+//!   (the recompute ablation).
+//!
+//! Rows report map emissions/sec across the whole multi-round run; the
+//! headline prints per-round wall clock (warm rounds only) and the cache
+//! hit rates, which must be >0 in the unbounded rows.
+//!
+//! Scale knobs: BLAZE_BENCH_BYTES (default 32MB, quartered here because
+//! every round re-reads it), BLAZE_BENCH_REPS.
+
+use std::sync::Arc;
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::cache::CacheBudget;
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec};
+use blaze::engines::Engine;
+use blaze::mapreduce::{run_iterative, IterativeReport, IterativeSpec, JobInputs, JobSpec};
+use blaze::util::stats::fmt_bytes;
+use blaze::workloads::{synthesize_points, KMeans, PageRank};
+
+const ROUNDS: usize = 5;
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine).nodes(2).threads_per_node(4).net(NetModel::aws_like())
+}
+
+fn it_spec(budget: CacheBudget) -> IterativeSpec {
+    // tolerance 0 with a fixed round count: every config does equal work.
+    IterativeSpec::new(ROUNDS).tolerance(0.0).cache_budget(budget)
+}
+
+fn total_records(r: &IterativeReport) -> f64 {
+    r.iters.iter().map(|i| i.records).sum::<u64>() as f64
+}
+
+/// Mean wall of the warm rounds (1..), where the cache can matter.
+fn warm_round_secs(r: &IterativeReport) -> f64 {
+    let warm = &r.iters[1..];
+    warm.iter().map(|i| i.wall_secs).sum::<f64>() / warm.len().max(1) as f64
+}
+
+fn main() {
+    let bytes = (bench_corpus_bytes() / 4).max(1 << 20);
+    let corpus = Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        vocab_size: 20_000,
+        ..Default::default()
+    });
+    let edges = JobInputs::new().relation("edges", &corpus);
+    let npoints = (bytes / 64) as usize; // ~comparable parse volume
+    let points =
+        JobInputs::new().relation_lines("points", Arc::new(synthesize_points(npoints, 4, 8, 7)));
+    eprintln!(
+        "I1: {} of edges / {npoints} points x {ROUNDS} rounds; 2 nodes x 4 threads, aws-like net",
+        fmt_bytes(corpus.bytes),
+    );
+
+    let engines = [Engine::Spark, Engine::BlazeTcm];
+    let budgets = [("unbounded", CacheBudget::Unbounded), ("0", CacheBudget::Bytes(0))];
+
+    let mut runner = BenchRunner::new("I1: iterative jobs — cache budget ablation");
+    for engine in engines {
+        for (label, budget) in budgets {
+            let edges = &edges;
+            runner.bench(
+                format!("pagerank x{ROUNDS} / {} / cache={label}", engine.label()),
+                "recs",
+                move || {
+                    let r = run_iterative(&spec(engine), &it_spec(budget), &PageRank::new(), edges)
+                        .expect("pagerank");
+                    total_records(&r)
+                },
+            );
+        }
+    }
+    for engine in engines {
+        for (label, budget) in budgets {
+            let points = &points;
+            runner.bench(
+                format!("kmeans x{ROUNDS} / {} / cache={label}", engine.label()),
+                "recs",
+                move || {
+                    let r = run_iterative(&spec(engine), &it_spec(budget), &KMeans::new(8), points)
+                        .expect("kmeans");
+                    total_records(&r)
+                },
+            );
+        }
+    }
+    runner.finish();
+
+    // Headline: warm-round wall clock + hit rates, one fresh run per cell.
+    println!("\nI1 headline (per warm round, cached vs recompute):");
+    for engine in engines {
+        let warm = run_iterative(&spec(engine), &it_spec(CacheBudget::Unbounded), &PageRank::new(), &edges)
+            .expect("pagerank");
+        let cold = run_iterative(&spec(engine), &it_spec(CacheBudget::Bytes(0)), &PageRank::new(), &edges)
+            .expect("pagerank");
+        assert_eq!(warm.state, cold.state, "cache must not change results");
+        assert!(warm.cache.hit_rate() > 0.0, "unbounded run must hit");
+        println!(
+            "  pagerank / {:<16} warm {:>8.3}s/round vs recompute {:>8.3}s/round ({:.2}x)   cache: {}",
+            engine.label(),
+            warm_round_secs(&warm),
+            warm_round_secs(&cold),
+            warm_round_secs(&cold) / warm_round_secs(&warm).max(1e-12),
+            warm.cache,
+        );
+    }
+}

@@ -1,0 +1,534 @@
+//! In-memory partition cache — the subsystem behind "Spark is an
+//! *in-memory* implementation of MapReduce".
+//!
+//! The paper's comparison runs single-pass jobs, where caching never pays
+//! off. Iterative jobs (PageRank, k-means) re-read their input every
+//! round, and this module is what turns that re-read into a memory hit:
+//! a **memory-budgeted, size-aware partition store** with LRU eviction,
+//! per-entry byte accounting, and hit/miss/evict statistics that the job
+//! layer surfaces into [`crate::mapreduce::JobReport`].
+//!
+//! Both engines sit on top of it:
+//!
+//! * the Spark sim's [`Rdd::persist`](crate::engines::spark::Rdd::persist)
+//!   / `cache()` stores materialized partitions here and **recomputes from
+//!   lineage** when an entry was evicted (exactly Spark's
+//!   `MemoryStore` + `BlockManager` contract);
+//! * Blaze caches **parsed input splits** keyed by
+//!   `(relation, generation, node)` so later iterations of an iterative
+//!   job skip tokenization (see
+//!   [`crate::engines::blaze::run_workload_cached`]).
+//!
+//! # The budget knob ↔ `spark.memory.fraction`
+//!
+//! [`CacheBudget`] plays the role of Spark's storage memory pool: real
+//! Spark sizes it as `spark.memory.fraction × (heap − 300 MiB)` (0.6 by
+//! default, shared with execution, `spark.memory.storageFraction`
+//! protecting half of it), and evicts cached blocks LRU-first when the
+//! pool fills. We model the *consequence* of that machinery, not its
+//! negotiation: `CacheBudget::Bytes(n)` is the storage pool size, entries
+//! above the whole budget are rejected outright (Spark: "block too large
+//! to cache"), and eviction is least-recently-used by entry. Two settings
+//! bracket every experiment:
+//!
+//! * `CacheBudget::Unbounded` — a heap big enough to hold the working set
+//!   (the regime in which Spark's in-memory claim is usually stated);
+//! * `CacheBudget::Bytes(0)` — no storage pool at all: every round
+//!   recomputes from scratch, the ablation that measures what the cache
+//!   buys.
+//!
+//! Sizes are *estimates* supplied by the caller (via
+//! [`crate::engines::spark::HeapSize`]), mirroring Spark's
+//! `SizeEstimator`: accounting is approximate by design, the invariant —
+//! cached bytes never exceed the budget — is exact with respect to those
+//! estimates.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Memory budget of a [`PartitionCache`] — the `spark.memory.fraction`
+/// stand-in (see the module docs for the mapping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheBudget {
+    /// Cache everything, evict nothing.
+    Unbounded,
+    /// At most this many (estimated) bytes live in the cache; `Bytes(0)`
+    /// disables caching entirely — the recompute-every-round ablation.
+    Bytes(u64),
+}
+
+impl CacheBudget {
+    /// Parse a CLI-ish budget: `unbounded`/`inf`, `none`/`off`, or a size
+    /// (`64MB`, `512kb`, `4096`).
+    pub fn parse(s: &str) -> Option<CacheBudget> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "unbounded" | "inf" | "unlimited" => Some(CacheBudget::Unbounded),
+            "none" | "off" => Some(CacheBudget::Bytes(0)),
+            other => crate::util::cli::parse_bytes(other).map(CacheBudget::Bytes),
+        }
+    }
+}
+
+impl std::fmt::Display for CacheBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheBudget::Unbounded => write!(f, "unbounded"),
+            CacheBudget::Bytes(b) => write!(f, "{}", crate::util::stats::fmt_bytes(*b)),
+        }
+    }
+}
+
+/// Identity of one cached partition.
+///
+/// * `namespace` — which dataset: an input relation index for the
+///   iterative runners, or a fresh RDD persist id on the Spark sim.
+/// * `generation` — version of that dataset's *contents*; bumping it
+///   invalidates (by never matching) every entry of older generations,
+///   which the writer then drops via
+///   [`PartitionCache::invalidate_generations_below`] (bounded budgets
+///   would also age them out through LRU).
+/// * `partition` — the split: a node rank on Blaze, a partition index on
+///   the Spark sim.
+/// * `splits` — how many splits the dataset was cut into when this entry
+///   was produced (node count on Blaze, RDD partition count on the Spark
+///   sim). Keying on the shape means a cache shared across jobs with
+///   different cluster shapes can never serve a split cut for a
+///   different decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub namespace: u64,
+    pub generation: u64,
+    pub partition: u64,
+    pub splits: u64,
+}
+
+/// Counter snapshot of one cache (counters are cumulative since creation;
+/// `bytes_cached`/`entries` are point-in-time gauges).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Entries refused because they alone exceed the whole budget (all
+    /// entries, when the budget is 0).
+    pub rejected: u64,
+    pub bytes_cached: u64,
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from memory.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counters accumulated since `earlier` (gauges keep `self`'s value) —
+    /// what one job or one iteration did to a shared cache.
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            insertions: self.insertions - earlier.insertions,
+            evictions: self.evictions - earlier.evictions,
+            rejected: self.rejected - earlier.rejected,
+            bytes_cached: self.bytes_cached,
+            entries: self.entries,
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} ({:.0}% hit) evict={} reject={} cached={}",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.evictions,
+            self.rejected,
+            crate::util::stats::fmt_bytes(self.bytes_cached),
+        )
+    }
+}
+
+/// One cached value: type-erased payload + its estimated size + recency.
+struct Slot {
+    value: Arc<dyn Any + Send + Sync>,
+    bytes: u64,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: HashMap<CacheKey, Slot>,
+    bytes: u64,
+    /// Monotonic recency clock; bumped on every touch.
+    tick: u64,
+}
+
+/// The memory-budgeted, size-aware partition store (see module docs).
+///
+/// Thread-safe and cheap to share (`Arc<PartitionCache>`); both engines
+/// and the iterative driver hold the same instance so cached partitions
+/// survive across job rounds.
+pub struct PartitionCache {
+    budget: CacheBudget,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl std::fmt::Debug for PartitionCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PartitionCache")
+            .field("budget", &self.budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl PartitionCache {
+    pub fn new(budget: CacheBudget) -> Self {
+        Self {
+            budget,
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget(&self) -> CacheBudget {
+        self.budget
+    }
+
+    /// `true` when the budget is `Bytes(0)`: nothing can ever be admitted.
+    /// Engines check this up front so the recompute ablation doesn't pay
+    /// for cloning and size-estimating partitions that are certain to be
+    /// rejected — the ablation must measure recomputation, not a
+    /// caching-shaped detour.
+    pub fn is_disabled(&self) -> bool {
+        self.budget == CacheBudget::Bytes(0)
+    }
+
+    /// Could an entry of `bytes` estimated size ever be admitted? `false`
+    /// means [`put`](Self::put) is guaranteed to reject it — callers use
+    /// this to skip the deep clone a doomed insert would need. Does not
+    /// touch the stats (only an actual `put` counts as a rejection).
+    pub fn fits(&self, bytes: u64) -> bool {
+        match self.budget {
+            CacheBudget::Unbounded => true,
+            CacheBudget::Bytes(limit) => limit > 0 && bytes <= limit,
+        }
+    }
+
+    /// Look up a partition. A hit bumps the entry's recency (it becomes
+    /// the most recently used) and is counted in the stats.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.slots.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                self.hits.fetch_add(1, Relaxed);
+                Some(Arc::clone(&slot.value))
+            }
+            None => {
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// [`get`](Self::get) plus a downcast to the stored type. A type
+    /// mismatch behaves — and is counted — as a **miss**: the caller will
+    /// recompute, so the hit the raw lookup recorded is reclassified.
+    /// (Mismatches cannot happen when every writer of a namespace stores
+    /// one type, which is what the engines do.)
+    pub fn get_typed<T: Any + Send + Sync>(&self, key: &CacheKey) -> Option<Arc<T>> {
+        match self.get(key)?.downcast::<T>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                self.hits.fetch_sub(1, Relaxed);
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a partition of `bytes` estimated size, evicting
+    /// least-recently-used entries until it fits. Returns `false` (and
+    /// counts a rejection) when the entry alone exceeds the whole budget;
+    /// a budget of 0 rejects **everything**, even zero-byte entries —
+    /// `Bytes(0)` means caching is off.
+    pub fn put(&self, key: CacheKey, value: Arc<dyn Any + Send + Sync>, bytes: u64) -> bool {
+        if let CacheBudget::Bytes(limit) = self.budget {
+            if limit == 0 || bytes > limit {
+                self.rejected.fetch_add(1, Relaxed);
+                return false;
+            }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.slots.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        if let CacheBudget::Bytes(limit) = self.budget {
+            while inner.bytes + bytes > limit {
+                let lru = inner
+                    .slots
+                    .iter()
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| *k)
+                    .expect("over budget with no entries");
+                let victim = inner.slots.remove(&lru).unwrap();
+                inner.bytes -= victim.bytes;
+                self.evictions.fetch_add(1, Relaxed);
+            }
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.bytes += bytes;
+        inner.slots.insert(key, Slot { value, bytes, last_used: tick });
+        self.insertions.fetch_add(1, Relaxed);
+        true
+    }
+
+    /// Is `key` currently resident? Does not touch recency or stats
+    /// (observation hook for tests and diagnostics).
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.inner.lock().unwrap().slots.contains_key(key)
+    }
+
+    /// Drop every resident entry of `namespace` with a generation older
+    /// than `keep_generation` — the writer's hook for freeing splits that
+    /// can never be read again (the iterative driver calls this as it
+    /// bumps the fed-back state relation's generation, so an unbounded
+    /// cache does not accumulate one dead parsed state per round).
+    /// Returns how many entries were dropped. Not counted as evictions:
+    /// these are deliberate removals, not budget pressure.
+    pub fn invalidate_generations_below(&self, namespace: u64, keep_generation: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let victims: Vec<CacheKey> = inner
+            .slots
+            .keys()
+            .filter(|k| k.namespace == namespace && k.generation < keep_generation)
+            .copied()
+            .collect();
+        for k in &victims {
+            let slot = inner.slots.remove(k).unwrap();
+            inner.bytes -= slot.bytes;
+        }
+        victims.len()
+    }
+
+    /// Estimated bytes currently resident.
+    pub fn bytes_cached(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (counters are kept — they are cumulative).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.slots.clear();
+        inner.bytes = 0;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let (bytes_cached, entries) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes, inner.slots.len() as u64)
+        };
+        CacheStats {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            insertions: self.insertions.load(Relaxed),
+            evictions: self.evictions.load(Relaxed),
+            rejected: self.rejected.load(Relaxed),
+            bytes_cached,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }
+    }
+
+    fn val(x: u64) -> Arc<dyn Any + Send + Sync> {
+        Arc::new(vec![x, x + 1])
+    }
+
+    #[test]
+    fn hit_returns_stored_value() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        assert!(c.put(key(1), val(7), 100));
+        let got = c.get_typed::<Vec<u64>>(&key(1)).expect("hit");
+        assert_eq!(*got, vec![7, 8]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 0, 1));
+        assert_eq!(s.bytes_cached, 100);
+    }
+
+    fn nkey(namespace: u64, generation: u64, partition: u64) -> CacheKey {
+        CacheKey { namespace, generation, partition, splits: 1 }
+    }
+
+    #[test]
+    fn miss_on_generation_or_shape_mismatch() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        c.put(nkey(3, 0, 0), val(1), 10);
+        assert!(c.get(&nkey(3, 1, 0)).is_none(), "newer generation never matches");
+        assert!(
+            c.get(&CacheKey { namespace: 3, generation: 0, partition: 0, splits: 2 }).is_none(),
+            "a different decomposition never matches"
+        );
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn zero_sized_entries_are_rejected_at_zero_budget() {
+        let c = PartitionCache::new(CacheBudget::Bytes(0));
+        assert!(!c.put(key(1), val(1), 0), "Bytes(0) means caching is off");
+        assert!(c.is_empty());
+        assert_eq!(c.stats().rejected, 1);
+    }
+
+    #[test]
+    fn invalidate_generations_below_frees_stale_entries() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        for generation in 0..3 {
+            c.put(nkey(7, generation, 0), val(generation), 10);
+            c.put(nkey(7, generation, 1), val(generation), 10);
+        }
+        c.put(nkey(8, 0, 0), val(9), 10); // other namespace: untouched
+        assert_eq!(c.invalidate_generations_below(7, 2), 4);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.bytes_cached(), 30);
+        assert!(c.contains(&nkey(7, 2, 0)) && c.contains(&nkey(7, 2, 1)));
+        assert!(c.contains(&nkey(8, 0, 0)));
+        assert_eq!(c.stats().evictions, 0, "invalidation is not eviction");
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let c = PartitionCache::new(CacheBudget::Bytes(250));
+        c.put(key(1), val(1), 100);
+        c.put(key(2), val(2), 100);
+        // Touch 1 so 2 becomes LRU.
+        assert!(c.get(&key(1)).is_some());
+        c.put(key(3), val(3), 100); // must evict 2
+        assert!(c.contains(&key(1)));
+        assert!(!c.contains(&key(2)));
+        assert!(c.contains(&key(3)));
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.bytes_cached() <= 250);
+    }
+
+    #[test]
+    fn oversized_entry_is_rejected() {
+        let c = PartitionCache::new(CacheBudget::Bytes(64));
+        assert!(!c.put(key(1), val(1), 65));
+        assert!(c.is_empty());
+        assert_eq!(c.stats().rejected, 1);
+    }
+
+    #[test]
+    fn zero_budget_disables_caching() {
+        let c = PartitionCache::new(CacheBudget::Bytes(0));
+        assert!(!c.put(key(1), val(1), 1));
+        assert!(c.get(&key(1)).is_none());
+        let s = c.stats();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 0);
+    }
+
+    #[test]
+    fn replacing_a_key_adjusts_bytes() {
+        let c = PartitionCache::new(CacheBudget::Bytes(300));
+        c.put(key(1), val(1), 200);
+        c.put(key(1), val(2), 50);
+        assert_eq!(c.bytes_cached(), 50);
+        assert_eq!(c.len(), 1);
+        assert_eq!(*c.get_typed::<Vec<u64>>(&key(1)).unwrap(), vec![2, 3]);
+    }
+
+    #[test]
+    fn delta_since_subtracts_counters() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        c.put(key(1), val(1), 10);
+        let before = c.stats();
+        c.get(&key(1));
+        c.get(&key(9));
+        let d = c.stats().delta_since(&before);
+        assert_eq!((d.hits, d.misses, d.insertions), (1, 1, 0));
+    }
+
+    #[test]
+    fn budget_parses() {
+        assert_eq!(CacheBudget::parse("unbounded"), Some(CacheBudget::Unbounded));
+        assert_eq!(CacheBudget::parse("none"), Some(CacheBudget::Bytes(0)));
+        assert_eq!(CacheBudget::parse("0"), Some(CacheBudget::Bytes(0)));
+        assert_eq!(CacheBudget::parse("64kb"), Some(CacheBudget::Bytes(64 << 10)));
+        assert_eq!(CacheBudget::parse("what"), None);
+    }
+
+    #[test]
+    fn type_mismatch_counts_as_miss() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        c.put(key(1), val(1), 10);
+        assert!(c.get_typed::<Vec<i64>>(&key(1)).is_none(), "stored type is Vec<u64>");
+        let s = c.stats();
+        assert_eq!(s.hits, 0, "the caller recomputes, so this was no hit: {s:?}");
+        assert_eq!(s.misses, 1, "{s:?}");
+        // The correctly typed lookup still hits.
+        assert!(c.get_typed::<Vec<u64>>(&key(1)).is_some());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn fits_respects_budget() {
+        assert!(PartitionCache::new(CacheBudget::Unbounded).fits(u64::MAX));
+        let c = PartitionCache::new(CacheBudget::Bytes(100));
+        assert!(c.fits(100));
+        assert!(!c.fits(101));
+        assert!(!PartitionCache::new(CacheBudget::Bytes(0)).fits(0), "Bytes(0) admits nothing");
+    }
+
+    #[test]
+    fn clear_keeps_counters() {
+        let c = PartitionCache::new(CacheBudget::Unbounded);
+        c.put(key(1), val(1), 10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_cached(), 0);
+        assert_eq!(c.stats().insertions, 1);
+    }
+}

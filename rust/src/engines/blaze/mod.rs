@@ -23,16 +23,19 @@
 //!   [`run_workload_str`], available to [`StrWorkload`]s, and stands in
 //!   for TCMalloc's cheap small allocations (see DESIGN.md §2).
 
+use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::cache::{CacheKey, PartitionCache};
 use crate::cluster::{spawn_on_fabric, Comm, Fabric, FailurePlan, NetModel};
 use crate::concurrent::{CachePolicy, MapKey, MapValue};
 use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
+use crate::engines::spark::HeapSize;
 use crate::hash::HashKind;
-use crate::mapreduce::{StrWorkload, Workload};
+use crate::mapreduce::{CacheableWorkload, StrWorkload, Workload};
 use crate::util::pool::{self, Schedule};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
@@ -201,6 +204,122 @@ pub fn run_workload_multi<W: Workload>(
         },
         |shard| w.finalize_local(shard),
     )
+}
+
+/// Run a [`CacheableWorkload`] with a partition-result cache: each node's
+/// **parsed** block of every relation is stored in `cache` under
+/// `(relation, generation, node rank)`, so a later run over the same
+/// relation contents (same generation — the iterative driver's static
+/// relations) skips tokenization entirely and goes straight to
+/// `map_parsed` + combine. A changed relation bumps its generation and
+/// re-parses; writers drop stale generations via
+/// `PartitionCache::invalidate_generations_below` (bounded budgets would
+/// also LRU them out). With
+/// `CacheBudget::Bytes(0)` every `put` is rejected and every round
+/// re-parses — the recompute ablation.
+///
+/// The cached path always materializes owned parsed records, so the
+/// [`KeyPath`] distinction (borrowed-key inserts) does not apply here.
+pub fn run_workload_cached<W: CacheableWorkload>(
+    conf: &BlazeConf,
+    relations: &[Arc<Vec<String>>],
+    gens: &[u64],
+    cache: &Arc<PartitionCache>,
+    failures: &FailurePlan,
+    w: &W,
+) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
+    assert!(!relations.is_empty(), "a job needs at least one input relation");
+    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
+    run_attempts(
+        conf,
+        failures,
+        skip_shuffle,
+        W::combine,
+        |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
+            let mut records = 0u64;
+            for (rel, lines) in relations.iter().enumerate() {
+                let key = CacheKey {
+                    namespace: rel as u64,
+                    generation: gens.get(rel).copied().unwrap_or(0),
+                    partition: comm.rank as u64,
+                    // Key on the decomposition too: a cache shared across
+                    // cluster shapes must never serve another shape's block.
+                    splits: conf.nnodes as u64,
+                };
+                let reparse = || {
+                    Arc::new(parse_node_block(conf, lines, comm.rank, |i, line| {
+                        w.parse_rel(rel, i as u64, line)
+                    }))
+                };
+                // Budget 0 = the recompute ablation: go straight to the
+                // parser — no lookup, no size estimate, no rejected put —
+                // so the ablation times recomputation, nothing else.
+                let parsed: Arc<Vec<W::Parsed>> = if cache.is_disabled() {
+                    reparse()
+                } else {
+                    match cache.get_typed(&key) {
+                        Some(hit) => hit,
+                        None => {
+                            let block = reparse();
+                            let bytes = block.heap_bytes() as u64;
+                            let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&block);
+                            cache.put(key, erased, bytes);
+                            block
+                        }
+                    }
+                };
+                let emitted = AtomicU64::new(0);
+                pool::parallel_for(
+                    conf.threads_per_node,
+                    parsed.len(),
+                    Schedule::Dynamic { chunk: 64 },
+                    |ctx, i| {
+                        let mut n = 0u64;
+                        w.map_parsed(rel, &parsed[i], &mut |k, v| {
+                            n += 1;
+                            map.upsert(ctx.worker, k, v, W::combine);
+                        });
+                        emitted.fetch_add(n, Ordering::Relaxed);
+                    },
+                );
+                records += emitted.load(Ordering::Relaxed);
+            }
+            records
+        },
+        |shard| w.finalize_local(shard),
+    )
+}
+
+/// Parse this node's contiguous block of `lines` across
+/// `threads_per_node` workers, preserving record order (records that
+/// parse to `None` are dropped).
+fn parse_node_block<P: Send>(
+    conf: &BlazeConf,
+    lines: &Arc<Vec<String>>,
+    rank: usize,
+    parse: impl Fn(usize, &str) -> Option<P> + Sync,
+) -> Vec<P> {
+    let range = DistRange::new(0, lines.len() as i64);
+    let (lo, hi) = range.node_block(rank, conf.nnodes);
+    let nthreads = conf.threads_per_node.max(1);
+    let chunk = ((hi - lo).div_ceil(nthreads)).max(1);
+    let mut out = Vec::with_capacity(hi - lo);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|t| {
+                let parse = &parse;
+                scope.spawn(move || {
+                    let a = (lo + t * chunk).min(hi);
+                    let b = (a + chunk).min(hi);
+                    (a..b).filter_map(|i| parse(i, &lines[i])).collect::<Vec<P>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parse worker panicked"));
+        }
+    });
+    out
 }
 
 /// Run a string-keyed [`StrWorkload`] through the zero-alloc borrowed-key

@@ -27,15 +27,19 @@ pub struct BlockId {
 pub enum BlockData {
     /// Serialized records (`Vec<(K, V)>` encoded with `util::ser`).
     Bytes(Vec<u8>),
-    /// Type-erased `Vec<(K, V)>` moved without serialization.
-    Typed(Box<dyn Any + Send + Sync>),
+    /// Type-erased `Vec<(K, V)>` moved without serialization, carrying a
+    /// heap-size estimate so memory metrics (and cache budgets) account
+    /// for native-engine blocks instead of silently reading them as 0.
+    Typed { data: Box<dyn Any + Send + Sync>, est_bytes: usize },
 }
 
 impl BlockData {
+    /// In-memory footprint: exact for serialized blocks, the caller's
+    /// `HeapSize` estimate for typed (unserialized) blocks.
     pub fn byte_len(&self) -> usize {
         match self {
             BlockData::Bytes(b) => b.len(),
-            BlockData::Typed(_) => 0,
+            BlockData::Typed { est_bytes, .. } => *est_bytes,
         }
     }
 }
@@ -105,11 +109,13 @@ impl BlockStore {
             Some(Block { owner_node, data: BlockData::Bytes(b), records }) => {
                 Some((*owner_node, FetchedData::Bytes(b.clone()), *records))
             }
-            Some(Block { data: BlockData::Typed(_), .. }) => {
+            Some(Block { data: BlockData::Typed { .. }, .. }) => {
                 // Take ownership of the typed payload.
                 let Block { owner_node, data, records } = map.remove(&id).unwrap();
                 match data {
-                    BlockData::Typed(t) => Some((owner_node, FetchedData::Typed(t), records)),
+                    BlockData::Typed { data, est_bytes } => {
+                        Some((owner_node, FetchedData::Typed { data, est_bytes }, records))
+                    }
                     BlockData::Bytes(_) => unreachable!(),
                 }
             }
@@ -171,7 +177,7 @@ impl Drop for BlockStore {
 
 pub enum FetchedData {
     Bytes(Vec<u8>),
-    Typed(Box<dyn Any + Send + Sync>),
+    Typed { data: Box<dyn Any + Send + Sync>, est_bytes: usize },
 }
 
 #[cfg(test)]
@@ -203,17 +209,29 @@ mod tests {
         let payload: Vec<(String, u64)> = vec![("a".into(), 1)];
         store.put(
             bid(1, 0),
-            Block { owner_node: 2, data: BlockData::Typed(Box::new(payload)), records: 1 },
+            Block {
+                owner_node: 2,
+                data: BlockData::Typed { data: Box::new(payload), est_bytes: 41 },
+                records: 1,
+            },
         );
         let (_, data, _) = store.fetch(bid(1, 0)).unwrap();
         match data {
-            FetchedData::Typed(t) => {
-                let v = t.downcast::<Vec<(String, u64)>>().unwrap();
+            FetchedData::Typed { data, est_bytes } => {
+                let v = data.downcast::<Vec<(String, u64)>>().unwrap();
                 assert_eq!(*v, vec![("a".to_string(), 1u64)]);
+                assert_eq!(est_bytes, 41);
             }
             _ => panic!("expected typed"),
         }
         assert!(store.fetch(bid(1, 0)).is_none(), "typed blocks are moved out");
+    }
+
+    #[test]
+    fn typed_blocks_report_estimated_bytes() {
+        let data = BlockData::Typed { data: Box::new(vec![1u64, 2]), est_bytes: 32 };
+        assert_eq!(data.byte_len(), 32);
+        assert_eq!(BlockData::Bytes(vec![0u8; 7]).byte_len(), 7);
     }
 
     #[test]

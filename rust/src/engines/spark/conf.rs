@@ -14,6 +14,7 @@
 
 use std::time::Duration;
 
+use crate::cache::CacheBudget;
 use crate::cluster::NetModel;
 
 #[derive(Clone, Debug)]
@@ -56,6 +57,11 @@ pub struct SparkConf {
     pub max_task_retries: usize,
     /// Whole-job restarts allowed when `fault_tolerance` is off.
     pub max_job_restarts: usize,
+    /// Size of the `Rdd::persist`/`cache` storage pool — the
+    /// `spark.memory.fraction` stand-in (see [`crate::cache`] for the
+    /// exact mapping). Ignored when the context is built over an injected
+    /// shared cache.
+    pub cache_budget: CacheBudget,
 }
 
 impl Default for SparkConf {
@@ -74,6 +80,7 @@ impl Default for SparkConf {
             task_launch_overhead: Duration::from_millis(2),
             max_task_retries: 4,
             max_job_restarts: 3,
+            cache_budget: CacheBudget::Unbounded,
         }
     }
 }
@@ -101,6 +108,7 @@ impl SparkConf {
             task_launch_overhead: Duration::ZERO,
             max_task_retries: 1,
             max_job_restarts: 3,
+            cache_budget: CacheBudget::Unbounded,
         }
     }
 
@@ -121,6 +129,7 @@ impl SparkConf {
             task_launch_overhead: Duration::ZERO,
             max_task_retries: 4,
             max_job_restarts: 3,
+            cache_budget: CacheBudget::Unbounded,
         }
     }
 }

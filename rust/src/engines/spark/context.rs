@@ -15,8 +15,10 @@
 //!   `max_job_restarts` times — the paper's "simply run the task multiple
 //!   times" regime.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cache::PartitionCache;
 use crate::cluster::FailurePlan;
 use crate::util::pool::{self, Schedule};
 
@@ -32,7 +34,18 @@ pub struct CtxInner {
     pub metrics: SparkMetrics,
     pub gc: GcSim,
     pub failures: std::sync::Arc<FailurePlan>,
+    /// Storage pool for `Rdd::persist`/`cache` (sized by
+    /// `conf.cache_budget` unless a shared instance was injected).
+    pub cache: Arc<PartitionCache>,
 }
+
+/// Namespace allocator for ad-hoc `persist()` calls. Process-wide, not
+/// per-context: contexts can share one [`PartitionCache`] (see
+/// [`SparkContext::with_shared_cache`]), and two contexts restarting a
+/// private counter would collide on the same namespaces and serve each
+/// other's persisted partitions. Starts above the relation-index
+/// namespaces the generic job layer reserves.
+static NEXT_PERSIST_NS: AtomicU64 = AtomicU64::new(1 << 32);
 
 /// Handed to every task: which node it runs on + shared context.
 pub struct TaskCtx<'a> {
@@ -58,6 +71,19 @@ impl SparkContext {
     /// Like [`with_failures`](Self::with_failures) with a shared plan
     /// (used by the unified `wordcount` front-end).
     pub fn with_failures_arc(conf: SparkConf, failures: Arc<FailurePlan>) -> Self {
+        let cache = Arc::new(PartitionCache::new(conf.cache_budget));
+        Self::with_shared_cache(conf, failures, cache)
+    }
+
+    /// Build a context over an externally owned [`PartitionCache`]
+    /// (ignoring `conf.cache_budget`). The iterative driver hands every
+    /// round's context the same cache so persisted partitions outlive a
+    /// single job.
+    pub fn with_shared_cache(
+        conf: SparkConf,
+        failures: Arc<FailurePlan>,
+        cache: Arc<PartitionCache>,
+    ) -> Self {
         assert!(conf.nnodes > 0 && conf.threads_per_node > 0);
         let store = BlockStore::new(conf.fault_tolerance);
         let gc = GcSim::new(conf.gc_model);
@@ -68,12 +94,26 @@ impl SparkContext {
                 metrics: SparkMetrics::new(),
                 gc,
                 failures,
+                cache,
             }),
         }
     }
 
     pub fn inner(&self) -> &CtxInner {
         &self.inner
+    }
+
+    /// The storage pool behind `Rdd::persist`/`cache`.
+    pub fn partition_cache(&self) -> &Arc<PartitionCache> {
+        &self.inner.cache
+    }
+
+    /// Fresh namespace for an ad-hoc `persist()` (disjoint from the
+    /// relation-index namespaces the generic job layer reserves, and from
+    /// every other context's — the allocator is process-wide because the
+    /// cache can be shared).
+    pub(crate) fn fresh_persist_namespace(&self) -> u64 {
+        NEXT_PERSIST_NS.fetch_add(1, Ordering::Relaxed)
     }
 
     pub fn conf(&self) -> &SparkConf {

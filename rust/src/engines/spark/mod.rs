@@ -36,7 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::corpus::{Corpus, Tokenizer};
-use crate::mapreduce::{StrWorkload, Workload};
+use crate::mapreduce::{CacheableWorkload, StrWorkload, Workload};
 
 /// The canonical word count on the Spark-sim engine. Returns the counts
 /// (merged across partitions) or the job error.
@@ -110,6 +110,68 @@ pub fn run_workload_multi<W: Workload>(
         let mapped = text.flat_map(move |(doc, line): (u64, String)| {
             let mut out = Vec::new();
             wm.map_rel(rel, doc, &line, &mut |k, v| out.push((k, v)));
+            counter.fetch_add(out.len() as u64, Ordering::Relaxed);
+            out
+        });
+        pairs = Some(match pairs {
+            Some(p) => p.union(&mapped),
+            None => mapped,
+        });
+    }
+    let pairs = pairs.expect("at least one relation");
+    let wf = Arc::clone(w);
+    let entries = if w.needs_shuffle() || force_shuffle {
+        pairs
+            .reduce_by_key(W::combine, partitions)
+            .map_partitions(move |shard| wf.finalize_local(shard))
+            .collect()?
+    } else {
+        pairs.map_partitions(move |shard| wf.finalize_local(shard)).collect()?
+    };
+    Ok((entries, emitted.load(Ordering::Relaxed)))
+}
+
+/// Run a [`CacheableWorkload`] with per-relation persisted parse RDDs —
+/// Spark's canonical iterative-job plan:
+///
+/// ```scala
+/// val parsed = textFile.map(parse).persist()          // hits after round 1
+/// parsed.flatMap(p => step.map(p, broadcastState))    // re-run every round
+///       .reduceByKey(step.combine)
+/// ```
+///
+/// Each relation's parsed RDD is persisted under its relation index and
+/// content `generation` in the context's
+/// [`PartitionCache`](crate::cache::PartitionCache); contexts built over a
+/// shared cache (see [`SparkContext::with_shared_cache`]) therefore serve
+/// later rounds of an iterative job from memory, and evicted partitions
+/// transparently recompute from lineage. Otherwise identical to
+/// [`run_workload_multi`] (union-then-shuffle co-partitioning, zero-shuffle
+/// fast path, `force_shuffle` ablation).
+pub fn run_workload_cached<W: CacheableWorkload>(
+    ctx: &SparkContext,
+    relations: &[Arc<Vec<String>>],
+    gens: &[u64],
+    w: &Arc<W>,
+    force_shuffle: bool,
+) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
+    assert!(!relations.is_empty(), "a job needs at least one input relation");
+    let partitions = ctx.default_partitions();
+    let emitted = Arc::new(AtomicU64::new(0));
+    let mut pairs: Option<Rdd<(W::Key, W::Value)>> = None;
+    for (rel, lines) in relations.iter().enumerate() {
+        let generation = gens.get(rel).copied().unwrap_or(0);
+        let text = ctx.text_lines_indexed(Arc::clone(lines), partitions);
+        let wp = Arc::clone(w);
+        // map(parse).persist(): the cacheable half of the round.
+        let parsed = text
+            .flat_map(move |(doc, line): (u64, String)| wp.parse_rel(rel, doc, &line))
+            .persist_keyed(rel as u64, generation);
+        let wm = Arc::clone(w);
+        let counter = Arc::clone(&emitted);
+        let mapped = parsed.flat_map(move |p: W::Parsed| {
+            let mut out = Vec::new();
+            wm.map_parsed(rel, &p, &mut |k, v| out.push((k, v)));
             counter.fetch_add(out.len() as u64, Ordering::Relaxed);
             out
         });
@@ -372,6 +434,34 @@ mod tests {
         assert_eq!(hist, vec![(1, 1), (2, 2), (3, 1), (4, 1)]);
         // Dense per-record pre-combine: fewer emissions than tokens.
         assert!(emitted <= 5);
+    }
+
+    #[test]
+    fn persist_serves_later_collects_from_cache() {
+        let ctx = SparkContext::new(SparkConf::for_tests(1, 2));
+        let rdd = ctx.parallelize((0u64..100).collect(), 4).map(|x| x * 2).persist();
+        let a = rdd.collect().unwrap();
+        let b = rdd.collect().unwrap();
+        assert_eq!(a, b);
+        let s = ctx.partition_cache().stats();
+        assert_eq!(s.misses, 4, "first collect misses every partition: {s:?}");
+        assert!(s.hits >= 4, "second collect is served from memory: {s:?}");
+    }
+
+    #[test]
+    fn persist_with_zero_budget_recomputes_from_lineage() {
+        use crate::cache::CacheBudget;
+        let mut conf = SparkConf::for_tests(1, 2);
+        conf.cache_budget = CacheBudget::Bytes(0);
+        let ctx = SparkContext::new(conf);
+        let rdd = ctx.parallelize((0i64..50).collect(), 4).map(|x| x + 1).cache();
+        assert_eq!(rdd.collect().unwrap(), rdd.collect().unwrap());
+        let s = ctx.partition_cache().stats();
+        // Budget 0 bypasses the cache outright: no hits, nothing admitted,
+        // every collect recomputes from lineage.
+        assert_eq!(s.hits, 0, "{s:?}");
+        assert_eq!(s.insertions, 0, "{s:?}");
+        assert_eq!(s.bytes_cached, 0, "{s:?}");
     }
 
     #[test]

@@ -12,13 +12,18 @@
 //! * **lineage** is the graph of [`StageRunner`]s hanging off each RDD.
 //!   With fault tolerance on, a failed task is retried from lineage; with
 //!   it off, any failure aborts the job (the driver restarts from scratch,
-//!   Blaze-style).
+//!   Blaze-style);
+//! * **persistence** (`persist`/`cache`) stores materialized partitions in
+//!   the context's memory-budgeted [`crate::cache::PartitionCache`];
+//!   evicted partitions silently recompute from lineage on next access —
+//!   Spark's `MEMORY_ONLY` storage level.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cache::CacheKey;
 use crate::concurrent::MapKey;
 use crate::hash::{bucket_of, HashKind};
 use crate::util::ser::{Decode, Encode};
@@ -245,6 +250,63 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     }
 }
 
+impl<T: Clone + HeapSize + Send + Sync + 'static> Rdd<T> {
+    /// Spark's `persist()`: materialized partitions go into the context's
+    /// [`PartitionCache`](crate::cache::PartitionCache) (size-aware, LRU,
+    /// memory-budgeted — see that module for the `spark.memory.fraction`
+    /// mapping). A later compute of the same partition is served from
+    /// memory; when the entry was **evicted** (or rejected by the budget),
+    /// the partition is recomputed from its narrow lineage chain — exactly
+    /// Spark's `MEMORY_ONLY` storage-level contract. Entry sizes are
+    /// `HeapSize` estimates, mirroring Spark's `SizeEstimator`.
+    pub fn persist(&self) -> Rdd<T> {
+        self.persist_keyed(self.ctx.fresh_persist_namespace(), 0)
+    }
+
+    /// Alias for [`persist`](Self::persist) (Spark's `cache()`).
+    pub fn cache(&self) -> Rdd<T> {
+        self.persist()
+    }
+
+    /// [`persist`](Self::persist) under an explicit cache identity. The
+    /// generic job layer keys each input relation's parsed RDD by
+    /// `(relation index, content generation)` so the cache survives across
+    /// the per-round contexts of an iterative run.
+    pub(crate) fn persist_keyed(&self, namespace: u64, generation: u64) -> Rdd<T> {
+        let parent = Arc::clone(&self.compute);
+        // Part of the cache key: entries cut for a different partition
+        // count must never be served to this RDD.
+        let splits = self.num_partitions as u64;
+        let compute: ComputeFn<T> = Arc::new(move |tc, p| {
+            // Budget 0: persist is a no-op, not a clone-then-reject detour
+            // — the recompute ablation must time lineage recomputation.
+            if tc.inner.cache.is_disabled() {
+                return parent(tc, p);
+            }
+            let key = CacheKey { namespace, generation, partition: p as u64, splits };
+            if let Some(hit) = tc.inner.cache.get_typed::<Vec<T>>(&key) {
+                return (*hit).clone();
+            }
+            // Miss (never stored, evicted, or over-budget): recompute from
+            // lineage, then offer the fresh partition back to the store —
+            // but only clone it when the budget could actually admit it.
+            let out = parent(tc, p);
+            let bytes = out.heap_bytes() as u64;
+            if tc.inner.cache.fits(bytes) {
+                tc.inner.cache.put(key, Arc::new(out.clone()), bytes);
+            }
+            out
+        });
+        Rdd {
+            ctx: self.ctx.clone(),
+            num_partitions: self.num_partitions,
+            stage: self.stage,
+            compute,
+            upstream: self.upstream.clone(),
+        }
+    }
+}
+
 impl<K: ShuffleKey, V: ShuffleVal> Rdd<(K, V)> {
     /// Wide: group by key and fold values with `reduce`. Cuts the lineage:
     /// the receiver becomes a map stage (shuffle write), the returned RDD
@@ -342,7 +404,7 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
             inner.metrics.shuffle_bytes_read.fetch_add(
                 match &data {
                     FetchedData::Bytes(b) => b.len() as u64,
-                    FetchedData::Typed(_) => 0,
+                    FetchedData::Typed { .. } => 0,
                 },
                 Ordering::Relaxed,
             );
@@ -351,9 +413,9 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
             if owner != tc.node {
                 let bytes = match &data {
                     FetchedData::Bytes(b) => b.len(),
-                    // Typed (no-serde) transfers still move ~records worth
-                    // of data; approximate with records × 16 bytes.
-                    FetchedData::Typed(_) => records as usize * 16,
+                    // Typed (no-serde) transfers still move the records'
+                    // in-memory footprint across the wire.
+                    FetchedData::Typed { est_bytes, .. } => *est_bytes,
                 };
                 let cost = conf.net.cost(bytes);
                 if !cost.is_zero() {
@@ -371,7 +433,7 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
                     inner.gc.allocated(v.iter().map(HeapSize::heap_bytes).sum());
                     v
                 }
-                FetchedData::Typed(t) => *t
+                FetchedData::Typed { data, .. } => *data
                     .downcast::<Vec<(K, V)>>()
                     .expect("typed shuffle block of unexpected type"),
             };
@@ -469,7 +531,10 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
                     .fetch_add(bytes.len() as u64, Ordering::Relaxed);
                 BlockData::Bytes(bytes)
             } else {
-                BlockData::Typed(Box::new(bucket))
+                // Unserialized blocks still occupy memory; estimate it so
+                // block metrics don't undercount the native-engine path.
+                let est_bytes = bucket.iter().map(HeapSize::heap_bytes).sum::<usize>();
+                BlockData::Typed { data: Box::new(bucket), est_bytes }
             };
             let id = BlockId { shuffle: self.shuffle_id, map_part: m, reduce_part: r };
             let t0 = Instant::now();

@@ -26,6 +26,20 @@
 //! [`wordcount::WordCountJob`] remains the stable word-count facade, now a
 //! thin wrapper over the job layer.
 //!
+//! ## Iterative jobs and the partition cache
+//!
+//! [`cache`] is the memory-budgeted, size-aware partition store (LRU
+//! eviction, per-entry byte accounting, hit/miss/evict stats) that backs
+//! Spark's headline feature — in-memory reuse — on both engines:
+//! `Rdd::persist`/`cache()` on the Spark sim (with lineage recomputation
+//! on eviction) and a parsed-input-split cache on Blaze.
+//! [`mapreduce::run_iterative`] drives multi-round jobs
+//! ([`mapreduce::IterativeWorkload`]): each round's reduced output feeds
+//! back in as a tagged relation until convergence or an iteration cap.
+//! [`workloads::PageRank`] and [`workloads::KMeans`] ride on it, both
+//! verified against the serial fixed-point oracle
+//! [`mapreduce::run_iterative_serial`].
+//!
 //! The compute hot-spot additionally has an XLA/PJRT-accelerated path: a
 //! Pallas token-histogram kernel AOT-lowered from JAX at build time and
 //! executed from Rust through [`runtime`].
@@ -34,6 +48,7 @@
 //! paper-vs-measured results.
 
 pub mod benchkit;
+pub mod cache;
 pub mod cluster;
 pub mod concurrent;
 pub mod corpus;

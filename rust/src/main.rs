@@ -3,8 +3,10 @@
 //! Subcommands:
 //!
 //! * `run`       — one job (`--workload
-//!   wordcount|index|top-k|length-hist|join|distinct|grep`) on a chosen
-//!   engine/cluster shape.
+//!   wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans`)
+//!   on a chosen engine/cluster shape; the iterative pair takes
+//!   `--iterations`, `--tolerance`, and `--cache-budget` (the in-memory
+//!   ablation knob).
 //! * `compare`   — the paper's experiment: all engines on one corpus,
 //!   printed as the words/sec bar chart.
 //! * `generate`  — synthesize a corpus to a file.
@@ -15,15 +17,22 @@
 
 use std::sync::Arc;
 
+use blaze::cache::CacheBudget;
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::dist::CombineMode;
 use blaze::engines::Engine;
-use blaze::mapreduce::{run_serial, run_serial_inputs, JobInputs, JobSpec};
+use blaze::mapreduce::{
+    run_iterative, run_iterative_serial, run_serial, run_serial_inputs, IterativeReport,
+    IterativeSpec, IterativeWorkload, JobInputs, JobSpec,
+};
 use blaze::metrics::ascii_bar_chart;
 use blaze::util::cli::{Args, CliError, Command};
 use blaze::wordcount::{serial_reference, WordCountJob};
-use blaze::workloads::{DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, TopKWords};
+use blaze::workloads::{
+    synthesize_points, DistinctCount, Grep, InvertedIndex, Join, KMeans, LengthHistogram,
+    PageRank, TopKWords,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -128,7 +137,7 @@ fn cmd_run() -> Command {
         .opt(
             "workload",
             Some("wordcount"),
-            "wordcount|index|top-k|length-hist|join|distinct|grep",
+            "wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans",
         )
         .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
         .opt("top", Some("10"), "print the top-K entries")
@@ -138,6 +147,20 @@ fn cmd_run() -> Command {
             None,
             "join: right relation from file (default: generated, seed+1)",
         )
+        .opt("iterations", Some("10"), "iterative workloads: max rounds")
+        .opt(
+            "tolerance",
+            Some("1e-6"),
+            "iterative workloads: stop once the round delta is <= this",
+        )
+        .opt(
+            "cache-budget",
+            Some("unbounded"),
+            "partition cache budget: unbounded|none|<size> (none = recompute every round)",
+        )
+        .opt("points", Some("20000"), "kmeans: synthesized point count")
+        .opt("dims", Some("4"), "kmeans: point dimensionality")
+        .opt("clusters", Some("8"), "kmeans: cluster count")
         .flag("force-shuffle", "run the exchange even for zero-shuffle workloads")
         .flag("verify", "check against the serial reference");
     corpus_opts(cluster_opts(cmd))
@@ -146,6 +169,8 @@ fn cmd_run() -> Command {
 fn do_run(args: &Args) -> Result<(), String> {
     match args.get_str("workload").as_str() {
         "wordcount" | "wc" => do_run_wordcount(args),
+        "pagerank" | "page-rank" => do_run_pagerank(args),
+        "kmeans" | "k-means" => do_run_kmeans(args),
         other => do_run_workload(other, args),
     }
 }
@@ -275,9 +300,106 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
         }
         other => Err(format!(
-            "unknown --workload {other} (wordcount|index|top-k|length-hist|join|distinct|grep)"
+            "unknown --workload {other} \
+             (wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans)"
         )),
     }
+}
+
+/// Shared `--iterations`/`--tolerance`/`--cache-budget` parsing.
+fn iterative_spec_from_args(args: &Args) -> Result<IterativeSpec, String> {
+    let budget = args.get_str("cache-budget");
+    Ok(IterativeSpec::new(args.get_usize("iterations").map_err(|e| e.to_string())?)
+        .tolerance(args.get_f64("tolerance").map_err(|e| e.to_string())?)
+        .cache_budget(
+            CacheBudget::parse(&budget).ok_or_else(|| format!("bad --cache-budget {budget}"))?,
+        ))
+}
+
+fn print_iterations(r: &IterativeReport) {
+    println!("{}", r.summary());
+    println!("  round      delta    wall(s)      emissions    shuffle      cache");
+    for it in &r.iters {
+        println!(
+            "  {:>5} {:>10.3e} {:>10.3} {:>14} {:>10} {}",
+            it.round,
+            it.delta,
+            it.wall_secs,
+            it.records,
+            blaze::util::stats::fmt_bytes(it.shuffle_bytes),
+            it.cache,
+        );
+    }
+}
+
+/// Verify an iterative run against the fixed-point serial oracle.
+fn verify_iterative<I: IterativeWorkload>(
+    args: &Args,
+    it: &IterativeSpec,
+    w: &I,
+    inputs: &JobInputs,
+    r: &IterativeReport,
+) -> Result<(), String> {
+    if args.has_flag("verify") {
+        let oracle = run_iterative_serial(it, w, inputs);
+        if r.state == oracle.state && r.iterations == oracle.iterations {
+            println!("\nverify: OK (bit-identical to the serial fixed-point oracle)");
+        } else {
+            return Err("verification FAILED (state diverges from serial oracle)".into());
+        }
+    }
+    Ok(())
+}
+
+/// PageRank over the corpus-as-graph: each line is `src dst...`.
+fn do_run_pagerank(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let corpus = load_corpus(args)?;
+    println!(
+        "graph: {} adjacency line(s), {}",
+        corpus.num_lines(),
+        blaze::util::stats::fmt_bytes(corpus.bytes)
+    );
+    let it = iterative_spec_from_args(args)?;
+    let w = PageRank::new();
+    let inputs = JobInputs::new().relation("edges", &corpus);
+    let r = run_iterative(&spec, &it, &w, &inputs).map_err(|e| e.to_string())?;
+    print_iterations(&r);
+    let k = args.get_usize("top").map_err(|e| e.to_string())?;
+    let mut ranks = PageRank::ranks_from_state(&r.state);
+    ranks.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+    println!("\n{} node(s); top {k} by rank:", ranks.len());
+    for (node, rank) in ranks.into_iter().take(k) {
+        println!("  {rank:>12.3e}  {node}");
+    }
+    verify_iterative(args, &it, &w, &inputs, &r)
+}
+
+/// k-means over synthesized fixed-point points (seeded by `--seed`).
+fn do_run_kmeans(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let it = iterative_spec_from_args(args)?;
+    let n = args.get_usize("points").map_err(|e| e.to_string())?;
+    let dims = args.get_usize("dims").map_err(|e| e.to_string())?;
+    let clusters = args.get_usize("clusters").map_err(|e| e.to_string())?;
+    if clusters == 0 || clusters > n {
+        return Err(format!("--clusters must be in 1..={n} (got {clusters})"));
+    }
+    if dims == 0 {
+        return Err("--dims must be at least 1".into());
+    }
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    let points = synthesize_points(n, dims, clusters, seed);
+    println!("points: {n} x {dims}d around {clusters} blob(s), seed {seed}");
+    let w = KMeans::new(clusters);
+    let inputs = JobInputs::new().relation_lines("points", Arc::new(points));
+    let r = run_iterative(&spec, &it, &w, &inputs).map_err(|e| e.to_string())?;
+    print_iterations(&r);
+    println!("\nfinal centroids:");
+    for (cid, coords) in KMeans::centroids_from_state(&r.state) {
+        println!("  {cid:>4}: {coords:?}");
+    }
+    verify_iterative(args, &it, &w, &inputs, &r)
 }
 
 /// `expect` is a closure so the serial reference pass only runs when the

@@ -1,0 +1,300 @@
+//! The iterative job driver — multi-round MapReduce with feedback.
+//!
+//! Spark's pitch is that iterative algorithms (PageRank, k-means, logistic
+//! regression) are where in-memory reuse pays: the same input is re-read
+//! every round, so caching it across rounds removes the dominant cost.
+//! This module supplies the driver loop that makes those workloads
+//! expressible on *both* engines:
+//!
+//! * an [`IterativeWorkload`] owns the algorithm: it derives the initial
+//!   **state** (a line-rendered relation) from the static inputs, builds a
+//!   per-round step job (a [`CacheableWorkload`]) with the current state
+//!   broadcast into it, and folds each round's reduced output into the
+//!   next state plus a scalar convergence **delta**;
+//! * [`run_iterative`] executes the loop on an engine: every round runs
+//!   the step job over `static relations + [state]` (the state appended as
+//!   the last tagged relation, its cache generation bumped every round),
+//!   sharing one [`PartitionCache`] across rounds so parsed splits of the
+//!   unchanged relations are served from memory;
+//! * [`run_iterative_serial`] is the same loop over
+//!   [`run_serial_inputs`](crate::mapreduce::run_serial_inputs) — the
+//!   fixed-point serial oracle every engine must match **bit-identically**
+//!   (workloads keep their arithmetic in integer fixed-point precisely so
+//!   combine order cannot perturb results).
+//!
+//! Determinism contract for workload authors: `advance` must render the
+//! next state in a canonical order (sort by key) and use only
+//! order-insensitive arithmetic — see the authoring guide in
+//! [`crate::workloads`].
+
+use std::sync::Arc;
+
+use crate::cache::{CacheBudget, CacheStats, PartitionCache};
+use crate::engines::Engine;
+use crate::util::stats::Stopwatch;
+
+use super::{
+    run_serial_inputs, CacheableWorkload, JobInputs, JobSpec, MapReduceError, Workload,
+};
+
+/// How long to iterate and how much memory the rounds may cache.
+#[derive(Clone, Copy, Debug)]
+pub struct IterativeSpec {
+    /// Hard cap on rounds (the driver stops here even if not converged).
+    pub max_iters: usize,
+    /// Stop once a round's delta is `<=` this.
+    pub tolerance: f64,
+    /// Budget of the partition cache shared across rounds;
+    /// `CacheBudget::Bytes(0)` is the recompute-every-round ablation.
+    pub cache_budget: CacheBudget,
+}
+
+impl Default for IterativeSpec {
+    fn default() -> Self {
+        Self { max_iters: 10, tolerance: 1e-6, cache_budget: CacheBudget::Unbounded }
+    }
+}
+
+impl IterativeSpec {
+    pub fn new(max_iters: usize) -> Self {
+        Self { max_iters, ..Default::default() }
+    }
+
+    pub fn tolerance(mut self, t: f64) -> Self {
+        self.tolerance = t;
+        self
+    }
+
+    pub fn cache_budget(mut self, b: CacheBudget) -> Self {
+        self.cache_budget = b;
+        self
+    }
+}
+
+/// A multi-round algorithm over static input relations plus a fed-back
+/// state relation. See the module docs for the execution model and
+/// [`crate::workloads`] for the authoring guide (PageRank and k-means are
+/// the worked examples).
+pub trait IterativeWorkload: Send + Sync {
+    /// The per-round step job. Its [`Workload::num_relations`] must equal
+    /// [`num_static_relations`](Self::num_static_relations) + 1 (the state
+    /// relation is appended last).
+    type Step: CacheableWorkload;
+
+    /// Stable name (CLI token, report label).
+    fn name(&self) -> &'static str;
+
+    /// How many static input relations the job reads (the fed-back state
+    /// relation is appended after them).
+    fn num_static_relations(&self) -> usize {
+        1
+    }
+
+    /// Derive the initial state lines from the static inputs. Must be
+    /// canonically ordered (sorted by key) — every later state inherits
+    /// its order through [`advance`](Self::advance).
+    fn init_state(&self, inputs: &JobInputs) -> Vec<String>;
+
+    /// Build the round's step workload with `state` broadcast into it
+    /// (Spark's broadcast-variable role: mappers need random access to the
+    /// previous round's state).
+    fn step(&self, state: &[String]) -> Arc<Self::Step>;
+
+    /// Fold one round's reduced output into the next state and the
+    /// round's convergence delta. Must be deterministic: sort keys, use
+    /// order-insensitive (fixed-point) arithmetic.
+    fn advance(
+        &self,
+        output: <Self::Step as Workload>::Output,
+        state: &[String],
+    ) -> (Vec<String>, f64);
+}
+
+/// Per-round metrics of one iterative run.
+#[derive(Clone, Debug)]
+pub struct IterationStats {
+    /// 0-based round index.
+    pub round: usize,
+    /// Convergence delta reported by `advance` for this round.
+    pub delta: f64,
+    pub wall_secs: f64,
+    pub shuffle_bytes: u64,
+    /// Map-phase emissions of the round's step job.
+    pub records: u64,
+    /// What this round did to the shared partition cache.
+    pub cache: CacheStats,
+}
+
+/// Outcome of [`run_iterative`].
+#[derive(Clone, Debug)]
+pub struct IterativeReport {
+    pub engine: Engine,
+    pub workload: &'static str,
+    /// Final state lines (canonical order).
+    pub state: Vec<String>,
+    /// Rounds actually executed.
+    pub iterations: usize,
+    /// Did the delta reach the tolerance before `max_iters`?
+    pub converged: bool,
+    pub wall_secs: f64,
+    pub iters: Vec<IterationStats>,
+    /// Cumulative cache stats across all rounds.
+    pub cache: CacheStats,
+}
+
+impl IterativeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {:<16} {} round(s){} in {:>8.3}s   cache: {}",
+            self.workload,
+            self.engine.label(),
+            self.iterations,
+            if self.converged { " (converged)" } else { "" },
+            self.wall_secs,
+            self.cache,
+        )
+    }
+}
+
+/// Outcome of [`run_iterative_serial`] — the fixed-point oracle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SerialIterativeOutcome {
+    pub state: Vec<String>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Per-round deltas (same length as `iterations`).
+    pub deltas: Vec<f64>,
+}
+
+/// Validate the static-input arity. Runs **before** `init_state`, which
+/// is entitled to index its relations.
+fn check_arity<I: IterativeWorkload>(w: &I, inputs: &JobInputs) -> Result<(), MapReduceError> {
+    if inputs.len() != w.num_static_relations() {
+        return Err(MapReduceError(format!(
+            "iterative workload '{}' expects {} static input relation(s), got {}",
+            w.name(),
+            w.num_static_relations(),
+            inputs.len()
+        )));
+    }
+    Ok(())
+}
+
+fn check_step_shape<I: IterativeWorkload>(w: &I, step: &I::Step) -> Result<(), MapReduceError> {
+    if step.num_relations() != w.num_static_relations() + 1 {
+        return Err(MapReduceError(format!(
+            "iterative workload '{}': step job expects {} relation(s), \
+             but static inputs + state make {}",
+            w.name(),
+            step.num_relations(),
+            w.num_static_relations() + 1
+        )));
+    }
+    Ok(())
+}
+
+/// Append the fed-back state as the last tagged relation of the round.
+fn round_inputs(inputs: &JobInputs, state: &[String]) -> JobInputs {
+    inputs.clone().relation_lines("state", Arc::new(state.to_vec()))
+}
+
+/// Execute `w` on `spec`'s engine: loop the step job, feeding each round's
+/// reduced output back in as the `state` relation, until the delta reaches
+/// `it.tolerance` or `it.max_iters` rounds ran. One [`PartitionCache`] of
+/// `it.cache_budget` bytes is shared across every round (and handed to
+/// both engines), so parsed splits of the static relations — whose cache
+/// generation never changes — are reused; the state relation's generation
+/// is bumped every round and its stale generations are invalidated as
+/// the driver advances, so even an unbounded cache holds at most one
+/// parsed copy of the state.
+pub fn run_iterative<I: IterativeWorkload>(
+    spec: &JobSpec,
+    it: &IterativeSpec,
+    w: &I,
+    inputs: &JobInputs,
+) -> Result<IterativeReport, MapReduceError> {
+    check_arity(w, inputs)?;
+    let mut state = w.init_state(inputs);
+    check_step_shape(w, w.step(&state).as_ref())?;
+
+    let cache = Arc::new(PartitionCache::new(it.cache_budget));
+    let mut spec = spec.clone().shared_cache(Arc::clone(&cache));
+    let nrels = inputs.len() + 1;
+
+    let sw = Stopwatch::start();
+    let mut iters = Vec::new();
+    let mut converged = false;
+    for round in 0..it.max_iters {
+        // Static relations stay at generation 0; the state relation's
+        // content changes every round.
+        let mut gens = vec![0u64; nrels];
+        gens[nrels - 1] = round as u64;
+        spec = spec.relation_gens(gens);
+
+        let step = w.step(&state);
+        let report = spec.run_inputs_cached(&step, &round_inputs(inputs, &state))?;
+        // Older state generations can never be read again; free them now
+        // rather than leaving an unbounded cache to accumulate one dead
+        // parsed state per round (bounded budgets would also LRU them out).
+        cache.invalidate_generations_below((nrels - 1) as u64, round as u64);
+        let (next, delta) = w.advance(report.output, &state);
+        iters.push(IterationStats {
+            round,
+            delta,
+            wall_secs: report.wall_secs,
+            shuffle_bytes: report.shuffle_bytes,
+            records: report.records,
+            cache: report.cache,
+        });
+        state = next;
+        if delta <= it.tolerance {
+            converged = true;
+            break;
+        }
+    }
+    Ok(IterativeReport {
+        engine: spec.engine,
+        workload: w.name(),
+        state,
+        iterations: iters.len(),
+        converged,
+        wall_secs: sw.elapsed_secs(),
+        iters,
+        cache: cache.stats(),
+    })
+}
+
+/// The fixed-point serial oracle: the exact driver loop of
+/// [`run_iterative`], with every round's step job executed by
+/// [`run_serial_inputs`]. Engines must reproduce its final state
+/// bit-identically (workload arithmetic is integer fixed-point, so there
+/// is no float-ordering escape hatch).
+pub fn run_iterative_serial<I: IterativeWorkload>(
+    it: &IterativeSpec,
+    w: &I,
+    inputs: &JobInputs,
+) -> SerialIterativeOutcome {
+    // Oracle convention (matches `run_serial_inputs`): shape errors assert.
+    assert_eq!(
+        inputs.len(),
+        w.num_static_relations(),
+        "iterative workload '{}' expects {} static input relation(s)",
+        w.name(),
+        w.num_static_relations()
+    );
+    let mut state = w.init_state(inputs);
+    let mut deltas = Vec::new();
+    let mut converged = false;
+    for _round in 0..it.max_iters {
+        let step = w.step(&state);
+        let output = run_serial_inputs(step.as_ref(), &round_inputs(inputs, &state));
+        let (next, delta) = w.advance(output, &state);
+        deltas.push(delta);
+        state = next;
+        if delta <= it.tolerance {
+            converged = true;
+            break;
+        }
+    }
+    SerialIterativeOutcome { state, iterations: deltas.len(), converged, deltas }
+}

@@ -26,6 +26,16 @@
 //! * [`run_serial`] / [`run_serial_inputs`] — the single-threaded reference
 //!   executors, the correctness oracle for every engine × workload
 //!   combination.
+//! * [`CacheableWorkload`] — workloads whose record mapping factors into a
+//!   cacheable parse plus a per-round map; together with
+//!   [`JobSpec::run_inputs_cached`] and the
+//!   [`crate::cache::PartitionCache`], the engines skip tokenization of
+//!   unchanged relations on later rounds of an iterative job.
+//! * [`iterative`] — the multi-round driver: [`IterativeSpec`] /
+//!   [`run_iterative`] loop a [`IterativeWorkload`]'s step job, feeding
+//!   each round's reduced output back in as a tagged relation until
+//!   convergence or an iteration cap ([`run_iterative_serial`] is the
+//!   fixed-point serial oracle).
 //!
 //! Concrete workloads live in [`crate::workloads`] (that module's docs are
 //! the workload-authoring guide); `wordcount::WordCountJob` is a thin
@@ -53,9 +63,17 @@
 //! selection both satisfy this; anything that mixes information across
 //! keys it then discards does not.
 
+pub mod iterative;
+
+pub use iterative::{
+    run_iterative, run_iterative_serial, IterationStats, IterativeReport, IterativeSpec,
+    IterativeWorkload, SerialIterativeOutcome,
+};
+
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::cache::{CacheStats, PartitionCache};
 use crate::cluster::{FailurePlan, NetModel};
 use crate::concurrent::{CachePolicy, MapKey, MapValue};
 use crate::corpus::{Corpus, Tokenizer};
@@ -164,6 +182,39 @@ pub trait StrWorkload: Workload<Key = String> {
     fn map_str(&self, doc: u64, record: &str, emit: &mut dyn FnMut(&str, Self::Value));
 }
 
+/// Workloads whose record mapping factors into **parse** (pure per-record
+/// tokenization, independent of any per-round state) and **map** (emission
+/// from the parsed form). Iterative jobs re-read their inputs every round;
+/// engines cache the parsed form in the
+/// [`PartitionCache`](crate::cache::PartitionCache) keyed by
+/// `(relation, generation, split)` so later rounds skip tokenization —
+/// the mechanism behind Spark's `textFile(...).map(parse).cache()` idiom.
+///
+/// Contract: for every record,
+/// `parse_rel(rel, doc, rec).map(|p| map_parsed(rel, &p, emit))` must emit
+/// exactly what [`Workload::map_rel`] emits (a `None` parse means the
+/// record emits nothing). `parse_rel` must be a pure function of its
+/// arguments; all per-round (broadcast) state belongs in `map_parsed`, on
+/// the workload value itself — cached parses outlive the round that
+/// produced them.
+pub trait CacheableWorkload: Workload {
+    /// Parsed form of one record — what the partition cache stores.
+    type Parsed: Clone + Send + Sync + HeapSize + 'static;
+
+    /// Tokenize one record of relation `rel`; `None` for records that emit
+    /// nothing (blank/malformed lines).
+    fn parse_rel(&self, rel: usize, doc: u64, record: &str) -> Option<Self::Parsed>;
+
+    /// Emit from the parsed form (may consult per-round broadcast state
+    /// held on `self`).
+    fn map_parsed(
+        &self,
+        rel: usize,
+        parsed: &Self::Parsed,
+        emit: &mut dyn FnMut(Self::Key, Self::Value),
+    );
+}
+
 /// One tagged input relation: a name (surfaced in diagnostics, e.g. the
 /// relation-arity error) plus its records. Lines are shared, not copied —
 /// engines clone per task exactly as they would for a single-input corpus.
@@ -255,6 +306,17 @@ pub struct JobSpec {
     /// [`Workload::needs_shuffle`] — the ablation that measures what the
     /// zero-shuffle fast path saves.
     pub force_shuffle: bool,
+    /// Shared partition cache for [`run_inputs_cached`](Self::run_inputs_cached):
+    /// the iterative driver hands the same instance to every round so
+    /// parsed splits survive across jobs. `None` = the cached entry point
+    /// degrades to [`run_inputs`](Self::run_inputs).
+    pub cache: Option<Arc<PartitionCache>>,
+    /// Per-relation content generation for cache keys (missing entries
+    /// read as 0). Bump a relation's generation when its lines change —
+    /// stale-generation entries stop matching; drop them with
+    /// `PartitionCache::invalidate_generations_below` (bounded budgets
+    /// would also age them out via LRU).
+    pub relation_gens: Vec<u64>,
 }
 
 impl JobSpec {
@@ -271,6 +333,8 @@ impl JobSpec {
             failures: Arc::new(FailurePlan::none()),
             max_job_reruns: 3,
             force_shuffle: false,
+            cache: None,
+            relation_gens: Vec::new(),
         }
     }
 
@@ -314,6 +378,27 @@ impl JobSpec {
         self
     }
 
+    /// Attach a shared partition cache (see [`Self::run_inputs_cached`]).
+    ///
+    /// Contract: one cache serves **one workload's** relations. Cached
+    /// entries are keyed by relation index + generation + split shape,
+    /// not by workload, so running a *different* [`CacheableWorkload`]
+    /// against the same cache without bumping `relation_gens` would at
+    /// best miss on the parsed type and reparse, and — if both workloads
+    /// share a `Parsed` type — silently serve the other workload's parse
+    /// output. The iterative driver follows the contract by creating a
+    /// fresh cache per run.
+    pub fn shared_cache(mut self, cache: Arc<PartitionCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Tag each relation's content generation for cache keys.
+    pub fn relation_gens(mut self, gens: Vec<u64>) -> Self {
+        self.relation_gens = gens;
+        self
+    }
+
     /// Run `w` on this spec's engine (owned-key emission path everywhere)
     /// over a single input relation.
     pub fn run<W: Workload>(
@@ -334,6 +419,56 @@ impl JobSpec {
         self.check_arity(w.as_ref(), inputs)?;
         let run = engine_for::<W>(self.engine).run(self, w, inputs)?;
         Ok(self.finish(w, run))
+    }
+
+    /// Run a [`CacheableWorkload`] through the engines' partition-cached
+    /// paths when [`Self::cache`] is attached (parsed input splits are
+    /// stored under `(relation, generation, split)` and reused across
+    /// jobs — the iterative driver's hot path); without a cache this is
+    /// exactly [`run_inputs`](Self::run_inputs). The returned
+    /// [`JobReport::cache`] holds what *this* run did to the shared cache.
+    pub fn run_inputs_cached<W: CacheableWorkload>(
+        &self,
+        w: &Arc<W>,
+        inputs: &JobInputs,
+    ) -> Result<JobReport<W::Output>, MapReduceError> {
+        let Some(cache) = &self.cache else {
+            return self.run_inputs(w, inputs);
+        };
+        self.check_arity(w.as_ref(), inputs)?;
+        let before = cache.stats();
+        let rels = inputs.line_sets();
+        let run = match self.engine {
+            Engine::Blaze | Engine::BlazeTcm => {
+                let conf = self.blaze_conf(KeyPath::AllocPerToken);
+                let r = crate::engines::blaze::run_workload_cached(
+                    &conf,
+                    &rels,
+                    &self.relation_gens,
+                    cache,
+                    &self.failures,
+                    w.as_ref(),
+                )
+                .map_err(|e| MapReduceError(e.to_string()))?;
+                blaze_job_run(r)
+            }
+            Engine::Spark | Engine::SparkStripped => {
+                let ctx = self.spark_context();
+                let sw = Stopwatch::start();
+                let (entries, records) = crate::engines::spark::run_workload_cached(
+                    &ctx,
+                    &rels,
+                    &self.relation_gens,
+                    w,
+                    self.force_shuffle,
+                )
+                .map_err(|e| MapReduceError(e.to_string()))?;
+                spark_job_run(&ctx, entries, records, sw.elapsed_secs())
+            }
+        };
+        let mut report = self.finish(w, run);
+        report.cache = cache.stats().delta_since(&before);
+        Ok(report)
     }
 
     /// Run a string-keyed workload with the engines' specialized string
@@ -378,6 +513,7 @@ impl JobSpec {
             records: run.records,
             shuffle_bytes: run.shuffle_bytes,
             detail: run.detail,
+            cache: CacheStats::default(),
         }
     }
 
@@ -409,7 +545,14 @@ impl JobSpec {
             c.net = self.net;
             c
         });
-        SparkContext::with_failures_arc(conf, Arc::clone(&self.failures))
+        match &self.cache {
+            // Share the job-spec cache so persisted partitions survive
+            // across the per-round contexts of an iterative run.
+            Some(cache) => {
+                SparkContext::with_shared_cache(conf, Arc::clone(&self.failures), Arc::clone(cache))
+            }
+            None => SparkContext::with_failures_arc(conf, Arc::clone(&self.failures)),
+        }
     }
 }
 
@@ -438,6 +581,10 @@ pub struct JobReport<O> {
     pub shuffle_bytes: u64,
     /// Engine-specific metric breakdown.
     pub detail: String,
+    /// What this run did to the shared partition cache (all zeros unless
+    /// the job went through [`JobSpec::run_inputs_cached`] with a cache
+    /// attached).
+    pub cache: CacheStats,
 }
 
 impl<O> JobReport<O> {

@@ -133,6 +133,8 @@ impl WordCountJob {
             failures: Arc::clone(&self.failures),
             max_job_reruns: 3,
             force_shuffle: false,
+            cache: None,
+            relation_gens: Vec::new(),
         }
     }
 

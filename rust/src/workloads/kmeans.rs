@@ -1,0 +1,407 @@
+//! k-means clustering — the second iterative workload: centroid
+//! assignment/update rounds until no centroid moves.
+//!
+//! Input shape: each line of the (static) point relation is one point,
+//! `c1 c2 ... cd` — integer coordinates on a fixed-point grid (generate
+//! them with [`synthesize_points`], or scale your floats by a constant
+//! and round once, up front). The fed-back state relation holds one line
+//! per centroid: `cid c1 ... cd`.
+//!
+//! # Fixed-point arithmetic
+//!
+//! All round arithmetic is integer: squared L2 distances in `i128`
+//! (overflow-safe for any realistic coordinate range), coordinate sums in
+//! `i64`, and the centroid update `sum / count` in truncating integer
+//! division. Results are therefore independent of combine order and
+//! **bit-identical** across the serial oracle and both engines; because
+//! the state lives on an integer grid, the iteration reaches an *exact*
+//! fixed point (delta 0) rather than dithering in float ulps — which is
+//! what makes `run_iterative_serial` a true fixed-point oracle.
+//!
+//! # Round structure
+//!
+//! * map over a point: assign it to the nearest broadcast centroid
+//!   (ties break toward the smallest centroid id) and emit
+//!   `(cid, {count: 1, sum: point})`;
+//! * map over a centroid state line: emit `(cid, {count: 0, sum: []})` so
+//!   empty clusters survive the round;
+//! * combine: element-wise [`ClusterAcc`] merge — order-free;
+//! * `KMeans::advance`: new centroid = `sum / count` (or unchanged when
+//!   the cluster is empty), delta = max coordinate movement in grid units.
+//!
+//! Point parsing (the `str → Vec<i64>` decode) is the cacheable half: the
+//! point relation never changes, so warm rounds skip tokenization.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::engines::spark::HeapSize;
+use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+use crate::util::rng::Xoshiro256;
+use crate::util::ser::{Decode, DecodeError, Encode, Reader};
+
+/// Relation index of the static point relation.
+pub const KM_POINTS: usize = 0;
+/// Relation index of the fed-back centroid state relation.
+pub const KM_STATE: usize = 1;
+
+/// Shuffle value: partial sufficient statistics of one cluster.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClusterAcc {
+    /// Points assigned so far.
+    pub count: u64,
+    /// Per-dimension coordinate sums (zero-extended on merge, so the
+    /// empty-cluster marker `{0, []}` is a true identity element).
+    pub sum: Vec<i64>,
+}
+
+impl Encode for ClusterAcc {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.count.encode(out);
+        self.sum.encode(out);
+    }
+}
+
+impl Decode for ClusterAcc {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(Self { count: u64::decode(r)?, sum: Vec::decode(r)? })
+    }
+}
+
+impl HeapSize for ClusterAcc {
+    fn heap_bytes(&self) -> usize {
+        16 + self.sum.heap_bytes()
+    }
+}
+
+/// Parsed form of one record — what the partition cache stores per split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KmParsed {
+    /// One point of the point relation.
+    Point(Vec<i64>),
+    /// One centroid id of the state relation.
+    Centroid(u64),
+}
+
+impl HeapSize for KmParsed {
+    fn heap_bytes(&self) -> usize {
+        match self {
+            KmParsed::Point(p) => p.heap_bytes() + 16,
+            KmParsed::Centroid(_) => 16,
+        }
+    }
+}
+
+/// `c1 c2 ... cd` → coordinates; `None` for blank or malformed lines.
+/// The single definition of the point-line grammar — `parse_rel` (which
+/// points join rounds) and `KMeans::init_state` (which points seed
+/// centroids) must never disagree on it.
+fn parse_point(record: &str) -> Option<Vec<i64>> {
+    let coords: Result<Vec<i64>, _> = record.split_whitespace().map(str::parse).collect();
+    match coords {
+        Ok(c) if !c.is_empty() => Some(c),
+        _ => None,
+    }
+}
+
+/// One round of k-means: assignment against the broadcast centroids
+/// (built fresh each round by `KMeans::step`).
+pub struct KMeansStep {
+    /// (cid, coords), sorted by cid — ties in distance break toward the
+    /// first (smallest) id, deterministically.
+    centroids: Vec<(u64, Vec<i64>)>,
+}
+
+impl KMeansStep {
+    /// Index of the nearest centroid (squared L2 in `i128`; first wins
+    /// ties). `None` when there are no centroids.
+    fn nearest(&self, p: &[i64]) -> Option<u64> {
+        let mut best: Option<(u64, i128)> = None;
+        for (cid, c) in &self.centroids {
+            let dims = p.len().max(c.len());
+            let mut d = 0i128;
+            for i in 0..dims {
+                let diff = p.get(i).copied().unwrap_or(0) as i128
+                    - c.get(i).copied().unwrap_or(0) as i128;
+                d += diff * diff;
+            }
+            let better = match best {
+                None => true,
+                Some((_, bd)) => d < bd,
+            };
+            if better {
+                best = Some((*cid, d));
+            }
+        }
+        best.map(|(cid, _)| cid)
+    }
+}
+
+impl Workload for KMeansStep {
+    type Key = u64;
+    type Value = ClusterAcc;
+    type Output = HashMap<u64, ClusterAcc>;
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn num_relations(&self) -> usize {
+        2
+    }
+
+    /// Multi-input stub: engines and oracles route through `map_rel`.
+    fn map(&self, _doc: u64, _record: &str, _emit: &mut dyn FnMut(u64, ClusterAcc)) {
+        unreachable!("kmeans is multi-input; run it through the iterative driver");
+    }
+
+    fn map_rel(&self, rel: usize, doc: u64, record: &str, emit: &mut dyn FnMut(u64, ClusterAcc)) {
+        if let Some(p) = self.parse_rel(rel, doc, record) {
+            self.map_parsed(rel, &p, emit);
+        }
+    }
+
+    fn combine(acc: &mut ClusterAcc, v: ClusterAcc) {
+        acc.count += v.count;
+        if acc.sum.len() < v.sum.len() {
+            acc.sum.resize(v.sum.len(), 0);
+        }
+        for (a, b) in acc.sum.iter_mut().zip(v.sum.iter()) {
+            *a += *b;
+        }
+    }
+
+    fn finalize(&self, entries: Vec<(u64, ClusterAcc)>) -> HashMap<u64, ClusterAcc> {
+        entries.into_iter().collect()
+    }
+}
+
+impl CacheableWorkload for KMeansStep {
+    type Parsed = KmParsed;
+
+    fn parse_rel(&self, rel: usize, _doc: u64, record: &str) -> Option<KmParsed> {
+        match rel {
+            KM_POINTS => parse_point(record).map(KmParsed::Point),
+            KM_STATE => record
+                .split_whitespace()
+                .next()
+                .and_then(|t| t.parse().ok())
+                .map(KmParsed::Centroid),
+            other => panic!("kmeans got relation index {other}"),
+        }
+    }
+
+    fn map_parsed(&self, _rel: usize, parsed: &KmParsed, emit: &mut dyn FnMut(u64, ClusterAcc)) {
+        match parsed {
+            KmParsed::Point(p) => {
+                if let Some(cid) = self.nearest(p) {
+                    emit(cid, ClusterAcc { count: 1, sum: p.clone() });
+                }
+            }
+            // Keep the cluster present even if no point chose it.
+            KmParsed::Centroid(cid) => emit(*cid, ClusterAcc::default()),
+        }
+    }
+}
+
+/// The iterative k-means driver workload. Run it with
+/// [`run_iterative`](crate::mapreduce::run_iterative) over a single point
+/// relation; initial centroids are `k` evenly spaced points of the input.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeans {
+    /// Number of clusters.
+    pub k: usize,
+}
+
+impl KMeans {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "kmeans needs at least one cluster");
+        Self { k }
+    }
+
+    /// `cid c1 ... cd` → components.
+    fn parse_state_line(line: &str) -> Option<(u64, Vec<i64>)> {
+        let mut t = line.split_whitespace();
+        let cid = t.next()?.parse().ok()?;
+        let coords: Result<Vec<i64>, _> = t.map(str::parse).collect();
+        coords.ok().map(|c| (cid, c))
+    }
+
+    /// Decode a state relation into `(cid, coords)` pairs — for display
+    /// and assertions.
+    pub fn centroids_from_state(state: &[String]) -> Vec<(u64, Vec<i64>)> {
+        state.iter().filter_map(|l| Self::parse_state_line(l)).collect()
+    }
+}
+
+impl IterativeWorkload for KMeans {
+    type Step = KMeansStep;
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    /// `k` evenly spaced parseable points become the initial centroids
+    /// (deterministic, scan order).
+    fn init_state(&self, inputs: &JobInputs) -> Vec<String> {
+        let points: Vec<Vec<i64>> = inputs.relations[KM_POINTS]
+            .lines
+            .iter()
+            .filter_map(|line| parse_point(line))
+            .collect();
+        assert!(
+            points.len() >= self.k,
+            "kmeans: {} cluster(s) requested but only {} parseable point(s)",
+            self.k,
+            points.len()
+        );
+        (0..self.k)
+            .map(|i| {
+                let p = &points[i * points.len() / self.k];
+                let coords: Vec<String> = p.iter().map(i64::to_string).collect();
+                format!("{i} {}", coords.join(" "))
+            })
+            .collect()
+    }
+
+    fn step(&self, state: &[String]) -> Arc<KMeansStep> {
+        let mut centroids = Self::centroids_from_state(state);
+        centroids.sort_unstable_by_key(|(cid, _)| *cid);
+        Arc::new(KMeansStep { centroids })
+    }
+
+    /// Move every centroid to its cluster mean (truncating integer
+    /// division); empty clusters stay put. Delta is the max coordinate
+    /// movement in grid units — 0 exactly at the fixed point.
+    fn advance(&self, output: HashMap<u64, ClusterAcc>, state: &[String]) -> (Vec<String>, f64) {
+        let mut delta = 0u64;
+        let mut next = Vec::with_capacity(state.len());
+        for line in state {
+            let Some((cid, prev)) = Self::parse_state_line(line) else { continue };
+            let new = match output.get(&cid) {
+                Some(acc) if acc.count > 0 => (0..prev.len())
+                    .map(|i| acc.sum.get(i).copied().unwrap_or(0) / acc.count as i64)
+                    .collect(),
+                _ => prev.clone(),
+            };
+            for (a, b) in prev.iter().zip(new.iter()) {
+                delta = delta.max(a.abs_diff(*b));
+            }
+            let coords: Vec<String> = new.iter().map(i64::to_string).collect();
+            next.push(format!("{cid} {}", coords.join(" ")));
+        }
+        (next, delta as f64)
+    }
+}
+
+/// Synthesize `n` points in `dims` dimensions around `clusters` seeded
+/// Gaussian-ish blobs (uniform noise, ±5% of the coordinate range), as
+/// integer fixed-point lines for the k-means point relation.
+pub fn synthesize_points(n: usize, dims: usize, clusters: usize, seed: u64) -> Vec<String> {
+    assert!(dims > 0 && clusters > 0);
+    let mut rng = Xoshiro256::new(seed);
+    let centers: Vec<Vec<i64>> = (0..clusters)
+        .map(|_| (0..dims).map(|_| rng.range_i64(-100_000, 100_000)).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = &centers[i % clusters];
+            let coords: Vec<String> =
+                c.iter().map(|&v| (v + rng.range_i64(-5_000, 5_000)).to_string()).collect();
+            coords.join(" ")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::{run_iterative_serial, IterativeSpec};
+
+    fn inputs(lines: Vec<String>) -> JobInputs {
+        JobInputs::new().relation_lines("points", Arc::new(lines))
+    }
+
+    /// Two tight, far-apart blobs: k=2 must land one centroid on each.
+    #[test]
+    fn separates_two_obvious_clusters() {
+        let mut lines = Vec::new();
+        for d in [-2, -1, 0, 1, 2] {
+            lines.push(format!("{} {}", 1_000 + d, 1_000 + d));
+            lines.push(format!("{} {}", -1_000 + d, -1_000 + d));
+        }
+        let out = run_iterative_serial(
+            &IterativeSpec::new(20).tolerance(0.0),
+            &KMeans::new(2),
+            &inputs(lines),
+        );
+        assert!(out.converged, "blobs this separated must reach the fixed point");
+        let cents = KMeans::centroids_from_state(&out.state);
+        assert_eq!(cents.len(), 2);
+        let mut means: Vec<i64> = cents.iter().map(|(_, c)| c[0]).collect();
+        means.sort_unstable();
+        assert!((means[0] + 1_000).abs() <= 2, "{means:?}");
+        assert!((means[1] - 1_000).abs() <= 2, "{means:?}");
+    }
+
+    #[test]
+    fn fixed_point_is_exact_and_deterministic() {
+        let pts = synthesize_points(200, 3, 4, 42);
+        let it = IterativeSpec::new(25).tolerance(0.0);
+        let a = run_iterative_serial(&it, &KMeans::new(4), &inputs(pts.clone()));
+        let b = run_iterative_serial(&it, &KMeans::new(4), &inputs(pts));
+        assert_eq!(a.state, b.state);
+        if a.converged {
+            assert_eq!(*a.deltas.last().unwrap(), 0.0, "exact fixed point");
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_its_centroid() {
+        // Two identical points seed two identical centroids; the tie
+        // always resolves to cid 0, so cluster 1 stays empty — and must
+        // keep its coordinates instead of collapsing to 0/0.
+        let lines = vec!["5 5".to_string(), "5 5".to_string()];
+        let out = run_iterative_serial(
+            &IterativeSpec::new(5).tolerance(0.0),
+            &KMeans::new(2),
+            &inputs(lines),
+        );
+        let cents = KMeans::centroids_from_state(&out.state);
+        assert_eq!(cents.len(), 2);
+        for (_, c) in &cents {
+            assert_eq!(c, &vec![5, 5]);
+        }
+        assert!(out.converged);
+    }
+
+    #[test]
+    fn cluster_acc_roundtrips_and_merges() {
+        let a = ClusterAcc { count: 2, sum: vec![3, -4] };
+        assert_eq!(ClusterAcc::from_bytes(&a.to_bytes()).unwrap(), a);
+        assert!(a.heap_bytes() > 0);
+        let mut acc = ClusterAcc::default();
+        KMeansStep::combine(&mut acc, a);
+        KMeansStep::combine(&mut acc, ClusterAcc { count: 1, sum: vec![1, 1, 1] });
+        assert_eq!(acc, ClusterAcc { count: 3, sum: vec![4, -3, 1] });
+    }
+
+    #[test]
+    fn nearest_breaks_ties_toward_smallest_cid() {
+        let step = KMeansStep { centroids: vec![(0, vec![-10]), (1, vec![10])] };
+        // 0 is equidistant: the smaller cid wins.
+        assert_eq!(step.nearest(&[0]), Some(0));
+        assert_eq!(step.nearest(&[6]), Some(1));
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_and_parseable() {
+        let a = synthesize_points(50, 2, 3, 7);
+        let b = synthesize_points(50, 2, 3, 7);
+        assert_eq!(a, b);
+        for line in &a {
+            let coords: Result<Vec<i64>, _> = line.split_whitespace().map(str::parse).collect();
+            assert_eq!(coords.unwrap().len(), 2);
+        }
+    }
+}

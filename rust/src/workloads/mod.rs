@@ -3,7 +3,7 @@
 //!
 //! # The workload table
 //!
-//! Seven workloads, chosen to exercise different corners of the pipeline:
+//! Nine workloads, chosen to exercise different corners of the pipeline:
 //!
 //! * [`WordCount`] — the paper's job: `(word, 1)` with a sum reducer. The
 //!   canonical string-keyed, alloc-sensitive case.
@@ -26,10 +26,19 @@
 //! * [`Grep`] — filter-only scan with globally unique keys: opts out of
 //!   the exchange via [`Workload::needs_shuffle`], so both engines take
 //!   the zero-shuffle fast path and report 0 shuffle bytes.
+//! * [`PageRank`] — **iterative**: rank mass exchanged over a static edge
+//!   relation, the fed-back state as a tagged relation, L1 convergence;
+//!   all arithmetic in integer fixed-point so engines match the serial
+//!   oracle bit-for-bit.
+//! * [`KMeans`] — **iterative**: centroid assignment/update to an exact
+//!   integer fixed point; the showcase for the partition cache (point
+//!   parsing is skipped on warm rounds).
 //!
 //! Every workload is verified against [`mapreduce::run_serial`] (or
-//! [`mapreduce::run_serial_inputs`] for the join) on every engine in
-//! `tests/integration_workloads.rs`, including under injected failures.
+//! [`mapreduce::run_serial_inputs`] for the join,
+//! [`mapreduce::run_iterative_serial`] for the iterative pair) on every
+//! engine in `tests/integration_workloads.rs` and
+//! `tests/integration_iterative.rs`, including under injected failures.
 //!
 //! # Adding a workload
 //!
@@ -70,18 +79,64 @@
 //!    parity grid in `tests/integration_workloads.rs` (with and without
 //!    injected failures), and an entry in `benches/workloads.rs`.
 //!
+//! # Writing an iterative workload
+//!
+//! An iterative job is a loop of step jobs with feedback:
+//! [`mapreduce::run_iterative`] appends a line-rendered **state** relation
+//! to your static inputs, runs one step job per round, and hands the
+//! reduced output back to you to fold into the next state. To add one:
+//!
+//! 1. **Split the algorithm.** The per-round computation becomes a
+//!    [`Workload`] (the *step*) that also implements
+//!    [`mapreduce::CacheableWorkload`]: `parse_rel` is the pure,
+//!    state-independent tokenization of a record (this is what the
+//!    [`crate::cache::PartitionCache`] stores, so rounds after the first
+//!    skip it), `map_parsed` is the per-round emission and may consult
+//!    broadcast state carried on the step struct. The loop control —
+//!    initial state, building each round's step with the previous state
+//!    broadcast in, folding output → next state + convergence delta —
+//!    becomes an [`mapreduce::IterativeWorkload`].
+//! 2. **Stay on the integer grid.** Engines fold emissions in thread,
+//!    cache, and shuffle-arrival order; float sums would differ in the
+//!    last ulps per engine and cluster shape. Fixed-point integers make
+//!    combine order-free, so the acceptance bar — final state
+//!    bit-identical to [`mapreduce::run_iterative_serial`] on every
+//!    engine — is meetable. [`PageRank`] ([`PR_SCALE`] units ≡ rank 1.0)
+//!    and [`KMeans`] (integer coordinates, truncating mean) are the
+//!    worked examples.
+//! 3. **Make `advance` canonical.** Render the next state sorted by key
+//!    and derive each round's state only from (previous state, reduced
+//!    output); the driver compares states across engines with
+//!    `assert_eq!`.
+//! 4. **Keep the state relation self-describing.** Anything `advance` or
+//!    the next round's mappers need (out-degrees, dimensions) must ride
+//!    in the state lines — the state is a real shuffled relation, not a
+//!    side channel.
+//! 5. **Wire it up:** a `--workload` arm (plus `--iterations`,
+//!    `--tolerance`, `--cache-budget` already exist), parity + failure
+//!    rows in `tests/integration_iterative.rs`, and cached-vs-uncached
+//!    rows in `benches/iterative.rs`.
+//!
 //! [`mapreduce::run_serial`]: crate::mapreduce::run_serial
 //! [`mapreduce::run_serial_inputs`]: crate::mapreduce::run_serial_inputs
+//! [`mapreduce::run_iterative_serial`]: crate::mapreduce::run_iterative_serial
+//! [`mapreduce::run_iterative`]: crate::mapreduce::run_iterative
+//! [`mapreduce::CacheableWorkload`]: crate::mapreduce::CacheableWorkload
+//! [`mapreduce::IterativeWorkload`]: crate::mapreduce::IterativeWorkload
 //! [`mapreduce::JobKey`]: crate::mapreduce::JobKey
 //! [`mapreduce::JobValue`]: crate::mapreduce::JobValue
 
 mod distinct;
 mod grep;
 mod join;
+mod kmeans;
+mod pagerank;
 
 pub use distinct::{DistinctCount, REGISTERS};
 pub use grep::Grep;
 pub use join::{Join, JoinSides, LEFT, RIGHT};
+pub use kmeans::{synthesize_points, ClusterAcc, KMeans, KMeansStep, KmParsed, KM_POINTS, KM_STATE};
+pub use pagerank::{PageRank, PageRankStep, PrParsed, PR_EDGES, PR_SCALE, PR_STATE};
 
 use std::collections::HashMap;
 

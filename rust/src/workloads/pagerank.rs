@@ -1,0 +1,347 @@
+//! PageRank — the canonical iterative MapReduce workload: rank mass
+//! exchanged over an edge relation until the L1 change between rounds
+//! drops below tolerance.
+//!
+//! Input shape: each line of the (static) edge relation is an adjacency
+//! fragment `src dst1 dst2 ...` — the first whitespace token is a node,
+//! the rest are its out-neighbors. A node's adjacency may be split across
+//! any number of lines (out-degrees are totaled at init). The fed-back
+//! state relation holds one line per node: `node rank_units out_degree`.
+//!
+//! # Fixed-point arithmetic
+//!
+//! Ranks live on an integer grid: [`PR_SCALE`] units ≡ rank 1.0. Every
+//! per-round operation — the per-edge share `rank / out_degree`, the
+//! inflow sum, the damping `base + inflow·d/100` — is integer arithmetic,
+//! so results are independent of combine order and **bit-identical**
+//! across the serial oracle and both engines, on any cluster shape. (The
+//! float formulation would differ in the last ulps depending on shuffle
+//! arrival order.) Dangling nodes (no out-edges) simply drop their mass,
+//! the usual simplification; total mass then decays slightly below 1.0
+//! but the damped iteration still contracts to its fixed point.
+//!
+//! # Round structure
+//!
+//! * map over an edge fragment: look the source's `(rank, out_degree)` up
+//!   in the **broadcast** previous state and emit
+//!   `(dst, rank / out_degree)` per listed neighbor;
+//! * map over a state line: emit `(node, 0)` so every node appears in the
+//!   reduced output even with no inbound mass;
+//! * combine: integer sum — the inflow;
+//! * `PageRank::advance`: `new = teleport + d · inflow / 100`, L1 delta
+//!   against the previous ranks, state re-rendered in sorted node order.
+//!
+//! Edge parsing is the cacheable half ([`CacheableWorkload`]): the edge
+//! relation never changes across rounds, so with a warm
+//! [`crate::cache::PartitionCache`] every round after the first skips
+//! tokenization and goes straight to the rank lookups.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::engines::spark::HeapSize;
+use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+
+/// Fixed-point scale: this many integer units ≡ rank 1.0.
+pub const PR_SCALE: u64 = 1 << 32;
+
+/// Relation index of the static edge relation.
+pub const PR_EDGES: usize = 0;
+/// Relation index of the fed-back state relation.
+pub const PR_STATE: usize = 1;
+
+/// Parsed form of one record — what the partition cache stores per split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PrParsed {
+    /// One adjacency fragment of the edge relation.
+    Edges { src: String, dsts: Vec<String> },
+    /// One node of the state relation.
+    Node(String),
+}
+
+impl HeapSize for PrParsed {
+    fn heap_bytes(&self) -> usize {
+        match self {
+            PrParsed::Edges { src, dsts } => src.heap_bytes() + dsts.heap_bytes() + 16,
+            PrParsed::Node(n) => n.heap_bytes() + 16,
+        }
+    }
+}
+
+/// One round of PageRank: inflow accumulation with the previous ranks
+/// broadcast into the workload (built fresh each round by
+/// `PageRank::step`).
+pub struct PageRankStep {
+    /// node → (rank units, out-degree) of the previous round.
+    ranks: HashMap<String, (u64, u64)>,
+}
+
+impl Workload for PageRankStep {
+    type Key = String;
+    type Value = u64;
+    type Output = HashMap<String, u64>;
+
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn num_relations(&self) -> usize {
+        2
+    }
+
+    /// Multi-input stub: engines and oracles route through `map_rel`.
+    fn map(&self, _doc: u64, _record: &str, _emit: &mut dyn FnMut(String, u64)) {
+        unreachable!("pagerank is multi-input; run it through the iterative driver");
+    }
+
+    fn map_rel(&self, rel: usize, doc: u64, record: &str, emit: &mut dyn FnMut(String, u64)) {
+        if let Some(p) = self.parse_rel(rel, doc, record) {
+            self.map_parsed(rel, &p, emit);
+        }
+    }
+
+    fn combine(acc: &mut u64, v: u64) {
+        *acc += v;
+    }
+
+    fn finalize(&self, entries: Vec<(String, u64)>) -> HashMap<String, u64> {
+        entries.into_iter().collect()
+    }
+}
+
+impl CacheableWorkload for PageRankStep {
+    type Parsed = PrParsed;
+
+    fn parse_rel(&self, rel: usize, _doc: u64, record: &str) -> Option<PrParsed> {
+        match rel {
+            PR_EDGES => {
+                let mut toks = record.split_whitespace();
+                let src = toks.next()?;
+                let dsts: Vec<String> = toks.map(str::to_string).collect();
+                if dsts.is_empty() {
+                    // A fragment with no out-neighbors emits nothing.
+                    return None;
+                }
+                Some(PrParsed::Edges { src: src.to_string(), dsts })
+            }
+            PR_STATE => {
+                record.split_whitespace().next().map(|n| PrParsed::Node(n.to_string()))
+            }
+            other => panic!("pagerank got relation index {other}"),
+        }
+    }
+
+    fn map_parsed(&self, _rel: usize, parsed: &PrParsed, emit: &mut dyn FnMut(String, u64)) {
+        match parsed {
+            PrParsed::Edges { src, dsts } => {
+                let Some(&(rank, deg)) = self.ranks.get(src) else {
+                    return; // source unknown to the state: no mass to send
+                };
+                if deg == 0 {
+                    return;
+                }
+                // Integer share per out-edge occurrence: order-free.
+                let share = rank / deg;
+                for dst in dsts {
+                    emit(dst.clone(), share);
+                }
+            }
+            PrParsed::Node(n) => emit(n.clone(), 0),
+        }
+    }
+}
+
+/// The iterative PageRank driver workload: owns the damping factor and the
+/// state round-tripping. Run it with
+/// [`run_iterative`](crate::mapreduce::run_iterative) over a single edge
+/// relation.
+#[derive(Clone, Copy, Debug)]
+pub struct PageRank {
+    /// Damping factor in percent (the classic 0.85 → 85).
+    pub damping_pct: u64,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        Self { damping_pct: 85 }
+    }
+}
+
+impl PageRank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-node teleport mass for an `n`-node graph.
+    fn base_units(&self, n: u64) -> u64 {
+        PR_SCALE / 100 * (100 - self.damping_pct) / n.max(1)
+    }
+
+    /// `node rank_units out_degree` → components.
+    fn parse_state_line(line: &str) -> Option<(&str, u64, u64)> {
+        let mut t = line.split_whitespace();
+        let node = t.next()?;
+        let rank = t.next()?.parse().ok()?;
+        let deg = t.next()?.parse().ok()?;
+        Some((node, rank, deg))
+    }
+
+    /// Decode a state relation into `(node, rank in [0,1])` pairs — for
+    /// display and assertions.
+    pub fn ranks_from_state(state: &[String]) -> Vec<(String, f64)> {
+        state
+            .iter()
+            .filter_map(|l| Self::parse_state_line(l))
+            .map(|(n, r, _)| (n.to_string(), r as f64 / PR_SCALE as f64))
+            .collect()
+    }
+}
+
+impl IterativeWorkload for PageRank {
+    type Step = PageRankStep;
+
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    /// Node set and out-degrees from one scan of the edge relation;
+    /// everyone starts at rank `1/n` (on the integer grid), sorted by
+    /// node name.
+    fn init_state(&self, inputs: &JobInputs) -> Vec<String> {
+        let mut degs: BTreeMap<&str, u64> = BTreeMap::new();
+        for line in inputs.relations[PR_EDGES].lines.iter() {
+            let mut toks = line.split_whitespace();
+            let Some(src) = toks.next() else { continue };
+            let mut fanout = 0u64;
+            for dst in toks {
+                degs.entry(dst).or_insert(0);
+                fanout += 1;
+            }
+            *degs.entry(src).or_insert(0) += fanout;
+        }
+        let n = degs.len() as u64;
+        if n == 0 {
+            return Vec::new();
+        }
+        let init = PR_SCALE / n;
+        degs.iter().map(|(node, deg)| format!("{node} {init} {deg}")).collect()
+    }
+
+    fn step(&self, state: &[String]) -> Arc<PageRankStep> {
+        let ranks = state
+            .iter()
+            .filter_map(|l| {
+                Self::parse_state_line(l).map(|(n, r, d)| (n.to_string(), (r, d)))
+            })
+            .collect::<HashMap<_, _>>();
+        Arc::new(PageRankStep { ranks })
+    }
+
+    /// `new = teleport + d·inflow/100` per node, in the state's (sorted)
+    /// order; delta is the L1 rank change normalized to rank mass 1.0.
+    fn advance(&self, output: HashMap<String, u64>, state: &[String]) -> (Vec<String>, f64) {
+        let base = self.base_units(state.len() as u64);
+        let mut delta_units = 0u64;
+        let mut next = Vec::with_capacity(state.len());
+        for line in state {
+            let Some((node, rank, deg)) = Self::parse_state_line(line) else { continue };
+            let inflow = output.get(node).copied().unwrap_or(0);
+            let new = base + inflow * self.damping_pct / 100;
+            delta_units += new.abs_diff(rank);
+            next.push(format!("{node} {new} {deg}"));
+        }
+        (next, delta_units as f64 / PR_SCALE as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Corpus;
+    use crate::mapreduce::{run_iterative_serial, IterativeSpec};
+
+    fn inputs(edges: &str) -> JobInputs {
+        JobInputs::new().relation("edges", &Corpus::from_text(edges))
+    }
+
+    /// a → b, b → c, c → a (a 3-cycle): symmetric, so ranks stay equal
+    /// (up to integer-grid drift, which contracts by the damping factor
+    /// each round).
+    #[test]
+    fn cycle_keeps_uniform_ranks() {
+        let out = run_iterative_serial(
+            &IterativeSpec::new(30).tolerance(1e-8),
+            &PageRank::new(),
+            &inputs("a b\nb c\nc a\n"),
+        );
+        assert!(out.converged, "symmetric cycle converges: {:?}", out.deltas);
+        let ranks = PageRank::ranks_from_state(&out.state);
+        assert_eq!(ranks.len(), 3);
+        for (_, r) in &ranks {
+            assert!((r - 1.0 / 3.0).abs() < 1e-6, "uniform ranks, got {ranks:?}");
+        }
+    }
+
+    /// Everyone links to `hub`; the hub must out-rank the leaves.
+    #[test]
+    fn hub_accumulates_rank() {
+        let out = run_iterative_serial(
+            &IterativeSpec::new(30).tolerance(1e-7),
+            &PageRank::new(),
+            &inputs("a hub\nb hub\nc hub\nhub a\n"),
+        );
+        let ranks: HashMap<String, f64> =
+            PageRank::ranks_from_state(&out.state).into_iter().collect();
+        assert!(ranks["hub"] > ranks["b"] * 2.0, "{ranks:?}");
+        assert!(ranks["a"] > ranks["b"], "hub links back to a: {ranks:?}");
+    }
+
+    #[test]
+    fn serial_oracle_is_deterministic() {
+        let it = IterativeSpec::new(8).tolerance(0.0);
+        let i = inputs("a b c\nb c\nc a\nd a b c d\n");
+        let x = run_iterative_serial(&it, &PageRank::new(), &i);
+        let y = run_iterative_serial(&it, &PageRank::new(), &i);
+        assert_eq!(x.state, y.state);
+        assert_eq!(x.deltas, y.deltas);
+    }
+
+    #[test]
+    fn split_adjacency_totals_out_degree() {
+        // `a`'s adjacency split over two lines: shares must use deg 2.
+        let one = run_iterative_serial(
+            &IterativeSpec::new(1),
+            &PageRank::new(),
+            &inputs("a b\na c\n"),
+        );
+        let split: HashMap<String, f64> =
+            PageRank::ranks_from_state(&one.state).into_iter().collect();
+        let joined = run_iterative_serial(
+            &IterativeSpec::new(1),
+            &PageRank::new(),
+            &inputs("a b c\n"),
+        );
+        let whole: HashMap<String, f64> =
+            PageRank::ranks_from_state(&joined.state).into_iter().collect();
+        assert_eq!(split, whole);
+    }
+
+    #[test]
+    fn empty_graph_has_empty_state() {
+        let out = run_iterative_serial(&IterativeSpec::new(3), &PageRank::new(), &inputs(""));
+        assert!(out.state.is_empty());
+    }
+
+    #[test]
+    fn state_lines_roundtrip() {
+        let w = PageRank::new();
+        let state = w.init_state(&inputs("x y\ny x\n"));
+        assert_eq!(state.len(), 2);
+        for line in &state {
+            let (n, r, d) = PageRank::parse_state_line(line).unwrap();
+            assert!(!n.is_empty());
+            assert_eq!(r, PR_SCALE / 2);
+            assert_eq!(d, 1);
+        }
+    }
+}

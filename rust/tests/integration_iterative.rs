@@ -1,0 +1,259 @@
+//! Cross-engine parity for the iterative job driver: PageRank and k-means
+//! must reproduce the serial fixed-point oracle **bit-identically** on
+//! every engine — per iteration and end-to-end, with and without injected
+//! failures — and the partition cache must change only speed, never
+//! results.
+
+use std::sync::Arc;
+
+use blaze::cache::{CacheBudget, PartitionCache};
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec};
+use blaze::engines::Engine;
+use blaze::mapreduce::{
+    run_iterative, run_iterative_serial, run_serial_inputs, IterativeSpec, IterativeWorkload,
+    JobInputs, JobSpec,
+};
+use blaze::workloads::{synthesize_points, KMeans, PageRank};
+
+const ENGINES: [Engine; 4] =
+    [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped];
+
+/// Engines with a recovery path to exercise (stripped Spark has FT off).
+const FAILURE_ENGINES: [Engine; 3] = [Engine::Blaze, Engine::BlazeTcm, Engine::Spark];
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine).nodes(2).threads_per_node(2).net(NetModel::ideal())
+}
+
+/// A failure plan exercising the engine's recovery path (one-shot
+/// injections, consumed by the first round they hit).
+fn failure_plan(engine: Engine) -> FailurePlan {
+    match engine {
+        Engine::Blaze | Engine::BlazeTcm => FailurePlan::none().fail_node(0, 0).fail_node(1, 1),
+        Engine::Spark | Engine::SparkStripped => {
+            FailurePlan::none().fail_task(0, 1).fail_task(1, 0)
+        }
+    }
+}
+
+/// Corpus lines as an edge relation (`src dst...` per line).
+fn edge_inputs(bytes: u64, seed: u64) -> JobInputs {
+    let corpus = Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        vocab_size: 500, // dense-ish graph: nodes recur across lines
+        seed,
+        ..Default::default()
+    });
+    JobInputs::new().relation("edges", &corpus)
+}
+
+fn point_inputs(n: usize, seed: u64) -> JobInputs {
+    JobInputs::new().relation_lines("points", Arc::new(synthesize_points(n, 3, 5, seed)))
+}
+
+#[test]
+fn pagerank_bit_identical_to_serial_oracle() {
+    let inputs = edge_inputs(24 << 10, 31);
+    let w = PageRank::new();
+    // tolerance 0: a fixed round count, so iterations must match too.
+    let it = IterativeSpec::new(4).tolerance(0.0);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    assert_eq!(oracle.iterations, 4);
+    assert!(!oracle.state.is_empty());
+    for engine in ENGINES {
+        let r = run_iterative(&spec(engine), &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+        assert_eq!(r.converged, oracle.converged, "{}", engine.label());
+    }
+}
+
+#[test]
+fn pagerank_parity_under_injected_failures() {
+    let inputs = edge_inputs(16 << 10, 33);
+    let w = PageRank::new();
+    let it = IterativeSpec::new(3).tolerance(0.0);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in FAILURE_ENGINES {
+        // Fresh plan per engine: injections are one-shot and consumed by
+        // the first round's tasks; recovery must not perturb the state.
+        let r = run_iterative(
+            &spec(engine).failures(failure_plan(engine)),
+            &it,
+            &w,
+            &inputs,
+        )
+        .unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+    }
+}
+
+#[test]
+fn kmeans_bit_identical_to_serial_oracle() {
+    let inputs = point_inputs(300, 41);
+    let w = KMeans::new(5);
+    let it = IterativeSpec::new(12).tolerance(0.0);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in ENGINES {
+        let r = run_iterative(&spec(engine), &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+        assert_eq!(r.converged, oracle.converged, "{}", engine.label());
+    }
+}
+
+#[test]
+fn kmeans_parity_under_injected_failures() {
+    let inputs = point_inputs(200, 43);
+    let w = KMeans::new(4);
+    let it = IterativeSpec::new(6).tolerance(0.0);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in FAILURE_ENGINES {
+        let r = run_iterative(
+            &spec(engine).failures(failure_plan(engine)),
+            &it,
+            &w,
+            &inputs,
+        )
+        .unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+    }
+}
+
+/// Every round's step job must individually match `run_serial_inputs` —
+/// the per-iteration half of the acceptance bar.
+#[test]
+fn pagerank_rounds_match_serial_per_iteration() {
+    let inputs = edge_inputs(12 << 10, 51);
+    let w = PageRank::new();
+    let state = w.init_state(&inputs);
+    for engine in [Engine::BlazeTcm, Engine::Spark] {
+        let sp = spec(engine).shared_cache(Arc::new(PartitionCache::new(CacheBudget::Unbounded)));
+        let mut st = state.clone();
+        for round in 0..3u64 {
+            let step = w.step(&st);
+            let ri = inputs.clone().relation_lines("state", Arc::new(st.clone()));
+            let expect = run_serial_inputs(step.as_ref(), &ri);
+            let got = sp
+                .clone()
+                .relation_gens(vec![0, round])
+                .run_inputs_cached(&step, &ri)
+                .unwrap();
+            assert_eq!(got.output, expect, "{} round {round}", engine.label());
+            let (next, _delta) = w.advance(expect, &st);
+            st = next;
+        }
+    }
+    // The manual loop must agree with the driver, too.
+    let driven = run_iterative_serial(&IterativeSpec::new(3).tolerance(0.0), &w, &inputs);
+    let mut st = state;
+    for _ in 0..3 {
+        let step = w.step(&st);
+        let ri = inputs.clone().relation_lines("state", Arc::new(st.clone()));
+        let (next, _) = w.advance(run_serial_inputs(step.as_ref(), &ri), &st);
+        st = next;
+    }
+    assert_eq!(st, driven.state);
+}
+
+/// The cache ablation: unbounded vs zero budget changes hit rates and
+/// work, never results.
+#[test]
+fn cache_budget_changes_hits_not_results() {
+    let inputs = edge_inputs(16 << 10, 61);
+    let w = PageRank::new();
+    let it = IterativeSpec::new(4).tolerance(0.0);
+    for engine in [Engine::BlazeTcm, Engine::Spark] {
+        let warm =
+            run_iterative(&spec(engine), &it.cache_budget(CacheBudget::Unbounded), &w, &inputs)
+                .unwrap();
+        let cold =
+            run_iterative(&spec(engine), &it.cache_budget(CacheBudget::Bytes(0)), &w, &inputs)
+                .unwrap();
+        assert_eq!(warm.state, cold.state, "{}", engine.label());
+        // Warm: the static edge relation parses once, then hits every
+        // later round on every split.
+        assert!(warm.cache.hits > 0, "{}: {:?}", engine.label(), warm.cache);
+        assert!(warm.cache.hit_rate() > 0.0, "{}", engine.label());
+        // Cold: a zero budget bypasses the cache entirely — nothing is
+        // admitted, nothing is even looked up.
+        assert_eq!(cold.cache.hits, 0, "{}: {:?}", engine.label(), cold.cache);
+        assert_eq!(cold.cache.insertions, 0, "{}: {:?}", engine.label(), cold.cache);
+        assert_eq!(cold.cache.bytes_cached, 0, "{}", engine.label());
+        // Round 1+ of the warm run serves the edge splits from memory.
+        assert!(
+            warm.iters[1].cache.hits > 0,
+            "{}: round-1 stats {:?}",
+            engine.label(),
+            warm.iters[1].cache
+        );
+    }
+}
+
+/// Bumping a relation's generation invalidates its cached splits (they
+/// stop matching and re-parse); unchanged generations keep hitting.
+#[test]
+fn generation_bump_forces_reparse() {
+    let inputs = edge_inputs(8 << 10, 71);
+    let w = PageRank::new();
+    let state = w.init_state(&inputs);
+    let step = w.step(&state);
+    let ri = inputs.clone().relation_lines("state", Arc::new(state.clone()));
+    let cache = Arc::new(PartitionCache::new(CacheBudget::Unbounded));
+    let sp = spec(Engine::BlazeTcm).shared_cache(Arc::clone(&cache));
+
+    let first = sp.clone().relation_gens(vec![0, 0]).run_inputs_cached(&step, &ri).unwrap();
+    assert_eq!(first.cache.hits, 0);
+    assert!(first.cache.insertions > 0);
+
+    let second = sp.clone().relation_gens(vec![0, 0]).run_inputs_cached(&step, &ri).unwrap();
+    assert!(second.cache.hits > 0, "{:?}", second.cache);
+    assert_eq!(second.cache.misses, 0, "{:?}", second.cache);
+    assert_eq!(second.output, first.output);
+
+    let bumped = sp.relation_gens(vec![1, 1]).run_inputs_cached(&step, &ri).unwrap();
+    assert!(bumped.cache.misses > 0, "{:?}", bumped.cache);
+    assert_eq!(bumped.output, first.output);
+}
+
+#[test]
+fn iterative_report_metrics_are_sane() {
+    let inputs = point_inputs(150, 81);
+    let w = KMeans::new(3);
+    let it = IterativeSpec::new(8).tolerance(0.0);
+    let r = run_iterative(&spec(Engine::BlazeTcm), &it, &w, &inputs).unwrap();
+    assert_eq!(r.workload, "kmeans");
+    assert_eq!(r.iters.len(), r.iterations);
+    assert!(r.iterations > 0 && r.iterations <= 8);
+    assert!(r.wall_secs > 0.0);
+    for row in &r.iters {
+        assert!(row.records > 0, "every round maps every point");
+        assert!(row.shuffle_bytes > 0, "assignment needs the exchange");
+        assert!(row.wall_secs >= 0.0);
+    }
+    if r.converged {
+        assert_eq!(r.iters.last().unwrap().delta, 0.0, "exact fixed point");
+    }
+    // Per-round cache deltas sum to the cumulative counters.
+    let summed: u64 = r.iters.iter().map(|i| i.cache.hits).sum();
+    assert_eq!(summed, r.cache.hits);
+}
+
+/// The driver validates shapes up front.
+#[test]
+fn iterative_arity_is_validated() {
+    let w = PageRank::new();
+    let two = JobInputs::new()
+        .relation("a", &Corpus::from_text("x y\n"))
+        .relation("b", &Corpus::from_text("y x\n"));
+    let err = run_iterative(
+        &spec(Engine::Blaze),
+        &IterativeSpec::new(2),
+        &w,
+        &two,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("static input relation(s)"), "{err}");
+}

@@ -267,3 +267,130 @@ fn prop_join_parity_with_one_empty_relation() {
         Ok(())
     });
 }
+
+/// Deterministic "computation" for a cache key — what a parse of the
+/// underlying split would produce.
+fn cache_value_of(k: &blaze::cache::CacheKey) -> Vec<u64> {
+    vec![k.namespace, k.generation, k.partition, k.namespace ^ (k.partition << 8)]
+}
+
+/// The partition cache under random put/get streams matches a reference
+/// LRU model exactly: resident set (eviction order), byte accounting, the
+/// never-exceeds-budget invariant, and every hit returns precisely the
+/// deterministic value of its key.
+#[test]
+fn prop_partition_cache_matches_lru_model() {
+    use blaze::cache::{CacheBudget, CacheKey, PartitionCache};
+    use std::sync::Arc;
+
+    check_with(Config { cases: 48, ..Default::default() }, "cache-lru-model", |g| {
+        let budget = g.below(500);
+        let cache = PartitionCache::new(CacheBudget::Bytes(budget));
+        // Reference model: (key, bytes) in recency order, front = LRU.
+        let mut model: Vec<(CacheKey, u64)> = Vec::new();
+        for _step in 0..g.usize_in(1, 120) {
+            let key = CacheKey {
+                namespace: g.below(2),
+                generation: g.below(2),
+                partition: g.below(6),
+                splits: 1,
+            };
+            if g.chance(0.5) {
+                let bytes = g.below(300);
+                let admitted = cache.put(key, Arc::new(cache_value_of(&key)), bytes);
+                if budget == 0 || bytes > budget {
+                    if admitted {
+                        return fail("entry larger than the whole budget was admitted");
+                    }
+                } else {
+                    if !admitted {
+                        return fail("fitting entry was rejected");
+                    }
+                    model.retain(|(k, _)| *k != key);
+                    let mut total: u64 = model.iter().map(|(_, b)| *b).sum();
+                    while total + bytes > budget {
+                        let (_lru, b) = model.remove(0);
+                        total -= b;
+                    }
+                    model.push((key, bytes));
+                }
+            } else {
+                let hit = cache.get_typed::<Vec<u64>>(&key);
+                let in_model = model.iter().position(|(k, _)| *k == key);
+                match (hit, in_model) {
+                    (Some(v), Some(pos)) => {
+                        if *v != cache_value_of(&key) {
+                            return fail("hit returned a value for the wrong key");
+                        }
+                        let e = model.remove(pos);
+                        model.push(e); // becomes MRU
+                    }
+                    (None, None) => {}
+                    (Some(_), None) => return fail("cache hit a key the LRU model evicted"),
+                    (None, Some(_)) => return fail("cache missed a key the LRU model kept"),
+                }
+            }
+            // Invariants hold after every single operation.
+            let cached = cache.bytes_cached();
+            if cached > budget {
+                return fail(format!("budget exceeded: {cached} > {budget}"));
+            }
+            let model_bytes: u64 = model.iter().map(|(_, b)| *b).sum();
+            if cached != model_bytes {
+                return fail(format!("byte accounting diverged: {cached} != {model_bytes}"));
+            }
+            if cache.len() != model.len() {
+                return fail(format!(
+                    "resident count diverged: {} != {}",
+                    cache.len(),
+                    model.len()
+                ));
+            }
+        }
+        for (k, _) in &model {
+            if !cache.contains(k) {
+                return fail(format!("model key {k:?} not resident (LRU order diverged)"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Eviction is invisible to a caller with a deterministic compute
+/// function: a get-after-evict misses, recomputes, and lands on a value
+/// identical to what was originally cached — under arbitrary interleaved
+/// access patterns and tight budgets.
+#[test]
+fn prop_cache_get_after_evict_recomputes_identical_value() {
+    use blaze::cache::{CacheBudget, CacheKey, PartitionCache};
+    use std::sync::Arc;
+
+    check("cache-evict-recompute", |g| {
+        // Budget fits only a handful of entries: evictions are constant.
+        let cache = PartitionCache::new(CacheBudget::Bytes(g.below(200) + 50));
+        for _ in 0..g.usize_in(10, 150) {
+            let key = CacheKey {
+                namespace: 0,
+                generation: g.below(3),
+                partition: g.below(8),
+                splits: 1,
+            };
+            let value = match cache.get_typed::<Vec<u64>>(&key) {
+                Some(hit) => hit,
+                None => {
+                    let v = Arc::new(cache_value_of(&key));
+                    cache.put(key, Arc::clone(&v), 40);
+                    v
+                }
+            };
+            if *value != cache_value_of(&key) {
+                return fail(format!("key {key:?} resolved to a different value"));
+            }
+        }
+        let s = cache.stats();
+        if s.hits + s.misses == 0 {
+            return fail("no lookups recorded");
+        }
+        Ok(())
+    });
+}
