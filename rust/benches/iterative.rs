@@ -28,7 +28,7 @@ use blaze::corpus::{Corpus, CorpusSpec};
 use blaze::engines::Engine;
 use blaze::mapreduce::{run_iterative, IterativeReport, IterativeSpec, JobInputs, JobSpec};
 use blaze::util::stats::fmt_bytes;
-use blaze::workloads::{synthesize_points, KMeans, PageRank};
+use blaze::workloads::{synthesize_points, Components, KMeans, PageRank};
 
 const ROUNDS: usize = 5;
 
@@ -94,6 +94,27 @@ fn main() {
                 move || {
                     let r = run_iterative(&spec(engine), &it_spec(budget), &KMeans::new(8), points)
                         .expect("kmeans");
+                    total_records(&r)
+                },
+            );
+        }
+    }
+    // Connected components: min-label propagation over the same edge
+    // relation — the reducer is min, so warm rounds are pure lookups.
+    for engine in engines {
+        for (label, budget) in budgets {
+            let edges = &edges;
+            runner.bench(
+                format!("components x{ROUNDS} / {} / cache={label}", engine.label()),
+                "recs",
+                move || {
+                    let r = run_iterative(
+                        &spec(engine),
+                        &it_spec(budget),
+                        &Components::new(),
+                        edges,
+                    )
+                    .expect("components");
                     total_records(&r)
                 },
             );

@@ -1,6 +1,7 @@
-//! Experiment W1: workload diversity — the generic job layer's seven
-//! workloads (word count, inverted index, top-k, length histogram, join,
-//! distinct-count sketch, grep) on both engines, same corpus, same
+//! Experiment W1: workload diversity — the generic job layer's
+//! single-pass workloads (word count, inverted index, top-k, length
+//! histogram, join, distinct-count sketch, grep) plus the two-stage
+//! chained `sessionize` pipeline on both engines, same corpus, same
 //! cluster shape.
 //!
 //! The paper's comparison is word count only; related work (DataMPI,
@@ -14,14 +15,15 @@
 
 use std::sync::Arc;
 
-use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::benchkit::{bench_corpus_bytes, stage_table, BenchRunner};
 use blaze::cluster::NetModel;
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::engines::Engine;
-use blaze::mapreduce::{JobInputs, JobSpec};
+use blaze::mapreduce::{run_chained, JobInputs, JobSpec};
 use blaze::util::stats::fmt_bytes;
 use blaze::workloads::{
-    DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, TopKWords, WordCount,
+    synthesize_logs, DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, Sessionize,
+    TopKWords, WordCount,
 };
 
 fn spec(engine: Engine) -> JobSpec {
@@ -116,14 +118,49 @@ fn main() {
         });
     }
 
+    // Sessionize: the two-stage chained pipeline (two shuffle
+    // boundaries; event volume scaled to the corpus byte budget).
+    let gap = 1800u64;
+    let events = (bytes / 16) as usize;
+    let logs = JobInputs::new()
+        .relation_lines("logs", Arc::new(synthesize_logs(200, events, gap, 7)));
+    let sessionize = Sessionize::new(gap);
+    for engine in engines {
+        let logs = &logs;
+        let sessionize = &sessionize;
+        runner.bench(format!("sessionize / {}", engine.label()), "recs", move || {
+            run_chained(&spec(engine), sessionize, logs).expect("sessionize").records as f64
+        });
+    }
+
     runner.finish();
 
     // Per-workload speedups (Blaze TCM over Spark).
     println!("\nW1 headline (Blaze TCM / Spark, per workload):");
-    let names = ["wordcount", "index", "top-k", "length-hist", "join", "distinct", "grep"];
+    let names = [
+        "wordcount",
+        "index",
+        "top-k",
+        "length-hist",
+        "join",
+        "distinct",
+        "grep",
+        "sessionize",
+    ];
     for (i, name) in names.iter().enumerate() {
         let spark = runner.results[i * 2].rate();
         let tcm = runner.results[i * 2 + 1].rate();
         println!("  {name:<12} {:.1}x", tcm / spark.max(1e-12));
+    }
+
+    // Multi-stage attribution: where sessionize's time and bytes go,
+    // per engine (one fresh run per cell).
+    for engine in engines {
+        let r = run_chained(&spec(engine), &sessionize, &logs).expect("sessionize");
+        println!(
+            "\n{}",
+            stage_table(format!("sessionize stages / {}", engine.label()), &r.stages)
+                .to_markdown()
+        );
     }
 }

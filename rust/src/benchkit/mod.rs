@@ -156,6 +156,30 @@ impl BenchRunner {
     }
 }
 
+/// Markdown table of per-stage rows ([`crate::mapreduce::StageStats`]) —
+/// how a multi-stage run's wall clock and shuffle volume attribute to its
+/// stages. Bench binaries print one per chained/multi-stage measurement
+/// so bench rows stay comparable stage by stage.
+pub fn stage_table(
+    title: impl Into<String>,
+    stages: &[crate::mapreduce::StageStats],
+) -> crate::metrics::Table {
+    let mut t = crate::metrics::Table::new(
+        title.into(),
+        &["stage", "records in", "records out", "shuffle", "wall (s)"],
+    );
+    for s in stages {
+        t.row(&[
+            format!("{} '{}'", s.stage, s.label),
+            s.records_in.to_string(),
+            s.records_out.to_string(),
+            crate::util::stats::fmt_bytes(s.shuffle_bytes),
+            format!("{:.4}", s.wall_secs),
+        ]);
+    }
+    t
+}
+
 /// Corpus size for word-count benches.
 pub fn bench_corpus_bytes() -> u64 {
     std::env::var("BLAZE_BENCH_BYTES")

@@ -6,11 +6,19 @@
 //! (one range per input relation for multi-input jobs — see
 //! [`run_workload_multi`]) is split into per-node blocks and mapped across
 //! nodes × threads; every emission combines continuously into a
-//! [`DistHashMap`]; one all-to-all shuffle then re-shards by key owner
-//! (skipped entirely for zero-shuffle workloads — see
-//! [`Workload::needs_shuffle`]). No fault tolerance: an injected node
-//! failure aborts the attempt and the driver reruns the whole job (the
-//! paper's §Conclusion regime, bounded by `max_job_reruns`).
+//! [`DistHashMap`]; one all-to-all shuffle then re-shards by key owner.
+//! No fault tolerance: an injected node failure aborts the attempt and
+//! the driver reruns the whole job (the paper's §Conclusion regime,
+//! bounded by `max_job_reruns`).
+//!
+//! Since the planner layer ([`crate::mapreduce::plan`]) landed, this
+//! engine is a **stage executor**: [`run_plan`] is its single
+//! plan-execution path (the rerun loop around map → exchange → per-node
+//! finalize), and it *reads* the per-stage decisions — run the exchange
+//! or elide it, cache a relation's parsed split under which key — from
+//! the compiled [`StagePlan`] instead of re-deriving them. The
+//! `run_workload{,_multi,_str,_str_lines,_cached}` entry points survive
+//! only as thin wrappers that supply their map closure to [`run_plan`].
 //!
 //! Word count is just [`crate::workloads::WordCount`] through this
 //! machinery; the two [`KeyPath`]s reproduce the paper's two bars:
@@ -35,7 +43,7 @@ use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
 use crate::engines::spark::HeapSize;
 use crate::hash::HashKind;
-use crate::mapreduce::{CacheableWorkload, StrWorkload, Workload};
+use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
 use crate::util::pool::{self, Schedule};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
@@ -72,9 +80,6 @@ pub struct BlazeConf {
     pub cache_policy: CachePolicy,
     /// Whole-job reruns allowed on an injected node failure (no FT).
     pub max_job_reruns: usize,
-    /// Run the exchange even for workloads that opt out via
-    /// [`Workload::needs_shuffle`] (the zero-shuffle ablation knob).
-    pub force_shuffle: bool,
 }
 
 impl Default for BlazeConf {
@@ -89,7 +94,6 @@ impl Default for BlazeConf {
             key_path: KeyPath::ZeroAlloc,
             cache_policy: CachePolicy::default(),
             max_job_reruns: 3,
-            force_shuffle: false,
         }
     }
 }
@@ -159,34 +163,37 @@ impl std::fmt::Display for JobFailed {
 impl std::error::Error for JobFailed {}
 
 /// Run a generic [`Workload`] over a single corpus (owned-key emissions,
-/// the [`KeyPath::AllocPerToken`] path).
+/// the [`KeyPath::AllocPerToken`] path). Thin wrapper: compiles the
+/// workload's one-stage plan and hands it to [`run_workload_multi`].
 pub fn run_workload<W: Workload>(
     conf: &BlazeConf,
     corpus: &Corpus,
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
-    run_workload_multi(conf, &[Arc::new(corpus.lines.clone())], failures, w)
+    let stage = StagePlan::single(w.name(), w.needs_shuffle(), 1);
+    run_workload_multi(conf, &stage, &[Arc::new(corpus.lines.clone())], failures, w)
 }
 
 /// Run a generic [`Workload`] over N tagged input relations. Each relation
 /// gets its own [`DistRange`] split across the nodes; emissions from every
 /// relation combine into the same [`DistHashMap`], so the one all-to-all
-/// exchange co-locates join keys from all sides. Workloads that declare
-/// [`Workload::needs_shuffle`] `false` skip the exchange entirely (zero
-/// bytes on the fabric) unless [`BlazeConf::force_shuffle`] is set.
+/// exchange co-locates join keys from all sides. Whether the exchange
+/// runs at all was decided when `stage` was compiled
+/// ([`Exchange::Elided`](crate::mapreduce::Exchange) puts zero bytes on
+/// the fabric). Thin wrapper over [`run_plan`].
 pub fn run_workload_multi<W: Workload>(
     conf: &BlazeConf,
+    stage: &StagePlan,
     relations: &[Arc<Vec<String>>],
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
     assert!(!relations.is_empty(), "a job needs at least one input relation");
-    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
-    run_attempts(
+    run_plan(
         conf,
+        stage,
         failures,
-        skip_shuffle,
         W::combine,
         |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
             let mut records = 0u64;
@@ -207,64 +214,66 @@ pub fn run_workload_multi<W: Workload>(
 }
 
 /// Run a [`CacheableWorkload`] with a partition-result cache: each node's
-/// **parsed** block of every relation is stored in `cache` under
-/// `(relation, generation, node rank)`, so a later run over the same
-/// relation contents (same generation — the iterative driver's static
-/// relations) skips tokenization entirely and goes straight to
+/// **parsed** block of a relation is stored in `cache` under the
+/// [`CachePoint`](crate::mapreduce::CachePoint) the planner assigned it —
+/// `(namespace, generation, node rank, node count)` — so a later run over
+/// the same relation contents (same generation — the iterative driver's
+/// static relations) skips tokenization entirely and goes straight to
 /// `map_parsed` + combine. A changed relation bumps its generation and
 /// re-parses; writers drop stale generations via
 /// `PartitionCache::invalidate_generations_below` (bounded budgets would
-/// also LRU them out). With
-/// `CacheBudget::Bytes(0)` every `put` is rejected and every round
-/// re-parses — the recompute ablation.
+/// also LRU them out). A relation **without** a planned cache point
+/// (no cache attached, or the `CacheBudget::Bytes(0)` recompute ablation)
+/// goes straight to the parser — no lookup, no size estimate, no rejected
+/// put. Thin wrapper over [`run_plan`].
 ///
 /// The cached path always materializes owned parsed records, so the
 /// [`KeyPath`] distinction (borrowed-key inserts) does not apply here.
 pub fn run_workload_cached<W: CacheableWorkload>(
     conf: &BlazeConf,
+    stage: &StagePlan,
     relations: &[Arc<Vec<String>>],
-    gens: &[u64],
     cache: &Arc<PartitionCache>,
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<W::Key, W::Value>, JobFailed> {
     assert!(!relations.is_empty(), "a job needs at least one input relation");
-    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
-    run_attempts(
+    run_plan(
         conf,
+        stage,
         failures,
-        skip_shuffle,
         W::combine,
         |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
             let mut records = 0u64;
             for (rel, lines) in relations.iter().enumerate() {
-                let key = CacheKey {
-                    namespace: rel as u64,
-                    generation: gens.get(rel).copied().unwrap_or(0),
-                    partition: comm.rank as u64,
-                    // Key on the decomposition too: a cache shared across
-                    // cluster shapes must never serve another shape's block.
-                    splits: conf.nnodes as u64,
-                };
                 let reparse = || {
                     Arc::new(parse_node_block(conf, lines, comm.rank, |i, line| {
                         w.parse_rel(rel, i as u64, line)
                     }))
                 };
-                // Budget 0 = the recompute ablation: go straight to the
-                // parser — no lookup, no size estimate, no rejected put —
-                // so the ablation times recomputation, nothing else.
-                let parsed: Arc<Vec<W::Parsed>> = if cache.is_disabled() {
-                    reparse()
-                } else {
-                    match cache.get_typed(&key) {
-                        Some(hit) => hit,
-                        None => {
-                            let block = reparse();
-                            let bytes = block.heap_bytes() as u64;
-                            let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&block);
-                            cache.put(key, erased, bytes);
-                            block
+                let parsed: Arc<Vec<W::Parsed>> = match stage.cache_point(rel) {
+                    // The planner assigned no cache point (no cache, or
+                    // the recompute ablation): parse, touch nothing.
+                    None => reparse(),
+                    Some(cp) => {
+                        let key = CacheKey {
+                            namespace: cp.namespace,
+                            generation: cp.generation,
+                            partition: comm.rank as u64,
+                            // Key on the decomposition too: a cache shared
+                            // across cluster shapes must never serve
+                            // another shape's block.
+                            splits: conf.nnodes as u64,
+                        };
+                        match cache.get_typed(&key) {
+                            Some(hit) => hit,
+                            None => {
+                                let block = reparse();
+                                let bytes = block.heap_bytes() as u64;
+                                let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&block);
+                                cache.put(key, erased, bytes);
+                                block
+                            }
                         }
                     }
                 };
@@ -323,30 +332,32 @@ fn parse_node_block<P: Send>(
 }
 
 /// Run a string-keyed [`StrWorkload`] through the zero-alloc borrowed-key
-/// insert path (the [`KeyPath::ZeroAlloc`] / "TCM" path).
+/// insert path (the [`KeyPath::ZeroAlloc`] / "TCM" path). Thin wrapper:
+/// compiles the workload's one-stage plan.
 pub fn run_workload_str<W: StrWorkload>(
     conf: &BlazeConf,
     corpus: &Corpus,
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<String, W::Value>, JobFailed> {
-    run_workload_str_lines(conf, Arc::new(corpus.lines.clone()), failures, w)
+    let stage = StagePlan::single(w.name(), w.needs_shuffle(), 1);
+    run_workload_str_lines(conf, &stage, Arc::new(corpus.lines.clone()), failures, w)
 }
 
 /// [`run_workload_str`] over already-shared lines (what the job layer
 /// hands down). String paths are single-input: a multi-relation job runs
-/// through [`run_workload_multi`].
+/// through [`run_workload_multi`]. Thin wrapper over [`run_plan`].
 pub fn run_workload_str_lines<W: StrWorkload>(
     conf: &BlazeConf,
+    stage: &StagePlan,
     lines: Arc<Vec<String>>,
     failures: &FailurePlan,
     w: &W,
 ) -> Result<WorkloadReport<String, W::Value>, JobFailed> {
-    let skip_shuffle = !w.needs_shuffle() && !conf.force_shuffle;
-    run_attempts(
+    run_plan(
         conf,
+        stage,
         failures,
-        skip_shuffle,
         W::combine,
         |comm: &Comm, map: &DistHashMap<String, W::Value>| {
             map_node_block(conf, &lines, comm.rank, |ctx, i, line| {
@@ -428,13 +439,16 @@ struct NodeOutcome<K, V> {
     failed: bool,
 }
 
-/// The engine core, shared by every workload: the whole-job rerun loop
-/// around single attempts of map → shuffle → per-node finalize.
-/// `skip_shuffle` is the zero-shuffle fast path (keys declared unique).
-fn run_attempts<K, V, R, M, F>(
+/// The engine's **single plan-execution path**, shared by every workload
+/// and every wrapper: the whole-job rerun loop around single attempts of
+/// map → exchange → per-node finalize. Whether the exchange runs was
+/// decided when `stage` was compiled
+/// ([`Exchange::Elided`](crate::mapreduce::Exchange) settles thread
+/// caches locally and puts zero bytes on the fabric).
+pub fn run_plan<K, V, R, M, F>(
     conf: &BlazeConf,
+    stage: &StagePlan,
     failures: &FailurePlan,
-    skip_shuffle: bool,
     reduce: R,
     map_node: M,
     finalize_shard: F,
@@ -446,6 +460,7 @@ where
     M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
 {
+    let skip_shuffle = !stage.runs_exchange();
     let mut reruns = 0usize;
     let job_sw = Stopwatch::start(); // total across attempts: failures cost time
     loop {

@@ -14,9 +14,18 @@
 //! (or [`run_workload_jvm`] when `jvm_strings` models UTF-16 strings).
 //! Multi-input jobs (joins) run through [`run_workload_multi`]: one
 //! indexed-textFile chain per relation, `union`ed so a single
-//! `reduceByKey` co-partitions every side. Zero-shuffle workloads
-//! ([`Workload::needs_shuffle`] == false, e.g. grep) skip the stage cut
-//! entirely and write no shuffle blocks.
+//! `reduceByKey` co-partitions every side.
+//!
+//! Since the planner layer ([`crate::mapreduce::plan`]) landed, this
+//! engine is a **stage executor**: [`run_plan`] is its single
+//! plan-execution path (union the per-relation chains, cut the stage at
+//! the exchange — or skip the cut when the compiled [`StagePlan`] elided
+//! it — then per-partition finalize and collect). The
+//! `run_workload{,_multi,_cached,_jvm}` entry points survive only as thin
+//! wrappers that build their per-relation mapped chains and hand them to
+//! [`run_plan`]; cache points (which relations persist their parsed RDD,
+//! under which namespace/generation) are read off the plan, not decided
+//! here.
 
 pub mod block;
 pub mod conf;
@@ -36,7 +45,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::corpus::{Corpus, Tokenizer};
-use crate::mapreduce::{CacheableWorkload, StrWorkload, Workload};
+use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
+use rdd::{ShuffleKey, ShuffleVal};
 
 /// The canonical word count on the Spark-sim engine. Returns the counts
 /// (merged across partitions) or the job error.
@@ -57,77 +67,100 @@ pub fn word_count_lines(
 ) -> Result<HashMap<String, u64>, JobError> {
     let w = Arc::new(crate::workloads::WordCount::new(tokenizer));
     let (entries, _emitted) = if ctx.conf().jvm_strings {
-        run_workload_jvm(ctx, lines, &w, false)?
+        let stage = StagePlan::single(w.name(), w.needs_shuffle(), 1);
+        run_workload_jvm(ctx, &stage, lines, &w)?
     } else {
         run_workload(ctx, lines, &w)?
     };
     Ok(entries.into_iter().collect())
 }
 
+/// The engine's **single plan-execution path**, shared by every wrapper:
+/// `union` the per-relation mapped chains, cut the stage at the exchange
+/// when the compiled plan says so (`reduceByKey`: shuffle write + fetch
+/// with all modeled costs), then per-partition finalize and collect.
+///
+/// A stage whose exchange was [elided](crate::mapreduce::Exchange::Elided)
+/// at plan time skips the stage cut entirely: no serialization, no blocks
+/// written — the finalize runs per *map* partition (exact, because such
+/// keys are globally unique) and `SparkMetrics::shuffle_bytes_written`
+/// stays 0.
+pub fn run_plan<K, V, F>(
+    ctx: &SparkContext,
+    stage: &StagePlan,
+    sources: Vec<Rdd<(K, V)>>,
+    reduce: fn(&mut V, V),
+    finalize_shard: F,
+) -> Result<Vec<(K, V)>, JobError>
+where
+    K: ShuffleKey,
+    V: ShuffleVal,
+    F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Send + Sync + 'static,
+{
+    let partitions = ctx.default_partitions();
+    let mut pairs: Option<Rdd<(K, V)>> = None;
+    for source in sources {
+        pairs = Some(match pairs {
+            Some(p) => p.union(&source),
+            None => source,
+        });
+    }
+    let pairs = pairs.expect("a stage needs at least one input source");
+    if stage.runs_exchange() {
+        pairs.reduce_by_key(reduce, partitions).map_partitions(finalize_shard).collect()
+    } else {
+        pairs.map_partitions(finalize_shard).collect()
+    }
+}
+
 /// Run a generic [`Workload`] over one input relation: indexed textFile →
-/// fused flatMap of the workload's map → `reduceByKey(combine)` (stage
-/// cut: shuffle write + fetch with all modeled costs) → per-partition
-/// `finalize_local` → collect. Returns the finalized entries (key sets
-/// disjoint across partitions) and the number of map-phase emissions
-/// observed.
+/// fused flatMap of the workload's map → the plan path's exchange +
+/// per-partition `finalize_local` + collect. Returns the finalized
+/// entries (key sets disjoint across partitions) and the number of
+/// map-phase emissions observed. Thin wrapper: compiles the workload's
+/// one-stage plan and hands it to [`run_workload_multi`].
 pub fn run_workload<W: Workload>(
     ctx: &SparkContext,
     lines: Arc<Vec<String>>,
     w: &Arc<W>,
 ) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
-    run_workload_multi(ctx, std::slice::from_ref(&lines), w, false)
+    let stage = StagePlan::single(w.name(), w.needs_shuffle(), 1);
+    run_workload_multi(ctx, &stage, std::slice::from_ref(&lines), w)
 }
 
 /// Run a generic [`Workload`] over N tagged input relations — Spark's
 /// union-then-shuffle plan. Each relation becomes its own indexed
 /// `textFile` → flatMap chain (tagged with its relation index, so
 /// [`Workload::map_rel`] knows which side a record came from); the chains
-/// are `union`ed and one `reduceByKey` co-partitions every side's
-/// emissions into the same reduce partitions.
-///
-/// Workloads that declare [`Workload::needs_shuffle`] `false` take the
-/// zero-shuffle fast path instead: no stage cut, no serialization, no
-/// blocks written — `finalize_local` runs per *map* partition (exact,
-/// because such keys are globally unique) and
-/// `SparkMetrics::shuffle_bytes_written` stays 0. Pass
-/// `force_shuffle = true` to run the exchange anyway.
+/// are handed to [`run_plan`], which `union`s them so one `reduceByKey`
+/// co-partitions every side's emissions — or skips the stage cut when the
+/// plan elided the exchange. Thin wrapper over [`run_plan`].
 pub fn run_workload_multi<W: Workload>(
     ctx: &SparkContext,
+    stage: &StagePlan,
     relations: &[Arc<Vec<String>>],
     w: &Arc<W>,
-    force_shuffle: bool,
 ) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
     assert!(!relations.is_empty(), "a job needs at least one input relation");
     let partitions = ctx.default_partitions();
     let emitted = Arc::new(AtomicU64::new(0));
-    let mut pairs: Option<Rdd<(W::Key, W::Value)>> = None;
+    let mut sources = Vec::with_capacity(relations.len());
     for (rel, lines) in relations.iter().enumerate() {
         let text = ctx.text_lines_indexed(Arc::clone(lines), partitions);
         let counter = Arc::clone(&emitted);
         let wm = Arc::clone(w);
         // flatMap(record => workload.map_rel(rel, record)) — materializes
         // owned keys, exactly like the Scala example's String objects.
-        let mapped = text.flat_map(move |(doc, line): (u64, String)| {
+        sources.push(text.flat_map(move |(doc, line): (u64, String)| {
             let mut out = Vec::new();
             wm.map_rel(rel, doc, &line, &mut |k, v| out.push((k, v)));
             counter.fetch_add(out.len() as u64, Ordering::Relaxed);
             out
-        });
-        pairs = Some(match pairs {
-            Some(p) => p.union(&mapped),
-            None => mapped,
-        });
+        }));
     }
-    let pairs = pairs.expect("at least one relation");
     let wf = Arc::clone(w);
-    let entries = if w.needs_shuffle() || force_shuffle {
-        pairs
-            .reduce_by_key(W::combine, partitions)
-            .map_partitions(move |shard| wf.finalize_local(shard))
-            .collect()?
-    } else {
-        pairs.map_partitions(move |shard| wf.finalize_local(shard)).collect()?
-    };
+    let entries =
+        run_plan(ctx, stage, sources, W::combine, move |shard| wf.finalize_local(shard))?;
     Ok((entries, emitted.load(Ordering::Relaxed)))
 }
 
@@ -140,56 +173,48 @@ pub fn run_workload_multi<W: Workload>(
 ///       .reduceByKey(step.combine)
 /// ```
 ///
-/// Each relation's parsed RDD is persisted under its relation index and
-/// content `generation` in the context's
+/// Each relation with a planned
+/// [`CachePoint`](crate::mapreduce::CachePoint) persists its parsed RDD
+/// under that point's namespace and content generation in the context's
 /// [`PartitionCache`](crate::cache::PartitionCache); contexts built over a
 /// shared cache (see [`SparkContext::with_shared_cache`]) therefore serve
 /// later rounds of an iterative job from memory, and evicted partitions
-/// transparently recompute from lineage. Otherwise identical to
-/// [`run_workload_multi`] (union-then-shuffle co-partitioning, zero-shuffle
-/// fast path, `force_shuffle` ablation).
+/// transparently recompute from lineage. Relations whose plan carries no
+/// cache point (no cache attached, or the recompute ablation) skip the
+/// persist entirely. Otherwise identical to [`run_workload_multi`].
+/// Thin wrapper over [`run_plan`].
 pub fn run_workload_cached<W: CacheableWorkload>(
     ctx: &SparkContext,
+    stage: &StagePlan,
     relations: &[Arc<Vec<String>>],
-    gens: &[u64],
     w: &Arc<W>,
-    force_shuffle: bool,
 ) -> Result<(Vec<(W::Key, W::Value)>, u64), JobError> {
     assert!(!relations.is_empty(), "a job needs at least one input relation");
     let partitions = ctx.default_partitions();
     let emitted = Arc::new(AtomicU64::new(0));
-    let mut pairs: Option<Rdd<(W::Key, W::Value)>> = None;
+    let mut sources = Vec::with_capacity(relations.len());
     for (rel, lines) in relations.iter().enumerate() {
-        let generation = gens.get(rel).copied().unwrap_or(0);
         let text = ctx.text_lines_indexed(Arc::clone(lines), partitions);
         let wp = Arc::clone(w);
-        // map(parse).persist(): the cacheable half of the round.
-        let parsed = text
-            .flat_map(move |(doc, line): (u64, String)| wp.parse_rel(rel, doc, &line))
-            .persist_keyed(rel as u64, generation);
+        // map(parse).persist(): the cacheable half of the round, under
+        // the identity the planner assigned (if it assigned one).
+        let parsed = text.flat_map(move |(doc, line): (u64, String)| wp.parse_rel(rel, doc, &line));
+        let parsed = match stage.cache_point(rel) {
+            Some(cp) => parsed.persist_keyed(cp.namespace, cp.generation),
+            None => parsed,
+        };
         let wm = Arc::clone(w);
         let counter = Arc::clone(&emitted);
-        let mapped = parsed.flat_map(move |p: W::Parsed| {
+        sources.push(parsed.flat_map(move |p: W::Parsed| {
             let mut out = Vec::new();
             wm.map_parsed(rel, &p, &mut |k, v| out.push((k, v)));
             counter.fetch_add(out.len() as u64, Ordering::Relaxed);
             out
-        });
-        pairs = Some(match pairs {
-            Some(p) => p.union(&mapped),
-            None => mapped,
-        });
+        }));
     }
-    let pairs = pairs.expect("at least one relation");
     let wf = Arc::clone(w);
-    let entries = if w.needs_shuffle() || force_shuffle {
-        pairs
-            .reduce_by_key(W::combine, partitions)
-            .map_partitions(move |shard| wf.finalize_local(shard))
-            .collect()?
-    } else {
-        pairs.map_partitions(move |shard| wf.finalize_local(shard)).collect()?
-    };
+    let entries =
+        run_plan(ctx, stage, sources, W::combine, move |shard| wf.finalize_local(shard))?;
     Ok((entries, emitted.load(Ordering::Relaxed)))
 }
 
@@ -199,14 +224,16 @@ pub fn run_workload_cached<W: CacheableWorkload>(
 /// executor does (textFile read, split, writeUTF / readUTF at the
 /// shuffle). Keys convert back to platform strings at the driver, where
 /// `finalize_local` then runs once over the collected set (exact for
-/// filtering partial reduces — see the trait contract). Zero-shuffle
-/// workloads skip the `reduceByKey` stage cut like every other path,
-/// unless `force_shuffle` is set.
+/// filtering partial reduces — see the trait contract). An exchange the
+/// plan elided skips the `reduceByKey` stage cut like every other path.
+/// Thin wrapper over [`run_plan`] (the per-partition finalize is the
+/// identity here — the real finalize runs at the driver, after the
+/// UTF-16 → platform-string conversion).
 pub fn run_workload_jvm<W: StrWorkload>(
     ctx: &SparkContext,
+    stage: &StagePlan,
     lines: Arc<Vec<String>>,
     w: &Arc<W>,
-    force_shuffle: bool,
 ) -> Result<(Vec<(String, W::Value)>, u64), JobError> {
     let partitions = ctx.default_partitions();
     let text = ctx.text_lines_indexed(lines, partitions);
@@ -223,11 +250,7 @@ pub fn run_workload_jvm<W: StrWorkload>(
         counter.fetch_add(out.len() as u64, Ordering::Relaxed);
         out
     });
-    let collected = if w.needs_shuffle() || force_shuffle {
-        pairs.reduce_by_key(W::combine, partitions).collect()?
-    } else {
-        pairs.collect()?
-    };
+    let collected = run_plan(ctx, stage, vec![pairs], W::combine, |shard| shard)?;
     // Driver-side collect converts to platform strings once (outside the
     // engines' timed loops this is negligible; kept for API uniformity).
     let entries: Vec<(String, W::Value)> =

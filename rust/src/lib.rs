@@ -16,15 +16,24 @@
 //! jobs — associative combine, optional per-shard partial reduce) plus a
 //! [`mapreduce::JobSpec`]/[`mapreduce::JobInputs`]/[`mapreduce::JobReport`]
 //! triple that both engines execute behind a shared
-//! [`mapreduce::JobEngine`] trait object. [`workloads`] ships seven jobs
-//! on top of it — word count, inverted index, top-K words, a token-length
-//! histogram, a two-relation inner join, a distinct-count sketch, and a
-//! zero-shuffle grep — each runnable from the CLI
+//! [`mapreduce::JobEngine`] trait object. Every job is first **compiled**
+//! by the planner layer ([`mapreduce::plan`]) into an explicit
+//! [`mapreduce::StageGraph`] — stages separated by shuffle boundaries,
+//! exchange elision and cache points decided at plan time
+//! (`blaze plan --workload ...` prints the graph) — and the engines are
+//! stage executors with a single plan-execution path each. Multi-stage
+//! pipelines ([`mapreduce::ChainedWorkload`], e.g.
+//! [`workloads::Sessionize`]) chain stages through rendered bridge
+//! relations. [`workloads`] ships the job suite on top — word count,
+//! inverted index, top-K words, a token-length histogram, a two-relation
+//! inner join, a distinct-count sketch, a zero-shuffle grep, and the
+//! multi-stage sessionizer — each runnable from the CLI
 //! (`blaze run --workload ...`) on every engine and verified against
-//! [`mapreduce::run_serial`]/[`mapreduce::run_serial_inputs`]. The
-//! [`workloads`] module docs double as the workload-authoring guide.
-//! [`wordcount::WordCountJob`] remains the stable word-count facade, now a
-//! thin wrapper over the job layer.
+//! [`mapreduce::run_serial`]/[`mapreduce::run_serial_inputs`]/
+//! [`mapreduce::run_chained_serial`]. The [`workloads`] module docs
+//! double as the workload-authoring guide. [`wordcount::WordCountJob`]
+//! remains the stable word-count facade, now a thin wrapper over the job
+//! layer.
 //!
 //! ## Iterative jobs and the partition cache
 //!
@@ -36,9 +45,10 @@
 //! [`mapreduce::run_iterative`] drives multi-round jobs
 //! ([`mapreduce::IterativeWorkload`]): each round's reduced output feeds
 //! back in as a tagged relation until convergence or an iteration cap.
-//! [`workloads::PageRank`] and [`workloads::KMeans`] ride on it, both
-//! verified against the serial fixed-point oracle
-//! [`mapreduce::run_iterative_serial`].
+//! [`workloads::PageRank`], [`workloads::KMeans`] and
+//! [`workloads::Components`] (label-propagation connected components)
+//! ride on it as plan-per-round loops, all verified against the serial
+//! fixed-point oracle [`mapreduce::run_iterative_serial`].
 //!
 //! The compute hot-spot additionally has an XLA/PJRT-accelerated path: a
 //! Pallas token-histogram kernel AOT-lowered from JAX at build time and

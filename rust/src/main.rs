@@ -3,10 +3,13 @@
 //! Subcommands:
 //!
 //! * `run`       — one job (`--workload
-//!   wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans`)
-//!   on a chosen engine/cluster shape; the iterative pair takes
+//!   wordcount|index|top-k|length-hist|join|distinct|grep|sessionize|pagerank|kmeans|components`)
+//!   on a chosen engine/cluster shape; the iterative set takes
 //!   `--iterations`, `--tolerance`, and `--cache-budget` (the in-memory
-//!   ablation knob).
+//!   ablation knob), the chained `sessionize` takes `--session-gap`.
+//! * `plan`      — compile a workload's stage graph (stages, shuffle
+//!   edges, cache points, elided exchanges) and print it without
+//!   executing — the planner's ablation/debugging view.
 //! * `compare`   — the paper's experiment: all engines on one corpus,
 //!   printed as the words/sec bar chart.
 //! * `generate`  — synthesize a corpus to a file.
@@ -17,27 +20,34 @@
 
 use std::sync::Arc;
 
-use blaze::cache::CacheBudget;
+use blaze::cache::{CacheBudget, PartitionCache};
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::dist::CombineMode;
 use blaze::engines::Engine;
 use blaze::mapreduce::{
-    run_iterative, run_iterative_serial, run_serial, run_serial_inputs, IterativeReport,
-    IterativeSpec, IterativeWorkload, JobInputs, JobSpec,
+    run_chained, run_chained_serial, run_iterative, run_iterative_serial, run_serial,
+    run_serial_inputs, ChainReport, IterativeReport, IterativeSpec, IterativeWorkload,
+    JobInputs, JobSpec, StageGraph,
 };
 use blaze::metrics::ascii_bar_chart;
 use blaze::util::cli::{Args, CliError, Command};
 use blaze::wordcount::{serial_reference, WordCountJob};
 use blaze::workloads::{
-    synthesize_points, DistinctCount, Grep, InvertedIndex, Join, KMeans, LengthHistogram,
-    PageRank, TopKWords,
+    synthesize_logs, synthesize_points, Components, DistinctCount, Grep, InvertedIndex, Join,
+    KMeans, LengthHistogram, PageRank, Sessionize, TopKWords, WordCount,
 };
+
+/// The one `--workload` token list (`run`/`plan` help text and their
+/// unknown-workload errors all reference it, so it cannot drift).
+const WORKLOADS: &str =
+    "wordcount|index|top-k|length-hist|join|distinct|grep|sessionize|pagerank|kmeans|components";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(String::as_str) {
         Some("run") => dispatch(cmd_run(), &argv[1..], do_run),
+        Some("plan") => dispatch(cmd_plan(), &argv[1..], do_plan),
         Some("compare") => dispatch(cmd_compare(), &argv[1..], do_compare),
         Some("generate") => dispatch(cmd_generate(), &argv[1..], do_generate),
         Some("fault") => dispatch(cmd_fault(), &argv[1..], do_fault),
@@ -58,7 +68,7 @@ fn main() {
 fn print_usage() {
     println!(
         "blaze — Spark vs MPI/OpenMP word-count MapReduce (Li 2018), reproduced\n\n\
-         Usage: blaze <run|compare|generate|fault|xla> [options]\n\
+         Usage: blaze <run|plan|compare|generate|fault|xla> [options]\n\
          Try `blaze run --help`."
     );
 }
@@ -134,11 +144,7 @@ fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
 fn cmd_run() -> Command {
     let cmd = Command::new("run", "run one MapReduce job")
         .opt("engine", Some("blaze-tcm"), "blaze|blaze-tcm|spark|spark-stripped")
-        .opt(
-            "workload",
-            Some("wordcount"),
-            "wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans",
-        )
+        .opt("workload", Some("wordcount"), WORKLOADS)
         .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
         .opt("top", Some("10"), "print the top-K entries")
         .opt("pattern", Some("the"), "grep: substring to match")
@@ -147,6 +153,9 @@ fn cmd_run() -> Command {
             None,
             "join: right relation from file (default: generated, seed+1)",
         )
+        .opt("session-gap", Some("1800"), "sessionize: max intra-session gap (ts units)")
+        .opt("users", Some("50"), "sessionize: synthesized user count")
+        .opt("events", Some("20000"), "sessionize: synthesized event count")
         .opt("iterations", Some("10"), "iterative workloads: max rounds")
         .opt(
             "tolerance",
@@ -171,6 +180,8 @@ fn do_run(args: &Args) -> Result<(), String> {
         "wordcount" | "wc" => do_run_wordcount(args),
         "pagerank" | "page-rank" => do_run_pagerank(args),
         "kmeans" | "k-means" => do_run_kmeans(args),
+        "components" | "connected-components" => do_run_components(args),
+        "sessionize" | "sessions" => do_run_sessionize(args),
         other => do_run_workload(other, args),
     }
 }
@@ -299,11 +310,82 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             }
             verify(args, &r.output, || run_serial(w.as_ref(), &corpus))
         }
-        other => Err(format!(
-            "unknown --workload {other} \
-             (wordcount|index|top-k|length-hist|join|distinct|grep|pagerank|kmeans)"
-        )),
+        other => Err(format!("unknown --workload {other} ({WORKLOADS})")),
     }
+}
+
+/// Per-stage rows of a chained run — the multi-stage attribution view
+/// (one renderer for CLI and benches: `benchkit::stage_table`).
+fn print_chain(r: &ChainReport) {
+    println!("{}", r.summary());
+    println!("{}", blaze::benchkit::stage_table("stages", &r.stages).to_markdown());
+}
+
+/// Sessionization: the two-stage chained pipeline (`--session-gap` splits
+/// sessions; input synthesized from `--users`/`--events` unless `--input`
+/// supplies a `user ts` log).
+fn do_run_sessionize(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let gap = args.get_u64("session-gap").map_err(|e| e.to_string())?;
+    let lines: Vec<String> = if let Some(path) = args.get("input") {
+        std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?
+            .lines()
+            .map(str::to_string)
+            .collect()
+    } else {
+        let users = args.get_usize("users").map_err(|e| e.to_string())?;
+        let events = args.get_usize("events").map_err(|e| e.to_string())?;
+        if users == 0 {
+            return Err("--users must be at least 1".into());
+        }
+        synthesize_logs(users, events, gap, args.get_u64("seed").map_err(|e| e.to_string())?)
+    };
+    println!("log: {} event line(s), session gap {gap}", lines.len());
+    let w = Sessionize::new(gap);
+    let inputs = JobInputs::new().relation_lines("logs", Arc::new(lines));
+    let r = run_chained(&spec, &w, &inputs).map_err(|e| e.to_string())?;
+    print_chain(&r);
+    let k = args.get_usize("top").map_err(|e| e.to_string())?;
+    let stats = Sessionize::stats_from_lines(&r.lines);
+    let sessions: u64 = stats.iter().map(|(_, n, _)| n).sum();
+    println!("\n{sessions} session(s) across {} length bucket(s); first {k}:", stats.len());
+    println!("  events   sessions   total duration");
+    for (events, n, dur) in stats.into_iter().take(k) {
+        println!("  {events:>6} {n:>10} {dur:>16}");
+    }
+    if args.has_flag("verify") {
+        if r.lines == run_chained_serial(&w, &inputs) {
+            println!("\nverify: OK (bit-identical to the serial chained oracle)");
+        } else {
+            return Err("verification FAILED (lines diverge from serial oracle)".into());
+        }
+    }
+    Ok(())
+}
+
+/// Label-propagation connected components over the corpus-as-graph (each
+/// line `u v1 v2 ...` lists undirected edges), on the iterative driver.
+fn do_run_components(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let corpus = load_corpus(args)?;
+    println!(
+        "graph: {} adjacency line(s), {}",
+        corpus.num_lines(),
+        blaze::util::stats::fmt_bytes(corpus.bytes)
+    );
+    let it = iterative_spec_from_args(args)?;
+    let w = Components::new();
+    let inputs = JobInputs::new().relation("edges", &corpus);
+    let r = run_iterative(&spec, &it, &w, &inputs).map_err(|e| e.to_string())?;
+    print_iterations(&r);
+    let k = args.get_usize("top").map_err(|e| e.to_string())?;
+    let sizes = Components::component_sizes(&r.state);
+    println!("\n{} component(s); {k} largest:", sizes.len());
+    for (label, n) in sizes.into_iter().take(k) {
+        println!("  {n:>10} node(s)  label {label}");
+    }
+    verify_iterative(args, &it, &w, &inputs, &r)
 }
 
 /// Shared `--iterations`/`--tolerance`/`--cache-budget` parsing.
@@ -447,6 +529,98 @@ fn do_run_wordcount(args: &Args) -> Result<(), String> {
             return Err("verification FAILED".into());
         }
     }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- plan ----
+
+fn cmd_plan() -> Command {
+    let cmd = Command::new(
+        "plan",
+        "compile a workload's stage graph and print it without executing",
+    )
+    .opt("engine", Some("blaze-tcm"), "blaze|blaze-tcm|spark|spark-stripped")
+    .opt("workload", Some("wordcount"), WORKLOADS)
+    .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
+    .opt("top", Some("10"), "top-k: K")
+    .opt("pattern", Some("the"), "grep: substring to match")
+    .opt("session-gap", Some("1800"), "sessionize: max intra-session gap (ts units)")
+    .opt("clusters", Some("8"), "kmeans: cluster count")
+    .opt(
+        "cache-budget",
+        Some("unbounded"),
+        "iterative workloads: cache budget (none = every cache point elided)",
+    )
+    .flag("force-shuffle", "run the exchange even for zero-shuffle workloads");
+    cluster_opts(cmd)
+}
+
+/// Placeholder inputs carrying only relation names — all the planner
+/// reads.
+fn placeholder(names: &[&str]) -> JobInputs {
+    let mut inputs = JobInputs::new();
+    for name in names {
+        inputs = inputs.relation_lines(name, Arc::new(Vec::new()));
+    }
+    inputs
+}
+
+/// The per-round step plan of an iterative workload, with the cache
+/// points a real run would get under `--cache-budget`.
+fn iterative_step_plan<I: IterativeWorkload>(
+    spec: &JobSpec,
+    args: &Args,
+    w: &I,
+    rels: &[&str],
+) -> Result<StageGraph, String> {
+    let budget = args.get_str("cache-budget");
+    let budget =
+        CacheBudget::parse(&budget).ok_or_else(|| format!("bad --cache-budget {budget}"))?;
+    let spec = spec
+        .clone()
+        .shared_cache(Arc::new(PartitionCache::new(budget)))
+        .relation_gens(vec![0; rels.len()]);
+    let step = w.step(&[]);
+    println!("(per-round step plan; the state relation's generation bumps every round)\n");
+    Ok(spec.plan_cached(step.as_ref(), &placeholder(rels)))
+}
+
+fn do_plan(args: &Args) -> Result<(), String> {
+    let spec = spec_from_args(args)?;
+    let tokenizer = Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?;
+    let k = args.get_usize("top").map_err(|e| e.to_string())?;
+    let name = args.get_str("workload");
+    let graph = match name.as_str() {
+        "wordcount" | "wc" => spec.plan(&WordCount::new(tokenizer), &placeholder(&["input"])),
+        "index" | "inverted-index" => {
+            spec.plan(&InvertedIndex::new(tokenizer), &placeholder(&["input"]))
+        }
+        "top-k" | "topk" => spec.plan(&TopKWords::new(tokenizer, k), &placeholder(&["input"])),
+        "length-hist" | "lengths" | "histogram" => {
+            spec.plan(&LengthHistogram::new(tokenizer), &placeholder(&["input"]))
+        }
+        "join" => spec.plan(&Join::new(), &placeholder(&["left", "right"])),
+        "distinct" | "distinct-count" => {
+            spec.plan(&DistinctCount::new(tokenizer), &placeholder(&["input"]))
+        }
+        "grep" => spec.plan(&Grep::new(args.get_str("pattern")), &placeholder(&["input"])),
+        "sessionize" | "sessions" => {
+            let gap = args.get_u64("session-gap").map_err(|e| e.to_string())?;
+            spec.plan_chained(&Sessionize::new(gap), &placeholder(&["logs"]))
+        }
+        "pagerank" | "page-rank" => {
+            iterative_step_plan(&spec, args, &PageRank::new(), &["edges", "state"])?
+        }
+        "kmeans" | "k-means" => {
+            let clusters = args.get_usize("clusters").map_err(|e| e.to_string())?.max(1);
+            iterative_step_plan(&spec, args, &KMeans::new(clusters), &["points", "state"])?
+        }
+        "components" | "connected-components" => {
+            iterative_step_plan(&spec, args, &Components::new(), &["edges", "state"])?
+        }
+        other => return Err(format!("unknown --workload {other} ({WORKLOADS})")),
+    };
+    println!("{}", graph.render());
     Ok(())
 }
 

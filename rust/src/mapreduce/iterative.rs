@@ -11,10 +11,14 @@
 //!   per-round step job (a [`CacheableWorkload`]) with the current state
 //!   broadcast into it, and folds each round's reduced output into the
 //!   next state plus a scalar convergence **delta**;
-//! * [`run_iterative`] executes the loop on an engine: every round runs
-//!   the step job over `static relations + [state]` (the state appended as
-//!   the last tagged relation, its cache generation bumped every round),
-//!   sharing one [`PartitionCache`] across rounds so parsed splits of the
+//! * [`run_iterative`] executes the loop on an engine as a
+//!   **plan-per-round** driver: every round runs the step job over
+//!   `static relations + [state]` (the state appended as the last tagged
+//!   relation), compiling a fresh one-stage
+//!   [`StageGraph`](super::StageGraph) whose cache points carry the
+//!   round's generations (the state relation's generation bumps each
+//!   round) and executing it through the engines' single plan path; one
+//!   [`PartitionCache`] is shared across rounds so parsed splits of the
 //!   unchanged relations are served from memory;
 //! * [`run_iterative_serial`] is the same loop over
 //!   [`run_serial_inputs`](crate::mapreduce::run_serial_inputs) — the
@@ -200,13 +204,17 @@ fn round_inputs(inputs: &JobInputs, state: &[String]) -> JobInputs {
 
 /// Execute `w` on `spec`'s engine: loop the step job, feeding each round's
 /// reduced output back in as the `state` relation, until the delta reaches
-/// `it.tolerance` or `it.max_iters` rounds ran. One [`PartitionCache`] of
-/// `it.cache_budget` bytes is shared across every round (and handed to
-/// both engines), so parsed splits of the static relations — whose cache
-/// generation never changes — are reused; the state relation's generation
-/// is bumped every round and its stale generations are invalidated as
-/// the driver advances, so even an unbounded cache holds at most one
-/// parsed copy of the state.
+/// `it.tolerance` or `it.max_iters` rounds ran. Each round compiles its
+/// own one-stage plan (via
+/// [`JobSpec::run_inputs_cached`](super::JobSpec::run_inputs_cached) →
+/// [`JobSpec::plan_cached`](super::JobSpec::plan_cached)) and executes it
+/// through the same engine stage executors as every single-pass job. One
+/// [`PartitionCache`] of `it.cache_budget` bytes is shared across every
+/// round (and handed to both engines), so parsed splits of the static
+/// relations — whose cache generation never changes — are reused; the
+/// state relation's generation is bumped every round and its stale
+/// generations are invalidated as the driver advances, so even an
+/// unbounded cache holds at most one parsed copy of the state.
 pub fn run_iterative<I: IterativeWorkload>(
     spec: &JobSpec,
     it: &IterativeSpec,

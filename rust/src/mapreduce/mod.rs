@@ -19,10 +19,18 @@
 //!   each record came from.
 //! * [`JobSpec`] / [`JobReport`] — one engine-agnostic job description
 //!   (cluster shape, network, combine mode, failure plan) and one uniform
-//!   result (output + wall time + shuffle bytes + engine detail).
-//! * [`JobEngine`] — the shared engine abstraction both backends implement;
-//!   [`engine_for`]/[`engine_for_str`] hand back the right trait object for
-//!   an [`Engine`] choice.
+//!   result (output + wall time + shuffle bytes + per-stage rows + engine
+//!   detail).
+//! * [`plan`] — the **planner layer**: every job is compiled into an
+//!   explicit [`StageGraph`] (stages separated by [`ShuffleBoundary`]
+//!   edges, exchange elision and cache points decided at plan time)
+//!   before any engine touches it. Multi-stage pipelines are
+//!   [`ChainedWorkload`]s driven by [`run_chained`] /
+//!   [`run_chained_serial`].
+//! * [`JobEngine`] — the shared engine abstraction both backends
+//!   implement: one [`JobEngine::run_plan`] method executing one stage of
+//!   a compiled graph. [`engine_for`]/[`engine_for_str`] hand back the
+//!   right trait object for an [`Engine`] choice.
 //! * [`run_serial`] / [`run_serial_inputs`] — the single-threaded reference
 //!   executors, the correctness oracle for every engine × workload
 //!   combination.
@@ -46,11 +54,12 @@
 //! A workload whose keys never repeat (grep: one emission per matching
 //! line, keyed by line id) has nothing to co-locate: `combine` can never
 //! fire, so the shards each producer holds are already disjoint. Such a
-//! workload overrides [`Workload::needs_shuffle`] to `false` and both
-//! engines skip the exchange entirely — no serialization, no bytes on the
-//! simulated wire, `JobReport::shuffle_bytes == 0`. Set
-//! [`JobSpec::force_shuffle()`] to run the exchange anyway and measure
-//! what the skip saves.
+//! workload overrides [`Workload::needs_shuffle`] to `false`; the planner
+//! records the elision in the compiled stage ([`Exchange::Elided`]) and
+//! both engines skip the exchange entirely — no serialization, no bytes
+//! on the simulated wire, `JobReport::shuffle_bytes == 0`. Set
+//! [`JobSpec::force_shuffle()`] to run the exchange anyway
+//! ([`Exchange::Forced`] in the plan) and measure what the skip saves.
 //!
 //! # The `finalize_local` contract
 //!
@@ -64,10 +73,16 @@
 //! keys it then discards does not.
 
 pub mod iterative;
+pub mod plan;
 
 pub use iterative::{
     run_iterative, run_iterative_serial, IterationStats, IterativeReport, IterativeSpec,
     IterativeWorkload, SerialIterativeOutcome,
+};
+pub use plan::{
+    run_chained, run_chained_serial, CachePoint, ChainReport, ChainStage, ChainedWorkload,
+    Exchange, InputSource, ShuffleBoundary, StageGraph, StageInput, StageOutcome, StagePlan,
+    StageShape, StageStats, TypedStage,
 };
 
 use std::collections::HashMap;
@@ -411,14 +426,17 @@ impl JobSpec {
 
     /// Run `w` over N tagged input relations — the general entry point;
     /// multi-input workloads (joins) have no single-corpus shorthand.
+    /// Compiles the job's one-stage [`StageGraph`] and executes it
+    /// through the engine's single plan path.
     pub fn run_inputs<W: Workload>(
         &self,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobReport<W::Output>, MapReduceError> {
         self.check_arity(w.as_ref(), inputs)?;
-        let run = engine_for::<W>(self.engine).run(self, w, inputs)?;
-        Ok(self.finish(w, run))
+        let graph = self.plan(w.as_ref(), inputs);
+        let run = engine_for::<W>(self.engine).run_plan(self, &graph, 0, w, inputs)?;
+        Ok(self.finish(w, run, inputs))
     }
 
     /// Run a [`CacheableWorkload`] through the engines' partition-cached
@@ -436,6 +454,10 @@ impl JobSpec {
             return self.run_inputs(w, inputs);
         };
         self.check_arity(w.as_ref(), inputs)?;
+        // Compile the round's plan: cache points (namespace + generation
+        // per relation) are decided here, not inside the engines.
+        let graph = self.plan_cached(w.as_ref(), inputs);
+        let stage = graph.stage(0);
         let before = cache.stats();
         let rels = inputs.line_sets();
         let run = match self.engine {
@@ -443,8 +465,8 @@ impl JobSpec {
                 let conf = self.blaze_conf(KeyPath::AllocPerToken);
                 let r = crate::engines::blaze::run_workload_cached(
                     &conf,
+                    stage,
                     &rels,
-                    &self.relation_gens,
                     cache,
                     &self.failures,
                     w.as_ref(),
@@ -455,18 +477,13 @@ impl JobSpec {
             Engine::Spark | Engine::SparkStripped => {
                 let ctx = self.spark_context();
                 let sw = Stopwatch::start();
-                let (entries, records) = crate::engines::spark::run_workload_cached(
-                    &ctx,
-                    &rels,
-                    &self.relation_gens,
-                    w,
-                    self.force_shuffle,
-                )
-                .map_err(|e| MapReduceError(e.to_string()))?;
+                let (entries, records) =
+                    crate::engines::spark::run_workload_cached(&ctx, stage, &rels, w)
+                        .map_err(|e| MapReduceError(e.to_string()))?;
                 spark_job_run(&ctx, entries, records, sw.elapsed_secs())
             }
         };
-        let mut report = self.finish(w, run);
+        let mut report = self.finish(w, run, inputs);
         report.cache = cache.stats().delta_since(&before);
         Ok(report)
     }
@@ -482,8 +499,9 @@ impl JobSpec {
     ) -> Result<JobReport<W::Output>, MapReduceError> {
         let inputs = JobInputs::single(corpus);
         self.check_arity(w.as_ref(), &inputs)?;
-        let run = engine_for_str::<W>(self.engine).run(self, w, &inputs)?;
-        Ok(self.finish(w, run))
+        let graph = self.plan(w.as_ref(), &inputs);
+        let run = engine_for_str::<W>(self.engine).run_plan(self, &graph, 0, w, &inputs)?;
+        Ok(self.finish(w, run, &inputs))
     }
 
     fn check_arity<W: Workload>(&self, w: &W, inputs: &JobInputs) -> Result<(), MapReduceError> {
@@ -504,7 +522,17 @@ impl JobSpec {
         &self,
         w: &Arc<W>,
         run: JobRun<W::Key, W::Value>,
+        inputs: &JobInputs,
     ) -> JobReport<W::Output> {
+        let records_in: u64 = inputs.relations.iter().map(|r| r.lines.len() as u64).sum();
+        let stages = vec![StageStats {
+            stage: 0,
+            label: w.name().to_string(),
+            records_in,
+            records_out: run.entries.len() as u64,
+            shuffle_bytes: run.shuffle_bytes,
+            wall_secs: run.wall_secs,
+        }];
         JobReport {
             engine: self.engine,
             workload: w.name(),
@@ -514,6 +542,7 @@ impl JobSpec {
             shuffle_bytes: run.shuffle_bytes,
             detail: run.detail,
             cache: CacheStats::default(),
+            stages,
         }
     }
 
@@ -531,7 +560,6 @@ impl JobSpec {
             key_path,
             cache_policy: self.cache_policy,
             max_job_reruns: self.max_job_reruns,
-            force_shuffle: self.force_shuffle,
         }
     }
 
@@ -585,6 +613,10 @@ pub struct JobReport<O> {
     /// the job went through [`JobSpec::run_inputs_cached`] with a cache
     /// attached).
     pub cache: CacheStats,
+    /// Per-stage rows (records in/out, shuffle bytes, wall per stage).
+    /// Single-pass jobs have exactly one; multi-stage pipelines report
+    /// through [`ChainReport::stages`] instead.
+    pub stages: Vec<StageStats>,
 }
 
 impl<O> JobReport<O> {
@@ -605,14 +637,20 @@ impl<O> JobReport<O> {
     }
 }
 
-/// The shared engine abstraction: anything that can execute a [`Workload`]
-/// against a [`JobSpec`] over the job's tagged input relations. Both
-/// backends implement it; callers hold it as a trait object from
+/// The shared engine abstraction: anything that can execute one stage of
+/// a compiled [`StageGraph`] against a [`JobSpec`] over the stage's
+/// tagged input relations — the **single** plan-execution path of each
+/// backend. Callers hold it as a trait object from
 /// [`engine_for`]/[`engine_for_str`].
 pub trait JobEngine<W: Workload>: Send + Sync {
-    fn run(
+    /// Execute stage `stage_id` of `graph`: map the stage's inputs with
+    /// `w`, run (or elide) the exchange the plan decided, apply the
+    /// per-shard finalize. Single-pass jobs are one-stage graphs.
+    fn run_plan(
         &self,
         spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError>;
@@ -624,17 +662,24 @@ struct BlazeExec {
 }
 
 impl<W: Workload> JobEngine<W> for BlazeExec {
-    fn run(
+    fn run_plan(
         &self,
         spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
         let conf = spec.blaze_conf(self.key_path);
         let rels = inputs.line_sets();
-        let r =
-            crate::engines::blaze::run_workload_multi(&conf, &rels, &spec.failures, w.as_ref())
-                .map_err(|e| MapReduceError(e.to_string()))?;
+        let r = crate::engines::blaze::run_workload_multi(
+            &conf,
+            graph.stage(stage_id),
+            &rels,
+            &spec.failures,
+            w.as_ref(),
+        )
+        .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(blaze_job_run(r))
     }
 }
@@ -643,17 +688,24 @@ impl<W: Workload> JobEngine<W> for BlazeExec {
 struct BlazeStrExec;
 
 impl<W: StrWorkload> JobEngine<W> for BlazeStrExec {
-    fn run(
+    fn run_plan(
         &self,
         spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobRun<String, W::Value>, MapReduceError> {
         let conf = spec.blaze_conf(KeyPath::ZeroAlloc);
         let lines = Arc::clone(&inputs.relations[0].lines);
-        let r =
-            crate::engines::blaze::run_workload_str_lines(&conf, lines, &spec.failures, w.as_ref())
-                .map_err(|e| MapReduceError(e.to_string()))?;
+        let r = crate::engines::blaze::run_workload_str_lines(
+            &conf,
+            graph.stage(stage_id),
+            lines,
+            &spec.failures,
+            w.as_ref(),
+        )
+        .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(blaze_job_run(r))
     }
 }
@@ -676,9 +728,11 @@ fn blaze_job_run<K, V>(r: crate::engines::blaze::WorkloadReport<K, V>) -> JobRun
 struct SparkExec;
 
 impl<W: Workload> JobEngine<W> for SparkExec {
-    fn run(
+    fn run_plan(
         &self,
         spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobRun<W::Key, W::Value>, MapReduceError> {
@@ -686,7 +740,7 @@ impl<W: Workload> JobEngine<W> for SparkExec {
         let rels = inputs.line_sets();
         let sw = Stopwatch::start();
         let (entries, records) =
-            crate::engines::spark::run_workload_multi(&ctx, &rels, w, spec.force_shuffle)
+            crate::engines::spark::run_workload_multi(&ctx, graph.stage(stage_id), &rels, w)
                 .map_err(|e| MapReduceError(e.to_string()))?;
         Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
     }
@@ -697,24 +751,22 @@ impl<W: Workload> JobEngine<W> for SparkExec {
 struct SparkStrExec;
 
 impl<W: StrWorkload> JobEngine<W> for SparkStrExec {
-    fn run(
+    fn run_plan(
         &self,
         spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
         w: &Arc<W>,
         inputs: &JobInputs,
     ) -> Result<JobRun<String, W::Value>, MapReduceError> {
         let ctx = spec.spark_context();
+        let stage = graph.stage(stage_id);
         let lines = Arc::clone(&inputs.relations[0].lines);
         let sw = Stopwatch::start();
         let result = if ctx.conf().jvm_strings {
-            crate::engines::spark::run_workload_jvm(&ctx, lines, w, spec.force_shuffle)
+            crate::engines::spark::run_workload_jvm(&ctx, stage, lines, w)
         } else {
-            crate::engines::spark::run_workload_multi(
-                &ctx,
-                std::slice::from_ref(&lines),
-                w,
-                spec.force_shuffle,
-            )
+            crate::engines::spark::run_workload_multi(&ctx, stage, std::slice::from_ref(&lines), w)
         };
         let (entries, records) = result.map_err(|e| MapReduceError(e.to_string()))?;
         Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))

@@ -1,0 +1,619 @@
+//! The planner layer: compile a job into an explicit [`StageGraph`]
+//! *before* any engine runs it.
+//!
+//! Both real systems execute stage graphs cut at shuffle boundaries —
+//! Spark's DAG scheduler turns an RDD lineage into stages, and the staged
+//! communication design of DataMPI does the moral equivalent on the MPI
+//! side. Until this module existed, our engines re-derived the same
+//! per-job decisions (run the exchange or elide it? cache a relation's
+//! parsed split, under which key?) independently inside every entry
+//! point. Now those decisions are made exactly once, at **plan time**:
+//!
+//! * [`JobSpec::plan`] / [`JobSpec::plan_cached`] compile a single
+//!   [`Workload`] into a one-stage graph — the exchange is
+//!   [`Exchange::Elided`] when the workload declares its keys globally
+//!   unique ([`Workload::needs_shuffle`] == false), [`Exchange::Forced`]
+//!   when [`JobSpec::force_shuffle`] overrides that, and each input
+//!   relation gets a [`CachePoint`] when (and only when) a live partition
+//!   cache is attached;
+//! * [`JobSpec::plan_chained`] compiles a [`ChainedWorkload`] — a
+//!   multi-stage pipeline in which stage N's reduced output, rendered to
+//!   canonical lines, becomes stage N+1's tagged input relation — into an
+//!   N-stage graph whose [`ShuffleBoundary`] edges separate the stages;
+//! * the engines execute stages through their **single** plan-execution
+//!   path ([`JobEngine::run_plan`](super::JobEngine::run_plan) →
+//!   `engines::blaze::run_plan` / `engines::spark::run_plan`); the legacy
+//!   `run_workload{,_str,_cached}` names survive only as thin wrappers
+//!   that compile or receive a plan;
+//! * [`run_chained`] drives a multi-stage pipeline stage by stage over
+//!   one compiled graph; [`run_chained_serial`] is its single-threaded
+//!   oracle (every stage through
+//!   [`run_serial_inputs`](super::run_serial_inputs)), which engines must
+//!   match bit-identically;
+//! * `blaze plan --workload <name>` prints [`StageGraph::render`] without
+//!   executing — the ablation/debugging view of what was decided.
+//!
+//! The iterative driver ([`super::run_iterative`]) is a plan-per-round
+//! loop over the same machinery: each round's step job compiles a fresh
+//! one-stage graph (the fed-back state relation's generation bumps, so
+//! its cache point changes) and executes it through the engines' plan
+//! path.
+
+use std::sync::Arc;
+
+use crate::cache::CacheStats;
+use crate::engines::Engine;
+use crate::util::stats::Stopwatch;
+
+use super::{
+    engine_for, run_serial_inputs, CacheableWorkload, JobInputs, JobSpec, MapReduceError,
+    Workload,
+};
+
+/// How a stage boundary's exchange was planned. The decision is made
+/// here, at plan time — engines only read it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Exchange {
+    /// All-to-all exchange: keys must co-locate before the reduce.
+    Shuffle,
+    /// Elided at plan time: the workload declared every key globally
+    /// unique, so per-producer shards are already disjoint and nothing
+    /// moves (zero bytes on the wire).
+    Elided,
+    /// The workload opted out but [`JobSpec::force_shuffle`] overrode it —
+    /// the ablation that measures what the elision saves.
+    Forced,
+}
+
+impl Exchange {
+    /// Does the engine run the exchange for this stage?
+    pub fn runs_exchange(self) -> bool {
+        !matches!(self, Exchange::Elided)
+    }
+
+    fn describe(self) -> &'static str {
+        match self {
+            Exchange::Shuffle => "all-to-all shuffle",
+            Exchange::Elided => "elided (keys globally unique)",
+            Exchange::Forced => "forced (--force-shuffle ablation)",
+        }
+    }
+}
+
+/// The edge between two stages of a [`StageGraph`]: stage `from`'s
+/// reduced output crosses a shuffle boundary (its rendered lines become
+/// stage `to`'s tagged input relation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShuffleBoundary {
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Where a stage's input relation comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputSource {
+    /// The job's external input relation at this index.
+    External(usize),
+    /// The rendered reduced output of an earlier stage.
+    StageOutput(usize),
+}
+
+/// Plan-time decision to cache one input relation's parsed split in the
+/// attached [`PartitionCache`](crate::cache::PartitionCache), and under
+/// which identity. Absent when no cache is attached or its budget is 0 —
+/// so the recompute ablation never even consults the store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CachePoint {
+    /// Cache namespace (the relation index for job-layer plans).
+    pub namespace: u64,
+    /// Content generation of the relation (bumped when its lines change,
+    /// e.g. the iterative driver's fed-back state relation every round).
+    pub generation: u64,
+}
+
+/// One planned input relation of a stage.
+#[derive(Clone, Debug)]
+pub struct StageInput {
+    pub name: String,
+    pub source: InputSource,
+    pub cache: Option<CachePoint>,
+}
+
+impl StageInput {
+    fn describe(&self) -> String {
+        let src = match self.source {
+            InputSource::External(i) => format!("external #{i}"),
+            InputSource::StageOutput(s) => format!("output of stage {s}"),
+        };
+        match &self.cache {
+            Some(cp) => format!(
+                "{} ({src}, cached ns={} gen={})",
+                self.name, cp.namespace, cp.generation
+            ),
+            None => format!("{} ({src})", self.name),
+        }
+    }
+}
+
+/// One stage of the compiled graph: a map → (exchange) → reduce pass with
+/// every per-stage decision already made.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub id: usize,
+    /// The stage workload's name (report label).
+    pub label: String,
+    pub exchange: Exchange,
+    pub inputs: Vec<StageInput>,
+}
+
+impl StagePlan {
+    /// A free-standing one-stage plan for the engines' direct entry
+    /// points and tests: `nrels` external inputs, the exchange decided
+    /// from the workload's declaration, no force-shuffle override, no
+    /// cache points.
+    pub fn single(label: &str, needs_shuffle: bool, nrels: usize) -> StagePlan {
+        StagePlan {
+            id: 0,
+            label: label.to_string(),
+            exchange: plan_exchange(needs_shuffle, false),
+            inputs: (0..nrels)
+                .map(|i| StageInput {
+                    name: format!("input{i}"),
+                    source: InputSource::External(i),
+                    cache: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Does this stage run its exchange?
+    pub fn runs_exchange(&self) -> bool {
+        self.exchange.runs_exchange()
+    }
+
+    /// The planned cache point of input relation `rel`, if any.
+    pub fn cache_point(&self, rel: usize) -> Option<&CachePoint> {
+        self.inputs.get(rel).and_then(|i| i.cache.as_ref())
+    }
+}
+
+/// The compiled execution plan of one job: stages separated by
+/// [`ShuffleBoundary`] edges. Single-pass jobs compile to one stage;
+/// [`ChainedWorkload`]s to one stage per pipeline step.
+#[derive(Clone, Debug)]
+pub struct StageGraph {
+    /// The job's (driver-level) workload name.
+    pub job: String,
+    pub engine: Engine,
+    pub stages: Vec<StagePlan>,
+}
+
+impl StageGraph {
+    pub fn stage(&self, id: usize) -> &StagePlan {
+        &self.stages[id]
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// How many stages actually run their exchange.
+    pub fn num_exchanges(&self) -> usize {
+        self.stages.iter().filter(|s| s.runs_exchange()).count()
+    }
+
+    /// The inter-stage edges (each is a shuffle boundary crossed by a
+    /// rendered bridge relation).
+    pub fn boundaries(&self) -> Vec<ShuffleBoundary> {
+        (1..self.stages.len())
+            .map(|to| ShuffleBoundary { from: to - 1, to })
+            .collect()
+    }
+
+    /// Human-readable plan — what `blaze plan --workload <name>` prints.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "plan '{}' on {} — {} stage(s), {} exchange(s)\n",
+            self.job,
+            self.engine.label(),
+            self.num_stages(),
+            self.num_exchanges(),
+        );
+        for s in &self.stages {
+            out.push_str(&format!("  stage {} '{}'\n", s.id, s.label));
+            for i in &s.inputs {
+                out.push_str(&format!("    input:    {}\n", i.describe()));
+            }
+            out.push_str(&format!("    exchange: {}\n", s.exchange.describe()));
+        }
+        out
+    }
+}
+
+/// Decide a stage's exchange from the workload's declaration and the
+/// force-shuffle override — the one place this logic lives now.
+fn plan_exchange(needs_shuffle: bool, force: bool) -> Exchange {
+    if needs_shuffle {
+        Exchange::Shuffle
+    } else if force {
+        Exchange::Forced
+    } else {
+        Exchange::Elided
+    }
+}
+
+fn external_inputs(inputs: &JobInputs) -> Vec<StageInput> {
+    inputs
+        .relations
+        .iter()
+        .enumerate()
+        .map(|(i, r)| StageInput {
+            name: r.name.clone(),
+            source: InputSource::External(i),
+            cache: None,
+        })
+        .collect()
+}
+
+impl JobSpec {
+    /// Compile `w` over `inputs` into its one-stage [`StageGraph`] (no
+    /// cache points — see [`plan_cached`](Self::plan_cached)).
+    pub fn plan<W: Workload>(&self, w: &W, inputs: &JobInputs) -> StageGraph {
+        StageGraph {
+            job: w.name().to_string(),
+            engine: self.engine,
+            stages: vec![StagePlan {
+                id: 0,
+                label: w.name().to_string(),
+                exchange: plan_exchange(w.needs_shuffle(), self.force_shuffle),
+                inputs: external_inputs(inputs),
+            }],
+        }
+    }
+
+    /// Compile a [`CacheableWorkload`]'s one-stage graph, deciding each
+    /// relation's [`CachePoint`] at plan time: points are planned only
+    /// when a partition cache is attached *and* its budget admits
+    /// anything at all — with `CacheBudget::Bytes(0)` the plan carries no
+    /// points and the engines never touch the store (the recompute
+    /// ablation times recomputation, nothing else).
+    pub fn plan_cached<W: CacheableWorkload>(&self, w: &W, inputs: &JobInputs) -> StageGraph {
+        let cache_on = self.cache.as_ref().is_some_and(|c| !c.is_disabled());
+        let mut graph = self.plan(w, inputs);
+        if cache_on {
+            for (rel, input) in graph.stages[0].inputs.iter_mut().enumerate() {
+                input.cache = Some(CachePoint {
+                    namespace: rel as u64,
+                    generation: self.relation_gens.get(rel).copied().unwrap_or(0),
+                });
+            }
+        }
+        graph
+    }
+
+    /// Compile a [`ChainedWorkload`] into its multi-stage [`StageGraph`]:
+    /// stage 0 maps the chain's external relations; every later stage
+    /// maps exactly one relation — the previous stage's reduced output,
+    /// rendered to lines and tagged `stage<N>.out`.
+    pub fn plan_chained<C: ChainedWorkload + ?Sized>(
+        &self,
+        c: &C,
+        inputs: &JobInputs,
+    ) -> StageGraph {
+        let stages = c
+            .stages()
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let shape = st.shape();
+                let ins = if i == 0 {
+                    external_inputs(inputs)
+                } else {
+                    vec![StageInput {
+                        name: format!("stage{}.out", i - 1),
+                        source: InputSource::StageOutput(i - 1),
+                        cache: None,
+                    }]
+                };
+                StagePlan {
+                    id: i,
+                    label: shape.name.to_string(),
+                    exchange: plan_exchange(shape.needs_shuffle, self.force_shuffle),
+                    inputs: ins,
+                }
+            })
+            .collect();
+        StageGraph { job: c.name().to_string(), engine: self.engine, stages }
+    }
+}
+
+/// Per-stage metrics of one run — a [`JobReport`](super::JobReport) holds
+/// one row per executed stage, so multi-stage runs stay attributable.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub stage: usize,
+    /// The stage workload's name.
+    pub label: String,
+    /// Input records (relation lines) the stage mapped over.
+    pub records_in: u64,
+    /// Reduced rows the stage produced (after per-shard finalize).
+    pub records_out: u64,
+    pub shuffle_bytes: u64,
+    pub wall_secs: f64,
+}
+
+/// Statically known shape of one chain stage — what the planner needs
+/// before anything executes.
+#[derive(Clone, Copy, Debug)]
+pub struct StageShape {
+    pub name: &'static str,
+    pub needs_shuffle: bool,
+    pub num_relations: usize,
+}
+
+/// Result of one executed chain stage.
+#[derive(Debug)]
+pub struct StageOutcome {
+    /// The stage's reduced output, rendered to canonical lines (the next
+    /// stage's bridge relation, or the chain's final output).
+    pub lines: Vec<String>,
+    /// Reduced rows before rendering.
+    pub rows: u64,
+    /// Map-phase emissions.
+    pub records: u64,
+    pub shuffle_bytes: u64,
+    pub wall_secs: f64,
+    pub detail: String,
+}
+
+/// A type-erased stage of a chained pipeline. Implementations run one
+/// typed [`Workload`] through an engine's plan path and render its
+/// reduced output to bridge lines; [`TypedStage`] is the adapter that
+/// does this for any workload + renderer pair.
+pub trait ChainStage: Send + Sync {
+    fn shape(&self) -> StageShape;
+
+    /// Execute stage `stage_id` of `graph` on `spec`'s engine.
+    fn execute(
+        &self,
+        spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
+        inputs: &JobInputs,
+    ) -> Result<StageOutcome, MapReduceError>;
+
+    /// Execute serially (the oracle path) and return the bridge lines.
+    fn execute_serial(&self, inputs: &JobInputs) -> Vec<String>;
+}
+
+/// Adapter wrapping a typed [`Workload`] plus a canonical line renderer
+/// into a [`ChainStage`]. The renderer must be deterministic (sort by
+/// key) — its lines are both the next stage's input relation and the
+/// bit-identity surface the parity tests compare across engines.
+pub struct TypedStage<W: Workload> {
+    w: Arc<W>,
+    render: Box<dyn Fn(W::Output) -> Vec<String> + Send + Sync>,
+}
+
+impl<W: Workload> TypedStage<W> {
+    pub fn boxed(
+        w: Arc<W>,
+        render: impl Fn(W::Output) -> Vec<String> + Send + Sync + 'static,
+    ) -> Box<dyn ChainStage> {
+        Box::new(TypedStage { w, render: Box::new(render) })
+    }
+}
+
+impl<W: Workload> ChainStage for TypedStage<W> {
+    fn shape(&self) -> StageShape {
+        StageShape {
+            name: self.w.name(),
+            needs_shuffle: self.w.needs_shuffle(),
+            num_relations: self.w.num_relations(),
+        }
+    }
+
+    fn execute(
+        &self,
+        spec: &JobSpec,
+        graph: &StageGraph,
+        stage_id: usize,
+        inputs: &JobInputs,
+    ) -> Result<StageOutcome, MapReduceError> {
+        if inputs.len() != self.w.num_relations() {
+            return Err(MapReduceError(format!(
+                "stage '{}' expects {} input relation(s), got {}",
+                self.w.name(),
+                self.w.num_relations(),
+                inputs.len()
+            )));
+        }
+        let run = engine_for::<W>(spec.engine).run_plan(spec, graph, stage_id, &self.w, inputs)?;
+        let rows = run.entries.len() as u64;
+        let out = self.w.finalize(run.entries);
+        Ok(StageOutcome {
+            lines: (self.render)(out),
+            rows,
+            records: run.records,
+            shuffle_bytes: run.shuffle_bytes,
+            wall_secs: run.wall_secs,
+            detail: run.detail,
+        })
+    }
+
+    fn execute_serial(&self, inputs: &JobInputs) -> Vec<String> {
+        (self.render)(run_serial_inputs(self.w.as_ref(), inputs))
+    }
+}
+
+/// A multi-stage pipeline: stage N's reduced output, rendered to
+/// canonical lines, is stage N+1's tagged input relation. Compile it with
+/// [`JobSpec::plan_chained`], run it with [`run_chained`], oracle it with
+/// [`run_chained_serial`]. See the authoring guide in
+/// [`crate::workloads`] (`Sessionize` is the worked example).
+pub trait ChainedWorkload: Send + Sync {
+    /// Stable name (CLI token, report label).
+    fn name(&self) -> &'static str;
+
+    /// External input relations stage 0 consumes.
+    fn num_relations(&self) -> usize {
+        1
+    }
+
+    /// The pipeline's stages, in order. Stage 0's workload must declare
+    /// [`num_relations`](Self::num_relations) inputs; every later stage's
+    /// workload must declare exactly one (the bridge relation).
+    fn stages(&self) -> Vec<Box<dyn ChainStage>>;
+}
+
+/// Outcome of one chained run: the final stage's rendered lines plus
+/// per-stage metrics.
+#[derive(Debug)]
+pub struct ChainReport {
+    pub engine: Engine,
+    pub workload: &'static str,
+    /// The last stage's reduced output, rendered to canonical lines.
+    pub lines: Vec<String>,
+    pub wall_secs: f64,
+    /// Total map-phase emissions across stages.
+    pub records: u64,
+    /// Total shuffle bytes across stages.
+    pub shuffle_bytes: u64,
+    /// One row per executed stage.
+    pub stages: Vec<StageStats>,
+    pub detail: String,
+    /// Cache activity across stages (all zeros unless a cache was
+    /// attached).
+    pub cache: CacheStats,
+}
+
+impl ChainReport {
+    pub fn summary(&self) -> String {
+        use crate::util::stats::{fmt_bytes, fmt_rate};
+        format!(
+            "{:<12} {:<16} {:>12} emissions in {:>8.3}s = {:>14}   {} stage(s), shuffle={}",
+            self.workload,
+            self.engine.label(),
+            self.records,
+            self.wall_secs,
+            fmt_rate(self.records as f64 / self.wall_secs.max(1e-12), "recs"),
+            self.stages.len(),
+            fmt_bytes(self.shuffle_bytes),
+        )
+    }
+}
+
+fn check_chain_shapes<C: ChainedWorkload + ?Sized>(
+    c: &C,
+    stages: &[Box<dyn ChainStage>],
+    inputs: &JobInputs,
+) -> Result<(), MapReduceError> {
+    if stages.is_empty() {
+        return Err(MapReduceError(format!("chained workload '{}' has no stages", c.name())));
+    }
+    if inputs.len() != c.num_relations() {
+        return Err(MapReduceError(format!(
+            "chained workload '{}' expects {} input relation(s), got {}",
+            c.name(),
+            c.num_relations(),
+            inputs.len()
+        )));
+    }
+    for (i, st) in stages.iter().enumerate() {
+        let shape = st.shape();
+        let want = if i == 0 { c.num_relations() } else { 1 };
+        if shape.num_relations != want {
+            return Err(MapReduceError(format!(
+                "chained workload '{}': stage {i} '{}' expects {} relation(s), \
+                 but the chain supplies {want}",
+                c.name(),
+                shape.name,
+                shape.num_relations
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The bridge relation between stage `from` and the next stage.
+fn bridge_inputs(from: usize, lines: &[String]) -> JobInputs {
+    JobInputs::new().relation_lines(&format!("stage{from}.out"), Arc::new(lines.to_vec()))
+}
+
+/// Execute a [`ChainedWorkload`] on `spec`'s engine: compile the graph
+/// once, then run stage by stage, rendering each stage's reduced output
+/// into the next stage's tagged input relation.
+pub fn run_chained<C: ChainedWorkload + ?Sized>(
+    spec: &JobSpec,
+    c: &C,
+    inputs: &JobInputs,
+) -> Result<ChainReport, MapReduceError> {
+    let stages = c.stages();
+    check_chain_shapes(c, &stages, inputs)?;
+    let graph = spec.plan_chained(c, inputs);
+    let before = spec.cache.as_ref().map(|cache| cache.stats());
+
+    let sw = Stopwatch::start();
+    let mut current = inputs.clone();
+    let mut lines: Vec<String> = Vec::new();
+    let mut stats = Vec::new();
+    let mut details = Vec::new();
+    let (mut records, mut shuffle_bytes) = (0u64, 0u64);
+    for (i, st) in stages.iter().enumerate() {
+        let records_in: u64 = current.relations.iter().map(|r| r.lines.len() as u64).sum();
+        let outcome = st.execute(spec, &graph, i, &current)?;
+        records += outcome.records;
+        shuffle_bytes += outcome.shuffle_bytes;
+        stats.push(StageStats {
+            stage: i,
+            label: st.shape().name.to_string(),
+            records_in,
+            records_out: outcome.rows,
+            shuffle_bytes: outcome.shuffle_bytes,
+            wall_secs: outcome.wall_secs,
+        });
+        details.push(format!("stage{i}[{}]", outcome.detail));
+        lines = outcome.lines;
+        if i + 1 < stages.len() {
+            current = bridge_inputs(i, &lines);
+        }
+    }
+    let cache = match (before, &spec.cache) {
+        (Some(before), Some(cache)) => cache.stats().delta_since(&before),
+        _ => CacheStats::default(),
+    };
+    Ok(ChainReport {
+        engine: spec.engine,
+        workload: c.name(),
+        lines,
+        wall_secs: sw.elapsed_secs(),
+        records,
+        shuffle_bytes,
+        stages: stats,
+        detail: details.join(" "),
+        cache,
+    })
+}
+
+/// The single-threaded oracle for [`run_chained`]: every stage through
+/// [`run_serial_inputs`], the same rendered bridge between stages.
+/// Engines must reproduce its final lines bit-identically.
+pub fn run_chained_serial<C: ChainedWorkload + ?Sized>(c: &C, inputs: &JobInputs) -> Vec<String> {
+    let stages = c.stages();
+    assert_eq!(
+        inputs.len(),
+        c.num_relations(),
+        "chained workload '{}' expects {} input relation(s)",
+        c.name(),
+        c.num_relations()
+    );
+    let mut current = inputs.clone();
+    let mut lines = Vec::new();
+    for (i, st) in stages.iter().enumerate() {
+        lines = st.execute_serial(&current);
+        if i + 1 < stages.len() {
+            current = bridge_inputs(i, &lines);
+        }
+    }
+    lines
+}

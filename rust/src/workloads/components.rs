@@ -1,0 +1,308 @@
+//! Connected components — label propagation on the iterative driver: the
+//! third iterative workload, and the first whose per-round reducer is
+//! **min** rather than a sum.
+//!
+//! Input shape: each line of the (static) edge relation is an adjacency
+//! fragment `u v1 v2 ...` — undirected edges `{u, v<i>}`; a node's
+//! adjacency may be split across any number of lines. The fed-back state
+//! relation holds one line per node: `node label`.
+//!
+//! # Round structure
+//!
+//! * `init_state`: every node (source or neighbor) gets a distinct
+//!   integer label — its index in sorted node order;
+//! * map over an edge fragment: for every edge `{u, v}`, push each
+//!   endpoint's current (broadcast) label at the other —
+//!   `(u, label(v))` and `(v, label(u))`;
+//! * map over a state line: emit `(node, own label)` so isolated-in-round
+//!   nodes survive;
+//! * combine: **min** — order-free, so engines match the serial oracle
+//!   bit-identically on any cluster shape;
+//! * `advance`: `new = min(old, inflow)`; the round delta is the number
+//!   of nodes whose label changed, so `delta == 0` (under any tolerance)
+//!   is exact convergence.
+//!
+//! At the fixed point every node carries the minimum initial label of its
+//! component; labels partition the graph into its connected components.
+//! Edge parsing is the cacheable half ([`CacheableWorkload`]): the edge
+//! relation never changes across rounds, so warm rounds skip
+//! tokenization. Convergence takes at most `diameter` rounds — label
+//! propagation's usual bound.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+use crate::engines::spark::HeapSize;
+use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+
+/// Relation index of the static edge relation.
+pub const CC_EDGES: usize = 0;
+/// Relation index of the fed-back state relation.
+pub const CC_STATE: usize = 1;
+
+/// Parsed form of one record — what the partition cache stores per split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CcParsed {
+    /// One adjacency fragment of the edge relation.
+    Edges { src: String, dsts: Vec<String> },
+    /// One `node label` line of the state relation.
+    Node(String, u64),
+}
+
+impl HeapSize for CcParsed {
+    fn heap_bytes(&self) -> usize {
+        match self {
+            CcParsed::Edges { src, dsts } => src.heap_bytes() + dsts.heap_bytes() + 16,
+            CcParsed::Node(n, _) => n.heap_bytes() + 24,
+        }
+    }
+}
+
+/// One round of label propagation, with the previous labels broadcast in
+/// (built fresh each round by `Components::step`).
+pub struct ComponentsStep {
+    /// node → label of the previous round.
+    labels: HashMap<String, u64>,
+}
+
+impl Workload for ComponentsStep {
+    type Key = String;
+    type Value = u64;
+    type Output = HashMap<String, u64>;
+
+    fn name(&self) -> &'static str {
+        "components"
+    }
+
+    fn num_relations(&self) -> usize {
+        2
+    }
+
+    /// Multi-input stub: engines and oracles route through `map_rel`.
+    fn map(&self, _doc: u64, _record: &str, _emit: &mut dyn FnMut(String, u64)) {
+        unreachable!("components is multi-input; run it through the iterative driver");
+    }
+
+    fn map_rel(&self, rel: usize, doc: u64, record: &str, emit: &mut dyn FnMut(String, u64)) {
+        if let Some(p) = self.parse_rel(rel, doc, record) {
+            self.map_parsed(rel, &p, emit);
+        }
+    }
+
+    /// Min: idempotent, commutative, associative — fold order, duplicate
+    /// edges, and shuffle arrival order are all invisible.
+    fn combine(acc: &mut u64, v: u64) {
+        *acc = (*acc).min(v);
+    }
+
+    fn finalize(&self, entries: Vec<(String, u64)>) -> HashMap<String, u64> {
+        entries.into_iter().collect()
+    }
+}
+
+impl CacheableWorkload for ComponentsStep {
+    type Parsed = CcParsed;
+
+    fn parse_rel(&self, rel: usize, _doc: u64, record: &str) -> Option<CcParsed> {
+        match rel {
+            CC_EDGES => {
+                let mut toks = record.split_whitespace();
+                let src = toks.next()?;
+                let dsts: Vec<String> = toks.map(str::to_string).collect();
+                if dsts.is_empty() {
+                    // A fragment with no neighbors propagates nothing.
+                    return None;
+                }
+                Some(CcParsed::Edges { src: src.to_string(), dsts })
+            }
+            CC_STATE => {
+                let mut toks = record.split_whitespace();
+                let node = toks.next()?;
+                let label = toks.next()?.parse().ok()?;
+                Some(CcParsed::Node(node.to_string(), label))
+            }
+            other => panic!("components got relation index {other}"),
+        }
+    }
+
+    fn map_parsed(&self, _rel: usize, parsed: &CcParsed, emit: &mut dyn FnMut(String, u64)) {
+        match parsed {
+            CcParsed::Edges { src, dsts } => {
+                let src_label = self.labels.get(src).copied();
+                for dst in dsts {
+                    // Undirected edge: each endpoint offers its label to
+                    // the other.
+                    if let Some(l) = src_label {
+                        emit(dst.clone(), l);
+                    }
+                    if let Some(&l) = self.labels.get(dst) {
+                        emit(src.clone(), l);
+                    }
+                }
+            }
+            CcParsed::Node(n, l) => emit(n.clone(), *l),
+        }
+    }
+}
+
+/// The iterative connected-components driver workload. Run it with
+/// [`run_iterative`](crate::mapreduce::run_iterative) over a single edge
+/// relation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Components;
+
+impl Components {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// `node label` → components.
+    fn parse_state_line(line: &str) -> Option<(&str, u64)> {
+        let mut t = line.split_whitespace();
+        let node = t.next()?;
+        let label = t.next()?.parse().ok()?;
+        Some((node, label))
+    }
+
+    /// Decode a state relation into `(node, label)` pairs — for display
+    /// and assertions.
+    pub fn labels_from_state(state: &[String]) -> Vec<(String, u64)> {
+        state
+            .iter()
+            .filter_map(|l| Self::parse_state_line(l))
+            .map(|(n, lab)| (n.to_string(), lab))
+            .collect()
+    }
+
+    /// Component sizes at a fixed point, largest first (ties by label).
+    pub fn component_sizes(state: &[String]) -> Vec<(u64, usize)> {
+        let mut sizes: HashMap<u64, usize> = HashMap::new();
+        for (_, label) in Self::labels_from_state(state) {
+            *sizes.entry(label).or_insert(0) += 1;
+        }
+        let mut out: Vec<(u64, usize)> = sizes.into_iter().collect();
+        out.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+impl IterativeWorkload for Components {
+    type Step = ComponentsStep;
+
+    fn name(&self) -> &'static str {
+        "components"
+    }
+
+    /// Every node mentioned anywhere in the edge relation gets a distinct
+    /// label — its index in sorted node order.
+    fn init_state(&self, inputs: &JobInputs) -> Vec<String> {
+        let mut nodes: BTreeSet<&str> = BTreeSet::new();
+        for line in inputs.relations[CC_EDGES].lines.iter() {
+            for tok in line.split_whitespace() {
+                nodes.insert(tok);
+            }
+        }
+        nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| format!("{node} {i}"))
+            .collect()
+    }
+
+    fn step(&self, state: &[String]) -> Arc<ComponentsStep> {
+        let labels = state
+            .iter()
+            .filter_map(|l| Self::parse_state_line(l).map(|(n, lab)| (n.to_string(), lab)))
+            .collect::<HashMap<_, _>>();
+        Arc::new(ComponentsStep { labels })
+    }
+
+    /// `new = min(old, inflow)` per node, in the state's (sorted) order;
+    /// delta counts changed labels, so 0 is exact convergence.
+    fn advance(&self, output: HashMap<String, u64>, state: &[String]) -> (Vec<String>, f64) {
+        let mut changed = 0u64;
+        let mut next = Vec::with_capacity(state.len());
+        for line in state {
+            let Some((node, old)) = Self::parse_state_line(line) else { continue };
+            let new = output.get(node).copied().unwrap_or(old).min(old);
+            if new != old {
+                changed += 1;
+            }
+            next.push(format!("{node} {new}"));
+        }
+        (next, changed as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Corpus;
+    use crate::mapreduce::{run_iterative_serial, IterativeSpec};
+
+    fn inputs(edges: &str) -> JobInputs {
+        JobInputs::new().relation("edges", &Corpus::from_text(edges))
+    }
+
+    fn converged_labels(edges: &str, max_iters: usize) -> Vec<(String, u64)> {
+        let out = run_iterative_serial(&IterativeSpec::new(max_iters), &Components::new(), &inputs(edges));
+        assert!(out.converged, "did not converge: deltas {:?}", out.deltas);
+        Components::labels_from_state(&out.state)
+    }
+
+    #[test]
+    fn two_components_get_two_labels() {
+        let labels: HashMap<String, u64> =
+            converged_labels("a b\nb c\nx y\n", 10).into_iter().collect();
+        assert_eq!(labels.len(), 5);
+        assert_eq!(labels["a"], labels["b"]);
+        assert_eq!(labels["b"], labels["c"]);
+        assert_eq!(labels["x"], labels["y"]);
+        assert_ne!(labels["a"], labels["x"]);
+    }
+
+    #[test]
+    fn chain_converges_to_min_label() {
+        // Path a-b-c-d-e: everyone ends with a's label (0, the sorted
+        // minimum); a 4-hop diameter needs multiple propagation rounds.
+        let labels: HashMap<String, u64> =
+            converged_labels("a b\nb c\nc d\nd e\n", 10).into_iter().collect();
+        assert!(labels.values().all(|&l| l == 0), "{labels:?}");
+    }
+
+    #[test]
+    fn split_adjacency_matches_joined() {
+        let a = converged_labels("a b\na c\n", 10);
+        let b = converged_labels("a b c\n", 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn component_sizes_are_sorted() {
+        let out = run_iterative_serial(
+            &IterativeSpec::new(10),
+            &Components::new(),
+            &inputs("a b\nb c\nx y\n"),
+        );
+        let sizes = Components::component_sizes(&out.state);
+        assert_eq!(sizes.iter().map(|&(_, n)| n).collect::<Vec<_>>(), vec![3, 2]);
+    }
+
+    #[test]
+    fn empty_graph_has_empty_state() {
+        let out =
+            run_iterative_serial(&IterativeSpec::new(3), &Components::new(), &inputs(""));
+        assert!(out.state.is_empty());
+        assert!(out.converged, "an empty graph is trivially at its fixed point");
+    }
+
+    #[test]
+    fn serial_oracle_is_deterministic() {
+        let it = IterativeSpec::new(6);
+        let i = inputs("a b c\nb d\nq r\nr s\n");
+        let x = run_iterative_serial(&it, &Components::new(), &i);
+        let y = run_iterative_serial(&it, &Components::new(), &i);
+        assert_eq!(x.state, y.state);
+        assert_eq!(x.deltas, y.deltas);
+    }
+}

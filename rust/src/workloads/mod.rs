@@ -3,7 +3,8 @@
 //!
 //! # The workload table
 //!
-//! Nine workloads, chosen to exercise different corners of the pipeline:
+//! Eleven workloads, chosen to exercise different corners of the
+//! pipeline:
 //!
 //! * [`WordCount`] — the paper's job: `(word, 1)` with a sum reducer. The
 //!   canonical string-keyed, alloc-sensitive case.
@@ -33,12 +34,22 @@
 //! * [`KMeans`] — **iterative**: centroid assignment/update to an exact
 //!   integer fixed point; the showcase for the partition cache (point
 //!   parsing is skipped on warm rounds).
+//! * [`Sessionize`] — **multi-stage** ([`mapreduce::ChainedWorkload`]):
+//!   stage 1 groups timestamped log events into per-user sessions, stage
+//!   2 aggregates session-length stats — two genuine shuffle boundaries,
+//!   compiled into a two-stage `StageGraph` by the planner.
+//! * [`Components`] — **iterative**: label-propagation connected
+//!   components over an undirected edge relation; the first workload
+//!   whose reducer is **min**, exactly convergent (round delta counts
+//!   changed labels).
 //!
 //! Every workload is verified against [`mapreduce::run_serial`] (or
 //! [`mapreduce::run_serial_inputs`] for the join,
-//! [`mapreduce::run_iterative_serial`] for the iterative pair) on every
-//! engine in `tests/integration_workloads.rs` and
-//! `tests/integration_iterative.rs`, including under injected failures.
+//! [`mapreduce::run_chained_serial`] for the chained pipeline,
+//! [`mapreduce::run_iterative_serial`] for the iterative set) on every
+//! engine in `tests/integration_workloads.rs`,
+//! `tests/integration_chained.rs` and `tests/integration_iterative.rs`,
+//! including under injected failures.
 //!
 //! # Adding a workload
 //!
@@ -117,26 +128,73 @@
 //!    rows in `tests/integration_iterative.rs`, and cached-vs-uncached
 //!    rows in `benches/iterative.rs`.
 //!
+//! # Writing a multi-stage workload
+//!
+//! A pipeline that needs more than one shuffle — sessionization, a
+//! multi-pass aggregation — is a [`mapreduce::ChainedWorkload`]: a
+//! sequence of ordinary [`Workload`]s in which stage N's reduced output,
+//! rendered to canonical lines, becomes stage N+1's tagged input
+//! relation. The planner compiles the chain into one
+//! [`mapreduce::StageGraph`] (inspect it with
+//! `blaze plan --workload <name>`); [`mapreduce::run_chained`] executes
+//! it stage by stage through the engines' single plan path. To add one:
+//!
+//! 1. **Write each stage as a normal [`Workload`].** Stage 0 declares the
+//!    chain's external relations; every later stage declares exactly one
+//!    input relation — the bridge. Each stage may independently opt out
+//!    of its exchange ([`Workload::needs_shuffle`]); the planner records
+//!    the decision per stage (`Exchange::Elided` in the graph).
+//! 2. **Render bridges canonically.** The renderer you pass to
+//!    [`mapreduce::TypedStage::boxed`] turns a stage's finalized output
+//!    into the next stage's lines. Sort by key and keep values integer:
+//!    the bridge lines are the bit-identity surface the parity tests
+//!    compare across engines (the chained analog of the iterative
+//!    state-relation contract).
+//! 3. **Keep bridge lines self-describing.** Anything a later stage
+//!    needs must ride in the line — the bridge is a real relation fed to
+//!    a real map phase, not a side channel ([`Sessionize`]'s
+//!    `user start events duration` lines are the worked example).
+//! 4. **Implement [`mapreduce::ChainedWorkload`]**: `name`,
+//!    `num_relations` (stage 0's arity), and `stages()` returning the
+//!    [`mapreduce::TypedStage`]-wrapped pipeline in order.
+//! 5. **Wire it up:** a `--workload` arm in `main.rs`, parity + failure
+//!    rows against [`mapreduce::run_chained_serial`] in
+//!    `tests/integration_chained.rs`, a row in `benches/workloads.rs`
+//!    (per-stage metrics come for free in
+//!    [`mapreduce::ChainReport::stages`]), and a line in the `blaze plan`
+//!    registry.
+//!
 //! [`mapreduce::run_serial`]: crate::mapreduce::run_serial
 //! [`mapreduce::run_serial_inputs`]: crate::mapreduce::run_serial_inputs
 //! [`mapreduce::run_iterative_serial`]: crate::mapreduce::run_iterative_serial
 //! [`mapreduce::run_iterative`]: crate::mapreduce::run_iterative
+//! [`mapreduce::run_chained`]: crate::mapreduce::run_chained
+//! [`mapreduce::run_chained_serial`]: crate::mapreduce::run_chained_serial
 //! [`mapreduce::CacheableWorkload`]: crate::mapreduce::CacheableWorkload
 //! [`mapreduce::IterativeWorkload`]: crate::mapreduce::IterativeWorkload
+//! [`mapreduce::ChainedWorkload`]: crate::mapreduce::ChainedWorkload
+//! [`mapreduce::ChainReport::stages`]: crate::mapreduce::ChainReport::stages
+//! [`mapreduce::StageGraph`]: crate::mapreduce::StageGraph
+//! [`mapreduce::TypedStage`]: crate::mapreduce::TypedStage
+//! [`mapreduce::TypedStage::boxed`]: crate::mapreduce::TypedStage::boxed
 //! [`mapreduce::JobKey`]: crate::mapreduce::JobKey
 //! [`mapreduce::JobValue`]: crate::mapreduce::JobValue
 
+mod components;
 mod distinct;
 mod grep;
 mod join;
 mod kmeans;
 mod pagerank;
+mod sessionize;
 
+pub use components::{CcParsed, Components, ComponentsStep, CC_EDGES, CC_STATE};
 pub use distinct::{DistinctCount, REGISTERS};
 pub use grep::Grep;
 pub use join::{Join, JoinSides, LEFT, RIGHT};
 pub use kmeans::{synthesize_points, ClusterAcc, KMeans, KMeansStep, KmParsed, KM_POINTS, KM_STATE};
 pub use pagerank::{PageRank, PageRankStep, PrParsed, PR_EDGES, PR_SCALE, PR_STATE};
+pub use sessionize::{synthesize_logs, SessionAssembly, SessionStats, Sessionize};
 
 use std::collections::HashMap;
 

@@ -1,0 +1,263 @@
+//! Sessionization — the first genuinely **multi-stage** workload: two
+//! shuffles, chained through the planner layer's bridge relation.
+//!
+//! Input shape: each log line is `user ts` (first token the user id,
+//! second an integer timestamp; trailing tokens — payloads, URLs — are
+//! ignored, malformed lines dropped). The pipeline:
+//!
+//! * **stage 1** ([`SessionAssembly`], shuffle keyed by user): co-locate
+//!   every timestamp of a user, then split the sorted timestamps into
+//!   sessions wherever the gap between consecutive events exceeds
+//!   [`Sessionize::gap`]. The stage's reduced output renders to one
+//!   bridge line per session: `user start_ts events duration`, sorted by
+//!   (user, start).
+//! * **stage 2** ([`SessionStats`], shuffle keyed by session length):
+//!   aggregate the session relation into a histogram — for each
+//!   events-per-session count, how many sessions and how much total
+//!   duration. Final lines: `events sessions total_duration`, sorted by
+//!   events.
+//!
+//! Neither stage alone can express this: stage 2's keys (session lengths)
+//! only exist after stage 1's per-user grouping, so the job needs two
+//! exchange boundaries — exactly what [`ChainedWorkload`] compiles to a
+//! two-stage [`StageGraph`](crate::mapreduce::StageGraph). All arithmetic
+//! is integer (timestamps, counts, durations), so both engines match
+//! [`run_chained_serial`](crate::mapreduce::run_chained_serial)
+//! bit-identically on the rendered lines.
+
+use std::sync::Arc;
+
+use crate::mapreduce::{ChainStage, ChainedWorkload, TypedStage, Workload};
+use crate::util::rng::Xoshiro256;
+
+/// Stage 1: group event timestamps per user (the session-assembly
+/// shuffle). Values are timestamp lists with a concatenating reducer —
+/// order restored deterministically in `finalize`.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionAssembly;
+
+impl Workload for SessionAssembly {
+    type Key = String;
+    type Value = Vec<u64>;
+    type Output = Vec<(String, Vec<u64>)>;
+
+    fn name(&self) -> &'static str {
+        "sessions"
+    }
+
+    /// `user ts ...` → `(user, [ts])`; malformed lines emit nothing.
+    fn map(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(String, Vec<u64>)) {
+        let mut toks = record.split_whitespace();
+        let Some(user) = toks.next() else { return };
+        let Some(ts) = toks.next().and_then(|t| t.parse::<u64>().ok()) else { return };
+        emit(user.to_string(), vec![ts]);
+    }
+
+    fn combine(acc: &mut Vec<u64>, mut v: Vec<u64>) {
+        acc.append(&mut v);
+    }
+
+    /// Timestamps arrive in shuffle order; sort both layers so the bridge
+    /// rendering is canonical.
+    fn finalize(&self, mut entries: Vec<(String, Vec<u64>)>) -> Vec<(String, Vec<u64>)> {
+        for (_, tss) in entries.iter_mut() {
+            tss.sort_unstable();
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        entries
+    }
+}
+
+/// Render stage 1's reduced output into the bridge relation: one line per
+/// session, `user start_ts events duration`, split wherever the gap
+/// between consecutive events exceeds `gap`.
+fn render_sessions(users: Vec<(String, Vec<u64>)>, gap: u64) -> Vec<String> {
+    let mut lines = Vec::new();
+    for (user, tss) in users {
+        let mut it = tss.into_iter();
+        let Some(first) = it.next() else { continue };
+        let (mut start, mut prev, mut events) = (first, first, 1u64);
+        for ts in it {
+            if ts - prev > gap {
+                lines.push(format!("{user} {start} {events} {}", prev - start));
+                start = ts;
+                events = 0;
+            }
+            prev = ts;
+            events += 1;
+        }
+        lines.push(format!("{user} {start} {events} {}", prev - start));
+    }
+    lines
+}
+
+/// Stage 2: aggregate the session relation into per-length statistics.
+/// Key = events per session; value = (session count, total duration).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionStats;
+
+impl Workload for SessionStats {
+    type Key = u64;
+    type Value = (u64, u64);
+    type Output = Vec<(u64, (u64, u64))>;
+
+    fn name(&self) -> &'static str {
+        "session-stats"
+    }
+
+    /// `user start events duration` → `(events, (1, duration))`.
+    fn map(&self, _doc: u64, record: &str, emit: &mut dyn FnMut(u64, (u64, u64))) {
+        let mut toks = record.split_whitespace();
+        let (Some(_user), Some(_start)) = (toks.next(), toks.next()) else { return };
+        let Some(events) = toks.next().and_then(|t| t.parse::<u64>().ok()) else { return };
+        let Some(duration) = toks.next().and_then(|t| t.parse::<u64>().ok()) else { return };
+        emit(events, (1, duration));
+    }
+
+    fn combine(acc: &mut (u64, u64), v: (u64, u64)) {
+        acc.0 += v.0;
+        acc.1 += v.1;
+    }
+
+    fn finalize(&self, mut entries: Vec<(u64, (u64, u64))>) -> Vec<(u64, (u64, u64))> {
+        entries.sort_unstable();
+        entries
+    }
+}
+
+fn render_stats(stats: Vec<(u64, (u64, u64))>) -> Vec<String> {
+    stats
+        .into_iter()
+        .map(|(events, (sessions, total_dur))| format!("{events} {sessions} {total_dur}"))
+        .collect()
+}
+
+/// The chained pipeline: session assembly, then session-length stats.
+#[derive(Clone, Copy, Debug)]
+pub struct Sessionize {
+    /// Maximum intra-session gap (timestamp units): a larger gap between
+    /// consecutive events of a user starts a new session.
+    pub gap: u64,
+}
+
+impl Sessionize {
+    pub fn new(gap: u64) -> Self {
+        Self { gap }
+    }
+
+    /// Decode the final lines into `(events, sessions, total_duration)`
+    /// rows — for display and assertions.
+    pub fn stats_from_lines(lines: &[String]) -> Vec<(u64, u64, u64)> {
+        lines
+            .iter()
+            .filter_map(|l| {
+                let mut t = l.split_whitespace();
+                Some((t.next()?.parse().ok()?, t.next()?.parse().ok()?, t.next()?.parse().ok()?))
+            })
+            .collect()
+    }
+}
+
+impl ChainedWorkload for Sessionize {
+    fn name(&self) -> &'static str {
+        "sessionize"
+    }
+
+    fn stages(&self) -> Vec<Box<dyn ChainStage>> {
+        let gap = self.gap;
+        vec![
+            TypedStage::boxed(Arc::new(SessionAssembly), move |out| render_sessions(out, gap)),
+            TypedStage::boxed(Arc::new(SessionStats), render_stats),
+        ]
+    }
+}
+
+/// Synthesize a shuffled event log for `users` users and `events` total
+/// events: each user walks a clock forward with mostly-small steps and
+/// occasional jumps well past `gap`, so sessionization at that gap yields
+/// a non-trivial mix of session lengths. Deterministic in `seed`.
+pub fn synthesize_logs(users: usize, events: usize, gap: u64, seed: u64) -> Vec<String> {
+    assert!(users > 0, "need at least one user");
+    let mut rng = Xoshiro256::new(seed);
+    let mut clocks: Vec<u64> = (0..users).map(|_| rng.next_below(gap.max(1))).collect();
+    let mut lines = Vec::with_capacity(events);
+    for _ in 0..events {
+        let u = rng.index(users);
+        clocks[u] += if rng.chance(0.2) {
+            // Session break: jump well past the gap.
+            gap + 1 + rng.next_below(gap.max(1) * 3 + 1)
+        } else {
+            rng.next_below(gap.max(1))
+        };
+        lines.push(format!("u{u} {}", clocks[u]));
+    }
+    rng.shuffle(&mut lines);
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::{run_chained_serial, JobInputs};
+
+    fn log_inputs(lines: &[&str]) -> JobInputs {
+        JobInputs::new().relation_lines(
+            "logs",
+            Arc::new(lines.iter().map(|s| s.to_string()).collect()),
+        )
+    }
+
+    #[test]
+    fn sessions_split_on_gap() {
+        // u1: events at 0, 5, 100 with gap 10 → sessions [0,5] and [100].
+        let inputs = log_inputs(&["u1 0", "u1 100", "u1 5"]);
+        let lines = run_chained_serial(&Sessionize::new(10), &inputs);
+        // One 2-event session of duration 5, one 1-event session.
+        assert_eq!(lines, vec!["1 1 0".to_string(), "2 1 5".to_string()]);
+    }
+
+    #[test]
+    fn bridge_lines_are_sorted_and_deterministic() {
+        let inputs = log_inputs(&["b 3", "a 1", "a 2", "b 50", "a 40"]);
+        let sz = Sessionize::new(10);
+        let a = run_chained_serial(&sz, &inputs);
+        let b = run_chained_serial(&sz, &inputs);
+        assert_eq!(a, b);
+        let stats = Sessionize::stats_from_lines(&a);
+        // Sessions: a:[1,2], a:[40], b:[3], b:[50] → two 1-event, one
+        // 2-event.
+        assert_eq!(stats, vec![(1, 3, 0), (2, 1, 1)]);
+    }
+
+    #[test]
+    fn malformed_lines_are_dropped() {
+        let inputs = log_inputs(&["", "useronly", "u1 notanumber", "u1 7"]);
+        let lines = run_chained_serial(&Sessionize::new(10), &inputs);
+        assert_eq!(lines, vec!["1 1 0".to_string()]);
+    }
+
+    #[test]
+    fn empty_log_has_empty_stats() {
+        let inputs = log_inputs(&[]);
+        assert!(run_chained_serial(&Sessionize::new(10), &inputs).is_empty());
+    }
+
+    #[test]
+    fn synthesized_logs_have_session_mix() {
+        let logs = synthesize_logs(8, 500, 100, 42);
+        assert_eq!(logs.len(), 500);
+        let inputs =
+            JobInputs::new().relation_lines("logs", Arc::new(logs));
+        let lines = run_chained_serial(&Sessionize::new(100), &inputs);
+        let stats = Sessionize::stats_from_lines(&lines);
+        assert!(!stats.is_empty());
+        // Session breaks happen (~20% of steps), so there must be more
+        // sessions than users and more than one session length.
+        let sessions: u64 = stats.iter().map(|(_, n, _)| n).sum();
+        assert!(sessions > 8, "expected multiple sessions per user, got {sessions}");
+        assert!(stats.len() > 1, "expected a mix of session lengths: {stats:?}");
+        // Every event lands in exactly one session.
+        let events: u64 = stats.iter().map(|(len, n, _)| len * n).sum();
+        assert_eq!(events, 500);
+    }
+}

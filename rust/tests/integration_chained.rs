@@ -1,0 +1,194 @@
+//! Cross-engine parity for the planner layer and the chained (multi-stage)
+//! pipeline: compiled stage graphs must record the plan-time decisions
+//! (exchange elision, cache points, bridge wiring), and `sessionize` —
+//! two genuine shuffle boundaries — must reproduce the serial chained
+//! oracle bit-identically on every engine, with and without injected
+//! failures.
+
+use std::sync::Arc;
+
+use blaze::cache::{CacheBudget, PartitionCache};
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::Engine;
+use blaze::mapreduce::{
+    run_chained, run_chained_serial, Exchange, InputSource, JobInputs, JobSpec,
+};
+use blaze::workloads::{synthesize_logs, Grep, PageRank, Sessionize, WordCount};
+
+const ENGINES: [Engine; 4] =
+    [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped];
+
+/// Engines with a recovery path to exercise (stripped Spark has FT off).
+const FAILURE_ENGINES: [Engine; 3] = [Engine::Blaze, Engine::BlazeTcm, Engine::Spark];
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine).nodes(2).threads_per_node(2).net(NetModel::ideal())
+}
+
+fn failure_plan(engine: Engine) -> FailurePlan {
+    match engine {
+        Engine::Blaze | Engine::BlazeTcm => FailurePlan::none().fail_node(0, 0).fail_node(1, 1),
+        Engine::Spark | Engine::SparkStripped => {
+            FailurePlan::none().fail_task(0, 1).fail_task(1, 0)
+        }
+    }
+}
+
+fn log_inputs(users: usize, events: usize, gap: u64, seed: u64) -> JobInputs {
+    JobInputs::new().relation_lines("logs", Arc::new(synthesize_logs(users, events, gap, seed)))
+}
+
+// ------------------------------------------------------------- the plan ----
+
+#[test]
+fn single_pass_jobs_compile_to_one_stage() {
+    let corpus = Corpus::from_text("a b\n");
+    let inputs = JobInputs::single(&corpus);
+    let w = WordCount::new(Tokenizer::Spaces);
+    let graph = spec(Engine::BlazeTcm).plan(&w, &inputs);
+    assert_eq!(graph.num_stages(), 1);
+    assert_eq!(graph.num_exchanges(), 1);
+    assert!(graph.boundaries().is_empty());
+    assert_eq!(graph.stage(0).exchange, Exchange::Shuffle);
+    assert_eq!(graph.stage(0).inputs.len(), 1);
+    assert_eq!(graph.stage(0).inputs[0].source, InputSource::External(0));
+    assert!(graph.stage(0).cache_point(0).is_none(), "no cache attached, no cache point");
+    assert!(graph.render().contains("wordcount"));
+}
+
+#[test]
+fn zero_shuffle_elision_is_decided_at_plan_time() {
+    let corpus = Corpus::from_text("a b\n");
+    let inputs = JobInputs::single(&corpus);
+    let grep = Grep::new("a");
+    let graph = spec(Engine::Spark).plan(&grep, &inputs);
+    assert_eq!(graph.stage(0).exchange, Exchange::Elided);
+    assert_eq!(graph.num_exchanges(), 0);
+    // --force-shuffle overrides the opt-out, visibly in the plan.
+    let graph = spec(Engine::Spark).force_shuffle(true).plan(&grep, &inputs);
+    assert_eq!(graph.stage(0).exchange, Exchange::Forced);
+    assert_eq!(graph.num_exchanges(), 1);
+}
+
+#[test]
+fn cache_points_follow_the_attached_budget() {
+    let corpus = Corpus::from_text("a b\nb c\n");
+    let inputs = JobInputs::new()
+        .relation("edges", &corpus)
+        .relation_lines("state", Arc::new(vec!["a 1 1".to_string()]));
+    let w = PageRank::new();
+    let step = blaze::mapreduce::IterativeWorkload::step(&w, &["a 1 1".to_string()]);
+
+    // Live cache: every relation gets a point carrying its generation.
+    let live = spec(Engine::BlazeTcm)
+        .shared_cache(Arc::new(PartitionCache::new(CacheBudget::Unbounded)))
+        .relation_gens(vec![0, 7]);
+    let graph = live.plan_cached(step.as_ref(), &inputs);
+    let p0 = graph.stage(0).cache_point(0).expect("edges cache point");
+    let p1 = graph.stage(0).cache_point(1).expect("state cache point");
+    assert_eq!((p0.namespace, p0.generation), (0, 0));
+    assert_eq!((p1.namespace, p1.generation), (1, 7));
+
+    // Budget 0 (the recompute ablation): the planner elides every point.
+    let disabled = spec(Engine::BlazeTcm)
+        .shared_cache(Arc::new(PartitionCache::new(CacheBudget::Bytes(0))));
+    let graph = disabled.plan_cached(step.as_ref(), &inputs);
+    assert!(graph.stage(0).cache_point(0).is_none());
+    assert!(graph.stage(0).cache_point(1).is_none());
+}
+
+#[test]
+fn chained_plan_wires_bridge_relations() {
+    let inputs = log_inputs(4, 50, 100, 1);
+    let sz = Sessionize::new(100);
+    let graph = spec(Engine::BlazeTcm).plan_chained(&sz, &inputs);
+    assert_eq!(graph.num_stages(), 2);
+    assert_eq!(graph.num_exchanges(), 2);
+    assert_eq!(graph.boundaries().len(), 1);
+    assert_eq!(graph.stage(0).inputs[0].source, InputSource::External(0));
+    assert_eq!(graph.stage(1).inputs.len(), 1);
+    assert_eq!(graph.stage(1).inputs[0].source, InputSource::StageOutput(0));
+    assert_eq!(graph.stage(1).inputs[0].name, "stage0.out");
+    let rendered = graph.render();
+    assert!(rendered.contains("sessions"), "{rendered}");
+    assert!(rendered.contains("session-stats"), "{rendered}");
+}
+
+// --------------------------------------------------------------- parity ----
+
+#[test]
+fn sessionize_parity_across_engines() {
+    let inputs = log_inputs(12, 1500, 120, 41);
+    let sz = Sessionize::new(120);
+    let expect = run_chained_serial(&sz, &inputs);
+    assert!(!expect.is_empty());
+    for engine in ENGINES {
+        let r = run_chained(&spec(engine), &sz, &inputs).unwrap();
+        assert_eq!(r.lines, expect, "{}", engine.label());
+        // Two stages, both shuffling, both attributable.
+        assert_eq!(r.stages.len(), 2, "{}", engine.label());
+        if engine != Engine::SparkStripped {
+            // Stripped Spark ships typed (unserialized) blocks, so its
+            // byte counter legitimately reads 0.
+            assert!(r.stages.iter().all(|s| s.shuffle_bytes > 0), "{}", engine.label());
+        }
+        assert!(r.stages.iter().all(|s| s.records_in > 0), "{}", engine.label());
+        // Stage 1 reads exactly the bridge lines stage 0 produced.
+        let sessions: u64 = Sessionize::stats_from_lines(&expect)
+            .iter()
+            .map(|(_, n, _)| n)
+            .sum();
+        assert_eq!(r.stages[1].records_in, sessions, "{}", engine.label());
+        assert_eq!(r.shuffle_bytes, r.stages.iter().map(|s| s.shuffle_bytes).sum::<u64>());
+    }
+}
+
+#[test]
+fn sessionize_parity_under_injected_failures() {
+    let inputs = log_inputs(8, 600, 90, 43);
+    let sz = Sessionize::new(90);
+    let expect = run_chained_serial(&sz, &inputs);
+    for engine in FAILURE_ENGINES {
+        let r = run_chained(&spec(engine).failures(failure_plan(engine)), &sz, &inputs).unwrap();
+        assert_eq!(r.lines, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn sessionize_empty_input_is_empty_everywhere() {
+    let inputs = JobInputs::new().relation_lines("logs", Arc::new(Vec::new()));
+    let sz = Sessionize::new(10);
+    assert!(run_chained_serial(&sz, &inputs).is_empty());
+    for engine in ENGINES {
+        let r = run_chained(&spec(engine), &sz, &inputs).unwrap();
+        assert!(r.lines.is_empty(), "{}", engine.label());
+    }
+}
+
+#[test]
+fn chained_arity_is_validated() {
+    let sz = Sessionize::new(10);
+    let two = JobInputs::new()
+        .relation_lines("a", Arc::new(Vec::new()))
+        .relation_lines("b", Arc::new(Vec::new()));
+    let err = run_chained(&spec(Engine::BlazeTcm), &sz, &two).unwrap_err();
+    assert!(err.to_string().contains("expects 1 input relation(s)"), "{err}");
+}
+
+// ------------------------------------------------------ per-stage stats ----
+
+#[test]
+fn single_pass_reports_carry_one_stage_row() {
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(32 << 10));
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    for engine in [Engine::BlazeTcm, Engine::Spark] {
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.stages.len(), 1, "{}", engine.label());
+        let s = &r.stages[0];
+        assert_eq!(s.label, "wordcount");
+        assert_eq!(s.records_in, corpus.lines.len() as u64, "{}", engine.label());
+        assert!(s.records_out > 0, "{}", engine.label());
+        assert_eq!(s.shuffle_bytes, r.shuffle_bytes, "{}", engine.label());
+    }
+}

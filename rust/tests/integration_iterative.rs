@@ -14,7 +14,7 @@ use blaze::mapreduce::{
     run_iterative, run_iterative_serial, run_serial_inputs, IterativeSpec, IterativeWorkload,
     JobInputs, JobSpec,
 };
-use blaze::workloads::{synthesize_points, KMeans, PageRank};
+use blaze::workloads::{synthesize_points, Components, KMeans, PageRank};
 
 const ENGINES: [Engine; 4] =
     [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped];
@@ -119,6 +119,68 @@ fn kmeans_parity_under_injected_failures() {
         )
         .unwrap();
         assert_eq!(r.state, oracle.state, "{}", engine.label());
+    }
+}
+
+#[test]
+fn components_bit_identical_to_serial_oracle() {
+    // Corpus lines as undirected adjacency fragments; default tolerance
+    // (delta counts changed labels, so convergence is exact).
+    let inputs = edge_inputs(24 << 10, 81);
+    let w = Components::new();
+    let it = IterativeSpec::new(8);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    assert!(!oracle.state.is_empty());
+    for engine in ENGINES {
+        let r = run_iterative(&spec(engine), &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+        assert_eq!(r.converged, oracle.converged, "{}", engine.label());
+    }
+}
+
+#[test]
+fn components_parity_under_injected_failures() {
+    let inputs = edge_inputs(16 << 10, 83);
+    let w = Components::new();
+    let it = IterativeSpec::new(4).tolerance(0.0);
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in FAILURE_ENGINES {
+        let r = run_iterative(
+            &spec(engine).failures(failure_plan(engine)),
+            &it,
+            &w,
+            &inputs,
+        )
+        .unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+    }
+}
+
+#[test]
+fn components_label_two_islands_distinctly() {
+    let inputs = JobInputs::new().relation(
+        "edges",
+        &Corpus::from_text("a b\nb c\nx y\n"),
+    );
+    let w = Components::new();
+    let it = IterativeSpec::new(10);
+    for engine in ENGINES {
+        let r = run_iterative(&spec(engine), &it, &w, &inputs).unwrap();
+        assert!(r.converged, "{}", engine.label());
+        let labels: std::collections::HashMap<String, u64> =
+            Components::labels_from_state(&r.state).into_iter().collect();
+        assert_eq!(labels["a"], labels["b"], "{}", engine.label());
+        assert_eq!(labels["b"], labels["c"], "{}", engine.label());
+        assert_eq!(labels["x"], labels["y"], "{}", engine.label());
+        assert_ne!(labels["a"], labels["x"], "{}", engine.label());
+        let sizes = Components::component_sizes(&r.state);
+        assert_eq!(
+            sizes.iter().map(|&(_, n)| n).collect::<Vec<_>>(),
+            vec![3, 2],
+            "{}",
+            engine.label()
+        );
     }
 }
 

@@ -268,6 +268,123 @@ fn prop_join_parity_with_one_empty_relation() {
     });
 }
 
+/// Every registered workload through the compiled-plan path must match
+/// its serial oracle under a random single failure injected at a random
+/// stage boundary (map side or shuffle/reduce side), on a random engine
+/// and cluster shape — including the multi-input join, the two-stage
+/// chained pipeline, and an iterative min-label run whose injection can
+/// land in any round.
+#[test]
+fn prop_run_plan_parity_under_random_failures() {
+    use blaze::cluster::FailurePlan;
+    use blaze::engines::Engine;
+    use blaze::mapreduce::{
+        run_chained, run_chained_serial, run_iterative, run_iterative_serial, run_serial,
+        run_serial_inputs, IterativeSpec, JobInputs, JobSpec,
+    };
+    use blaze::workloads::{
+        Components, DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, Sessionize,
+        TopKWords, WordCount,
+    };
+    use std::sync::Arc;
+
+    check_with(Config { cases: 6, size: 48, ..Default::default() }, "run-plan-parity", |g| {
+        let text: String =
+            (0..g.usize_in(1, 40)).map(|_| g.line(8)).collect::<Vec<_>>().join("\n");
+        let corpus = Corpus::from_text(&text);
+        let engine = *g.choose(&[Engine::Blaze, Engine::BlazeTcm, Engine::Spark]);
+        let nnodes = g.usize_in(1, 3);
+        // One failure at a random stage boundary: phase 0 = map side,
+        // phase 1 = the shuffle/reduce side of the boundary. Plans are
+        // one-shot (consumed by the first run they hit), so build a fresh
+        // one per job.
+        let fail_phase = g.usize_in(0, 1);
+        let fail_idx = g.usize_in(0, nnodes - 1);
+        let failures = || match engine {
+            Engine::Blaze | Engine::BlazeTcm => {
+                FailurePlan::none().fail_node(fail_idx, fail_phase)
+            }
+            Engine::Spark | Engine::SparkStripped => {
+                FailurePlan::none().fail_task(fail_phase, fail_idx)
+            }
+        };
+        let spec = || {
+            JobSpec::new(engine)
+                .nodes(nnodes)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .failures(failures())
+        };
+        let tok = blaze::corpus::Tokenizer::Spaces;
+        let ctx = format!(
+            "{} (nnodes={nnodes}, fail {fail_idx}@{fail_phase})",
+            engine.label()
+        );
+        fn parity<T: PartialEq>(label: &str, ctx: &str, got: &T, want: &T) -> Result<(), String> {
+            if got == want {
+                Ok(())
+            } else {
+                fail(format!("{label} diverged on {ctx}"))
+            }
+        }
+
+        let wc = Arc::new(WordCount::new(tok));
+        let r = spec().run_str(&wc, &corpus).map_err(|e| e.to_string())?;
+        parity("wordcount", &ctx, &r.output, &run_serial(wc.as_ref(), &corpus))?;
+
+        let idx = Arc::new(InvertedIndex::new(tok));
+        let r = spec().run_str(&idx, &corpus).map_err(|e| e.to_string())?;
+        parity("index", &ctx, &r.output, &run_serial(idx.as_ref(), &corpus))?;
+
+        let topk = Arc::new(TopKWords::new(tok, 5));
+        let r = spec().run_str(&topk, &corpus).map_err(|e| e.to_string())?;
+        parity("top-k", &ctx, &r.output, &run_serial(topk.as_ref(), &corpus))?;
+
+        let hist = Arc::new(LengthHistogram::new(tok));
+        let r = spec().run(&hist, &corpus).map_err(|e| e.to_string())?;
+        parity("length-hist", &ctx, &r.output, &run_serial(hist.as_ref(), &corpus))?;
+
+        let distinct = Arc::new(DistinctCount::new(tok));
+        let r = spec().run(&distinct, &corpus).map_err(|e| e.to_string())?;
+        parity("distinct", &ctx, &r.output, &run_serial(distinct.as_ref(), &corpus))?;
+
+        let grep = Arc::new(Grep::new("a"));
+        let r = spec().run(&grep, &corpus).map_err(|e| e.to_string())?;
+        parity("grep", &ctx, &r.output, &run_serial(grep.as_ref(), &corpus))?;
+
+        let right_text: String =
+            (0..g.usize_in(0, 30)).map(|_| g.line(6)).collect::<Vec<_>>().join("\n");
+        let join_inputs = JobInputs::new()
+            .relation("left", &corpus)
+            .relation("right", &Corpus::from_text(&right_text));
+        let join = Arc::new(Join::new());
+        let r = spec().run_inputs(&join, &join_inputs).map_err(|e| e.to_string())?;
+        parity("join", &ctx, &r.output, &run_serial_inputs(join.as_ref(), &join_inputs))?;
+
+        // Chained: two shuffle boundaries, so the injection can land on
+        // either stage.
+        let logs: Vec<String> = (0..g.usize_in(0, 60))
+            .map(|_| format!("u{} {}", g.usize_in(0, 4), g.below(400)))
+            .collect();
+        let log_inputs = JobInputs::new().relation_lines("logs", Arc::new(logs));
+        let sz = Sessionize::new(40);
+        let want = run_chained_serial(&sz, &log_inputs);
+        let r = run_chained(&spec(), &sz, &log_inputs).map_err(|e| e.to_string())?;
+        parity("sessionize", &ctx, &r.lines, &want)?;
+
+        // Iterative: the injection lands in whichever round first runs
+        // the failing task/node.
+        let cc = Components::new();
+        let edge_inputs = JobInputs::new().relation("edges", &corpus);
+        let it = IterativeSpec::new(3).tolerance(0.0);
+        let want = run_iterative_serial(&it, &cc, &edge_inputs);
+        let r = run_iterative(&spec(), &it, &cc, &edge_inputs).map_err(|e| e.to_string())?;
+        parity("components", &ctx, &r.state, &want.state)?;
+
+        Ok(())
+    });
+}
+
 /// Deterministic "computation" for a cache key — what a parse of the
 /// underlying split would produce.
 fn cache_value_of(k: &blaze::cache::CacheKey) -> Vec<u64> {
