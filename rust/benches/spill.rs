@@ -1,0 +1,119 @@
+//! Experiment S1: the in-memory → spill cliff the paper never measured.
+//!
+//! The paper's 300% MPI/OpenMP-over-Spark result is stated for jobs whose
+//! working set fits in memory. This bench sweeps the bounded-memory
+//! exchange's budget (`--spill-threshold`) from unbounded down to 4 KB on
+//! both engines: every configuration produces bit-identical output (the
+//! integration suite enforces it), so the sweep isolates exactly what the
+//! storage hierarchy costs — sort-and-spill writes, loser-tree merge
+//! reads — as memory shrinks.
+//!
+//! Scale knobs: BLAZE_BENCH_BYTES (default 32MB), BLAZE_BENCH_REPS.
+
+use std::sync::Arc;
+
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner, MachineReport};
+use blaze::cluster::NetModel;
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::Engine;
+use blaze::mapreduce::{JobInputs, JobSpec};
+use blaze::util::stats::fmt_bytes;
+use blaze::workloads::{Join, WordCount};
+
+fn spec(engine: Engine, threshold: Option<u64>) -> JobSpec {
+    let s = JobSpec::new(engine).nodes(2).threads_per_node(4).net(NetModel::aws_like());
+    match threshold {
+        Some(t) => s.spill_threshold(t),
+        None => s,
+    }
+}
+
+const THRESHOLDS: [(&str, Option<u64>); 4] = [
+    ("unbounded", None),
+    ("1MB", Some(1 << 20)),
+    ("64KB", Some(64 << 10)),
+    ("4KB", Some(4 << 10)),
+];
+
+fn main() {
+    let bytes = bench_corpus_bytes();
+    let corpus = Corpus::generate(&CorpusSpec::with_bytes(bytes));
+    eprintln!(
+        "S1 corpus: {} ({} words); 2 nodes x 4 threads, aws-like net",
+        fmt_bytes(corpus.bytes),
+        corpus.words
+    );
+    let engines = [Engine::Spark, Engine::BlazeTcm];
+
+    let mut runner = BenchRunner::new("S1: spill-threshold sweep (bounded-memory exchange)");
+    let mut machine = MachineReport::new();
+
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    for engine in engines {
+        for (label, threshold) in THRESHOLDS {
+            {
+                let corpus = &corpus;
+                let wc = &wc;
+                runner.bench(
+                    format!("wordcount @ {label} / {}", engine.label()),
+                    "recs",
+                    move || {
+                        spec(engine, threshold).run_str(wc, corpus).expect("wordcount").records
+                            as f64
+                    },
+                );
+            }
+            let r = spec(engine, threshold).run_str(&wc, &corpus).expect("wordcount");
+            eprintln!("      spilled: {}", fmt_bytes(r.storage.spilled_bytes));
+            machine.row(
+                format!("wordcount@{label}"),
+                engine.label(),
+                r.wall_secs,
+                r.shuffle_bytes,
+                r.storage.spilled_bytes,
+            );
+        }
+    }
+
+    // Join: heavier values (both sides' lines ride the shuffle), so the
+    // cliff arrives at larger thresholds.
+    let right = Corpus::generate(&CorpusSpec {
+        target_bytes: bytes,
+        seed: CorpusSpec::default().seed + 1,
+        ..Default::default()
+    });
+    let join_inputs = JobInputs::new()
+        .relation_lines("left", Arc::new(corpus.lines.clone()))
+        .relation("right", &right);
+    let join = Arc::new(Join::new());
+    for engine in engines {
+        for (label, threshold) in THRESHOLDS {
+            {
+                let join_inputs = &join_inputs;
+                let join = &join;
+                runner.bench(
+                    format!("join @ {label} / {}", engine.label()),
+                    "recs",
+                    move || {
+                        spec(engine, threshold)
+                            .run_inputs(join, join_inputs)
+                            .expect("join")
+                            .records as f64
+                    },
+                );
+            }
+            let r = spec(engine, threshold).run_inputs(&join, &join_inputs).expect("join");
+            eprintln!("      spilled: {}", fmt_bytes(r.storage.spilled_bytes));
+            machine.row(
+                format!("join@{label}"),
+                engine.label(),
+                r.wall_secs,
+                r.shuffle_bytes,
+                r.storage.spilled_bytes,
+            );
+        }
+    }
+
+    runner.finish();
+    machine.write("BENCH_spill_sweep.json");
+}

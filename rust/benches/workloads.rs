@@ -15,11 +15,11 @@
 
 use std::sync::Arc;
 
-use blaze::benchkit::{bench_corpus_bytes, stage_table, BenchRunner};
+use blaze::benchkit::{bench_corpus_bytes, stage_table, BenchRunner, MachineReport};
 use blaze::cluster::NetModel;
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::engines::Engine;
-use blaze::mapreduce::{run_chained, JobInputs, JobSpec};
+use blaze::mapreduce::{run_chained, JobInputs, JobReport, JobSpec};
 use blaze::util::stats::fmt_bytes;
 use blaze::workloads::{
     synthesize_logs, DistinctCount, Grep, InvertedIndex, Join, LengthHistogram, Sessionize,
@@ -31,6 +31,11 @@ fn spec(engine: Engine) -> JobSpec {
         .nodes(2)
         .threads_per_node(4)
         .net(NetModel::aws_like())
+}
+
+/// One machine-readable row from a single-pass job report.
+fn machine_row<O>(m: &mut MachineReport, name: &str, engine: Engine, r: &JobReport<O>) {
+    m.row(name, engine.label(), r.wall_secs, r.shuffle_bytes, r.storage.spilled_bytes);
 }
 
 fn main() {
@@ -163,4 +168,43 @@ fn main() {
                 .to_markdown()
         );
     }
+
+    // BENCH_5.json: the machine-readable companion (per-workload wall,
+    // shuffle bytes, spilled bytes) — one fresh run per cell. Default
+    // rows never spill; the `@spill64k` rows force the bounded-memory
+    // exchange so the spill column is populated (the full threshold
+    // sweep lives in `cargo bench --bench spill`).
+    let mut machine = MachineReport::new();
+    for engine in engines {
+        machine_row(&mut machine, "wordcount", engine, &spec(engine).run_str(&wc, &corpus).expect("wordcount"));
+        machine_row(&mut machine, "index", engine, &spec(engine).run_str(&idx, &corpus).expect("index"));
+        machine_row(&mut machine, "top-k", engine, &spec(engine).run_str(&topk, &corpus).expect("top-k"));
+        machine_row(&mut machine, "length-hist", engine, &spec(engine).run(&hist, &corpus).expect("length-hist"));
+        machine_row(&mut machine, "join", engine, &spec(engine).run_inputs(&join, &join_inputs).expect("join"));
+        machine_row(&mut machine, "distinct", engine, &spec(engine).run(&distinct, &corpus).expect("distinct"));
+        machine_row(&mut machine, "grep", engine, &spec(engine).run(&grep, &corpus).expect("grep"));
+        let chained = run_chained(&spec(engine), &sessionize, &logs).expect("sessionize");
+        machine.row(
+            "sessionize",
+            engine.label(),
+            chained.wall_secs,
+            chained.shuffle_bytes,
+            chained.storage.spilled_bytes,
+        );
+        // The spill cliff's anchor points.
+        let spill = |s: JobSpec| s.spill_threshold(64 << 10);
+        machine_row(
+            &mut machine,
+            "wordcount@spill64k",
+            engine,
+            &spill(spec(engine)).run_str(&wc, &corpus).expect("wordcount spill"),
+        );
+        machine_row(
+            &mut machine,
+            "join@spill64k",
+            engine,
+            &spill(spec(engine)).run_inputs(&join, &join_inputs).expect("join spill"),
+        );
+    }
+    machine.write("BENCH_5.json");
 }

@@ -180,6 +180,95 @@ pub fn stage_table(
     t
 }
 
+/// One row of a machine-readable bench report: what the perf-trajectory
+/// tooling consumes (wall + shuffle + spill volume per workload×engine).
+#[derive(Clone, Debug)]
+pub struct MachineRow {
+    pub workload: String,
+    pub engine: String,
+    pub wall_secs: f64,
+    pub shuffle_bytes: u64,
+    pub spilled_bytes: u64,
+}
+
+/// Machine-readable companion to the human tables: collected by the
+/// bench binaries and written as JSON (e.g. `BENCH_5.json`) next to the
+/// CSVs under `target/bench-results/`. Hand-rolled writer — the offline
+/// crate set has no `serde`.
+#[derive(Default)]
+pub struct MachineReport {
+    rows: Vec<MachineRow>,
+}
+
+impl MachineReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn row(
+        &mut self,
+        workload: impl Into<String>,
+        engine: impl Into<String>,
+        wall_secs: f64,
+        shuffle_bytes: u64,
+        spilled_bytes: u64,
+    ) {
+        self.rows.push(MachineRow {
+            workload: workload.into(),
+            engine: engine.into(),
+            wall_secs,
+            shuffle_bytes,
+            spilled_bytes,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.chars()
+                .flat_map(|c| match c {
+                    '"' => vec!['\\', '"'],
+                    '\\' => vec!['\\', '\\'],
+                    '\n' => vec!['\\', 'n'],
+                    c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                    c => vec![c],
+                })
+                .collect()
+        }
+        let mut out = String::from("{\n  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"wall_secs\": {:.6}, \
+                 \"shuffle_bytes\": {}, \"spilled_bytes\": {}}}{}\n",
+                esc(&r.workload),
+                esc(&r.engine),
+                r.wall_secs,
+                r.shuffle_bytes,
+                r.spilled_bytes,
+                if i + 1 < self.rows.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON under `target/bench-results/<name>` and announce
+    /// the path (mirrors [`BenchRunner::finish`]'s CSV behavior).
+    pub fn write(&self, name: &str) {
+        let path = std::path::Path::new("target/bench-results").join(name);
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("(json written to {})", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+}
+
 /// Corpus size for word-count benches.
 pub fn bench_corpus_bytes() -> u64 {
     std::env::var("BLAZE_BENCH_BYTES")
@@ -216,5 +305,28 @@ mod tests {
     fn corpus_bytes_default() {
         // Only check it parses to something sane (env may be set).
         assert!(bench_corpus_bytes() >= 1 << 10);
+    }
+
+    #[test]
+    fn machine_report_emits_json_rows() {
+        let mut r = MachineReport::new();
+        assert!(r.is_empty());
+        r.row("wordcount", "spark", 0.25, 1024, 0);
+        r.row("join", "blaze-tcm", 1.5, 4096, 2048);
+        let json = r.to_json();
+        assert!(json.contains("\"workload\": \"wordcount\""), "{json}");
+        assert!(json.contains("\"spilled_bytes\": 2048"), "{json}");
+        // Exactly one separating comma between the two rows.
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        assert!(json.trim_end().ends_with('}'), "{json}");
+    }
+
+    #[test]
+    fn machine_report_escapes_strings() {
+        let mut r = MachineReport::new();
+        r.row("we\"ird\\name", "e\nngine", 0.0, 0, 0);
+        let json = r.to_json();
+        assert!(json.contains("we\\\"ird\\\\name"), "{json}");
+        assert!(json.contains("e\\nngine"), "{json}");
     }
 }

@@ -1,5 +1,6 @@
-//! In-memory partition cache — the subsystem behind "Spark is an
-//! *in-memory* implementation of MapReduce".
+//! The partition cache — the memory tier of the storage hierarchy, and
+//! the subsystem behind "Spark is an *in-memory* implementation of
+//! MapReduce".
 //!
 //! The paper's comparison runs single-pass jobs, where caching never pays
 //! off. Iterative jobs (PageRank, k-means) re-read their input every
@@ -8,11 +9,22 @@
 //! per-entry byte accounting, and hit/miss/evict statistics that the job
 //! layer surfaces into [`crate::mapreduce::JobReport`].
 //!
+//! Since the tiered storage subsystem ([`crate::storage`]) landed,
+//! [`PartitionCache`] is an alias for [`crate::storage::TieredStore`]:
+//! the same store, now optionally backed by a
+//! [`DiskTier`](crate::storage::DiskTier). Without one (the default,
+//! and everything this module's docs describe) behavior is exactly the
+//! PR 3 cache: evicted means gone, and the engines recompute. With one
+//! attached ([`TieredStore::with_spill`](crate::storage::TieredStore::with_spill),
+//! the `--spill-threshold` path), entries inserted through
+//! `put_encoded` **demote to disk under memory pressure and promote back
+//! on access** — disk-backed persist instead of lossy evict+recompute.
+//!
 //! Both engines sit on top of it:
 //!
 //! * the Spark sim's [`Rdd::persist`](crate::engines::spark::Rdd::persist)
-//!   / `cache()` stores materialized partitions here and **recomputes from
-//!   lineage** when an entry was evicted (exactly Spark's
+//!   / `cache()` stores materialized partitions here and — when the entry
+//!   is not in *any* tier — **recomputes from lineage** (exactly Spark's
 //!   `MemoryStore` + `BlockManager` contract);
 //! * Blaze caches **parsed input splits** keyed by
 //!   `(relation, generation, node)` so later iterations of an iterative
@@ -28,25 +40,26 @@
 //! pool fills. We model the *consequence* of that machinery, not its
 //! negotiation: `CacheBudget::Bytes(n)` is the storage pool size, entries
 //! above the whole budget are rejected outright (Spark: "block too large
-//! to cache"), and eviction is least-recently-used by entry. Two settings
-//! bracket every experiment:
+//! to cache") unless a disk tier is attached, and eviction is
+//! least-recently-used by entry. Two settings bracket every experiment:
 //!
 //! * `CacheBudget::Unbounded` — a heap big enough to hold the working set
 //!   (the regime in which Spark's in-memory claim is usually stated);
 //! * `CacheBudget::Bytes(0)` — no storage pool at all: every round
 //!   recomputes from scratch, the ablation that measures what the cache
-//!   buys.
+//!   buys. Budget 0 disables the disk tier too — "storage off" must
+//!   measure recomputation, not a spill-shaped detour.
 //!
 //! Sizes are *estimates* supplied by the caller (via
-//! [`crate::engines::spark::HeapSize`]), mirroring Spark's
+//! [`crate::storage::HeapSize`], re-exported here), mirroring Spark's
 //! `SizeEstimator`: accounting is approximate by design, the invariant —
 //! cached bytes never exceed the budget — is exact with respect to those
 //! estimates.
 
-use std::any::Any;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, Mutex};
+// The store itself lives in the storage subsystem; this module keeps the
+// cache-facing names (and the identity types below) stable.
+pub use crate::storage::HeapSize;
+pub use crate::storage::TieredStore as PartitionCache;
 
 /// Memory budget of a [`PartitionCache`] — the `spark.memory.fraction`
 /// stand-in (see the module docs for the mapping).
@@ -80,7 +93,9 @@ impl std::fmt::Display for CacheBudget {
     }
 }
 
-/// Identity of one cached partition.
+/// Identity of one cached partition (and of one stored block — the
+/// storage subsystem keys its tiers with this type too; see the
+/// namespace map in [`crate::storage`]).
 ///
 /// * `namespace` — which dataset: an input relation index for the
 ///   iterative runners, or a fresh RDD persist id on the Spark sim.
@@ -105,7 +120,8 @@ pub struct CacheKey {
 }
 
 /// Counter snapshot of one cache (counters are cumulative since creation;
-/// `bytes_cached`/`entries` are point-in-time gauges).
+/// `bytes_cached`/`entries` are point-in-time gauges). A hit served from
+/// the disk tier counts as a hit — the caller did not recompute.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -113,7 +129,8 @@ pub struct CacheStats {
     pub insertions: u64,
     pub evictions: u64,
     /// Entries refused because they alone exceed the whole budget (all
-    /// entries, when the budget is 0).
+    /// entries, when the budget is 0). With a disk tier attached, only
+    /// budget 0 rejects.
     pub rejected: u64,
     pub bytes_cached: u64,
     pub entries: u64,
@@ -160,222 +177,11 @@ impl std::fmt::Display for CacheStats {
     }
 }
 
-/// One cached value: type-erased payload + its estimated size + recency.
-struct Slot {
-    value: Arc<dyn Any + Send + Sync>,
-    bytes: u64,
-    last_used: u64,
-}
-
-#[derive(Default)]
-struct Inner {
-    slots: HashMap<CacheKey, Slot>,
-    bytes: u64,
-    /// Monotonic recency clock; bumped on every touch.
-    tick: u64,
-}
-
-/// The memory-budgeted, size-aware partition store (see module docs).
-///
-/// Thread-safe and cheap to share (`Arc<PartitionCache>`); both engines
-/// and the iterative driver hold the same instance so cached partitions
-/// survive across job rounds.
-pub struct PartitionCache {
-    budget: CacheBudget,
-    inner: Mutex<Inner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    insertions: AtomicU64,
-    evictions: AtomicU64,
-    rejected: AtomicU64,
-}
-
-impl std::fmt::Debug for PartitionCache {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PartitionCache")
-            .field("budget", &self.budget)
-            .field("stats", &self.stats())
-            .finish()
-    }
-}
-
-impl PartitionCache {
-    pub fn new(budget: CacheBudget) -> Self {
-        Self {
-            budget,
-            inner: Mutex::new(Inner::default()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            insertions: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-        }
-    }
-
-    pub fn budget(&self) -> CacheBudget {
-        self.budget
-    }
-
-    /// `true` when the budget is `Bytes(0)`: nothing can ever be admitted.
-    /// Engines check this up front so the recompute ablation doesn't pay
-    /// for cloning and size-estimating partitions that are certain to be
-    /// rejected — the ablation must measure recomputation, not a
-    /// caching-shaped detour.
-    pub fn is_disabled(&self) -> bool {
-        self.budget == CacheBudget::Bytes(0)
-    }
-
-    /// Could an entry of `bytes` estimated size ever be admitted? `false`
-    /// means [`put`](Self::put) is guaranteed to reject it — callers use
-    /// this to skip the deep clone a doomed insert would need. Does not
-    /// touch the stats (only an actual `put` counts as a rejection).
-    pub fn fits(&self, bytes: u64) -> bool {
-        match self.budget {
-            CacheBudget::Unbounded => true,
-            CacheBudget::Bytes(limit) => limit > 0 && bytes <= limit,
-        }
-    }
-
-    /// Look up a partition. A hit bumps the entry's recency (it becomes
-    /// the most recently used) and is counted in the stats.
-    pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        match inner.slots.get_mut(key) {
-            Some(slot) => {
-                slot.last_used = tick;
-                self.hits.fetch_add(1, Relaxed);
-                Some(Arc::clone(&slot.value))
-            }
-            None => {
-                self.misses.fetch_add(1, Relaxed);
-                None
-            }
-        }
-    }
-
-    /// [`get`](Self::get) plus a downcast to the stored type. A type
-    /// mismatch behaves — and is counted — as a **miss**: the caller will
-    /// recompute, so the hit the raw lookup recorded is reclassified.
-    /// (Mismatches cannot happen when every writer of a namespace stores
-    /// one type, which is what the engines do.)
-    pub fn get_typed<T: Any + Send + Sync>(&self, key: &CacheKey) -> Option<Arc<T>> {
-        match self.get(key)?.downcast::<T>() {
-            Ok(v) => Some(v),
-            Err(_) => {
-                self.hits.fetch_sub(1, Relaxed);
-                self.misses.fetch_add(1, Relaxed);
-                None
-            }
-        }
-    }
-
-    /// Insert a partition of `bytes` estimated size, evicting
-    /// least-recently-used entries until it fits. Returns `false` (and
-    /// counts a rejection) when the entry alone exceeds the whole budget;
-    /// a budget of 0 rejects **everything**, even zero-byte entries —
-    /// `Bytes(0)` means caching is off.
-    pub fn put(&self, key: CacheKey, value: Arc<dyn Any + Send + Sync>, bytes: u64) -> bool {
-        if let CacheBudget::Bytes(limit) = self.budget {
-            if limit == 0 || bytes > limit {
-                self.rejected.fetch_add(1, Relaxed);
-                return false;
-            }
-        }
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(old) = inner.slots.remove(&key) {
-            inner.bytes -= old.bytes;
-        }
-        if let CacheBudget::Bytes(limit) = self.budget {
-            while inner.bytes + bytes > limit {
-                let lru = inner
-                    .slots
-                    .iter()
-                    .min_by_key(|(_, s)| s.last_used)
-                    .map(|(k, _)| *k)
-                    .expect("over budget with no entries");
-                let victim = inner.slots.remove(&lru).unwrap();
-                inner.bytes -= victim.bytes;
-                self.evictions.fetch_add(1, Relaxed);
-            }
-        }
-        inner.tick += 1;
-        let tick = inner.tick;
-        inner.bytes += bytes;
-        inner.slots.insert(key, Slot { value, bytes, last_used: tick });
-        self.insertions.fetch_add(1, Relaxed);
-        true
-    }
-
-    /// Is `key` currently resident? Does not touch recency or stats
-    /// (observation hook for tests and diagnostics).
-    pub fn contains(&self, key: &CacheKey) -> bool {
-        self.inner.lock().unwrap().slots.contains_key(key)
-    }
-
-    /// Drop every resident entry of `namespace` with a generation older
-    /// than `keep_generation` — the writer's hook for freeing splits that
-    /// can never be read again (the iterative driver calls this as it
-    /// bumps the fed-back state relation's generation, so an unbounded
-    /// cache does not accumulate one dead parsed state per round).
-    /// Returns how many entries were dropped. Not counted as evictions:
-    /// these are deliberate removals, not budget pressure.
-    pub fn invalidate_generations_below(&self, namespace: u64, keep_generation: u64) -> usize {
-        let mut inner = self.inner.lock().unwrap();
-        let victims: Vec<CacheKey> = inner
-            .slots
-            .keys()
-            .filter(|k| k.namespace == namespace && k.generation < keep_generation)
-            .copied()
-            .collect();
-        for k in &victims {
-            let slot = inner.slots.remove(k).unwrap();
-            inner.bytes -= slot.bytes;
-        }
-        victims.len()
-    }
-
-    /// Estimated bytes currently resident.
-    pub fn bytes_cached(&self) -> u64 {
-        self.inner.lock().unwrap().bytes
-    }
-
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().slots.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Drop every entry (counters are kept — they are cumulative).
-    pub fn clear(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.slots.clear();
-        inner.bytes = 0;
-    }
-
-    pub fn stats(&self) -> CacheStats {
-        let (bytes_cached, entries) = {
-            let inner = self.inner.lock().unwrap();
-            (inner.bytes, inner.slots.len() as u64)
-        };
-        CacheStats {
-            hits: self.hits.load(Relaxed),
-            misses: self.misses.load(Relaxed),
-            insertions: self.insertions.load(Relaxed),
-            evictions: self.evictions.load(Relaxed),
-            rejected: self.rejected.load(Relaxed),
-            bytes_cached,
-            entries,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::any::Any;
+    use std::sync::Arc;
 
     fn key(p: u64) -> CacheKey {
         CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }

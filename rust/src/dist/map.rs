@@ -15,11 +15,12 @@
 //! `(K, V)` emission per thread and the shuffle ships them all — the
 //! ablation that quantifies the paper's local-reduce claim.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::cluster::Comm;
 use crate::concurrent::{default_segments, CachePolicy, ConcurrentHashMap, MapKey, MapValue};
 use crate::hash::{bucket_of, HashKind};
+use crate::storage::{fresh_spill_namespace, BlockStore, DiskTier, ExternalMerger, HeapSize};
 use crate::util::ser::{Decode, Encode};
 
 use super::CombineMode;
@@ -188,6 +189,85 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         }
         self.local.sync(self.nthreads, &reduce);
     }
+
+    /// [`shuffle`](Self::shuffle) with a **bounded-memory merge**: the
+    /// exchange is identical (same drain, same owner sharding, same bytes
+    /// on the fabric), but the reduce-side merge runs through an
+    /// [`ExternalMerger`] — beyond `threshold` estimated in-flight bytes
+    /// the partial shard sort-and-spills runs to `disk`, and the merged
+    /// shard comes back from a loser-tree external merge. Returns this
+    /// node's merged entries (the local table is left drained): for any
+    /// associative + commutative `reduce` the result set is identical to
+    /// the in-memory shuffle at any threshold down to 0.
+    pub fn shuffle_external(
+        &self,
+        comm: &Comm,
+        reduce: impl Fn(&mut V, V) + Sync,
+        threshold: u64,
+        disk: &Arc<DiskTier>,
+    ) -> Vec<(K, V)>
+    where
+        K: Ord + std::hash::Hash + Encode + Decode + HeapSize,
+        V: Encode + Decode + HeapSize,
+    {
+        assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
+        let n = self.nnodes;
+
+        // 1. Drain pending entries, carrying each key's routing hash.
+        let mut pending: Vec<(u64, K, V)> = Vec::new();
+        match self.combine {
+            CombineMode::Eager => {
+                self.local.sync(self.nthreads, &reduce);
+                for e in self.local.drain_entries() {
+                    pending.push((e.hash, e.key, e.value));
+                }
+            }
+            CombineMode::None => {
+                for cell in &self.raw {
+                    for (k, v) in cell.lock().unwrap().drain(..) {
+                        let h = k.hash_with(self.hash);
+                        pending.push((h, k, v));
+                    }
+                }
+            }
+        }
+
+        // 2. Partition by owner rank.
+        let mut by_owner: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+        for (h, k, v) in pending {
+            by_owner[bucket_of(h, n)].push((k, v));
+        }
+
+        // 3. Exchange — byte-for-byte the same protocol as `shuffle`.
+        let mine = std::mem::take(&mut by_owner[self.rank]);
+        let outgoing: Vec<Vec<u8>> = by_owner
+            .iter()
+            .enumerate()
+            .map(|(dst, shard)| if dst == self.rank { Vec::new() } else { shard.to_bytes() })
+            .collect();
+        let incoming = comm.all_to_all(outgoing);
+
+        // 4. Merge own + received through the budgeted external merger.
+        let mut merger: ExternalMerger<K, V> = ExternalMerger::new(
+            threshold,
+            Arc::clone(disk) as Arc<dyn BlockStore>,
+            Arc::clone(disk.counters()),
+            fresh_spill_namespace(),
+        );
+        for (k, v) in mine {
+            merger.insert(k, v, &reduce);
+        }
+        for (src, buf) in incoming.into_iter().enumerate() {
+            if src == self.rank {
+                continue;
+            }
+            let shard: Vec<(K, V)> = Vec::<(K, V)>::from_bytes(&buf).expect("dist shuffle decode");
+            for (k, v) in shard {
+                merger.insert(k, v, &reduce);
+            }
+        }
+        merger.finish(&reduce)
+    }
 }
 
 impl<V: MapValue> DistHashMap<String, V> {
@@ -289,6 +369,46 @@ mod tests {
         });
         for (av, bv) in results {
             assert_eq!(av, bv);
+        }
+    }
+
+    #[test]
+    fn shuffle_external_matches_in_memory_shuffle() {
+        use crate::storage::DiskTier;
+        let words = ["a", "b", "a", "c", "a", "b"];
+        for combine in [CombineMode::Eager, CombineMode::None] {
+            // Thresholds bracketing the spectrum: spill-everything and
+            // never-spill must both match the plain shuffle.
+            for threshold in [0u64, u64::MAX] {
+                let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+                    let map: DistHashMap<String, u64> =
+                        DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, combine);
+                    for w in words {
+                        map.upsert(0, w.to_string(), 1, reducer::sum);
+                    }
+                    let disk = Arc::new(DiskTier::new(None));
+                    let merged = map.shuffle_external(comm, reducer::sum, threshold, &disk);
+                    let spilled = disk.counters().snapshot().spilled_bytes;
+                    (merged, spilled)
+                });
+                let mut spilled_total = 0;
+                let merged: HashMap<String, u64> = results
+                    .into_iter()
+                    .flat_map(|(entries, spilled)| {
+                        spilled_total += spilled;
+                        entries
+                    })
+                    .collect();
+                assert_eq!(merged.len(), 3, "{combine:?} threshold={threshold}");
+                assert_eq!(merged["a"], 6);
+                assert_eq!(merged["b"], 4);
+                assert_eq!(merged["c"], 2);
+                if threshold == 0 {
+                    assert!(spilled_total > 0, "threshold 0 must spill ({combine:?})");
+                } else {
+                    assert_eq!(spilled_total, 0, "unbounded never spills ({combine:?})");
+                }
+            }
         }
     }
 

@@ -31,8 +31,8 @@
 //!   [`run_workload_str`], available to [`StrWorkload`]s, and stands in
 //!   for TCMalloc's cheap small allocations (see DESIGN.md §2).
 
-use std::any::Any;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -41,9 +41,9 @@ use crate::cluster::{spawn_on_fabric, Comm, Fabric, FailurePlan, NetModel};
 use crate::concurrent::{CachePolicy, MapKey, MapValue};
 use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
-use crate::engines::spark::HeapSize;
 use crate::hash::HashKind;
 use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
+use crate::storage::{DiskTier, HeapSize, StorageStats};
 use crate::util::pool::{self, Schedule};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
@@ -80,6 +80,11 @@ pub struct BlazeConf {
     pub cache_policy: CachePolicy,
     /// Whole-job reruns allowed on an injected node failure (no FT).
     pub max_job_reruns: usize,
+    /// Directory the bounded-memory exchange spills under (`None` = the
+    /// system temp dir). Whether a stage spills at all — and beyond how
+    /// many in-flight bytes — was decided at plan time
+    /// ([`StagePlan::spill_threshold`]); this conf only places the files.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for BlazeConf {
@@ -94,6 +99,7 @@ impl Default for BlazeConf {
             key_path: KeyPath::ZeroAlloc,
             cache_policy: CachePolicy::default(),
             max_job_reruns: 3,
+            spill_dir: None,
         }
     }
 }
@@ -146,6 +152,9 @@ pub struct WorkloadReport<K, V> {
     /// Map-phase emissions.
     pub records: u64,
     pub reruns: usize,
+    /// Bounded-memory exchange activity (spilled runs + disk traffic);
+    /// all zeros when the stage planned no spill.
+    pub storage: StorageStats,
 }
 
 /// Error when injected failures exceed the rerun budget.
@@ -265,13 +274,16 @@ pub fn run_workload_cached<W: CacheableWorkload>(
                             // another shape's block.
                             splits: conf.nnodes as u64,
                         };
-                        match cache.get_typed(&key) {
+                        // Encoded entry point: with a disk tier attached
+                        // to the cache, evicted blocks demote to disk and
+                        // this lookup promotes them back instead of
+                        // reparsing.
+                        match cache.get_encoded::<Vec<W::Parsed>>(&key) {
                             Some(hit) => hit,
                             None => {
                                 let block = reparse();
                                 let bytes = block.heap_bytes() as u64;
-                                let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&block);
-                                cache.put(key, erased, bytes);
+                                cache.put_encoded(key, Arc::clone(&block), bytes);
                                 block
                             }
                         }
@@ -439,6 +451,14 @@ struct NodeOutcome<K, V> {
     failed: bool,
 }
 
+/// Per-job context of the bounded-memory exchange: one disk tier shared
+/// by every node's merger (runs are namespaced per merger, so they never
+/// collide), whose counters become the job's `storage` row.
+struct SpillCtx {
+    threshold: u64,
+    disk: Arc<DiskTier>,
+}
+
 /// The engine's **single plan-execution path**, shared by every workload
 /// and every wrapper: the whole-job rerun loop around single attempts of
 /// map → exchange → per-node finalize. Whether the exchange runs was
@@ -454,20 +474,38 @@ pub fn run_plan<K, V, R, M, F>(
     finalize_shard: F,
 ) -> Result<WorkloadReport<K, V>, JobFailed>
 where
-    K: MapKey + Encode + Decode,
-    V: MapValue + Encode + Decode,
+    K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
+    V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
     M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
 {
     let skip_shuffle = !stage.runs_exchange();
+    // The bounded-memory exchange, as planned: one disk tier for the
+    // whole job (dropped — files and all — when the report is built).
+    let spill = stage.spill_threshold.filter(|_| !skip_shuffle).map(|threshold| SpillCtx {
+        threshold,
+        disk: Arc::new(DiskTier::new(conf.spill_dir.clone())),
+    });
     let mut reruns = 0usize;
     let job_sw = Stopwatch::start(); // total across attempts: failures cost time
     loop {
-        match try_attempt(conf, failures, skip_shuffle, reduce, &map_node, &finalize_shard) {
+        match try_attempt(
+            conf,
+            failures,
+            skip_shuffle,
+            spill.as_ref(),
+            reduce,
+            &map_node,
+            &finalize_shard,
+        ) {
             Ok(mut report) => {
                 report.reruns = reruns;
                 report.wall_secs = job_sw.elapsed_secs();
+                report.storage =
+                    spill.as_ref().map_or_else(StorageStats::default, |s| {
+                        s.disk.counters().snapshot()
+                    });
                 return Ok(report);
             }
             Err(()) if reruns < conf.max_job_reruns => reruns += 1,
@@ -483,13 +521,14 @@ fn try_attempt<K, V, R, M, F>(
     conf: &BlazeConf,
     failures: &FailurePlan,
     skip_shuffle: bool,
+    spill: Option<&SpillCtx>,
     reduce: R,
     map_node: &M,
     finalize_shard: &F,
 ) -> Result<WorkloadReport<K, V>, ()>
 where
-    K: MapKey + Encode + Decode,
-    V: MapValue + Encode + Decode,
+    K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
+    V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
     M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
@@ -515,19 +554,26 @@ where
 
         // ---- Shuffle phase ----
         failed |= failures.should_fail_node(comm.rank, 1);
-        if skip_shuffle {
+        let entries = if skip_shuffle {
             // Zero-shuffle fast path: every key was declared globally
             // unique, so nothing needs co-location — settle thread caches
             // locally and put zero bytes on the fabric.
             map.settle_local(reduce);
+            map.to_vec_local()
+        } else if let Some(sp) = spill {
+            // Bounded-memory exchange: the reduce-side merge runs through
+            // an external merger that spills sorted runs beyond the
+            // planned budget.
+            map.shuffle_external(comm, reduce, sp.threshold, &sp.disk)
         } else {
             map.shuffle(comm, reduce);
-        }
+            map.to_vec_local()
+        };
         let shuffle_secs = sw.elapsed_secs();
         let wall_secs = job_sw.elapsed_secs();
 
         NodeOutcome {
-            entries: finalize_shard(map.to_vec_local()),
+            entries: finalize_shard(entries),
             map_secs,
             shuffle_secs,
             wall_secs,
@@ -560,6 +606,7 @@ where
         shuffle_bytes: fabric.total_bytes_sent(),
         records,
         reruns: 0,
+        storage: StorageStats::default(), // filled by `run_plan`
     })
 }
 

@@ -6,16 +6,22 @@
 //! record vectors (the native-engine ablation).
 //!
 //! With `fault_tolerance` on, serialized blocks are additionally persisted
-//! to a per-context temp directory — real disk I/O, the same durability
+//! through the context's [`DiskTier`] — real disk I/O, the same durability
 //! cost Spark pays so that reduce-task retries and lost executors can
-//! re-fetch map output without recomputing the map stage.
+//! re-fetch map output without recomputing the map stage. Persisting
+//! through the shared tier (rather than ad-hoc `File::create` calls, the
+//! pre-storage-subsystem design) means the bytes are checksummed, land in
+//! the job's [`StorageStats`](crate::storage::StorageStats) row, and share
+//! the namespace map in [`crate::storage`]
+//! (`NS_SHUFFLE_BLOCKS + shuffle_id`).
 
 use std::any::Any;
 use std::collections::HashMap;
-use std::io::Write;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::cache::CacheKey;
+use crate::storage::{BlockStore, DiskTier, NS_SHUFFLE_BLOCKS};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BlockId {
@@ -52,28 +58,33 @@ pub struct Block {
     pub records: u64,
 }
 
-pub struct BlockStore {
+/// In-memory shuffle blocks + optional write-through persistence via the
+/// context's disk tier.
+pub struct ShuffleBlockStore {
     blocks: Mutex<HashMap<BlockId, Block>>,
-    /// Root of the persisted-shuffle directory, if fault tolerance is on.
-    persist_dir: Option<PathBuf>,
+    /// Disk tier serialized blocks are persisted through (fault
+    /// tolerance on); `None` = memory-only blocks.
+    persist: Option<Arc<DiskTier>>,
     next_shuffle_id: AtomicU64,
 }
 
-impl BlockStore {
-    pub fn new(persist: bool) -> Self {
-        let persist_dir = persist.then(|| {
-            let dir = std::env::temp_dir().join(format!(
-                "blaze_spark_shuffle_{}_{:x}",
-                std::process::id(),
-                &*Box::new(0u8) as *const u8 as usize, // unique-ish per store
-            ));
-            std::fs::create_dir_all(&dir).expect("create shuffle dir");
-            dir
-        });
+impl ShuffleBlockStore {
+    pub fn new(persist: Option<Arc<DiskTier>>) -> Self {
         Self {
             blocks: Mutex::new(HashMap::new()),
-            persist_dir,
+            persist,
             next_shuffle_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The disk-tier key of one shuffle block (see the namespace map in
+    /// [`crate::storage`]).
+    fn block_key(id: &BlockId) -> CacheKey {
+        CacheKey {
+            namespace: NS_SHUFFLE_BLOCKS + id.shuffle as u64,
+            generation: 0,
+            partition: ((id.map_part as u64) << 32) | id.reduce_part as u64,
+            splits: 0,
         }
     }
 
@@ -82,19 +93,17 @@ impl BlockStore {
     }
 
     pub fn persists(&self) -> bool {
-        self.persist_dir.is_some()
+        self.persist.is_some()
     }
 
-    /// Store a block; persists serialized blocks to disk when enabled.
-    /// Returns the bytes written to disk (0 if not persisted).
+    /// Store a block; persists serialized blocks through the disk tier
+    /// when enabled. Returns the bytes written to disk (0 if not
+    /// persisted).
     pub fn put(&self, id: BlockId, block: Block) -> u64 {
         let mut disk_bytes = 0u64;
-        if let (Some(dir), BlockData::Bytes(bytes)) = (&self.persist_dir, &block.data) {
-            let path = dir.join(format!("s{}_m{}_r{}.blk", id.shuffle, id.map_part, id.reduce_part));
-            let mut f = std::fs::File::create(path).expect("create shuffle block file");
-            f.write_all(bytes).expect("persist shuffle block");
-            f.flush().expect("flush shuffle block");
-            disk_bytes = bytes.len() as u64;
+        if let (Some(disk), BlockData::Bytes(bytes)) = (&self.persist, &block.data) {
+            disk_bytes =
+                disk.write(Self::block_key(&id), bytes).expect("persist shuffle block");
         }
         self.blocks.lock().unwrap().insert(id, block);
         disk_bytes
@@ -124,7 +133,7 @@ impl BlockStore {
     }
 
     /// Drop every block owned by `node` (simulated executor loss). Returns
-    /// how many blocks disappeared. Persisted files are removed too — the
+    /// how many blocks disappeared. Persisted copies are removed too — the
     /// machine is gone, disk and all.
     pub fn remove_owned_by(&self, node: usize) -> usize {
         let mut map = self.blocks.lock().unwrap();
@@ -135,27 +144,23 @@ impl BlockStore {
             .collect();
         for id in &victims {
             map.remove(id);
-            if let Some(dir) = &self.persist_dir {
-                let _ = std::fs::remove_file(dir.join(format!(
-                    "s{}_m{}_r{}.blk",
-                    id.shuffle, id.map_part, id.reduce_part
-                )));
+            if let Some(disk) = &self.persist {
+                disk.delete(&Self::block_key(id));
             }
         }
         victims.len()
     }
 
-    /// Drop all blocks of a shuffle (job restart / cleanup).
+    /// Drop all blocks (job restart / cleanup). Only this store's keys
+    /// are retired from the (possibly shared) disk tier.
     pub fn clear(&self) {
-        self.blocks.lock().unwrap().clear();
-        if let Some(dir) = &self.persist_dir {
-            // Best-effort cleanup of persisted files.
-            if let Ok(entries) = std::fs::read_dir(dir) {
-                for e in entries.flatten() {
-                    let _ = std::fs::remove_file(e.path());
-                }
+        let mut map = self.blocks.lock().unwrap();
+        if let Some(disk) = &self.persist {
+            for id in map.keys() {
+                disk.delete(&Self::block_key(id));
             }
         }
+        map.clear();
     }
 
     pub fn len(&self) -> usize {
@@ -164,14 +169,6 @@ impl BlockStore {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
-    }
-}
-
-impl Drop for BlockStore {
-    fn drop(&mut self) {
-        if let Some(dir) = &self.persist_dir {
-            let _ = std::fs::remove_dir_all(dir);
-        }
     }
 }
 
@@ -190,7 +187,7 @@ mod tests {
 
     #[test]
     fn put_fetch_bytes() {
-        let store = BlockStore::new(false);
+        let store = ShuffleBlockStore::new(None);
         store.put(bid(0, 1), Block { owner_node: 0, data: BlockData::Bytes(vec![1, 2, 3]), records: 3 });
         let (owner, data, records) = store.fetch(bid(0, 1)).unwrap();
         assert_eq!(owner, 0);
@@ -205,7 +202,7 @@ mod tests {
 
     #[test]
     fn put_fetch_typed_is_single_consumer() {
-        let store = BlockStore::new(false);
+        let store = ShuffleBlockStore::new(None);
         let payload: Vec<(String, u64)> = vec![("a".into(), 1)];
         store.put(
             bid(1, 0),
@@ -236,25 +233,40 @@ mod tests {
 
     #[test]
     fn missing_block_is_none() {
-        let store = BlockStore::new(false);
+        let store = ShuffleBlockStore::new(None);
         assert!(store.fetch(bid(9, 9)).is_none());
     }
 
     #[test]
-    fn persistence_writes_files() {
-        let store = BlockStore::new(true);
-        let disk = store.put(
+    fn persistence_writes_through_the_disk_tier() {
+        let disk = Arc::new(DiskTier::new(None));
+        let store = ShuffleBlockStore::new(Some(Arc::clone(&disk)));
+        let written = store.put(
             bid(0, 0),
             Block { owner_node: 0, data: BlockData::Bytes(vec![0u8; 100]), records: 10 },
         );
-        assert_eq!(disk, 100);
+        assert_eq!(written, 100);
+        assert_eq!(disk.bytes_stored(), 100, "block persisted to the tier");
+        assert_eq!(disk.counters().snapshot().disk_bytes_written, 100);
         store.clear();
         assert!(store.is_empty());
+        assert_eq!(disk.bytes_stored(), 0, "clear retires the persisted copies");
+    }
+
+    #[test]
+    fn executor_loss_removes_persisted_copies() {
+        let disk = Arc::new(DiskTier::new(None));
+        let store = ShuffleBlockStore::new(Some(Arc::clone(&disk)));
+        store.put(bid(0, 0), Block { owner_node: 0, data: BlockData::Bytes(vec![1; 10]), records: 1 });
+        store.put(bid(1, 1), Block { owner_node: 1, data: BlockData::Bytes(vec![2; 20]), records: 1 });
+        assert_eq!(store.remove_owned_by(1), 1);
+        assert_eq!(store.len(), 1);
+        assert_eq!(disk.bytes_stored(), 10, "only the lost node's copies vanish");
     }
 
     #[test]
     fn shuffle_ids_are_fresh() {
-        let store = BlockStore::new(false);
+        let store = ShuffleBlockStore::new(None);
         let a = store.fresh_shuffle_id();
         let b = store.fresh_shuffle_id();
         assert_ne!(a, b);

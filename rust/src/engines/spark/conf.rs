@@ -12,6 +12,7 @@
 //! | `map_side_combine` | per-partition combiner at shuffle write | contrast with Blaze's *continuous* combine | A3 |
 //! | `task_launch_overhead` | driver → executor task dispatch latency | (implementation overhead) | — |
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::cache::CacheBudget;
@@ -62,6 +63,20 @@ pub struct SparkConf {
     /// exact mapping). Ignored when the context is built over an injected
     /// shared cache.
     pub cache_budget: CacheBudget,
+    /// Bounded-memory exchange (`spark.shuffle.spill` +
+    /// `ExternalAppendOnlyMap`): reduce-side merges beyond this many
+    /// in-flight bytes sort-and-spill runs to the context's disk tier
+    /// and merge externally. This is the default for direct
+    /// `Rdd::reduce_by_key` use; the engine's plan path executes the
+    /// per-stage threshold the planner recorded
+    /// ([`crate::mapreduce::StagePlan::spill_threshold`]) instead. Also
+    /// arms the persist cache's disk tier (`MEMORY_AND_DISK` instead of
+    /// `MEMORY_ONLY`) when the context builds its own cache. `None` =
+    /// the unbounded in-memory exchange.
+    pub spill_threshold: Option<u64>,
+    /// Directory for spill files and persisted shuffle blocks (`None` =
+    /// the system temp dir).
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for SparkConf {
@@ -81,6 +96,8 @@ impl Default for SparkConf {
             max_task_retries: 4,
             max_job_restarts: 3,
             cache_budget: CacheBudget::Unbounded,
+            spill_threshold: None,
+            spill_dir: None,
         }
     }
 }
@@ -109,6 +126,8 @@ impl SparkConf {
             max_task_retries: 1,
             max_job_restarts: 3,
             cache_budget: CacheBudget::Unbounded,
+            spill_threshold: None,
+            spill_dir: None,
         }
     }
 
@@ -130,6 +149,8 @@ impl SparkConf {
             max_task_retries: 4,
             max_job_restarts: 3,
             cache_budget: CacheBudget::Unbounded,
+            spill_threshold: None,
+            spill_dir: None,
         }
     }
 }

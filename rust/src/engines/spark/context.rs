@@ -20,23 +20,33 @@ use std::sync::{Arc, Mutex};
 
 use crate::cache::PartitionCache;
 use crate::cluster::FailurePlan;
+use crate::storage::{DiskTier, StorageCounters, StorageStats};
 use crate::util::pool::{self, Schedule};
 
 use super::conf::SparkConf;
-use super::block::BlockStore;
+use super::block::ShuffleBlockStore;
 use super::jvm::GcSim;
 use super::metrics::SparkMetrics;
 use super::rdd::{ComputeFn, JobError, Rdd};
 
 pub struct CtxInner {
     pub conf: SparkConf,
-    pub store: BlockStore,
+    pub store: ShuffleBlockStore,
     pub metrics: SparkMetrics,
     pub gc: GcSim,
     pub failures: std::sync::Arc<FailurePlan>,
     /// Storage pool for `Rdd::persist`/`cache` (sized by
-    /// `conf.cache_budget` unless a shared instance was injected).
+    /// `conf.cache_budget` unless a shared instance was injected; gets a
+    /// disk tier — `MEMORY_AND_DISK` — when `conf.spill_threshold` is
+    /// set).
     pub cache: Arc<PartitionCache>,
+    /// The context's disk tier: persisted shuffle blocks and
+    /// shuffle-spill runs write through it, so the job's disk traffic
+    /// lands in one counters cell.
+    pub disk: Arc<DiskTier>,
+    /// Spill-side counters of the context-*owned* cache (`None` when the
+    /// cache was injected — its owner accounts that activity).
+    cache_storage: Option<Arc<StorageCounters>>,
 }
 
 /// Namespace allocator for ad-hoc `persist()` calls. Process-wide, not
@@ -71,21 +81,41 @@ impl SparkContext {
     /// Like [`with_failures`](Self::with_failures) with a shared plan
     /// (used by the unified `wordcount` front-end).
     pub fn with_failures_arc(conf: SparkConf, failures: Arc<FailurePlan>) -> Self {
-        let cache = Arc::new(PartitionCache::new(conf.cache_budget));
-        Self::with_shared_cache(conf, failures, cache)
+        // With the spill knob set, the context-owned cache gets its own
+        // disk tier: persist becomes MEMORY_AND_DISK instead of the
+        // lossy MEMORY_ONLY evict+recompute.
+        let (cache, cache_storage) = if conf.spill_threshold.is_some() {
+            let cache_disk = Arc::new(DiskTier::new(conf.spill_dir.clone()));
+            let cell = Arc::clone(cache_disk.counters());
+            (Arc::new(PartitionCache::with_spill(conf.cache_budget, cache_disk)), Some(cell))
+        } else {
+            (Arc::new(PartitionCache::new(conf.cache_budget)), None)
+        };
+        Self::build(conf, failures, cache, cache_storage)
     }
 
     /// Build a context over an externally owned [`PartitionCache`]
     /// (ignoring `conf.cache_budget`). The iterative driver hands every
     /// round's context the same cache so persisted partitions outlive a
-    /// single job.
+    /// single job. The injected cache's storage activity is accounted by
+    /// its owner, not by [`SparkContext::storage_stats`].
     pub fn with_shared_cache(
         conf: SparkConf,
         failures: Arc<FailurePlan>,
         cache: Arc<PartitionCache>,
     ) -> Self {
+        Self::build(conf, failures, cache, None)
+    }
+
+    fn build(
+        conf: SparkConf,
+        failures: Arc<FailurePlan>,
+        cache: Arc<PartitionCache>,
+        cache_storage: Option<Arc<StorageCounters>>,
+    ) -> Self {
         assert!(conf.nnodes > 0 && conf.threads_per_node > 0);
-        let store = BlockStore::new(conf.fault_tolerance);
+        let disk = Arc::new(DiskTier::new(conf.spill_dir.clone()));
+        let store = ShuffleBlockStore::new(conf.fault_tolerance.then(|| Arc::clone(&disk)));
         let gc = GcSim::new(conf.gc_model);
         Self {
             inner: Arc::new(CtxInner {
@@ -95,8 +125,22 @@ impl SparkContext {
                 gc,
                 failures,
                 cache,
+                disk,
+                cache_storage,
             }),
         }
+    }
+
+    /// This context's storage-hierarchy activity: shuffle spill +
+    /// persisted shuffle blocks, plus the context-owned cache's
+    /// demotions/promotions when it has one. Contexts are per-job, so
+    /// the snapshot is the job's total.
+    pub fn storage_stats(&self) -> StorageStats {
+        let mut stats = self.inner.disk.counters().snapshot();
+        if let Some(cell) = &self.inner.cache_storage {
+            stats = stats.merged(&cell.snapshot());
+        }
+        stats
     }
 
     pub fn inner(&self) -> &CtxInner {

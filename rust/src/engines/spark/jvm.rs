@@ -78,47 +78,16 @@ impl Decode for JvmWord {
 }
 
 /// Heap-footprint estimate for GC accounting — what each record "costs"
-/// the JVM allocator when materialized as objects.
-pub trait HeapSize {
-    fn heap_bytes(&self) -> usize;
-}
-
-impl HeapSize for String {
-    #[inline]
-    fn heap_bytes(&self) -> usize {
-        self.len() + 24
-    }
-}
+/// the JVM allocator when materialized as objects. The trait itself now
+/// lives in the storage subsystem (the cache, the spill paths, and this
+/// engine all share one estimator); re-exported here so
+/// `engines::spark::HeapSize` keeps resolving.
+pub use crate::storage::HeapSize;
 
 impl HeapSize for JvmWord {
     #[inline]
     fn heap_bytes(&self) -> usize {
         JvmWord::heap_bytes(self)
-    }
-}
-
-macro_rules! impl_heap_prim {
-    ($($t:ty),*) => {$(
-        impl HeapSize for $t {
-            #[inline]
-            fn heap_bytes(&self) -> usize {
-                16 // boxed primitive: header + value
-            }
-        }
-    )*};
-}
-impl_heap_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, bool);
-
-impl<A: HeapSize, B: HeapSize> HeapSize for (A, B) {
-    #[inline]
-    fn heap_bytes(&self) -> usize {
-        self.0.heap_bytes() + self.1.heap_bytes() + 16 // Tuple2 header
-    }
-}
-
-impl<T: HeapSize> HeapSize for Vec<T> {
-    fn heap_bytes(&self) -> usize {
-        24 + self.iter().map(HeapSize::heap_bytes).sum::<usize>()
     }
 }
 

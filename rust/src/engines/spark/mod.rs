@@ -107,7 +107,12 @@ where
     }
     let pairs = pairs.expect("a stage needs at least one input source");
     if stage.runs_exchange() {
-        pairs.reduce_by_key(reduce, partitions).map_partitions(finalize_shard).collect()
+        // The stage cut honors the *planned* spill budget — the conf's
+        // threshold is only the default for direct RDD-API use.
+        pairs
+            .reduce_by_key_spilled(reduce, partitions, stage.spill_threshold)
+            .map_partitions(finalize_shard)
+            .collect()
     } else {
         pairs.map_partitions(finalize_shard).collect()
     }

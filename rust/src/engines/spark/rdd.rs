@@ -26,6 +26,7 @@ use std::time::Instant;
 use crate::cache::CacheKey;
 use crate::concurrent::MapKey;
 use crate::hash::{bucket_of, HashKind};
+use crate::storage::{fresh_spill_namespace, BlockStore, ExternalMerger};
 use crate::util::ser::{Decode, Encode};
 
 use super::block::{Block, BlockData, BlockId, FetchedData};
@@ -87,13 +88,14 @@ pub trait StageRunner: Send + Sync {
     fn reset(&self);
 }
 
-/// Keys that can cross a shuffle boundary.
+/// Keys that can cross a shuffle boundary (`Ord` so the bounded-memory
+/// exchange can sort spill runs).
 pub trait ShuffleKey:
-    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Send + Sync + 'static
+    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static
 {
 }
-impl<T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Send + Sync + 'static> ShuffleKey
-    for T
+impl<T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static>
+    ShuffleKey for T
 {
 }
 
@@ -250,15 +252,18 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     }
 }
 
-impl<T: Clone + HeapSize + Send + Sync + 'static> Rdd<T> {
+impl<T: Clone + HeapSize + Encode + Decode + Send + Sync + 'static> Rdd<T> {
     /// Spark's `persist()`: materialized partitions go into the context's
     /// [`PartitionCache`](crate::cache::PartitionCache) (size-aware, LRU,
     /// memory-budgeted — see that module for the `spark.memory.fraction`
     /// mapping). A later compute of the same partition is served from
-    /// memory; when the entry was **evicted** (or rejected by the budget),
-    /// the partition is recomputed from its narrow lineage chain — exactly
-    /// Spark's `MEMORY_ONLY` storage-level contract. Entry sizes are
-    /// `HeapSize` estimates, mirroring Spark's `SizeEstimator`.
+    /// memory; when the entry is in **no tier** (evicted with no disk
+    /// tier attached, or rejected by the budget), the partition is
+    /// recomputed from its narrow lineage chain — Spark's `MEMORY_ONLY`
+    /// storage-level contract. With a disk tier attached to the cache
+    /// (`spill_threshold` set), evicted partitions demote to disk and
+    /// promote back on access instead — `MEMORY_AND_DISK`. Entry sizes
+    /// are `HeapSize` estimates, mirroring Spark's `SizeEstimator`.
     pub fn persist(&self) -> Rdd<T> {
         self.persist_keyed(self.ctx.fresh_persist_namespace(), 0)
     }
@@ -284,16 +289,18 @@ impl<T: Clone + HeapSize + Send + Sync + 'static> Rdd<T> {
                 return parent(tc, p);
             }
             let key = CacheKey { namespace, generation, partition: p as u64, splits };
-            if let Some(hit) = tc.inner.cache.get_typed::<Vec<T>>(&key) {
+            // Encoded lookup: falls through to the disk tier (promoting
+            // demoted partitions) when the cache has one.
+            if let Some(hit) = tc.inner.cache.get_encoded::<Vec<T>>(&key) {
                 return (*hit).clone();
             }
-            // Miss (never stored, evicted, or over-budget): recompute from
-            // lineage, then offer the fresh partition back to the store —
-            // but only clone it when the budget could actually admit it.
+            // Miss in every tier: recompute from lineage, then offer the
+            // fresh partition back to the store — but only clone it when
+            // some tier could actually admit it.
             let out = parent(tc, p);
             let bytes = out.heap_bytes() as u64;
             if tc.inner.cache.fits(bytes) {
-                tc.inner.cache.put(key, Arc::new(out.clone()), bytes);
+                tc.inner.cache.put_encoded(key, Arc::new(out.clone()), bytes);
             }
             out
         });
@@ -310,11 +317,33 @@ impl<T: Clone + HeapSize + Send + Sync + 'static> Rdd<T> {
 impl<K: ShuffleKey, V: ShuffleVal> Rdd<(K, V)> {
     /// Wide: group by key and fold values with `reduce`. Cuts the lineage:
     /// the receiver becomes a map stage (shuffle write), the returned RDD
-    /// reads shuffled blocks (shuffle fetch + merge).
+    /// reads shuffled blocks (shuffle fetch + merge). The reduce-side
+    /// merge is memory-bounded by the context conf's `spill_threshold`
+    /// (the direct-RDD-API default; the job layer's plan path passes the
+    /// stage's planned threshold via
+    /// [`reduce_by_key_spilled`](Self::reduce_by_key_spilled) instead).
     pub fn reduce_by_key(
         &self,
         reduce: fn(&mut V, V),
         num_out_partitions: usize,
+    ) -> Rdd<(K, V)> {
+        self.reduce_by_key_spilled(
+            reduce,
+            num_out_partitions,
+            self.ctx.conf().spill_threshold,
+        )
+    }
+
+    /// [`reduce_by_key`](Self::reduce_by_key) with an explicit
+    /// bounded-memory budget for the reduce-side merge — how the engine's
+    /// plan path honors
+    /// [`crate::mapreduce::StagePlan::spill_threshold`]: the spill
+    /// decision made at plan time, not the conf, governs plan execution.
+    pub(crate) fn reduce_by_key_spilled(
+        &self,
+        reduce: fn(&mut V, V),
+        num_out_partitions: usize,
+        spill_threshold: Option<u64>,
     ) -> Rdd<(K, V)> {
         assert!(num_out_partitions > 0);
         let shuffle_id = self.ctx.inner().store.fresh_shuffle_id();
@@ -326,6 +355,7 @@ impl<K: ShuffleKey, V: ShuffleVal> Rdd<(K, V)> {
             parent_compute: Arc::clone(&self.compute),
             parent_upstream: self.upstream.clone(),
             reduce,
+            spill_threshold,
             done: AtomicBool::new(false),
         });
 
@@ -369,16 +399,57 @@ pub(crate) struct ShuffleDep<K: ShuffleKey, V: ShuffleVal> {
     pub parent_compute: ComputeFn<(K, V)>,
     pub parent_upstream: Vec<Arc<dyn StageRunner>>,
     pub reduce: fn(&mut V, V),
+    /// Bounded-memory budget of the reduce-side merge (from the compiled
+    /// stage on the plan path, from the conf for direct RDD use).
+    pub spill_threshold: Option<u64>,
     pub done: AtomicBool,
+}
+
+/// Reduce-side accumulator: the in-memory map, or the bounded-memory
+/// external merger when the conf sets a spill threshold.
+enum ReduceAcc<K: ShuffleKey, V: ShuffleVal> {
+    Mem(HashMap<K, V>),
+    External(ExternalMerger<K, V>),
+}
+
+impl<K: ShuffleKey, V: ShuffleVal> ReduceAcc<K, V> {
+    fn insert(&mut self, k: K, v: V, reduce: fn(&mut V, V)) {
+        match self {
+            ReduceAcc::Mem(map) => match map.entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => reduce(e.get_mut(), v),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+            },
+            ReduceAcc::External(merger) => merger.insert(k, v, reduce),
+        }
+    }
+
+    fn finish(self, reduce: fn(&mut V, V)) -> Vec<(K, V)> {
+        match self {
+            ReduceAcc::Mem(map) => map.into_iter().collect(),
+            ReduceAcc::External(merger) => merger.finish(reduce),
+        }
+    }
 }
 
 impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
     /// Reduce-side read: fetch every map partition's block for reduce
-    /// partition `r`, charging network cost for remote blocks, then merge.
+    /// partition `r`, charging network cost for remote blocks, then merge
+    /// — through the bounded-memory external merger when this shuffle's
+    /// `spill_threshold` is set (Spark's `spark.shuffle.spill`).
     fn read_partition(&self, tc: &TaskCtx, r: usize) -> Vec<(K, V)> {
         let inner = tc.inner;
         let conf = &inner.conf;
-        let mut acc: HashMap<K, V> = HashMap::new();
+        let mut acc: ReduceAcc<K, V> = match self.spill_threshold {
+            Some(threshold) => ReduceAcc::External(ExternalMerger::new(
+                threshold,
+                Arc::clone(&inner.disk) as Arc<dyn BlockStore>,
+                Arc::clone(inner.disk.counters()),
+                fresh_spill_namespace(),
+            )),
+            None => ReduceAcc::Mem(HashMap::new()),
+        };
         let read_t0 = Instant::now();
         let mut slept = std::time::Duration::ZERO;
         for m in 0..self.map_partitions {
@@ -442,31 +513,23 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
                 // own heap allocation before merging.
                 for boxed in pairs.into_iter().map(Box::new) {
                     let (k, v) = *boxed;
-                    merge(&mut acc, k, v, self.reduce);
+                    acc.insert(k, v, self.reduce);
                 }
             } else {
                 for (k, v) in pairs {
-                    merge(&mut acc, k, v, self.reduce);
+                    acc.insert(k, v, self.reduce);
                 }
             }
         }
-        // Deser + merge are JVM-executed; exclude the modeled network time.
+        let out = acc.finish(self.reduce);
+        // Deser + merge are JVM-executed; exclude the modeled network
+        // time. Spill I/O wall is deliberately *included*: Spark's spill
+        // path runs through JVM serializer streams
+        // (`DiskBlockObjectWriter`), and the disk counters are shared
+        // across concurrent tasks, so a per-task subtraction would
+        // nondeterministically deduct other tasks' disk time.
         vm_tax(tc, read_t0.elapsed().saturating_sub(slept));
-        return acc.into_iter().collect();
-
-        fn merge<K: Eq + std::hash::Hash, V>(
-            acc: &mut HashMap<K, V>,
-            k: K,
-            v: V,
-            reduce: fn(&mut V, V),
-        ) {
-            match acc.entry(k) {
-                std::collections::hash_map::Entry::Occupied(mut e) => reduce(e.get_mut(), v),
-                std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(v);
-                }
-            }
-        }
+        out
     }
 
     /// Map-side write for one map partition: compute the parent chain,

@@ -27,12 +27,22 @@ pub fn bucket_of(hash: u64, n: usize) -> usize {
     (((hash as u128) * (n as u128)) >> 64) as usize
 }
 
+/// The FNV-1a offset basis — the initial `state` for [`fnv1a_with`].
+pub const FNV1A_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
 /// FNV-1a, 64-bit: simple, decent for short ASCII words, byte-at-a-time.
 #[inline]
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    fnv1a_with(FNV1A_OFFSET, bytes)
+}
+
+/// [`fnv1a`] continuing from `state` — the streaming form (folding
+/// chunks sequentially equals one pass over their concatenation), which
+/// the storage subsystem uses for block checksums.
+#[inline]
+pub fn fnv1a_with(state: u64, bytes: &[u8]) -> u64 {
     const PRIME: u64 = 0x0000_0100_0000_01B3;
-    let mut h = OFFSET;
+    let mut h = state;
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(PRIME);

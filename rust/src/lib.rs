@@ -50,6 +50,19 @@
 //! ride on it as plan-per-round loops, all verified against the serial
 //! fixed-point oracle [`mapreduce::run_iterative_serial`].
 //!
+//! ## The storage hierarchy
+//!
+//! [`storage`] is the tier below all of that: a [`storage::BlockStore`]
+//! abstraction with a checksummed [`storage::DiskTier`], the
+//! [`storage::TieredStore`] that [`cache`]'s partition store now is
+//! (entries demote to disk under memory pressure and promote back on
+//! access), and the bounded-memory exchange
+//! ([`storage::ExternalMerger`]): with a spill threshold set
+//! ([`mapreduce::JobSpec::spill_threshold`], CLI `--spill-threshold`),
+//! reduce shards past the budget sort-and-spill runs to disk and merge
+//! back with a loser tree — bit-identical to the in-memory fold at any
+//! budget. [`storage::StorageStats`] rides in every job report.
+//!
 //! The compute hot-spot additionally has an XLA/PJRT-accelerated path: a
 //! Pallas token-histogram kernel AOT-lowered from JAX at build time and
 //! executed from Rust through [`runtime`].
@@ -68,6 +81,7 @@ pub mod hash;
 pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
+pub mod storage;
 pub mod util;
 pub mod wordcount;
 pub mod workloads;

@@ -131,12 +131,57 @@ fn cluster_opts(cmd: Command) -> Command {
         .opt("tokenizer", Some("paper"), "tokenizer: paper|normalized")
 }
 
+/// The storage-hierarchy knobs (shared by `run` and `plan`).
+fn spill_opts(cmd: Command) -> Command {
+    cmd.opt(
+        "spill-threshold",
+        Some("none"),
+        "bounded-memory exchange: spill sorted runs to disk beyond this many \
+         in-flight bytes per reduce shard (none = unbounded memory); also \
+         disk-backs the partition cache",
+    )
+    .opt("spill-dir", None, "directory for spill files (default: system temp)")
+}
+
+/// `none|off|unbounded|inf` → no budget; anything else parses as bytes.
+fn parse_spill_threshold(raw: &str) -> Result<Option<u64>, String> {
+    match raw.to_ascii_lowercase().as_str() {
+        "none" | "off" | "unbounded" | "inf" => Ok(None),
+        other => blaze::util::cli::parse_bytes(other)
+            .map(Some)
+            .ok_or_else(|| format!("bad --spill-threshold {raw}")),
+    }
+}
+
+/// Apply the spill knobs onto a built spec.
+fn apply_spill(mut spec: JobSpec, args: &Args) -> Result<JobSpec, String> {
+    if let Some(bytes) = parse_spill_threshold(&args.get_str("spill-threshold"))? {
+        spec = spec.spill_threshold(bytes);
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        spec = spec.spill_dir(std::path::PathBuf::from(dir));
+    }
+    Ok(spec)
+}
+
 fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
-    Ok(WordCountJob::new(engine)
+    let mut job = WordCountJob::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
         .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
         .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
-        .tokenizer(Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?))
+        .tokenizer(Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?);
+    // Spill knobs, when this subcommand defines them (`compare`/`fault`
+    // don't): the wordcount facade honors the same budget as the
+    // generic-workload path.
+    if let Some(raw) = args.get("spill-threshold") {
+        if let Some(bytes) = parse_spill_threshold(raw)? {
+            job = job.spill_threshold(bytes);
+        }
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        job = job.spill_dir(std::path::PathBuf::from(dir));
+    }
+    Ok(job)
 }
 
 // ------------------------------------------------------------------ run ----
@@ -172,7 +217,7 @@ fn cmd_run() -> Command {
         .opt("clusters", Some("8"), "kmeans: cluster count")
         .flag("force-shuffle", "run the exchange even for zero-shuffle workloads")
         .flag("verify", "check against the serial reference");
-    corpus_opts(cluster_opts(cmd))
+    corpus_opts(cluster_opts(spill_opts(cmd)))
 }
 
 fn do_run(args: &Args) -> Result<(), String> {
@@ -191,12 +236,20 @@ fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
     let engine = Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?;
     let combine = CombineMode::parse(&args.get_str("combine"))
         .ok_or_else(|| format!("bad --combine {}", args.get_str("combine")))?;
-    Ok(JobSpec::new(engine)
+    let spec = JobSpec::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
         .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
         .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
         .combine(combine)
-        .force_shuffle(args.has_flag("force-shuffle")))
+        .force_shuffle(args.has_flag("force-shuffle"));
+    apply_spill(spec, args)
+}
+
+/// One `storage:` line when anything touched a tier below memory.
+fn print_storage(storage: &blaze::storage::StorageStats) {
+    if !storage.is_zero() {
+        println!("storage: {storage}");
+    }
 }
 
 /// The non-wordcount workloads, through the generic job layer.
@@ -217,6 +270,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run_str(&w, &corpus).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             let mut terms: Vec<(&String, &Vec<u32>)> = r.output.iter().collect();
             terms.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(b.0)));
             println!("\n{} terms; {k} with the most postings:", r.output.len());
@@ -234,6 +288,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run_str(&w, &corpus).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             println!("\ntop {k} words:");
             for (word, count) in &r.output {
                 println!("  {count:>10}  {word}");
@@ -246,6 +301,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             let total: u64 = r.output.iter().map(|(_, n)| n).sum();
             println!("\ntoken length histogram:");
             for (len, n) in &r.output {
@@ -267,6 +323,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run_inputs(&w, &inputs).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             let pairs: u64 = r.output.values().map(|s| s.pairs()).sum();
             let mut keys: Vec<(&String, u64)> =
                 r.output.iter().map(|(k, s)| (k, s.pairs())).collect();
@@ -285,6 +342,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             println!(
                 "\n≈ {} distinct tokens ({}-register sketch; corpus holds {} total)",
                 r.output,
@@ -299,6 +357,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
             let r = spec.run(&w, &corpus).map_err(|e| e.to_string())?;
             println!("{}", r.summary());
             println!("detail: {}", r.detail);
+            print_storage(&r.storage);
             println!(
                 "\n{} lines match {pattern:?} (shuffle bytes: {} — zero-shuffle fast \
                  path unless --force-shuffle); first {k}:",
@@ -319,6 +378,7 @@ fn do_run_workload(name: &str, args: &Args) -> Result<(), String> {
 fn print_chain(r: &ChainReport) {
     println!("{}", r.summary());
     println!("{}", blaze::benchkit::stage_table("stages", &r.stages).to_markdown());
+    print_storage(&r.storage);
 }
 
 /// Sessionization: the two-stage chained pipeline (`--session-gap` splits
@@ -412,6 +472,7 @@ fn print_iterations(r: &IterativeReport) {
             it.cache,
         );
     }
+    print_storage(&r.storage);
 }
 
 /// Verify an iterative run against the fixed-point serial oracle.
@@ -515,6 +576,7 @@ fn do_run_wordcount(args: &Args) -> Result<(), String> {
     let result = job.run(&corpus).map_err(|e| e.to_string())?;
     println!("{}", result.summary());
     println!("detail: {}", result.detail);
+    print_storage(&result.storage);
     let k = args.get_usize("top").map_err(|e| e.to_string())?;
     if k > 0 {
         println!("\ntop {k} words:");
@@ -552,7 +614,7 @@ fn cmd_plan() -> Command {
         "iterative workloads: cache budget (none = every cache point elided)",
     )
     .flag("force-shuffle", "run the exchange even for zero-shuffle workloads");
-    cluster_opts(cmd)
+    cluster_opts(spill_opts(cmd))
 }
 
 /// Placeholder inputs carrying only relation names — all the planner

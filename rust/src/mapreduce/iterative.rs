@@ -35,6 +35,7 @@ use std::sync::Arc;
 
 use crate::cache::{CacheBudget, CacheStats, PartitionCache};
 use crate::engines::Engine;
+use crate::storage::{DiskTier, StorageStats};
 use crate::util::stats::Stopwatch;
 
 use super::{
@@ -127,6 +128,9 @@ pub struct IterationStats {
     pub records: u64,
     /// What this round did to the shared partition cache.
     pub cache: CacheStats,
+    /// The round's storage-hierarchy activity (exchange spill + cache
+    /// demotions/promotions).
+    pub storage: StorageStats,
 }
 
 /// Outcome of [`run_iterative`].
@@ -144,6 +148,8 @@ pub struct IterativeReport {
     pub iters: Vec<IterationStats>,
     /// Cumulative cache stats across all rounds.
     pub cache: CacheStats,
+    /// Cumulative storage-hierarchy activity across all rounds.
+    pub storage: StorageStats,
 }
 
 impl IterativeReport {
@@ -225,13 +231,23 @@ pub fn run_iterative<I: IterativeWorkload>(
     let mut state = w.init_state(inputs);
     check_step_shape(w, w.step(&state).as_ref())?;
 
-    let cache = Arc::new(PartitionCache::new(it.cache_budget));
+    // With the spill knob set, the shared cache gets a disk tier: evicted
+    // parsed splits demote instead of forcing a reparse (disk-backed
+    // persist rather than the PR 3 evict+recompute).
+    let cache = Arc::new(match spec.spill_threshold {
+        Some(_) => PartitionCache::with_spill(
+            it.cache_budget,
+            Arc::new(DiskTier::new(spec.spill_dir.clone())),
+        ),
+        None => PartitionCache::new(it.cache_budget),
+    });
     let mut spec = spec.clone().shared_cache(Arc::clone(&cache));
     let nrels = inputs.len() + 1;
 
     let sw = Stopwatch::start();
     let mut iters = Vec::new();
     let mut converged = false;
+    let mut storage = StorageStats::default();
     for round in 0..it.max_iters {
         // Static relations stay at generation 0; the state relation's
         // content changes every round.
@@ -246,6 +262,7 @@ pub fn run_iterative<I: IterativeWorkload>(
         // parsed state per round (bounded budgets would also LRU them out).
         cache.invalidate_generations_below((nrels - 1) as u64, round as u64);
         let (next, delta) = w.advance(report.output, &state);
+        storage = storage.merged(&report.storage);
         iters.push(IterationStats {
             round,
             delta,
@@ -253,6 +270,7 @@ pub fn run_iterative<I: IterativeWorkload>(
             shuffle_bytes: report.shuffle_bytes,
             records: report.records,
             cache: report.cache,
+            storage: report.storage,
         });
         state = next;
         if delta <= it.tolerance {
@@ -269,6 +287,7 @@ pub fn run_iterative<I: IterativeWorkload>(
         wall_secs: sw.elapsed_secs(),
         iters,
         cache: cache.stats(),
+        storage,
     })
 }
 

@@ -86,6 +86,7 @@ pub use plan::{
 };
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::cache::{CacheStats, PartitionCache};
@@ -94,9 +95,10 @@ use crate::concurrent::{CachePolicy, MapKey, MapValue};
 use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::CombineMode;
 use crate::engines::blaze::{BlazeConf, KeyPath};
-use crate::engines::spark::{HeapSize, SparkConf, SparkContext};
+use crate::engines::spark::{SparkConf, SparkContext};
 use crate::engines::Engine;
 use crate::hash::HashKind;
+use crate::storage::{HeapSize, StorageStats};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::{fmt_bytes, fmt_rate, Stopwatch};
 
@@ -214,7 +216,10 @@ pub trait StrWorkload: Workload<Key = String> {
 /// produced them.
 pub trait CacheableWorkload: Workload {
     /// Parsed form of one record — what the partition cache stores.
-    type Parsed: Clone + Send + Sync + HeapSize + 'static;
+    /// `Encode`/`Decode` so cached splits can **demote to the disk tier**
+    /// under memory pressure and promote back on access (see
+    /// [`crate::storage::TieredStore`]).
+    type Parsed: Clone + Send + Sync + HeapSize + Encode + Decode + 'static;
 
     /// Tokenize one record of relation `rel`; `None` for records that emit
     /// nothing (blank/malformed lines).
@@ -332,6 +337,15 @@ pub struct JobSpec {
     /// `PartitionCache::invalidate_generations_below` (bounded budgets
     /// would also age them out via LRU).
     pub relation_gens: Vec<u64>,
+    /// Bounded-memory exchange: when set, a reduce shard whose in-flight
+    /// bytes exceed this budget sort-and-spills runs to the disk tier
+    /// and finalize merges them externally (see
+    /// [`crate::storage::ExternalMerger`]). Recorded per stage in the
+    /// compiled plan ([`StagePlan::spill_threshold`]); `None` = the
+    /// unbounded in-memory exchange the paper assumes.
+    pub spill_threshold: Option<u64>,
+    /// Directory spill files live under (`None` = the system temp dir).
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl JobSpec {
@@ -350,6 +364,8 @@ impl JobSpec {
             force_shuffle: false,
             cache: None,
             relation_gens: Vec::new(),
+            spill_threshold: None,
+            spill_dir: None,
         }
     }
 
@@ -390,6 +406,21 @@ impl JobSpec {
 
     pub fn force_shuffle(mut self, force: bool) -> Self {
         self.force_shuffle = force;
+        self
+    }
+
+    /// Bound the exchange's in-flight memory: shards beyond `bytes` spill
+    /// sorted runs to disk and merge externally (see
+    /// [`Self::spill_threshold`]). Also arms the partition cache's disk
+    /// tier on the paths that build one from this spec.
+    pub fn spill_threshold(mut self, bytes: u64) -> Self {
+        self.spill_threshold = Some(bytes);
+        self
+    }
+
+    /// Where spill files live (`None` = system temp dir).
+    pub fn spill_dir(mut self, dir: PathBuf) -> Self {
+        self.spill_dir = Some(dir);
         self
     }
 
@@ -459,6 +490,7 @@ impl JobSpec {
         let graph = self.plan_cached(w.as_ref(), inputs);
         let stage = graph.stage(0);
         let before = cache.stats();
+        let before_storage = cache.storage_stats();
         let rels = inputs.line_sets();
         let run = match self.engine {
             Engine::Blaze | Engine::BlazeTcm => {
@@ -485,6 +517,10 @@ impl JobSpec {
         };
         let mut report = self.finish(w, run, inputs);
         report.cache = cache.stats().delta_since(&before);
+        // Exchange spill (engine-side) + cache demotions/promotions
+        // (shared-store side) in one storage row.
+        report.storage =
+            report.storage.merged(&cache.storage_stats().delta_since(&before_storage));
         Ok(report)
     }
 
@@ -542,6 +578,7 @@ impl JobSpec {
             shuffle_bytes: run.shuffle_bytes,
             detail: run.detail,
             cache: CacheStats::default(),
+            storage: run.storage,
             stages,
         }
     }
@@ -560,11 +597,12 @@ impl JobSpec {
             key_path,
             cache_policy: self.cache_policy,
             max_job_reruns: self.max_job_reruns,
+            spill_dir: self.spill_dir.clone(),
         }
     }
 
     pub(crate) fn spark_context(&self) -> SparkContext {
-        let conf = self.spark_overrides.clone().unwrap_or_else(|| {
+        let mut conf = self.spark_overrides.clone().unwrap_or_else(|| {
             let mut c = if self.engine == Engine::SparkStripped {
                 SparkConf::stripped(self.nnodes, self.threads_per_node)
             } else {
@@ -573,6 +611,14 @@ impl JobSpec {
             c.net = self.net;
             c
         });
+        // The spill knobs are job-level: they override whatever the conf
+        // (preset or explicit) carried, but only when actually set.
+        if self.spill_threshold.is_some() {
+            conf.spill_threshold = self.spill_threshold;
+        }
+        if self.spill_dir.is_some() {
+            conf.spill_dir = self.spill_dir.clone();
+        }
         match &self.cache {
             // Share the job-spec cache so persisted partitions survive
             // across the per-round contexts of an iterative run.
@@ -594,6 +640,9 @@ pub struct JobRun<K, V> {
     /// when failure injection forces reruns/retries).
     pub records: u64,
     pub shuffle_bytes: u64,
+    /// Engine-side storage activity (exchange spill, persisted shuffle
+    /// blocks).
+    pub storage: StorageStats,
     pub detail: String,
 }
 
@@ -613,6 +662,11 @@ pub struct JobReport<O> {
     /// the job went through [`JobSpec::run_inputs_cached`] with a cache
     /// attached).
     pub cache: CacheStats,
+    /// Storage-hierarchy activity: exchange spill (sorted runs written +
+    /// merged back), cache demotions/promotions, and raw disk traffic
+    /// (persisted shuffle blocks land here too). All zeros when nothing
+    /// touched a tier below memory.
+    pub storage: StorageStats,
     /// Per-stage rows (records in/out, shuffle bytes, wall per stage).
     /// Single-pass jobs have exactly one; multi-stage pipelines report
     /// through [`ChainReport::stages`] instead.
@@ -716,6 +770,7 @@ fn blaze_job_run<K, V>(r: crate::engines::blaze::WorkloadReport<K, V>) -> JobRun
         wall_secs: r.wall_secs,
         records: r.records,
         shuffle_bytes: r.shuffle_bytes,
+        storage: r.storage,
         detail: format!(
             "map={:.3}s shuffle={:.3}s reruns={}",
             r.map_secs, r.shuffle_secs, r.reruns
@@ -785,6 +840,10 @@ fn spark_job_run<K, V>(
         wall_secs,
         records,
         shuffle_bytes: ctx.metrics().shuffle_bytes_written.load(Relaxed),
+        // Shuffle spill + persisted shuffle blocks + (for contexts that
+        // own their cache) persist demotions — the context is per-job, so
+        // the snapshot is the job's delta.
+        storage: ctx.storage_stats(),
         detail: ctx.metrics().summary(),
     }
 }

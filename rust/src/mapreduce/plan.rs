@@ -43,6 +43,7 @@ use std::sync::Arc;
 
 use crate::cache::CacheStats;
 use crate::engines::Engine;
+use crate::storage::StorageStats;
 use crate::util::stats::Stopwatch;
 
 use super::{
@@ -144,13 +145,18 @@ pub struct StagePlan {
     pub label: String,
     pub exchange: Exchange,
     pub inputs: Vec<StageInput>,
+    /// Bounded-memory exchange, decided at plan time from
+    /// [`JobSpec::spill_threshold`]: reduce shards beyond this many
+    /// in-flight bytes sort-and-spill runs to the disk tier and merge
+    /// externally. `None` = unbounded in-memory exchange.
+    pub spill_threshold: Option<u64>,
 }
 
 impl StagePlan {
     /// A free-standing one-stage plan for the engines' direct entry
     /// points and tests: `nrels` external inputs, the exchange decided
     /// from the workload's declaration, no force-shuffle override, no
-    /// cache points.
+    /// cache points, no spill.
     pub fn single(label: &str, needs_shuffle: bool, nrels: usize) -> StagePlan {
         StagePlan {
             id: 0,
@@ -163,6 +169,7 @@ impl StagePlan {
                     cache: None,
                 })
                 .collect(),
+            spill_threshold: None,
         }
     }
 
@@ -225,6 +232,12 @@ impl StageGraph {
                 out.push_str(&format!("    input:    {}\n", i.describe()));
             }
             out.push_str(&format!("    exchange: {}\n", s.exchange.describe()));
+            if let Some(bytes) = s.spill_threshold {
+                out.push_str(&format!(
+                    "    spill:    external merge beyond {} in-flight\n",
+                    crate::util::stats::fmt_bytes(bytes)
+                ));
+            }
         }
         out
     }
@@ -267,6 +280,7 @@ impl JobSpec {
                 label: w.name().to_string(),
                 exchange: plan_exchange(w.needs_shuffle(), self.force_shuffle),
                 inputs: external_inputs(inputs),
+                spill_threshold: self.spill_threshold,
             }],
         }
     }
@@ -320,6 +334,7 @@ impl JobSpec {
                     label: shape.name.to_string(),
                     exchange: plan_exchange(shape.needs_shuffle, self.force_shuffle),
                     inputs: ins,
+                    spill_threshold: self.spill_threshold,
                 }
             })
             .collect();
@@ -362,6 +377,8 @@ pub struct StageOutcome {
     /// Map-phase emissions.
     pub records: u64,
     pub shuffle_bytes: u64,
+    /// The stage's storage-hierarchy activity (exchange spill etc).
+    pub storage: StorageStats,
     pub wall_secs: f64,
     pub detail: String,
 }
@@ -436,6 +453,7 @@ impl<W: Workload> ChainStage for TypedStage<W> {
             rows,
             records: run.records,
             shuffle_bytes: run.shuffle_bytes,
+            storage: run.storage,
             wall_secs: run.wall_secs,
             detail: run.detail,
         })
@@ -485,6 +503,9 @@ pub struct ChainReport {
     /// Cache activity across stages (all zeros unless a cache was
     /// attached).
     pub cache: CacheStats,
+    /// Storage-hierarchy activity summed across stages (exchange spill,
+    /// demotions, disk traffic).
+    pub storage: StorageStats,
 }
 
 impl ChainReport {
@@ -559,11 +580,13 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
     let mut stats = Vec::new();
     let mut details = Vec::new();
     let (mut records, mut shuffle_bytes) = (0u64, 0u64);
+    let mut storage = StorageStats::default();
     for (i, st) in stages.iter().enumerate() {
         let records_in: u64 = current.relations.iter().map(|r| r.lines.len() as u64).sum();
         let outcome = st.execute(spec, &graph, i, &current)?;
         records += outcome.records;
         shuffle_bytes += outcome.shuffle_bytes;
+        storage = storage.merged(&outcome.storage);
         stats.push(StageStats {
             stage: i,
             label: st.shape().name.to_string(),
@@ -592,6 +615,7 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
         stages: stats,
         detail: details.join(" "),
         cache,
+        storage,
     })
 }
 

@@ -1,0 +1,397 @@
+//! `DiskTier` — the disk tier of the storage hierarchy: checksummed
+//! block files in a per-instance temp directory.
+//!
+//! One `DiskTier` serves one job (or one shared cache): spill runs,
+//! demoted cache entries, and persisted shuffle blocks all write through
+//! the same instance, so the job's disk traffic lands in one
+//! [`StorageCounters`] cell (see the namespace map in the module docs).
+//! The directory is created lazily on the first write — constructing a
+//! tier costs nothing until something actually spills — and removed on
+//! drop (generation-aware cleanup for long-lived tiers goes through
+//! [`BlockStore::delete_generations_below`]).
+//!
+//! File layout: `[payload_len: u64 LE][fnv1a checksum: u64 LE][payload]`.
+//! Full reads verify the checksum; range reads (the external-merge
+//! cursors) accumulate it incrementally and verify at end-of-run against
+//! [`BlockStore::meta`].
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cache::CacheKey;
+
+use super::{checksum, BlockMeta, BlockStore, StorageCounters, CHECKSUM_SEED};
+
+/// Bytes of on-disk header before the payload.
+const HEADER_LEN: u64 = 16;
+
+/// Process-wide uniquifier for tier directories (two tiers in one
+/// process — a job's spill tier and a shared cache's — must not share a
+/// directory even under the same base path).
+static NEXT_DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+struct Index {
+    blocks: HashMap<CacheKey, BlockMeta>,
+    bytes: u64,
+    /// Created lazily on first write; `None` until then.
+    dir: Option<PathBuf>,
+}
+
+/// The disk tier (see module docs). Thread-safe; share as
+/// `Arc<DiskTier>` (or `Arc<dyn BlockStore>`).
+pub struct DiskTier {
+    /// Base directory the tier's own subdirectory is created under
+    /// (`None` = the system temp dir) — the `--spill-dir` knob.
+    base: Option<PathBuf>,
+    index: Mutex<Index>,
+    counters: Arc<StorageCounters>,
+}
+
+impl std::fmt::Debug for DiskTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let index = self.index.lock().unwrap();
+        f.debug_struct("DiskTier")
+            .field("dir", &index.dir)
+            .field("blocks", &index.blocks.len())
+            .field("bytes", &index.bytes)
+            .finish()
+    }
+}
+
+impl DiskTier {
+    /// A tier with its own fresh [`StorageCounters`] cell.
+    pub fn new(base: Option<PathBuf>) -> Self {
+        Self::with_counters(base, Arc::new(StorageCounters::default()))
+    }
+
+    /// A tier recording into an externally owned counters cell.
+    pub fn with_counters(base: Option<PathBuf>, counters: Arc<StorageCounters>) -> Self {
+        Self {
+            base,
+            index: Mutex::new(Index { blocks: HashMap::new(), bytes: 0, dir: None }),
+            counters,
+        }
+    }
+
+    /// The counters cell this tier (and its co-clients) record into.
+    pub fn counters(&self) -> &Arc<StorageCounters> {
+        &self.counters
+    }
+
+    /// The tier's directory, if anything was ever written.
+    pub fn dir(&self) -> Option<PathBuf> {
+        self.index.lock().unwrap().dir.clone()
+    }
+
+    fn file_name(key: &CacheKey) -> String {
+        format!(
+            "ns{:x}-g{}-p{:x}-s{}.blk",
+            key.namespace, key.generation, key.partition, key.splits
+        )
+    }
+
+    /// The directory, creating it on first use.
+    fn ensure_dir(index: &mut Index, base: &Option<PathBuf>) -> std::io::Result<PathBuf> {
+        if let Some(dir) = &index.dir {
+            return Ok(dir.clone());
+        }
+        let parent = base.clone().unwrap_or_else(std::env::temp_dir);
+        let dir = parent.join(format!(
+            "blaze-tier-{}-{}",
+            std::process::id(),
+            NEXT_DIR_ID.fetch_add(1, Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        index.dir = Some(dir.clone());
+        Ok(dir)
+    }
+
+    fn remove_file(index: &Index, key: &CacheKey) {
+        if let Some(dir) = &index.dir {
+            let _ = std::fs::remove_file(dir.join(Self::file_name(key)));
+        }
+    }
+
+    /// Drop every block in the tier (counters are kept). Only safe for
+    /// tiers with a single client — callers sharing a tier retire their
+    /// own keys via [`BlockStore::delete`] /
+    /// [`BlockStore::delete_generations_below`] instead.
+    pub fn clear_all(&self) {
+        let mut index = self.index.lock().unwrap();
+        let victims: Vec<CacheKey> = index.blocks.keys().copied().collect();
+        for key in &victims {
+            index.blocks.remove(key);
+            Self::remove_file(&index, key);
+        }
+        index.bytes = 0;
+    }
+}
+
+impl BlockStore for DiskTier {
+    fn write(&self, key: CacheKey, payload: &[u8]) -> std::io::Result<u64> {
+        let t0 = Instant::now();
+        let meta = BlockMeta {
+            payload_len: payload.len() as u64,
+            checksum: checksum(CHECKSUM_SEED, payload),
+        };
+        let path = {
+            let mut index = self.index.lock().unwrap();
+            let dir = Self::ensure_dir(&mut index, &self.base)?;
+            dir.join(Self::file_name(&key))
+        };
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(&meta.payload_len.to_le_bytes())?;
+        f.write_all(&meta.checksum.to_le_bytes())?;
+        f.write_all(payload)?;
+        f.flush()?;
+        {
+            let mut index = self.index.lock().unwrap();
+            if let Some(old) = index.blocks.insert(key, meta) {
+                index.bytes -= old.payload_len;
+            }
+            index.bytes += meta.payload_len;
+        }
+        self.counters.record_disk_write(payload.len() as u64, t0.elapsed());
+        Ok(meta.payload_len)
+    }
+
+    fn read(&self, key: &CacheKey) -> std::io::Result<Option<Vec<u8>>> {
+        let t0 = Instant::now();
+        let (path, meta) = {
+            let index = self.index.lock().unwrap();
+            let Some(meta) = index.blocks.get(key).copied() else {
+                return Ok(None);
+            };
+            let dir = index.dir.clone().expect("indexed block without a tier dir");
+            (dir.join(Self::file_name(key)), meta)
+        };
+        let mut f = std::fs::File::open(&path)?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        f.read_exact(&mut header)?;
+        let stored_len = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let stored_sum = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        // Validate the (untrusted) on-disk header against the trusted
+        // in-memory index *before* sizing any allocation from it — a
+        // corrupt length must surface as the graceful InvalidData error,
+        // not an OOM.
+        if stored_len != meta.payload_len || stored_sum != meta.checksum {
+            self.counters.record_checksum_failure();
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("block {key:?} has a corrupt header"),
+            ));
+        }
+        let mut payload = Vec::with_capacity(meta.payload_len as usize);
+        f.read_to_end(&mut payload)?;
+        let ok = payload.len() as u64 == meta.payload_len
+            && checksum(CHECKSUM_SEED, &payload) == meta.checksum;
+        if !ok {
+            self.counters.record_checksum_failure();
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("block {key:?} failed checksum verification"),
+            ));
+        }
+        self.counters.record_disk_read(payload.len() as u64, t0.elapsed());
+        Ok(Some(payload))
+    }
+
+    fn read_range(
+        &self,
+        key: &CacheKey,
+        offset: u64,
+        max_len: usize,
+    ) -> std::io::Result<Option<Vec<u8>>> {
+        let t0 = Instant::now();
+        let (path, meta) = {
+            let index = self.index.lock().unwrap();
+            let Some(meta) = index.blocks.get(key).copied() else {
+                return Ok(None);
+            };
+            let dir = index.dir.clone().expect("indexed block without a tier dir");
+            (dir.join(Self::file_name(key)), meta)
+        };
+        if offset >= meta.payload_len {
+            return Ok(Some(Vec::new()));
+        }
+        let want = max_len.min((meta.payload_len - offset) as usize);
+        let mut f = std::fs::File::open(&path)?;
+        f.seek(SeekFrom::Start(HEADER_LEN + offset))?;
+        let mut buf = vec![0u8; want];
+        f.read_exact(&mut buf)?;
+        self.counters.record_disk_read(want as u64, t0.elapsed());
+        Ok(Some(buf))
+    }
+
+    fn meta(&self, key: &CacheKey) -> Option<BlockMeta> {
+        self.index.lock().unwrap().blocks.get(key).copied()
+    }
+
+    fn delete(&self, key: &CacheKey) -> bool {
+        let mut index = self.index.lock().unwrap();
+        match index.blocks.remove(key) {
+            Some(meta) => {
+                index.bytes -= meta.payload_len;
+                Self::remove_file(&index, key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn delete_generations_below(&self, namespace: u64, keep_generation: u64) -> usize {
+        let mut index = self.index.lock().unwrap();
+        let victims: Vec<CacheKey> = index
+            .blocks
+            .keys()
+            .filter(|k| k.namespace == namespace && k.generation < keep_generation)
+            .copied()
+            .collect();
+        for key in &victims {
+            let meta = index.blocks.remove(key).unwrap();
+            index.bytes -= meta.payload_len;
+            Self::remove_file(&index, key);
+        }
+        victims.len()
+    }
+
+    fn len(&self) -> usize {
+        self.index.lock().unwrap().blocks.len()
+    }
+
+    fn bytes_stored(&self) -> u64 {
+        self.index.lock().unwrap().bytes
+    }
+}
+
+impl Drop for DiskTier {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.index.lock().unwrap().dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 7, generation: 0, partition: p, splits: 1 }
+    }
+
+    fn gkey(generation: u64, p: u64) -> CacheKey {
+        CacheKey { namespace: 9, generation, partition: p, splits: 1 }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let tier = DiskTier::new(None);
+        assert!(tier.dir().is_none(), "directory is lazy");
+        let payload: Vec<u8> = (0..=255).collect();
+        assert_eq!(tier.write(key(0), &payload).unwrap(), 256);
+        assert!(tier.dir().is_some());
+        assert_eq!(tier.read(&key(0)).unwrap().unwrap(), payload);
+        assert_eq!(tier.len(), 1);
+        assert_eq!(tier.bytes_stored(), 256);
+        let s = tier.counters().snapshot();
+        assert_eq!(s.disk_bytes_written, 256);
+        assert_eq!(s.disk_bytes_read, 256);
+        assert!(s.disk_write_secs >= 0.0 && s.disk_read_secs >= 0.0);
+    }
+
+    #[test]
+    fn missing_block_reads_none() {
+        let tier = DiskTier::new(None);
+        assert!(tier.read(&key(9)).unwrap().is_none());
+        assert!(tier.read_range(&key(9), 0, 10).unwrap().is_none());
+        assert!(tier.meta(&key(9)).is_none());
+        assert!(!tier.delete(&key(9)));
+    }
+
+    #[test]
+    fn overwrite_replaces_bytes() {
+        let tier = DiskTier::new(None);
+        tier.write(key(1), &[0u8; 100]).unwrap();
+        tier.write(key(1), &[1u8; 40]).unwrap();
+        assert_eq!(tier.bytes_stored(), 40);
+        assert_eq!(tier.read(&key(1)).unwrap().unwrap(), vec![1u8; 40]);
+    }
+
+    #[test]
+    fn range_reads_stream_the_payload() {
+        let tier = DiskTier::new(None);
+        let payload: Vec<u8> = (0u8..100).collect();
+        tier.write(key(2), &payload).unwrap();
+        let mut got = Vec::new();
+        let mut offset = 0u64;
+        let mut sum = CHECKSUM_SEED;
+        loop {
+            let chunk = tier.read_range(&key(2), offset, 7).unwrap().unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            sum = checksum(sum, &chunk);
+            offset += chunk.len() as u64;
+            got.extend_from_slice(&chunk);
+        }
+        assert_eq!(got, payload);
+        assert_eq!(sum, tier.meta(&key(2)).unwrap().checksum);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let tier = DiskTier::new(None);
+        tier.write(key(3), b"precious bytes").unwrap();
+        // Corrupt the payload on disk behind the tier's back.
+        let path = tier.dir().unwrap().join(DiskTier::file_name(&key(3)));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(tier.read(&key(3)).is_err());
+        assert_eq!(tier.counters().snapshot().checksum_failures, 1);
+    }
+
+    #[test]
+    fn generation_cleanup_removes_old_blocks() {
+        let tier = DiskTier::new(None);
+        for generation in 0..3 {
+            tier.write(gkey(generation, 0), &[generation as u8; 10]).unwrap();
+            tier.write(gkey(generation, 1), &[generation as u8; 10]).unwrap();
+        }
+        tier.write(key(0), &[9u8; 10]).unwrap(); // other namespace: untouched
+        assert_eq!(tier.delete_generations_below(9, 2), 4);
+        assert_eq!(tier.len(), 3);
+        assert_eq!(tier.bytes_stored(), 30);
+        assert!(tier.meta(&gkey(2, 0)).is_some());
+        assert!(tier.meta(&key(0)).is_some());
+    }
+
+    #[test]
+    fn delete_frees_the_file() {
+        let tier = DiskTier::new(None);
+        tier.write(key(4), &[1u8; 8]).unwrap();
+        let path = tier.dir().unwrap().join(DiskTier::file_name(&key(4)));
+        assert!(path.exists());
+        assert!(tier.delete(&key(4)));
+        assert!(!path.exists());
+        assert_eq!(tier.bytes_stored(), 0);
+    }
+
+    #[test]
+    fn drop_removes_directory() {
+        let dir;
+        {
+            let tier = DiskTier::new(None);
+            tier.write(key(5), &[0u8; 4]).unwrap();
+            dir = tier.dir().unwrap();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists());
+    }
+}

@@ -1,0 +1,306 @@
+//! `MemoryTier` — the memory tier of the storage hierarchy.
+//!
+//! This is the PR 3 partition-cache mechanism (type-erased values, byte
+//! budget, LRU eviction, hit/miss/evict/reject stats — see
+//! [`crate::cache`] for the `spark.memory.fraction` mapping) factored
+//! into a tier: instead of silently dropping evicted entries, `put`
+//! returns the victims, and victims that carry an [`EncodeFn`] can be
+//! **demoted** to the tier below by the caller ([`super::TieredStore`]
+//! does exactly that). The tier itself never touches disk.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{CacheBudget, CacheKey, CacheStats};
+
+/// Serializer attached to a demotable entry: produces the wire form of
+/// the stored value (captured over the typed `Arc` at insert time, so no
+/// downcasting is needed at eviction time).
+pub type EncodeFn = Arc<dyn Fn() -> Vec<u8> + Send + Sync>;
+
+/// An entry evicted under budget pressure. `encode` is `Some` when the
+/// writer registered a serializer — the caller may demote it to a lower
+/// tier; `None` entries are simply gone (the PR 3 behavior).
+pub struct Victim {
+    pub key: CacheKey,
+    /// The writer's heap-size estimate for the entry.
+    pub bytes: u64,
+    pub encode: Option<EncodeFn>,
+}
+
+/// One resident value: type-erased payload + size + recency + optional
+/// serializer.
+struct Slot {
+    value: Arc<dyn Any + Send + Sync>,
+    bytes: u64,
+    last_used: u64,
+    encode: Option<EncodeFn>,
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: HashMap<CacheKey, Slot>,
+    bytes: u64,
+    /// Monotonic recency clock; bumped on every touch.
+    tick: u64,
+}
+
+/// The memory-budgeted, size-aware, LRU memory tier (see module docs).
+/// Thread-safe and cheap to share.
+pub struct MemoryTier {
+    budget: CacheBudget,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl std::fmt::Debug for MemoryTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemoryTier")
+            .field("budget", &self.budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl MemoryTier {
+    pub fn new(budget: CacheBudget) -> Self {
+        Self {
+            budget,
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget(&self) -> CacheBudget {
+        self.budget
+    }
+
+    /// `true` when the budget is `Bytes(0)`: nothing can ever be admitted.
+    pub fn is_disabled(&self) -> bool {
+        self.budget == CacheBudget::Bytes(0)
+    }
+
+    /// Could an entry of `bytes` estimated size ever be admitted to
+    /// *this* tier? (`false` = a `put` is guaranteed to reject it.)
+    pub fn fits(&self, bytes: u64) -> bool {
+        match self.budget {
+            CacheBudget::Unbounded => true,
+            CacheBudget::Bytes(limit) => limit > 0 && bytes <= limit,
+        }
+    }
+
+    /// Look up an entry. A hit bumps its recency and is counted.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.slots.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                self.hits.fetch_add(1, Relaxed);
+                Some(Arc::clone(&slot.value))
+            }
+            None => {
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an entry of `bytes` estimated size, evicting LRU entries
+    /// until it fits. Returns `(admitted, victims)`: rejected inserts
+    /// (entry alone over the whole budget; any entry at budget 0) count a
+    /// rejection and produce no victims. Victims are counted as
+    /// evictions whether or not the caller demotes them.
+    pub fn put(
+        &self,
+        key: CacheKey,
+        value: Arc<dyn Any + Send + Sync>,
+        bytes: u64,
+        encode: Option<EncodeFn>,
+    ) -> (bool, Vec<Victim>) {
+        if let CacheBudget::Bytes(limit) = self.budget {
+            if limit == 0 || bytes > limit {
+                self.rejected.fetch_add(1, Relaxed);
+                return (false, Vec::new());
+            }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.slots.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        let mut victims = Vec::new();
+        if let CacheBudget::Bytes(limit) = self.budget {
+            while inner.bytes + bytes > limit {
+                let lru = inner
+                    .slots
+                    .iter()
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| *k)
+                    .expect("over budget with no entries");
+                let slot = inner.slots.remove(&lru).unwrap();
+                inner.bytes -= slot.bytes;
+                self.evictions.fetch_add(1, Relaxed);
+                victims.push(Victim { key: lru, bytes: slot.bytes, encode: slot.encode });
+            }
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.bytes += bytes;
+        inner.slots.insert(key, Slot { value, bytes, last_used: tick, encode });
+        self.insertions.fetch_add(1, Relaxed);
+        (true, victims)
+    }
+
+    /// Is `key` currently resident? Does not touch recency or stats.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.inner.lock().unwrap().slots.contains_key(key)
+    }
+
+    /// Remove one entry without counting an eviction (deliberate removal,
+    /// not budget pressure). Returns whether it existed.
+    pub fn remove(&self, key: &CacheKey) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.slots.remove(key) {
+            Some(slot) => {
+                inner.bytes -= slot.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every resident entry of `namespace` older than
+    /// `keep_generation`. Not counted as evictions. Returns the count.
+    pub fn invalidate_generations_below(&self, namespace: u64, keep_generation: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let victims: Vec<CacheKey> = inner
+            .slots
+            .keys()
+            .filter(|k| k.namespace == namespace && k.generation < keep_generation)
+            .copied()
+            .collect();
+        for k in &victims {
+            let slot = inner.slots.remove(k).unwrap();
+            inner.bytes -= slot.bytes;
+        }
+        victims.len()
+    }
+
+    /// Estimated bytes currently resident.
+    pub fn bytes_cached(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (counters are kept — they are cumulative).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.slots.clear();
+        inner.bytes = 0;
+    }
+
+    /// Reclassify one counted miss as a hit — the tiered store calls this
+    /// when a memory miss is served from the tier below (the lookup *was*
+    /// a storage hit, just not a memory one).
+    pub(crate) fn reclassify_miss_as_hit(&self) {
+        self.misses.fetch_sub(1, Relaxed);
+        self.hits.fetch_add(1, Relaxed);
+    }
+
+    /// Reclassify one counted hit as a miss (a typed lookup that
+    /// downcast-failed: the caller will recompute).
+    pub(crate) fn reclassify_hit_as_miss(&self) {
+        self.hits.fetch_sub(1, Relaxed);
+        self.misses.fetch_add(1, Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let (bytes_cached, entries) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes, inner.slots.len() as u64)
+        };
+        CacheStats {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            insertions: self.insertions.load(Relaxed),
+            evictions: self.evictions.load(Relaxed),
+            rejected: self.rejected.load(Relaxed),
+            bytes_cached,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }
+    }
+
+    fn val(x: u64) -> Arc<dyn Any + Send + Sync> {
+        Arc::new(vec![x])
+    }
+
+    #[test]
+    fn eviction_hands_back_demotable_victims() {
+        let tier = MemoryTier::new(CacheBudget::Bytes(100));
+        let payload = Arc::new(vec![1u64, 2]);
+        let enc: EncodeFn = {
+            let p = Arc::clone(&payload);
+            Arc::new(move || {
+                crate::util::ser::Encode::to_bytes(p.as_ref())
+            })
+        };
+        let (ok, victims) = tier.put(key(1), payload, 80, Some(enc));
+        assert!(ok && victims.is_empty());
+        // Inserting a second entry forces the first out — with its encoder.
+        let (ok, victims) = tier.put(key(2), val(9), 60, None);
+        assert!(ok);
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].key, key(1));
+        assert_eq!(victims[0].bytes, 80);
+        let bytes = victims[0].encode.as_ref().expect("demotable")();
+        let back: Vec<u64> = crate::util::ser::Decode::from_bytes(&bytes).unwrap();
+        assert_eq!(back, vec![1, 2]);
+        assert_eq!(tier.stats().evictions, 1);
+    }
+
+    #[test]
+    fn plain_victims_have_no_encoder() {
+        let tier = MemoryTier::new(CacheBudget::Bytes(50));
+        tier.put(key(1), val(1), 40, None);
+        let (_, victims) = tier.put(key(2), val(2), 40, None);
+        assert_eq!(victims.len(), 1);
+        assert!(victims[0].encode.is_none());
+    }
+
+    #[test]
+    fn remove_is_not_an_eviction() {
+        let tier = MemoryTier::new(CacheBudget::Unbounded);
+        tier.put(key(1), val(1), 10, None);
+        assert!(tier.remove(&key(1)));
+        assert!(!tier.remove(&key(1)));
+        assert_eq!(tier.bytes_cached(), 0);
+        assert_eq!(tier.stats().evictions, 0);
+    }
+}

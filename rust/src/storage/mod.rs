@@ -1,0 +1,433 @@
+//! Tiered block storage — the hierarchy under the partition cache and
+//! the bounded-memory exchange.
+//!
+//! The paper's comparison (and our PR 3 cache) assumes the working set
+//! fits in memory: when it doesn't, the only answer used to be "evict and
+//! recompute". This module supplies the missing storage hierarchy:
+//!
+//! * [`HeapSize`] — the single size-accounting trait (moved here from
+//!   `engines::spark`; both engines, the cache, and the spill paths now
+//!   share one estimator, mirroring Spark's `SizeEstimator`).
+//! * [`BlockStore`] — the byte-level block I/O abstraction: checksummed
+//!   `write`/`read`/`read_range` keyed by [`CacheKey`]. Implemented by
+//!   [`DiskTier`] (real files in a per-job temp dir) and by in-memory test
+//!   doubles; consumed as a trait object by the spill merger and the
+//!   Spark-sim shuffle-block persistence.
+//! * [`MemoryTier`] — the memory tier: the PR 3 `PartitionCache`
+//!   semantics (type-erased values, byte budget, LRU, hit/miss/evict
+//!   stats) with one addition: evicted entries that carry an encoder are
+//!   handed back to the caller as demotion candidates instead of being
+//!   dropped.
+//! * [`TieredStore`] — memory tier over an optional [`DiskTier`]:
+//!   **demotes** encodable entries to disk under memory pressure and
+//!   **promotes** them back on access. Without a disk tier it behaves
+//!   exactly like the PR 3 cache (`crate::cache::PartitionCache` is now an
+//!   alias for it).
+//! * [`ExternalMerger`] — the bounded-memory exchange: combine in memory
+//!   until the byte budget is hit, then sort-and-spill a run to the block
+//!   store; `finish` merges every run with a loser-tree external merge
+//!   ([`LoserTree`]), combining equal keys. Output is bit-identical to
+//!   the all-in-memory fold for any associative+commutative combiner, at
+//!   any budget down to zero.
+//! * [`StorageStats`] / [`StorageCounters`] — spilled/demoted/promoted
+//!   bytes and disk read/write wall, threaded into
+//!   [`JobReport`](crate::mapreduce::JobReport) by both engines.
+//!
+//! # Namespace map
+//!
+//! Several clients can share one [`DiskTier`] (so one job's storage
+//! activity lands in one [`StorageCounters`] cell). Block keys are the
+//! cache's [`CacheKey`]; namespaces are partitioned so clients can never
+//! collide:
+//!
+//! | namespace range | client |
+//! |---|---|
+//! | `0 .. 2^32` | partition-cache relation namespaces (relation index) |
+//! | `2^32 .. NS_SHUFFLE_BLOCKS` | Spark-sim ad-hoc `persist()` ids |
+//! | `NS_SHUFFLE_BLOCKS + shuffle_id` | persisted shuffle blocks |
+//! | `NS_SPILL_BASE ..` | spill-run namespaces ([`fresh_spill_namespace`]) |
+
+mod disk;
+mod memory;
+mod spill;
+mod tiered;
+
+pub use disk::DiskTier;
+pub use memory::{EncodeFn, MemoryTier, Victim};
+pub use spill::{ExternalMerger, LoserTree};
+pub use tiered::TieredStore;
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::cache::CacheKey;
+
+/// Heap-footprint estimate — what a record "costs" when materialized as
+/// objects. Used by the memory tier's budget accounting, the spill
+/// merger's in-flight accounting, and the Spark sim's GC model (the JVM
+/// `SizeEstimator` role). Estimates are approximate by design; budget
+/// invariants are exact with respect to them.
+pub trait HeapSize {
+    fn heap_bytes(&self) -> usize;
+}
+
+impl HeapSize for String {
+    #[inline]
+    fn heap_bytes(&self) -> usize {
+        self.len() + 24
+    }
+}
+
+macro_rules! impl_heap_prim {
+    ($($t:ty),*) => {$(
+        impl HeapSize for $t {
+            #[inline]
+            fn heap_bytes(&self) -> usize {
+                16 // boxed primitive: header + value
+            }
+        }
+    )*};
+}
+impl_heap_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, bool);
+
+impl<A: HeapSize, B: HeapSize> HeapSize for (A, B) {
+    #[inline]
+    fn heap_bytes(&self) -> usize {
+        self.0.heap_bytes() + self.1.heap_bytes() + 16 // Tuple2 header
+    }
+}
+
+impl<T: HeapSize> HeapSize for Vec<T> {
+    fn heap_bytes(&self) -> usize {
+        24 + self.iter().map(HeapSize::heap_bytes).sum::<usize>()
+    }
+}
+
+/// First namespace reserved for persisted Spark-sim shuffle blocks
+/// (`namespace = NS_SHUFFLE_BLOCKS + shuffle_id`).
+pub const NS_SHUFFLE_BLOCKS: u64 = 1 << 41;
+
+/// Spill-run namespaces start here; allocated process-wide so mergers
+/// sharing a disk tier (or a temp dir) can never collide.
+const NS_SPILL_BASE: u64 = 1 << 42;
+
+static NEXT_SPILL_NS: AtomicU64 = AtomicU64::new(NS_SPILL_BASE);
+
+/// A fresh namespace for one [`ExternalMerger`]'s spill runs.
+pub fn fresh_spill_namespace() -> u64 {
+    NEXT_SPILL_NS.fetch_add(1, Relaxed)
+}
+
+/// FNV-1a over `bytes`, continuing from `state` — the block checksum
+/// (delegates to [`crate::hash::fnv1a_with`]: one FNV definition in the
+/// crate). Streaming (chunk-by-chunk extension gives the same digest as
+/// one pass), so spill-run cursors can verify a file they read in
+/// ranges.
+pub fn checksum(state: u64, bytes: &[u8]) -> u64 {
+    crate::hash::fnv1a_with(state, bytes)
+}
+
+/// FNV-1a offset basis — the initial `state` for [`checksum`].
+pub const CHECKSUM_SEED: u64 = crate::hash::FNV1A_OFFSET;
+
+/// Size + checksum of one stored block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// Payload bytes (excluding the on-disk header).
+    pub payload_len: u64,
+    /// FNV-1a of the payload.
+    pub checksum: u64,
+}
+
+/// Byte-level block storage: the interface the spill merger, the tiered
+/// store's disk side, and the Spark-sim shuffle-block persistence all
+/// write through. Keys are [`CacheKey`]s (see the module-level namespace
+/// map). [`DiskTier`] is the production implementation; tests substitute
+/// in-memory or failure-injecting doubles.
+pub trait BlockStore: Send + Sync {
+    /// Store a block, replacing any previous payload under `key`.
+    /// Returns the payload length written.
+    fn write(&self, key: CacheKey, payload: &[u8]) -> std::io::Result<u64>;
+
+    /// Read a whole block back, verifying its checksum (a mismatch is an
+    /// error, not a silent short read). `Ok(None)` = no such block.
+    fn read(&self, key: &CacheKey) -> std::io::Result<Option<Vec<u8>>>;
+
+    /// Read up to `max_len` payload bytes starting at `offset` —
+    /// the streaming path for external-merge cursors. The checksum is
+    /// *not* verified here; range readers accumulate it themselves (see
+    /// [`checksum`]) and check against [`BlockStore::meta`] at the end.
+    fn read_range(
+        &self,
+        key: &CacheKey,
+        offset: u64,
+        max_len: usize,
+    ) -> std::io::Result<Option<Vec<u8>>>;
+
+    /// Size + checksum of a stored block, if present.
+    fn meta(&self, key: &CacheKey) -> Option<BlockMeta>;
+
+    /// Drop one block. Returns whether it existed.
+    fn delete(&self, key: &CacheKey) -> bool;
+
+    /// Drop every block of `namespace` with `generation < keep_generation`
+    /// — the generation-aware cleanup hook (the iterative driver retires
+    /// dead state generations through this). Returns how many blocks were
+    /// dropped.
+    fn delete_generations_below(&self, namespace: u64, keep_generation: u64) -> usize;
+
+    /// Blocks currently stored.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total payload bytes currently stored.
+    fn bytes_stored(&self) -> u64;
+}
+
+/// Atomic accumulation cell for one storage domain (a job's disk tier, a
+/// shared cache's spill side). Cheap to share; snapshot with
+/// [`StorageCounters::snapshot`].
+#[derive(Debug, Default)]
+pub struct StorageCounters {
+    spilled_bytes: AtomicU64,
+    spill_runs: AtomicU64,
+    spill_write_failures: AtomicU64,
+    demoted_bytes: AtomicU64,
+    demotions: AtomicU64,
+    promoted_bytes: AtomicU64,
+    promotions: AtomicU64,
+    disk_bytes_written: AtomicU64,
+    disk_bytes_read: AtomicU64,
+    disk_write_ns: AtomicU64,
+    disk_read_ns: AtomicU64,
+    checksum_failures: AtomicU64,
+}
+
+impl StorageCounters {
+    pub fn record_spill(&self, bytes: u64) {
+        self.spilled_bytes.fetch_add(bytes, Relaxed);
+        self.spill_runs.fetch_add(1, Relaxed);
+    }
+
+    pub fn record_spill_failure(&self) {
+        self.spill_write_failures.fetch_add(1, Relaxed);
+    }
+
+    pub fn record_demotion(&self, bytes: u64) {
+        self.demoted_bytes.fetch_add(bytes, Relaxed);
+        self.demotions.fetch_add(1, Relaxed);
+    }
+
+    pub fn record_promotion(&self, bytes: u64) {
+        self.promoted_bytes.fetch_add(bytes, Relaxed);
+        self.promotions.fetch_add(1, Relaxed);
+    }
+
+    pub fn record_disk_write(&self, bytes: u64, wall: std::time::Duration) {
+        self.disk_bytes_written.fetch_add(bytes, Relaxed);
+        self.disk_write_ns.fetch_add(wall.as_nanos() as u64, Relaxed);
+    }
+
+    pub fn record_disk_read(&self, bytes: u64, wall: std::time::Duration) {
+        self.disk_bytes_read.fetch_add(bytes, Relaxed);
+        self.disk_read_ns.fetch_add(wall.as_nanos() as u64, Relaxed);
+    }
+
+    pub fn record_checksum_failure(&self) {
+        self.checksum_failures.fetch_add(1, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StorageStats {
+        StorageStats {
+            spilled_bytes: self.spilled_bytes.load(Relaxed),
+            spill_runs: self.spill_runs.load(Relaxed),
+            spill_write_failures: self.spill_write_failures.load(Relaxed),
+            demoted_bytes: self.demoted_bytes.load(Relaxed),
+            demotions: self.demotions.load(Relaxed),
+            promoted_bytes: self.promoted_bytes.load(Relaxed),
+            promotions: self.promotions.load(Relaxed),
+            disk_bytes_written: self.disk_bytes_written.load(Relaxed),
+            disk_bytes_read: self.disk_bytes_read.load(Relaxed),
+            disk_write_secs: self.disk_write_ns.load(Relaxed) as f64 / 1e9,
+            disk_read_secs: self.disk_read_ns.load(Relaxed) as f64 / 1e9,
+            checksum_failures: self.checksum_failures.load(Relaxed),
+        }
+    }
+}
+
+/// Snapshot of one storage domain's counters — what
+/// [`JobReport::storage`](crate::mapreduce::JobReport::storage) carries.
+/// All counters are cumulative since the cell's creation; job reports
+/// hold per-job deltas ([`StorageStats::delta_since`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StorageStats {
+    /// Bytes written as sorted spill runs by the bounded-memory exchange.
+    pub spilled_bytes: u64,
+    /// Sorted runs written.
+    pub spill_runs: u64,
+    /// Spill writes that failed (data stayed in memory; see
+    /// [`ExternalMerger`]).
+    pub spill_write_failures: u64,
+    /// Bytes demoted memory → disk under cache pressure, in **heap
+    /// estimate** units (what the memory budget is accounted in; the
+    /// encoded on-disk footprint shows up in `disk_bytes_written`).
+    pub demoted_bytes: u64,
+    pub demotions: u64,
+    /// Bytes promoted disk → memory on access (heap-estimate units;
+    /// oversized entries served from disk without re-entering memory are
+    /// not promotions).
+    pub promoted_bytes: u64,
+    pub promotions: u64,
+    /// Raw disk-tier traffic (spill runs + demotions + persisted shuffle
+    /// blocks all land here).
+    pub disk_bytes_written: u64,
+    pub disk_bytes_read: u64,
+    /// Wall spent in disk writes / reads.
+    pub disk_write_secs: f64,
+    pub disk_read_secs: f64,
+    pub checksum_failures: u64,
+}
+
+impl StorageStats {
+    /// No storage activity at all?
+    pub fn is_zero(&self) -> bool {
+        self.spilled_bytes == 0
+            && self.spill_runs == 0
+            && self.spill_write_failures == 0
+            && self.demoted_bytes == 0
+            && self.demotions == 0
+            && self.promoted_bytes == 0
+            && self.promotions == 0
+            && self.disk_bytes_written == 0
+            && self.disk_bytes_read == 0
+            && self.checksum_failures == 0
+    }
+
+    /// Field-wise sum — aggregate stats from several storage domains (a
+    /// job's exchange spill tier + the shared cache's spill side) or
+    /// several stages/rounds.
+    pub fn merged(&self, other: &StorageStats) -> StorageStats {
+        StorageStats {
+            spilled_bytes: self.spilled_bytes + other.spilled_bytes,
+            spill_runs: self.spill_runs + other.spill_runs,
+            spill_write_failures: self.spill_write_failures + other.spill_write_failures,
+            demoted_bytes: self.demoted_bytes + other.demoted_bytes,
+            demotions: self.demotions + other.demotions,
+            promoted_bytes: self.promoted_bytes + other.promoted_bytes,
+            promotions: self.promotions + other.promotions,
+            disk_bytes_written: self.disk_bytes_written + other.disk_bytes_written,
+            disk_bytes_read: self.disk_bytes_read + other.disk_bytes_read,
+            disk_write_secs: self.disk_write_secs + other.disk_write_secs,
+            disk_read_secs: self.disk_read_secs + other.disk_read_secs,
+            checksum_failures: self.checksum_failures + other.checksum_failures,
+        }
+    }
+
+    /// Counters accumulated since `earlier` — one job's (or round's)
+    /// activity against a shared cell.
+    pub fn delta_since(&self, earlier: &StorageStats) -> StorageStats {
+        StorageStats {
+            spilled_bytes: self.spilled_bytes - earlier.spilled_bytes,
+            spill_runs: self.spill_runs - earlier.spill_runs,
+            spill_write_failures: self.spill_write_failures - earlier.spill_write_failures,
+            demoted_bytes: self.demoted_bytes - earlier.demoted_bytes,
+            demotions: self.demotions - earlier.demotions,
+            promoted_bytes: self.promoted_bytes - earlier.promoted_bytes,
+            promotions: self.promotions - earlier.promotions,
+            disk_bytes_written: self.disk_bytes_written - earlier.disk_bytes_written,
+            disk_bytes_read: self.disk_bytes_read - earlier.disk_bytes_read,
+            disk_write_secs: self.disk_write_secs - earlier.disk_write_secs,
+            disk_read_secs: self.disk_read_secs - earlier.disk_read_secs,
+            checksum_failures: self.checksum_failures - earlier.checksum_failures,
+        }
+    }
+}
+
+impl std::fmt::Display for StorageStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        use crate::util::stats::fmt_bytes;
+        write!(
+            f,
+            "spilled={} in {} run(s), demoted={} promoted={} disk w/r={}/{} \
+             ({:.3}s/{:.3}s)",
+            fmt_bytes(self.spilled_bytes),
+            self.spill_runs,
+            fmt_bytes(self.demoted_bytes),
+            fmt_bytes(self.promoted_bytes),
+            fmt_bytes(self.disk_bytes_written),
+            fmt_bytes(self.disk_bytes_read),
+            self.disk_write_secs,
+            self.disk_read_secs,
+        )?;
+        if self.spill_write_failures > 0 || self.checksum_failures > 0 {
+            write!(
+                f,
+                " [spill_failures={} checksum_failures={}]",
+                self.spill_write_failures, self.checksum_failures
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_streamable() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = checksum(CHECKSUM_SEED, data);
+        let mut h = CHECKSUM_SEED;
+        for chunk in data.chunks(7) {
+            h = checksum(h, chunk);
+        }
+        assert_eq!(whole, h);
+        assert_ne!(whole, checksum(CHECKSUM_SEED, b"the quick brown fox"));
+    }
+
+    #[test]
+    fn counters_snapshot_and_delta() {
+        let c = StorageCounters::default();
+        c.record_spill(100);
+        c.record_disk_write(100, std::time::Duration::from_millis(2));
+        let before = c.snapshot();
+        c.record_spill(50);
+        c.record_promotion(30);
+        let d = c.snapshot().delta_since(&before);
+        assert_eq!(d.spilled_bytes, 50);
+        assert_eq!(d.spill_runs, 1);
+        assert_eq!(d.promoted_bytes, 30);
+        assert_eq!(d.disk_bytes_written, 0);
+    }
+
+    #[test]
+    fn merged_sums_fields() {
+        let a = StorageStats { spilled_bytes: 10, spill_runs: 1, ..Default::default() };
+        let b = StorageStats { spilled_bytes: 5, demoted_bytes: 7, ..Default::default() };
+        let m = a.merged(&b);
+        assert_eq!(m.spilled_bytes, 15);
+        assert_eq!(m.spill_runs, 1);
+        assert_eq!(m.demoted_bytes, 7);
+        assert!(!m.is_zero());
+        assert!(StorageStats::default().is_zero());
+    }
+
+    #[test]
+    fn spill_namespaces_are_fresh_and_reserved() {
+        let a = fresh_spill_namespace();
+        let b = fresh_spill_namespace();
+        assert_ne!(a, b);
+        assert!(a >= NS_SPILL_BASE && b >= NS_SPILL_BASE);
+        assert!(NS_SHUFFLE_BLOCKS < NS_SPILL_BASE);
+    }
+
+    #[test]
+    fn display_mentions_spill_volume() {
+        let s = StorageStats { spilled_bytes: 2048, spill_runs: 2, ..Default::default() };
+        let text = format!("{s}");
+        assert!(text.contains("2 run(s)"), "{text}");
+    }
+}

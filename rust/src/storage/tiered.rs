@@ -1,0 +1,493 @@
+//! `TieredStore` — the memory tier backed by an optional disk tier:
+//! disk-backed persistence instead of lossy evict-and-recompute.
+//!
+//! Without a disk tier this is exactly the PR 3 partition cache
+//! ([`crate::cache::PartitionCache`] is an alias for this type): typed
+//! entries, byte budget, LRU, hit/miss/evict stats. With one attached
+//! (see [`TieredStore::with_spill`]):
+//!
+//! * entries inserted through [`put_encoded`](TieredStore::put_encoded)
+//!   carry a serializer; when budget pressure evicts them they are
+//!   **demoted** — serialized and written to the [`DiskTier`] — instead
+//!   of dropped;
+//! * [`get_encoded`](TieredStore::get_encoded) misses in memory fall
+//!   through to the disk tier; a disk hit is decoded, **promoted** back
+//!   into memory (possibly demoting colder entries), and counted as a
+//!   storage hit;
+//! * entries too large for the whole memory budget go straight to disk —
+//!   nothing is ever rejected for size when a disk tier exists.
+//!
+//! `CacheBudget::Bytes(0)` still means *storage off entirely* (the
+//! recompute ablation): nothing is admitted to either tier, so planners
+//! keep eliding cache points exactly as before.
+//!
+//! Plain [`put`](TieredStore::put)/[`get_typed`](TieredStore::get_typed)
+//! entries (no serializer) keep the PR 3 semantics: evicted means gone.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{CacheBudget, CacheKey, CacheStats};
+use crate::util::ser::{Decode, Encode};
+
+use super::{BlockStore, DiskTier, EncodeFn, MemoryTier, StorageStats, Victim};
+
+/// Memory tier + optional disk tier (see module docs).
+pub struct TieredStore {
+    mem: MemoryTier,
+    disk: Option<Arc<DiskTier>>,
+    /// Original `HeapSize` estimates of entries currently parked on
+    /// disk. Promotion re-admits an entry at the estimate it was first
+    /// admitted under — wire size and heap estimate are different units,
+    /// and mixing them would let a demote/promote cycle silently exceed
+    /// the memory budget (encoded payloads are usually much smaller than
+    /// their heap form).
+    demoted_est: Mutex<HashMap<CacheKey, u64>>,
+}
+
+impl std::fmt::Debug for TieredStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TieredStore")
+            .field("budget", &self.budget())
+            .field("stats", &self.stats())
+            .field("spill", &self.disk.is_some())
+            .finish()
+    }
+}
+
+impl TieredStore {
+    /// Memory-only store — the PR 3 partition cache, verbatim.
+    pub fn new(budget: CacheBudget) -> Self {
+        Self { mem: MemoryTier::new(budget), disk: None, demoted_est: Mutex::new(HashMap::new()) }
+    }
+
+    /// Memory tier over `disk`: encodable entries demote on pressure and
+    /// promote on access.
+    pub fn with_spill(budget: CacheBudget, disk: Arc<DiskTier>) -> Self {
+        Self {
+            mem: MemoryTier::new(budget),
+            disk: Some(disk),
+            demoted_est: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn budget(&self) -> CacheBudget {
+        self.mem.budget()
+    }
+
+    /// The disk tier, if one is attached.
+    pub fn disk(&self) -> Option<&Arc<DiskTier>> {
+        self.disk.as_ref()
+    }
+
+    /// `true` when the budget is `Bytes(0)`: storage is off entirely —
+    /// nothing is admitted to either tier, so the recompute ablation
+    /// measures recomputation and not a caching-shaped detour.
+    pub fn is_disabled(&self) -> bool {
+        self.mem.is_disabled()
+    }
+
+    /// Could an entry of `bytes` estimated size be stored at all? With a
+    /// disk tier attached everything fits (oversized entries go straight
+    /// to disk); callers use this to skip the deep clone a doomed insert
+    /// would need. Does not touch the stats.
+    pub fn fits(&self, bytes: u64) -> bool {
+        if self.is_disabled() {
+            return false;
+        }
+        if self.disk.is_some() {
+            return true;
+        }
+        self.mem.fits(bytes)
+    }
+
+    /// Look up a partition in the **memory tier** (a hit bumps recency
+    /// and is counted). Entries demoted to disk are reachable through
+    /// [`get_encoded`](Self::get_encoded) only — plain lookups keep the
+    /// PR 3 contract.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
+        self.mem.get(key)
+    }
+
+    /// [`get`](Self::get) plus a downcast. A type mismatch behaves — and
+    /// is counted — as a **miss** (the caller will recompute).
+    pub fn get_typed<T: Any + Send + Sync>(&self, key: &CacheKey) -> Option<Arc<T>> {
+        match self.get(key)?.downcast::<T>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                self.mem.reclassify_hit_as_miss();
+                None
+            }
+        }
+    }
+
+    /// Insert a partition with no serializer (the PR 3 entry point):
+    /// budget pressure may evict it for good. Returns `false` (and counts
+    /// a rejection) when the entry alone exceeds the memory budget.
+    /// Victims that *do* carry serializers (inserted via
+    /// [`put_encoded`](Self::put_encoded)) still demote to disk. A
+    /// successful insert supersedes any demoted disk copy of the same
+    /// key — the tiers never hold two versions of one entry.
+    pub fn put(&self, key: CacheKey, value: Arc<dyn Any + Send + Sync>, bytes: u64) -> bool {
+        let (admitted, victims) = self.mem.put(key, value, bytes, None);
+        if admitted {
+            self.drop_disk_copy(&key);
+        }
+        self.demote(victims);
+        admitted
+    }
+
+    /// Retire a (now superseded) demoted copy of `key` from the disk
+    /// tier — every write path calls this so the tiers stay coherent.
+    fn drop_disk_copy(&self, key: &CacheKey) {
+        if let Some(disk) = &self.disk {
+            disk.delete(key);
+        }
+        self.demoted_est.lock().unwrap().remove(key);
+    }
+
+    /// Insert a partition that can migrate between tiers: the value's
+    /// wire form is captured so eviction demotes it to the disk tier
+    /// instead of dropping it. Entries larger than the whole memory
+    /// budget are demoted immediately. Returns whether the entry is now
+    /// stored in *some* tier.
+    pub fn put_encoded<T: Any + Send + Sync + Encode>(
+        &self,
+        key: CacheKey,
+        value: Arc<T>,
+        bytes: u64,
+    ) -> bool {
+        if self.is_disabled() || self.disk.is_none() {
+            // No disk (or storage off): degrade to the memory-only path,
+            // keeping the serializer so a later spill attachment — or a
+            // plain-put eviction — can still demote it.
+            let encode = self.encoder(&value);
+            let erased: Arc<dyn Any + Send + Sync> = value;
+            let (admitted, victims) = self.mem.put(key, erased, bytes, Some(encode));
+            self.demote(victims);
+            return admitted;
+        }
+        let disk = self.disk.as_ref().unwrap();
+        if !self.mem.fits(bytes) {
+            // Too large for the whole memory tier: straight to disk. Any
+            // older in-memory version of the key is superseded.
+            let payload = value.to_bytes();
+            return match disk.write(key, &payload) {
+                Ok(_) => {
+                    self.mem.remove(&key);
+                    self.demoted_est.lock().unwrap().insert(key, bytes);
+                    disk.counters().record_demotion(bytes);
+                    true
+                }
+                Err(_) => {
+                    disk.counters().record_spill_failure();
+                    false
+                }
+            };
+        }
+        let encode = self.encoder(&value);
+        let erased: Arc<dyn Any + Send + Sync> = value;
+        let (admitted, victims) = self.mem.put(key, erased, bytes, Some(encode));
+        if admitted {
+            // The fresh insert supersedes any demoted copy of this key.
+            self.drop_disk_copy(&key);
+        }
+        self.demote(victims);
+        admitted
+    }
+
+    /// Typed lookup that falls through to the disk tier: a memory miss
+    /// consults the disk; a disk hit is decoded and counted as a cache
+    /// **hit**, and — when it fits — promoted back into the memory tier
+    /// at its *original* heap estimate (possibly demoting colder
+    /// entries). Entries too large to ever re-enter memory stay on disk
+    /// and are served from there without counting promotions. Corrupt
+    /// blocks (checksum or decode failure) are dropped and read as
+    /// misses — the caller recomputes.
+    pub fn get_encoded<T: Any + Send + Sync + Encode + Decode>(
+        &self,
+        key: &CacheKey,
+    ) -> Option<Arc<T>> {
+        if let Some(hit) = self.get_typed::<T>(key) {
+            return Some(hit);
+        }
+        // The memory miss is already counted; try the tier below.
+        let disk = self.disk.as_ref()?;
+        let payload = match disk.read(key) {
+            Ok(Some(bytes)) => bytes,
+            Ok(None) => return None,
+            Err(_) => {
+                // Checksum failure was counted by the tier; drop the bad
+                // block so the recomputed value can take its place.
+                disk.delete(key);
+                self.demoted_est.lock().unwrap().remove(key);
+                return None;
+            }
+        };
+        let value = match T::from_bytes(&payload) {
+            Ok(v) => Arc::new(v),
+            Err(_) => {
+                disk.counters().record_checksum_failure();
+                disk.delete(key);
+                self.demoted_est.lock().unwrap().remove(key);
+                return None;
+            }
+        };
+        // Re-admit at the estimate the entry was originally admitted
+        // under (falling back to the wire size for blocks whose estimate
+        // was lost) — the budget invariant stays in one unit.
+        let est = self
+            .demoted_est
+            .lock()
+            .unwrap()
+            .get(key)
+            .copied()
+            .unwrap_or(payload.len() as u64);
+        self.mem.reclassify_miss_as_hit();
+        if self.mem.fits(est) {
+            let encode = self.encoder(&value);
+            let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&value);
+            let (admitted, victims) = self.mem.put(*key, erased, est, Some(encode));
+            self.demote(victims);
+            if admitted {
+                // Tiers stay exclusive: the promoted copy owns the entry
+                // now (a later demotion re-serializes it).
+                disk.delete(key);
+                self.demoted_est.lock().unwrap().remove(key);
+                disk.counters().record_promotion(est);
+            }
+        }
+        Some(value)
+    }
+
+    /// Capture a value's serializer for demotion.
+    fn encoder<T: Any + Send + Sync + Encode>(&self, value: &Arc<T>) -> EncodeFn {
+        let v = Arc::clone(value);
+        Arc::new(move || v.to_bytes())
+    }
+
+    /// Write demotable eviction victims to the disk tier (no-op without
+    /// one, and for victims that carry no serializer). Demoted bytes are
+    /// counted at the victim's heap estimate — the unit promotion
+    /// re-admits it under.
+    fn demote(&self, victims: Vec<Victim>) {
+        let Some(disk) = &self.disk else { return };
+        for victim in victims {
+            let Some(encode) = victim.encode else { continue };
+            let payload = encode();
+            match disk.write(victim.key, &payload) {
+                Ok(_) => {
+                    self.demoted_est.lock().unwrap().insert(victim.key, victim.bytes);
+                    disk.counters().record_demotion(victim.bytes);
+                }
+                Err(_) => disk.counters().record_spill_failure(),
+            }
+        }
+    }
+
+    /// Is `key` resident in either tier? Does not touch recency or stats.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.mem.contains(key)
+            || self.disk.as_ref().is_some_and(|d| d.meta(key).is_some())
+    }
+
+    /// Drop every entry of `namespace` older than `keep_generation`, in
+    /// both tiers (the iterative driver's dead-generation hook; on the
+    /// disk side this is the generation-aware spill-file cleanup).
+    /// Returns how many entries were dropped across tiers.
+    pub fn invalidate_generations_below(&self, namespace: u64, keep_generation: u64) -> usize {
+        let from_mem = self.mem.invalidate_generations_below(namespace, keep_generation);
+        let from_disk = self
+            .disk
+            .as_ref()
+            .map_or(0, |d| d.delete_generations_below(namespace, keep_generation));
+        self.demoted_est
+            .lock()
+            .unwrap()
+            .retain(|k, _| k.namespace != namespace || k.generation >= keep_generation);
+        from_mem + from_disk
+    }
+
+    /// Estimated bytes resident in the memory tier.
+    pub fn bytes_cached(&self) -> u64 {
+        self.mem.bytes_cached()
+    }
+
+    /// Payload bytes currently parked in the disk tier.
+    pub fn bytes_spilled(&self) -> u64 {
+        self.disk.as_ref().map_or(0, |d| d.bytes_stored())
+    }
+
+    /// Entries resident in the memory tier.
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    /// Drop every entry in both tiers (counters are kept — cumulative).
+    pub fn clear(&self) {
+        self.mem.clear();
+        self.demoted_est.lock().unwrap().clear();
+        if let Some(disk) = &self.disk {
+            disk.clear_all();
+        }
+    }
+
+    /// Hit/miss/evict/reject counters (the PR 3 [`CacheStats`] surface;
+    /// disk hits count as hits).
+    pub fn stats(&self) -> CacheStats {
+        self.mem.stats()
+    }
+
+    /// Spill-side counters: demoted/promoted bytes, disk read/write wall.
+    /// All zeros when no disk tier is attached.
+    pub fn storage_stats(&self) -> StorageStats {
+        self.disk.as_ref().map_or_else(StorageStats::default, |d| d.counters().snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheBudget;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }
+    }
+
+    fn store(budget_bytes: u64) -> TieredStore {
+        TieredStore::with_spill(CacheBudget::Bytes(budget_bytes), Arc::new(DiskTier::new(None)))
+    }
+
+    #[test]
+    fn pressure_demotes_and_access_promotes() {
+        let s = store(100);
+        let a = Arc::new(vec![1u64, 2, 3]);
+        let b = Arc::new(vec![4u64]);
+        assert!(s.put_encoded(key(1), a, 80));
+        assert!(s.put_encoded(key(2), b, 80)); // evicts + demotes key 1
+        assert_eq!(s.stats().evictions, 1);
+        let st = s.storage_stats();
+        assert_eq!(st.demotions, 1);
+        assert!(st.demoted_bytes > 0);
+        assert!(s.contains(&key(1)), "demoted, not dropped");
+        // Access promotes it back (demoting key 2 in turn).
+        let back = s.get_encoded::<Vec<u64>>(&key(1)).expect("disk hit");
+        assert_eq!(*back, vec![1, 2, 3]);
+        let st = s.storage_stats();
+        assert_eq!(st.promotions, 1);
+        assert_eq!(st.demotions, 2, "promotion displaced the other entry");
+        let cs = s.stats();
+        assert_eq!(cs.hits, 1, "disk hit counts as a hit: {cs:?}");
+        assert_eq!(cs.misses, 0, "{cs:?}");
+    }
+
+    #[test]
+    fn oversized_entries_go_straight_to_disk() {
+        let s = store(64);
+        let big = Arc::new(vec![7u64; 100]);
+        assert!(s.put_encoded(key(1), big, 1000), "stored on disk");
+        assert_eq!(s.len(), 0, "not in memory");
+        assert!(s.bytes_spilled() > 0);
+        assert_eq!(s.storage_stats().demotions, 1);
+        let back = s.get_encoded::<Vec<u64>>(&key(1)).expect("served from disk");
+        assert_eq!(back.len(), 100);
+        // It can never re-enter memory, so it stays on disk and is not a
+        // promotion — no matter how often it is read.
+        assert!(s.get_encoded::<Vec<u64>>(&key(1)).is_some());
+        let st = s.storage_stats();
+        assert_eq!(st.promotions, 0, "{st:?}");
+        assert_eq!(s.len(), 0);
+        assert!(s.bytes_spilled() > 0);
+    }
+
+    #[test]
+    fn promotion_readmits_at_the_original_estimate() {
+        // Heap estimates (100) are far larger than the wire form of a
+        // one-element Vec<u64> (~12 bytes): if promotion re-admitted at
+        // wire size, both entries would fit a 150-byte budget at once.
+        let s = store(150);
+        assert!(s.put_encoded(key(1), Arc::new(vec![1u64]), 100));
+        assert!(s.put_encoded(key(2), Arc::new(vec![2u64]), 100)); // demotes 1
+        assert!(s.get_encoded::<Vec<u64>>(&key(1)).is_some()); // promotes 1, demotes 2
+        assert_eq!(s.len(), 1, "estimates keep the budget to one resident entry");
+        assert!(s.bytes_cached() <= 150);
+        assert_eq!(s.storage_stats().promoted_bytes, 100, "heap estimate, not wire size");
+    }
+
+    #[test]
+    fn fits_is_true_with_a_disk_tier() {
+        assert!(store(64).fits(1 << 40));
+        let memory_only = TieredStore::new(CacheBudget::Bytes(64));
+        assert!(!memory_only.fits(65));
+        assert!(!store(0).fits(1), "budget 0 = storage off, even with disk");
+    }
+
+    #[test]
+    fn budget_zero_disables_both_tiers() {
+        let s = store(0);
+        assert!(s.is_disabled());
+        assert!(!s.put_encoded(key(1), Arc::new(vec![1u64]), 1));
+        assert!(s.get_encoded::<Vec<u64>>(&key(1)).is_none());
+        assert_eq!(s.bytes_spilled(), 0);
+        assert_eq!(s.stats().rejected, 1);
+    }
+
+    #[test]
+    fn generation_invalidation_reaches_the_disk_tier() {
+        let s = store(40);
+        for generation in 0..3u64 {
+            let k = CacheKey { namespace: 5, generation, partition: 0, splits: 1 };
+            // 30-byte entries: each insert demotes the previous one.
+            assert!(s.put_encoded(k, Arc::new(vec![generation]), 30));
+        }
+        assert_eq!(s.len(), 1);
+        assert!(s.bytes_spilled() > 0, "older generations demoted");
+        let dropped = s.invalidate_generations_below(5, 2);
+        assert_eq!(dropped, 2);
+        assert!(s.contains(&CacheKey { namespace: 5, generation: 2, partition: 0, splits: 1 }));
+        assert!(!s.contains(&CacheKey { namespace: 5, generation: 0, partition: 0, splits: 1 }));
+    }
+
+    #[test]
+    fn clear_empties_both_tiers() {
+        let s = store(40);
+        s.put_encoded(key(1), Arc::new(vec![1u64]), 30);
+        s.put_encoded(key(2), Arc::new(vec![2u64]), 30); // demotes key 1
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.bytes_spilled(), 0);
+        assert!(!s.contains(&key(1)));
+    }
+
+    #[test]
+    fn overwrites_supersede_demoted_copies() {
+        let s = store(100);
+        assert!(s.put_encoded(key(1), Arc::new(vec![1u64]), 80));
+        assert!(s.put_encoded(key(2), Arc::new(vec![2u64]), 80)); // demotes 1
+        assert!(s.contains(&key(1)), "demoted copy on disk");
+        // Re-insert key 1 with fresh contents: the stale demoted copy
+        // must die (a lookup must never resurrect it).
+        assert!(s.put_encoded(key(1), Arc::new(vec![9u64]), 80));
+        assert_eq!(*s.get_encoded::<Vec<u64>>(&key(1)).unwrap(), vec![9]);
+        // Oversized overwrite of a resident key: the memory copy is
+        // superseded by the disk-resident value.
+        assert!(s.put_encoded(key(1), Arc::new(vec![7u64; 50]), 500));
+        assert_eq!(s.len(), 0, "shadowed memory copy removed");
+        assert_eq!(*s.get_encoded::<Vec<u64>>(&key(1)).unwrap(), vec![7u64; 50]);
+    }
+
+    #[test]
+    fn memory_only_store_keeps_pr3_semantics() {
+        let s = TieredStore::new(CacheBudget::Bytes(100));
+        assert!(s.put_encoded(key(1), Arc::new(vec![1u64]), 80));
+        assert!(s.put_encoded(key(2), Arc::new(vec![2u64]), 80)); // evicts 1 for good
+        assert!(!s.contains(&key(1)), "no disk tier: evicted means gone");
+        assert!(s.get_encoded::<Vec<u64>>(&key(1)).is_none());
+        assert!(s.storage_stats().is_zero());
+    }
+}

@@ -61,6 +61,11 @@ pub struct WordCountJob {
     pub spark_overrides: Option<SparkConf>,
     /// Failure injection plan (consumed by whichever engine runs).
     pub failures: std::sync::Arc<FailurePlan>,
+    /// Bounded-memory exchange budget (see
+    /// [`JobSpec::spill_threshold`]).
+    pub spill_threshold: Option<u64>,
+    /// Directory spill files live under (`None` = system temp dir).
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl WordCountJob {
@@ -76,6 +81,8 @@ impl WordCountJob {
             cache_policy: CachePolicy::default(),
             spark_overrides: None,
             failures: std::sync::Arc::new(FailurePlan::none()),
+            spill_threshold: None,
+            spill_dir: None,
         }
     }
 
@@ -119,6 +126,19 @@ impl WordCountJob {
         self
     }
 
+    /// Bound the exchange's in-flight memory (see
+    /// [`JobSpec::spill_threshold`]).
+    pub fn spill_threshold(mut self, bytes: u64) -> Self {
+        self.spill_threshold = Some(bytes);
+        self
+    }
+
+    /// Where spill files live (`None` = system temp dir).
+    pub fn spill_dir(mut self, dir: std::path::PathBuf) -> Self {
+        self.spill_dir = Some(dir);
+        self
+    }
+
     /// The equivalent generic job description.
     pub fn to_spec(&self) -> JobSpec {
         JobSpec {
@@ -135,6 +155,8 @@ impl WordCountJob {
             force_shuffle: false,
             cache: None,
             relation_gens: Vec::new(),
+            spill_threshold: self.spill_threshold,
+            spill_dir: self.spill_dir.clone(),
         }
     }
 
@@ -152,6 +174,7 @@ impl WordCountJob {
             wall_secs: report.wall_secs,
             words,
             shuffle_bytes: report.shuffle_bytes,
+            storage: report.storage,
             detail: report.detail,
         })
     }
@@ -165,6 +188,8 @@ pub struct WordCountResult {
     pub wall_secs: f64,
     pub words: u64,
     pub shuffle_bytes: u64,
+    /// Storage-hierarchy activity (exchange spill, persisted blocks).
+    pub storage: crate::storage::StorageStats,
     /// Engine-specific metric breakdown.
     pub detail: String,
 }

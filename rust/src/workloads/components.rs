@@ -32,8 +32,9 @@
 use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
-use crate::engines::spark::HeapSize;
 use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+use crate::storage::HeapSize;
+use crate::util::ser::{Decode, DecodeError, Encode, Reader};
 
 /// Relation index of the static edge relation.
 pub const CC_EDGES: usize = 0;
@@ -54,6 +55,35 @@ impl HeapSize for CcParsed {
         match self {
             CcParsed::Edges { src, dsts } => src.heap_bytes() + dsts.heap_bytes() + 16,
             CcParsed::Node(n, _) => n.heap_bytes() + 24,
+        }
+    }
+}
+
+// Wire form (tag byte + fields) so cached parse blocks can demote to the
+// disk tier under memory pressure.
+impl Encode for CcParsed {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            CcParsed::Edges { src, dsts } => {
+                out.push(0);
+                src.encode(out);
+                dsts.encode(out);
+            }
+            CcParsed::Node(node, label) => {
+                out.push(1);
+                node.encode(out);
+                label.encode(out);
+            }
+        }
+    }
+}
+
+impl Decode for CcParsed {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match u8::decode(r)? {
+            0 => Ok(CcParsed::Edges { src: String::decode(r)?, dsts: Vec::decode(r)? }),
+            1 => Ok(CcParsed::Node(String::decode(r)?, u64::decode(r)?)),
+            t => Err(DecodeError::BadTag(t)),
         }
     }
 }

@@ -14,8 +14,8 @@
 
 use std::collections::HashMap;
 
-use crate::engines::spark::HeapSize;
 use crate::mapreduce::Workload;
+use crate::storage::HeapSize;
 use crate::util::ser::{Decode, DecodeError, Encode, Reader};
 
 /// Relation index of the left side in the job's [`crate::mapreduce::JobInputs`].

@@ -35,8 +35,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::engines::spark::HeapSize;
 use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+use crate::storage::HeapSize;
 use crate::util::rng::Xoshiro256;
 use crate::util::ser::{Decode, DecodeError, Encode, Reader};
 
@@ -88,6 +88,33 @@ impl HeapSize for KmParsed {
         match self {
             KmParsed::Point(p) => p.heap_bytes() + 16,
             KmParsed::Centroid(_) => 16,
+        }
+    }
+}
+
+// Wire form (tag byte + fields) so cached parse blocks can demote to the
+// disk tier under memory pressure.
+impl Encode for KmParsed {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            KmParsed::Point(p) => {
+                out.push(0);
+                p.encode(out);
+            }
+            KmParsed::Centroid(cid) => {
+                out.push(1);
+                cid.encode(out);
+            }
+        }
+    }
+}
+
+impl Decode for KmParsed {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match u8::decode(r)? {
+            0 => Ok(KmParsed::Point(Vec::decode(r)?)),
+            1 => Ok(KmParsed::Centroid(u64::decode(r)?)),
+            t => Err(DecodeError::BadTag(t)),
         }
     }
 }

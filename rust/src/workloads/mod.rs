@@ -90,6 +90,30 @@
 //!    parity grid in `tests/integration_workloads.rs` (with and without
 //!    injected failures), and an entry in `benches/workloads.rs`.
 //!
+//! ## Spill (the storage hierarchy) and your workload
+//!
+//! Under `--spill-threshold` the engines run the **bounded-memory
+//! exchange** ([`crate::storage::ExternalMerger`]): a reduce shard whose
+//! in-flight bytes pass the budget is sorted by key and spilled to the
+//! disk tier, and the shard your `finalize_local` receives comes back
+//! from a loser-tree external merge. You get this for free — no workload
+//! code changes — because the trait bounds already carry everything the
+//! merger needs: keys are `Ord` (run sorting), keys and values are
+//! `Encode`/`Decode` (run files) and `HeapSize` (the in-flight
+//! estimate), and `combine` is associative + commutative (so merge
+//! order, like shuffle-arrival order, cannot change the result). Two
+//! consequences worth knowing:
+//!
+//! * the shard handed to `finalize_local` may arrive **key-sorted**
+//!   (spill engaged) or in hash order (it didn't) — the
+//!   filtering-partial-reduce contract already forbids depending on
+//!   order, and the spill parity grid in `tests/integration_spill.rs`
+//!   runs every workload both ways to enforce it;
+//! * a [`mapreduce::CacheableWorkload`]'s `Parsed` type must implement
+//!   `Encode`/`Decode` too — that is what lets cached parse blocks
+//!   demote to the disk tier under `--cache-budget` pressure instead of
+//!   being reparsed ([`PrParsed`] shows the tag-byte enum pattern).
+//!
 //! # Writing an iterative workload
 //!
 //! An iterative job is a loop of step jobs with feedback:

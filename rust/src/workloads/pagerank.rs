@@ -39,8 +39,9 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use crate::engines::spark::HeapSize;
 use crate::mapreduce::{CacheableWorkload, IterativeWorkload, JobInputs, Workload};
+use crate::storage::HeapSize;
+use crate::util::ser::{Decode, DecodeError, Encode, Reader};
 
 /// Fixed-point scale: this many integer units ≡ rank 1.0.
 pub const PR_SCALE: u64 = 1 << 32;
@@ -64,6 +65,34 @@ impl HeapSize for PrParsed {
         match self {
             PrParsed::Edges { src, dsts } => src.heap_bytes() + dsts.heap_bytes() + 16,
             PrParsed::Node(n) => n.heap_bytes() + 16,
+        }
+    }
+}
+
+// Wire form (tag byte + fields) so cached parse blocks can demote to the
+// disk tier under memory pressure.
+impl Encode for PrParsed {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            PrParsed::Edges { src, dsts } => {
+                out.push(0);
+                src.encode(out);
+                dsts.encode(out);
+            }
+            PrParsed::Node(n) => {
+                out.push(1);
+                n.encode(out);
+            }
+        }
+    }
+}
+
+impl Decode for PrParsed {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match u8::decode(r)? {
+            0 => Ok(PrParsed::Edges { src: String::decode(r)?, dsts: Vec::decode(r)? }),
+            1 => Ok(PrParsed::Node(String::decode(r)?)),
+            t => Err(DecodeError::BadTag(t)),
         }
     }
 }

@@ -1,0 +1,269 @@
+//! The storage hierarchy's acceptance gate: every workload, on every
+//! engine, must produce **bit-identical** output with the bounded-memory
+//! exchange forced on (a tiny spill threshold) — and the job report must
+//! show the spill actually happened (`storage.spilled_bytes > 0` under
+//! the tiny budget, exactly 0 under the default unbounded one).
+//!
+//! The disk tier under the partition cache rides the same knob: the
+//! iterative rows run with a cache budget of a few KB so parsed splits
+//! demote to disk and promote back, and the fixed-point state must still
+//! match the serial oracle bit-for-bit.
+
+use std::sync::Arc;
+
+use blaze::cache::CacheBudget;
+use blaze::cluster::{FailurePlan, NetModel};
+use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
+use blaze::engines::Engine;
+use blaze::mapreduce::{
+    run_chained, run_chained_serial, run_iterative, run_iterative_serial, run_serial,
+    run_serial_inputs, IterativeSpec, JobInputs, JobSpec,
+};
+use blaze::workloads::{
+    synthesize_logs, synthesize_points, Components, DistinctCount, Grep, InvertedIndex, Join,
+    KMeans, LengthHistogram, PageRank, Sessionize, TopKWords, WordCount,
+};
+
+const ENGINES: [Engine; 4] =
+    [Engine::Blaze, Engine::BlazeTcm, Engine::Spark, Engine::SparkStripped];
+
+/// A budget of a few KB: far below every test corpus's working set, so
+/// every shuffling workload is forced onto the spill path.
+const TINY: u64 = 2 << 10;
+
+fn corpus(bytes: u64, seed: u64) -> Corpus {
+    Corpus::generate(&CorpusSpec { target_bytes: bytes, seed, ..Default::default() })
+}
+
+fn spec(engine: Engine) -> JobSpec {
+    JobSpec::new(engine).nodes(2).threads_per_node(2).net(NetModel::ideal())
+}
+
+fn spilled(engine: Engine) -> JobSpec {
+    spec(engine).spill_threshold(TINY)
+}
+
+/// A failure plan exercising the engine's recovery path under spill.
+fn failure_plan(engine: Engine) -> FailurePlan {
+    match engine {
+        Engine::Blaze | Engine::BlazeTcm => FailurePlan::none().fail_node(0, 0).fail_node(1, 1),
+        Engine::Spark | Engine::SparkStripped => {
+            FailurePlan::none().fail_task(0, 1).fail_task(1, 0)
+        }
+    }
+}
+
+#[test]
+fn wordcount_spills_and_matches_serial() {
+    let corpus = corpus(96 << 10, 51);
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spilled(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert!(
+            r.storage.spilled_bytes > 0,
+            "{}: tiny budget must spill, got {:?}",
+            engine.label(),
+            r.storage
+        );
+        assert!(r.storage.spill_runs > 0, "{}", engine.label());
+        // The default (unbounded) exchange never spills.
+        let r = spec(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert_eq!(r.storage.spilled_bytes, 0, "{}: {:?}", engine.label(), r.storage);
+    }
+}
+
+#[test]
+fn inverted_index_spills_and_matches_serial() {
+    // Vec<u32> postings: values that grow under combine exercise the
+    // merger's re-estimation and the run cursor's variable-length records.
+    let corpus = corpus(64 << 10, 52);
+    let w = Arc::new(InvertedIndex::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spilled(engine).run_str(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}", engine.label());
+    }
+}
+
+#[test]
+fn top_k_and_length_hist_spill_parity() {
+    let corpus = corpus(64 << 10, 53);
+    let topk = Arc::new(TopKWords::new(Tokenizer::Spaces, 12));
+    let hist = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+    let expect_topk = run_serial(topk.as_ref(), &corpus);
+    let expect_hist = run_serial(hist.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spilled(engine).run_str(&topk, &corpus).unwrap();
+        assert_eq!(r.output, expect_topk, "top-k {}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "top-k {}", engine.label());
+        // length-hist: a handful of tiny integer keys — the whole shard
+        // fits in a few KB, so parity must hold whether or not anything
+        // actually spilled.
+        let r = spilled(engine).run(&hist, &corpus).unwrap();
+        assert_eq!(r.output, expect_hist, "length-hist {}", engine.label());
+    }
+}
+
+#[test]
+fn join_spills_and_matches_serial() {
+    let left = corpus(48 << 10, 54);
+    let right = corpus(48 << 10, 55);
+    let w = Arc::new(Join::new());
+    let inputs = JobInputs::new().relation("left", &left).relation("right", &right);
+    let expect = run_serial_inputs(w.as_ref(), &inputs);
+    assert!(!expect.is_empty(), "relations must overlap in keys");
+    for engine in ENGINES {
+        let r = spilled(engine).run_inputs(&w, &inputs).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}", engine.label());
+    }
+}
+
+#[test]
+fn distinct_spills_and_matches_serial() {
+    let corpus = corpus(64 << 10, 56);
+    let w = Arc::new(DistinctCount::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        let r = spilled(engine).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+    }
+}
+
+#[test]
+fn grep_zero_shuffle_never_spills_but_forced_shuffle_does() {
+    let corpus = corpus(64 << 10, 57);
+    let w = Arc::new(Grep::new("the".to_string()));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in ENGINES {
+        // Elided exchange: the spill threshold has nothing to bound.
+        let r = spilled(engine).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert_eq!(r.storage.spilled_bytes, 0, "{}: elided exchange", engine.label());
+        // Forced exchange under the tiny budget: matched lines ride the
+        // wire and the merge spills.
+        let r = spilled(engine).force_shuffle(true).run(&w, &corpus).unwrap();
+        assert_eq!(r.output, expect, "{} forced", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{} forced", engine.label());
+    }
+}
+
+#[test]
+fn spill_parity_under_injected_failures() {
+    let corpus = corpus(48 << 10, 58);
+    let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let expect = run_serial(w.as_ref(), &corpus);
+    for engine in [Engine::Blaze, Engine::BlazeTcm, Engine::Spark] {
+        let r = spilled(engine)
+            .failures(failure_plan(engine))
+            .run_str(&w, &corpus)
+            .unwrap();
+        assert_eq!(r.output, expect, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}", engine.label());
+    }
+}
+
+#[test]
+fn sessionize_chain_spills_and_matches_serial() {
+    let gap = 1800u64;
+    let inputs = JobInputs::new()
+        .relation_lines("logs", Arc::new(synthesize_logs(40, 4000, gap, 59)));
+    let w = Sessionize::new(gap);
+    let expect = run_chained_serial(&w, &inputs);
+    for engine in ENGINES {
+        let r = run_chained(&spilled(engine), &w, &inputs).unwrap();
+        assert_eq!(r.lines, expect, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}: {:?}", engine.label(), r.storage);
+        let r = run_chained(&spec(engine), &w, &inputs).unwrap();
+        assert_eq!(r.lines, expect, "{}", engine.label());
+        assert_eq!(r.storage.spilled_bytes, 0, "{}", engine.label());
+    }
+}
+
+/// Iterative rows: exchange spill + a cache squeezed to a few KB, so
+/// parsed splits demote to the disk tier (and promote back) every round.
+fn tiny_cache_spec(engine: Engine) -> (JobSpec, IterativeSpec) {
+    let spec = spilled(engine);
+    let it = IterativeSpec::new(3).tolerance(0.0).cache_budget(CacheBudget::Bytes(TINY));
+    (spec, it)
+}
+
+#[test]
+fn pagerank_spills_and_matches_fixed_point_oracle() {
+    let corpus = Corpus::generate(&CorpusSpec {
+        target_bytes: 24 << 10,
+        vocab_size: 500,
+        seed: 61,
+        ..Default::default()
+    });
+    let inputs = JobInputs::new().relation("edges", &corpus);
+    let w = PageRank::new();
+    let it = IterativeSpec::new(3).tolerance(0.0).cache_budget(CacheBudget::Bytes(TINY));
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    assert!(!oracle.state.is_empty());
+    for engine in ENGINES {
+        let (spec, it) = tiny_cache_spec(engine);
+        let r = run_iterative(&spec, &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}: exchange spill", engine.label());
+        assert!(
+            r.storage.demotions > 0,
+            "{}: parsed splits must demote under the tiny cache: {:?}",
+            engine.label(),
+            r.storage
+        );
+    }
+}
+
+#[test]
+fn components_spill_parity() {
+    let corpus = Corpus::generate(&CorpusSpec {
+        target_bytes: 16 << 10,
+        vocab_size: 300,
+        seed: 62,
+        ..Default::default()
+    });
+    let inputs = JobInputs::new().relation("edges", &corpus);
+    let w = Components::new();
+    let it = IterativeSpec::new(3).tolerance(0.0).cache_budget(CacheBudget::Bytes(TINY));
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in ENGINES {
+        let (spec, it) = tiny_cache_spec(engine);
+        let r = run_iterative(&spec, &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert!(r.storage.spilled_bytes > 0, "{}", engine.label());
+    }
+}
+
+#[test]
+fn kmeans_spill_parity() {
+    let inputs =
+        JobInputs::new().relation_lines("points", Arc::new(synthesize_points(400, 3, 5, 63)));
+    let w = KMeans::new(5);
+    let it = IterativeSpec::new(4).tolerance(0.0).cache_budget(CacheBudget::Bytes(TINY));
+    let oracle = run_iterative_serial(&it, &w, &inputs);
+    for engine in ENGINES {
+        let (spec, it) = tiny_cache_spec(engine);
+        let r = run_iterative(&spec, &it, &w, &inputs).unwrap();
+        assert_eq!(r.state, oracle.state, "{}", engine.label());
+        assert_eq!(r.iterations, oracle.iterations, "{}", engine.label());
+        assert!(r.storage.demotions > 0, "{}: {:?}", engine.label(), r.storage);
+    }
+}
+
+#[test]
+fn plan_records_the_spill_threshold() {
+    let w = WordCount::new(Tokenizer::Spaces);
+    let inputs = JobInputs::new().relation_lines("input", Arc::new(Vec::new()));
+    let graph = spilled(Engine::BlazeTcm).plan(&w, &inputs);
+    assert_eq!(graph.stage(0).spill_threshold, Some(TINY));
+    assert!(graph.render().contains("external merge beyond"), "{}", graph.render());
+    let graph = spec(Engine::BlazeTcm).plan(&w, &inputs);
+    assert_eq!(graph.stage(0).spill_threshold, None);
+    assert!(!graph.render().contains("external merge"), "{}", graph.render());
+}

@@ -511,3 +511,158 @@ fn prop_cache_get_after_evict_recomputes_identical_value() {
         Ok(())
     });
 }
+
+/// The bounded-memory external merger ≡ an in-memory hash fold, for
+/// random key/value streams, random budgets (including 0 and effectively
+/// unbounded), and randomly injected mid-spill write failures. Failed
+/// spills must never lose records.
+#[test]
+fn prop_external_merger_matches_in_memory_fold() {
+    use blaze::cache::CacheKey;
+    use blaze::storage::{
+        fresh_spill_namespace, BlockMeta, BlockStore, DiskTier, ExternalMerger,
+    };
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+    use std::sync::Arc;
+
+    /// Injects write failures on a deterministic schedule; delegates
+    /// everything else to the real disk tier.
+    struct Flaky {
+        inner: Arc<DiskTier>,
+        writes: AtomicU64,
+        /// Fail every `period`-th write (0 = never fail).
+        period: u64,
+    }
+    impl BlockStore for Flaky {
+        fn write(&self, key: CacheKey, payload: &[u8]) -> std::io::Result<u64> {
+            let n = self.writes.fetch_add(1, Relaxed);
+            if self.period > 0 && n % self.period == self.period - 1 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected mid-spill failure",
+                ));
+            }
+            self.inner.write(key, payload)
+        }
+        fn read(&self, key: &CacheKey) -> std::io::Result<Option<Vec<u8>>> {
+            self.inner.read(key)
+        }
+        fn read_range(
+            &self,
+            key: &CacheKey,
+            offset: u64,
+            max_len: usize,
+        ) -> std::io::Result<Option<Vec<u8>>> {
+            self.inner.read_range(key, offset, max_len)
+        }
+        fn meta(&self, key: &CacheKey) -> Option<BlockMeta> {
+            self.inner.meta(key)
+        }
+        fn delete(&self, key: &CacheKey) -> bool {
+            self.inner.delete(key)
+        }
+        fn delete_generations_below(&self, namespace: u64, keep: u64) -> usize {
+            self.inner.delete_generations_below(namespace, keep)
+        }
+        fn len(&self) -> usize {
+            self.inner.len()
+        }
+        fn bytes_stored(&self) -> u64 {
+            self.inner.bytes_stored()
+        }
+    }
+
+    check_with(Config { cases: 48, ..Default::default() }, "external-merger-fold", |g| {
+        let threshold = *g.choose(&[0u64, 1, 32, 256, 4096, u64::MAX]);
+        let period = *g.choose(&[0u64, 1, 2, 5]);
+        let distinct = g.usize_in(1, 30);
+        let pairs: Vec<(String, u64)> = (0..g.usize_in(0, 400))
+            .map(|_| (format!("k{}", g.usize_in(0, distinct - 1)), g.below(1000)))
+            .collect();
+
+        let disk = Arc::new(DiskTier::new(None));
+        let counters = Arc::clone(disk.counters());
+        let flaky =
+            Arc::new(Flaky { inner: disk, writes: AtomicU64::new(0), period });
+        let mut merger: ExternalMerger<String, u64> = ExternalMerger::new(
+            threshold,
+            flaky as Arc<dyn BlockStore>,
+            Arc::clone(&counters),
+            fresh_spill_namespace(),
+        );
+        let mut expect: BTreeMap<String, u64> = BTreeMap::new();
+        for (k, v) in &pairs {
+            *expect.entry(k.clone()).or_insert(0) += v;
+            merger.insert(k.clone(), *v, |a, b| *a += b);
+        }
+        let got: BTreeMap<String, u64> = merger.finish(|a, b| *a += b).into_iter().collect();
+        if got != expect {
+            return fail(format!(
+                "merge diverged (threshold={threshold}, fail period={period}): \
+                 {} vs {} keys",
+                got.len(),
+                expect.len()
+            ));
+        }
+        let stats = counters.snapshot();
+        if period == 1 && stats.spilled_bytes > 0 {
+            return fail("every write fails, so nothing can have spilled");
+        }
+        if threshold == u64::MAX && stats.spilled_bytes > 0 {
+            return fail("unbounded budget must never spill");
+        }
+        Ok(())
+    });
+}
+
+/// Spilled execution ≡ serial oracle on real engines: a random corpus, a
+/// random engine, and a random spill threshold (down to 0) must leave
+/// workload output bit-identical — spilling may only change speed.
+#[test]
+fn prop_spill_run_parity() {
+    use blaze::engines::Engine;
+    use blaze::mapreduce::{run_serial, run_serial_inputs, JobInputs, JobSpec};
+    use blaze::workloads::{InvertedIndex, Join, WordCount};
+    use std::sync::Arc;
+
+    check_with(Config { cases: 8, size: 32, ..Default::default() }, "spill-parity", |g| {
+        let text: String =
+            (0..g.usize_in(1, 30)).map(|_| g.line(8)).collect::<Vec<_>>().join("\n");
+        let corpus = Corpus::from_text(&text);
+        let engine = *g.choose(&[Engine::Blaze, Engine::BlazeTcm, Engine::Spark]);
+        let threshold = *g.choose(&[0u64, 64, 1024, 64 << 10]);
+        let spec = || {
+            JobSpec::new(engine)
+                .nodes(2)
+                .threads_per_node(2)
+                .net(NetModel::ideal())
+                .spill_threshold(threshold)
+        };
+        let ctx = format!("{} threshold={threshold}", engine.label());
+
+        let tok = blaze::corpus::Tokenizer::Spaces;
+        let wc = Arc::new(WordCount::new(tok));
+        let r = spec().run_str(&wc, &corpus).map_err(|e| e.to_string())?;
+        if r.output != run_serial(wc.as_ref(), &corpus) {
+            return fail(format!("wordcount diverged on {ctx}"));
+        }
+
+        let idx = Arc::new(InvertedIndex::new(tok));
+        let r = spec().run_str(&idx, &corpus).map_err(|e| e.to_string())?;
+        if r.output != run_serial(idx.as_ref(), &corpus) {
+            return fail(format!("index diverged on {ctx}"));
+        }
+
+        let right: String =
+            (0..g.usize_in(0, 20)).map(|_| g.line(6)).collect::<Vec<_>>().join("\n");
+        let join_inputs = JobInputs::new()
+            .relation("left", &corpus)
+            .relation("right", &Corpus::from_text(&right));
+        let join = Arc::new(Join::new());
+        let r = spec().run_inputs(&join, &join_inputs).map_err(|e| e.to_string())?;
+        if r.output != run_serial_inputs(join.as_ref(), &join_inputs) {
+            return fail(format!("join diverged on {ctx}"));
+        }
+        Ok(())
+    });
+}
