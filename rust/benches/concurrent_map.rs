@@ -14,13 +14,30 @@ use blaze::benchkit::BenchRunner;
 use blaze::concurrent::{CachePolicy, ConcurrentHashMap, GlobalLockMap, ProbeTable, ShardedLockMap};
 use blaze::corpus::ZipfVocab;
 use blaze::hash::{fxhash, HashKind};
-use blaze::util::pool::{parallel_for, Schedule};
+use blaze::runtime::executor::{ExecCtx, Executor};
 use blaze::util::rng::Xoshiro256;
 
 fn keys(n: usize) -> Vec<String> {
     let vocab = ZipfVocab::english_like(30_000);
     let mut rng = Xoshiro256::new(42);
     (0..n).map(|_| vocab.sample(&mut rng).to_string()).collect()
+}
+
+/// Run `body` over `0..n` as chunked stealable tasks on the shared
+/// work-stealing pool at the given width — the same executor the engines
+/// use, instead of this bench's former ad-hoc thread spawning.
+/// `ctx.worker` is the thread-cache id for the map under test.
+fn pool_for(threads: usize, n: usize, body: impl Fn(ExecCtx, usize) + Sync) {
+    const CHUNK: usize = 1024;
+    let exec = Executor::for_threads(Some(threads));
+    exec.run_tasks(n.div_ceil(CHUNK), |ctx, t| {
+        let lo = t * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        for i in lo..hi {
+            body(ctx, i);
+        }
+    })
+    .expect("bench task panicked");
 }
 
 fn main() {
@@ -60,7 +77,7 @@ fn main() {
                         HashKind::Fx,
                         policy,
                     );
-                    parallel_for(threads, keys.len(), Schedule::Static, |ctx, i| {
+                    pool_for(threads, keys.len(), |ctx, i| {
                         let k = &keys[i];
                         m.upsert_borrowed(
                             ctx.worker,
@@ -82,7 +99,7 @@ fn main() {
         let keys = &keys;
         runner.bench(format!("ShardedLockMap(64), {threads} threads"), "ops", move || {
             let m: ShardedLockMap<String, u64> = ShardedLockMap::new(64, HashKind::Fx);
-            parallel_for(threads, keys.len(), Schedule::Static, |_ctx, i| {
+            pool_for(threads, keys.len(), |_ctx, i| {
                 m.upsert(keys[i].clone(), 1, |a, b| *a += b);
             });
             keys.len() as f64
@@ -93,7 +110,7 @@ fn main() {
         let keys = &keys;
         runner.bench(format!("GlobalLockMap, {threads} threads"), "ops", move || {
             let m: GlobalLockMap<String, u64> = GlobalLockMap::new();
-            parallel_for(threads, keys.len(), Schedule::Static, |_ctx, i| {
+            pool_for(threads, keys.len(), |_ctx, i| {
                 m.upsert(keys[i].clone(), 1, |a, b| *a += b);
             });
             keys.len() as f64

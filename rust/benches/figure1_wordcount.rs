@@ -9,10 +9,16 @@
 //! Expected shape (EXPERIMENTS.md §F1): Blaze ≈ an order of magnitude over
 //! Spark; Blaze TCM ≥ Blaze by a small margin.
 //!
+//! Since the work-stealing executor landed, the scaling figure has a
+//! *real* x-axis: **F1-threads** sweeps the pool width (`--threads`)
+//! across 1/2/4/8 OS threads on the word-count corpus and records the
+//! wall-clock curve in `BENCH_6.json` — actual multicore speedup, not the
+//! simulated `threads_per_node` cost model.
+//!
 //! Scale knobs: BLAZE_BENCH_BYTES (default 32MB; paper used 2GB),
 //! BLAZE_BENCH_REPS.
 
-use blaze::benchkit::{bench_corpus_bytes, BenchRunner};
+use blaze::benchkit::{bench_corpus_bytes, BenchRunner, MachineReport};
 use blaze::cluster::NetModel;
 use blaze::corpus::{Corpus, CorpusSpec};
 use blaze::util::stats::fmt_bytes;
@@ -77,4 +83,43 @@ fn main() {
         }
     }
     scale.finish();
+
+    // --- F1-threads: real executor-width sweep (the paper's scaling
+    // curve with an actual x-axis). Ideal net so the curve isolates
+    // compute scaling; wall-clock per width lands in BENCH_6.json
+    // alongside the workload grid (merged, not clobbered).
+    let mut threads_sweep =
+        BenchRunner::new("F1-threads: words per second vs real executor threads");
+    let mut machine = MachineReport::new();
+    for engine in [EngineChoice::Spark, EngineChoice::BlazeTcm] {
+        for threads in [1usize, 2, 4, 8] {
+            let job = WordCountJob::new(engine)
+                .nodes(2)
+                .threads_per_node(4)
+                .threads(threads)
+                .net(NetModel::ideal());
+            threads_sweep.bench(
+                format!("{} @ {threads} thread(s)", engine.label()),
+                "words",
+                || job.run(&corpus).expect("run").words as f64,
+            );
+            let r = job.run(&corpus).expect("run");
+            machine.row_threaded(
+                "wordcount@figure1",
+                engine.label(),
+                threads,
+                r.wall_secs,
+                r.shuffle_bytes,
+                r.storage.spilled_bytes,
+            );
+        }
+    }
+    threads_sweep.finish();
+    machine.write_merged("BENCH_6.json");
+    let t1 = threads_sweep.results[4].rate(); // Blaze TCM @ 1 thread
+    let t4 = threads_sweep.results[6].rate(); // Blaze TCM @ 4 threads
+    println!(
+        "F1-threads headline (Blaze TCM): 1 -> 4 real threads = {:.2}x words/sec",
+        t4 / t1.max(1e-12)
+    );
 }

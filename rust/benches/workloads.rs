@@ -33,9 +33,23 @@ fn spec(engine: Engine) -> JobSpec {
         .net(NetModel::aws_like())
 }
 
-/// One machine-readable row from a single-pass job report.
-fn machine_row<O>(m: &mut MachineReport, name: &str, engine: Engine, r: &JobReport<O>) {
-    m.row(name, engine.label(), r.wall_secs, r.shuffle_bytes, r.storage.spilled_bytes);
+/// One machine-readable row from a single-pass job report, tagged with
+/// the real executor width it ran at.
+fn machine_row<O>(
+    m: &mut MachineReport,
+    name: &str,
+    engine: Engine,
+    threads: usize,
+    r: &JobReport<O>,
+) {
+    m.row_threaded(
+        name,
+        engine.label(),
+        threads,
+        r.wall_secs,
+        r.shuffle_bytes,
+        r.storage.spilled_bytes,
+    );
 }
 
 fn main() {
@@ -169,42 +183,52 @@ fn main() {
         );
     }
 
-    // BENCH_5.json: the machine-readable companion (per-workload wall,
-    // shuffle bytes, spilled bytes) — one fresh run per cell. Default
-    // rows never spill; the `@spill64k` rows force the bounded-memory
-    // exchange so the spill column is populated (the full threshold
-    // sweep lives in `cargo bench --bench spill`).
+    // BENCH_6.json: the machine-readable companion (per-workload wall,
+    // shuffle bytes, spilled bytes) — every workload row swept across
+    // real executor widths 1/2/4/8 (the `threads` axis), one fresh run
+    // per cell. Written merged so the figure1_wordcount scaling sweep's
+    // rows land in the same file. Default rows never spill; the
+    // `@spill64k` rows (threads = 4) force the bounded-memory exchange so
+    // the spill column is populated (the full threshold sweep lives in
+    // `cargo bench --bench spill`).
     let mut machine = MachineReport::new();
     for engine in engines {
-        machine_row(&mut machine, "wordcount", engine, &spec(engine).run_str(&wc, &corpus).expect("wordcount"));
-        machine_row(&mut machine, "index", engine, &spec(engine).run_str(&idx, &corpus).expect("index"));
-        machine_row(&mut machine, "top-k", engine, &spec(engine).run_str(&topk, &corpus).expect("top-k"));
-        machine_row(&mut machine, "length-hist", engine, &spec(engine).run(&hist, &corpus).expect("length-hist"));
-        machine_row(&mut machine, "join", engine, &spec(engine).run_inputs(&join, &join_inputs).expect("join"));
-        machine_row(&mut machine, "distinct", engine, &spec(engine).run(&distinct, &corpus).expect("distinct"));
-        machine_row(&mut machine, "grep", engine, &spec(engine).run(&grep, &corpus).expect("grep"));
-        let chained = run_chained(&spec(engine), &sessionize, &logs).expect("sessionize");
-        machine.row(
-            "sessionize",
-            engine.label(),
-            chained.wall_secs,
-            chained.shuffle_bytes,
-            chained.storage.spilled_bytes,
-        );
+        for threads in [1usize, 2, 4, 8] {
+            let spec = |e: Engine| spec(e).threads(threads);
+            let m = &mut machine;
+            machine_row(m, "wordcount", engine, threads, &spec(engine).run_str(&wc, &corpus).expect("wordcount"));
+            machine_row(m, "index", engine, threads, &spec(engine).run_str(&idx, &corpus).expect("index"));
+            machine_row(m, "top-k", engine, threads, &spec(engine).run_str(&topk, &corpus).expect("top-k"));
+            machine_row(m, "length-hist", engine, threads, &spec(engine).run(&hist, &corpus).expect("length-hist"));
+            machine_row(m, "join", engine, threads, &spec(engine).run_inputs(&join, &join_inputs).expect("join"));
+            machine_row(m, "distinct", engine, threads, &spec(engine).run(&distinct, &corpus).expect("distinct"));
+            machine_row(m, "grep", engine, threads, &spec(engine).run(&grep, &corpus).expect("grep"));
+            let chained = run_chained(&spec(engine), &sessionize, &logs).expect("sessionize");
+            machine.row_threaded(
+                "sessionize",
+                engine.label(),
+                threads,
+                chained.wall_secs,
+                chained.shuffle_bytes,
+                chained.storage.spilled_bytes,
+            );
+        }
         // The spill cliff's anchor points.
-        let spill = |s: JobSpec| s.spill_threshold(64 << 10);
+        let spill = |s: JobSpec| s.spill_threshold(64 << 10).threads(4);
         machine_row(
             &mut machine,
             "wordcount@spill64k",
             engine,
+            4,
             &spill(spec(engine)).run_str(&wc, &corpus).expect("wordcount spill"),
         );
         machine_row(
             &mut machine,
             "join@spill64k",
             engine,
+            4,
             &spill(spec(engine)).run_inputs(&join, &join_inputs).expect("join spill"),
         );
     }
-    machine.write("BENCH_5.json");
+    machine.write_merged("BENCH_6.json");
 }

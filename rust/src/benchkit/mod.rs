@@ -181,11 +181,15 @@ pub fn stage_table(
 }
 
 /// One row of a machine-readable bench report: what the perf-trajectory
-/// tooling consumes (wall + shuffle + spill volume per workload×engine).
+/// tooling consumes (wall + shuffle + spill volume per
+/// workload×engine×threads).
 #[derive(Clone, Debug)]
 pub struct MachineRow {
     pub workload: String,
     pub engine: String,
+    /// Real executor width the row ran at (`0` = unrecorded/auto — rows
+    /// from benches that don't sweep the thread axis).
+    pub threads: usize,
     pub wall_secs: f64,
     pub shuffle_bytes: u64,
     pub spilled_bytes: u64,
@@ -213,9 +217,24 @@ impl MachineReport {
         shuffle_bytes: u64,
         spilled_bytes: u64,
     ) {
+        self.row_threaded(workload, engine, 0, wall_secs, shuffle_bytes, spilled_bytes);
+    }
+
+    /// [`row`](Self::row) with the real executor width recorded — the
+    /// thread axis of the scaling sweeps.
+    pub fn row_threaded(
+        &mut self,
+        workload: impl Into<String>,
+        engine: impl Into<String>,
+        threads: usize,
+        wall_secs: f64,
+        shuffle_bytes: u64,
+        spilled_bytes: u64,
+    ) {
         self.rows.push(MachineRow {
             workload: workload.into(),
             engine: engine.into(),
+            threads,
             wall_secs,
             shuffle_bytes,
             spilled_bytes,
@@ -241,10 +260,11 @@ impl MachineReport {
         let mut out = String::from("{\n  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"wall_secs\": {:.6}, \
-                 \"shuffle_bytes\": {}, \"spilled_bytes\": {}}}{}\n",
+                "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
+                 \"wall_secs\": {:.6}, \"shuffle_bytes\": {}, \"spilled_bytes\": {}}}{}\n",
                 esc(&r.workload),
                 esc(&r.engine),
+                r.threads,
                 r.wall_secs,
                 r.shuffle_bytes,
                 r.spilled_bytes,
@@ -267,6 +287,76 @@ impl MachineReport {
             Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
         }
     }
+
+    /// Like [`write`](Self::write), but rows already in the file whose
+    /// `(workload, engine, threads)` key this report does **not** re-emit
+    /// are kept — so several bench binaries (`workloads`,
+    /// `figure1_wordcount`) can each contribute their slice of one
+    /// `BENCH_N.json` without clobbering the other's rows.
+    pub fn write_merged(&self, name: &str) {
+        let path = std::path::Path::new("target/bench-results").join(name);
+        let mut merged = MachineReport::new();
+        if let Ok(existing) = std::fs::read_to_string(&path) {
+            merged.rows.extend(parse_rows(&existing).into_iter().filter(|old| {
+                !self.rows.iter().any(|r| {
+                    r.workload == old.workload
+                        && r.engine == old.engine
+                        && r.threads == old.threads
+                })
+            }));
+        }
+        merged.rows.extend(self.rows.iter().cloned());
+        merged.write(name);
+    }
+}
+
+/// Parse rows back out of [`MachineReport::to_json`] output (one row
+/// object per line — the only format [`MachineReport::write`] produces).
+/// Tolerant: lines that don't carry the row fields are skipped.
+pub fn parse_rows(json: &str) -> Vec<MachineRow> {
+    fn str_field(line: &str, key: &str) -> Option<String> {
+        let tag = format!("\"{key}\": \"");
+        let rest = &line[line.find(&tag)? + tag.len()..];
+        let mut out = String::new();
+        let mut chars = rest.chars();
+        while let Some(c) = chars.next() {
+            match c {
+                '"' => return Some(out),
+                '\\' => match chars.next()? {
+                    'n' => out.push('\n'),
+                    'u' => {
+                        let hex: String = chars.by_ref().take(4).collect();
+                        out.push(char::from_u32(u32::from_str_radix(&hex, 16).ok()?)?);
+                    }
+                    c => out.push(c),
+                },
+                c => out.push(c),
+            }
+        }
+        None
+    }
+    fn num_field<T: std::str::FromStr>(line: &str, key: &str) -> Option<T> {
+        let tag = format!("\"{key}\": ");
+        let rest = &line[line.find(&tag)? + tag.len()..];
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    }
+    json.lines()
+        .filter_map(|line| {
+            Some(MachineRow {
+                workload: str_field(line, "workload")?,
+                engine: str_field(line, "engine")?,
+                // Absent in pre-threads files: read as the same
+                // "unrecorded" marker `row` writes.
+                threads: num_field(line, "threads").unwrap_or(0),
+                wall_secs: num_field(line, "wall_secs")?,
+                shuffle_bytes: num_field(line, "shuffle_bytes")?,
+                spilled_bytes: num_field(line, "spilled_bytes")?,
+            })
+        })
+        .collect()
 }
 
 /// Corpus size for word-count benches.
@@ -312,9 +402,11 @@ mod tests {
         let mut r = MachineReport::new();
         assert!(r.is_empty());
         r.row("wordcount", "spark", 0.25, 1024, 0);
-        r.row("join", "blaze-tcm", 1.5, 4096, 2048);
+        r.row_threaded("join", "blaze-tcm", 4, 1.5, 4096, 2048);
         let json = r.to_json();
         assert!(json.contains("\"workload\": \"wordcount\""), "{json}");
+        assert!(json.contains("\"threads\": 0"), "{json}");
+        assert!(json.contains("\"threads\": 4"), "{json}");
         assert!(json.contains("\"spilled_bytes\": 2048"), "{json}");
         // Exactly one separating comma between the two rows.
         assert_eq!(json.matches("},\n").count(), 1, "{json}");
@@ -328,5 +420,27 @@ mod tests {
         let json = r.to_json();
         assert!(json.contains("we\\\"ird\\\\name"), "{json}");
         assert!(json.contains("e\\nngine"), "{json}");
+    }
+
+    #[test]
+    fn machine_report_round_trips_through_parse() {
+        let mut r = MachineReport::new();
+        r.row_threaded("wordcount", "spark", 2, 0.25, 1024, 0);
+        r.row("we\"ird\\name", "e\nngine", 1.5, 4096, 2048);
+        let rows = parse_rows(&r.to_json());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].workload, "wordcount");
+        assert_eq!(rows[0].threads, 2);
+        assert_eq!(rows[0].shuffle_bytes, 1024);
+        assert_eq!(rows[1].workload, "we\"ird\\name");
+        assert_eq!(rows[1].engine, "e\nngine");
+        assert_eq!(rows[1].threads, 0);
+        assert_eq!(rows[1].spilled_bytes, 2048);
+    }
+
+    #[test]
+    fn parse_rows_skips_non_row_lines() {
+        let rows = parse_rows("{\n  \"rows\": [\n  ]\n}\nnot json\n");
+        assert!(rows.is_empty());
     }
 }

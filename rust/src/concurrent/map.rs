@@ -101,8 +101,13 @@ pub struct ConcurrentHashMap<K: MapKey, V: MapValue> {
     stats: Vec<Padded<MapStats>>,
 }
 
-/// Default segment count: enough that `T` threads rarely collide on a
-/// segment (8× threads rounded up to a power of two, min 32).
+/// Default segment count: enough that `nthreads` concurrent writers
+/// rarely collide on a segment (8× writers rounded up to a power of two,
+/// floor 32 — the full rationale lives in the [module
+/// docs](crate::concurrent#segment-count-heuristic)). Pass the **real**
+/// writer count — the executor pool width
+/// ([`crate::runtime::Executor::width`]) — not the simulated
+/// `threads_per_node` cost knob.
 pub fn default_segments(nthreads: usize) -> usize {
     (nthreads * 8).next_power_of_two().max(32)
 }

@@ -4,6 +4,25 @@
 //! never-blocking writers); [`baseline`] holds the lock-based designs it is
 //! benchmarked against; [`probe::ProbeTable`] is the shared linear-probing
 //! building block.
+//!
+//! # Segment-count heuristic
+//!
+//! [`default_segments`] sizes the lock-striped segment array from the
+//! **real** writer count — since the work-stealing executor landed, that
+//! is the pool width ([`crate::runtime::Executor::width`]), which is what
+//! the engines pass down as `nthreads`, *not* the simulated
+//! `threads_per_node` cost knob. The formula is `8 × writers`, rounded up
+//! to a power of two, floor 32:
+//!
+//! * **8×** — a writer holds a segment lock only to flush a full thread
+//!   cache, but flushes from concurrent writers land on uniformly random
+//!   segments; 8× oversubscription keeps the collision probability per
+//!   flush under ~12% even with every writer flushing at once.
+//! * **power of two** — segment selection is `hash & (nsegments - 1)`;
+//!   a mask is measurably cheaper than `%` on the flush path.
+//! * **floor 32** — a 1–2 thread map still gets enough segments that the
+//!   shuffle's per-segment drain parallelizes downstream, and the fixed
+//!   cost is trivial (a `Mutex` + `ProbeTable` header per segment).
 
 pub mod baseline;
 pub mod map;

@@ -34,7 +34,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::cache::{CacheKey, PartitionCache};
 use crate::cluster::{spawn_on_fabric, Comm, Fabric, FailurePlan, NetModel};
@@ -43,8 +43,8 @@ use crate::corpus::{Corpus, Tokenizer};
 use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
 use crate::hash::HashKind;
 use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
+use crate::runtime::executor::{ExecCtx, Executor, TaskSetError};
 use crate::storage::{DiskTier, HeapSize, StorageStats};
-use crate::util::pool::{self, Schedule};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
 
@@ -68,7 +68,15 @@ impl KeyPath {
 #[derive(Clone, Debug)]
 pub struct BlazeConf {
     pub nnodes: usize,
+    /// **Simulated** per-node thread count — a cost-model parameter (it
+    /// shapes partitioning arithmetic and reports), *not* how many OS
+    /// threads run. Real parallelism is [`BlazeConf::threads`].
     pub threads_per_node: usize,
+    /// **Real** executor width: map tasks and reduce shards of every
+    /// simulated node dispatch onto the process-wide work-stealing pool
+    /// ([`crate::runtime::Executor`]) of this many workers. `None` = auto
+    /// (`BLAZE_THREADS`, else the machine's available parallelism).
+    pub threads: Option<usize>,
     pub net: NetModel,
     pub combine: CombineMode,
     pub hash: HashKind,
@@ -92,6 +100,7 @@ impl Default for BlazeConf {
         Self {
             nnodes: 1,
             threads_per_node: 4,
+            threads: None,
             net: NetModel::aws_like(),
             combine: CombineMode::Eager,
             hash: HashKind::Fx,
@@ -214,9 +223,9 @@ pub fn run_workload_multi<W: Workload>(
                         map.upsert(ctx.worker, k, v, W::combine);
                     });
                     n
-                });
+                })?;
             }
-            records
+            Ok(records)
         },
         |shard| w.finalize_local(shard),
     )
@@ -255,15 +264,15 @@ pub fn run_workload_cached<W: CacheableWorkload>(
         |comm: &Comm, map: &DistHashMap<W::Key, W::Value>| {
             let mut records = 0u64;
             for (rel, lines) in relations.iter().enumerate() {
-                let reparse = || {
-                    Arc::new(parse_node_block(conf, lines, comm.rank, |i, line| {
+                let reparse = || -> Result<Arc<Vec<W::Parsed>>, TaskSetError> {
+                    Ok(Arc::new(parse_node_block(conf, lines, comm.rank, |i, line| {
                         w.parse_rel(rel, i as u64, line)
-                    }))
+                    })?))
                 };
                 let parsed: Arc<Vec<W::Parsed>> = match stage.cache_point(rel) {
                     // The planner assigned no cache point (no cache, or
                     // the recompute ablation): parse, touch nothing.
-                    None => reparse(),
+                    None => reparse()?,
                     Some(cp) => {
                         let key = CacheKey {
                             namespace: cp.namespace,
@@ -281,7 +290,7 @@ pub fn run_workload_cached<W: CacheableWorkload>(
                         match cache.get_encoded::<Vec<W::Parsed>>(&key) {
                             Some(hit) => hit,
                             None => {
-                                let block = reparse();
+                                let block = reparse()?;
                                 let bytes = block.heap_bytes() as u64;
                                 cache.put_encoded(key, Arc::clone(&block), bytes);
                                 block
@@ -290,57 +299,77 @@ pub fn run_workload_cached<W: CacheableWorkload>(
                     }
                 };
                 let emitted = AtomicU64::new(0);
-                pool::parallel_for(
-                    conf.threads_per_node,
-                    parsed.len(),
-                    Schedule::Dynamic { chunk: 64 },
-                    |ctx, i| {
-                        let mut n = 0u64;
-                        w.map_parsed(rel, &parsed[i], &mut |k, v| {
-                            n += 1;
-                            map.upsert(ctx.worker, k, v, W::combine);
-                        });
-                        emitted.fetch_add(n, Ordering::Relaxed);
-                    },
-                );
+                let exec = Executor::for_threads(conf.threads);
+                run_chunked(&exec, 0, parsed.len(), |ctx, i| {
+                    let mut n = 0u64;
+                    w.map_parsed(rel, &parsed[i], &mut |k, v| {
+                        n += 1;
+                        map.upsert(ctx.worker, k, v, W::combine);
+                    });
+                    emitted.fetch_add(n, Ordering::Relaxed);
+                })?;
                 records += emitted.load(Ordering::Relaxed);
             }
-            records
+            Ok(records)
         },
         |shard| w.finalize_local(shard),
     )
 }
 
-/// Parse this node's contiguous block of `lines` across
-/// `threads_per_node` workers, preserving record order (records that
-/// parse to `None` are dropped).
+/// Records per stealable map/parse task: the classic dynamic-schedule
+/// chunk — small enough to balance skewed line lengths, large enough to
+/// amortize the queue round-trip.
+const MAP_CHUNK: usize = 64;
+
+/// Dispatch `[lo, hi)` onto the executor as `⌈n / MAP_CHUNK⌉` stealable
+/// tasks of contiguous indices. `body` runs with the executing pool
+/// worker's [`ExecCtx`] (its `worker` id keys the map's thread caches).
+fn run_chunked<G>(exec: &Executor, lo: usize, hi: usize, body: G) -> Result<(), TaskSetError>
+where
+    G: Fn(ExecCtx, usize) + Sync,
+{
+    let n = hi.saturating_sub(lo);
+    if n == 0 {
+        return Ok(());
+    }
+    exec.run_tasks(n.div_ceil(MAP_CHUNK), |ctx, t| {
+        let a = lo + t * MAP_CHUNK;
+        let b = (a + MAP_CHUNK).min(hi);
+        for i in a..b {
+            body(ctx, i);
+        }
+    })
+}
+
+/// Parse this node's contiguous block of `lines` on the shared executor,
+/// preserving record order (records that parse to `None` are dropped):
+/// each chunk task fills its own slot, and the slots concatenate in chunk
+/// order regardless of which worker parsed what.
 fn parse_node_block<P: Send>(
     conf: &BlazeConf,
     lines: &Arc<Vec<String>>,
     rank: usize,
     parse: impl Fn(usize, &str) -> Option<P> + Sync,
-) -> Vec<P> {
+) -> Result<Vec<P>, TaskSetError> {
     let range = DistRange::new(0, lines.len() as i64);
     let (lo, hi) = range.node_block(rank, conf.nnodes);
-    let nthreads = conf.threads_per_node.max(1);
-    let chunk = ((hi - lo).div_ceil(nthreads)).max(1);
-    let mut out = Vec::with_capacity(hi - lo);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..nthreads)
-            .map(|t| {
-                let parse = &parse;
-                scope.spawn(move || {
-                    let a = (lo + t * chunk).min(hi);
-                    let b = (a + chunk).min(hi);
-                    (a..b).filter_map(|i| parse(i, &lines[i])).collect::<Vec<P>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            out.extend(h.join().expect("parse worker panicked"));
-        }
-    });
-    out
+    let n = hi.saturating_sub(lo);
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let exec = Executor::for_threads(conf.threads);
+    let ntasks = n.div_ceil(MAP_CHUNK);
+    let slots: Vec<Mutex<Vec<P>>> = (0..ntasks).map(|_| Mutex::new(Vec::new())).collect();
+    exec.run_tasks(ntasks, |_ctx, t| {
+        let a = lo + t * MAP_CHUNK;
+        let b = (a + MAP_CHUNK).min(hi);
+        *slots[t].lock().unwrap() = (a..b).filter_map(|i| parse(i, &lines[i])).collect();
+    })?;
+    let mut out = Vec::with_capacity(n);
+    for s in slots {
+        out.extend(s.into_inner().unwrap());
+    }
+    Ok(out)
 }
 
 /// Run a string-keyed [`StrWorkload`] through the zero-alloc borrowed-key
@@ -414,31 +443,27 @@ pub fn word_count_with_failures(
 }
 
 /// Map this node's block of the record range: `per_record(ctx, i, line)`
-/// for every owned index, across `threads_per_node` OpenMP-style workers.
-/// Returns the total emission count reported by `per_record`.
+/// for every owned index, as chunked stealable tasks on the shared
+/// work-stealing executor. Returns the total emission count reported by
+/// `per_record`, or the task-set error if any map task panicked.
 fn map_node_block<F>(
     conf: &BlazeConf,
     lines: &Arc<Vec<String>>,
     rank: usize,
     per_record: F,
-) -> u64
+) -> Result<u64, TaskSetError>
 where
-    F: Fn(pool::WorkerCtx, usize, &str) -> u64 + Sync,
+    F: Fn(ExecCtx, usize, &str) -> u64 + Sync,
 {
     let range = DistRange::new(0, lines.len() as i64);
     let (lo, hi) = range.node_block(rank, conf.nnodes);
+    let exec = Executor::for_threads(conf.threads);
     let records = AtomicU64::new(0);
-    pool::parallel_for_range(
-        conf.threads_per_node,
-        lo,
-        hi,
-        Schedule::Dynamic { chunk: 64 },
-        |ctx, i| {
-            let n = per_record(ctx, i, &lines[i]);
-            records.fetch_add(n, Ordering::Relaxed);
-        },
-    );
-    records.load(Ordering::Relaxed)
+    run_chunked(&exec, lo, hi, |ctx, i| {
+        let n = per_record(ctx, i, &lines[i]);
+        records.fetch_add(n, Ordering::Relaxed);
+    })?;
+    Ok(records.load(Ordering::Relaxed))
 }
 
 /// Per-node result of one attempt.
@@ -477,7 +502,7 @@ where
     K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
     V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
-    M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
+    M: Fn(&Comm, &DistHashMap<K, V>) -> Result<u64, TaskSetError> + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
 {
     let skip_shuffle = !stage.runs_exchange();
@@ -530,15 +555,19 @@ where
     K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
     V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
-    M: Fn(&Comm, &DistHashMap<K, V>) -> u64 + Sync,
+    M: Fn(&Comm, &DistHashMap<K, V>) -> Result<u64, TaskSetError> + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
 {
     let fabric = Fabric::new(conf.nnodes, conf.net);
+    // The real-execution pool: every node's map tasks dispatch here. The
+    // per-node map is sized by the pool's width, so thread-cache ids the
+    // workers carry ([`ExecCtx::worker`]) always index in range.
+    let exec = Executor::for_threads(conf.threads);
     let run_node = |comm: &Comm| -> NodeOutcome<K, V> {
         let map: DistHashMap<K, V> = DistHashMap::with_policy(
             comm.rank,
             conf.nnodes,
-            conf.threads_per_node,
+            exec.width(),
             conf.hash,
             conf.combine,
             conf.cache_policy,
@@ -549,7 +578,25 @@ where
         // ---- Map phase (the paper's DistRange::map) ----
         let mut sw = Stopwatch::start();
         let mut failed = failures.should_fail_node(comm.rank, 0);
-        let records = if failed { 0 } else { map_node(comm, &map) };
+        let records = if failed {
+            0
+        } else {
+            match map_node(comm, &map) {
+                Ok(n) => n,
+                // A panicking map task fails this node's attempt (the
+                // pool itself survives); the rerun loop treats it
+                // exactly like an injected node failure.
+                Err(e) => {
+                    crate::log_warn!(
+                        "blaze",
+                        "node {}: map phase failed: {e}; rerunning job",
+                        comm.rank
+                    );
+                    failed = true;
+                    0
+                }
+            }
+        };
         let map_secs = sw.restart().as_secs_f64();
 
         // ---- Shuffle phase ----

@@ -22,8 +22,16 @@ use crate::cluster::NetModel;
 pub struct SparkConf {
     /// Simulated cluster size.
     pub nnodes: usize,
-    /// Worker threads per node (r5.xlarge = 4 vCPU).
+    /// **Simulated** worker threads per node (r5.xlarge = 4 vCPU) — a
+    /// cost-model parameter that shapes `default_partitions` and the
+    /// modeled reports, *not* how many OS threads run. Real parallelism
+    /// is [`SparkConf::threads`].
     pub threads_per_node: usize,
+    /// **Real** executor width: stage partitions dispatch as stealable
+    /// tasks onto the process-wide work-stealing pool
+    /// ([`crate::runtime::Executor`]) of this many workers. `None` = auto
+    /// (`BLAZE_THREADS`, else the machine's available parallelism).
+    pub threads: Option<usize>,
     /// Network cost model for cross-node shuffle fetches.
     pub net: NetModel,
     /// Persist shuffle blocks to local "disk" (a temp dir) and retry failed
@@ -84,6 +92,7 @@ impl Default for SparkConf {
         Self {
             nnodes: 1,
             threads_per_node: 4,
+            threads: None,
             net: NetModel::aws_like(),
             fault_tolerance: true,
             serialize_shuffle: true,
@@ -114,6 +123,7 @@ impl SparkConf {
         Self {
             nnodes,
             threads_per_node,
+            threads: None,
             net: NetModel::aws_like(),
             fault_tolerance: false,
             serialize_shuffle: false,
@@ -137,6 +147,7 @@ impl SparkConf {
         Self {
             nnodes,
             threads_per_node,
+            threads: None,
             net: NetModel::ideal(),
             fault_tolerance: true,
             serialize_shuffle: true,

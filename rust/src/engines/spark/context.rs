@@ -4,9 +4,12 @@
 //!
 //! * the **driver** (`run_job`) resolves the lineage into stages and runs
 //!   them in dependency order;
-//! * each **stage** is a set of tasks, one per partition; task `p` is
-//!   placed on node `p % nnodes`, and each node executes its tasks with
-//!   `threads_per_node` worker threads;
+//! * each **stage** is a set of tasks, one per partition; task `p`
+//!   *belongs* to node `p % nnodes` (shuffle-block ownership,
+//!   executor-loss scope), while the tasks themselves execute as
+//!   stealable units on the process-wide work-stealing pool
+//!   ([`crate::runtime::Executor`], the real `--threads` knob —
+//!   `threads_per_node` stays a cost-model parameter);
 //! * every task attempt pays `task_launch_overhead` (driver dispatch +
 //!   task deserialization, milliseconds in real Spark);
 //! * task failures (from the [`FailurePlan`]) are retried up to
@@ -20,8 +23,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::cache::PartitionCache;
 use crate::cluster::FailurePlan;
+use crate::runtime::executor::Executor;
 use crate::storage::{DiskTier, StorageCounters, StorageStats};
-use crate::util::pool::{self, Schedule};
 
 use super::conf::SparkConf;
 use super::block::ShuffleBlockStore;
@@ -246,32 +249,29 @@ impl SparkContext {
         let conf = &inner.conf;
         let error: Mutex<Option<JobError>> = Mutex::new(None);
 
-        std::thread::scope(|scope| {
-            for node in 0..conf.nnodes {
-                let body = &body;
-                let error = &error;
-                scope.spawn(move || {
-                    // This node's tasks: partitions ≡ node (mod nnodes).
-                    let my_tasks: Vec<usize> =
-                        (0..num_partitions).filter(|p| p % conf.nnodes == node).collect();
-                    let tc = TaskCtx { inner, node };
-                    pool::parallel_for(
-                        conf.threads_per_node.min(my_tasks.len().max(1)),
-                        my_tasks.len(),
-                        Schedule::Dynamic { chunk: 1 },
-                        |_wctx, ti| {
-                            if error.lock().unwrap().is_some() {
-                                return; // job already failed; drain quickly
-                            }
-                            let p = my_tasks[ti];
-                            if let Err(e) = run_task_with_retries(&tc, stage, p, body) {
-                                error.lock().unwrap().get_or_insert(e);
-                            }
-                        },
-                    );
-                });
+        // One stealable task per partition on the shared work-stealing
+        // pool. Task `p` still *belongs* to simulated node `p % nnodes`
+        // (shuffle-block ownership, executor-loss scope) no matter which
+        // pool worker steals it.
+        let exec = Executor::for_threads(conf.threads);
+        let ran = exec.run_tasks(num_partitions, |_ctx, p| {
+            if error.lock().unwrap().is_some() {
+                return; // job already failed; drain quickly
+            }
+            let tc = TaskCtx { inner, node: p % conf.nnodes };
+            if let Err(e) = run_task_with_retries(&tc, stage, p, &body) {
+                error.lock().unwrap().get_or_insert(e);
             }
         });
+        if let Err(e) = ran {
+            // A panicking task body fails its task — the pool survives —
+            // and surfaces like any failed task, feeding the driver's
+            // whole-job restart loop.
+            error
+                .lock()
+                .unwrap()
+                .get_or_insert(JobError::TaskFailed { stage, partition: e.first_task });
+        }
 
         match error.into_inner().unwrap() {
             Some(e) => Err(e),

@@ -126,9 +126,31 @@ fn load_relation(args: &Args, input_opt: &str, seed_offset: u64) -> Result<Corpu
 
 fn cluster_opts(cmd: Command) -> Command {
     cmd.opt("nodes", Some("1"), "simulated node count")
-        .opt("threads", Some("4"), "worker threads per node")
+        .opt(
+            "threads",
+            Some("auto"),
+            "real executor threads (work-stealing pool width): auto|<n>",
+        )
+        .opt(
+            "threads-per-node",
+            Some("4"),
+            "simulated worker threads per node (cost model, not OS threads)",
+        )
         .opt("net", Some("aws"), "network model: aws|ideal|slow")
         .opt("tokenizer", Some("paper"), "tokenizer: paper|normalized")
+}
+
+/// `--threads auto|<n>` → `None` (auto-size from the machine) or a pinned
+/// pool width.
+fn parse_threads(args: &Args) -> Result<Option<usize>, String> {
+    let raw = args.get_str("threads");
+    if raw.eq_ignore_ascii_case("auto") {
+        return Ok(None);
+    }
+    match raw.parse::<usize>() {
+        Ok(n) if n > 0 => Ok(Some(n)),
+        _ => Err(format!("bad --threads {raw} (auto or a positive integer)")),
+    }
 }
 
 /// The storage-hierarchy knobs (shared by `run` and `plan`).
@@ -167,9 +189,12 @@ fn apply_spill(mut spec: JobSpec, args: &Args) -> Result<JobSpec, String> {
 fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
     let mut job = WordCountJob::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
-        .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
+        .threads_per_node(args.get_usize("threads-per-node").map_err(|e| e.to_string())?)
         .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
         .tokenizer(Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?);
+    if let Some(t) = parse_threads(args)? {
+        job = job.threads(t);
+    }
     // Spill knobs, when this subcommand defines them (`compare`/`fault`
     // don't): the wordcount facade honors the same budget as the
     // generic-workload path.
@@ -236,12 +261,15 @@ fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
     let engine = Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?;
     let combine = CombineMode::parse(&args.get_str("combine"))
         .ok_or_else(|| format!("bad --combine {}", args.get_str("combine")))?;
-    let spec = JobSpec::new(engine)
+    let mut spec = JobSpec::new(engine)
         .nodes(args.get_usize("nodes").map_err(|e| e.to_string())?)
-        .threads_per_node(args.get_usize("threads").map_err(|e| e.to_string())?)
+        .threads_per_node(args.get_usize("threads-per-node").map_err(|e| e.to_string())?)
         .net(NetModel::parse(&args.get_str("net")).ok_or("bad --net")?)
         .combine(combine)
         .force_shuffle(args.has_flag("force-shuffle"));
+    if let Some(t) = parse_threads(args)? {
+        spec = spec.threads(t);
+    }
     apply_spill(spec, args)
 }
 
@@ -699,12 +727,14 @@ fn cmd_compare() -> Command {
 fn do_compare(args: &Args) -> Result<(), String> {
     let corpus = load_corpus(args)?;
     println!(
-        "corpus: {} ({} words); cluster: {} node(s) x {} thread(s), net={}\n",
+        "corpus: {} ({} words); cluster: {} node(s) x {} simulated thread(s), \
+         net={}; executor threads: {}\n",
         blaze::util::stats::fmt_bytes(corpus.bytes),
         corpus.words,
         args.get_str("nodes"),
-        args.get_str("threads"),
+        args.get_str("threads-per-node"),
         args.get_str("net"),
+        args.get_str("threads"),
     );
     let mut bars = Vec::new();
     for engine in [

@@ -308,7 +308,15 @@ impl std::error::Error for MapReduceError {}
 pub struct JobSpec {
     pub engine: Engine,
     pub nnodes: usize,
+    /// **Simulated** per-node thread count — shapes partitioning
+    /// arithmetic and the engines' cost models, not how many OS threads
+    /// run. Real parallelism is [`JobSpec::threads`].
     pub threads_per_node: usize,
+    /// **Real** executor width: both engines dispatch their map tasks and
+    /// stage partitions onto the process-wide work-stealing pool
+    /// ([`crate::runtime::Executor`]) of this many workers. `None` = auto
+    /// (`BLAZE_THREADS`, else the machine's available parallelism).
+    pub threads: Option<usize>,
     pub net: NetModel,
     /// Blaze: map-side combining mode (A3 ablation).
     pub combine: CombineMode,
@@ -354,6 +362,7 @@ impl JobSpec {
             engine,
             nnodes: 1,
             threads_per_node: 4,
+            threads: None,
             net: NetModel::aws_like(),
             combine: CombineMode::Eager,
             hash: HashKind::Fx,
@@ -376,6 +385,13 @@ impl JobSpec {
 
     pub fn threads_per_node(mut self, t: usize) -> Self {
         self.threads_per_node = t;
+        self
+    }
+
+    /// Pin the real work-stealing executor to `t` OS threads (see
+    /// [`Self::threads`]; default auto-sizes from the machine).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
         self
     }
 
@@ -587,6 +603,7 @@ impl JobSpec {
         BlazeConf {
             nnodes: self.nnodes,
             threads_per_node: self.threads_per_node,
+            threads: self.threads,
             net: self.net,
             combine: self.combine,
             hash: self.hash,
@@ -611,8 +628,12 @@ impl JobSpec {
             c.net = self.net;
             c
         });
-        // The spill knobs are job-level: they override whatever the conf
-        // (preset or explicit) carried, but only when actually set.
+        // The spill and real-thread knobs are job-level: they override
+        // whatever the conf (preset or explicit) carried, but only when
+        // actually set.
+        if self.threads.is_some() {
+            conf.threads = self.threads;
+        }
         if self.spill_threshold.is_some() {
             conf.spill_threshold = self.spill_threshold;
         }

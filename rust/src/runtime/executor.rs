@@ -1,0 +1,646 @@
+//! The real-execution work-stealing stage executor.
+//!
+//! Both engines used to fan each simulated node's work out on ad-hoc
+//! scoped threads (`util::pool::parallel_for` per phase): with N node
+//! threads each spawning `threads_per_node` workers, the process ran
+//! `N × T` OS threads regardless of the machine, so "thread count" was a
+//! cost-model fiction with no real x-axis. This module is the fix: one
+//! process-wide pool of [`Executor::width`] long-lived workers, shared by
+//! every simulated node of every engine. Map tasks and reduce-stage
+//! partitions are submitted as *task sets* and the pool's workers pull
+//! them with classic work stealing:
+//!
+//! * a **global injector** queue receives every submitted task set
+//!   (submitters are the engines' node/driver threads — they are never
+//!   workers, so worker ids stay dense in `[0, width)`);
+//! * each worker owns a **local deque**; when it runs dry it takes a
+//!   batch (`⌈injector/width⌉`, capped) from the injector, and only then
+//!   tries to **steal half** of a sibling's deque — the back half, the
+//!   work its owner (popping from the front) would reach last.
+//!
+//! Determinism: the pool changes *scheduling*, never *results*. Every
+//! caller in this crate folds emissions with an associative + commutative
+//! `combine` into owner-sharded maps (or writes to per-task slots), so
+//! output is bit-identical to the serial oracle at any width — enforced
+//! by the parity grids in `tests/` at widths 1, 2, 4 and 8.
+//!
+//! Panic containment: each task runs under `catch_unwind`; a panicking
+//! task marks the set failed ([`TaskSetError`]) but the worker survives
+//! and keeps draining the queues, so a poisoned job cannot poison the
+//! pool. Engines convert the error into their existing recovery loops
+//! (Blaze's whole-job rerun, the Spark sim's task-failure restart).
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Context handed to every task body: which pool worker is executing it.
+/// Callers key per-thread state (the `ConcurrentHashMap` thread caches)
+/// off `worker`, which is unique among concurrently running tasks.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecCtx {
+    /// Worker index in `[0, width)`.
+    pub worker: usize,
+    /// Pool width (total workers).
+    pub width: usize,
+}
+
+/// A task set failed: at least one task body panicked. The panic payloads
+/// are swallowed (the workers survive); the engines turn this into their
+/// own failure currency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskSetError {
+    /// How many tasks panicked.
+    pub panics: usize,
+    /// Lowest task index that panicked.
+    pub first_task: usize,
+}
+
+impl std::fmt::Display for TaskSetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} task(s) panicked (first: task {})",
+            self.panics, self.first_task
+        )
+    }
+}
+
+impl std::error::Error for TaskSetError {}
+
+/// Steal-side counters, for observability and the fairness tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StealStats {
+    /// Batches taken from the global injector.
+    pub injector_takes: u64,
+    /// Batches stolen from sibling deques.
+    pub steals: u64,
+}
+
+/// A type-erased task: `call(data, index, worker, width)` invokes task
+/// `index` of the set whose harness `data` points to.
+struct RawTask {
+    call: unsafe fn(*const (), usize, usize, usize),
+    data: *const (),
+    index: usize,
+}
+
+// SAFETY: `data` points at a `SetHarness<F>` (`F: Sync`) that the
+// submitting thread keeps alive — it blocks until every task of the set
+// has finished — so sending the pointer to a worker thread is sound.
+unsafe impl Send for RawTask {}
+
+/// Completion state of one submitted task set. Heap-allocated (`Arc`) so
+/// a worker can signal completion safely after the submitter's stack
+/// frame — which holds the closure — becomes eligible for reuse.
+struct SetState {
+    remaining: AtomicUsize,
+    panics: AtomicUsize,
+    first_panic: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl SetState {
+    fn new(n: usize) -> Self {
+        Self {
+            remaining: AtomicUsize::new(n),
+            panics: AtomicUsize::new(0),
+            first_panic: AtomicUsize::new(usize::MAX),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    fn wait_done(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.done_cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// The stack-held harness a task set's `RawTask.data` points to.
+struct SetHarness<F> {
+    state: Arc<SetState>,
+    body: F,
+}
+
+/// The trampoline behind `RawTask.call`.
+///
+/// SAFETY: `data` must point to a live `SetHarness<F>` whose submitter is
+/// blocked in `SetState::wait_done`. After the `fetch_sub` below the
+/// harness may be freed at any moment, so everything past it goes through
+/// the owned `Arc<SetState>` clone only.
+unsafe fn call_task<F>(data: *const (), index: usize, worker: usize, width: usize)
+where
+    F: Fn(ExecCtx, usize) + Sync,
+{
+    let harness = &*(data as *const SetHarness<F>);
+    let state = Arc::clone(&harness.state);
+    let ctx = ExecCtx { worker, width };
+    if catch_unwind(AssertUnwindSafe(|| (harness.body)(ctx, index))).is_err() {
+        state.panics.fetch_add(1, Ordering::Relaxed);
+        state.first_panic.fetch_min(index, Ordering::Relaxed);
+    }
+    if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let mut done = state.done.lock().unwrap();
+        *done = true;
+        state.done_cv.notify_all();
+    }
+}
+
+/// Everything behind the global injector's lock. `unclaimed` counts tasks
+/// sitting in *any* queue (injector or a worker deque) not yet picked up
+/// for execution — the sleep/exit condition.
+struct Shared {
+    injector: VecDeque<RawTask>,
+    unclaimed: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    width: usize,
+    state: Mutex<Shared>,
+    cv: Condvar,
+    deques: Vec<Mutex<VecDeque<RawTask>>>,
+    injector_takes: AtomicU64,
+    steals: AtomicU64,
+}
+
+thread_local! {
+    /// `(pool token, worker id)` of the executor this thread belongs to,
+    /// if it is a pool worker. Lets a nested `run_tasks` from inside a
+    /// task run inline (same worker id, no deadlock) instead of blocking
+    /// a worker on work only workers can do.
+    static WORKER: std::cell::Cell<Option<(usize, usize)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Per-task-batch cap when refilling from the injector: big enough to
+/// amortize the lock, small enough that a straggler's backlog stays
+/// stealable.
+const MAX_TAKE: usize = 32;
+
+impl Inner {
+    /// Identity of this pool, for the nested-submission check. Equal to
+    /// `Arc::as_ptr` of every `Arc<Inner>` handle to this pool.
+    fn token(&self) -> usize {
+        self as *const Inner as usize
+    }
+
+    /// Claim one queued task for execution (bookkeeping only).
+    fn claim(&self) {
+        self.state.lock().unwrap().unclaimed -= 1;
+    }
+
+    /// Refill from the global injector: pop a fair share (≤ [`MAX_TAKE`])
+    /// of the queue, run the first task, park the rest on our deque.
+    fn take_from_injector(&self, me: usize) -> Option<RawTask> {
+        let mut rest = Vec::new();
+        let first = {
+            let mut s = self.state.lock().unwrap();
+            let len = s.injector.len();
+            if len == 0 {
+                return None;
+            }
+            let take = (len / self.width).clamp(1, MAX_TAKE);
+            s.unclaimed -= 1; // the one we run now
+            let first = s.injector.pop_front().unwrap();
+            rest.reserve(take - 1);
+            for _ in 1..take {
+                match s.injector.pop_front() {
+                    Some(t) => rest.push(t),
+                    None => break,
+                }
+            }
+            first
+        };
+        if !rest.is_empty() {
+            let mut d = self.deques[me].lock().unwrap();
+            d.extend(rest);
+        }
+        self.injector_takes.fetch_add(1, Ordering::Relaxed);
+        Some(first)
+    }
+
+    /// Steal the back half of the first non-empty sibling deque — the
+    /// work its owner (popping from the front) would reach last.
+    fn steal(&self, me: usize) -> Option<RawTask> {
+        for k in 1..self.width {
+            let victim = (me + k) % self.width;
+            let mut stolen = {
+                let mut d = self.deques[victim].lock().unwrap();
+                let len = d.len();
+                if len == 0 {
+                    continue;
+                }
+                d.split_off(len - len.div_ceil(2))
+            };
+            let first = stolen.pop_front().unwrap();
+            self.claim();
+            if !stolen.is_empty() {
+                let mut d = self.deques[me].lock().unwrap();
+                d.append(&mut stolen);
+            }
+            self.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(first);
+        }
+        None
+    }
+
+    fn run(&self, task: RawTask, me: usize) {
+        // SAFETY: the task's harness is alive (its submitter is blocked
+        // until `remaining` hits 0, and this task is still counted).
+        unsafe { (task.call)(task.data, task.index, me, self.width) }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, me: usize) {
+    WORKER.with(|c| c.set(Some((inner.token(), me))));
+    loop {
+        let own = self_pop(&inner, me);
+        if let Some(task) = own {
+            inner.claim();
+            inner.run(task, me);
+            continue;
+        }
+        if let Some(task) = inner.take_from_injector(me) {
+            inner.run(task, me);
+            continue;
+        }
+        if let Some(task) = inner.steal(me) {
+            inner.run(task, me);
+            continue;
+        }
+        // Nothing visible. Sleep — or exit once shut down and drained.
+        let s = inner.state.lock().unwrap();
+        if s.unclaimed == 0 {
+            if s.shutdown {
+                return;
+            }
+            // Safe plain wait: every submit increments `unclaimed` and
+            // notifies under this same lock, so no wakeup can be lost.
+            drop(inner.cv.wait(s).unwrap());
+        } else {
+            // Work exists but a sibling holds it transiently (mid-push
+            // or mid-steal): timed nap, then re-sweep. Correctness never
+            // depends on this timing, only liveness.
+            drop(inner.cv.wait_timeout(s, Duration::from_millis(1)).unwrap());
+        }
+    }
+}
+
+fn self_pop(inner: &Inner, me: usize) -> Option<RawTask> {
+    inner.deques[me].lock().unwrap().pop_front()
+}
+
+/// The work-stealing pool. See the module docs for the architecture.
+/// Create standalone with [`Executor::new`] or get the process-wide
+/// cached instance for a width via [`Executor::for_threads`].
+pub struct Executor {
+    inner: Arc<Inner>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Executor {
+    /// Spawn a pool of `width` workers (`width` is clamped to ≥ 1).
+    pub fn new(width: usize) -> Arc<Executor> {
+        let width = width.max(1);
+        let inner = Arc::new(Inner {
+            width,
+            state: Mutex::new(Shared {
+                injector: VecDeque::new(),
+                unclaimed: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            deques: (0..width).map(|_| Mutex::new(VecDeque::new())).collect(),
+            injector_takes: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        });
+        let handles = (0..width)
+            .map(|me| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("blaze-exec-{me}"))
+                    .spawn(move || worker_loop(inner, me))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Arc::new(Executor { inner, handles: Mutex::new(handles) })
+    }
+
+    /// The process-wide executor for a requested width. `None` = auto
+    /// ([`default_width`]: `BLAZE_THREADS`, else the machine's available
+    /// parallelism). Executors are cached per width and shared by every
+    /// job in the process — workers are spawned once, not per job.
+    pub fn for_threads(threads: Option<usize>) -> Arc<Executor> {
+        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Executor>>>> = OnceLock::new();
+        let width = threads.unwrap_or_else(default_width).max(1);
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        Arc::clone(map.entry(width).or_insert_with(|| Executor::new(width)))
+    }
+
+    /// Number of workers.
+    pub fn width(&self) -> usize {
+        self.inner.width
+    }
+
+    /// Steal-side counters since the pool was created.
+    pub fn stats(&self) -> StealStats {
+        StealStats {
+            injector_takes: self.inner.injector_takes.load(Ordering::Relaxed),
+            steals: self.inner.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `body(ctx, i)` for every `i` in `[0, n)` on the pool and wait
+    /// for all of them. Tasks may run in any order on any worker; `body`
+    /// may borrow from the caller's stack (the call blocks until the set
+    /// completes, like a scoped spawn).
+    ///
+    /// Called from inside a pool task (of *this* executor), the whole set
+    /// runs inline under the current worker's id — nested submission can
+    /// never deadlock the pool, and `ctx.worker` stays a valid exclusive
+    /// index for tid-keyed structures.
+    ///
+    /// Returns `Err` if any task panicked (see [`TaskSetError`]); the
+    /// remaining tasks still run to completion and the pool stays usable.
+    pub fn run_tasks<F>(&self, n: usize, body: F) -> Result<(), TaskSetError>
+    where
+        F: Fn(ExecCtx, usize) + Sync,
+    {
+        if n == 0 {
+            return Ok(());
+        }
+        if let Some((token, worker)) = WORKER.with(|c| c.get()) {
+            if token == self.inner.token() {
+                return run_inline(worker, self.inner.width, n, &body);
+            }
+        }
+        let state = Arc::new(SetState::new(n));
+        let harness = SetHarness { state: Arc::clone(&state), body };
+        let data = &harness as *const SetHarness<F> as *const ();
+        let call = call_task::<F> as unsafe fn(*const (), usize, usize, usize);
+        {
+            let mut s = self.inner.state.lock().unwrap();
+            s.injector.extend((0..n).map(|index| RawTask { call, data, index }));
+            s.unclaimed += n;
+            self.inner.cv.notify_all();
+        }
+        state.wait_done();
+        let panics = state.panics.load(Ordering::Acquire);
+        if panics == 0 {
+            Ok(())
+        } else {
+            Err(TaskSetError { panics, first_task: state.first_panic.load(Ordering::Acquire) })
+        }
+    }
+}
+
+impl Drop for Executor {
+    /// Shut down: workers drain every queued task, then exit, and the
+    /// drop joins them. (Cached [`Executor::for_threads`] instances live
+    /// for the process and are never dropped.)
+    fn drop(&mut self) {
+        {
+            let mut s = self.inner.state.lock().unwrap();
+            s.shutdown = true;
+            self.inner.cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_inline<F>(worker: usize, width: usize, n: usize, body: &F) -> Result<(), TaskSetError>
+where
+    F: Fn(ExecCtx, usize) + Sync,
+{
+    let ctx = ExecCtx { worker, width };
+    let mut panics = 0usize;
+    let mut first_task = usize::MAX;
+    for i in 0..n {
+        if catch_unwind(AssertUnwindSafe(|| body(ctx, i))).is_err() {
+            panics += 1;
+            if first_task == usize::MAX {
+                first_task = i;
+            }
+        }
+    }
+    if panics == 0 {
+        Ok(())
+    } else {
+        Err(TaskSetError { panics, first_task })
+    }
+}
+
+/// Pool width when the caller does not pin one: the `BLAZE_THREADS`
+/// environment variable if set to a positive integer, else the machine's
+/// available parallelism.
+pub fn default_width() -> usize {
+    if let Some(n) = width_from_env(std::env::var("BLAZE_THREADS").ok().as_deref()) {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parse a `BLAZE_THREADS`-style override. `None`/empty/non-numeric/zero
+/// all mean "no override".
+fn width_from_env(value: Option<&str>) -> Option<usize> {
+    value.and_then(|v| v.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_each_index_once_at_every_width() {
+        for width in [1usize, 2, 3, 4, 8] {
+            let exec = Executor::new(width);
+            for n in [1usize, 7, 64, 1000] {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                exec.run_tasks(n, |_ctx, i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "width={width} n={n} index={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_ids_are_dense_and_in_range() {
+        let exec = Executor::new(4);
+        exec.run_tasks(500, |ctx, _| {
+            assert!(ctx.worker < ctx.width);
+            assert_eq!(ctx.width, 4);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn empty_set_is_noop() {
+        let exec = Executor::new(2);
+        exec.run_tasks(0, |_, _| panic!("must not run")).unwrap();
+    }
+
+    #[test]
+    fn nested_submission_runs_inline_without_deadlock() {
+        let exec = Executor::new(2);
+        let total = AtomicU64::new(0);
+        exec.run_tasks(8, |outer, _| {
+            // A nested set from inside a task must not block a worker on
+            // work only workers can do. It runs inline under our id.
+            exec.run_tasks(16, |inner, _| {
+                assert_eq!(inner.worker, outer.worker);
+                total.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn panic_is_contained_and_reported() {
+        let exec = Executor::new(4);
+        let ran = AtomicU64::new(0);
+        let err = exec
+            .run_tasks(100, |_ctx, i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 13 || i == 57 {
+                    panic!("boom");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err.panics, 2);
+        assert!(err.first_task == 13 || err.first_task == 57);
+        // Panicking tasks still count as run; the rest all completed.
+        assert_eq!(ran.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_survives_panics_and_stays_usable() {
+        let exec = Executor::new(2);
+        for _ in 0..3 {
+            assert!(exec.run_tasks(10, |_, _| panic!("poison attempt")).is_err());
+        }
+        let sum = AtomicU64::new(0);
+        exec.run_tasks(100, |_, i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), (0..100u64).sum::<u64>());
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let exec = Executor::new(4);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let exec = &exec;
+                let total = &total;
+                scope.spawn(move || {
+                    exec.run_tasks(250, |_, _| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap();
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn straggler_backlog_is_stolen() {
+        // Worker A refills a big batch from the injector, then stalls on
+        // the set's one slow task; its parked backlog must migrate to the
+        // idle sibling rather than wait behind the straggler.
+        let exec = Executor::new(2);
+        let by_worker = [AtomicU64::new(0), AtomicU64::new(0)];
+        exec.run_tasks(64, |ctx, i| {
+            by_worker[ctx.worker].fetch_add(1, Ordering::Relaxed);
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(250));
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+        .unwrap();
+        let a = by_worker[0].load(Ordering::Relaxed);
+        let b = by_worker[1].load(Ordering::Relaxed);
+        assert_eq!(a + b, 64);
+        assert!(a > 0 && b > 0, "both workers must participate: {a} vs {b}");
+        let stats = exec.stats();
+        assert!(stats.injector_takes > 0);
+        assert!(
+            stats.steals > 0,
+            "the straggler's parked backlog must be stolen: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly_with_concurrent_submitter() {
+        let exec = Executor::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let exec = Arc::clone(&exec);
+            let count = Arc::clone(&count);
+            std::thread::spawn(move || {
+                exec.run_tasks(50, |_, _| {
+                    std::thread::sleep(Duration::from_millis(1));
+                    count.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+            })
+        };
+        drop(exec); // the submitter's clone keeps the pool alive
+        handle.join().unwrap();
+        // Every queued task ran before the last ref dropped the pool.
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn for_threads_caches_per_width() {
+        let a = Executor::for_threads(Some(3));
+        let b = Executor::for_threads(Some(3));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.width(), 3);
+        let c = Executor::for_threads(Some(5));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.width(), 5);
+    }
+
+    #[test]
+    fn width_env_override_parsing() {
+        assert_eq!(width_from_env(None), None);
+        assert_eq!(width_from_env(Some("")), None);
+        assert_eq!(width_from_env(Some("abc")), None);
+        assert_eq!(width_from_env(Some("0")), None);
+        assert_eq!(width_from_env(Some("6")), Some(6));
+        assert_eq!(width_from_env(Some(" 12 ")), Some(12));
+    }
+
+    #[test]
+    fn borrows_caller_stack() {
+        let exec = Executor::new(3);
+        let data = vec![1u64; 256];
+        let sum = AtomicU64::new(0);
+        exec.run_tasks(data.len(), |_, i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), 256);
+    }
+}

@@ -1,11 +1,21 @@
-//! XLA/PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
-//! (`make artifacts`) and executes them from the rust hot path.
+//! Run-time substrate shared by both engines.
 //!
-//! Layering contract (see DESIGN.md §3): Python runs only at build time;
-//! these modules make the rust binary self-contained at run time.
+//! Two halves:
+//!
+//! * [`executor`] — the process-wide **work-stealing thread pool** both
+//!   engines dispatch their map tasks and reduce-stage partitions onto
+//!   (the real `--threads` knob, as opposed to the simulated
+//!   `threads_per_node` cost model);
+//! * [`client`]/[`histogram`] — the XLA/PJRT runtime: loads AOT
+//!   artifacts produced by `python/compile/aot.py` (`make artifacts`)
+//!   and executes them from the rust hot path. Layering contract (see
+//!   DESIGN.md §3): Python runs only at build time; these modules make
+//!   the rust binary self-contained at run time.
 
 pub mod client;
+pub mod executor;
 pub mod histogram;
 
 pub use client::{Executable, Runtime};
+pub use executor::{default_width, ExecCtx, Executor, StealStats, TaskSetError};
 pub use histogram::{hash_bucket_of, HistogramRuntime, ShardSpec, HASH_MULT};

@@ -47,7 +47,12 @@ pub use crate::engines::Engine as EngineChoice;
 pub struct WordCountJob {
     pub engine: EngineChoice,
     pub nnodes: usize,
+    /// Simulated per-node thread count (cost model); see
+    /// [`JobSpec::threads_per_node`].
     pub threads_per_node: usize,
+    /// Real work-stealing executor width (see [`JobSpec::threads`]);
+    /// `None` = auto.
+    pub threads: Option<usize>,
     pub net: NetModel,
     pub tokenizer: Tokenizer,
     /// Blaze: map-side combining mode (A3 ablation).
@@ -74,6 +79,7 @@ impl WordCountJob {
             engine,
             nnodes: 1,
             threads_per_node: 4,
+            threads: None,
             net: NetModel::aws_like(),
             tokenizer: Tokenizer::Spaces,
             combine: CombineMode::Eager,
@@ -93,6 +99,12 @@ impl WordCountJob {
 
     pub fn threads_per_node(mut self, t: usize) -> Self {
         self.threads_per_node = t;
+        self
+    }
+
+    /// Pin the real work-stealing executor to `t` OS threads.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
         self
     }
 
@@ -145,6 +157,7 @@ impl WordCountJob {
             engine: self.engine,
             nnodes: self.nnodes,
             threads_per_node: self.threads_per_node,
+            threads: self.threads,
             net: self.net,
             combine: self.combine,
             hash: self.hash,

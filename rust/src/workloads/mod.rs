@@ -62,7 +62,12 @@
 //!    `num_relations` and stub `map` with a panic (engines only call
 //!    `map_rel` — see [`Join`]). `combine` must be associative and
 //!    commutative: engines fold in thread, cache, and shuffle arrival
-//!    order.
+//!    order — and since the real work-stealing executor
+//!    ([`crate::runtime::Executor`]) landed, fold order also depends on
+//!    *steal order*, which varies run to run at any `--threads` width
+//!    above 1. An order-sensitive `combine` would be flaky, not just
+//!    wrong on one engine; the thread-sweep parity grid
+//!    (`tests/integration_spill.rs`) catches this at widths 1/2/4/8.
 //! 2. **Respect the `finalize_local` contract.** Engines apply it
 //!    independently to each owned shard, so it must be a *filtering
 //!    partial reduce*: for any partition of the reduced entries into

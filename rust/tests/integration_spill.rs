@@ -256,6 +256,109 @@ fn kmeans_spill_parity() {
     }
 }
 
+/// The work-stealing executor's acceptance gate: the real pool width must
+/// be invisible in the output. Every workload shape — single-pass,
+/// zero-shuffle, multi-input, two-stage chained, and iterative — runs on
+/// every engine at widths 1/2/4/8 under the 2 KB spill budget and must
+/// stay bit-identical to the serial oracle. Steal order only reorders
+/// combine applications (associative + commutative) and finalize
+/// canonicalizes, so any divergence here is an executor bug.
+#[test]
+fn thread_sweep_spill_parity_all_workloads() {
+    let text = corpus(48 << 10, 64);
+    let left = corpus(24 << 10, 65);
+    let right = corpus(24 << 10, 66);
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let idx = Arc::new(InvertedIndex::new(Tokenizer::Spaces));
+    let topk = Arc::new(TopKWords::new(Tokenizer::Spaces, 12));
+    let hist = Arc::new(LengthHistogram::new(Tokenizer::Spaces));
+    let distinct = Arc::new(DistinctCount::new(Tokenizer::Spaces));
+    let grep = Arc::new(Grep::new("the".to_string()));
+    let join = Arc::new(Join::new());
+    let join_inputs = JobInputs::new().relation("left", &left).relation("right", &right);
+    let expect_wc = run_serial(wc.as_ref(), &text);
+    let expect_idx = run_serial(idx.as_ref(), &text);
+    let expect_topk = run_serial(topk.as_ref(), &text);
+    let expect_hist = run_serial(hist.as_ref(), &text);
+    let expect_distinct = run_serial(distinct.as_ref(), &text);
+    let expect_grep = run_serial(grep.as_ref(), &text);
+    let expect_join = run_serial_inputs(join.as_ref(), &join_inputs);
+
+    let gap = 1800u64;
+    let logs =
+        JobInputs::new().relation_lines("logs", Arc::new(synthesize_logs(30, 2000, gap, 67)));
+    let sz = Sessionize::new(gap);
+    let expect_sz = run_chained_serial(&sz, &logs);
+
+    let edges = Corpus::generate(&CorpusSpec {
+        target_bytes: 12 << 10,
+        vocab_size: 300,
+        seed: 68,
+        ..Default::default()
+    });
+    let edge_inputs = JobInputs::new().relation("edges", &edges);
+    let pr = PageRank::new();
+    let it = IterativeSpec::new(3).tolerance(0.0).cache_budget(CacheBudget::Bytes(TINY));
+    let expect_pr = run_iterative_serial(&it, &pr, &edge_inputs);
+
+    for threads in [1usize, 2, 4, 8] {
+        for engine in ENGINES {
+            let at = |s: JobSpec| s.threads(threads);
+            let ctx = format!("{} @{threads}T", engine.label());
+            let r = at(spilled(engine)).run_str(&wc, &text).unwrap();
+            assert_eq!(r.output, expect_wc, "wordcount {ctx}");
+            assert!(r.storage.spilled_bytes > 0, "wordcount {ctx} must spill");
+            let r = at(spilled(engine)).run_str(&idx, &text).unwrap();
+            assert_eq!(r.output, expect_idx, "index {ctx}");
+            let r = at(spilled(engine)).run_str(&topk, &text).unwrap();
+            assert_eq!(r.output, expect_topk, "top-k {ctx}");
+            let r = at(spilled(engine)).run(&hist, &text).unwrap();
+            assert_eq!(r.output, expect_hist, "length-hist {ctx}");
+            let r = at(spilled(engine)).run(&distinct, &text).unwrap();
+            assert_eq!(r.output, expect_distinct, "distinct {ctx}");
+            let r = at(spilled(engine)).run(&grep, &text).unwrap();
+            assert_eq!(r.output, expect_grep, "grep {ctx}");
+            let r = at(spilled(engine)).run_inputs(&join, &join_inputs).unwrap();
+            assert_eq!(r.output, expect_join, "join {ctx}");
+            let r = run_chained(&at(spilled(engine)), &sz, &logs).unwrap();
+            assert_eq!(r.lines, expect_sz, "sessionize {ctx}");
+            let r = run_iterative(&at(spilled(engine)), &it, &pr, &edge_inputs).unwrap();
+            assert_eq!(r.state, expect_pr.state, "pagerank {ctx}");
+            assert_eq!(r.iterations, expect_pr.iterations, "pagerank {ctx}");
+        }
+    }
+}
+
+/// Same sweep with injected failures riding on top of the tiny spill
+/// budget: reruns/retries re-dispatch onto the pool, and recovery at any
+/// width must still converge on the serial oracle's bytes.
+#[test]
+fn thread_sweep_failure_parity() {
+    let text = corpus(32 << 10, 69);
+    let wc = Arc::new(WordCount::new(Tokenizer::Spaces));
+    let expect = run_serial(wc.as_ref(), &text);
+    let gap = 1800u64;
+    let logs =
+        JobInputs::new().relation_lines("logs", Arc::new(synthesize_logs(20, 1500, gap, 70)));
+    let sz = Sessionize::new(gap);
+    let expect_sz = run_chained_serial(&sz, &logs);
+    for threads in [1usize, 2, 4, 8] {
+        for engine in [Engine::Blaze, Engine::BlazeTcm, Engine::Spark] {
+            let ctx = format!("{} @{threads}T", engine.label());
+            let r = spilled(engine)
+                .threads(threads)
+                .failures(failure_plan(engine))
+                .run_str(&wc, &text)
+                .unwrap();
+            assert_eq!(r.output, expect, "wordcount {ctx}");
+            assert!(r.storage.spilled_bytes > 0, "wordcount {ctx} must spill");
+            let chained = spilled(engine).threads(threads).failures(failure_plan(engine));
+            let r = run_chained(&chained, &sz, &logs).unwrap();
+            assert_eq!(r.lines, expect_sz, "sessionize {ctx}");
+        }
+    }
+}
+
 #[test]
 fn plan_records_the_spill_threshold() {
     let w = WordCount::new(Tokenizer::Spaces);

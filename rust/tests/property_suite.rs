@@ -300,6 +300,9 @@ fn prop_run_plan_parity_under_random_failures() {
         // one per job.
         let fail_phase = g.usize_in(0, 1);
         let fail_idx = g.usize_in(0, nnodes - 1);
+        // Real work-stealing pool width — steal order must never leak
+        // into output, so any width has to match the serial oracle.
+        let threads = g.usize_in(1, 8);
         let failures = || match engine {
             Engine::Blaze | Engine::BlazeTcm => {
                 FailurePlan::none().fail_node(fail_idx, fail_phase)
@@ -312,12 +315,13 @@ fn prop_run_plan_parity_under_random_failures() {
             JobSpec::new(engine)
                 .nodes(nnodes)
                 .threads_per_node(2)
+                .threads(threads)
                 .net(NetModel::ideal())
                 .failures(failures())
         };
         let tok = blaze::corpus::Tokenizer::Spaces;
         let ctx = format!(
-            "{} (nnodes={nnodes}, fail {fail_idx}@{fail_phase})",
+            "{} (nnodes={nnodes}, threads={threads}, fail {fail_idx}@{fail_phase})",
             engine.label()
         );
         fn parity<T: PartialEq>(label: &str, ctx: &str, got: &T, want: &T) -> Result<(), String> {
@@ -631,14 +635,16 @@ fn prop_spill_run_parity() {
         let corpus = Corpus::from_text(&text);
         let engine = *g.choose(&[Engine::Blaze, Engine::BlazeTcm, Engine::Spark]);
         let threshold = *g.choose(&[0u64, 64, 1024, 64 << 10]);
+        let threads = g.usize_in(1, 8);
         let spec = || {
             JobSpec::new(engine)
                 .nodes(2)
                 .threads_per_node(2)
+                .threads(threads)
                 .net(NetModel::ideal())
                 .spill_threshold(threshold)
         };
-        let ctx = format!("{} threshold={threshold}", engine.label());
+        let ctx = format!("{} threshold={threshold} threads={threads}", engine.label());
 
         let tok = blaze::corpus::Tokenizer::Spaces;
         let wc = Arc::new(WordCount::new(tok));
