@@ -193,6 +193,11 @@ pub struct MachineRow {
     pub wall_secs: f64,
     pub shuffle_bytes: u64,
     pub spilled_bytes: u64,
+    /// Partition-cache hit rate (`hits / (hits + misses)`, in `[0, 1]`)
+    /// of the row's run; `0.0` = unrecorded (rows from benches that don't
+    /// touch the cache). The trace-lab rows (`benches/cache_policies.rs`)
+    /// carry the replayed per-policy rate here.
+    pub hit_rate: f64,
 }
 
 /// Machine-readable companion to the human tables: collected by the
@@ -238,6 +243,28 @@ impl MachineReport {
             wall_secs,
             shuffle_bytes,
             spilled_bytes,
+            hit_rate: 0.0,
+        });
+    }
+
+    /// Trace-lab row: one (workload × policy) replay, keyed like every
+    /// other row (the policy name rides in the `engine` column) plus the
+    /// replayed cache hit rate.
+    pub fn row_cache(
+        &mut self,
+        workload: impl Into<String>,
+        policy: impl Into<String>,
+        wall_secs: f64,
+        hit_rate: f64,
+    ) {
+        self.rows.push(MachineRow {
+            workload: workload.into(),
+            engine: policy.into(),
+            threads: 0,
+            wall_secs,
+            shuffle_bytes: 0,
+            spilled_bytes: 0,
+            hit_rate,
         });
     }
 
@@ -261,13 +288,15 @@ impl MachineReport {
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
-                 \"wall_secs\": {:.6}, \"shuffle_bytes\": {}, \"spilled_bytes\": {}}}{}\n",
+                 \"wall_secs\": {:.6}, \"shuffle_bytes\": {}, \"spilled_bytes\": {}, \
+                 \"hit_rate\": {:.6}}}{}\n",
                 esc(&r.workload),
                 esc(&r.engine),
                 r.threads,
                 r.wall_secs,
                 r.shuffle_bytes,
                 r.spilled_bytes,
+                r.hit_rate,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
         }
@@ -354,6 +383,8 @@ pub fn parse_rows(json: &str) -> Vec<MachineRow> {
                 wall_secs: num_field(line, "wall_secs")?,
                 shuffle_bytes: num_field(line, "shuffle_bytes")?,
                 spilled_bytes: num_field(line, "spilled_bytes")?,
+                // Absent in pre-trace-lab files: read as "unrecorded".
+                hit_rate: num_field(line, "hit_rate").unwrap_or(0.0),
             })
         })
         .collect()
@@ -436,6 +467,24 @@ mod tests {
         assert_eq!(rows[1].engine, "e\nngine");
         assert_eq!(rows[1].threads, 0);
         assert_eq!(rows[1].spilled_bytes, 2048);
+    }
+
+    #[test]
+    fn cache_rows_round_trip_hit_rate() {
+        let mut r = MachineReport::new();
+        r.row_cache("pagerank-trace", "slru", 0.01, 0.8125);
+        r.row("wordcount", "spark", 0.25, 1024, 0);
+        let rows = parse_rows(&r.to_json());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].engine, "slru");
+        assert!((rows[0].hit_rate - 0.8125).abs() < 1e-9);
+        assert_eq!(rows[1].hit_rate, 0.0, "plain rows read as unrecorded");
+        // Pre-hit-rate files parse too, defaulting the new column.
+        let legacy = "    {\"workload\": \"w\", \"engine\": \"e\", \"threads\": 2, \
+                      \"wall_secs\": 1.0, \"shuffle_bytes\": 3, \"spilled_bytes\": 4}\n";
+        let rows = parse_rows(legacy);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].hit_rate, 0.0);
     }
 
     #[test]

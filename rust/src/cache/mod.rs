@@ -60,6 +60,7 @@
 // cache-facing names (and the identity types below) stable.
 pub use crate::storage::HeapSize;
 pub use crate::storage::TieredStore as PartitionCache;
+pub use crate::storage::{BasePolicy, PolicySpec};
 
 /// Memory budget of a [`PartitionCache`] — the `spark.memory.fraction`
 /// stand-in (see the module docs for the mapping).
@@ -111,7 +112,7 @@ impl std::fmt::Display for CacheBudget {
 ///   sim). Keying on the shape means a cache shared across jobs with
 ///   different cluster shapes can never serve a split cut for a
 ///   different decomposition.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CacheKey {
     pub namespace: u64,
     pub generation: u64,
@@ -128,9 +129,11 @@ pub struct CacheStats {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
-    /// Entries refused because they alone exceed the whole budget (all
-    /// entries, when the budget is 0). With a disk tier attached, only
-    /// budget 0 rejects.
+    /// Entries refused memory admission: they alone exceed the whole
+    /// budget (all entries, when the budget is 0), or a TinyLFU-style
+    /// admission filter turned a cold newcomer away. With a disk tier
+    /// attached, size- and filter-rejected `put_encoded` entries still
+    /// land on disk (only budget 0 loses them).
     pub rejected: u64,
     pub bytes_cached: u64,
     pub entries: u64,

@@ -108,8 +108,16 @@ pub struct ConcurrentHashMap<K: MapKey, V: MapValue> {
 /// writer count — the executor pool width
 /// ([`crate::runtime::Executor::width`]) — not the simulated
 /// `threads_per_node` cost knob.
+/// Total: saturates instead of overflowing on absurd widths (`usize::MAX`
+/// would otherwise panic in debug and wrap to 0 segments in release), and
+/// caps at the largest representable power of two.
 pub fn default_segments(nthreads: usize) -> usize {
-    (nthreads * 8).next_power_of_two().max(32)
+    const MAX_POW2: usize = 1 << (usize::BITS - 1);
+    nthreads
+        .saturating_mul(8)
+        .checked_next_power_of_two()
+        .unwrap_or(MAX_POW2)
+        .max(32)
 }
 
 impl<K: MapKey, V: MapValue> ConcurrentHashMap<K, V> {
@@ -364,6 +372,48 @@ mod tests {
     use super::*;
     use crate::util::pool::{parallel_for, Schedule};
     use std::collections::HashMap;
+
+    #[test]
+    fn default_segments_is_a_padded_power_of_two() {
+        for nthreads in 0..=256 {
+            let n = default_segments(nthreads);
+            assert!(n.is_power_of_two(), "{nthreads} -> {n}");
+            assert!(n >= 32, "{nthreads} -> {n} breaks the floor");
+            // ≥ 8 segments per writer, so collisions stay rare.
+            assert!(n >= nthreads * 8, "{nthreads} -> {n}");
+        }
+    }
+
+    #[test]
+    fn default_segments_monotone_and_exact_on_powers_of_two() {
+        // Already-power-of-two products round to themselves, not up.
+        assert_eq!(default_segments(4), 32);
+        assert_eq!(default_segments(8), 64);
+        assert_eq!(default_segments(16), 128);
+        // Off-power widths round up.
+        assert_eq!(default_segments(5), 64);
+        assert_eq!(default_segments(9), 128);
+        let mut prev = 0;
+        for nthreads in 0..=64 {
+            let n = default_segments(nthreads);
+            assert!(n >= prev, "must be monotone in the writer count");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn default_segments_survives_degenerate_widths() {
+        // 0 and 1 take the floor rather than panicking or returning 0.
+        assert_eq!(default_segments(0), 32);
+        assert_eq!(default_segments(1), 32);
+        // Huge widths saturate at the top power of two instead of
+        // overflowing (the old `nthreads * 8` arithmetic panicked in
+        // debug and wrapped in release).
+        let top = 1usize << (usize::BITS - 1);
+        assert_eq!(default_segments(usize::MAX), top);
+        assert_eq!(default_segments(usize::MAX / 8), top);
+        assert_eq!(default_segments(top), top);
+    }
 
     #[test]
     fn single_thread_upsert_get() {

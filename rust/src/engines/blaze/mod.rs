@@ -44,7 +44,7 @@ use crate::dist::{reducer, CombineMode, DistHashMap, DistRange};
 use crate::hash::HashKind;
 use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
 use crate::runtime::executor::{ExecCtx, Executor, TaskSetError};
-use crate::storage::{DiskTier, HeapSize, StorageStats};
+use crate::storage::{DiskTier, HeapSize, PolicySpec, StorageStats};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
 
@@ -93,6 +93,12 @@ pub struct BlazeConf {
     /// many in-flight bytes — was decided at plan time
     /// ([`StagePlan::spill_threshold`]); this conf only places the files.
     pub spill_dir: Option<PathBuf>,
+    /// Eviction policy of the iterative-driver relation cache. Blaze does
+    /// not build its own cache (the driver injects a shared
+    /// [`crate::cache::PartitionCache`]); the field is carried here for
+    /// conf parity with [`super::spark::SparkConf`] so `--cache-policy`
+    /// threads identically through both engines.
+    pub eviction_policy: PolicySpec,
 }
 
 impl Default for BlazeConf {
@@ -109,6 +115,7 @@ impl Default for BlazeConf {
             cache_policy: CachePolicy::default(),
             max_job_reruns: 3,
             spill_dir: None,
+            eviction_policy: PolicySpec::default(),
         }
     }
 }

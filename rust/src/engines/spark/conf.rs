@@ -17,6 +17,7 @@ use std::time::Duration;
 
 use crate::cache::CacheBudget;
 use crate::cluster::NetModel;
+use crate::storage::PolicySpec;
 
 #[derive(Clone, Debug)]
 pub struct SparkConf {
@@ -85,6 +86,11 @@ pub struct SparkConf {
     /// Directory for spill files and persisted shuffle blocks (`None` =
     /// the system temp dir).
     pub spill_dir: Option<PathBuf>,
+    /// Eviction policy of the persist cache the context builds over
+    /// `cache_budget` (the `--cache-policy` knob). Ignored when the
+    /// context is built over an injected shared cache, which keeps the
+    /// policy it was constructed with.
+    pub eviction_policy: PolicySpec,
 }
 
 impl Default for SparkConf {
@@ -107,6 +113,7 @@ impl Default for SparkConf {
             cache_budget: CacheBudget::Unbounded,
             spill_threshold: None,
             spill_dir: None,
+            eviction_policy: PolicySpec::default(),
         }
     }
 }
@@ -138,6 +145,7 @@ impl SparkConf {
             cache_budget: CacheBudget::Unbounded,
             spill_threshold: None,
             spill_dir: None,
+            eviction_policy: PolicySpec::default(),
         }
     }
 
@@ -162,6 +170,7 @@ impl SparkConf {
             cache_budget: CacheBudget::Unbounded,
             spill_threshold: None,
             spill_dir: None,
+            eviction_policy: PolicySpec::default(),
         }
     }
 }

@@ -90,9 +90,14 @@ impl SparkContext {
         let (cache, cache_storage) = if conf.spill_threshold.is_some() {
             let cache_disk = Arc::new(DiskTier::new(conf.spill_dir.clone()));
             let cell = Arc::clone(cache_disk.counters());
-            (Arc::new(PartitionCache::with_spill(conf.cache_budget, cache_disk)), Some(cell))
+            let cache = PartitionCache::with_spill_policy(
+                conf.cache_budget,
+                cache_disk,
+                conf.eviction_policy,
+            );
+            (Arc::new(cache), Some(cell))
         } else {
-            (Arc::new(PartitionCache::new(conf.cache_budget)), None)
+            (Arc::new(PartitionCache::with_policy(conf.cache_budget, conf.eviction_policy)), None)
         };
         Self::build(conf, failures, cache, cache_storage)
     }

@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use blaze::cache::{CacheBudget, PartitionCache};
+use blaze::cache::{CacheBudget, PartitionCache, PolicySpec};
 use blaze::cluster::{FailurePlan, NetModel};
 use blaze::corpus::{Corpus, CorpusSpec, Tokenizer};
 use blaze::dist::CombineMode;
@@ -163,6 +163,18 @@ fn spill_opts(cmd: Command) -> Command {
          disk-backs the partition cache",
     )
     .opt("spill-dir", None, "directory for spill files (default: system temp)")
+    .opt(
+        "cache-policy",
+        Some("lru"),
+        "partition-cache eviction policy: lru|slru|gdsf|tinylfu[-lru|-slru|-gdsf]",
+    )
+}
+
+/// `--cache-policy` → a [`PolicySpec`] (error text lists the menu).
+fn parse_cache_policy(raw: &str) -> Result<PolicySpec, String> {
+    PolicySpec::parse(raw).ok_or_else(|| {
+        format!("bad --cache-policy {raw} (lru|slru|gdsf|tinylfu[-lru|-slru|-gdsf])")
+    })
 }
 
 /// `none|off|unbounded|inf` → no budget; anything else parses as bytes.
@@ -183,6 +195,7 @@ fn apply_spill(mut spec: JobSpec, args: &Args) -> Result<JobSpec, String> {
     if let Some(dir) = args.get("spill-dir") {
         spec = spec.spill_dir(std::path::PathBuf::from(dir));
     }
+    spec = spec.eviction_policy(parse_cache_policy(&args.get_str("cache-policy"))?);
     Ok(spec)
 }
 
@@ -666,9 +679,10 @@ fn iterative_step_plan<I: IterativeWorkload>(
     let budget = args.get_str("cache-budget");
     let budget =
         CacheBudget::parse(&budget).ok_or_else(|| format!("bad --cache-budget {budget}"))?;
+    let policy = spec.eviction_policy.unwrap_or_default();
     let spec = spec
         .clone()
-        .shared_cache(Arc::new(PartitionCache::new(budget)))
+        .shared_cache(Arc::new(PartitionCache::with_policy(budget, policy)))
         .relation_gens(vec![0; rels.len()]);
     let step = w.step(&[]);
     println!("(per-round step plan; the state relation's generation bumps every round)\n");

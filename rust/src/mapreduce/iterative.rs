@@ -234,13 +234,18 @@ pub fn run_iterative<I: IterativeWorkload>(
     // With the spill knob set, the shared cache gets a disk tier: evicted
     // parsed splits demote instead of forcing a reparse (disk-backed
     // persist rather than the PR 3 evict+recompute).
+    let policy = spec.eviction_policy.unwrap_or_default();
     let cache = Arc::new(match spec.spill_threshold {
-        Some(_) => PartitionCache::with_spill(
+        Some(_) => PartitionCache::with_spill_policy(
             it.cache_budget,
             Arc::new(DiskTier::new(spec.spill_dir.clone())),
+            policy,
         ),
-        None => PartitionCache::new(it.cache_budget),
+        None => PartitionCache::with_policy(it.cache_budget, policy),
     });
+    if let Some(rec) = &spec.trace {
+        cache.attach_recorder(Arc::clone(rec));
+    }
     let mut spec = spec.clone().shared_cache(Arc::clone(&cache));
     let nrels = inputs.len() + 1;
 

@@ -98,7 +98,7 @@ use crate::engines::blaze::{BlazeConf, KeyPath};
 use crate::engines::spark::{SparkConf, SparkContext};
 use crate::engines::Engine;
 use crate::hash::HashKind;
-use crate::storage::{HeapSize, StorageStats};
+use crate::storage::{HeapSize, PolicySpec, StorageStats, TraceRecorder};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::{fmt_bytes, fmt_rate, Stopwatch};
 
@@ -354,6 +354,15 @@ pub struct JobSpec {
     pub spill_threshold: Option<u64>,
     /// Directory spill files live under (`None` = the system temp dir).
     pub spill_dir: Option<PathBuf>,
+    /// Eviction policy of every partition cache built from this spec
+    /// (the `--cache-policy` knob; see [`crate::storage::policy`]).
+    /// `None` = whatever the engine conf carries (LRU by default).
+    pub eviction_policy: Option<PolicySpec>,
+    /// Trace-lab hook: when set, the iterative driver attaches this
+    /// recorder to the round-shared partition cache it builds, so every
+    /// real get/put the run issues lands in the recorder's access log
+    /// (see [`crate::storage::trace`]). `None` = no recording overhead.
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 impl JobSpec {
@@ -375,6 +384,8 @@ impl JobSpec {
             relation_gens: Vec::new(),
             spill_threshold: None,
             spill_dir: None,
+            eviction_policy: None,
+            trace: None,
         }
     }
 
@@ -437,6 +448,23 @@ impl JobSpec {
     /// Where spill files live (`None` = system temp dir).
     pub fn spill_dir(mut self, dir: PathBuf) -> Self {
         self.spill_dir = Some(dir);
+        self
+    }
+
+    /// Pick the partition cache's eviction policy (`--cache-policy`):
+    /// LRU, SLRU, GDSF, or any of them under a TinyLFU admission filter.
+    /// Applies to every cache built from this spec (the iterative
+    /// driver's, the Spark sim's persist store); caches injected via
+    /// [`Self::shared_cache`] keep the policy they were built with.
+    pub fn eviction_policy(mut self, policy: PolicySpec) -> Self {
+        self.eviction_policy = Some(policy);
+        self
+    }
+
+    /// Record the iterative driver's cache accesses into `rec` (the
+    /// trace lab's capture hook; see [`crate::storage::trace`]).
+    pub fn trace(mut self, rec: Arc<TraceRecorder>) -> Self {
+        self.trace = Some(rec);
         self
     }
 
@@ -615,6 +643,7 @@ impl JobSpec {
             cache_policy: self.cache_policy,
             max_job_reruns: self.max_job_reruns,
             spill_dir: self.spill_dir.clone(),
+            eviction_policy: self.eviction_policy.unwrap_or_default(),
         }
     }
 
@@ -639,6 +668,9 @@ impl JobSpec {
         }
         if self.spill_dir.is_some() {
             conf.spill_dir = self.spill_dir.clone();
+        }
+        if let Some(policy) = self.eviction_policy {
+            conf.eviction_policy = policy;
         }
         match &self.cache {
             // Share the job-spec cache so persisted partitions survive

@@ -1,12 +1,20 @@
 //! `MemoryTier` — the memory tier of the storage hierarchy.
 //!
 //! This is the PR 3 partition-cache mechanism (type-erased values, byte
-//! budget, LRU eviction, hit/miss/evict/reject stats — see
-//! [`crate::cache`] for the `spark.memory.fraction` mapping) factored
-//! into a tier: instead of silently dropping evicted entries, `put`
-//! returns the victims, and victims that carry an [`EncodeFn`] can be
-//! **demoted** to the tier below by the caller ([`super::TieredStore`]
-//! does exactly that). The tier itself never touches disk.
+//! budget, eviction, hit/miss/evict/reject stats — see [`crate::cache`]
+//! for the `spark.memory.fraction` mapping) factored into a tier: instead
+//! of silently dropping evicted entries, `put` returns the victims, and
+//! victims that carry an [`EncodeFn`] can be **demoted** to the tier
+//! below by the caller ([`super::TieredStore`] does exactly that). The
+//! tier itself never touches disk.
+//!
+//! *Which* entry is evicted — and, under an admission filter, whether a
+//! newcomer is stored at all — is decided by a pluggable
+//! [`EvictionPolicy`] (see [`super::policy`]); [`MemoryTier::new`] keeps
+//! the PR 3 LRU behavior, [`MemoryTier::with_policy`] picks any
+//! [`PolicySpec`]. The tier owns the slots and the byte accounting and
+//! mirrors every residency change into the policy, so the two can never
+//! disagree about what is resident.
 
 use std::any::Any;
 use std::collections::HashMap;
@@ -14,6 +22,8 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
 use crate::cache::{CacheBudget, CacheKey, CacheStats};
+
+use super::policy::{EvictionPolicy, PolicySpec};
 
 /// Serializer attached to a demotable entry: produces the wire form of
 /// the stored value (captured over the typed `Arc` at insert time, so no
@@ -30,27 +40,25 @@ pub struct Victim {
     pub encode: Option<EncodeFn>,
 }
 
-/// One resident value: type-erased payload + size + recency + optional
-/// serializer.
+/// One resident value: type-erased payload + size + optional serializer
+/// (recency/frequency metadata lives in the policy).
 struct Slot {
     value: Arc<dyn Any + Send + Sync>,
     bytes: u64,
-    last_used: u64,
     encode: Option<EncodeFn>,
 }
 
-#[derive(Default)]
 struct Inner {
     slots: HashMap<CacheKey, Slot>,
     bytes: u64,
-    /// Monotonic recency clock; bumped on every touch.
-    tick: u64,
+    policy: Box<dyn EvictionPolicy>,
 }
 
-/// The memory-budgeted, size-aware, LRU memory tier (see module docs).
+/// The memory-budgeted, size-aware memory tier (see module docs).
 /// Thread-safe and cheap to share.
 pub struct MemoryTier {
     budget: CacheBudget,
+    spec: PolicySpec,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -63,16 +71,28 @@ impl std::fmt::Debug for MemoryTier {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("MemoryTier")
             .field("budget", &self.budget)
+            .field("policy", &self.spec)
             .field("stats", &self.stats())
             .finish()
     }
 }
 
 impl MemoryTier {
+    /// LRU tier — the PR 3 behavior, verbatim.
     pub fn new(budget: CacheBudget) -> Self {
+        Self::with_policy(budget, PolicySpec::default())
+    }
+
+    /// A tier evicting (and admitting) per `spec`.
+    pub fn with_policy(budget: CacheBudget, spec: PolicySpec) -> Self {
         Self {
             budget,
-            inner: Mutex::new(Inner::default()),
+            spec,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                bytes: 0,
+                policy: spec.build(budget),
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
@@ -85,13 +105,19 @@ impl MemoryTier {
         self.budget
     }
 
+    /// The eviction policy this tier was built with.
+    pub fn policy(&self) -> PolicySpec {
+        self.spec
+    }
+
     /// `true` when the budget is `Bytes(0)`: nothing can ever be admitted.
     pub fn is_disabled(&self) -> bool {
         self.budget == CacheBudget::Bytes(0)
     }
 
     /// Could an entry of `bytes` estimated size ever be admitted to
-    /// *this* tier? (`false` = a `put` is guaranteed to reject it.)
+    /// *this* tier? (`false` = a `put` is guaranteed to reject it; `true`
+    /// does not preclude an admission-filter rejection.)
     pub fn fits(&self, bytes: u64) -> bool {
         match self.budget {
             CacheBudget::Unbounded => true,
@@ -102,26 +128,29 @@ impl MemoryTier {
     /// Look up an entry. A hit bumps its recency and is counted.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
         let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        match inner.slots.get_mut(key) {
-            Some(slot) => {
-                slot.last_used = tick;
+        let value = inner.slots.get(key).map(|slot| Arc::clone(&slot.value));
+        match value {
+            Some(v) => {
+                inner.policy.on_hit(key);
                 self.hits.fetch_add(1, Relaxed);
-                Some(Arc::clone(&slot.value))
+                Some(v)
             }
             None => {
+                inner.policy.on_miss(key);
                 self.misses.fetch_add(1, Relaxed);
                 None
             }
         }
     }
 
-    /// Insert an entry of `bytes` estimated size, evicting LRU entries
-    /// until it fits. Returns `(admitted, victims)`: rejected inserts
-    /// (entry alone over the whole budget; any entry at budget 0) count a
-    /// rejection and produce no victims. Victims are counted as
-    /// evictions whether or not the caller demotes them.
+    /// Insert an entry of `bytes` estimated size, evicting the policy's
+    /// victims until it fits. Returns `(admitted, victims)`: rejected
+    /// inserts (entry alone over the whole budget; any entry at budget 0;
+    /// a newcomer refused by the policy's admission filter) count a
+    /// rejection and produce no victims. Victims are counted as evictions
+    /// whether or not the caller demotes them. Overwrites of resident
+    /// keys bypass the admission filter — the entry already earned its
+    /// place.
     pub fn put(
         &self,
         key: CacheKey,
@@ -136,28 +165,37 @@ impl MemoryTier {
             }
         }
         let mut inner = self.inner.lock().unwrap();
+        let overwrite = inner.slots.contains_key(&key);
         if let Some(old) = inner.slots.remove(&key) {
             inner.bytes -= old.bytes;
+            inner.policy.forget(&key);
         }
-        let mut victims = Vec::new();
+        let need = match self.budget {
+            CacheBudget::Unbounded => 0,
+            CacheBudget::Bytes(limit) => (inner.bytes + bytes).saturating_sub(limit),
+        };
+        let victim_keys = inner.policy.victims(need);
+        if !overwrite && !inner.policy.admits(&key, bytes, &victim_keys) {
+            self.rejected.fetch_add(1, Relaxed);
+            return (false, Vec::new());
+        }
+        let mut victims = Vec::with_capacity(victim_keys.len());
+        for vk in victim_keys {
+            let slot = inner.slots.remove(&vk).expect("policy victim must be resident");
+            inner.bytes -= slot.bytes;
+            inner.policy.on_evict(&vk);
+            self.evictions.fetch_add(1, Relaxed);
+            victims.push(Victim { key: vk, bytes: slot.bytes, encode: slot.encode });
+        }
         if let CacheBudget::Bytes(limit) = self.budget {
-            while inner.bytes + bytes > limit {
-                let lru = inner
-                    .slots
-                    .iter()
-                    .min_by_key(|(_, s)| s.last_used)
-                    .map(|(k, _)| *k)
-                    .expect("over budget with no entries");
-                let slot = inner.slots.remove(&lru).unwrap();
-                inner.bytes -= slot.bytes;
-                self.evictions.fetch_add(1, Relaxed);
-                victims.push(Victim { key: lru, bytes: slot.bytes, encode: slot.encode });
-            }
+            debug_assert!(
+                inner.bytes + bytes <= limit,
+                "policy victims must cover the shortfall"
+            );
         }
-        inner.tick += 1;
-        let tick = inner.tick;
+        inner.policy.record_insert(key, bytes);
         inner.bytes += bytes;
-        inner.slots.insert(key, Slot { value, bytes, last_used: tick, encode });
+        inner.slots.insert(key, Slot { value, bytes, encode });
         self.insertions.fetch_add(1, Relaxed);
         (true, victims)
     }
@@ -174,6 +212,7 @@ impl MemoryTier {
         match inner.slots.remove(key) {
             Some(slot) => {
                 inner.bytes -= slot.bytes;
+                inner.policy.forget(key);
                 true
             }
             None => false,
@@ -193,6 +232,7 @@ impl MemoryTier {
         for k in &victims {
             let slot = inner.slots.remove(k).unwrap();
             inner.bytes -= slot.bytes;
+            inner.policy.forget(k);
         }
         victims.len()
     }
@@ -210,11 +250,13 @@ impl MemoryTier {
         self.len() == 0
     }
 
-    /// Drop every entry (counters are kept — they are cumulative).
+    /// Drop every entry (counters are kept — they are cumulative; the
+    /// policy may keep learned history such as frequency sketches).
     pub fn clear(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.slots.clear();
         inner.bytes = 0;
+        inner.policy.reset();
     }
 
     /// Reclassify one counted miss as a hit — the tiered store calls this
@@ -302,5 +344,47 @@ mod tests {
         assert!(!tier.remove(&key(1)));
         assert_eq!(tier.bytes_cached(), 0);
         assert_eq!(tier.stats().evictions, 0);
+    }
+
+    #[test]
+    fn default_policy_is_lru() {
+        assert_eq!(MemoryTier::new(CacheBudget::Unbounded).policy(), PolicySpec::LRU);
+    }
+
+    #[test]
+    fn admission_filter_rejection_counts_as_rejected() {
+        let tier = MemoryTier::with_policy(CacheBudget::Bytes(100), PolicySpec::TINYLFU);
+        tier.put(key(1), val(1), 100, None);
+        for _ in 0..5 {
+            tier.get(&key(1));
+        }
+        // A cold newcomer that would evict the hot entry is refused.
+        let (ok, victims) = tier.put(key(2), val(2), 100, None);
+        assert!(!ok && victims.is_empty());
+        assert!(tier.contains(&key(1)));
+        let s = tier.stats();
+        assert_eq!((s.rejected, s.evictions, s.insertions), (1, 0, 1));
+    }
+
+    #[test]
+    fn overwrites_bypass_the_admission_filter() {
+        let tier = MemoryTier::with_policy(CacheBudget::Bytes(100), PolicySpec::TINYLFU);
+        tier.put(key(1), val(1), 100, None);
+        // Overwriting a resident key must never lose the entry.
+        let (ok, _) = tier.put(key(1), val(9), 100, None);
+        assert!(ok);
+        assert_eq!(tier.len(), 1);
+    }
+
+    #[test]
+    fn every_policy_keeps_the_budget_invariant() {
+        for spec in PolicySpec::all() {
+            let tier = MemoryTier::with_policy(CacheBudget::Bytes(100), spec);
+            for p in 0..50 {
+                tier.put(key(p), val(p), 7 + p % 13, None);
+                tier.get(&key(p / 2));
+                assert!(tier.bytes_cached() <= 100, "{spec}");
+            }
+        }
     }
 }

@@ -14,10 +14,18 @@
 //!   doubles; consumed as a trait object by the spill merger and the
 //!   Spark-sim shuffle-block persistence.
 //! * [`MemoryTier`] — the memory tier: the PR 3 `PartitionCache`
-//!   semantics (type-erased values, byte budget, LRU, hit/miss/evict
+//!   semantics (type-erased values, byte budget, hit/miss/evict
 //!   stats) with one addition: evicted entries that carry an encoder are
 //!   handed back to the caller as demotion candidates instead of being
 //!   dropped.
+//! * [`policy`] — pluggable [`EvictionPolicy`]s behind the memory tier:
+//!   LRU (the PR 3 behavior and default), SLRU (scan resistance), GDSF
+//!   (byte-aware frequency), and a TinyLFU-style admission filter
+//!   composable over any of them. [`PolicySpec`] is the `--cache-policy`
+//!   knob.
+//! * [`trace`] — the trace lab: record real `CacheKey` access traces from
+//!   live runs ([`TraceRecorder`]) and replay them through any policy to
+//!   measure hit-rates on real machinery (`benches/cache_policies.rs`).
 //! * [`TieredStore`] — memory tier over an optional [`DiskTier`]:
 //!   **demotes** encodable entries to disk under memory pressure and
 //!   **promotes** them back on access. Without a disk tier it behaves
@@ -49,13 +57,17 @@
 
 mod disk;
 mod memory;
+pub mod policy;
 mod spill;
 mod tiered;
+pub mod trace;
 
 pub use disk::DiskTier;
 pub use memory::{EncodeFn, MemoryTier, Victim};
+pub use policy::{BasePolicy, EvictionPolicy, PolicySpec};
 pub use spill::{ExternalMerger, LoserTree};
 pub use tiered::TieredStore;
+pub use trace::TraceRecorder;
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 

@@ -1,0 +1,716 @@
+//! Pluggable eviction policies for the [`MemoryTier`](super::MemoryTier).
+//!
+//! PR 3's tier hardcoded LRU — exactly the policy our iterative workloads
+//! defeat: every round is a full sweep over the input partitions, so the
+//! state relation's once-per-round writes scan-pollute the recency order
+//! and the next sweep misses everything (the classic LRU cliff). This
+//! module turns the eviction decision into a swappable, measured axis:
+//!
+//! * [`LruPolicy`] — the PR 3 behavior, bit-for-bit (evict the entry with
+//!   the oldest access tick).
+//! * [`SlruPolicy`] — segmented LRU: new entries enter a *probation*
+//!   segment; a second access promotes to a *protected* segment (~80% of
+//!   the byte budget). Victims come from probation first, so a one-pass
+//!   scan can only ever churn probation — the proven-hot protected set
+//!   survives.
+//! * [`GdsfPolicy`] — Greedy-Dual-Size-Frequency: byte-aware priority
+//!   `clock + freq × SCALE ⁄ size` (integer fixed-point). Small,
+//!   frequently-hit entries are worth more per byte than big cold ones;
+//!   the inflation `clock` ages out entries that stop being touched.
+//! * [`TinyLfuPolicy`] — a TinyLFU-style **admission filter** composable
+//!   over any base policy: a count-min [`FrequencySketch`] estimates each
+//!   key's access frequency, and a newcomer is only admitted if it is
+//!   more frequent than the entries it would evict.
+//!
+//! The tier owns the slots and the byte accounting; the policy owns the
+//! per-key metadata (recency ticks, segments, priorities, sketches) and
+//! makes two decisions: *who to evict* ([`EvictionPolicy::victims`]) and
+//! *whether to admit* ([`EvictionPolicy::admits`]). All bookkeeping is
+//! integer-based and iteration-order-free (`BTreeMap`/`BTreeSet` keyed on
+//! monotonic ticks or `(priority, key)`), so a recorded trace replays to
+//! identical decisions every time — the property the trace lab
+//! ([`super::trace`]) and the reference-model property suite depend on.
+//!
+//! [`PolicySpec`] is the serializable knob (`--cache-policy` on the CLI,
+//! `JobSpec::eviction_policy`, both engine confs): a base policy plus an
+//! optional TinyLFU admission wrapper.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::cache::{CacheBudget, CacheKey};
+
+/// One eviction policy instance, owned by a single `MemoryTier` (called
+/// under the tier's lock — no interior synchronization needed).
+///
+/// Contract: the tier mirrors every residency change into the policy
+/// (`record_insert` / `on_evict` / `forget` / `reset`), so the policy's
+/// metadata tracks exactly the resident key set. `victims` must only name
+/// resident keys, in eviction order, covering at least `need` bytes.
+pub trait EvictionPolicy: Send {
+    /// Canonical name (matches [`PolicySpec`]'s `Display`).
+    fn name(&self) -> &'static str;
+
+    /// A lookup found `key` resident: bump its recency/frequency.
+    fn on_hit(&mut self, key: &CacheKey);
+
+    /// A lookup missed. Frequency learners (TinyLFU) count these too;
+    /// recency-only policies ignore them.
+    fn on_miss(&mut self, _key: &CacheKey) {}
+
+    /// Resident keys to evict, in eviction order, until at least `need`
+    /// bytes are covered (empty when `need == 0`). Pure — must not mutate
+    /// metadata; the tier reports the outcome via [`Self::on_evict`].
+    fn victims(&self, need: u64) -> Vec<CacheKey>;
+
+    /// Admission filter: may `key` (of `bytes` estimated size) be
+    /// inserted, given `victims` would be evicted to make room? Policies
+    /// without admission control return `true`. The tier never consults
+    /// the filter for overwrites of already-resident keys.
+    fn admits(&mut self, _key: &CacheKey, _bytes: u64, _victims: &[CacheKey]) -> bool {
+        true
+    }
+
+    /// `key` is now resident with `bytes` estimated size (any previous
+    /// version was already `forget`-ed).
+    fn record_insert(&mut self, key: CacheKey, bytes: u64);
+
+    /// `key` was evicted under budget pressure (GDSF inflates its clock
+    /// here). Default: plain [`Self::forget`].
+    fn on_evict(&mut self, key: &CacheKey) {
+        self.forget(key);
+    }
+
+    /// `key` left the tier outside eviction (removal / invalidation).
+    fn forget(&mut self, key: &CacheKey);
+
+    /// Every resident entry left the tier (`clear`). Learned history
+    /// (frequency sketches, aging clocks) may be kept.
+    fn reset(&mut self);
+}
+
+// ---------------------------------------------------------------------------
+// LRU
+
+/// Least-recently-used — the PR 3 tier's behavior, exactly: a monotonic
+/// tick is stamped on insert and on every hit; the victim is always the
+/// smallest tick. Ticks are unique, so eviction order is deterministic.
+#[derive(Default)]
+pub struct LruPolicy {
+    tick: u64,
+    entries: HashMap<CacheKey, (u64, u64)>, // key -> (tick, bytes)
+    order: BTreeMap<u64, CacheKey>,         // tick -> key (unique ticks)
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn on_hit(&mut self, key: &CacheKey) {
+        if !self.entries.contains_key(key) {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.entries.get_mut(key).unwrap();
+        self.order.remove(&entry.0);
+        entry.0 = tick;
+        self.order.insert(tick, *key);
+    }
+
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for key in self.order.values() {
+            if freed >= need {
+                break;
+            }
+            freed += self.entries[key].1;
+            out.push(*key);
+        }
+        out
+    }
+
+    fn record_insert(&mut self, key: CacheKey, bytes: u64) {
+        self.tick += 1;
+        self.entries.insert(key, (self.tick, bytes));
+        self.order.insert(self.tick, key);
+    }
+
+    fn forget(&mut self, key: &CacheKey) {
+        if let Some((tick, _)) = self.entries.remove(key) {
+            self.order.remove(&tick);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLRU
+
+struct SlruEntry {
+    tick: u64,
+    bytes: u64,
+    protected: bool,
+}
+
+/// Segmented LRU: probation + protected segments, both byte-accounted.
+/// Inserts land in probation; a hit promotes to protected (capped at 80%
+/// of the budget — overflow demotes protected-LRU entries back to
+/// probation as most-recently-used). Victims: probation LRU first, then
+/// protected LRU. A single sweep over cold keys can therefore only churn
+/// probation, never the proven-hot protected set — scan resistance.
+pub struct SlruPolicy {
+    tick: u64,
+    protected_cap: u64,
+    protected_bytes: u64,
+    entries: HashMap<CacheKey, SlruEntry>,
+    probation: BTreeMap<u64, CacheKey>,
+    protected: BTreeMap<u64, CacheKey>,
+}
+
+impl SlruPolicy {
+    /// Protected segment gets 4/5 of the byte budget (unbounded budgets
+    /// never evict, so the split is moot there).
+    pub fn new(budget: CacheBudget) -> Self {
+        let protected_cap = match budget {
+            CacheBudget::Unbounded => u64::MAX,
+            CacheBudget::Bytes(limit) => (limit / 5).saturating_mul(4),
+        };
+        Self {
+            tick: 0,
+            protected_cap,
+            protected_bytes: 0,
+            entries: HashMap::new(),
+            probation: BTreeMap::new(),
+            protected: BTreeMap::new(),
+        }
+    }
+
+    /// Demote protected-LRU entries (as probation-MRU) until the
+    /// protected segment fits its cap again.
+    fn shrink_protected(&mut self) {
+        while self.protected_bytes > self.protected_cap {
+            let Some((&tick, &key)) = self.protected.iter().next() else { break };
+            self.protected.remove(&tick);
+            self.tick += 1;
+            let fresh = self.tick;
+            let entry = self.entries.get_mut(&key).unwrap();
+            entry.tick = fresh;
+            entry.protected = false;
+            self.protected_bytes -= entry.bytes;
+            self.probation.insert(fresh, key);
+        }
+    }
+}
+
+impl EvictionPolicy for SlruPolicy {
+    fn name(&self) -> &'static str {
+        "slru"
+    }
+
+    fn on_hit(&mut self, key: &CacheKey) {
+        if !self.entries.contains_key(key) {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.entries.get_mut(key).unwrap();
+        let was_protected = entry.protected;
+        if was_protected {
+            self.protected.remove(&entry.tick);
+        } else {
+            self.probation.remove(&entry.tick);
+            entry.protected = true;
+        }
+        let bytes = entry.bytes;
+        entry.tick = tick;
+        self.protected.insert(tick, *key);
+        if !was_protected {
+            self.protected_bytes += bytes;
+            self.shrink_protected();
+        }
+    }
+
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for key in self.probation.values().chain(self.protected.values()) {
+            if freed >= need {
+                break;
+            }
+            freed += self.entries[key].bytes;
+            out.push(*key);
+        }
+        out
+    }
+
+    fn record_insert(&mut self, key: CacheKey, bytes: u64) {
+        self.tick += 1;
+        self.entries.insert(key, SlruEntry { tick: self.tick, bytes, protected: false });
+        self.probation.insert(self.tick, key);
+    }
+
+    fn forget(&mut self, key: &CacheKey) {
+        if let Some(entry) = self.entries.remove(key) {
+            if entry.protected {
+                self.protected.remove(&entry.tick);
+                self.protected_bytes -= entry.bytes;
+            } else {
+                self.probation.remove(&entry.tick);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.entries.clear();
+        self.probation.clear();
+        self.protected.clear();
+        self.protected_bytes = 0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GDSF
+
+/// Fixed-point scale for GDSF priorities: `freq × GDSF_SCALE ⁄ bytes`
+/// keeps fractional value-per-byte meaningful in integer arithmetic.
+pub const GDSF_SCALE: u64 = 1 << 16;
+
+struct GdsfEntry {
+    bytes: u64,
+    freq: u64,
+    priority: u64,
+}
+
+/// Greedy-Dual-Size-Frequency: each entry carries
+/// `priority = clock + freq × SCALE ⁄ size`; the minimum priority is
+/// evicted and the `clock` inflates to the evicted priority, so resident
+/// entries must keep earning hits to stay above newcomers (aging). All
+/// integer fixed-point; ties break on the key, so eviction order is
+/// deterministic.
+#[derive(Default)]
+pub struct GdsfPolicy {
+    clock: u64,
+    entries: HashMap<CacheKey, GdsfEntry>,
+    order: BTreeSet<(u64, CacheKey)>, // (priority, key)
+}
+
+impl GdsfPolicy {
+    fn priority(&self, freq: u64, bytes: u64) -> u64 {
+        self.clock.saturating_add(freq.saturating_mul(GDSF_SCALE) / bytes.max(1))
+    }
+}
+
+impl EvictionPolicy for GdsfPolicy {
+    fn name(&self) -> &'static str {
+        "gdsf"
+    }
+
+    fn on_hit(&mut self, key: &CacheKey) {
+        let clock = self.clock;
+        let Some(entry) = self.entries.get_mut(key) else { return };
+        self.order.remove(&(entry.priority, *key));
+        entry.freq += 1;
+        entry.priority =
+            clock.saturating_add(entry.freq.saturating_mul(GDSF_SCALE) / entry.bytes.max(1));
+        self.order.insert((entry.priority, *key));
+    }
+
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for (_, key) in &self.order {
+            if freed >= need {
+                break;
+            }
+            freed += self.entries[key].bytes;
+            out.push(*key);
+        }
+        out
+    }
+
+    fn record_insert(&mut self, key: CacheKey, bytes: u64) {
+        let priority = self.priority(1, bytes);
+        self.entries.insert(key, GdsfEntry { bytes, freq: 1, priority });
+        self.order.insert((priority, key));
+    }
+
+    fn on_evict(&mut self, key: &CacheKey) {
+        if let Some(entry) = self.entries.get(key) {
+            // Aging: future insertions start at the level the cache was
+            // "worth" when it last had to give something up.
+            self.clock = self.clock.max(entry.priority);
+        }
+        self.forget(key);
+    }
+
+    fn forget(&mut self, key: &CacheKey) {
+        if let Some(entry) = self.entries.remove(key) {
+            self.order.remove(&(entry.priority, *key));
+        }
+    }
+
+    fn reset(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+        // `clock` is learned history: keep it.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TinyLFU admission filter
+
+/// Count-min sketch over [`CacheKey`]s: 4 hash rows of `u8` counters,
+/// halved every `10 × width` increments so estimates decay toward recent
+/// traffic (the TinyLFU "reset" operation). Estimates never undercount;
+/// hash collisions can overcount — which only ever admits *more*.
+pub struct FrequencySketch {
+    rows: Vec<u8>, // 4 rows × width, row-major
+    width: usize,  // power of two
+    ops: u64,
+    sample: u64,
+}
+
+impl FrequencySketch {
+    const ROWS: usize = 4;
+
+    /// `width` is rounded up to a power of two (min 64).
+    pub fn new(width: usize) -> Self {
+        let width = width.max(64).next_power_of_two();
+        Self {
+            rows: vec![0; Self::ROWS * width],
+            width,
+            ops: 0,
+            sample: 10 * width as u64,
+        }
+    }
+
+    fn index(&self, key: &CacheKey, row: usize) -> usize {
+        let mut h = crate::hash::FNV1A_OFFSET;
+        for field in [key.namespace, key.generation, key.partition, key.splits] {
+            h = crate::hash::fnv1a_with(h, &field.to_le_bytes());
+        }
+        // Independent-ish row hashes from one base digest.
+        let h = crate::hash::mix_u64(h ^ (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        row * self.width + (h as usize & (self.width - 1))
+    }
+
+    /// Count one access of `key`, halving every counter when the sample
+    /// period elapses.
+    pub fn increment(&mut self, key: &CacheKey) {
+        for row in 0..Self::ROWS {
+            let i = self.index(key, row);
+            self.rows[i] = self.rows[i].saturating_add(1);
+        }
+        self.ops += 1;
+        if self.ops >= self.sample {
+            for c in &mut self.rows {
+                *c >>= 1;
+            }
+            self.ops = 0;
+        }
+    }
+
+    /// Estimated access count of `key` (min over rows — never an
+    /// undercount).
+    pub fn estimate(&self, key: &CacheKey) -> u8 {
+        (0..Self::ROWS).map(|row| self.rows[self.index(key, row)]).min().unwrap_or(0)
+    }
+}
+
+/// TinyLFU-style admission filter over any base policy: every lookup and
+/// every admission attempt is counted in a [`FrequencySketch`]; when an
+/// insert would evict resident entries, the newcomer is admitted only if
+/// its estimated frequency strictly beats the *most frequent* would-be
+/// victim. One-hit wonders (a scan) lose that contest and are rejected,
+/// leaving the resident working set untouched. Eviction order itself is
+/// the base policy's.
+pub struct TinyLfuPolicy {
+    base: Box<dyn EvictionPolicy>,
+    sketch: FrequencySketch,
+    name: &'static str,
+}
+
+impl TinyLfuPolicy {
+    /// Default sketch width, in counters per row.
+    pub const SKETCH_WIDTH: usize = 1024;
+
+    pub fn new(base: Box<dyn EvictionPolicy>, name: &'static str) -> Self {
+        Self { base, sketch: FrequencySketch::new(Self::SKETCH_WIDTH), name }
+    }
+}
+
+impl EvictionPolicy for TinyLfuPolicy {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn on_hit(&mut self, key: &CacheKey) {
+        self.sketch.increment(key);
+        self.base.on_hit(key);
+    }
+
+    fn on_miss(&mut self, key: &CacheKey) {
+        self.sketch.increment(key);
+        self.base.on_miss(key);
+    }
+
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        self.base.victims(need)
+    }
+
+    fn admits(&mut self, key: &CacheKey, bytes: u64, victims: &[CacheKey]) -> bool {
+        // The admission attempt itself is an access.
+        self.sketch.increment(key);
+        if victims.is_empty() {
+            return self.base.admits(key, bytes, victims);
+        }
+        let candidate = self.sketch.estimate(key);
+        let strongest_victim =
+            victims.iter().map(|v| self.sketch.estimate(v)).max().unwrap_or(0);
+        candidate > strongest_victim && self.base.admits(key, bytes, victims)
+    }
+
+    fn record_insert(&mut self, key: CacheKey, bytes: u64) {
+        self.base.record_insert(key, bytes);
+    }
+
+    fn on_evict(&mut self, key: &CacheKey) {
+        self.base.on_evict(key);
+    }
+
+    fn forget(&mut self, key: &CacheKey) {
+        self.base.forget(key);
+    }
+
+    fn reset(&mut self) {
+        self.base.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The knob
+
+/// Base replacement policy of a [`PolicySpec`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BasePolicy {
+    #[default]
+    Lru,
+    Slru,
+    Gdsf,
+}
+
+/// The `--cache-policy` knob: a base replacement policy, optionally under
+/// a TinyLFU admission filter. Parses `lru`, `slru`, `gdsf`, `tinylfu`
+/// (= `tinylfu-lru`), `tinylfu-slru`, `tinylfu-gdsf`; `Display` round-trips.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub base: BasePolicy,
+    pub tinylfu: bool,
+}
+
+impl PolicySpec {
+    pub const LRU: PolicySpec = PolicySpec { base: BasePolicy::Lru, tinylfu: false };
+    pub const SLRU: PolicySpec = PolicySpec { base: BasePolicy::Slru, tinylfu: false };
+    pub const GDSF: PolicySpec = PolicySpec { base: BasePolicy::Gdsf, tinylfu: false };
+    pub const TINYLFU: PolicySpec = PolicySpec { base: BasePolicy::Lru, tinylfu: true };
+
+    /// The canonical policy set the trace lab and the benches sweep.
+    pub fn all() -> [PolicySpec; 4] {
+        [Self::LRU, Self::SLRU, Self::GDSF, Self::TINYLFU]
+    }
+
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lru" => Some(Self::LRU),
+            "slru" => Some(Self::SLRU),
+            "gdsf" => Some(Self::GDSF),
+            "tinylfu" | "tinylfu-lru" => Some(Self::TINYLFU),
+            "tinylfu-slru" => Some(PolicySpec { base: BasePolicy::Slru, tinylfu: true }),
+            "tinylfu-gdsf" => Some(PolicySpec { base: BasePolicy::Gdsf, tinylfu: true }),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy for a tier with `budget` (SLRU sizes its
+    /// protected segment off it).
+    pub fn build(&self, budget: CacheBudget) -> Box<dyn EvictionPolicy> {
+        let base: Box<dyn EvictionPolicy> = match self.base {
+            BasePolicy::Lru => Box::new(LruPolicy::default()),
+            BasePolicy::Slru => Box::new(SlruPolicy::new(budget)),
+            BasePolicy::Gdsf => Box::new(GdsfPolicy::default()),
+        };
+        if !self.tinylfu {
+            return base;
+        }
+        let name = match self.base {
+            BasePolicy::Lru => "tinylfu-lru",
+            BasePolicy::Slru => "tinylfu-slru",
+            BasePolicy::Gdsf => "tinylfu-gdsf",
+        };
+        Box::new(TinyLfuPolicy::new(base, name))
+    }
+}
+
+impl std::fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let base = match self.base {
+            BasePolicy::Lru => "lru",
+            BasePolicy::Slru => "slru",
+            BasePolicy::Gdsf => "gdsf",
+        };
+        if self.tinylfu {
+            write!(f, "tinylfu-{base}")
+        } else {
+            write!(f, "{base}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }
+    }
+
+    #[test]
+    fn spec_parse_display_round_trips() {
+        for spec in [
+            PolicySpec::LRU,
+            PolicySpec::SLRU,
+            PolicySpec::GDSF,
+            PolicySpec::TINYLFU,
+            PolicySpec { base: BasePolicy::Slru, tinylfu: true },
+            PolicySpec { base: BasePolicy::Gdsf, tinylfu: true },
+        ] {
+            assert_eq!(PolicySpec::parse(&spec.to_string()), Some(spec), "{spec}");
+            assert_eq!(spec.build(CacheBudget::Bytes(100)).name(), spec.to_string());
+        }
+        assert_eq!(PolicySpec::parse("tinylfu"), Some(PolicySpec::TINYLFU));
+        assert_eq!(PolicySpec::parse(" LRU "), Some(PolicySpec::LRU));
+        assert_eq!(PolicySpec::parse("clock"), None);
+        assert_eq!(PolicySpec::default(), PolicySpec::LRU);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_tick_first() {
+        let mut p = LruPolicy::default();
+        p.record_insert(key(1), 10);
+        p.record_insert(key(2), 10);
+        p.record_insert(key(3), 10);
+        p.on_hit(&key(1)); // 2 is now the oldest
+        assert_eq!(p.victims(1), vec![key(2)]);
+        assert_eq!(p.victims(15), vec![key(2), key(3)]);
+        assert_eq!(p.victims(0), Vec::<CacheKey>::new());
+    }
+
+    #[test]
+    fn slru_protects_re_accessed_entries_from_scans() {
+        // Budget 100 -> protected cap 80. Two hot 30-byte entries get
+        // promoted; a scan of cold keys then fills probation.
+        let mut p = SlruPolicy::new(CacheBudget::Bytes(100));
+        p.record_insert(key(1), 30);
+        p.record_insert(key(2), 30);
+        p.on_hit(&key(1));
+        p.on_hit(&key(2));
+        p.record_insert(key(10), 20);
+        p.record_insert(key(11), 20);
+        // Victims come from probation (the scan), not the hot set.
+        assert_eq!(p.victims(40), vec![key(10), key(11)]);
+        // Only once probation is exhausted does protected bleed.
+        assert_eq!(p.victims(70), vec![key(10), key(11), key(1)]);
+    }
+
+    #[test]
+    fn slru_protected_overflow_demotes_back_to_probation() {
+        // Cap = 8 bytes (budget 10): promoting a second 5-byte entry
+        // pushes the first back to probation.
+        let mut p = SlruPolicy::new(CacheBudget::Bytes(10));
+        p.record_insert(key(1), 5);
+        p.record_insert(key(2), 5);
+        p.on_hit(&key(1));
+        p.on_hit(&key(2)); // protected would be 10 > 8: key 1 demotes
+        assert_eq!(p.victims(1), vec![key(1)]);
+        assert_eq!(p.protected_bytes, 5);
+    }
+
+    #[test]
+    fn gdsf_prefers_evicting_large_cold_entries() {
+        let mut p = GdsfPolicy::default();
+        p.record_insert(key(1), 1000); // big: priority ~ SCALE/1000
+        p.record_insert(key(2), 10); // small: priority ~ SCALE/10
+        assert_eq!(p.victims(1), vec![key(1)], "worst value-per-byte goes first");
+        // Frequency rescues the big entry past the small one.
+        for _ in 0..200 {
+            p.on_hit(&key(1));
+        }
+        assert_eq!(p.victims(1), vec![key(2)]);
+    }
+
+    #[test]
+    fn gdsf_clock_inflates_on_eviction() {
+        let mut p = GdsfPolicy::default();
+        p.record_insert(key(1), 1);
+        p.on_hit(&key(1)); // freq 2: priority = 2 * SCALE
+        p.on_evict(&key(1));
+        assert_eq!(p.clock, 2 * GDSF_SCALE);
+        // Newcomers now start above pre-eviction levels.
+        p.record_insert(key(2), 1);
+        assert!(p.entries[&key(2)].priority > 2 * GDSF_SCALE);
+    }
+
+    #[test]
+    fn tinylfu_rejects_one_hit_wonders() {
+        let mut p = PolicySpec::TINYLFU.build(CacheBudget::Bytes(100));
+        p.record_insert(key(1), 100);
+        // Make key 1 hot.
+        for _ in 0..5 {
+            p.on_hit(&key(1));
+        }
+        let victims = p.victims(100);
+        assert_eq!(victims, vec![key(1)]);
+        // A never-seen key must not displace it...
+        assert!(!p.admits(&key(9), 100, &victims));
+        // ...but a hotter one may.
+        for _ in 0..8 {
+            p.on_miss(&key(7));
+        }
+        assert!(p.admits(&key(7), 100, &victims));
+        // With room to spare (no victims) everything is admitted.
+        assert!(p.admits(&key(9), 10, &[]));
+    }
+
+    #[test]
+    fn sketch_counts_and_decays() {
+        let mut s = FrequencySketch::new(64);
+        assert_eq!(s.estimate(&key(1)), 0);
+        for _ in 0..6 {
+            s.increment(&key(1));
+        }
+        assert!(s.estimate(&key(1)) >= 6);
+        let before = s.estimate(&key(1));
+        // Drive past the sample period: counters halve.
+        for i in 0..s.sample {
+            s.increment(&key(1000 + i));
+        }
+        assert!(s.estimate(&key(1)) < before, "decay must forget old traffic");
+    }
+
+    #[test]
+    fn sketch_never_undercounts() {
+        let mut s = FrequencySketch::new(64);
+        for p in 0..50 {
+            s.increment(&key(p));
+        }
+        for p in 0..50 {
+            assert!(s.estimate(&key(p)) >= 1, "partition {p}");
+        }
+    }
+}

@@ -26,12 +26,14 @@
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
 use crate::cache::{CacheBudget, CacheKey, CacheStats};
 use crate::util::ser::{Decode, Encode};
 
-use super::{BlockStore, DiskTier, EncodeFn, MemoryTier, StorageStats, Victim};
+use super::trace::{TraceOp, TraceRecorder};
+use super::{BlockStore, DiskTier, EncodeFn, MemoryTier, PolicySpec, StorageStats, Victim};
 
 /// Memory tier + optional disk tier (see module docs).
 pub struct TieredStore {
@@ -44,12 +46,16 @@ pub struct TieredStore {
     /// the memory budget (encoded payloads are usually much smaller than
     /// their heap form).
     demoted_est: Mutex<HashMap<CacheKey, u64>>,
+    /// Optional access-trace sink (the trace lab; see [`super::trace`]).
+    trace: Mutex<Option<Arc<TraceRecorder>>>,
+    trace_active: AtomicBool,
 }
 
 impl std::fmt::Debug for TieredStore {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("TieredStore")
             .field("budget", &self.budget())
+            .field("policy", &self.policy())
             .field("stats", &self.stats())
             .field("spill", &self.disk.is_some())
             .finish()
@@ -57,23 +63,63 @@ impl std::fmt::Debug for TieredStore {
 }
 
 impl TieredStore {
-    /// Memory-only store — the PR 3 partition cache, verbatim.
+    /// Memory-only store — the PR 3 partition cache, verbatim (LRU).
     pub fn new(budget: CacheBudget) -> Self {
-        Self { mem: MemoryTier::new(budget), disk: None, demoted_est: Mutex::new(HashMap::new()) }
+        Self::with_policy(budget, PolicySpec::default())
+    }
+
+    /// Memory-only store evicting per `policy`.
+    pub fn with_policy(budget: CacheBudget, policy: PolicySpec) -> Self {
+        Self {
+            mem: MemoryTier::with_policy(budget, policy),
+            disk: None,
+            demoted_est: Mutex::new(HashMap::new()),
+            trace: Mutex::new(None),
+            trace_active: AtomicBool::new(false),
+        }
     }
 
     /// Memory tier over `disk`: encodable entries demote on pressure and
-    /// promote on access.
+    /// promote on access (LRU eviction).
     pub fn with_spill(budget: CacheBudget, disk: Arc<DiskTier>) -> Self {
+        Self::with_spill_policy(budget, disk, PolicySpec::default())
+    }
+
+    /// [`Self::with_spill`] with an explicit eviction policy.
+    pub fn with_spill_policy(budget: CacheBudget, disk: Arc<DiskTier>, policy: PolicySpec) -> Self {
         Self {
-            mem: MemoryTier::new(budget),
+            mem: MemoryTier::with_policy(budget, policy),
             disk: Some(disk),
             demoted_est: Mutex::new(HashMap::new()),
+            trace: Mutex::new(None),
+            trace_active: AtomicBool::new(false),
         }
     }
 
     pub fn budget(&self) -> CacheBudget {
         self.mem.budget()
+    }
+
+    /// The eviction policy the memory tier was built with.
+    pub fn policy(&self) -> PolicySpec {
+        self.mem.policy()
+    }
+
+    /// Attach an access-trace recorder: every subsequent `get`/`put`
+    /// crossing the store's public surface is logged (tier-internal
+    /// demotion/promotion is not — replay regenerates it).
+    pub fn attach_recorder(&self, rec: Arc<TraceRecorder>) {
+        *self.trace.lock().unwrap() = Some(rec);
+        self.trace_active.store(true, Relaxed);
+    }
+
+    fn trace(&self, op: TraceOp, key: CacheKey, bytes: u64) {
+        if !self.trace_active.load(Relaxed) {
+            return;
+        }
+        if let Some(rec) = self.trace.lock().unwrap().as_ref() {
+            rec.record(op, key, bytes);
+        }
     }
 
     /// The disk tier, if one is attached.
@@ -107,6 +153,7 @@ impl TieredStore {
     /// [`get_encoded`](Self::get_encoded) only — plain lookups keep the
     /// PR 3 contract.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
+        self.trace(TraceOp::Get, *key, 0);
         self.mem.get(key)
     }
 
@@ -130,6 +177,7 @@ impl TieredStore {
     /// successful insert supersedes any demoted disk copy of the same
     /// key — the tiers never hold two versions of one entry.
     pub fn put(&self, key: CacheKey, value: Arc<dyn Any + Send + Sync>, bytes: u64) -> bool {
+        self.trace(TraceOp::Put, key, bytes);
         let (admitted, victims) = self.mem.put(key, value, bytes, None);
         if admitted {
             self.drop_disk_copy(&key);
@@ -158,6 +206,7 @@ impl TieredStore {
         value: Arc<T>,
         bytes: u64,
     ) -> bool {
+        self.trace(TraceOp::Put, key, bytes);
         if self.is_disabled() || self.disk.is_none() {
             // No disk (or storage off): degrade to the memory-only path,
             // keeping the serializer so a later spill attachment — or a
@@ -188,13 +237,29 @@ impl TieredStore {
         }
         let encode = self.encoder(&value);
         let erased: Arc<dyn Any + Send + Sync> = value;
-        let (admitted, victims) = self.mem.put(key, erased, bytes, Some(encode));
+        let (admitted, victims) = self.mem.put(key, erased, bytes, Some(Arc::clone(&encode)));
         if admitted {
             // The fresh insert supersedes any demoted copy of this key.
             self.drop_disk_copy(&key);
+            self.demote(victims);
+            return true;
         }
-        self.demote(victims);
-        admitted
+        // The admission filter refused the newcomer for memory. A disk
+        // tier is attached, so the block must not be lost: park it on
+        // disk (exactly a demotion-at-birth), superseding older copies.
+        debug_assert!(victims.is_empty(), "a rejected insert evicts nothing");
+        let payload = encode();
+        match disk.write(key, &payload) {
+            Ok(_) => {
+                self.demoted_est.lock().unwrap().insert(key, bytes);
+                disk.counters().record_demotion(bytes);
+                true
+            }
+            Err(_) => {
+                disk.counters().record_spill_failure();
+                false
+            }
+        }
     }
 
     /// Typed lookup that falls through to the disk tier: a memory miss

@@ -1,0 +1,234 @@
+//! The trace lab: record real [`CacheKey`] access traces from live runs
+//! and replay them through any eviction policy.
+//!
+//! Hit-rate claims about eviction policies are easy to hand-wave and hard
+//! to falsify — unless the exact access sequence a workload generates can
+//! be captured and re-driven through every policy under identical
+//! conditions. That is what this module does:
+//!
+//! * [`TraceRecorder`] — attach one to a [`TieredStore`](super::TieredStore)
+//!   (see [`attach_recorder`](super::TieredStore::attach_recorder)) and it
+//!   logs every `get`/`put` crossing the store's public surface as a
+//!   [`TraceEvent`] (op, key, size estimate). Tier-internal movement
+//!   (demotion, promotion) is *not* recorded: it is a consequence of the
+//!   policy under trial, and replay regenerates it.
+//! * [`replay`] — drive a recorded trace through a fresh
+//!   [`MemoryTier`](super::MemoryTier) under any [`PolicySpec`] and report
+//!   the resulting [`CacheStats`]. Replay uses the real tier (real
+//!   admission, real victim selection, real stats), with unit values in
+//!   place of payloads — so hit-rates are exact, not modeled.
+//!
+//! Traces serialize to a compact binary log ([`TraceRecorder::to_bytes`] /
+//! [`TraceRecorder::events_from_bytes`], 33 bytes per event) so benches
+//! can persist them next to their `BENCH_*.json` artifacts. Everything is
+//! deterministic: the same trace replayed twice under the same policy
+//! yields identical stats (CI asserts this).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{CacheBudget, CacheKey, CacheStats};
+use crate::util::ser::{Decode, DecodeError, Encode, Reader};
+
+use super::policy::PolicySpec;
+use super::MemoryTier;
+
+/// What crossed the store's surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Any lookup (`get` / `get_typed` / `get_encoded`).
+    Get,
+    /// Any insert (`put` / `put_encoded`), with its heap estimate.
+    Put,
+}
+
+/// One recorded store access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub op: TraceOp,
+    pub key: CacheKey,
+    /// Heap estimate for `Put`; 0 for `Get`.
+    pub bytes: u64,
+}
+
+impl Encode for TraceEvent {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(match self.op {
+            TraceOp::Get => 0,
+            TraceOp::Put => 1,
+        });
+        self.key.namespace.encode(out);
+        self.key.generation.encode(out);
+        self.key.partition.encode(out);
+        self.key.splits.encode(out);
+        self.bytes.encode(out);
+    }
+}
+
+impl Decode for TraceEvent {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let op = match u8::decode(r)? {
+            0 => TraceOp::Get,
+            1 => TraceOp::Put,
+            t => return Err(DecodeError::BadTag(t)),
+        };
+        let key = CacheKey {
+            namespace: u64::decode(r)?,
+            generation: u64::decode(r)?,
+            partition: u64::decode(r)?,
+            splits: u64::decode(r)?,
+        };
+        Ok(TraceEvent { op, key, bytes: u64::decode(r)? })
+    }
+}
+
+/// Thread-safe access-trace sink (stores share one across workers).
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Mutex<Vec<TraceEvent>>,
+    /// Bytes put, cumulative — sizes the replay budget sweep cheaply.
+    put_bytes: AtomicU64,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, op: TraceOp, key: CacheKey, bytes: u64) {
+        if let TraceOp::Put = op {
+            self.put_bytes.fetch_add(bytes, Relaxed);
+        }
+        self.events.lock().unwrap().push(TraceEvent { op, key, bytes });
+    }
+
+    /// Snapshot of the recorded events, in arrival order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes across all recorded `Put`s (an upper bound on the
+    /// working set — useful for picking replay budgets).
+    pub fn put_bytes(&self) -> u64 {
+        self.put_bytes.load(Relaxed)
+    }
+
+    pub fn clear(&self) {
+        self.events.lock().unwrap().clear();
+        self.put_bytes.store(0, Relaxed);
+    }
+
+    /// The compact binary log: `u64` count, then 33 bytes per event.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let events = self.events.lock().unwrap();
+        let mut out = Vec::with_capacity(8 + events.len() * 33);
+        (events.len() as u64).encode(&mut out);
+        for e in events.iter() {
+            e.encode(&mut out);
+        }
+        out
+    }
+
+    /// Decode a log written by [`Self::to_bytes`].
+    pub fn events_from_bytes(bytes: &[u8]) -> Result<Vec<TraceEvent>, DecodeError> {
+        let mut r = Reader::new(bytes);
+        let n = u64::decode(&mut r)? as usize;
+        let mut events = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            events.push(TraceEvent::decode(&mut r)?);
+        }
+        if !r.is_empty() {
+            return Err(DecodeError::TrailingBytes(r.remaining()));
+        }
+        Ok(events)
+    }
+}
+
+/// Replay a trace through a fresh memory tier under `spec` at `budget`,
+/// returning the tier's final stats. Deterministic: identical inputs give
+/// identical stats.
+pub fn replay(events: &[TraceEvent], budget: CacheBudget, spec: PolicySpec) -> CacheStats {
+    let tier = MemoryTier::with_policy(budget, spec);
+    for e in events {
+        match e.op {
+            TraceOp::Get => {
+                tier.get(&e.key);
+            }
+            TraceOp::Put => {
+                tier.put(e.key, Arc::new(()), e.bytes, None);
+            }
+        }
+    }
+    tier.stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(p: u64) -> CacheKey {
+        CacheKey { namespace: 0, generation: 0, partition: p, splits: 1 }
+    }
+
+    #[test]
+    fn log_round_trips() {
+        let rec = TraceRecorder::new();
+        rec.record(TraceOp::Put, key(1), 100);
+        rec.record(TraceOp::Get, key(1), 0);
+        rec.record(TraceOp::Get, key(2), 0);
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.put_bytes(), 100);
+        let back = TraceRecorder::events_from_bytes(&rec.to_bytes()).unwrap();
+        assert_eq!(back, rec.events());
+        assert!(TraceRecorder::events_from_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn replay_reproduces_live_stats() {
+        // A live store and a replay of its trace must agree exactly.
+        let store = super::super::TieredStore::new(CacheBudget::Bytes(64));
+        let rec = Arc::new(TraceRecorder::new());
+        store.attach_recorder(Arc::clone(&rec));
+        for round in 0..3 {
+            for p in 0..4u64 {
+                if store.get(&key(p)).is_none() {
+                    store.put(key(p), Arc::new(round), 20);
+                }
+            }
+        }
+        let live = store.stats();
+        let replayed = replay(&rec.events(), CacheBudget::Bytes(64), PolicySpec::LRU);
+        assert_eq!((replayed.hits, replayed.misses), (live.hits, live.misses));
+        assert_eq!(replayed.evictions, live.evictions);
+        // And replay is deterministic.
+        let again = replay(&rec.events(), CacheBudget::Bytes(64), PolicySpec::LRU);
+        assert_eq!(replayed, again);
+    }
+
+    #[test]
+    fn replay_honors_the_policy() {
+        // Hot small keys interleaved with a cold scan: every policy must
+        // replay the same lookup count and keep the budget invariant.
+        let mut events = Vec::new();
+        for round in 0..20 {
+            for p in 0..2u64 {
+                events.push(TraceEvent { op: TraceOp::Get, key: key(p), bytes: 0 });
+                events.push(TraceEvent { op: TraceOp::Put, key: key(p), bytes: 10 });
+            }
+            events.push(TraceEvent { op: TraceOp::Put, key: key(100 + round), bytes: 25 });
+        }
+        for spec in PolicySpec::all() {
+            let stats = replay(&events, CacheBudget::Bytes(50), spec);
+            assert_eq!(stats.hits + stats.misses, 40, "{spec}");
+            assert!(stats.bytes_cached <= 50, "{spec}");
+        }
+    }
+}

@@ -157,6 +157,22 @@
 //!    rows in `tests/integration_iterative.rs`, and cached-vs-uncached
 //!    rows in `benches/iterative.rs`.
 //!
+//! **Know your cache access pattern.** An iterative run is a *cyclic
+//! scan*: every round sweeps the static relations' partitions once, in
+//! order, while the fed-back state relation streams one-round-lived
+//! generations through the same cache. When `--cache-budget` is below
+//! the working set, plain LRU degenerates on exactly this pattern —
+//! each sweep evicts what the next sweep is about to re-read, and the
+//! hit-rate collapses toward zero. The scan-resistant policies
+//! (`--cache-policy slru`, `gdsf`, or a `tinylfu` admission filter; see
+//! [`crate::storage::policy`]) exist for this regime: they pin a stable
+//! subset of the static partitions instead of churning all of them.
+//! Policies only change *which* rounds re-parse — never the output
+//! (parity under every policy is part of the acceptance grid). To
+//! measure the effect on *your* workload, record a trace and replay it:
+//! [`crate::mapreduce::JobSpec::trace`] + [`crate::storage::trace`], or
+//! run `cargo bench --bench cache_policies`.
+//!
 //! # Writing a multi-stage workload
 //!
 //! A pipeline that needs more than one shuffle — sessionization, a

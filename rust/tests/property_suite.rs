@@ -303,6 +303,9 @@ fn prop_run_plan_parity_under_random_failures() {
         // Real work-stealing pool width — steal order must never leak
         // into output, so any width has to match the serial oracle.
         let threads = g.usize_in(1, 8);
+        // The eviction policy is a pure performance knob: output parity
+        // must hold under every one of them.
+        let policy = *g.choose(&PolicySpec::all());
         let failures = || match engine {
             Engine::Blaze | Engine::BlazeTcm => {
                 FailurePlan::none().fail_node(fail_idx, fail_phase)
@@ -318,10 +321,11 @@ fn prop_run_plan_parity_under_random_failures() {
                 .threads(threads)
                 .net(NetModel::ideal())
                 .failures(failures())
+                .eviction_policy(policy)
         };
         let tok = blaze::corpus::Tokenizer::Spaces;
         let ctx = format!(
-            "{} (nnodes={nnodes}, threads={threads}, fail {fail_idx}@{fail_phase})",
+            "{} (nnodes={nnodes}, threads={threads}, fail {fail_idx}@{fail_phase}, {policy})",
             engine.label()
         );
         fn parity<T: PartialEq>(label: &str, ctx: &str, got: &T, want: &T) -> Result<(), String> {
@@ -377,10 +381,13 @@ fn prop_run_plan_parity_under_random_failures() {
         parity("sessionize", &ctx, &r.lines, &want)?;
 
         // Iterative: the injection lands in whichever round first runs
-        // the failing task/node.
+        // the failing task/node. A KB-scale (or zero) cache budget keeps
+        // the policy busy evicting and rejecting mid-run.
         let cc = Components::new();
         let edge_inputs = JobInputs::new().relation("edges", &corpus);
-        let it = IterativeSpec::new(3).tolerance(0.0);
+        let budget =
+            *g.choose(&[CacheBudget::Unbounded, CacheBudget::Bytes(0), CacheBudget::Bytes(2048)]);
+        let it = IterativeSpec::new(3).tolerance(0.0).cache_budget(budget);
         let want = run_iterative_serial(&it, &cc, &edge_inputs);
         let r = run_iterative(&spec(), &it, &cc, &edge_inputs).map_err(|e| e.to_string())?;
         parity("components", &ctx, &r.state, &want.state)?;
@@ -636,6 +643,7 @@ fn prop_spill_run_parity() {
         let engine = *g.choose(&[Engine::Blaze, Engine::BlazeTcm, Engine::Spark]);
         let threshold = *g.choose(&[0u64, 64, 1024, 64 << 10]);
         let threads = g.usize_in(1, 8);
+        let policy = *g.choose(&PolicySpec::all());
         let spec = || {
             JobSpec::new(engine)
                 .nodes(2)
@@ -643,8 +651,10 @@ fn prop_spill_run_parity() {
                 .threads(threads)
                 .net(NetModel::ideal())
                 .spill_threshold(threshold)
+                .eviction_policy(policy)
         };
-        let ctx = format!("{} threshold={threshold} threads={threads}", engine.label());
+        let ctx =
+            format!("{} threshold={threshold} threads={threads} {policy}", engine.label());
 
         let tok = blaze::corpus::Tokenizer::Spaces;
         let wc = Arc::new(WordCount::new(tok));
@@ -668,6 +678,580 @@ fn prop_spill_run_parity() {
         let r = spec().run_inputs(&join, &join_inputs).map_err(|e| e.to_string())?;
         if r.output != run_serial_inputs(join.as_ref(), &join_inputs) {
             return fail(format!("join diverged on {ctx}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Eviction-policy reference models (PR 7)
+//
+// Each production policy is re-implemented here as a deliberately naive
+// O(n) model (plain `Vec` scans instead of tick-keyed `BTreeMap`s), and
+// `RefTier` mirrors `MemoryTier::put`'s exact protocol: pre-reject,
+// overwrite-forget, victim selection, the admission filter (skipped for
+// overwrites), eviction, insert. Driving both through identical random
+// op streams and comparing every decision catches any divergence between
+// the documented policy semantics and the optimized implementations.
+
+use blaze::cache::{CacheBudget, CacheKey, PolicySpec};
+use blaze::storage::policy::{BasePolicy, FrequencySketch, TinyLfuPolicy, GDSF_SCALE};
+
+/// The model-side mirror of [`blaze::storage::EvictionPolicy`].
+trait RefPolicy {
+    fn on_hit(&mut self, key: &CacheKey);
+    fn on_miss(&mut self, _key: &CacheKey) {}
+    fn victims(&self, need: u64) -> Vec<CacheKey>;
+    fn admits(&mut self, _key: &CacheKey, _bytes: u64, _victims: &[CacheKey]) -> bool {
+        true
+    }
+    fn insert(&mut self, key: CacheKey, bytes: u64);
+    fn evict(&mut self, key: &CacheKey) {
+        self.forget(key);
+    }
+    fn forget(&mut self, key: &CacheKey);
+}
+
+/// LRU as a recency list: front = least recently used.
+#[derive(Default)]
+struct RefLru {
+    entries: Vec<(CacheKey, u64)>,
+}
+
+impl RefPolicy for RefLru {
+    fn on_hit(&mut self, key: &CacheKey) {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            let e = self.entries.remove(pos);
+            self.entries.push(e);
+        }
+    }
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for (k, b) in &self.entries {
+            if freed >= need {
+                break;
+            }
+            freed += b;
+            out.push(*k);
+        }
+        out
+    }
+    fn insert(&mut self, key: CacheKey, bytes: u64) {
+        self.entries.push((key, bytes));
+    }
+    fn forget(&mut self, key: &CacheKey) {
+        self.entries.retain(|(k, _)| k != key);
+    }
+}
+
+/// SLRU as two recency lists; protected cap = 4/5 of the budget, exactly
+/// like the production policy.
+struct RefSlru {
+    cap: u64,
+    probation: Vec<(CacheKey, u64)>,
+    protected: Vec<(CacheKey, u64)>,
+}
+
+impl RefSlru {
+    fn new(limit: u64) -> Self {
+        Self { cap: (limit / 5).saturating_mul(4), probation: Vec::new(), protected: Vec::new() }
+    }
+    fn protected_bytes(&self) -> u64 {
+        self.protected.iter().map(|(_, b)| *b).sum()
+    }
+    fn shrink(&mut self) {
+        while self.protected_bytes() > self.cap {
+            let e = self.protected.remove(0);
+            self.probation.push(e); // demoted as probation-MRU
+        }
+    }
+}
+
+impl RefPolicy for RefSlru {
+    fn on_hit(&mut self, key: &CacheKey) {
+        if let Some(pos) = self.protected.iter().position(|(k, _)| k == key) {
+            let e = self.protected.remove(pos);
+            self.protected.push(e);
+        } else if let Some(pos) = self.probation.iter().position(|(k, _)| k == key) {
+            let e = self.probation.remove(pos);
+            self.protected.push(e);
+            self.shrink();
+        }
+    }
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for (k, b) in self.probation.iter().chain(self.protected.iter()) {
+            if freed >= need {
+                break;
+            }
+            freed += b;
+            out.push(*k);
+        }
+        out
+    }
+    fn insert(&mut self, key: CacheKey, bytes: u64) {
+        self.probation.push((key, bytes));
+    }
+    fn forget(&mut self, key: &CacheKey) {
+        self.probation.retain(|(k, _)| k != key);
+        self.protected.retain(|(k, _)| k != key);
+    }
+}
+
+/// GDSF as an unordered list re-sorted on every victim scan.
+#[derive(Default)]
+struct RefGdsf {
+    clock: u64,
+    entries: Vec<(CacheKey, u64, u64, u64)>, // (key, bytes, freq, priority)
+}
+
+impl RefPolicy for RefGdsf {
+    fn on_hit(&mut self, key: &CacheKey) {
+        let clock = self.clock;
+        if let Some(e) = self.entries.iter_mut().find(|(k, ..)| k == key) {
+            e.2 += 1;
+            e.3 = clock.saturating_add(e.2.saturating_mul(GDSF_SCALE) / e.1.max(1));
+        }
+    }
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        let mut order: Vec<(u64, CacheKey, u64)> =
+            self.entries.iter().map(|(k, b, _, p)| (*p, *k, *b)).collect();
+        order.sort(); // (priority, key): the production tie-break
+        let mut freed = 0;
+        let mut out = Vec::new();
+        for (_, k, b) in &order {
+            if freed >= need {
+                break;
+            }
+            freed += b;
+            out.push(*k);
+        }
+        out
+    }
+    fn insert(&mut self, key: CacheKey, bytes: u64) {
+        let priority = self.clock.saturating_add(GDSF_SCALE / bytes.max(1));
+        self.entries.push((key, bytes, 1, priority));
+    }
+    fn evict(&mut self, key: &CacheKey) {
+        if let Some((.., p)) = self.entries.iter().find(|(k, ..)| k == key) {
+            self.clock = self.clock.max(*p);
+        }
+        self.forget(key);
+    }
+    fn forget(&mut self, key: &CacheKey) {
+        self.entries.retain(|(k, ..)| k != key);
+    }
+}
+
+/// TinyLFU admission over any base model, sharing the production
+/// [`FrequencySketch`] (seeded identically, fed the identical access
+/// sequence — so both sketches stay bit-for-bit in sync).
+struct RefTinyLfu {
+    base: Box<dyn RefPolicy>,
+    sketch: FrequencySketch,
+}
+
+impl RefPolicy for RefTinyLfu {
+    fn on_hit(&mut self, key: &CacheKey) {
+        self.sketch.increment(key);
+        self.base.on_hit(key);
+    }
+    fn on_miss(&mut self, key: &CacheKey) {
+        self.sketch.increment(key);
+        self.base.on_miss(key);
+    }
+    fn victims(&self, need: u64) -> Vec<CacheKey> {
+        self.base.victims(need)
+    }
+    fn admits(&mut self, key: &CacheKey, bytes: u64, victims: &[CacheKey]) -> bool {
+        self.sketch.increment(key);
+        if victims.is_empty() {
+            return self.base.admits(key, bytes, victims);
+        }
+        let candidate = self.sketch.estimate(key);
+        let strongest = victims.iter().map(|v| self.sketch.estimate(v)).max().unwrap_or(0);
+        candidate > strongest && self.base.admits(key, bytes, victims)
+    }
+    fn insert(&mut self, key: CacheKey, bytes: u64) {
+        self.base.insert(key, bytes);
+    }
+    fn evict(&mut self, key: &CacheKey) {
+        self.base.evict(key);
+    }
+    fn forget(&mut self, key: &CacheKey) {
+        self.base.forget(key);
+    }
+}
+
+fn build_ref(spec: PolicySpec, limit: u64) -> Box<dyn RefPolicy> {
+    let base: Box<dyn RefPolicy> = match spec.base {
+        BasePolicy::Lru => Box::new(RefLru::default()),
+        BasePolicy::Slru => Box::new(RefSlru::new(limit)),
+        BasePolicy::Gdsf => Box::new(RefGdsf::default()),
+    };
+    if spec.tinylfu {
+        Box::new(RefTinyLfu { base, sketch: FrequencySketch::new(TinyLfuPolicy::SKETCH_WIDTH) })
+    } else {
+        base
+    }
+}
+
+/// Pure mirror of `MemoryTier` for a `Bytes(limit)` budget: same put
+/// protocol, same counters.
+struct RefTier {
+    limit: u64,
+    slots: Vec<(CacheKey, u64)>,
+    policy: Box<dyn RefPolicy>,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    rejected: u64,
+}
+
+impl RefTier {
+    fn new(spec: PolicySpec, limit: u64) -> Self {
+        Self {
+            limit,
+            slots: Vec::new(),
+            policy: build_ref(spec, limit),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            rejected: 0,
+        }
+    }
+    fn bytes(&self) -> u64 {
+        self.slots.iter().map(|(_, b)| *b).sum()
+    }
+    fn contains(&self, key: &CacheKey) -> bool {
+        self.slots.iter().any(|(k, _)| k == key)
+    }
+    fn get(&mut self, key: &CacheKey) -> bool {
+        if self.contains(key) {
+            self.hits += 1;
+            self.policy.on_hit(key);
+            true
+        } else {
+            self.misses += 1;
+            self.policy.on_miss(key);
+            false
+        }
+    }
+    fn put(&mut self, key: CacheKey, bytes: u64) -> bool {
+        if self.limit == 0 || bytes > self.limit {
+            self.rejected += 1;
+            return false;
+        }
+        let overwrite = self.contains(&key);
+        if overwrite {
+            self.slots.retain(|(k, _)| *k != key);
+            self.policy.forget(&key);
+        }
+        let need = (self.bytes() + bytes).saturating_sub(self.limit);
+        let victims = self.policy.victims(need);
+        if !overwrite && !self.policy.admits(&key, bytes, &victims) {
+            self.rejected += 1;
+            return false;
+        }
+        for v in &victims {
+            self.slots.retain(|(k, _)| k != v);
+            self.policy.evict(v);
+            self.evictions += 1;
+        }
+        self.policy.insert(key, bytes);
+        self.slots.push((key, bytes));
+        self.insertions += 1;
+        true
+    }
+}
+
+/// Every eviction policy ≡ its pure reference model on random op streams:
+/// identical admit/reject decisions, identical hit/miss outcomes,
+/// identical eviction counts, byte accounting, and final resident set.
+#[test]
+fn prop_policy_matches_reference_model() {
+    use blaze::storage::MemoryTier;
+    use std::sync::Arc;
+
+    check_with(Config { cases: 32, ..Default::default() }, "policy-vs-reference", |g| {
+        let limit = g.below(400);
+        for spec in PolicySpec::all() {
+            let tier = MemoryTier::with_policy(CacheBudget::Bytes(limit), spec);
+            let mut model = RefTier::new(spec, limit);
+            for step in 0..g.usize_in(1, 150) {
+                let key = CacheKey {
+                    namespace: g.below(2),
+                    generation: g.below(2),
+                    partition: g.below(8),
+                    splits: 1,
+                };
+                let ctx = format!("{spec} (limit {limit}, step {step}, key {key:?})");
+                if g.chance(0.5) {
+                    let bytes = g.below(200);
+                    let (admitted, _) = tier.put(key, Arc::new(()), bytes, None);
+                    if admitted != model.put(key, bytes) {
+                        return fail(format!("admit decision diverged on {ctx}"));
+                    }
+                } else if tier.get(&key).is_some() != model.get(&key) {
+                    return fail(format!("hit/miss diverged on {ctx}"));
+                }
+                let s = tier.stats();
+                let counters = (s.hits, s.misses, s.insertions, s.evictions, s.rejected);
+                let want =
+                    (model.hits, model.misses, model.insertions, model.evictions, model.rejected);
+                if counters != want {
+                    return fail(format!("counters {counters:?} != {want:?} on {ctx}"));
+                }
+                if s.bytes_cached != model.bytes() || s.entries as usize != model.slots.len() {
+                    return fail(format!("residency accounting diverged on {ctx}"));
+                }
+            }
+            for (k, _) in &model.slots {
+                if !tier.contains(k) {
+                    return fail(format!("{spec}: model key {k:?} not resident in the tier"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cross-policy invariants no policy may break, under a richer op mix
+/// (put/get/remove/invalidate): cached bytes never exceed the budget, the
+/// counters add up exactly (`hits + misses = gets`,
+/// `insertions + rejected = puts`, and the resident count is the exact
+/// balance of insertions minus every way an entry can leave), and no
+/// phantom keys — `contains` only ever answers `true` for keys that some
+/// put actually admitted.
+#[test]
+fn prop_policy_cross_invariants() {
+    use blaze::storage::MemoryTier;
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    check_with(Config { cases: 24, ..Default::default() }, "policy-invariants", |g| {
+        let limit = g.below(300);
+        for spec in PolicySpec::all() {
+            let tier = MemoryTier::with_policy(CacheBudget::Bytes(limit), spec);
+            let mut ever_admitted: BTreeSet<CacheKey> = BTreeSet::new();
+            let (mut puts, mut gets) = (0u64, 0u64);
+            let (mut overwrites, mut removed, mut invalidated) = (0u64, 0u64, 0u64);
+            for _ in 0..g.usize_in(1, 200) {
+                let key = CacheKey {
+                    namespace: g.below(3),
+                    generation: g.below(3),
+                    partition: g.below(6),
+                    splits: 1,
+                };
+                match g.usize_in(0, 9) {
+                    0..=3 => {
+                        let resident = tier.contains(&key);
+                        let (admitted, _) = tier.put(key, Arc::new(()), g.below(200), None);
+                        puts += 1;
+                        if admitted {
+                            ever_admitted.insert(key);
+                            if resident {
+                                overwrites += 1;
+                            }
+                        }
+                    }
+                    4..=7 => {
+                        tier.get(&key);
+                        gets += 1;
+                    }
+                    8 => {
+                        if tier.remove(&key) {
+                            removed += 1;
+                        }
+                    }
+                    _ => {
+                        invalidated +=
+                            tier.invalidate_generations_below(g.below(3), g.below(3)) as u64;
+                    }
+                }
+                let s = tier.stats();
+                let ctx = format!("{spec} (limit {limit})");
+                if s.bytes_cached > limit {
+                    return fail(format!("budget exceeded on {ctx}: {}", s.bytes_cached));
+                }
+                if s.hits + s.misses != gets {
+                    return fail(format!("lookup counters leak on {ctx}"));
+                }
+                if s.insertions + s.rejected != puts {
+                    return fail(format!("insert counters leak on {ctx}"));
+                }
+                let gone = overwrites + s.evictions + removed + invalidated;
+                if s.entries != s.insertions - gone {
+                    return fail(format!(
+                        "resident balance broken on {ctx}: {} entries, {} inserted, {gone} gone",
+                        s.entries, s.insertions
+                    ));
+                }
+            }
+            // No phantom keys anywhere in the op stream's key domain.
+            for namespace in 0..3 {
+                for generation in 0..3 {
+                    for partition in 0..6 {
+                        let key = CacheKey { namespace, generation, partition, splits: 1 };
+                        if tier.contains(&key) && !ever_admitted.contains(&key) {
+                            return fail(format!("{spec}: phantom key {key:?}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// TieredStore demote/promote under every policy vs a memory+disk
+/// reference model: with a disk tier attached, an encoded block — once
+/// admitted — must never be lost (any reachable via `contains`, and
+/// `get_encoded` returns exactly the last value put) until invalidation
+/// drops it, while cached bytes stay within the KB-scale memory budget
+/// through arbitrary demotions, promotions, and admission rejections.
+#[test]
+fn prop_policy_tiered_store_never_loses_blocks() {
+    use blaze::cache::PartitionCache;
+    use blaze::storage::DiskTier;
+    use std::sync::Arc;
+
+    check_with(Config { cases: 12, ..Default::default() }, "policy-tiered-model", |g| {
+        let limit = g.below(400) + 1;
+        for spec in PolicySpec::all() {
+            let store = PartitionCache::with_spill_policy(
+                CacheBudget::Bytes(limit),
+                Arc::new(DiskTier::new(None)),
+                spec,
+            );
+            // key -> last value successfully put (encoded namespaces only).
+            let mut model: BTreeMap<CacheKey, Vec<u64>> = BTreeMap::new();
+            let mut version = 0u64;
+            for step in 0..g.usize_in(1, 120) {
+                let key = CacheKey {
+                    namespace: g.below(2),
+                    generation: g.below(3),
+                    partition: g.below(5),
+                    splits: 1,
+                };
+                let ctx = format!("{spec} (limit {limit}, step {step}, key {key:?})");
+                match g.usize_in(0, 9) {
+                    0..=3 => {
+                        // Oversized entries (bytes > limit) go straight to
+                        // disk; the rest contend for memory.
+                        version += 1;
+                        let mut value = cache_value_of(&key);
+                        value.push(version);
+                        let bytes = g.below(limit * 2) + 1;
+                        if !store.put_encoded(key, Arc::new(value.clone()), bytes) {
+                            return fail(format!("encoded put refused on {ctx}"));
+                        }
+                        model.insert(key, value);
+                    }
+                    4..=6 => {
+                        let hit = store.get_encoded::<Vec<u64>>(&key);
+                        match (hit, model.get(&key)) {
+                            (Some(got), Some(want)) if *got == *want => {}
+                            (Some(_), Some(_)) => {
+                                return fail(format!("stale value served on {ctx}"))
+                            }
+                            (Some(_), None) => {
+                                return fail(format!("hit on an unput key on {ctx}"))
+                            }
+                            (None, Some(_)) => return fail(format!("block lost on {ctx}")),
+                            (None, None) => {}
+                        }
+                    }
+                    7..=8 => {
+                        // Un-demotable entries in a disjoint namespace:
+                        // eviction may drop them (not modeled), but they
+                        // must never disturb the encoded blocks.
+                        store.put(key_in_ns9(&key), Arc::new(()), g.below(limit) + 1);
+                    }
+                    _ => {
+                        let (namespace, keep) = (g.below(2), g.below(3));
+                        store.invalidate_generations_below(namespace, keep);
+                        model.retain(|k, _| k.namespace != namespace || k.generation >= keep);
+                    }
+                }
+                if store.bytes_cached() > limit {
+                    return fail(format!("memory budget exceeded on {ctx}"));
+                }
+                for k in model.keys() {
+                    if !store.contains(k) {
+                        return fail(format!("block {k:?} vanished on {ctx}"));
+                    }
+                }
+            }
+            for (k, want) in &model {
+                match store.get_encoded::<Vec<u64>>(k) {
+                    Some(got) if *got == *want => {}
+                    Some(_) => return fail(format!("{spec}: final value of {k:?} is stale")),
+                    None => return fail(format!("{spec}: block {k:?} lost at the end")),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Map an op-stream key into the plain-put namespace (disjoint from the
+/// encoded namespaces so lossy plain evictions never alias a modeled
+/// block).
+fn key_in_ns9(key: &CacheKey) -> CacheKey {
+    CacheKey { namespace: 9, ..*key }
+}
+
+/// Panic injection into the work-stealing executor: for random task-set
+/// sizes, pool widths, and panic sites, `run_tasks` must run *every*
+/// task to completion, report exactly `TaskSetError { panics, first_task }`,
+/// and leave the pool fully usable for the next task set.
+#[test]
+fn prop_executor_panic_injection() {
+    use blaze::runtime::{Executor, TaskSetError};
+    use std::collections::BTreeSet;
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+    check_with(Config { cases: 16, ..Default::default() }, "executor-panic-injection", |g| {
+        let width = g.usize_in(1, 8);
+        let pool = Executor::new(width);
+        for _round in 0..g.usize_in(1, 3) {
+            let n = g.usize_in(1, 60);
+            let panic_at: BTreeSet<usize> =
+                (0..g.usize_in(0, 4)).map(|_| g.usize_in(0, n - 1)).collect();
+            let ran = AtomicU64::new(0);
+            let result = pool.run_tasks(n, |_ctx, i| {
+                ran.fetch_add(1, Relaxed);
+                if panic_at.contains(&i) {
+                    panic!("injected panic in task {i}");
+                }
+            });
+            let ctx = format!("width {width}, n {n}, panics at {panic_at:?}");
+            match (result, panic_at.first()) {
+                (Ok(()), None) => {}
+                (Ok(()), Some(_)) => return fail(format!("panics swallowed ({ctx})")),
+                (Err(_), None) => return fail(format!("error without a panic ({ctx})")),
+                (Err(e), Some(&first)) => {
+                    let want = TaskSetError { panics: panic_at.len(), first_task: first };
+                    if e != want {
+                        return fail(format!("got {e:?}, want {want:?} ({ctx})"));
+                    }
+                }
+            }
+            if ran.load(Relaxed) != n as u64 {
+                return fail(format!(
+                    "only {}/{n} tasks ran ({ctx})",
+                    ran.load(Relaxed)
+                ));
+            }
+            // The pool must survive the panics: a clean set still works.
+            if pool.run_tasks(n, |_ctx, _i| {}).is_err() {
+                return fail(format!("pool poisoned after panics ({ctx})"));
+            }
         }
         Ok(())
     });
