@@ -36,7 +36,7 @@ fn run(
             serial_reference(corpus, Tokenizer::Spaces),
             "results must be correct even after failures"
         );
-        (result.wall_secs, result.detail)
+        (result.wall_secs, result.detail.to_string())
     };
     once(FailurePlan::none()); // warmup
     let mut best = f64::INFINITY;

@@ -12,7 +12,7 @@
 //! Since the work-stealing executor landed, the scaling figure has a
 //! *real* x-axis: **F1-threads** sweeps the pool width (`--threads`)
 //! across 1/2/4/8 OS threads on the word-count corpus and records the
-//! wall-clock curve in `BENCH_6.json` — actual multicore speedup, not the
+//! wall-clock curve in `BENCH_8.json` — actual multicore speedup, not the
 //! simulated `threads_per_node` cost model.
 //!
 //! Scale knobs: BLAZE_BENCH_BYTES (default 32MB; paper used 2GB),
@@ -86,8 +86,9 @@ fn main() {
 
     // --- F1-threads: real executor-width sweep (the paper's scaling
     // curve with an actual x-axis). Ideal net so the curve isolates
-    // compute scaling; wall-clock per width lands in BENCH_6.json
-    // alongside the workload grid (merged, not clobbered).
+    // compute scaling; wall-clock per width (plus the pool's busy
+    // fraction) lands in BENCH_8.json alongside the workload grid
+    // (merged, not clobbered).
     let mut threads_sweep =
         BenchRunner::new("F1-threads: words per second vs real executor threads");
     let mut machine = MachineReport::new();
@@ -104,18 +105,19 @@ fn main() {
                 || job.run(&corpus).expect("run").words as f64,
             );
             let r = job.run(&corpus).expect("run");
-            machine.row_threaded(
+            machine.row_exec(
                 "wordcount@figure1",
                 engine.label(),
                 threads,
                 r.wall_secs,
                 r.shuffle_bytes,
                 r.storage.spilled_bytes,
+                r.exec.utilization(r.wall_secs),
             );
         }
     }
     threads_sweep.finish();
-    machine.write_merged("BENCH_6.json");
+    machine.write_merged("BENCH_8.json");
     let t1 = threads_sweep.results[4].rate(); // Blaze TCM @ 1 thread
     let t4 = threads_sweep.results[6].rate(); // Blaze TCM @ 4 threads
     println!(

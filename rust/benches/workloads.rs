@@ -34,7 +34,8 @@ fn spec(engine: Engine) -> JobSpec {
 }
 
 /// One machine-readable row from a single-pass job report, tagged with
-/// the real executor width it ran at.
+/// the real executor width it ran at plus the pool's busy fraction
+/// (worker utilization) over the run.
 fn machine_row<O>(
     m: &mut MachineReport,
     name: &str,
@@ -42,13 +43,21 @@ fn machine_row<O>(
     threads: usize,
     r: &JobReport<O>,
 ) {
-    m.row_threaded(
+    eprintln!(
+        "  {name:<14} {:<16} t={threads} busy={:>5.1}% steals={:<5} imbalance={:.2}",
+        engine.label(),
+        r.exec.utilization(r.wall_secs) * 100.0,
+        r.exec.total_steals(),
+        r.exec.steal_imbalance(),
+    );
+    m.row_exec(
         name,
         engine.label(),
         threads,
         r.wall_secs,
         r.shuffle_bytes,
         r.storage.spilled_bytes,
+        r.exec.utilization(r.wall_secs),
     );
 }
 
@@ -183,10 +192,11 @@ fn main() {
         );
     }
 
-    // BENCH_6.json: the machine-readable companion (per-workload wall,
-    // shuffle bytes, spilled bytes) — every workload row swept across
-    // real executor widths 1/2/4/8 (the `threads` axis), one fresh run
-    // per cell. Written merged so the figure1_wordcount scaling sweep's
+    // BENCH_8.json: the machine-readable companion (per-workload wall,
+    // shuffle bytes, spilled bytes, executor busy fraction) — every
+    // workload row swept across real executor widths 1/2/4/8 (the
+    // `threads` axis), one fresh run per cell. Written merged so the
+    // figure1_wordcount scaling sweep's
     // rows land in the same file. Default rows never spill; the
     // `@spill64k` rows (threads = 4) force the bounded-memory exchange so
     // the spill column is populated (the full threshold sweep lives in
@@ -204,13 +214,14 @@ fn main() {
             machine_row(m, "distinct", engine, threads, &spec(engine).run(&distinct, &corpus).expect("distinct"));
             machine_row(m, "grep", engine, threads, &spec(engine).run(&grep, &corpus).expect("grep"));
             let chained = run_chained(&spec(engine), &sessionize, &logs).expect("sessionize");
-            machine.row_threaded(
+            machine.row_exec(
                 "sessionize",
                 engine.label(),
                 threads,
                 chained.wall_secs,
                 chained.shuffle_bytes,
                 chained.storage.spilled_bytes,
+                chained.exec.utilization(chained.wall_secs),
             );
         }
         // The spill cliff's anchor points.
@@ -230,5 +241,5 @@ fn main() {
             &spill(spec(engine)).run_inputs(&join, &join_inputs).expect("join spill"),
         );
     }
-    machine.write_merged("BENCH_6.json");
+    machine.write_merged("BENCH_8.json");
 }

@@ -198,6 +198,11 @@ pub struct MachineRow {
     /// touch the cache). The trace-lab rows (`benches/cache_policies.rs`)
     /// carry the replayed per-policy rate here.
     pub hit_rate: f64,
+    /// Executor busy fraction (`busy_ns / (width * wall)`, in `[0, 1]`)
+    /// over the row's run — worker utilization from the instrumented
+    /// work-stealing pool. `0.0` = unrecorded (rows from benches that
+    /// don't snapshot [`crate::runtime::executor::ExecMetrics`]).
+    pub busy_frac: f64,
 }
 
 /// Machine-readable companion to the human tables: collected by the
@@ -244,6 +249,32 @@ impl MachineReport {
             shuffle_bytes,
             spilled_bytes,
             hit_rate: 0.0,
+            busy_frac: 0.0,
+        });
+    }
+
+    /// [`row_threaded`](Self::row_threaded) with the executor busy
+    /// fraction recorded — the utilization column of the scaling sweeps.
+    #[allow(clippy::too_many_arguments)]
+    pub fn row_exec(
+        &mut self,
+        workload: impl Into<String>,
+        engine: impl Into<String>,
+        threads: usize,
+        wall_secs: f64,
+        shuffle_bytes: u64,
+        spilled_bytes: u64,
+        busy_frac: f64,
+    ) {
+        self.rows.push(MachineRow {
+            workload: workload.into(),
+            engine: engine.into(),
+            threads,
+            wall_secs,
+            shuffle_bytes,
+            spilled_bytes,
+            hit_rate: 0.0,
+            busy_frac,
         });
     }
 
@@ -265,6 +296,7 @@ impl MachineReport {
             shuffle_bytes: 0,
             spilled_bytes: 0,
             hit_rate,
+            busy_frac: 0.0,
         });
     }
 
@@ -289,7 +321,7 @@ impl MachineReport {
             out.push_str(&format!(
                 "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
                  \"wall_secs\": {:.6}, \"shuffle_bytes\": {}, \"spilled_bytes\": {}, \
-                 \"hit_rate\": {:.6}}}{}\n",
+                 \"hit_rate\": {:.6}, \"busy_frac\": {:.6}}}{}\n",
                 esc(&r.workload),
                 esc(&r.engine),
                 r.threads,
@@ -297,6 +329,7 @@ impl MachineReport {
                 r.shuffle_bytes,
                 r.spilled_bytes,
                 r.hit_rate,
+                r.busy_frac,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
         }
@@ -385,6 +418,8 @@ pub fn parse_rows(json: &str) -> Vec<MachineRow> {
                 spilled_bytes: num_field(line, "spilled_bytes")?,
                 // Absent in pre-trace-lab files: read as "unrecorded".
                 hit_rate: num_field(line, "hit_rate").unwrap_or(0.0),
+                // Absent in pre-observability files: read as "unrecorded".
+                busy_frac: num_field(line, "busy_frac").unwrap_or(0.0),
             })
         })
         .collect()
@@ -467,6 +502,24 @@ mod tests {
         assert_eq!(rows[1].engine, "e\nngine");
         assert_eq!(rows[1].threads, 0);
         assert_eq!(rows[1].spilled_bytes, 2048);
+    }
+
+    #[test]
+    fn exec_rows_round_trip_busy_fraction() {
+        let mut r = MachineReport::new();
+        r.row_exec("wordcount", "blaze-tcm", 8, 0.5, 1024, 0, 0.875);
+        r.row("wordcount", "spark", 0.25, 1024, 0);
+        let rows = parse_rows(&r.to_json());
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].busy_frac - 0.875).abs() < 1e-9);
+        assert_eq!(rows[1].busy_frac, 0.0, "plain rows read as unrecorded");
+        // Pre-busy-frac files parse too, defaulting the new column.
+        let legacy = "    {\"workload\": \"w\", \"engine\": \"e\", \"threads\": 2, \
+                      \"wall_secs\": 1.0, \"shuffle_bytes\": 3, \"spilled_bytes\": 4, \
+                      \"hit_rate\": 0.5}\n";
+        let rows = parse_rows(legacy);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].busy_frac, 0.0);
     }
 
     #[test]

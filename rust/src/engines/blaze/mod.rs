@@ -45,6 +45,7 @@ use crate::hash::HashKind;
 use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
 use crate::runtime::executor::{ExecCtx, Executor, TaskSetError};
 use crate::storage::{DiskTier, HeapSize, PolicySpec, StorageStats};
+use crate::trace::{self, SpanCat};
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::Stopwatch;
 
@@ -512,6 +513,7 @@ where
     M: Fn(&Comm, &DistHashMap<K, V>) -> Result<u64, TaskSetError> + Sync,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Sync,
 {
+    let _stage_span = trace::span_arg(SpanCat::Stage, "blaze", stage.id as u64);
     let skip_shuffle = !stage.runs_exchange();
     // The bounded-memory exchange, as planned: one disk tier for the
     // whole job (dropped — files and all — when the report is built).
@@ -583,6 +585,7 @@ where
         let job_sw = Stopwatch::start();
 
         // ---- Map phase (the paper's DistRange::map) ----
+        let map_span = trace::span_arg(SpanCat::Map, "map", comm.rank as u64);
         let mut sw = Stopwatch::start();
         let mut failed = failures.should_fail_node(comm.rank, 0);
         let records = if failed {
@@ -605,8 +608,10 @@ where
             }
         };
         let map_secs = sw.restart().as_secs_f64();
+        drop(map_span);
 
         // ---- Shuffle phase ----
+        let exchange_span = trace::span_arg(SpanCat::Exchange, "exchange", comm.rank as u64);
         failed |= failures.should_fail_node(comm.rank, 1);
         let entries = if skip_shuffle {
             // Zero-shuffle fast path: every key was declared globally
@@ -624,10 +629,15 @@ where
             map.to_vec_local()
         };
         let shuffle_secs = sw.elapsed_secs();
+        drop(exchange_span);
+        let entries = {
+            let _fin = trace::span_arg(SpanCat::Finalize, "finalize", comm.rank as u64);
+            finalize_shard(entries)
+        };
         let wall_secs = job_sw.elapsed_secs();
 
         NodeOutcome {
-            entries: finalize_shard(entries),
+            entries,
             map_secs,
             shuffle_secs,
             wall_secs,

@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::trace::MetricSet;
+
 #[derive(Debug, Default)]
 pub struct SparkMetrics {
     pub tasks_launched: AtomicU64,
@@ -85,26 +87,29 @@ impl SparkMetrics {
         self.disk_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
-    /// One-line human summary.
+    /// The breakdown as a typed [`MetricSet`] — same keys, same order,
+    /// same rendering as the old hand-formatted summary line.
+    pub fn metric_set(&self) -> MetricSet {
+        MetricSet::new()
+            .with_count("tasks", self.tasks_launched.load(Ordering::Relaxed))
+            .with_count("failures", self.task_failures.load(Ordering::Relaxed))
+            .with_count("restarts", self.job_restarts.load(Ordering::Relaxed))
+            .with_count("recomputes", self.lineage_recomputes.load(Ordering::Relaxed))
+            .with_bytes("shuffle_out", self.shuffle_bytes_written.load(Ordering::Relaxed))
+            .with_bytes("shuffle_in", self.shuffle_bytes_read.load(Ordering::Relaxed))
+            .with_count("records", self.records_shuffled.load(Ordering::Relaxed))
+            .with_secs("ser", self.ser_secs())
+            .with_secs("deser", self.deser_secs())
+            .with_secs("dispatch", self.dispatch_secs())
+            .with_secs("net", self.net_secs())
+            .with_secs("disk", self.disk_secs())
+            .with_secs("vm", self.vm_secs())
+            .with_secs("gc", self.gc_secs())
+    }
+
+    /// One-line human summary (the rendered [`Self::metric_set`]).
     pub fn summary(&self) -> String {
-        format!(
-            "tasks={} failures={} restarts={} recomputes={} shuffle_out={} shuffle_in={} records={} \
-             ser={:.3}s deser={:.3}s dispatch={:.3}s net={:.3}s disk={:.3}s vm={:.3}s gc={:.3}s",
-            self.tasks_launched.load(Ordering::Relaxed),
-            self.task_failures.load(Ordering::Relaxed),
-            self.job_restarts.load(Ordering::Relaxed),
-            self.lineage_recomputes.load(Ordering::Relaxed),
-            crate::util::stats::fmt_bytes(self.shuffle_bytes_written.load(Ordering::Relaxed)),
-            crate::util::stats::fmt_bytes(self.shuffle_bytes_read.load(Ordering::Relaxed)),
-            self.records_shuffled.load(Ordering::Relaxed),
-            self.ser_secs(),
-            self.deser_secs(),
-            self.dispatch_secs(),
-            self.net_secs(),
-            self.disk_secs(),
-            self.vm_secs(),
-            self.gc_secs(),
-        )
+        self.metric_set().to_string()
     }
 }
 
@@ -120,5 +125,25 @@ mod tests {
         m.add_ser(Duration::from_millis(5));
         assert!((m.ser_secs() - 0.015).abs() < 1e-9);
         assert!(m.summary().contains("tasks=3"));
+    }
+
+    #[test]
+    fn metric_set_renders_the_legacy_summary_format() {
+        let m = SparkMetrics::new();
+        m.tasks_launched.fetch_add(3, Ordering::Relaxed);
+        m.shuffle_bytes_written.fetch_add(2048, Ordering::Relaxed);
+        m.add_ser(Duration::from_millis(10));
+        assert_eq!(
+            m.summary(),
+            format!(
+                "tasks=3 failures=0 restarts=0 recomputes=0 shuffle_out={} shuffle_in={} \
+                 records=0 ser=0.010s deser=0.000s dispatch=0.000s net=0.000s disk=0.000s \
+                 vm=0.000s gc=0.000s",
+                crate::util::stats::fmt_bytes(2048),
+                crate::util::stats::fmt_bytes(0),
+            )
+        );
+        assert_eq!(m.metric_set().count("tasks"), 3);
+        assert!((m.metric_set().value("ser") - 0.010).abs() < 1e-9);
     }
 }

@@ -97,6 +97,11 @@ where
     V: ShuffleVal,
     F: Fn(Vec<(K, V)>) -> Vec<(K, V)> + Send + Sync + 'static,
 {
+    let _stage_span = crate::trace::span_arg(
+        crate::trace::SpanCat::Stage,
+        "spark",
+        stage.id as u64,
+    );
     let partitions = ctx.default_partitions();
     let mut pairs: Option<Rdd<(K, V)>> = None;
     for source in sources {

@@ -67,6 +67,20 @@
 //! Pallas token-histogram kernel AOT-lowered from JAX at build time and
 //! executed from Rust through [`runtime`].
 //!
+//! ## Observability
+//!
+//! [`trace`] is the zero-dependency structured tracing + metrics layer:
+//! process-global span probes (near-free when no [`trace::TraceSession`]
+//! records) capture per-thread timelines of stage/map/exchange/spill/
+//! cache events, [`trace::chrome`] exports them as Perfetto-loadable
+//! Chrome trace JSON (`--trace-out`), and [`trace::profile`] folds them
+//! into the per-stage phase breakdown behind `blaze profile`. The
+//! executor counts per-worker busy/idle nanos, steals and task-latency
+//! histograms unconditionally
+//! ([`runtime::executor::ExecMetrics`] in every
+//! [`mapreduce::JobReport`]), and report `detail` fields are typed
+//! [`trace::MetricSet`]s rather than strings.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
@@ -82,6 +96,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
 pub mod storage;
+pub mod trace;
 pub mod util;
 pub mod wordcount;
 pub mod workloads;

@@ -12,9 +12,18 @@
 //!   executing — the planner's ablation/debugging view.
 //! * `compare`   — the paper's experiment: all engines on one corpus,
 //!   printed as the words/sec bar chart.
+//! * `profile`   — run one job under the structured tracer and print the
+//!   per-stage phase breakdown, worker utilization, and critical path
+//!   (same options as `run`).
+//! * `trace-check` — validate a Chrome trace-event JSON file written by
+//!   `--trace-out` and summarize its tracks.
 //! * `generate`  — synthesize a corpus to a file.
 //! * `fault`     — fault-tolerance demo (inject failures on both engines).
 //! * `xla`       — run the XLA/PJRT-accelerated combiner on a corpus.
+//!
+//! `run` and `profile` take `--trace-out <file>` to dump the span
+//! timeline as Chrome trace-event JSON (open in Perfetto or
+//! `chrome://tracing`).
 //!
 //! `blaze <subcommand> --help` lists options.
 
@@ -49,6 +58,8 @@ fn main() {
         Some("run") => dispatch(cmd_run(), &argv[1..], do_run),
         Some("plan") => dispatch(cmd_plan(), &argv[1..], do_plan),
         Some("compare") => dispatch(cmd_compare(), &argv[1..], do_compare),
+        Some("profile") => dispatch(cmd_profile(), &argv[1..], do_profile),
+        Some("trace-check") => dispatch(cmd_trace_check(), &argv[1..], do_trace_check),
         Some("generate") => dispatch(cmd_generate(), &argv[1..], do_generate),
         Some("fault") => dispatch(cmd_fault(), &argv[1..], do_fault),
         Some("xla") => dispatch(cmd_xla(), &argv[1..], do_xla),
@@ -68,7 +79,7 @@ fn main() {
 fn print_usage() {
     println!(
         "blaze — Spark vs MPI/OpenMP word-count MapReduce (Li 2018), reproduced\n\n\
-         Usage: blaze <run|plan|compare|generate|fault|xla> [options]\n\
+         Usage: blaze <run|plan|compare|profile|trace-check|generate|fault|xla> [options]\n\
          Try `blaze run --help`."
     );
 }
@@ -225,7 +236,13 @@ fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
 // ------------------------------------------------------------------ run ----
 
 fn cmd_run() -> Command {
-    let cmd = Command::new("run", "run one MapReduce job")
+    run_opts(Command::new("run", "run one MapReduce job"))
+}
+
+/// The full `run` option set — shared with `profile`, which accepts the
+/// same workloads and knobs.
+fn run_opts(cmd: Command) -> Command {
+    let cmd = cmd
         .opt("engine", Some("blaze-tcm"), "blaze|blaze-tcm|spark|spark-stripped")
         .opt("workload", Some("wordcount"), WORKLOADS)
         .opt("combine", Some("eager"), "map-side combine: eager|none (blaze)")
@@ -253,12 +270,49 @@ fn cmd_run() -> Command {
         .opt("points", Some("20000"), "kmeans: synthesized point count")
         .opt("dims", Some("4"), "kmeans: point dimensionality")
         .opt("clusters", Some("8"), "kmeans: cluster count")
+        .opt(
+            "trace-out",
+            None,
+            "write a Chrome trace-event JSON timeline (open in Perfetto or chrome://tracing)",
+        )
         .flag("force-shuffle", "run the exchange even for zero-shuffle workloads")
         .flag("verify", "check against the serial reference");
     corpus_opts(cluster_opts(spill_opts(cmd)))
 }
 
 fn do_run(args: &Args) -> Result<(), String> {
+    let Some(path) = args.get("trace-out").map(str::to_string) else {
+        return run_workload(args);
+    };
+    // Tracing never alters results (probes only read clocks and append to
+    // side buffers), so the traced run's output is bit-identical.
+    let session = blaze::trace::TraceSession::start();
+    let result = run_workload(args);
+    let trace = session.finish();
+    result?;
+    write_trace(&path, &trace)
+}
+
+/// Write a drained trace as Chrome trace-event JSON and print a summary.
+fn write_trace(path: &str, trace: &blaze::trace::Trace) -> Result<(), String> {
+    blaze::trace::chrome::write_file(std::path::Path::new(path), trace)
+        .map_err(|e| format!("writing {path}: {e}"))?;
+    let dropped = trace.dropped();
+    println!(
+        "\ntrace: {} span(s) across {} thread(s) -> {path}{}",
+        trace.span_count(),
+        trace.threads.len(),
+        if dropped > 0 {
+            format!(" ({dropped} event(s) dropped at buffer capacity)")
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+/// Dispatch `--workload` to its runner (shared by `run` and `profile`).
+fn run_workload(args: &Args) -> Result<(), String> {
     match args.get_str("workload").as_str() {
         "wordcount" | "wc" => do_run_wordcount(args),
         "pagerank" | "page-rank" => do_run_pagerank(args),
@@ -768,6 +822,116 @@ fn do_compare(args: &Args) -> Result<(), String> {
     let spark = bars[0].1;
     let best = bars[1..].iter().map(|(_, v)| *v).fold(0.0, f64::max);
     println!("speedup (best Blaze / Spark): {:.1}x", best / spark);
+    Ok(())
+}
+
+// -------------------------------------------------------------- profile ----
+
+fn cmd_profile() -> Command {
+    run_opts(Command::new(
+        "profile",
+        "run one job under the tracer; print per-stage phase breakdown, \
+         worker utilization, and the critical path",
+    ))
+}
+
+fn do_profile(args: &Args) -> Result<(), String> {
+    let exec = blaze::runtime::executor::Executor::for_threads(parse_threads(args)?);
+    let before = exec.metrics();
+    let session = blaze::trace::TraceSession::start();
+    let sw = blaze::util::stats::Stopwatch::start();
+    let result = run_workload(args);
+    let wall_secs = sw.elapsed_secs();
+    let trace = session.finish();
+    result?;
+    print_profile(&trace, &exec.metrics().delta_since(&before), wall_secs);
+    if let Some(path) = args.get("trace-out") {
+        write_trace(path, &trace)?;
+    }
+    Ok(())
+}
+
+/// The `blaze profile` tables: phase breakdown, executor utilization,
+/// critical path.
+fn print_profile(
+    trace: &blaze::trace::Trace,
+    exec: &blaze::runtime::executor::ExecMetrics,
+    wall_secs: f64,
+) {
+    let report = blaze::trace::profile::analyze(trace);
+    println!(
+        "\nphase breakdown ({} span(s), {} executor task(s); busy/wall = effective parallelism):",
+        trace.span_count(),
+        report.tasks
+    );
+    println!("  {:>5}  {:<12} {:>10} {:>10} {:>8}", "stage", "phase", "wall(s)", "busy(s)", "count");
+    for row in &report.rows {
+        println!(
+            "  {:>5}  {:<12} {:>10.4} {:>10.4} {:>8}",
+            row.stage.map_or("-".to_string(), |s| s.to_string()),
+            row.phase,
+            row.wall_secs,
+            row.busy_secs,
+            row.count
+        );
+    }
+    println!(
+        "\nexecutor: {} worker(s), {:.1}% utilized over {:.3}s wall; \
+         {} task(s), {} steal(s), steal imbalance {:.2}",
+        exec.width,
+        exec.utilization(wall_secs) * 100.0,
+        wall_secs,
+        exec.total_tasks(),
+        exec.total_steals(),
+        exec.steal_imbalance(),
+    );
+    if !report.critical_path.is_empty() {
+        println!(
+            "\ncritical path — {:.3}s of {:.3}s span wall:",
+            report.critical_secs, report.span_wall_secs
+        );
+        for step in &report.critical_path {
+            println!(
+                "  stage {:>3}  {:<12} {:>10.4}s",
+                step.stage.map_or("-".to_string(), |s| s.to_string()),
+                step.phase,
+                step.secs
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------- trace-check ----
+
+fn cmd_trace_check() -> Command {
+    Command::new(
+        "trace-check",
+        "validate a Chrome trace-event JSON file written by --trace-out: \
+         blaze trace-check <trace.json>",
+    )
+}
+
+fn do_trace_check(args: &Args) -> Result<(), String> {
+    let [path] = args.positional() else {
+        return Err("usage: blaze trace-check <trace.json>".into());
+    };
+    let json = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let summary = blaze::trace::chrome::validate(&json).map_err(|e| format!("{path}: {e}"))?;
+    println!(
+        "{path}: OK — {} event(s): {} span(s) across {} thread track(s), \
+         {} counter sample(s) on {} track(s)",
+        summary.events,
+        summary.span_events,
+        summary.span_threads,
+        summary.counter_events,
+        summary.counter_tracks.len(),
+    );
+    for (tid, name) in &summary.thread_names {
+        println!("  tid {tid:>3}: {name}");
+    }
+    if !summary.counter_tracks.is_empty() {
+        println!("  counter track(s): {}", summary.counter_tracks.join(", "));
+    }
     Ok(())
 }
 

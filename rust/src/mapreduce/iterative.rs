@@ -36,6 +36,7 @@ use std::sync::Arc;
 use crate::cache::{CacheBudget, CacheStats, PartitionCache};
 use crate::engines::Engine;
 use crate::storage::{DiskTier, StorageStats};
+use crate::trace::{self, SpanCat};
 use crate::util::stats::Stopwatch;
 
 use super::{
@@ -254,6 +255,7 @@ pub fn run_iterative<I: IterativeWorkload>(
     let mut converged = false;
     let mut storage = StorageStats::default();
     for round in 0..it.max_iters {
+        let _round_span = trace::span_arg(SpanCat::Round, "round", round as u64);
         // Static relations stay at generation 0; the state relation's
         // content changes every round.
         let mut gens = vec![0u64; nrels];
@@ -266,7 +268,12 @@ pub fn run_iterative<I: IterativeWorkload>(
         // rather than leaving an unbounded cache to accumulate one dead
         // parsed state per round (bounded budgets would also LRU them out).
         cache.invalidate_generations_below((nrels - 1) as u64, round as u64);
-        let (next, delta) = w.advance(report.output, &state);
+        // `advance` is driver-side wall between rounds — span it so it
+        // shows up as its own phase rather than hiding in the round gap.
+        let (next, delta) = {
+            let _adv = trace::span_arg(SpanCat::Driver, "advance", round as u64);
+            w.advance(report.output, &state)
+        };
         storage = storage.merged(&report.storage);
         iters.push(IterationStats {
             round,

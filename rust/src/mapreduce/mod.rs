@@ -98,7 +98,9 @@ use crate::engines::blaze::{BlazeConf, KeyPath};
 use crate::engines::spark::{SparkConf, SparkContext};
 use crate::engines::Engine;
 use crate::hash::HashKind;
+use crate::runtime::executor::{ExecMetrics, Executor};
 use crate::storage::{HeapSize, PolicySpec, StorageStats, TraceRecorder};
+use crate::trace::MetricSet;
 use crate::util::ser::{Decode, Encode};
 use crate::util::stats::{fmt_bytes, fmt_rate, Stopwatch};
 
@@ -510,8 +512,9 @@ impl JobSpec {
     ) -> Result<JobReport<W::Output>, MapReduceError> {
         self.check_arity(w.as_ref(), inputs)?;
         let graph = self.plan(w.as_ref(), inputs);
+        let (exec, before) = self.exec_snapshot();
         let run = engine_for::<W>(self.engine).run_plan(self, &graph, 0, w, inputs)?;
-        Ok(self.finish(w, run, inputs))
+        Ok(self.finish(w, run, inputs, exec.metrics().delta_since(&before)))
     }
 
     /// Run a [`CacheableWorkload`] through the engines' partition-cached
@@ -536,6 +539,7 @@ impl JobSpec {
         let before = cache.stats();
         let before_storage = cache.storage_stats();
         let rels = inputs.line_sets();
+        let (exec, exec_before) = self.exec_snapshot();
         let run = match self.engine {
             Engine::Blaze | Engine::BlazeTcm => {
                 let conf = self.blaze_conf(KeyPath::AllocPerToken);
@@ -559,7 +563,8 @@ impl JobSpec {
                 spark_job_run(&ctx, entries, records, sw.elapsed_secs())
             }
         };
-        let mut report = self.finish(w, run, inputs);
+        let mut report =
+            self.finish(w, run, inputs, exec.metrics().delta_since(&exec_before));
         report.cache = cache.stats().delta_since(&before);
         // Exchange spill (engine-side) + cache demotions/promotions
         // (shared-store side) in one storage row.
@@ -580,8 +585,9 @@ impl JobSpec {
         let inputs = JobInputs::single(corpus);
         self.check_arity(w.as_ref(), &inputs)?;
         let graph = self.plan(w.as_ref(), &inputs);
+        let (exec, before) = self.exec_snapshot();
         let run = engine_for_str::<W>(self.engine).run_plan(self, &graph, 0, w, &inputs)?;
-        Ok(self.finish(w, run, &inputs))
+        Ok(self.finish(w, run, &inputs, exec.metrics().delta_since(&before)))
     }
 
     fn check_arity<W: Workload>(&self, w: &W, inputs: &JobInputs) -> Result<(), MapReduceError> {
@@ -598,11 +604,23 @@ impl JobSpec {
         Ok(())
     }
 
+    /// Snapshot the process-wide worker pool this spec's jobs run on, so
+    /// callers can delta its counters around the engine call. The pool is
+    /// shared: concurrent jobs on the same width see each other's work,
+    /// so [`JobReport::exec`] describes "the pool during this job" —
+    /// exact when one job runs at a time (the CLI and bench paths).
+    fn exec_snapshot(&self) -> (Arc<Executor>, ExecMetrics) {
+        let exec = Executor::for_threads(self.threads);
+        let before = exec.metrics();
+        (exec, before)
+    }
+
     fn finish<W: Workload>(
         &self,
         w: &Arc<W>,
         run: JobRun<W::Key, W::Value>,
         inputs: &JobInputs,
+        exec: ExecMetrics,
     ) -> JobReport<W::Output> {
         let records_in: u64 = inputs.relations.iter().map(|r| r.lines.len() as u64).sum();
         let stages = vec![StageStats {
@@ -623,6 +641,7 @@ impl JobSpec {
             detail: run.detail,
             cache: CacheStats::default(),
             storage: run.storage,
+            exec,
             stages,
         }
     }
@@ -696,7 +715,7 @@ pub struct JobRun<K, V> {
     /// Engine-side storage activity (exchange spill, persisted shuffle
     /// blocks).
     pub storage: StorageStats,
-    pub detail: String,
+    pub detail: MetricSet,
 }
 
 /// Uniform result of one job on one engine.
@@ -709,8 +728,9 @@ pub struct JobReport<O> {
     /// Map-phase emissions.
     pub records: u64,
     pub shuffle_bytes: u64,
-    /// Engine-specific metric breakdown.
-    pub detail: String,
+    /// Engine-specific metric breakdown, typed (renders exactly like the
+    /// old `k=v`-joined string via `Display`).
+    pub detail: MetricSet,
     /// What this run did to the shared partition cache (all zeros unless
     /// the job went through [`JobSpec::run_inputs_cached`] with a cache
     /// attached).
@@ -720,6 +740,11 @@ pub struct JobReport<O> {
     /// (persisted shuffle blocks land here too). All zeros when nothing
     /// touched a tier below memory.
     pub storage: StorageStats,
+    /// Worker-pool activity during the job: per-worker busy/idle nanos,
+    /// task counts, steals, and the task-latency histogram, deltaed
+    /// around the engine call. The pool is process-wide per width, so
+    /// concurrent jobs on the same width fold together here.
+    pub exec: ExecMetrics,
     /// Per-stage rows (records in/out, shuffle bytes, wall per stage).
     /// Single-pass jobs have exactly one; multi-stage pipelines report
     /// through [`ChainReport::stages`] instead.
@@ -824,10 +849,10 @@ fn blaze_job_run<K, V>(r: crate::engines::blaze::WorkloadReport<K, V>) -> JobRun
         records: r.records,
         shuffle_bytes: r.shuffle_bytes,
         storage: r.storage,
-        detail: format!(
-            "map={:.3}s shuffle={:.3}s reruns={}",
-            r.map_secs, r.shuffle_secs, r.reruns
-        ),
+        detail: MetricSet::new()
+            .with_secs("map", r.map_secs)
+            .with_secs("shuffle", r.shuffle_secs)
+            .with_count("reruns", r.reruns as u64),
     }
 }
 
@@ -897,7 +922,7 @@ fn spark_job_run<K, V>(
         // own their cache) persist demotions — the context is per-job, so
         // the snapshot is the job's delta.
         storage: ctx.storage_stats(),
-        detail: ctx.metrics().summary(),
+        detail: ctx.metrics().metric_set(),
     }
 }
 

@@ -43,7 +43,9 @@ use std::sync::Arc;
 
 use crate::cache::CacheStats;
 use crate::engines::Engine;
+use crate::runtime::executor::ExecMetrics;
 use crate::storage::StorageStats;
+use crate::trace::{self, MetricSet, SpanCat};
 use crate::util::stats::Stopwatch;
 
 use super::{
@@ -379,8 +381,16 @@ pub struct StageOutcome {
     pub shuffle_bytes: u64,
     /// The stage's storage-hierarchy activity (exchange spill etc).
     pub storage: StorageStats,
+    /// Engine-side wall of the stage (map + exchange + per-shard
+    /// finalize). Driver-side finalize/render time is *not* in here — it
+    /// reports separately as [`Self::render_secs`], so chained stage
+    /// walls plus bridge time sum to the job wall instead of silently
+    /// losing (or double-counting) the rendering between stages.
     pub wall_secs: f64,
-    pub detail: String,
+    /// Driver-side finalize + bridge-line rendering after the engine
+    /// returned.
+    pub render_secs: f64,
+    pub detail: MetricSet,
 }
 
 /// A type-erased stage of a chained pipeline. Implementations run one
@@ -447,14 +457,21 @@ impl<W: Workload> ChainStage for TypedStage<W> {
         }
         let run = engine_for::<W>(spec.engine).run_plan(spec, graph, stage_id, &self.w, inputs)?;
         let rows = run.entries.len() as u64;
+        // Driver-side finalize + render is real wall time between stages
+        // — time it and span it so it attributes to the bridge, not to
+        // any stage's engine wall.
+        let _bridge = trace::span_arg(SpanCat::Bridge, "render", stage_id as u64);
+        let sw = Stopwatch::start();
         let out = self.w.finalize(run.entries);
+        let lines = (self.render)(out);
         Ok(StageOutcome {
-            lines: (self.render)(out),
+            lines,
             rows,
             records: run.records,
             shuffle_bytes: run.shuffle_bytes,
             storage: run.storage,
             wall_secs: run.wall_secs,
+            render_secs: sw.elapsed_secs(),
             detail: run.detail,
         })
     }
@@ -499,7 +516,17 @@ pub struct ChainReport {
     pub shuffle_bytes: u64,
     /// One row per executed stage.
     pub stages: Vec<StageStats>,
-    pub detail: String,
+    /// Per-stage engine details folded under `stage{i}.` prefixes, plus
+    /// the chain-level `bridge` seconds.
+    pub detail: MetricSet,
+    /// Driver-side time between stages: finalize + bridge-line rendering
+    /// + next-stage input construction. Stage engine walls plus this sum
+    /// to [`Self::wall_secs`] (within scheduling noise) — it used to
+    /// vanish into the job wall unattributed.
+    pub bridge_secs: f64,
+    /// Worker-pool activity across all stages (see
+    /// [`JobReport::exec`](super::JobReport::exec)).
+    pub exec: ExecMetrics,
     /// Cache activity across stages (all zeros unless a cache was
     /// attached).
     pub cache: CacheStats,
@@ -573,19 +600,22 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
     check_chain_shapes(c, &stages, inputs)?;
     let graph = spec.plan_chained(c, inputs);
     let before = spec.cache.as_ref().map(|cache| cache.stats());
+    let (exec, exec_before) = spec.exec_snapshot();
 
     let sw = Stopwatch::start();
     let mut current = inputs.clone();
     let mut lines: Vec<String> = Vec::new();
     let mut stats = Vec::new();
-    let mut details = Vec::new();
+    let mut detail = MetricSet::new();
     let (mut records, mut shuffle_bytes) = (0u64, 0u64);
+    let mut bridge_secs = 0.0;
     let mut storage = StorageStats::default();
     for (i, st) in stages.iter().enumerate() {
         let records_in: u64 = current.relations.iter().map(|r| r.lines.len() as u64).sum();
         let outcome = st.execute(spec, &graph, i, &current)?;
         records += outcome.records;
         shuffle_bytes += outcome.shuffle_bytes;
+        bridge_secs += outcome.render_secs;
         storage = storage.merged(&outcome.storage);
         stats.push(StageStats {
             stage: i,
@@ -595,12 +625,16 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
             shuffle_bytes: outcome.shuffle_bytes,
             wall_secs: outcome.wall_secs,
         });
-        details.push(format!("stage{i}[{}]", outcome.detail));
+        detail.merge_prefixed(&format!("stage{i}"), &outcome.detail);
         lines = outcome.lines;
         if i + 1 < stages.len() {
+            let _span = trace::span_arg(SpanCat::Bridge, "inputs", i as u64);
+            let bsw = Stopwatch::start();
             current = bridge_inputs(i, &lines);
+            bridge_secs += bsw.elapsed_secs();
         }
     }
+    detail.set_secs("bridge", bridge_secs);
     let cache = match (before, &spec.cache) {
         (Some(before), Some(cache)) => cache.stats().delta_since(&before),
         _ => CacheStats::default(),
@@ -613,7 +647,9 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
         records,
         shuffle_bytes,
         stages: stats,
-        detail: details.join(" "),
+        detail,
+        bridge_secs,
+        exec: exec.metrics().delta_since(&exec_before),
         cache,
         storage,
     })

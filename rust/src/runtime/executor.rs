@@ -34,7 +34,9 @@ use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::trace::{self, MetricSet, SpanCat};
 
 /// Context handed to every task body: which pool worker is executing it.
 /// Callers key per-thread state (the `ConcurrentHashMap` thread caches)
@@ -77,6 +79,246 @@ pub struct StealStats {
     pub injector_takes: u64,
     /// Batches stolen from sibling deques.
     pub steals: u64,
+}
+
+/// Log₂-bucketed task-latency histogram cells (bucket `i` counts task
+/// durations in `[2^i, 2^(i+1))` ns; the last bucket absorbs the tail).
+const LATENCY_BUCKETS: usize = 40;
+
+struct LatencyCells {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+fn latency_bucket(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        (63 - ns.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+}
+
+impl LatencyCells {
+    fn new() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn record(&self, ns: u64) {
+        self.buckets[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// A point-in-time copy of the task-latency histogram. Subtract two
+/// snapshots ([`delta_since`](Self::delta_since)) to isolate one job.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencySnapshot {
+    /// `buckets[i]` counts tasks whose run time fell in
+    /// `[2^i, 2^(i+1))` ns.
+    pub buckets: Vec<u64>,
+}
+
+impl LatencySnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Upper bound (ns) of the bucket where the cumulative count crosses
+    /// quantile `q` in `[0, 1]`. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        1u64 << self.buckets.len().min(63)
+    }
+
+    pub fn delta_since(&self, before: &LatencySnapshot) -> LatencySnapshot {
+        let n = self.buckets.len().max(before.buckets.len());
+        LatencySnapshot {
+            buckets: (0..n)
+                .map(|i| {
+                    let now = self.buckets.get(i).copied().unwrap_or(0);
+                    let then = before.buckets.get(i).copied().unwrap_or(0);
+                    now.saturating_sub(then)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Per-worker activity cells, updated by the worker itself.
+struct WorkerCounters {
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    injector_takes: AtomicU64,
+}
+
+impl WorkerCounters {
+    fn new() -> Self {
+        Self {
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            injector_takes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One worker's activity totals at snapshot time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Nanoseconds spent running task bodies.
+    pub busy_ns: u64,
+    /// Nanoseconds spent parked on the idle condvar (accumulated at
+    /// wake-up, so a window's first wake may attribute earlier parked
+    /// time to it — treat as approximate).
+    pub idle_ns: u64,
+    /// Task bodies executed (nested inline sets included).
+    pub tasks: u64,
+    /// Batches stolen from sibling deques.
+    pub steals: u64,
+    /// Batches taken from the global injector.
+    pub injector_takes: u64,
+}
+
+impl WorkerStats {
+    fn delta_since(&self, before: &WorkerStats) -> WorkerStats {
+        WorkerStats {
+            worker: self.worker,
+            busy_ns: self.busy_ns.saturating_sub(before.busy_ns),
+            idle_ns: self.idle_ns.saturating_sub(before.idle_ns),
+            tasks: self.tasks.saturating_sub(before.tasks),
+            steals: self.steals.saturating_sub(before.steals),
+            injector_takes: self.injector_takes.saturating_sub(before.injector_takes),
+        }
+    }
+}
+
+/// Structured executor metrics: a point-in-time snapshot of every
+/// worker's counters plus the task-latency histogram. The job layer
+/// snapshots the pool before and after a run and ships the
+/// [`delta_since`](Self::delta_since) in the `JobReport`. The pool is
+/// process-wide, so concurrent jobs' activity lands in the same window —
+/// deltas describe *the pool during the job*, not the job exclusively.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExecMetrics {
+    /// Pool width the snapshot was taken from.
+    pub width: usize,
+    pub workers: Vec<WorkerStats>,
+    pub latency: LatencySnapshot,
+}
+
+impl ExecMetrics {
+    /// Per-field saturating difference (same pool, later minus earlier).
+    pub fn delta_since(&self, before: &ExecMetrics) -> ExecMetrics {
+        let blank = WorkerStats::default();
+        ExecMetrics {
+            width: self.width,
+            workers: self
+                .workers
+                .iter()
+                .enumerate()
+                .map(|(i, w)| w.delta_since(before.workers.get(i).unwrap_or(&blank)))
+                .collect(),
+            latency: self.latency.delta_since(&before.latency),
+        }
+    }
+
+    /// Per-field sum (for folding per-stage windows into a chain total).
+    pub fn merged(&self, other: &ExecMetrics) -> ExecMetrics {
+        let width = self.width.max(other.width);
+        let blank = WorkerStats::default();
+        let mut workers = Vec::with_capacity(self.workers.len().max(other.workers.len()));
+        for i in 0..self.workers.len().max(other.workers.len()) {
+            let a = self.workers.get(i).unwrap_or(&blank);
+            let b = other.workers.get(i).unwrap_or(&blank);
+            workers.push(WorkerStats {
+                worker: i,
+                busy_ns: a.busy_ns + b.busy_ns,
+                idle_ns: a.idle_ns + b.idle_ns,
+                tasks: a.tasks + b.tasks,
+                steals: a.steals + b.steals,
+                injector_takes: a.injector_takes + b.injector_takes,
+            });
+        }
+        let n = self.latency.buckets.len().max(other.latency.buckets.len());
+        let latency = LatencySnapshot {
+            buckets: (0..n)
+                .map(|i| {
+                    self.latency.buckets.get(i).copied().unwrap_or(0)
+                        + other.latency.buckets.get(i).copied().unwrap_or(0)
+                })
+                .collect(),
+        };
+        ExecMetrics { width, workers, latency }
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.workers.iter().map(|w| w.busy_ns).sum::<u64>() as f64 / 1e9
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.workers.iter().map(|w| w.tasks).sum()
+    }
+
+    pub fn total_steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals).sum()
+    }
+
+    pub fn total_injector_takes(&self) -> u64 {
+        self.workers.iter().map(|w| w.injector_takes).sum()
+    }
+
+    /// Mean worker utilization over a window of `wall_secs`:
+    /// `Σ busy / (width × wall)`, clamped to `[0, 1]`.
+    pub fn utilization(&self, wall_secs: f64) -> f64 {
+        if self.width == 0 || wall_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_secs() / (self.width as f64 * wall_secs)).clamp(0.0, 1.0)
+    }
+
+    /// Task-count imbalance: busiest worker's tasks over the per-worker
+    /// mean. 1.0 = perfectly balanced; 0.0 when no tasks ran.
+    pub fn steal_imbalance(&self) -> f64 {
+        let total = self.total_tasks();
+        if total == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let max = self.workers.iter().map(|w| w.tasks).max().unwrap_or(0) as f64;
+        max / (total as f64 / self.workers.len() as f64)
+    }
+
+    /// The metrics a `JobReport` renders: utilization needs the job wall,
+    /// so the caller passes it in.
+    pub fn to_metric_set(&self, wall_secs: f64) -> MetricSet {
+        let mut m = MetricSet::new();
+        m.set_ratio("util", self.utilization(wall_secs));
+        m.set_count("tasks", self.total_tasks());
+        m.set_count("steals", self.total_steals());
+        m.set_ratio("imbalance", self.steal_imbalance());
+        m.set_secs("busy", self.busy_secs());
+        m.set_secs("p50_task", self.latency.quantile_ns(0.5) as f64 / 1e9);
+        m.set_secs("p99_task", self.latency.quantile_ns(0.99) as f64 / 1e9);
+        m
+    }
 }
 
 /// A type-erased task: `call(data, index, worker, width)` invokes task
@@ -166,8 +408,8 @@ struct Inner {
     state: Mutex<Shared>,
     cv: Condvar,
     deques: Vec<Mutex<VecDeque<RawTask>>>,
-    injector_takes: AtomicU64,
-    steals: AtomicU64,
+    counters: Vec<WorkerCounters>,
+    latency: LatencyCells,
 }
 
 thread_local! {
@@ -200,7 +442,7 @@ impl Inner {
     /// of the queue, run the first task, park the rest on our deque.
     fn take_from_injector(&self, me: usize) -> Option<RawTask> {
         let mut rest = Vec::new();
-        let first = {
+        let (first, unclaimed) = {
             let mut s = self.state.lock().unwrap();
             let len = s.injector.len();
             if len == 0 {
@@ -216,13 +458,14 @@ impl Inner {
                     None => break,
                 }
             }
-            first
+            (first, s.unclaimed)
         };
         if !rest.is_empty() {
             let mut d = self.deques[me].lock().unwrap();
             d.extend(rest);
         }
-        self.injector_takes.fetch_add(1, Ordering::Relaxed);
+        self.counters[me].injector_takes.fetch_add(1, Ordering::Relaxed);
+        trace::counter("queue depth", unclaimed as u64);
         Some(first)
     }
 
@@ -245,16 +488,23 @@ impl Inner {
                 let mut d = self.deques[me].lock().unwrap();
                 d.append(&mut stolen);
             }
-            self.steals.fetch_add(1, Ordering::Relaxed);
+            self.counters[me].steals.fetch_add(1, Ordering::Relaxed);
             return Some(first);
         }
         None
     }
 
     fn run(&self, task: RawTask, me: usize) {
+        let span = trace::span(SpanCat::Task, "task");
+        let start = Instant::now();
         // SAFETY: the task's harness is alive (its submitter is blocked
         // until `remaining` hits 0, and this task is still counted).
         unsafe { (task.call)(task.data, task.index, me, self.width) }
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        drop(span);
+        self.counters[me].busy_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        self.counters[me].tasks.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(dur_ns);
     }
 }
 
@@ -277,6 +527,7 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
         }
         // Nothing visible. Sleep — or exit once shut down and drained.
         let s = inner.state.lock().unwrap();
+        let parked = Instant::now();
         if s.unclaimed == 0 {
             if s.shutdown {
                 return;
@@ -290,6 +541,9 @@ fn worker_loop(inner: Arc<Inner>, me: usize) {
             // depends on this timing, only liveness.
             drop(inner.cv.wait_timeout(s, Duration::from_millis(1)).unwrap());
         }
+        inner.counters[me]
+            .idle_ns
+            .fetch_add(parked.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -318,8 +572,8 @@ impl Executor {
             }),
             cv: Condvar::new(),
             deques: (0..width).map(|_| Mutex::new(VecDeque::new())).collect(),
-            injector_takes: AtomicU64::new(0),
-            steals: AtomicU64::new(0),
+            counters: (0..width).map(|_| WorkerCounters::new()).collect(),
+            latency: LatencyCells::new(),
         });
         let handles = (0..width)
             .map(|me| {
@@ -352,9 +606,35 @@ impl Executor {
 
     /// Steal-side counters since the pool was created.
     pub fn stats(&self) -> StealStats {
+        let m = self.metrics();
         StealStats {
-            injector_takes: self.inner.injector_takes.load(Ordering::Relaxed),
-            steals: self.inner.steals.load(Ordering::Relaxed),
+            injector_takes: m.total_injector_takes(),
+            steals: m.total_steals(),
+        }
+    }
+
+    /// Snapshot every worker's activity counters plus the task-latency
+    /// histogram. Counters are cumulative since pool creation; take a
+    /// snapshot before and after a job and
+    /// [`delta_since`](ExecMetrics::delta_since) to isolate its window.
+    pub fn metrics(&self) -> ExecMetrics {
+        ExecMetrics {
+            width: self.inner.width,
+            workers: self
+                .inner
+                .counters
+                .iter()
+                .enumerate()
+                .map(|(worker, c)| WorkerStats {
+                    worker,
+                    busy_ns: c.busy_ns.load(Ordering::Relaxed),
+                    idle_ns: c.idle_ns.load(Ordering::Relaxed),
+                    tasks: c.tasks.load(Ordering::Relaxed),
+                    steals: c.steals.load(Ordering::Relaxed),
+                    injector_takes: c.injector_takes.load(Ordering::Relaxed),
+                })
+                .collect(),
+            latency: self.inner.latency.snapshot(),
         }
     }
 
@@ -379,7 +659,7 @@ impl Executor {
         }
         if let Some((token, worker)) = WORKER.with(|c| c.get()) {
             if token == self.inner.token() {
-                return run_inline(worker, self.inner.width, n, &body);
+                return run_inline(&self.inner, worker, n, &body);
             }
         }
         let state = Arc::new(SetState::new(n));
@@ -391,6 +671,7 @@ impl Executor {
             s.injector.extend((0..n).map(|index| RawTask { call, data, index }));
             s.unclaimed += n;
             self.inner.cv.notify_all();
+            trace::counter("queue depth", s.unclaimed as u64);
         }
         state.wait_done();
         let panics = state.panics.load(Ordering::Acquire);
@@ -418,15 +699,24 @@ impl Drop for Executor {
     }
 }
 
-fn run_inline<F>(worker: usize, width: usize, n: usize, body: &F) -> Result<(), TaskSetError>
+fn run_inline<F>(inner: &Inner, worker: usize, n: usize, body: &F) -> Result<(), TaskSetError>
 where
     F: Fn(ExecCtx, usize) + Sync,
 {
-    let ctx = ExecCtx { worker, width };
+    let ctx = ExecCtx { worker, width: inner.width };
     let mut panics = 0usize;
     let mut first_task = usize::MAX;
     for i in 0..n {
-        if catch_unwind(AssertUnwindSafe(|| body(ctx, i))).is_err() {
+        let span = trace::span(SpanCat::Task, "task");
+        let start = Instant::now();
+        let failed = catch_unwind(AssertUnwindSafe(|| body(ctx, i))).is_err();
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        drop(span);
+        // Nested sets run inside the outer task's busy window, so only
+        // the task count and latency are recorded — not busy nanos.
+        inner.counters[worker].tasks.fetch_add(1, Ordering::Relaxed);
+        inner.latency.record(dur_ns);
+        if failed {
             panics += 1;
             if first_task == usize::MAX {
                 first_task = i;
@@ -630,6 +920,71 @@ mod tests {
         assert_eq!(width_from_env(Some("0")), None);
         assert_eq!(width_from_env(Some("6")), Some(6));
         assert_eq!(width_from_env(Some(" 12 ")), Some(12));
+    }
+
+    #[test]
+    fn latency_buckets_are_log2() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(2), 1);
+        assert_eq!(latency_bucket(3), 1);
+        assert_eq!(latency_bucket(1024), 10);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn metrics_delta_counts_tasks_busy_time_and_latency() {
+        let exec = Executor::new(2);
+        let before = exec.metrics();
+        exec.run_tasks(32, |_, _| std::thread::sleep(Duration::from_micros(200)))
+            .unwrap();
+        let d = exec.metrics().delta_since(&before);
+        assert_eq!(d.width, 2);
+        assert_eq!(d.total_tasks(), 32);
+        assert_eq!(d.latency.count(), 32);
+        assert!(d.busy_secs() > 0.0, "busy time must accumulate: {d:?}");
+        // Every task slept ≥200µs, so the median bucket bound is above that.
+        assert!(d.latency.quantile_ns(0.5) >= 200_000);
+        assert!(d.steal_imbalance() >= 1.0);
+        assert!(d.utilization(10.0) > 0.0 && d.utilization(10.0) <= 1.0);
+        let m = d.to_metric_set(1.0);
+        assert_eq!(m.count("tasks"), 32);
+        assert!(m.value("util") > 0.0);
+    }
+
+    #[test]
+    fn nested_inline_tasks_count_without_double_busy() {
+        let exec = Executor::new(2);
+        let before = exec.metrics();
+        exec.run_tasks(4, |_, _| {
+            exec.run_tasks(8, |_, _| {
+                std::thread::sleep(Duration::from_micros(100));
+            })
+            .unwrap();
+        })
+        .unwrap();
+        let d = exec.metrics().delta_since(&before);
+        // 4 outer + 32 nested bodies all count as tasks...
+        assert_eq!(d.total_tasks(), 36);
+        // ...but busy nanos come from the 4 outer windows only, each of
+        // which wraps its nested sets — so busy ≲ 4 × 8 × 100µs + slack,
+        // never the ~2× a double count would produce.
+        assert!(d.busy_secs() < 2.0 * 4.0 * 8.0 * 100e-6 + 0.05, "{}", d.busy_secs());
+    }
+
+    #[test]
+    fn merged_metrics_sum_fields() {
+        let a = ExecMetrics {
+            width: 2,
+            workers: vec![
+                WorkerStats { worker: 0, busy_ns: 5, idle_ns: 1, tasks: 2, steals: 1, injector_takes: 1 },
+            ],
+            latency: LatencySnapshot { buckets: vec![1, 2] },
+        };
+        let m = a.merged(&a);
+        assert_eq!(m.total_tasks(), 4);
+        assert_eq!(m.workers[0].busy_ns, 10);
+        assert_eq!(m.latency.buckets, vec![2, 4]);
     }
 
     #[test]

@@ -127,10 +127,12 @@ impl MemoryTier {
 
     /// Look up an entry. A hit bumps its recency and is counted.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<dyn Any + Send + Sync>> {
+        let mut span = crate::trace::span(crate::trace::SpanCat::CacheLookup, "get");
         let mut inner = self.inner.lock().unwrap();
         let value = inner.slots.get(key).map(|slot| Arc::clone(&slot.value));
         match value {
             Some(v) => {
+                span.set_arg(1); // hit
                 inner.policy.on_hit(key);
                 self.hits.fetch_add(1, Relaxed);
                 Some(v)
@@ -197,6 +199,7 @@ impl MemoryTier {
         inner.bytes += bytes;
         inner.slots.insert(key, Slot { value, bytes, encode });
         self.insertions.fetch_add(1, Relaxed);
+        crate::trace::counter("cache bytes", inner.bytes);
         (true, victims)
     }
 

@@ -160,6 +160,7 @@ where
         if self.mem.is_empty() {
             return;
         }
+        let mut span = crate::trace::span(crate::trace::SpanCat::SpillRun, "spill-run");
         let mut batch: Vec<(K, V)> = self.mem.drain().collect();
         batch.sort_unstable_by(|a, b| a.0.cmp(&b.0));
         // Concatenated pair encodings — no count prefix, so cursors can
@@ -169,6 +170,7 @@ where
             k.encode(&mut payload);
             v.encode(&mut payload);
         }
+        span.set_arg(payload.len() as u64);
         match self.disk.write(self.run_key(self.runs), &payload) {
             Ok(written) => {
                 self.counters.record_spill(written);
@@ -197,6 +199,8 @@ where
         if self.runs == 0 {
             return self.mem.drain().collect();
         }
+        let _span =
+            crate::trace::span_arg(crate::trace::SpanCat::SpillMerge, "spill-merge", self.runs);
         let mut last: Vec<(K, V)> = self.mem.drain().collect();
         last.sort_unstable_by(|a, b| a.0.cmp(&b.0));
 

@@ -311,6 +311,7 @@ impl TieredStore {
             .unwrap_or(payload.len() as u64);
         self.mem.reclassify_miss_as_hit();
         if self.mem.fits(est) {
+            let _span = crate::trace::span_arg(crate::trace::SpanCat::Promote, "promote", est);
             let encode = self.encoder(&value);
             let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&value);
             let (admitted, victims) = self.mem.put(*key, erased, est, Some(encode));
@@ -340,6 +341,8 @@ impl TieredStore {
         let Some(disk) = &self.disk else { return };
         for victim in victims {
             let Some(encode) = victim.encode else { continue };
+            let _span =
+                crate::trace::span_arg(crate::trace::SpanCat::Demote, "demote", victim.bytes);
             let payload = encode();
             match disk.write(victim.key, &payload) {
                 Ok(_) => {

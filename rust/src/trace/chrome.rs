@@ -1,0 +1,560 @@
+//! Chrome trace-event JSON export — and the parser that validates it.
+//!
+//! [`render`] turns a drained [`Trace`] into the JSON object format of
+//! the Trace Event spec: `{"traceEvents":[…]}` with
+//!
+//! * one `M`/`thread_name` metadata event per recorded thread, so
+//!   Perfetto labels each track with its OS thread name
+//!   (`blaze-exec-3`, `main`, …);
+//! * one complete (`"ph":"X"`) duration event per span — timestamps are
+//!   microseconds with nanosecond decimals, `cat` is the
+//!   [`SpanCat`](super::SpanCat) label, `args.arg` carries the
+//!   category-specific payload;
+//! * one counter (`"ph":"C"`) event per [`CounterEvent`] sample — these
+//!   become the "cache bytes"/"queue depth" counter tracks.
+//!
+//! Load the file with **Perfetto** (<https://ui.perfetto.dev> → "Open
+//! trace file") or `chrome://tracing` → "Load".
+//!
+//! Because the repo is zero-dependency, the reader half ([`parse`],
+//! [`validate`]) is a small hand-rolled JSON parser; the trace-schema
+//! tests and the `blaze trace-check` CLI both go through it, so every
+//! event we emit is proven to parse back.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use super::Trace;
+
+/// The process id every event is emitted under (single-process tool).
+const PID: u64 = 1;
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Nanoseconds → the spec's microsecond timestamps, keeping ns precision.
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// Render a drained trace as a Chrome trace-event JSON string.
+pub fn render(trace: &Trace) -> String {
+    let mut out = String::with_capacity(64 * 1024);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, event: String| {
+        if !std::mem::take(&mut first) {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&event);
+    };
+    for t in &trace.threads {
+        let mut name = String::new();
+        escape_json(&t.name, &mut name);
+        push(
+            &mut out,
+            format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{PID},\"tid\":{},\
+                 \"args\":{{\"name\":\"{name}\"}}}}",
+                t.tid
+            ),
+        );
+    }
+    for t in &trace.threads {
+        for s in &t.spans {
+            let mut name = String::new();
+            escape_json(s.name, &mut name);
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\":\"X\",\"name\":\"{name}\",\"cat\":\"{}\",\"pid\":{PID},\
+                     \"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"arg\":{}}}}}",
+                    s.cat.label(),
+                    t.tid,
+                    micros(s.t0_ns),
+                    micros(s.dur_ns),
+                    s.arg
+                ),
+            );
+        }
+        for c in &t.counters {
+            let mut name = String::new();
+            escape_json(c.name, &mut name);
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\":\"C\",\"name\":\"{name}\",\"pid\":{PID},\"tid\":{},\
+                     \"ts\":{},\"args\":{{\"value\":{}}}}}",
+                    t.tid,
+                    micros(c.t_ns),
+                    c.value
+                ),
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Render and write `trace` to `path`.
+pub fn write_file(path: &Path, trace: &Trace) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render(trace).as_bytes())?;
+    f.flush()
+}
+
+/// One event read back from a trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedEvent {
+    /// Phase: `M` metadata, `X` complete span, `C` counter.
+    pub ph: char,
+    pub name: String,
+    pub cat: String,
+    pub pid: u64,
+    pub tid: u64,
+    /// Microseconds (0 for metadata events).
+    pub ts: f64,
+    /// Microseconds; `X` events only.
+    pub dur: f64,
+    /// `args.arg` (spans), `args.value` (counters), `args.name`
+    /// (thread-name metadata) — whichever the phase carries.
+    pub arg: Option<f64>,
+    pub thread_name: Option<String>,
+}
+
+/// Minimal JSON value for the hand-rolled reader.
+#[derive(Clone, Debug)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so byte
+                    // boundaries are valid).
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self
+                        .bytes
+                        .get(self.pos)
+                        .is_some_and(|&b| b & 0xC0 == 0x80)
+                    {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+                }
+                None => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while self
+            .peek()
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+}
+
+/// Parse a Chrome trace-event JSON document (object form) back into its
+/// events. Errors name the first malformed construct.
+pub fn parse(json: &str) -> Result<Vec<ParsedEvent>, String> {
+    let mut p = Parser::new(json);
+    let root = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing garbage after document"));
+    }
+    let events = root
+        .get("traceEvents")
+        .ok_or("missing 'traceEvents' key")?;
+    let Json::Arr(items) = events else {
+        return Err("'traceEvents' is not an array".into());
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let ph = item
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or(format!("event {i}: missing 'ph'"))?;
+        let ph = ph.chars().next().ok_or(format!("event {i}: empty 'ph'"))?;
+        let name = item
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or(format!("event {i}: missing 'name'"))?
+            .to_string();
+        let num = |key: &str| item.get(key).and_then(Json::as_f64);
+        let pid = num("pid").ok_or(format!("event {i}: missing 'pid'"))? as u64;
+        let tid = num("tid").ok_or(format!("event {i}: missing 'tid'"))? as u64;
+        let args = item.get("args");
+        out.push(ParsedEvent {
+            ph,
+            name,
+            cat: item
+                .get("cat")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            pid,
+            tid,
+            ts: num("ts").unwrap_or(0.0),
+            dur: num("dur").unwrap_or(0.0),
+            arg: args.and_then(|a| {
+                a.get("arg").and_then(Json::as_f64).or_else(|| a.get("value").and_then(Json::as_f64))
+            }),
+            thread_name: args
+                .and_then(|a| a.get("name"))
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        });
+    }
+    Ok(out)
+}
+
+/// What [`validate`] proved about a trace file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub events: usize,
+    pub span_events: usize,
+    pub counter_events: usize,
+    /// Distinct `tid`s carrying at least one span.
+    pub span_threads: usize,
+    /// Distinct counter track names.
+    pub counter_tracks: Vec<String>,
+    /// Thread names from metadata events, by tid.
+    pub thread_names: BTreeMap<u64, String>,
+}
+
+/// Schema-check a trace document: parses every event and enforces the
+/// invariants the exporter promises (every `X` span names a valid
+/// category and non-negative duration; every span's thread has a
+/// `thread_name` metadata record; counters carry values). Returns a
+/// summary of what the file contains.
+pub fn validate(json: &str) -> Result<TraceSummary, String> {
+    let events = parse(json)?;
+    let mut summary = TraceSummary { events: events.len(), ..Default::default() };
+    let mut span_tids = std::collections::BTreeSet::new();
+    for (i, e) in events.iter().enumerate() {
+        match e.ph {
+            'M' => {
+                if e.name == "thread_name" {
+                    let name = e
+                        .thread_name
+                        .clone()
+                        .ok_or(format!("event {i}: thread_name without args.name"))?;
+                    summary.thread_names.insert(e.tid, name);
+                }
+            }
+            'X' => {
+                if e.dur < 0.0 || e.ts < 0.0 {
+                    return Err(format!("event {i}: negative ts/dur"));
+                }
+                if e.cat.is_empty() {
+                    return Err(format!("event {i}: span without category"));
+                }
+                summary.span_events += 1;
+                span_tids.insert(e.tid);
+            }
+            'C' => {
+                if e.arg.is_none() {
+                    return Err(format!("event {i}: counter without args.value"));
+                }
+                summary.counter_events += 1;
+                if !summary.counter_tracks.contains(&e.name) {
+                    summary.counter_tracks.push(e.name.clone());
+                }
+            }
+            other => return Err(format!("event {i}: unknown phase '{other}'")),
+        }
+    }
+    for tid in &span_tids {
+        if !summary.thread_names.contains_key(tid) {
+            return Err(format!("tid {tid} has spans but no thread_name metadata"));
+        }
+    }
+    summary.span_threads = span_tids.len();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{CounterEvent, SpanCat, SpanEvent, ThreadTrace};
+
+    fn sample_trace() -> Trace {
+        Trace {
+            threads: vec![
+                ThreadTrace {
+                    tid: 0,
+                    name: "main".into(),
+                    spans: vec![SpanEvent {
+                        cat: SpanCat::Stage,
+                        name: "stage",
+                        arg: 2,
+                        t0_ns: 1_500,
+                        dur_ns: 2_000_123,
+                    }],
+                    counters: vec![CounterEvent { name: "cache bytes", t_ns: 10, value: 42 }],
+                    dropped: 0,
+                },
+                ThreadTrace {
+                    tid: 1,
+                    name: "blaze-exec-0".into(),
+                    spans: vec![SpanEvent {
+                        cat: SpanCat::Task,
+                        name: "task \"quoted\"",
+                        arg: 0,
+                        t0_ns: 0,
+                        dur_ns: 7,
+                    }],
+                    counters: vec![],
+                    dropped: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn rendered_trace_parses_back_event_for_event() {
+        let trace = sample_trace();
+        let events = parse(&render(&trace)).unwrap();
+        // 2 metadata + 2 spans + 1 counter.
+        assert_eq!(events.len(), 5);
+        let span = events.iter().find(|e| e.cat == "stage").unwrap();
+        assert_eq!(span.ph, 'X');
+        assert_eq!(span.arg, Some(2.0));
+        assert!((span.ts - 1.5).abs() < 1e-9);
+        assert!((span.dur - 2000.123).abs() < 1e-9);
+        let quoted = events.iter().find(|e| e.name.contains("quoted")).unwrap();
+        assert_eq!(quoted.name, "task \"quoted\"");
+    }
+
+    #[test]
+    fn validate_summarizes_tracks() {
+        let s = validate(&render(&sample_trace())).unwrap();
+        assert_eq!(s.span_events, 2);
+        assert_eq!(s.span_threads, 2);
+        assert_eq!(s.counter_events, 1);
+        assert_eq!(s.counter_tracks, vec!["cache bytes".to_string()]);
+        assert_eq!(s.thread_names[&1], "blaze-exec-0");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate("not json").is_err());
+        assert!(validate("{}").is_err());
+        assert!(validate("{\"traceEvents\":3}").is_err());
+        // A span on a thread with no thread_name metadata.
+        let bad = "{\"traceEvents\":[{\"ph\":\"X\",\"name\":\"t\",\"cat\":\"task\",\
+                    \"pid\":1,\"tid\":9,\"ts\":0,\"dur\":1}]}";
+        assert!(validate(bad).unwrap_err().contains("tid 9"));
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_nesting() {
+        let events = parse(
+            "{\"traceEvents\":[{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\
+             \"tid\":0,\"args\":{\"name\":\"a\\u0041\\n\"}}]}",
+        )
+        .unwrap();
+        assert_eq!(events[0].thread_name.as_deref(), Some("aA\n"));
+    }
+
+    #[test]
+    fn empty_trace_is_valid() {
+        let s = validate(&render(&Trace::default())).unwrap();
+        assert_eq!(s.events, 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Typed key/value metrics — the structured replacement for the stringly
+//! `detail: String` fields that `JobReport`/`StageOutcome` used to carry.
+//!
+//! A [`MetricSet`] is an *ordered* list of `key → value` pairs whose
+//! [`Display`](std::fmt::Display) renders exactly the `key=value`
+//! space-joined lines the old free-form strings contained, so every
+//! existing `println!("detail: {}", r.detail)` call site prints the same
+//! bytes — while consumers (the cost model on the ROADMAP, `blaze
+//! profile`, benches) read individual metrics by name instead of parsing
+//! prose. Values keep their *unit* ([`MetricValue`]) so rendering is
+//! stable: seconds print as `{:.3}s`, byte counts through
+//! [`fmt_bytes`](crate::util::stats::fmt_bytes), counts as plain
+//! integers.
+
+use crate::util::stats::fmt_bytes;
+
+/// One metric value with its unit. The unit drives rendering only —
+/// accessors expose the raw number.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MetricValue {
+    /// A plain count (`{}`).
+    U64(u64),
+    /// A unitless ratio/score (`{:.3}`).
+    F64(f64),
+    /// Wall/CPU seconds (`{:.3}s`).
+    Secs(f64),
+    /// A byte count (rendered via [`fmt_bytes`]).
+    Bytes(u64),
+}
+
+impl MetricValue {
+    /// The value as `f64` regardless of unit.
+    pub fn as_f64(self) -> f64 {
+        match self {
+            MetricValue::U64(v) | MetricValue::Bytes(v) => v as f64,
+            MetricValue::F64(v) | MetricValue::Secs(v) => v,
+        }
+    }
+
+    /// The value as `u64` (float units truncate).
+    pub fn as_u64(self) -> u64 {
+        match self {
+            MetricValue::U64(v) | MetricValue::Bytes(v) => v,
+            MetricValue::F64(v) | MetricValue::Secs(v) => v as u64,
+        }
+    }
+}
+
+impl std::fmt::Display for MetricValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricValue::U64(v) => write!(f, "{v}"),
+            MetricValue::F64(v) => write!(f, "{v:.3}"),
+            MetricValue::Secs(v) => write!(f, "{v:.3}s"),
+            MetricValue::Bytes(v) => write!(f, "{}", fmt_bytes(*v)),
+        }
+    }
+}
+
+/// An ordered set of named metrics. Insertion order is rendering order;
+/// re-setting an existing key updates it in place.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricSet {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set `key` to `value` (updates in place if present, else appends).
+    pub fn set(&mut self, key: impl Into<String>, value: MetricValue) {
+        let key = key.into();
+        match self.entries.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => *v = value,
+            None => self.entries.push((key, value)),
+        }
+    }
+
+    /// Builder-style [`set`](Self::set).
+    pub fn with(mut self, key: impl Into<String>, value: MetricValue) -> Self {
+        self.set(key, value);
+        self
+    }
+
+    pub fn with_count(self, key: impl Into<String>, v: u64) -> Self {
+        self.with(key, MetricValue::U64(v))
+    }
+
+    pub fn with_secs(self, key: impl Into<String>, v: f64) -> Self {
+        self.with(key, MetricValue::Secs(v))
+    }
+
+    pub fn with_bytes(self, key: impl Into<String>, v: u64) -> Self {
+        self.with(key, MetricValue::Bytes(v))
+    }
+
+    pub fn set_count(&mut self, key: impl Into<String>, v: u64) {
+        self.set(key, MetricValue::U64(v));
+    }
+
+    pub fn set_secs(&mut self, key: impl Into<String>, v: f64) {
+        self.set(key, MetricValue::Secs(v));
+    }
+
+    pub fn set_bytes(&mut self, key: impl Into<String>, v: u64) {
+        self.set(key, MetricValue::Bytes(v));
+    }
+
+    pub fn set_ratio(&mut self, key: impl Into<String>, v: f64) {
+        self.set(key, MetricValue::F64(v));
+    }
+
+    pub fn get(&self, key: &str) -> Option<MetricValue> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Raw `u64` of a metric (0 when absent).
+    pub fn count(&self, key: &str) -> u64 {
+        self.get(key).map_or(0, MetricValue::as_u64)
+    }
+
+    /// Raw `f64` of a metric (0.0 when absent).
+    pub fn value(&self, key: &str) -> f64 {
+        self.get(key).map_or(0.0, MetricValue::as_f64)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, MetricValue)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Append every metric of `other` under `prefix.` (chained jobs fold
+    /// per-stage sets into one report-level set this way).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &MetricSet) {
+        for (k, v) in other.iter() {
+            self.set(format!("{prefix}.{k}"), v);
+        }
+    }
+}
+
+impl std::fmt::Display for MetricSet {
+    /// `key=value` pairs, space-joined, in insertion order — byte-for-byte
+    /// what the old hand-formatted detail strings produced.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_like_the_old_detail_strings() {
+        let mut m = MetricSet::new();
+        m.set_secs("map", 0.1234);
+        m.set_secs("shuffle", 0.05);
+        m.set_count("reruns", 0);
+        assert_eq!(m.to_string(), "map=0.123s shuffle=0.050s reruns=0");
+    }
+
+    #[test]
+    fn bytes_render_via_fmt_bytes() {
+        let mut m = MetricSet::new();
+        m.set_bytes("shuffle_out", 3 << 20);
+        assert_eq!(m.to_string(), format!("shuffle_out={}", fmt_bytes(3 << 20)));
+    }
+
+    #[test]
+    fn set_updates_in_place_preserving_order() {
+        let mut m = MetricSet::new();
+        m.set_count("a", 1);
+        m.set_count("b", 2);
+        m.set_count("a", 9);
+        assert_eq!(m.to_string(), "a=9 b=2");
+        assert_eq!(m.count("a"), 9);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn prefixed_merge_namespaces_keys() {
+        let mut inner = MetricSet::new();
+        inner.set_secs("map", 1.0);
+        let mut outer = MetricSet::new();
+        outer.merge_prefixed("stage0", &inner);
+        assert_eq!(outer.value("stage0.map"), 1.0);
+    }
+
+    #[test]
+    fn accessors_default_to_zero() {
+        let m = MetricSet::new();
+        assert_eq!(m.count("missing"), 0);
+        assert_eq!(m.value("missing"), 0.0);
+        assert!(m.get("missing").is_none());
+        assert!(m.is_empty());
+    }
+}

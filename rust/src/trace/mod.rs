@@ -1,0 +1,463 @@
+//! Structured tracing: per-thread span timelines behind a process-global
+//! on/off switch.
+//!
+//! The instrumentation problem this solves: spans are emitted from deep
+//! inside the storage tiers, the spill merger and the executor's worker
+//! loop — layers that never see a `JobSpec` — so the recording channel
+//! cannot be a handle threaded through APIs. Instead there is one
+//! process-global **session** slot:
+//!
+//! * With no session installed, every probe ([`span`], [`counter`]) is a
+//!   single relaxed atomic load and an early return — near-zero cost, no
+//!   allocation, no clock read. This is the permanent state of normal
+//!   runs; tracing exists only while a [`TraceSession`] is alive.
+//! * With a session installed, each thread lazily registers a private
+//!   buffer ([`capacity`](TraceSession::start_with_capacity)-bounded;
+//!   overflow is counted, not grown) and appends completed spans to it.
+//!   Appends take an uncontended per-thread lock — the only other
+//!   contender is the end-of-job drain — so the hot path is a TLS read, a
+//!   clock read and a `Vec::push`.
+//!
+//! Spans are recorded **complete** (start + duration, captured when the
+//! guard drops), which keeps the timeline well-formed by construction:
+//! there is no unbalanced begin/end to repair at export time. The
+//! determinism contract of the engines is untouched — probes read clocks
+//! and write side buffers, they never influence scheduling or results, so
+//! traced runs stay bit-identical to untraced ones.
+//!
+//! [`chrome`] renders a drained [`Trace`] as Chrome trace-event JSON
+//! (open in Perfetto or `chrome://tracing`); [`profile`] folds it into
+//! the per-stage phase breakdown behind `blaze profile`;
+//! [`metrics`] holds the typed [`MetricSet`] that replaced the stringly
+//! report details. Span taxonomy: see [`SpanCat`] (one variant per
+//! instrumented subsystem event).
+//!
+//! Concurrency note: sessions are process-global and **last-start wins**
+//! — two overlapping sessions do not interleave correctly (each thread
+//! records into the newest one). The CLI holds at most one; tests
+//! serialize through a shared lock.
+
+pub mod chrome;
+pub mod metrics;
+pub mod profile;
+
+pub use metrics::{MetricSet, MetricValue};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a span measures — one variant per instrumented event kind. The
+/// taxonomy table in the README mirrors this enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanCat {
+    /// One engine stage attempt (`arg` = stage id).
+    Stage,
+    /// A node's map phase (`arg` = node rank).
+    Map,
+    /// A node's shuffle/exchange phase (`arg` = node rank).
+    Exchange,
+    /// Shard finalization (`arg` = node rank).
+    Finalize,
+    /// One executor task (a parse/map chunk or a stage partition).
+    Task,
+    /// One sorted run written by the external merger (`arg` = run bytes).
+    SpillRun,
+    /// The loser-tree merge of all spilled runs (`arg` = run count).
+    SpillMerge,
+    /// A memory-tier victim demoted to disk (`arg` = bytes).
+    Demote,
+    /// A disk block promoted back into memory (`arg` = bytes).
+    Promote,
+    /// A memory-tier cache lookup.
+    CacheLookup,
+    /// Driver-side work between chained stages (render + re-ingest).
+    Bridge,
+    /// One round of an iterative job (`arg` = round index).
+    Round,
+    /// Driver-side `advance`/state fold of an iterative round.
+    Driver,
+}
+
+impl SpanCat {
+    /// Stable label (Chrome `cat` field, profile table rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanCat::Stage => "stage",
+            SpanCat::Map => "map",
+            SpanCat::Exchange => "exchange",
+            SpanCat::Finalize => "finalize",
+            SpanCat::Task => "task",
+            SpanCat::SpillRun => "spill-run",
+            SpanCat::SpillMerge => "spill-merge",
+            SpanCat::Demote => "demote",
+            SpanCat::Promote => "promote",
+            SpanCat::CacheLookup => "cache-lookup",
+            SpanCat::Bridge => "bridge",
+            SpanCat::Round => "round",
+            SpanCat::Driver => "driver",
+        }
+    }
+}
+
+/// One completed span on one thread. Times are nanoseconds since the
+/// session epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub cat: SpanCat,
+    pub name: &'static str,
+    /// Category-specific payload (stage id, node rank, bytes, …).
+    pub arg: u64,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// One sample of a monotonic-time counter track (cache bytes, queue
+/// depth).
+#[derive(Clone, Copy, Debug)]
+pub struct CounterEvent {
+    pub name: &'static str,
+    pub t_ns: u64,
+    pub value: u64,
+}
+
+/// Everything one thread recorded during a session.
+#[derive(Clone, Debug)]
+pub struct ThreadTrace {
+    /// Dense per-session thread index (Chrome `tid`).
+    pub tid: u64,
+    /// OS thread name at registration (`blaze-exec-3`, `main`, …).
+    pub name: String,
+    pub spans: Vec<SpanEvent>,
+    pub counters: Vec<CounterEvent>,
+    /// Events discarded because the buffer hit its capacity.
+    pub dropped: u64,
+}
+
+/// A drained session: per-thread timelines, ready for
+/// [`chrome::render`] or [`profile::analyze`].
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl Trace {
+    /// Total spans across all threads.
+    pub fn span_count(&self) -> usize {
+        self.threads.iter().map(|t| t.spans.len()).sum()
+    }
+
+    /// Total events discarded to capacity limits across all threads.
+    pub fn dropped(&self) -> u64 {
+        self.threads.iter().map(|t| t.dropped).sum()
+    }
+}
+
+/// Default per-thread event capacity (spans + counters each).
+const DEFAULT_CAPACITY: usize = 1 << 18;
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    capacity: usize,
+    spans: Mutex<Vec<SpanEvent>>,
+    counters: Mutex<Vec<CounterEvent>>,
+    dropped: AtomicU64,
+}
+
+struct SessionInner {
+    generation: u64,
+    epoch: Instant,
+    capacity: usize,
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+}
+
+impl SessionInner {
+    fn register_thread(&self) -> Arc<ThreadBuf> {
+        let name = std::thread::current()
+            .name()
+            .unwrap_or("thread")
+            .to_string();
+        let mut bufs = self.bufs.lock().unwrap();
+        let buf = Arc::new(ThreadBuf {
+            tid: bufs.len() as u64,
+            name,
+            capacity: self.capacity,
+            spans: Mutex::new(Vec::new()),
+            counters: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        });
+        bufs.push(Arc::clone(&buf));
+        buf
+    }
+}
+
+/// Fast-path gate: a single relaxed load on every probe.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped per session so stale thread-local buffers re-register.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static SESSION: Mutex<Option<Arc<SessionInner>>> = Mutex::new(None);
+
+thread_local! {
+    /// This thread's buffer in the current session (`generation` tags
+    /// which session it belongs to).
+    static LOCAL: RefCell<Option<(u64, Instant, Arc<ThreadBuf>)>> =
+        const { RefCell::new(None) };
+}
+
+/// Is a session currently recording? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Run `f` with this thread's buffer + session epoch, registering with
+/// the current session if needed. No-op when no session is installed.
+fn with_local<R>(f: impl FnOnce(Instant, &ThreadBuf) -> R) -> Option<R> {
+    let generation = GENERATION.load(Relaxed);
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        match slot.as_ref() {
+            Some((g, epoch, buf)) if *g == generation => Some(f(*epoch, buf)),
+            _ => {
+                let session = SESSION.lock().unwrap().clone()?;
+                if session.generation != generation {
+                    // Raced with a start/finish; skip this event.
+                    return None;
+                }
+                let buf = session.register_thread();
+                let out = f(session.epoch, &buf);
+                *slot = Some((generation, session.epoch, buf));
+                Some(out)
+            }
+        }
+    })
+}
+
+/// An in-flight span. Records a [`SpanEvent`] when dropped; a no-op when
+/// tracing was disabled at creation.
+pub struct Span {
+    start: Option<Instant>,
+    cat: SpanCat,
+    name: &'static str,
+    arg: u64,
+}
+
+impl Span {
+    /// Attach/replace the category-specific payload before the span ends.
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        if !enabled() {
+            return;
+        }
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        let (cat, name, arg) = (self.cat, self.name, self.arg);
+        with_local(|epoch, buf| {
+            let t0_ns = start.duration_since(epoch).as_nanos() as u64;
+            let mut spans = buf.spans.lock().unwrap();
+            if spans.len() < buf.capacity {
+                spans.push(SpanEvent { cat, name, arg, t0_ns, dur_ns });
+            } else {
+                buf.dropped.fetch_add(1, Relaxed);
+            }
+        });
+    }
+}
+
+/// Open a span of `cat`. Near-free when no session is recording.
+#[inline]
+pub fn span(cat: SpanCat, name: &'static str) -> Span {
+    span_arg(cat, name, 0)
+}
+
+/// Open a span with a category-specific payload (stage id, bytes, …).
+#[inline]
+pub fn span_arg(cat: SpanCat, name: &'static str, arg: u64) -> Span {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    Span { start, cat, name, arg }
+}
+
+/// Sample a counter track (cache bytes, queue depth). Near-free when no
+/// session is recording.
+#[inline]
+pub fn counter(name: &'static str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = Instant::now();
+    with_local(|epoch, buf| {
+        let t_ns = now.duration_since(epoch).as_nanos() as u64;
+        let mut counters = buf.counters.lock().unwrap();
+        if counters.len() < buf.capacity {
+            counters.push(CounterEvent { name, t_ns, value });
+        } else {
+            buf.dropped.fetch_add(1, Relaxed);
+        }
+    });
+}
+
+/// A recording session. Install with [`start`](Self::start), run the
+/// workload, then [`finish`](Self::finish) to drain every thread's
+/// buffer into a [`Trace`].
+pub struct TraceSession {
+    inner: Arc<SessionInner>,
+}
+
+impl TraceSession {
+    /// Install a session with the default per-thread capacity.
+    pub fn start() -> TraceSession {
+        Self::start_with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Install a session whose per-thread buffers hold at most `capacity`
+    /// spans (and counters) each; overflow increments
+    /// [`ThreadTrace::dropped`]. Replaces any active session
+    /// (last-start wins).
+    pub fn start_with_capacity(capacity: usize) -> TraceSession {
+        let generation = GENERATION.fetch_add(1, Relaxed) + 1;
+        let inner = Arc::new(SessionInner {
+            generation,
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            bufs: Mutex::new(Vec::new()),
+        });
+        *SESSION.lock().unwrap() = Some(Arc::clone(&inner));
+        // Publish the generation before enabling so a probe that sees
+        // `enabled` finds a matching session.
+        GENERATION.store(generation, Relaxed);
+        ENABLED.store(true, Relaxed);
+        TraceSession { inner }
+    }
+
+    /// Stop recording and drain every registered thread's buffer.
+    pub fn finish(self) -> Trace {
+        {
+            let mut session = SESSION.lock().unwrap();
+            let ours = session
+                .as_ref()
+                .is_some_and(|s| s.generation == self.inner.generation);
+            if ours {
+                ENABLED.store(false, Relaxed);
+                *session = None;
+            }
+        }
+        let bufs = self.inner.bufs.lock().unwrap();
+        let mut threads: Vec<ThreadTrace> = bufs
+            .iter()
+            .map(|b| ThreadTrace {
+                tid: b.tid,
+                name: b.name.clone(),
+                spans: std::mem::take(&mut *b.spans.lock().unwrap()),
+                counters: std::mem::take(&mut *b.counters.lock().unwrap()),
+                dropped: b.dropped.load(Relaxed),
+            })
+            .collect();
+        threads.retain(|t| !t.spans.is_empty() || !t.counters.is_empty() || t.dropped > 0);
+        Trace { threads }
+    }
+}
+
+#[cfg(test)]
+pub(crate) static TEST_SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_SESSION_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_probes_record_nothing() {
+        let _g = lock();
+        {
+            let _untracked = span(SpanCat::Task, "before-session");
+            counter("queue depth", 3);
+        }
+        let session = TraceSession::start();
+        let trace = session.finish();
+        assert_eq!(trace.span_count(), 0, "{trace:?}");
+    }
+
+    #[test]
+    fn spans_and_counters_round_trip_through_a_session() {
+        let _g = lock();
+        let session = TraceSession::start();
+        {
+            let mut s = span_arg(SpanCat::Stage, "stage", 7);
+            s.set_arg(9);
+            let _inner = span(SpanCat::Map, "map-phase");
+            counter("cache bytes", 1234);
+        }
+        let trace = session.finish();
+        assert_eq!(trace.span_count(), 2);
+        let t = &trace.threads[0];
+        assert_eq!(t.counters.len(), 1);
+        assert_eq!(t.counters[0].value, 1234);
+        // Inner span drops first; the outer stage span carries the
+        // updated arg and spans at least its child's duration.
+        let stage = t.spans.iter().find(|s| s.cat == SpanCat::Stage).unwrap();
+        let map = t.spans.iter().find(|s| s.cat == SpanCat::Map).unwrap();
+        assert_eq!(stage.arg, 9);
+        assert!(stage.dur_ns >= map.dur_ns);
+        assert!(stage.t0_ns <= map.t0_ns);
+    }
+
+    #[test]
+    fn each_thread_gets_its_own_track() {
+        let _g = lock();
+        let session = TraceSession::start();
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    let _s = span(SpanCat::Task, "task");
+                });
+            }
+        });
+        let _driver = span(SpanCat::Stage, "stage");
+        drop(_driver);
+        let trace = session.finish();
+        assert_eq!(trace.threads.len(), 4);
+        let tids: std::collections::HashSet<u64> =
+            trace.threads.iter().map(|t| t.tid).collect();
+        assert_eq!(tids.len(), 4, "tids must be unique");
+    }
+
+    #[test]
+    fn capacity_overflow_is_counted_not_grown() {
+        let _g = lock();
+        let session = TraceSession::start_with_capacity(4);
+        for _ in 0..10 {
+            let _s = span(SpanCat::Task, "task");
+        }
+        let trace = session.finish();
+        assert_eq!(trace.span_count(), 4);
+        assert_eq!(trace.dropped(), 6);
+    }
+
+    #[test]
+    fn a_new_session_does_not_inherit_old_buffers() {
+        let _g = lock();
+        let first = TraceSession::start();
+        {
+            let _s = span(SpanCat::Task, "first");
+        }
+        let t1 = first.finish();
+        assert_eq!(t1.span_count(), 1);
+        let second = TraceSession::start();
+        {
+            let _s = span(SpanCat::Task, "second");
+        }
+        let t2 = second.finish();
+        assert_eq!(t2.span_count(), 1);
+        assert_eq!(t2.threads[0].spans[0].name, "second");
+    }
+}

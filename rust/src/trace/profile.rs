@@ -1,0 +1,266 @@
+//! Fold a drained [`Trace`] into the per-stage / per-phase breakdown
+//! behind `blaze profile`.
+//!
+//! The timeline arrives as raw spans on many threads; this module
+//! answers the questions a person tuning a run actually asks:
+//!
+//! * **Where did the wall time go, per stage and per phase?** Each
+//!   non-stage span is attributed to the [`Stage`](SpanCat::Stage) span
+//!   whose interval contains its midpoint, then grouped by category.
+//!   `wall_secs` is the *union* of the group's intervals (overlapping
+//!   node/worker spans don't double-count); `busy_secs` is their sum
+//!   (total thread-time spent in the phase — `busy/wall` ≈ the phase's
+//!   effective parallelism).
+//! * **What bounded the run?** [`ProfileReport::critical_path`] chains
+//!   each stage's dominant phase (plus the driver-side bridge work
+//!   between stages) — the sequence of phases whose speedup would
+//!   actually move the end-to-end wall.
+//!
+//! Worker utilization and steal imbalance come from
+//! [`ExecMetrics`](crate::runtime::executor::ExecMetrics) rather than
+//! the trace (the executor counts busy/idle nanos whether or not a
+//! session is recording); `blaze profile` prints both views side by
+//! side.
+
+use std::collections::BTreeMap;
+
+use super::{SpanCat, Trace};
+
+/// One (stage, phase) aggregate.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    /// Stage id the phase spans fell inside, `None` for work outside any
+    /// stage span (driver bridges, cross-stage storage activity).
+    pub stage: Option<u64>,
+    /// [`SpanCat`] label.
+    pub phase: &'static str,
+    /// Union of the group's span intervals — occupied wall clock.
+    pub wall_secs: f64,
+    /// Sum of span durations — total thread-seconds in the phase.
+    pub busy_secs: f64,
+    /// Number of spans aggregated.
+    pub count: u64,
+}
+
+/// One step of the computed critical path.
+#[derive(Clone, Debug)]
+pub struct CritStep {
+    pub stage: Option<u64>,
+    pub phase: &'static str,
+    pub secs: f64,
+}
+
+/// The analyzed profile of one traced run.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    /// Stage-then-phase ordered aggregates.
+    pub rows: Vec<PhaseRow>,
+    /// Dominant phase per stage, chained with inter-stage driver work.
+    pub critical_path: Vec<CritStep>,
+    /// Sum of the critical-path step durations.
+    pub critical_secs: f64,
+    /// First span start → last span end across the whole trace.
+    pub span_wall_secs: f64,
+    /// Executor tasks observed ([`SpanCat::Task`] spans).
+    pub tasks: u64,
+}
+
+/// Union length of a set of `[start, end)` intervals, in ns.
+fn interval_union_ns(mut intervals: Vec<(u64, u64)>) -> u64 {
+    intervals.sort_unstable();
+    let mut total = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    for (s, e) in intervals {
+        match &mut cur {
+            Some((_, ce)) if s <= *ce => *ce = (*ce).max(e),
+            _ => {
+                if let Some((cs, ce)) = cur.take() {
+                    total += ce - cs;
+                }
+                cur = Some((s, e));
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+fn secs(ns: u64) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// Analyze a drained trace. See the module docs for the semantics.
+pub fn analyze(trace: &Trace) -> ProfileReport {
+    // Stage windows: (t0, t1, stage id), from every Stage span (reruns of
+    // one stage merge under the same id through the interval union).
+    let mut stages: Vec<(u64, u64, u64)> = Vec::new();
+    let mut lo = u64::MAX;
+    let mut hi = 0u64;
+    for t in &trace.threads {
+        for s in &t.spans {
+            lo = lo.min(s.t0_ns);
+            hi = hi.max(s.t0_ns + s.dur_ns);
+            if s.cat == SpanCat::Stage {
+                stages.push((s.t0_ns, s.t0_ns + s.dur_ns, s.arg));
+            }
+        }
+    }
+    stages.sort_unstable();
+    let stage_of = |t0: u64, dur: u64| -> Option<u64> {
+        let mid = t0 + dur / 2;
+        stages
+            .iter()
+            .find(|(s, e, _)| mid >= *s && mid < *e)
+            .map(|(_, _, id)| *id)
+    };
+
+    // Group phase spans by (stage, category).
+    let mut groups: BTreeMap<(Option<u64>, &'static str), (Vec<(u64, u64)>, u64, u64)> =
+        BTreeMap::new();
+    let mut tasks = 0u64;
+    for t in &trace.threads {
+        for s in &t.spans {
+            if s.cat == SpanCat::Stage {
+                continue;
+            }
+            if s.cat == SpanCat::Task {
+                tasks += 1;
+            }
+            let key = (stage_of(s.t0_ns, s.dur_ns), s.cat.label());
+            let entry = groups.entry(key).or_insert_with(|| (Vec::new(), 0, 0));
+            entry.0.push((s.t0_ns, s.t0_ns + s.dur_ns));
+            entry.1 += s.dur_ns;
+            entry.2 += 1;
+        }
+    }
+
+    let rows: Vec<PhaseRow> = groups
+        .into_iter()
+        .map(|((stage, phase), (intervals, busy_ns, count))| PhaseRow {
+            stage,
+            phase,
+            wall_secs: secs(interval_union_ns(intervals)),
+            busy_secs: secs(busy_ns),
+            count,
+        })
+        .collect();
+
+    // Critical path: per stage (in id order) the phase with the largest
+    // occupied wall, then the driver-side work outside every stage.
+    const CHAINABLE: [&str; 6] =
+        ["map", "exchange", "finalize", "spill-run", "spill-merge", "task"];
+    let mut critical_path = Vec::new();
+    let mut stage_ids: Vec<u64> = stages.iter().map(|(_, _, id)| *id).collect();
+    stage_ids.sort_unstable();
+    stage_ids.dedup();
+    for id in stage_ids {
+        let best = rows
+            .iter()
+            .filter(|r| r.stage == Some(id) && CHAINABLE.contains(&r.phase))
+            .max_by(|a, b| a.wall_secs.total_cmp(&b.wall_secs));
+        if let Some(r) = best {
+            critical_path.push(CritStep { stage: r.stage, phase: r.phase, secs: r.wall_secs });
+        }
+    }
+    for r in rows.iter().filter(|r| r.stage.is_none()) {
+        if matches!(r.phase, "bridge" | "driver") {
+            critical_path.push(CritStep { stage: None, phase: r.phase, secs: r.wall_secs });
+        }
+    }
+    let critical_secs = critical_path.iter().map(|s| s.secs).sum();
+
+    ProfileReport {
+        rows,
+        critical_path,
+        critical_secs,
+        span_wall_secs: if hi > lo { secs(hi - lo) } else { 0.0 },
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{SpanEvent, ThreadTrace};
+
+    fn span(cat: SpanCat, arg: u64, t0: u64, dur: u64) -> SpanEvent {
+        SpanEvent { cat, name: cat.label(), arg, t0_ns: t0, dur_ns: dur }
+    }
+
+    #[test]
+    fn interval_union_merges_overlaps() {
+        assert_eq!(interval_union_ns(vec![(0, 10), (5, 15), (20, 30)]), 25);
+        assert_eq!(interval_union_ns(vec![]), 0);
+        assert_eq!(interval_union_ns(vec![(3, 3)]), 0);
+    }
+
+    #[test]
+    fn phases_attribute_to_their_containing_stage() {
+        let trace = Trace {
+            threads: vec![
+                ThreadTrace {
+                    tid: 0,
+                    name: "driver".into(),
+                    spans: vec![
+                        span(SpanCat::Stage, 0, 0, 1_000),
+                        span(SpanCat::Bridge, 0, 1_000, 100),
+                        span(SpanCat::Stage, 1, 1_100, 2_000),
+                    ],
+                    counters: vec![],
+                    dropped: 0,
+                },
+                ThreadTrace {
+                    tid: 1,
+                    name: "node".into(),
+                    spans: vec![
+                        span(SpanCat::Map, 0, 100, 500),
+                        span(SpanCat::Exchange, 0, 600, 300),
+                        span(SpanCat::Map, 0, 1_200, 1_500),
+                    ],
+                    counters: vec![],
+                    dropped: 0,
+                },
+                ThreadTrace {
+                    tid: 2,
+                    name: "node2".into(),
+                    // Overlaps thread 1's stage-0 map: wall must union.
+                    spans: vec![span(SpanCat::Map, 1, 200, 500)],
+                    counters: vec![],
+                    dropped: 0,
+                },
+            ],
+        };
+        let p = analyze(&trace);
+        let map0 = p
+            .rows
+            .iter()
+            .find(|r| r.stage == Some(0) && r.phase == "map")
+            .unwrap();
+        assert_eq!(map0.count, 2);
+        assert!((map0.wall_secs - 600e-9).abs() < 1e-15); // union of [100,600) ∪ [200,700)
+        assert!((map0.busy_secs - 1000e-9).abs() < 1e-15);
+        let map1 = p
+            .rows
+            .iter()
+            .find(|r| r.stage == Some(1) && r.phase == "map")
+            .unwrap();
+        assert_eq!(map1.count, 1);
+        // Critical path: stage 0 dominant phase (map), stage 1 map, then
+        // the bridge outside both stages.
+        assert_eq!(p.critical_path.len(), 3);
+        assert_eq!(p.critical_path[0].phase, "map");
+        assert_eq!(p.critical_path[2].phase, "bridge");
+        assert!(p.critical_secs > 0.0);
+        assert!((p.span_wall_secs - 3_100e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_trace_analyzes_to_empty_report() {
+        let p = analyze(&Trace::default());
+        assert!(p.rows.is_empty());
+        assert!(p.critical_path.is_empty());
+        assert_eq!(p.span_wall_secs, 0.0);
+    }
+}

@@ -170,6 +170,8 @@ impl WordCountJob {
             relation_gens: Vec::new(),
             spill_threshold: self.spill_threshold,
             spill_dir: self.spill_dir.clone(),
+            eviction_policy: None,
+            trace: None,
         }
     }
 
@@ -189,6 +191,7 @@ impl WordCountJob {
             shuffle_bytes: report.shuffle_bytes,
             storage: report.storage,
             detail: report.detail,
+            exec: report.exec,
         })
     }
 }
@@ -203,8 +206,12 @@ pub struct WordCountResult {
     pub shuffle_bytes: u64,
     /// Storage-hierarchy activity (exchange spill, persisted blocks).
     pub storage: crate::storage::StorageStats,
-    /// Engine-specific metric breakdown.
-    pub detail: String,
+    /// Engine-specific metric breakdown (renders as the familiar `k=v`
+    /// line via `Display`).
+    pub detail: crate::trace::MetricSet,
+    /// Work-stealing executor activity during the run (see
+    /// [`crate::mapreduce::JobReport::exec`]).
+    pub exec: crate::runtime::executor::ExecMetrics,
 }
 
 #[derive(Debug, Clone)]

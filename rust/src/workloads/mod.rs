@@ -209,6 +209,22 @@
 //!    [`mapreduce::ChainReport::stages`]), and a line in the `blaze plan`
 //!    registry.
 //!
+//! **Reading a per-stage breakdown.** Two attribution views exist for a
+//! multi-stage run. The `ChainReport` stage table (printed by the CLI
+//! and `benches/workloads.rs`) reports each stage's **engine-side wall**
+//! (map + exchange + per-shard finalize); driver-side work between
+//! stages — rendering a stage's output and re-ingesting it as the next
+//! stage's bridge relation — is measured separately as
+//! [`mapreduce::ChainReport::bridge_secs`] (the `bridge` key in the
+//! chain's detail), so stage walls plus bridge account for the job wall
+//! instead of the bridge time silently vanishing between rows. For a
+//! finer view, `blaze profile --workload <name>` attributes every traced
+//! span (map/exchange/finalize/spill/task) to its containing stage and
+//! prints per-phase wall vs busy (their ratio is the phase's effective
+//! parallelism) plus the critical path — the phase sequence worth
+//! optimizing. See the README's Observability section for the span
+//! taxonomy.
+//!
 //! [`mapreduce::run_serial`]: crate::mapreduce::run_serial
 //! [`mapreduce::run_serial_inputs`]: crate::mapreduce::run_serial_inputs
 //! [`mapreduce::run_iterative_serial`]: crate::mapreduce::run_iterative_serial
@@ -219,6 +235,7 @@
 //! [`mapreduce::IterativeWorkload`]: crate::mapreduce::IterativeWorkload
 //! [`mapreduce::ChainedWorkload`]: crate::mapreduce::ChainedWorkload
 //! [`mapreduce::ChainReport::stages`]: crate::mapreduce::ChainReport::stages
+//! [`mapreduce::ChainReport::bridge_secs`]: crate::mapreduce::ChainReport::bridge_secs
 //! [`mapreduce::StageGraph`]: crate::mapreduce::StageGraph
 //! [`mapreduce::TypedStage`]: crate::mapreduce::TypedStage
 //! [`mapreduce::TypedStage::boxed`]: crate::mapreduce::TypedStage::boxed
