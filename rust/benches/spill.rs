@@ -8,6 +8,13 @@
 //! storage hierarchy costs — sort-and-spill writes, loser-tree merge
 //! reads — as memory shrinks.
 //!
+//! Experiment S2 rides along: the data-path ablation. The same sweep's
+//! spill traffic is re-run under every combination of block compression
+//! (`--compress`) and key dictionaries (`--dict-keys`), recording both
+//! the logical spill volume and what the disk tier actually stored —
+//! the compressed-vs-raw byte gap that moves the cliff. Rows land
+//! merge-keyed in `BENCH_9.json`.
+//!
 //! Scale knobs: BLAZE_BENCH_BYTES (default 32MB), BLAZE_BENCH_REPS.
 
 use std::sync::Arc;
@@ -113,6 +120,64 @@ fn main() {
             );
         }
     }
+
+    // S2: data-path ablation — compression x dictionary over the same
+    // Zipf corpus. Each config replays the threshold sweep, so the rows
+    // expose both the on-disk byte gap (spilled vs stored) and where
+    // the wall-clock cliff lands per codec.
+    const CONFIGS: [(&str, bool, bool); 4] = [
+        ("lz4+dict", true, true),
+        ("lz4", true, false),
+        ("dict", false, true),
+        ("raw", false, false),
+    ];
+    let mut datapath = MachineReport::new();
+    eprintln!("\nS2: data-path ablation (compression x dictionary)");
+    for (config, compress, dict) in CONFIGS {
+        for (label, threshold) in THRESHOLDS {
+            let r = spec(Engine::BlazeTcm, threshold)
+                .compress(compress)
+                .dict_keys(dict)
+                .run_str(&wc, &corpus)
+                .expect("wordcount");
+            eprintln!(
+                "  blaze-tcm {config:>8} @ {label:>9}: {:.3}s, spilled {} -> stored {}",
+                r.wall_secs,
+                fmt_bytes(r.storage.spilled_bytes),
+                fmt_bytes(r.storage.disk_bytes_written),
+            );
+            datapath.row_datapath(
+                format!("wordcount@{label}"),
+                format!("blaze-tcm/{config}"),
+                r.wall_secs,
+                r.shuffle_bytes,
+                r.storage.spilled_bytes,
+                r.storage.disk_bytes_written,
+            );
+        }
+        // Spark pays the codec on persisted shuffle blocks even before
+        // anything spills; one bounded point per config records that.
+        let r = spec(Engine::Spark, Some(64 << 10))
+            .compress(compress)
+            .dict_keys(dict)
+            .run_str(&wc, &corpus)
+            .expect("wordcount");
+        eprintln!(
+            "  spark     {config:>8} @      64KB: {:.3}s, spilled {} -> stored {}",
+            r.wall_secs,
+            fmt_bytes(r.storage.spilled_bytes),
+            fmt_bytes(r.storage.disk_bytes_written),
+        );
+        datapath.row_datapath(
+            "wordcount@64KB",
+            format!("spark/{config}"),
+            r.wall_secs,
+            r.shuffle_bytes,
+            r.storage.spilled_bytes,
+            r.storage.disk_bytes_written,
+        );
+    }
+    datapath.write_merged("BENCH_9.json");
 
     runner.finish();
     machine.write("BENCH_spill_sweep.json");

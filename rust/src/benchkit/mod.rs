@@ -166,14 +166,26 @@ pub fn stage_table(
 ) -> crate::metrics::Table {
     let mut t = crate::metrics::Table::new(
         title.into(),
-        &["stage", "records in", "records out", "shuffle", "wall (s)"],
+        &["stage", "records in", "records out", "shuffle", "dict keys", "wall (s)"],
     );
     for s in stages {
+        let dict = if s.dict.is_zero() {
+            "-".to_string()
+        } else {
+            format!(
+                "{}->{} ({} uniq, {} refs)",
+                crate::util::stats::fmt_bytes(s.dict.key_raw_bytes),
+                crate::util::stats::fmt_bytes(s.dict.key_enc_bytes),
+                s.dict.unique,
+                s.dict.refs,
+            )
+        };
         t.row(&[
             format!("{} '{}'", s.stage, s.label),
             s.records_in.to_string(),
             s.records_out.to_string(),
             crate::util::stats::fmt_bytes(s.shuffle_bytes),
+            dict,
             format!("{:.4}", s.wall_secs),
         ]);
     }
@@ -193,6 +205,11 @@ pub struct MachineRow {
     pub wall_secs: f64,
     pub shuffle_bytes: u64,
     pub spilled_bytes: u64,
+    /// Post-compression bytes the row's run actually put on disk
+    /// (`spilled_bytes` stays logical — the pair is the compression
+    /// ratio of the data-path ablations in `benches/spill.rs`). `0` =
+    /// unrecorded (rows from benches that don't sweep the codec axis).
+    pub stored_bytes: u64,
     /// Partition-cache hit rate (`hits / (hits + misses)`, in `[0, 1]`)
     /// of the row's run; `0.0` = unrecorded (rows from benches that don't
     /// touch the cache). The trace-lab rows (`benches/cache_policies.rs`)
@@ -248,6 +265,33 @@ impl MachineReport {
             wall_secs,
             shuffle_bytes,
             spilled_bytes,
+            stored_bytes: 0,
+            hit_rate: 0.0,
+            busy_frac: 0.0,
+        });
+    }
+
+    /// Data-path ablation row (`benches/spill.rs`): the codec/dictionary
+    /// config rides in the `engine` column; `spilled_bytes` is the
+    /// logical spill volume and `stored_bytes` what the disk tier
+    /// actually wrote after compression.
+    pub fn row_datapath(
+        &mut self,
+        workload: impl Into<String>,
+        config: impl Into<String>,
+        wall_secs: f64,
+        shuffle_bytes: u64,
+        spilled_bytes: u64,
+        stored_bytes: u64,
+    ) {
+        self.rows.push(MachineRow {
+            workload: workload.into(),
+            engine: config.into(),
+            threads: 0,
+            wall_secs,
+            shuffle_bytes,
+            spilled_bytes,
+            stored_bytes,
             hit_rate: 0.0,
             busy_frac: 0.0,
         });
@@ -273,6 +317,7 @@ impl MachineReport {
             wall_secs,
             shuffle_bytes,
             spilled_bytes,
+            stored_bytes: 0,
             hit_rate: 0.0,
             busy_frac,
         });
@@ -295,6 +340,7 @@ impl MachineReport {
             wall_secs,
             shuffle_bytes: 0,
             spilled_bytes: 0,
+            stored_bytes: 0,
             hit_rate,
             busy_frac: 0.0,
         });
@@ -321,13 +367,14 @@ impl MachineReport {
             out.push_str(&format!(
                 "    {{\"workload\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
                  \"wall_secs\": {:.6}, \"shuffle_bytes\": {}, \"spilled_bytes\": {}, \
-                 \"hit_rate\": {:.6}, \"busy_frac\": {:.6}}}{}\n",
+                 \"stored_bytes\": {}, \"hit_rate\": {:.6}, \"busy_frac\": {:.6}}}{}\n",
                 esc(&r.workload),
                 esc(&r.engine),
                 r.threads,
                 r.wall_secs,
                 r.shuffle_bytes,
                 r.spilled_bytes,
+                r.stored_bytes,
                 r.hit_rate,
                 r.busy_frac,
                 if i + 1 < self.rows.len() { "," } else { "" },
@@ -416,6 +463,8 @@ pub fn parse_rows(json: &str) -> Vec<MachineRow> {
                 wall_secs: num_field(line, "wall_secs")?,
                 shuffle_bytes: num_field(line, "shuffle_bytes")?,
                 spilled_bytes: num_field(line, "spilled_bytes")?,
+                // Absent in pre-compression files: read as "unrecorded".
+                stored_bytes: num_field(line, "stored_bytes").unwrap_or(0),
                 // Absent in pre-trace-lab files: read as "unrecorded".
                 hit_rate: num_field(line, "hit_rate").unwrap_or(0.0),
                 // Absent in pre-observability files: read as "unrecorded".
@@ -538,6 +587,26 @@ mod tests {
         let rows = parse_rows(legacy);
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].hit_rate, 0.0);
+    }
+
+    #[test]
+    fn datapath_rows_round_trip_stored_bytes() {
+        let mut r = MachineReport::new();
+        r.row_datapath("wordcount-spill", "lz4+dict", 0.5, 1024, 8192, 2048);
+        r.row("wordcount", "spark", 0.25, 1024, 0);
+        let rows = parse_rows(&r.to_json());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].engine, "lz4+dict");
+        assert_eq!(rows[0].spilled_bytes, 8192);
+        assert_eq!(rows[0].stored_bytes, 2048);
+        assert_eq!(rows[1].stored_bytes, 0, "plain rows read as unrecorded");
+        // Pre-compression files parse too, defaulting the new column.
+        let legacy = "    {\"workload\": \"w\", \"engine\": \"e\", \"threads\": 2, \
+                      \"wall_secs\": 1.0, \"shuffle_bytes\": 3, \"spilled_bytes\": 4, \
+                      \"hit_rate\": 0.5, \"busy_frac\": 0.25}\n";
+        let rows = parse_rows(legacy);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].stored_bytes, 0);
     }
 
     #[test]

@@ -21,7 +21,9 @@ use crate::cluster::Comm;
 use crate::concurrent::{default_segments, CachePolicy, ConcurrentHashMap, MapKey, MapValue};
 use crate::hash::{bucket_of, HashKind};
 use crate::storage::{fresh_spill_namespace, BlockStore, DiskTier, ExternalMerger, HeapSize};
-use crate::util::ser::{Decode, Encode};
+use crate::util::ser::{
+    decode_varint, encode_pairs, DataKey, Decode, DictReader, DictStats, Encode, Reader,
+};
 
 use super::CombineMode;
 
@@ -128,22 +130,14 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         self.local.sync(self.nthreads, &reduce);
     }
 
-    /// The all-to-all re-shard: collect every pending entry, ship each to
-    /// its owner (self-delivery stays typed and off the wire), merge what
-    /// arrives. After this, the map holds exactly this rank's shard.
-    pub fn shuffle(&self, comm: &Comm, reduce: impl Fn(&mut V, V) + Sync)
-    where
-        K: Encode + Decode,
-        V: Encode + Decode,
-    {
-        assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
+    /// Drain pending entries (thread caches or raw buffers) into
+    /// owner-sharded buckets — step 1+2 of either shuffle flavor.
+    fn drain_by_owner(&self, reduce: &(impl Fn(&mut V, V) + Sync)) -> Vec<Vec<(K, V)>> {
         let n = self.nnodes;
-
-        // 1. Drain pending entries, carrying each key's routing hash.
         let mut pending: Vec<(u64, K, V)> = Vec::new();
         match self.combine {
             CombineMode::Eager => {
-                self.local.sync(self.nthreads, &reduce);
+                self.local.sync(self.nthreads, reduce);
                 for e in self.local.drain_entries() {
                     pending.push((e.hash, e.key, e.value));
                 }
@@ -157,20 +151,52 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
                 }
             }
         }
-
-        // 2. Partition by owner rank.
         let mut by_owner: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
         for (h, k, v) in pending {
             by_owner[bucket_of(h, n)].push((k, v));
         }
+        by_owner
+    }
+
+    /// The all-to-all re-shard: collect every pending entry, ship each to
+    /// its owner (self-delivery stays typed and off the wire), merge what
+    /// arrives. After this, the map holds exactly this rank's shard.
+    ///
+    /// Wire payloads carry dictionary-encoded keys when `dict` is on:
+    /// each repeated key crosses the fabric once, later occurrences as a
+    /// varint back-reference (the [`crate::util::ser::DictWriter`]
+    /// format). The receive path decodes into per-payload
+    /// [`DictReader`] arenas and upserts through borrowed key handles,
+    /// materializing an owned key only on first sight. Returns the
+    /// outgoing-payload dictionary stats.
+    pub fn shuffle(
+        &self,
+        comm: &Comm,
+        reduce: impl Fn(&mut V, V) + Sync,
+        dict: bool,
+    ) -> DictStats
+    where
+        K: DataKey,
+        V: Encode + Decode,
+    {
+        assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
+        let mut by_owner = self.drain_by_owner(&reduce);
 
         // 3. Exchange. The local shard bypasses serialization and the
         //    wire — that asymmetry is the measurable local-reduce saving.
         let mine = std::mem::take(&mut by_owner[self.rank]);
+        let mut stats = DictStats::default();
         let outgoing: Vec<Vec<u8>> = by_owner
             .iter()
             .enumerate()
-            .map(|(dst, shard)| if dst == self.rank { Vec::new() } else { shard.to_bytes() })
+            .map(|(dst, shard)| {
+                if dst == self.rank {
+                    return Vec::new();
+                }
+                let (bytes, s) = encode_pairs(shard, dict);
+                stats = stats.merged(&s);
+                bytes
+            })
             .collect();
         let incoming = comm.all_to_all(outgoing);
 
@@ -182,12 +208,26 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
             if src == self.rank {
                 continue;
             }
-            let shard: Vec<(K, V)> = Vec::<(K, V)>::from_bytes(&buf).expect("dist shuffle decode");
-            for (k, v) in shard {
-                self.local.upsert(0, k, v, &reduce);
+            let mut r = Reader::new(&buf);
+            let mut ctx = DictReader::new();
+            let count = decode_varint(&mut r).expect("dist shuffle decode");
+            for _ in 0..count {
+                let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
+                let v = V::decode(&mut r).expect("dist shuffle decode");
+                let h = K::ref_hash(&kr, &ctx, self.hash);
+                self.local.upsert_borrowed(
+                    0,
+                    h,
+                    |k: &K| K::ref_eq_owned(&kr, &ctx, k),
+                    || K::ref_materialize(&kr, &ctx),
+                    v,
+                    &reduce,
+                );
             }
+            assert!(r.is_empty(), "dist shuffle decode: trailing bytes");
         }
         self.local.sync(self.nthreads, &reduce);
+        stats
     }
 
     /// [`shuffle`](Self::shuffle) with a **bounded-memory merge**: the
@@ -205,55 +245,43 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         reduce: impl Fn(&mut V, V) + Sync,
         threshold: u64,
         disk: &Arc<DiskTier>,
-    ) -> Vec<(K, V)>
+        dict: bool,
+    ) -> (Vec<(K, V)>, DictStats)
     where
-        K: Ord + std::hash::Hash + Encode + Decode + HeapSize,
+        K: Ord + DataKey + HeapSize,
         V: Encode + Decode + HeapSize,
     {
         assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
-        let n = self.nnodes;
-
-        // 1. Drain pending entries, carrying each key's routing hash.
-        let mut pending: Vec<(u64, K, V)> = Vec::new();
-        match self.combine {
-            CombineMode::Eager => {
-                self.local.sync(self.nthreads, &reduce);
-                for e in self.local.drain_entries() {
-                    pending.push((e.hash, e.key, e.value));
-                }
-            }
-            CombineMode::None => {
-                for cell in &self.raw {
-                    for (k, v) in cell.lock().unwrap().drain(..) {
-                        let h = k.hash_with(self.hash);
-                        pending.push((h, k, v));
-                    }
-                }
-            }
-        }
-
-        // 2. Partition by owner rank.
-        let mut by_owner: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
-        for (h, k, v) in pending {
-            by_owner[bucket_of(h, n)].push((k, v));
-        }
+        let mut by_owner = self.drain_by_owner(&reduce);
 
         // 3. Exchange — byte-for-byte the same protocol as `shuffle`.
         let mine = std::mem::take(&mut by_owner[self.rank]);
+        let mut stats = DictStats::default();
         let outgoing: Vec<Vec<u8>> = by_owner
             .iter()
             .enumerate()
-            .map(|(dst, shard)| if dst == self.rank { Vec::new() } else { shard.to_bytes() })
+            .map(|(dst, shard)| {
+                if dst == self.rank {
+                    return Vec::new();
+                }
+                let (bytes, s) = encode_pairs(shard, dict);
+                stats = stats.merged(&s);
+                bytes
+            })
             .collect();
         let incoming = comm.all_to_all(outgoing);
 
         // 4. Merge own + received through the budgeted external merger.
+        // Received keys stay borrowed handles into the payload's
+        // dictionary arena until the merger actually needs an owned key
+        // (first sight of the key, or a spill re-materialization).
         let mut merger: ExternalMerger<K, V> = ExternalMerger::new(
             threshold,
             Arc::clone(disk) as Arc<dyn BlockStore>,
             Arc::clone(disk.counters()),
             fresh_spill_namespace(),
-        );
+        )
+        .with_dict_keys(dict);
         for (k, v) in mine {
             merger.insert(k, v, &reduce);
         }
@@ -261,12 +289,17 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
             if src == self.rank {
                 continue;
             }
-            let shard: Vec<(K, V)> = Vec::<(K, V)>::from_bytes(&buf).expect("dist shuffle decode");
-            for (k, v) in shard {
-                merger.insert(k, v, &reduce);
+            let mut r = Reader::new(&buf);
+            let mut ctx = DictReader::new();
+            let count = decode_varint(&mut r).expect("dist shuffle decode");
+            for _ in 0..count {
+                let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
+                let v = V::decode(&mut r).expect("dist shuffle decode");
+                merger.insert_ref(kr, &ctx, v, &reduce);
             }
+            assert!(r.is_empty(), "dist shuffle decode: trailing bytes");
         }
-        merger.finish(&reduce)
+        (merger.finish(&reduce), stats)
     }
 }
 
@@ -303,6 +336,7 @@ mod tests {
         nnodes: usize,
         combine: CombineMode,
         words: &[&str],
+        dict: bool,
     ) -> HashMap<String, u64> {
         let results = spawn_cluster(nnodes, NetModel::ideal(), |comm| {
             let map: DistHashMap<String, u64> =
@@ -311,7 +345,7 @@ mod tests {
             for w in words {
                 map.upsert(0, w.to_string(), 1, reducer::sum);
             }
-            map.shuffle(comm, reducer::sum);
+            map.shuffle(comm, reducer::sum, dict);
             map.to_vec_local()
         });
         results.into_iter().flatten().collect()
@@ -322,11 +356,13 @@ mod tests {
         let words = ["a", "b", "a", "c", "a", "b"];
         for combine in [CombineMode::Eager, CombineMode::None] {
             for nnodes in [1usize, 2, 3] {
-                let counts = count_words(nnodes, combine, &words);
-                assert_eq!(counts.len(), 3, "{combine:?} nnodes={nnodes}");
-                assert_eq!(counts["a"], 3 * nnodes as u64);
-                assert_eq!(counts["b"], 2 * nnodes as u64);
-                assert_eq!(counts["c"], nnodes as u64);
+                for dict in [true, false] {
+                    let counts = count_words(nnodes, combine, &words, dict);
+                    assert_eq!(counts.len(), 3, "{combine:?} nnodes={nnodes} dict={dict}");
+                    assert_eq!(counts["a"], 3 * nnodes as u64);
+                    assert_eq!(counts["b"], 2 * nnodes as u64);
+                    assert_eq!(counts["c"], nnodes as u64);
+                }
             }
         }
     }
@@ -340,7 +376,7 @@ mod tests {
             for i in 0..100 {
                 map.upsert(0, format!("k{i}"), 1, reducer::sum);
             }
-            map.shuffle(comm, reducer::sum);
+            map.shuffle(comm, reducer::sum, true);
             let owned = map.to_vec_local();
             owned.iter().all(|(k, _)| map.owner_of(k) == comm.rank)
         });
@@ -359,8 +395,8 @@ mod tests {
                 a.upsert(0, w.to_string(), 1, reducer::sum);
                 b.upsert_str(0, w, 1, reducer::sum);
             }
-            a.shuffle(comm, reducer::sum);
-            b.shuffle(comm, reducer::sum);
+            a.shuffle(comm, reducer::sum, true);
+            b.shuffle(comm, reducer::sum, false);
             let mut av = a.to_vec_local();
             let mut bv = b.to_vec_local();
             av.sort();
@@ -387,7 +423,8 @@ mod tests {
                         map.upsert(0, w.to_string(), 1, reducer::sum);
                     }
                     let disk = Arc::new(DiskTier::new(None));
-                    let merged = map.shuffle_external(comm, reducer::sum, threshold, &disk);
+                    let (merged, _) =
+                        map.shuffle_external(comm, reducer::sum, threshold, &disk, true);
                     let spilled = disk.counters().snapshot().spilled_bytes;
                     (merged, spilled)
                 });
@@ -413,6 +450,40 @@ mod tests {
     }
 
     #[test]
+    fn dict_wire_stats_count_repeats() {
+        // Two nodes, every key emitted 3x under CombineMode::None, so the
+        // wire shard for the remote owner carries repeated keys — the
+        // dictionary must register each unique key once and back-reference
+        // the rest, and the encoded key bytes must shrink.
+        let results = spawn_cluster(2, NetModel::ideal(), |comm| {
+            let map: DistHashMap<String, u64> =
+                DistHashMap::new(comm.rank, 2, 2, HashKind::Fx, CombineMode::None);
+            for _ in 0..3 {
+                for w in ["alpha", "beta", "gamma", "delta"] {
+                    map.upsert(0, w.to_string(), 1, reducer::sum);
+                }
+            }
+            let stats = map.shuffle(comm, reducer::sum, true);
+            (stats, map.to_vec_local())
+        });
+        let mut total: HashMap<String, u64> = HashMap::new();
+        let mut wire = crate::util::ser::DictStats::default();
+        for (stats, entries) in results {
+            wire = wire.merged(&stats);
+            for (k, v) in entries {
+                *total.entry(k).or_insert(0) += v;
+            }
+        }
+        // Each key is remote for exactly one of the two nodes, so across
+        // the cluster every key registers once and back-references twice.
+        assert_eq!(wire.unique, 4, "{wire:?}");
+        assert_eq!(wire.refs, 8, "{wire:?}");
+        assert!(wire.key_enc_bytes < wire.key_raw_bytes, "{wire:?}");
+        assert_eq!(total.len(), 4);
+        assert!(total.values().all(|&c| c == 6)); // 3 per node × 2 nodes
+    }
+
+    #[test]
     fn integer_keyed_map() {
         let results = spawn_cluster(2, NetModel::ideal(), |comm| {
             let map: DistHashMap<u32, u64> =
@@ -420,7 +491,9 @@ mod tests {
             for i in 0..50u32 {
                 map.upsert(0, i % 5, 1, reducer::sum);
             }
-            map.shuffle(comm, reducer::sum);
+            let stats = map.shuffle(comm, reducer::sum, true);
+            // Integer keys have no dictionary form — stats must stay zero.
+            assert!(stats.is_zero(), "{stats:?}");
             map.to_vec_local()
         });
         let merged: HashMap<u32, u64> = results.into_iter().flatten().collect();

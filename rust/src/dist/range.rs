@@ -10,7 +10,7 @@
 use crate::cluster::Comm;
 use crate::concurrent::{MapKey, MapValue};
 use crate::util::pool::{self, Schedule};
-use crate::util::ser::{Decode, Encode};
+use crate::util::ser::{DataKey, Decode, Encode};
 
 use super::DistHashMap;
 
@@ -91,7 +91,7 @@ impl DistRange {
         reduce: R,
         mapper: F,
     ) where
-        K: MapKey + Encode + Decode,
+        K: MapKey + DataKey + Encode + Decode,
         V: MapValue + Encode + Decode,
         R: Fn(&mut V, V) + Sync,
         F: Fn(i64, &mut dyn FnMut(K, V)) + Sync,
@@ -100,7 +100,7 @@ impl DistRange {
         pool::parallel_for_range(nthreads, lo, hi, Schedule::Dynamic { chunk: 64 }, |ctx, i| {
             mapper(self.at(i), &mut |k, v| target.upsert(ctx.worker, k, v, &reduce));
         });
-        target.shuffle(comm, reduce);
+        target.shuffle(comm, reduce, true);
     }
 }
 

@@ -46,7 +46,7 @@ use crate::mapreduce::{CacheableWorkload, StagePlan, StrWorkload, Workload};
 use crate::runtime::executor::{ExecCtx, Executor, TaskSetError};
 use crate::storage::{DiskTier, HeapSize, PolicySpec, StorageStats};
 use crate::trace::{self, SpanCat};
-use crate::util::ser::{Decode, Encode};
+use crate::util::ser::{DataKey, Decode, DictStats, Encode};
 use crate::util::stats::Stopwatch;
 
 /// Key-insert strategy (the paper's Blaze vs Blaze-TCM bars).
@@ -100,6 +100,12 @@ pub struct BlazeConf {
     /// conf parity with [`super::spark::SparkConf`] so `--cache-policy`
     /// threads identically through both engines.
     pub eviction_policy: PolicySpec,
+    /// Framed block compression on the exchange's spill tier (the
+    /// `--compress` knob; on by default, `off` is the ablation arm).
+    pub compress: bool,
+    /// Dictionary-encode repeated string keys on exchange payloads and
+    /// spill runs (the `--dict-keys` knob; on by default).
+    pub dict_keys: bool,
 }
 
 impl Default for BlazeConf {
@@ -117,6 +123,8 @@ impl Default for BlazeConf {
             max_job_reruns: 3,
             spill_dir: None,
             eviction_policy: PolicySpec::default(),
+            compress: true,
+            dict_keys: true,
         }
     }
 }
@@ -482,6 +490,8 @@ struct NodeOutcome<K, V> {
     wall_secs: f64,
     records: u64,
     failed: bool,
+    /// Dictionary savings of this node's outgoing exchange payloads.
+    wire_dict: DictStats,
 }
 
 /// Per-job context of the bounded-memory exchange: one disk tier shared
@@ -507,7 +517,7 @@ pub fn run_plan<K, V, R, M, F>(
     finalize_shard: F,
 ) -> Result<WorkloadReport<K, V>, JobFailed>
 where
-    K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
+    K: MapKey + DataKey + Encode + Decode + Ord + HeapSize,
     V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
     M: Fn(&Comm, &DistHashMap<K, V>) -> Result<u64, TaskSetError> + Sync,
@@ -519,7 +529,7 @@ where
     // whole job (dropped — files and all — when the report is built).
     let spill = stage.spill_threshold.filter(|_| !skip_shuffle).map(|threshold| SpillCtx {
         threshold,
-        disk: Arc::new(DiskTier::new(conf.spill_dir.clone())),
+        disk: Arc::new(DiskTier::new(conf.spill_dir.clone()).compression(conf.compress)),
     });
     let mut reruns = 0usize;
     let job_sw = Stopwatch::start(); // total across attempts: failures cost time
@@ -536,10 +546,14 @@ where
             Ok(mut report) => {
                 report.reruns = reruns;
                 report.wall_secs = job_sw.elapsed_secs();
-                report.storage =
-                    spill.as_ref().map_or_else(StorageStats::default, |s| {
-                        s.disk.counters().snapshot()
-                    });
+                // The attempt left only the exchange-wire dictionary
+                // stats in `storage`; fold the spill tier's counters
+                // (disk traffic, compression, spill-run dictionaries)
+                // on top.
+                report.storage = spill
+                    .as_ref()
+                    .map_or_else(StorageStats::default, |s| s.disk.counters().snapshot())
+                    .merged(&report.storage);
                 return Ok(report);
             }
             Err(()) if reruns < conf.max_job_reruns => reruns += 1,
@@ -561,7 +575,7 @@ fn try_attempt<K, V, R, M, F>(
     finalize_shard: &F,
 ) -> Result<WorkloadReport<K, V>, ()>
 where
-    K: MapKey + Encode + Decode + Ord + std::hash::Hash + HeapSize,
+    K: MapKey + DataKey + Encode + Decode + Ord + HeapSize,
     V: MapValue + Encode + Decode + HeapSize,
     R: Fn(&mut V, V) + Sync + Copy,
     M: Fn(&Comm, &DistHashMap<K, V>) -> Result<u64, TaskSetError> + Sync,
@@ -613,20 +627,20 @@ where
         // ---- Shuffle phase ----
         let exchange_span = trace::span_arg(SpanCat::Exchange, "exchange", comm.rank as u64);
         failed |= failures.should_fail_node(comm.rank, 1);
-        let entries = if skip_shuffle {
+        let (entries, wire_dict) = if skip_shuffle {
             // Zero-shuffle fast path: every key was declared globally
             // unique, so nothing needs co-location — settle thread caches
             // locally and put zero bytes on the fabric.
             map.settle_local(reduce);
-            map.to_vec_local()
+            (map.to_vec_local(), DictStats::default())
         } else if let Some(sp) = spill {
             // Bounded-memory exchange: the reduce-side merge runs through
             // an external merger that spills sorted runs beyond the
             // planned budget.
-            map.shuffle_external(comm, reduce, sp.threshold, &sp.disk)
+            map.shuffle_external(comm, reduce, sp.threshold, &sp.disk, conf.dict_keys)
         } else {
-            map.shuffle(comm, reduce);
-            map.to_vec_local()
+            let stats = map.shuffle(comm, reduce, conf.dict_keys);
+            (map.to_vec_local(), stats)
         };
         let shuffle_secs = sw.elapsed_secs();
         drop(exchange_span);
@@ -643,6 +657,7 @@ where
             wall_secs,
             records,
             failed,
+            wire_dict,
         }
     };
 
@@ -653,15 +668,21 @@ where
     let mut entries = Vec::new();
     let mut records = 0u64;
     let (mut map_secs, mut shuffle_secs, mut wall_secs) = (0.0f64, 0.0f64, 0.0f64);
+    let mut wire_dict = DictStats::default();
     for o in outcomes {
         records += o.records;
         map_secs = map_secs.max(o.map_secs);
         shuffle_secs = shuffle_secs.max(o.shuffle_secs);
         wall_secs = wall_secs.max(o.wall_secs);
+        wire_dict = wire_dict.merged(&o.wire_dict);
         // Keys are owner-sharded (or producer-sharded with globally
         // unique keys on the zero-shuffle path): no overlaps between nodes.
         entries.extend(o.entries);
     }
+    // Carry the exchange-wire dictionary stats in the storage row;
+    // `run_plan` merges the spill tier's counters on top.
+    let mut storage = StorageStats::default();
+    storage.add_dict(&wire_dict);
     Ok(WorkloadReport {
         entries,
         wall_secs,
@@ -670,7 +691,7 @@ where
         shuffle_bytes: fabric.total_bytes_sent(),
         records,
         reruns: 0,
-        storage: StorageStats::default(), // filled by `run_plan`
+        storage,
     })
 }
 

@@ -91,6 +91,15 @@ pub struct SparkConf {
     /// context is built over an injected shared cache, which keeps the
     /// policy it was constructed with.
     pub eviction_policy: PolicySpec,
+    /// Block-compress everything the context's disk tiers store — spill
+    /// runs, persisted shuffle blocks, demoted persist splits (Spark's
+    /// `spark.shuffle.compress` / `spark.io.compression.codec`; the
+    /// `--compress` knob). Ignored for an injected shared cache, whose
+    /// disk tier keeps the codec it was built with.
+    pub compress: bool,
+    /// Dictionary-encode repeated keys in shuffle payloads and spill
+    /// runs (the `--dict-keys` knob).
+    pub dict_keys: bool,
 }
 
 impl Default for SparkConf {
@@ -114,6 +123,8 @@ impl Default for SparkConf {
             spill_threshold: None,
             spill_dir: None,
             eviction_policy: PolicySpec::default(),
+            compress: true,
+            dict_keys: true,
         }
     }
 }
@@ -146,6 +157,8 @@ impl SparkConf {
             spill_threshold: None,
             spill_dir: None,
             eviction_policy: PolicySpec::default(),
+            compress: true,
+            dict_keys: true,
         }
     }
 
@@ -171,6 +184,8 @@ impl SparkConf {
             spill_threshold: None,
             spill_dir: None,
             eviction_policy: PolicySpec::default(),
+            compress: true,
+            dict_keys: true,
         }
     }
 }

@@ -88,7 +88,8 @@ impl SparkContext {
         // disk tier: persist becomes MEMORY_AND_DISK instead of the
         // lossy MEMORY_ONLY evict+recompute.
         let (cache, cache_storage) = if conf.spill_threshold.is_some() {
-            let cache_disk = Arc::new(DiskTier::new(conf.spill_dir.clone()));
+            let cache_disk =
+                Arc::new(DiskTier::new(conf.spill_dir.clone()).compression(conf.compress));
             let cell = Arc::clone(cache_disk.counters());
             let cache = PartitionCache::with_spill_policy(
                 conf.cache_budget,
@@ -122,7 +123,7 @@ impl SparkContext {
         cache_storage: Option<Arc<StorageCounters>>,
     ) -> Self {
         assert!(conf.nnodes > 0 && conf.threads_per_node > 0);
-        let disk = Arc::new(DiskTier::new(conf.spill_dir.clone()));
+        let disk = Arc::new(DiskTier::new(conf.spill_dir.clone()).compression(conf.compress));
         let store = ShuffleBlockStore::new(conf.fault_tolerance.then(|| Arc::clone(&disk)));
         let gc = GcSim::new(conf.gc_model);
         Self {

@@ -23,9 +23,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use std::collections::HashMap;
+
 use crate::concurrent::MapKey;
 use crate::hash::HashKind;
-use crate::util::ser::{Decode, DecodeError, Encode, Reader};
+use crate::util::arena::StrRef;
+use crate::util::ser::{DataKey, Decode, DecodeError, DictReader, DictWriter, Encode, Reader};
 
 /// A Java-8-style string: UTF-16 code units in memory, UTF-8 on the wire.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -74,6 +77,65 @@ impl Decode for JvmWord {
         // readUTF: parse UTF-8, materialize UTF-16.
         let s = String::decode(r)?;
         Ok(JvmWord::from_str(&s))
+    }
+}
+
+/// `JvmWord` rides the string dictionary as its UTF-8 wire form (exactly
+/// what `writeUTF` puts on the wire), deferring the UTF-16
+/// materialization to the points the JVM would pay it (`readUTF` on a
+/// dictionary miss). Refs are arena handles to the UTF-8 payload, so
+/// comparisons/hashes re-derive the UTF-16 view without allocating the
+/// `Vec<u16>` — except `ref_hash`, which must match
+/// [`MapKey::hash_with`]'s byte order and builds the code-unit buffer.
+impl DataKey for JvmWord {
+    type Ref = StrRef;
+
+    fn dict_encode(&self, dict: &mut DictWriter, out: &mut Vec<u8>) {
+        dict.encode_str(&self.to_string_lossy(), out);
+    }
+
+    fn dict_decode(r: &mut Reader<'_>, dict: &mut DictReader) -> Result<Self::Ref, DecodeError> {
+        dict.decode_str(r)
+    }
+
+    fn ref_from_owned(this: Self, dict: &mut DictReader) -> Self::Ref {
+        dict.intern(&this.to_string_lossy())
+    }
+
+    fn ref_cmp(
+        a: &Self::Ref,
+        da: &DictReader,
+        b: &Self::Ref,
+        db: &DictReader,
+    ) -> std::cmp::Ordering {
+        // Must match `Ord for JvmWord` = lexicographic over UTF-16 code
+        // units, which differs from `str` byte order above the BMP.
+        da.get(*a).encode_utf16().cmp(db.get(*b).encode_utf16())
+    }
+
+    fn ref_materialize(r: &Self::Ref, dict: &DictReader) -> Self {
+        JvmWord::from_str(dict.get(*r))
+    }
+
+    fn ref_eq_owned(r: &Self::Ref, dict: &DictReader, owned: &Self) -> bool {
+        owned.0.iter().copied().eq(dict.get(*r).encode_utf16())
+    }
+
+    fn ref_hash(r: &Self::Ref, dict: &DictReader, kind: HashKind) -> u64 {
+        let units: Vec<u16> = dict.get(*r).encode_utf16().collect();
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(units.as_ptr().cast(), units.len() * 2) };
+        kind.hash(bytes)
+    }
+
+    fn map_get_mut<'m, V>(
+        map: &'m mut HashMap<Self, V>,
+        r: &Self::Ref,
+        dict: &DictReader,
+    ) -> Option<&'m mut V> {
+        // No `Borrow<str>` bridge from `JvmWord`: probe with a fresh
+        // UTF-16 key, the allocation `readUTF` would pay anyway.
+        map.get_mut(&JvmWord::from_str(dict.get(*r)))
     }
 }
 
@@ -172,6 +234,54 @@ mod tests {
         let b = JvmWord::from_str("alphb").hash_with(HashKind::Fx);
         assert_ne!(a, b);
         assert_eq!(a, JvmWord::from_str("alpha").hash_with(HashKind::Fx));
+    }
+
+    #[test]
+    fn jvm_word_dict_pairs_roundtrip() {
+        use crate::util::ser::{decode_pairs, encode_pairs};
+        let words: Vec<(JvmWord, u64)> = ["apfel", "birne", "apfel", "你好", "apfel"]
+            .iter()
+            .map(|s| (JvmWord::from_str(s), 1u64))
+            .collect();
+        let (bytes, stats) = encode_pairs(&words, true);
+        assert_eq!(stats.unique, 3);
+        assert_eq!(stats.refs, 2);
+        assert!(stats.key_enc_bytes < stats.key_raw_bytes);
+        let back: Vec<(JvmWord, u64)> = decode_pairs(&bytes).unwrap();
+        assert_eq!(back, words);
+        // Disabled writer: every occurrence inline, same reader decodes.
+        let (bytes, stats) = encode_pairs(&words, false);
+        assert_eq!((stats.unique, stats.refs), (5, 0));
+        let back: Vec<(JvmWord, u64)> = decode_pairs(&bytes).unwrap();
+        assert_eq!(back, words);
+    }
+
+    #[test]
+    fn jvm_word_refs_follow_utf16_order_and_hash() {
+        // U+1F600 encodes as a surrogate pair starting 0xD83D, which
+        // sorts *below* U+E000 in UTF-16 code units — the opposite of
+        // UTF-8 byte order. ref_cmp must follow the owned Ord.
+        let hi = JvmWord::from_str("😀");
+        let pua = JvmWord::from_str("\u{e000}");
+        assert!(hi < pua, "UTF-16 code-unit order");
+        let mut dict = DictReader::new();
+        let r_hi = JvmWord::ref_from_owned(hi.clone(), &mut dict);
+        let r_pua = JvmWord::ref_from_owned(pua.clone(), &mut dict);
+        assert_eq!(
+            JvmWord::ref_cmp(&r_hi, &dict, &r_pua, &dict),
+            std::cmp::Ordering::Less
+        );
+        assert!(JvmWord::ref_eq_owned(&r_hi, &dict, &hi));
+        assert!(!JvmWord::ref_eq_owned(&r_hi, &dict, &pua));
+        for kind in [HashKind::Fx, HashKind::Fnv1a, HashKind::Wy] {
+            assert_eq!(JvmWord::ref_hash(&r_hi, &dict, kind), hi.hash_with(kind));
+        }
+        assert_eq!(JvmWord::ref_materialize(&r_hi, &dict), hi);
+        let mut map = HashMap::new();
+        map.insert(hi.clone(), 7u64);
+        *JvmWord::map_get_mut(&mut map, &r_hi, &dict).unwrap() += 1;
+        assert_eq!(map[&hi], 8);
+        assert!(JvmWord::map_get_mut(&mut map, &r_pua, &dict).is_none());
     }
 
     #[test]

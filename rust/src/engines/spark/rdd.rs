@@ -27,7 +27,7 @@ use crate::cache::CacheKey;
 use crate::concurrent::MapKey;
 use crate::hash::{bucket_of, HashKind};
 use crate::storage::{fresh_spill_namespace, BlockStore, ExternalMerger};
-use crate::util::ser::{Decode, Encode};
+use crate::util::ser::{decode_varint, encode_pairs, DataKey, Decode, DictReader, Encode, Reader};
 
 use super::block::{Block, BlockData, BlockId, FetchedData};
 use super::context::{SparkContext, TaskCtx};
@@ -89,13 +89,15 @@ pub trait StageRunner: Send + Sync {
 }
 
 /// Keys that can cross a shuffle boundary (`Ord` so the bounded-memory
-/// exchange can sort spill runs).
+/// exchange can sort spill runs; [`DataKey`] so blocks dictionary-encode
+/// repeated keys and the read side decodes them zero-copy).
 pub trait ShuffleKey:
-    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static
+    MapKey + DataKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static
 {
 }
-impl<T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static>
-    ShuffleKey for T
+impl<
+        T: MapKey + DataKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + Send + Sync + 'static,
+    > ShuffleKey for T
 {
 }
 
@@ -425,6 +427,20 @@ impl<K: ShuffleKey, V: ShuffleVal> ReduceAcc<K, V> {
         }
     }
 
+    /// Zero-copy insert: combine through a decoded key handle,
+    /// materializing the key only when it is new to the accumulator.
+    fn insert_ref(&mut self, kr: K::Ref, dict: &DictReader, v: V, reduce: fn(&mut V, V)) {
+        match self {
+            ReduceAcc::Mem(map) => match K::map_get_mut(map, &kr, dict) {
+                Some(slot) => reduce(slot, v),
+                None => {
+                    map.insert(K::ref_materialize(&kr, dict), v);
+                }
+            },
+            ReduceAcc::External(merger) => merger.insert_ref(kr, dict, v, reduce),
+        }
+    }
+
     fn finish(self, reduce: fn(&mut V, V)) -> Vec<(K, V)> {
         match self {
             ReduceAcc::Mem(map) => map.into_iter().collect(),
@@ -442,12 +458,15 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
         let inner = tc.inner;
         let conf = &inner.conf;
         let mut acc: ReduceAcc<K, V> = match self.spill_threshold {
-            Some(threshold) => ReduceAcc::External(ExternalMerger::new(
-                threshold,
-                Arc::clone(&inner.disk) as Arc<dyn BlockStore>,
-                Arc::clone(inner.disk.counters()),
-                fresh_spill_namespace(),
-            )),
+            Some(threshold) => ReduceAcc::External(
+                ExternalMerger::new(
+                    threshold,
+                    Arc::clone(&inner.disk) as Arc<dyn BlockStore>,
+                    Arc::clone(inner.disk.counters()),
+                    fresh_spill_namespace(),
+                )
+                .with_dict_keys(conf.dict_keys),
+            ),
             None => ReduceAcc::Mem(HashMap::new()),
         };
         let read_t0 = Instant::now();
@@ -495,29 +514,54 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
                 }
                 inner.metrics.add_net(cost);
             }
-            let pairs: Vec<(K, V)> = match data {
+            match data {
                 FetchedData::Bytes(b) => {
+                    // Streaming decode against the block's dictionary:
+                    // repeated keys resolve to one arena entry, and the
+                    // combine probes the accumulator through the handle —
+                    // keys materialize only when first seen.
                     let t0 = Instant::now();
-                    let v = Vec::<(K, V)>::from_bytes(&b).expect("shuffle block decode");
+                    let mut rd = Reader::new(&b);
+                    let mut dict = DictReader::new();
+                    let count = decode_varint(&mut rd).expect("shuffle block decode");
+                    let mut alloc = 0usize;
+                    for _ in 0..count {
+                        let kr = K::dict_decode(&mut rd, &mut dict)
+                            .expect("shuffle block decode");
+                        let v = V::decode(&mut rd).expect("shuffle block decode");
+                        alloc += v.heap_bytes();
+                        if conf.boxed_records {
+                            // JVM object-model proxy: each incoming record
+                            // becomes its own heap allocation before merging.
+                            let k = K::ref_materialize(&kr, &dict);
+                            alloc += k.heap_bytes();
+                            let boxed = Box::new((k, v));
+                            let (k, v) = *boxed;
+                            acc.insert(k, v, self.reduce);
+                        } else {
+                            acc.insert_ref(kr, &dict, v, self.reduce);
+                        }
+                    }
+                    assert!(rd.is_empty(), "shuffle block decode: trailing bytes");
                     inner.metrics.add_deser(t0.elapsed());
-                    // readUTF materializes fresh objects for every record.
-                    inner.gc.allocated(v.iter().map(HeapSize::heap_bytes).sum());
-                    v
+                    // readUTF materializes fresh values; unique key
+                    // payloads live once, in the decode arena.
+                    inner.gc.allocated(alloc + dict.bytes_used());
                 }
-                FetchedData::Typed { data, .. } => *data
-                    .downcast::<Vec<(K, V)>>()
-                    .expect("typed shuffle block of unexpected type"),
-            };
-            if conf.boxed_records {
-                // JVM object-model proxy: each incoming record becomes its
-                // own heap allocation before merging.
-                for boxed in pairs.into_iter().map(Box::new) {
-                    let (k, v) = *boxed;
-                    acc.insert(k, v, self.reduce);
-                }
-            } else {
-                for (k, v) in pairs {
-                    acc.insert(k, v, self.reduce);
+                FetchedData::Typed { data, .. } => {
+                    let pairs = *data
+                        .downcast::<Vec<(K, V)>>()
+                        .expect("typed shuffle block of unexpected type");
+                    if conf.boxed_records {
+                        for boxed in pairs.into_iter().map(Box::new) {
+                            let (k, v) = *boxed;
+                            acc.insert(k, v, self.reduce);
+                        }
+                    } else {
+                        for (k, v) in pairs {
+                            acc.insert(k, v, self.reduce);
+                        }
+                    }
                 }
             }
         }
@@ -585,7 +629,11 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
             let records = bucket.len() as u64;
             let data = if conf.serialize_shuffle {
                 let t0 = Instant::now();
-                let bytes = bucket.to_bytes();
+                // Dictionary-encode repeated keys (tag-0-only stream when
+                // the knob is off — same self-describing format either
+                // way, so the read side never consults the conf).
+                let (bytes, dict) = encode_pairs(&bucket, conf.dict_keys);
+                inner.disk.counters().record_dict(&dict);
                 inner.gc.allocated(bytes.len());
                 inner.metrics.add_ser(t0.elapsed());
                 inner

@@ -179,6 +179,27 @@ fn spill_opts(cmd: Command) -> Command {
         Some("lru"),
         "partition-cache eviction policy: lru|slru|gdsf|tinylfu[-lru|-slru|-gdsf]",
     )
+    .opt(
+        "compress",
+        Some("on"),
+        "block-compress spill runs and persisted shuffle blocks on the disk \
+         tier: on|off",
+    )
+    .opt(
+        "dict-keys",
+        Some("on"),
+        "dictionary-encode repeated keys in shuffle payloads and spill runs: \
+         on|off",
+    )
+}
+
+/// `on|off` (also `true|false`, `1|0`) → bool.
+fn parse_on_off(name: &str, raw: &str) -> Result<bool, String> {
+    match raw.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => Err(format!("bad --{name} {raw} (on|off)")),
+    }
 }
 
 /// `--cache-policy` → a [`PolicySpec`] (error text lists the menu).
@@ -207,6 +228,8 @@ fn apply_spill(mut spec: JobSpec, args: &Args) -> Result<JobSpec, String> {
         spec = spec.spill_dir(std::path::PathBuf::from(dir));
     }
     spec = spec.eviction_policy(parse_cache_policy(&args.get_str("cache-policy"))?);
+    spec = spec.compress(parse_on_off("compress", &args.get_str("compress"))?);
+    spec = spec.dict_keys(parse_on_off("dict-keys", &args.get_str("dict-keys"))?);
     Ok(spec)
 }
 
@@ -229,6 +252,12 @@ fn job_from_args(engine: Engine, args: &Args) -> Result<WordCountJob, String> {
     }
     if let Some(dir) = args.get("spill-dir") {
         job = job.spill_dir(std::path::PathBuf::from(dir));
+    }
+    if let Some(raw) = args.get("compress") {
+        job = job.compress(parse_on_off("compress", raw)?);
+    }
+    if let Some(raw) = args.get("dict-keys") {
+        job = job.dict_keys(parse_on_off("dict-keys", raw)?);
     }
     Ok(job)
 }

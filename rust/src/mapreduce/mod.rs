@@ -101,18 +101,27 @@ use crate::hash::HashKind;
 use crate::runtime::executor::{ExecMetrics, Executor};
 use crate::storage::{HeapSize, PolicySpec, StorageStats, TraceRecorder};
 use crate::trace::MetricSet;
-use crate::util::ser::{Decode, Encode};
+use crate::util::ser::{DataKey, Decode, Encode};
 use crate::util::stats::{fmt_bytes, fmt_rate, Stopwatch};
 
-/// Keys a generic job can shuffle: routable (`MapKey`), wire-encodable,
+/// Keys a generic job can shuffle: routable (`MapKey`), wire-encodable
+/// (`Encode`/`Decode` plus the dictionary/arena path via [`DataKey`]),
 /// JVM-cost-modelable, hashable for Spark partitioning, and totally
 /// ordered so finalizers can be deterministic.
 pub trait JobKey:
-    MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + std::fmt::Debug + 'static
+    MapKey + DataKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + std::fmt::Debug + 'static
 {
 }
 impl<T> JobKey for T where
-    T: MapKey + Encode + Decode + HeapSize + std::hash::Hash + Ord + std::fmt::Debug + 'static
+    T: MapKey
+        + DataKey
+        + Encode
+        + Decode
+        + HeapSize
+        + std::hash::Hash
+        + Ord
+        + std::fmt::Debug
+        + 'static
 {
 }
 
@@ -356,6 +365,15 @@ pub struct JobSpec {
     pub spill_threshold: Option<u64>,
     /// Directory spill files live under (`None` = the system temp dir).
     pub spill_dir: Option<PathBuf>,
+    /// Block-compress disk-tier payloads (spill runs, demoted cache
+    /// splits, persisted shuffle blocks) with the built-in LZ4-style
+    /// codec (the `--compress` knob). On by default; `false` is the
+    /// ablation that stores every block raw.
+    pub compress: bool,
+    /// Dictionary-encode repeated keys in spill runs and exchange
+    /// payloads (the `--dict-keys` knob). On by default; `false` writes
+    /// every key inline — the ablation axis of `benches/spill.rs`.
+    pub dict_keys: bool,
     /// Eviction policy of every partition cache built from this spec
     /// (the `--cache-policy` knob; see [`crate::storage::policy`]).
     /// `None` = whatever the engine conf carries (LRU by default).
@@ -386,6 +404,8 @@ impl JobSpec {
             relation_gens: Vec::new(),
             spill_threshold: None,
             spill_dir: None,
+            compress: true,
+            dict_keys: true,
             eviction_policy: None,
             trace: None,
         }
@@ -450,6 +470,19 @@ impl JobSpec {
     /// Where spill files live (`None` = system temp dir).
     pub fn spill_dir(mut self, dir: PathBuf) -> Self {
         self.spill_dir = Some(dir);
+        self
+    }
+
+    /// Toggle disk-tier block compression (see [`Self::compress`]).
+    pub fn compress(mut self, on: bool) -> Self {
+        self.compress = on;
+        self
+    }
+
+    /// Toggle dictionary key encoding on the spill/exchange data path
+    /// (see [`Self::dict_keys`]).
+    pub fn dict_keys(mut self, on: bool) -> Self {
+        self.dict_keys = on;
         self
     }
 
@@ -629,6 +662,7 @@ impl JobSpec {
             records_in,
             records_out: run.entries.len() as u64,
             shuffle_bytes: run.shuffle_bytes,
+            dict: run.storage.dict_stats(),
             wall_secs: run.wall_secs,
         }];
         JobReport {
@@ -662,6 +696,8 @@ impl JobSpec {
             cache_policy: self.cache_policy,
             max_job_reruns: self.max_job_reruns,
             spill_dir: self.spill_dir.clone(),
+            compress: self.compress,
+            dict_keys: self.dict_keys,
             eviction_policy: self.eviction_policy.unwrap_or_default(),
         }
     }
@@ -691,6 +727,10 @@ impl JobSpec {
         if let Some(policy) = self.eviction_policy {
             conf.eviction_policy = policy;
         }
+        // Data-path knobs are plain bools (default on), so they always
+        // flow from the job spec — the CLI/bench ablations set them here.
+        conf.compress = self.compress;
+        conf.dict_keys = self.dict_keys;
         match &self.cache {
             // Share the job-spec cache so persisted partitions survive
             // across the per-round contexts of an iterative run.

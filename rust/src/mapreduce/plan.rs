@@ -46,6 +46,7 @@ use crate::engines::Engine;
 use crate::runtime::executor::ExecMetrics;
 use crate::storage::StorageStats;
 use crate::trace::{self, MetricSet, SpanCat};
+use crate::util::ser::DictStats;
 use crate::util::stats::Stopwatch;
 
 use super::{
@@ -152,6 +153,12 @@ pub struct StagePlan {
     /// in-flight bytes sort-and-spill runs to the disk tier and merge
     /// externally. `None` = unbounded in-memory exchange.
     pub spill_threshold: Option<u64>,
+    /// Disk-tier block compression, from [`JobSpec::compress`] — whether
+    /// payloads this stage spills/persists are LZ4-block-compressed.
+    pub compress: bool,
+    /// Dictionary key encoding on the stage's spill runs and exchange
+    /// payloads, from [`JobSpec::dict_keys`].
+    pub dict_keys: bool,
 }
 
 impl StagePlan {
@@ -172,6 +179,8 @@ impl StagePlan {
                 })
                 .collect(),
             spill_threshold: None,
+            compress: true,
+            dict_keys: true,
         }
     }
 
@@ -240,6 +249,11 @@ impl StageGraph {
                     crate::util::stats::fmt_bytes(bytes)
                 ));
             }
+            out.push_str(&format!(
+                "    datapath: compress={} dict-keys={}\n",
+                if s.compress { "lz4" } else { "off" },
+                if s.dict_keys { "on" } else { "off" },
+            ));
         }
         out
     }
@@ -283,6 +297,8 @@ impl JobSpec {
                 exchange: plan_exchange(w.needs_shuffle(), self.force_shuffle),
                 inputs: external_inputs(inputs),
                 spill_threshold: self.spill_threshold,
+                compress: self.compress,
+                dict_keys: self.dict_keys,
             }],
         }
     }
@@ -337,6 +353,8 @@ impl JobSpec {
                     exchange: plan_exchange(shape.needs_shuffle, self.force_shuffle),
                     inputs: ins,
                     spill_threshold: self.spill_threshold,
+                    compress: self.compress,
+                    dict_keys: self.dict_keys,
                 }
             })
             .collect();
@@ -356,6 +374,10 @@ pub struct StageStats {
     /// Reduced rows the stage produced (after per-shard finalize).
     pub records_out: u64,
     pub shuffle_bytes: u64,
+    /// Dictionary key-encoding activity attributed to this stage (spill
+    /// runs + exchange wire). All zeros with `--dict-keys off`, for
+    /// integer-keyed workloads, and on paths that never serialize.
+    pub dict: DictStats,
     pub wall_secs: f64,
 }
 
@@ -623,6 +645,7 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
             records_in,
             records_out: outcome.rows,
             shuffle_bytes: outcome.shuffle_bytes,
+            dict: outcome.storage.dict_stats(),
             wall_secs: outcome.wall_secs,
         });
         detail.merge_prefixed(&format!("stage{i}"), &outcome.detail);

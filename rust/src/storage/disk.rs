@@ -10,10 +10,30 @@
 //! drop (generation-aware cleanup for long-lived tiers goes through
 //! [`BlockStore::delete_generations_below`]).
 //!
-//! File layout: `[payload_len: u64 LE][fnv1a checksum: u64 LE][payload]`.
-//! Full reads verify the checksum; range reads (the external-merge
-//! cursors) accumulate it incrementally and verify at end-of-run against
-//! [`BlockStore::meta`].
+//! # On-disk format
+//!
+//! Every block file starts with a 17-byte header:
+//! `[payload_len: u64 LE][fnv1a checksum: u64 LE][codec: u8]`, where both
+//! length and checksum describe the **logical** (uncompressed) payload.
+//! The payload region depends on the codec byte:
+//!
+//! * Codec 0 (raw): the logical payload verbatim. Chosen when the tier's
+//!   compression knob is off, when the payload is too small to be worth
+//!   framing, or when compression failed to shrink the block overall.
+//! * Codec 1 (framed LZ4): `[frame_count: u32 LE]` followed by a
+//!   `(raw_len: u32 LE, comp_len: u32 LE)` table entry per frame, then
+//!   the frame bodies back to back. The logical payload is split into
+//!   fixed [`RAW_FRAME`]-byte frames (last one partial) compressed
+//!   independently with [`compress`], so [`BlockStore::read_range`] can
+//!   serve any logical offset by decoding a single frame. A frame whose
+//!   compressed form would expand is stored raw, signalled by
+//!   `comp_len == raw_len`.
+//!
+//! Offsets in `read_range` and [`BlockMeta`] always address the
+//! *logical* payload; `bytes_stored` and the disk byte counters report
+//! *stored* (post-compression) bytes. Full reads verify the logical
+//! checksum; range reads (the external-merge cursors) accumulate it
+//! incrementally and verify at end-of-run against [`BlockStore::meta`].
 
 use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -23,19 +43,50 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cache::CacheKey;
+use crate::trace::{self, SpanCat};
 
-use super::{checksum, BlockMeta, BlockStore, StorageCounters, CHECKSUM_SEED};
+use super::{checksum, compress, BlockMeta, BlockStore, StorageCounters, CHECKSUM_SEED};
 
-/// Bytes of on-disk header before the payload.
-const HEADER_LEN: u64 = 16;
+/// Bytes of on-disk header before the payload region.
+const HEADER_LEN: u64 = 17;
+
+/// Codec byte: payload region is the logical payload verbatim.
+const CODEC_RAW: u8 = 0;
+
+/// Codec byte: payload region is a frame table plus LZ4-style frames.
+const CODEC_LZ4: u8 = 1;
+
+/// Raw bytes per compression frame. Matches the spill cursor's read
+/// chunk, so sequential run reads decode each frame exactly once.
+const RAW_FRAME: usize = 64 << 10;
+
+/// Bytes per frame-table entry: `(raw_len: u32, comp_len: u32)`.
+const FRAME_ENTRY: usize = 8;
+
+/// Blocks smaller than this skip compression outright — the frame table
+/// alone would eat any plausible win.
+const MIN_COMPRESS_LEN: usize = 64;
 
 /// Process-wide uniquifier for tier directories (two tiers in one
 /// process — a job's spill tier and a shared cache's — must not share a
 /// directory even under the same base path).
 static NEXT_DIR_ID: AtomicU64 = AtomicU64::new(0);
 
+/// Index entry: logical metadata plus the stored-form description. The
+/// frame table is kept in memory so range reads seek straight to the
+/// right frame without re-reading the on-disk table.
+#[derive(Clone)]
+struct StoredBlock {
+    meta: BlockMeta,
+    /// Payload-region bytes on disk (excluding the header).
+    stored_len: u64,
+    codec: u8,
+    /// `(raw_len, comp_len)` per frame; empty for [`CODEC_RAW`].
+    frames: Arc<Vec<(u32, u32)>>,
+}
+
 struct Index {
-    blocks: HashMap<CacheKey, BlockMeta>,
+    blocks: HashMap<CacheKey, StoredBlock>,
     bytes: u64,
     /// Created lazily on first write; `None` until then.
     dir: Option<PathBuf>,
@@ -47,6 +98,8 @@ pub struct DiskTier {
     /// Base directory the tier's own subdirectory is created under
     /// (`None` = the system temp dir) — the `--spill-dir` knob.
     base: Option<PathBuf>,
+    /// Attempt framed compression on writes (the `--compress` knob).
+    compress: bool,
     index: Mutex<Index>,
     counters: Arc<StorageCounters>,
 }
@@ -72,9 +125,18 @@ impl DiskTier {
     pub fn with_counters(base: Option<PathBuf>, counters: Arc<StorageCounters>) -> Self {
         Self {
             base,
+            compress: true,
             index: Mutex::new(Index { blocks: HashMap::new(), bytes: 0, dir: None }),
             counters,
         }
+    }
+
+    /// Toggle block compression (on by default; `--compress off` is the
+    /// ablation arm). Existing blocks keep whatever codec they were
+    /// written with — the codec byte travels with each block.
+    pub fn compression(mut self, on: bool) -> Self {
+        self.compress = on;
+        self
     }
 
     /// The counters cell this tier (and its co-clients) record into.
@@ -129,15 +191,88 @@ impl DiskTier {
         }
         index.bytes = 0;
     }
+
+    /// Compress `payload` into frames. Returns `(frames, body)`, or
+    /// `None` when framing would not shrink the block overall.
+    fn encode_frames(&self, payload: &[u8]) -> Option<(Vec<(u32, u32)>, Vec<u8>)> {
+        if !self.compress || payload.len() < MIN_COMPRESS_LEN {
+            return None;
+        }
+        let _span = trace::span_arg(SpanCat::Compress, "block-compress", payload.len() as u64);
+        let t0 = Instant::now();
+        let mut frames: Vec<(u32, u32)> = Vec::with_capacity(payload.len().div_ceil(RAW_FRAME));
+        let mut body: Vec<u8> = Vec::with_capacity(payload.len() / 2);
+        for chunk in payload.chunks(RAW_FRAME) {
+            let before = body.len();
+            let n = compress::compress(chunk, &mut body);
+            if n >= chunk.len() {
+                // An incompressible frame is stored raw (comp == raw).
+                body.truncate(before);
+                body.extend_from_slice(chunk);
+                frames.push((chunk.len() as u32, chunk.len() as u32));
+            } else {
+                frames.push((chunk.len() as u32, n as u32));
+            }
+        }
+        let stored = 4 + FRAME_ENTRY * frames.len() + body.len();
+        if stored < payload.len() {
+            self.counters.record_compress(payload.len() as u64, stored as u64, t0.elapsed());
+            Some((frames, body))
+        } else {
+            // Record the attempt (ratio 1.0) and fall back to raw.
+            self.counters.record_compress(
+                payload.len() as u64,
+                payload.len() as u64,
+                t0.elapsed(),
+            );
+            None
+        }
+    }
+
+    /// Decompress one frame read off disk, mapping corruption to the
+    /// tier's graceful `InvalidData` error.
+    fn decode_frame(
+        &self,
+        key: &CacheKey,
+        buf: Vec<u8>,
+        raw_len: u32,
+        comp_len: u32,
+    ) -> std::io::Result<Vec<u8>> {
+        if comp_len == raw_len {
+            return Ok(buf);
+        }
+        let _span = trace::span_arg(SpanCat::Decompress, "frame-decompress", raw_len as u64);
+        let t0 = Instant::now();
+        match compress::decompress(&buf, raw_len as usize) {
+            Ok(frame) => {
+                self.counters.record_decompress(t0.elapsed());
+                Ok(frame)
+            }
+            Err(_) => {
+                self.counters.record_checksum_failure();
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("block {key:?} has a corrupt compressed frame"),
+                ))
+            }
+        }
+    }
 }
 
 impl BlockStore for DiskTier {
     fn write(&self, key: CacheKey, payload: &[u8]) -> std::io::Result<u64> {
-        let t0 = Instant::now();
         let meta = BlockMeta {
             payload_len: payload.len() as u64,
             checksum: checksum(CHECKSUM_SEED, payload),
         };
+        let encoded = self.encode_frames(payload);
+        let (codec, stored_len) = match &encoded {
+            Some((frames, body)) => {
+                (CODEC_LZ4, (4 + FRAME_ENTRY * frames.len() + body.len()) as u64)
+            }
+            None => (CODEC_RAW, payload.len() as u64),
+        };
+        let t0 = Instant::now();
         let path = {
             let mut index = self.index.lock().unwrap();
             let dir = Self::ensure_dir(&mut index, &self.base)?;
@@ -146,28 +281,45 @@ impl BlockStore for DiskTier {
         let mut f = std::fs::File::create(&path)?;
         f.write_all(&meta.payload_len.to_le_bytes())?;
         f.write_all(&meta.checksum.to_le_bytes())?;
-        f.write_all(payload)?;
-        f.flush()?;
-        {
-            let mut index = self.index.lock().unwrap();
-            if let Some(old) = index.blocks.insert(key, meta) {
-                index.bytes -= old.payload_len;
+        f.write_all(&[codec])?;
+        match &encoded {
+            Some((frames, body)) => {
+                let mut table = Vec::with_capacity(4 + FRAME_ENTRY * frames.len());
+                table.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+                for &(raw, comp) in frames {
+                    table.extend_from_slice(&raw.to_le_bytes());
+                    table.extend_from_slice(&comp.to_le_bytes());
+                }
+                f.write_all(&table)?;
+                f.write_all(body)?;
             }
-            index.bytes += meta.payload_len;
+            None => f.write_all(payload)?,
         }
-        self.counters.record_disk_write(payload.len() as u64, t0.elapsed());
+        f.flush()?;
+        let frames = encoded.map(|(frames, _)| frames).unwrap_or_default();
+        let bytes_now = {
+            let mut index = self.index.lock().unwrap();
+            let block = StoredBlock { meta, stored_len, codec, frames: Arc::new(frames) };
+            if let Some(old) = index.blocks.insert(key, block) {
+                index.bytes -= old.stored_len;
+            }
+            index.bytes += stored_len;
+            index.bytes
+        };
+        self.counters.record_disk_write(stored_len, t0.elapsed());
+        trace::counter("disk stored bytes", bytes_now);
         Ok(meta.payload_len)
     }
 
     fn read(&self, key: &CacheKey) -> std::io::Result<Option<Vec<u8>>> {
         let t0 = Instant::now();
-        let (path, meta) = {
+        let (path, block) = {
             let index = self.index.lock().unwrap();
-            let Some(meta) = index.blocks.get(key).copied() else {
+            let Some(block) = index.blocks.get(key).cloned() else {
                 return Ok(None);
             };
             let dir = index.dir.clone().expect("indexed block without a tier dir");
-            (dir.join(Self::file_name(key)), meta)
+            (dir.join(Self::file_name(key)), block)
         };
         let mut f = std::fs::File::open(&path)?;
         let mut header = [0u8; HEADER_LEN as usize];
@@ -178,17 +330,37 @@ impl BlockStore for DiskTier {
         // in-memory index *before* sizing any allocation from it — a
         // corrupt length must surface as the graceful InvalidData error,
         // not an OOM.
-        if stored_len != meta.payload_len || stored_sum != meta.checksum {
+        if stored_len != block.meta.payload_len
+            || stored_sum != block.meta.checksum
+            || header[16] != block.codec
+        {
             self.counters.record_checksum_failure();
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!("block {key:?} has a corrupt header"),
             ));
         }
-        let mut payload = Vec::with_capacity(meta.payload_len as usize);
-        f.read_to_end(&mut payload)?;
-        let ok = payload.len() as u64 == meta.payload_len
-            && checksum(CHECKSUM_SEED, &payload) == meta.checksum;
+        let payload = if block.codec == CODEC_LZ4 {
+            // The in-memory frame table is the trusted copy; skip the
+            // on-disk one and stream the frame bodies.
+            let table = (4 + FRAME_ENTRY * block.frames.len()) as u64;
+            f.seek(SeekFrom::Start(HEADER_LEN + table))?;
+            let mut payload = Vec::with_capacity(block.meta.payload_len as usize);
+            let mut buf = Vec::new();
+            for &(raw, comp) in block.frames.iter() {
+                buf.resize(comp as usize, 0);
+                f.read_exact(&mut buf)?;
+                let frame = self.decode_frame(key, std::mem::take(&mut buf), raw, comp)?;
+                payload.extend_from_slice(&frame);
+            }
+            payload
+        } else {
+            let mut payload = Vec::with_capacity(block.meta.payload_len as usize);
+            f.read_to_end(&mut payload)?;
+            payload
+        };
+        let ok = payload.len() as u64 == block.meta.payload_len
+            && checksum(CHECKSUM_SEED, &payload) == block.meta.checksum;
         if !ok {
             self.counters.record_checksum_failure();
             return Err(std::io::Error::new(
@@ -196,7 +368,7 @@ impl BlockStore for DiskTier {
                 format!("block {key:?} failed checksum verification"),
             ));
         }
-        self.counters.record_disk_read(payload.len() as u64, t0.elapsed());
+        self.counters.record_disk_read(block.stored_len, t0.elapsed());
         Ok(Some(payload))
     }
 
@@ -207,35 +379,54 @@ impl BlockStore for DiskTier {
         max_len: usize,
     ) -> std::io::Result<Option<Vec<u8>>> {
         let t0 = Instant::now();
-        let (path, meta) = {
+        let (path, block) = {
             let index = self.index.lock().unwrap();
-            let Some(meta) = index.blocks.get(key).copied() else {
+            let Some(block) = index.blocks.get(key).cloned() else {
                 return Ok(None);
             };
             let dir = index.dir.clone().expect("indexed block without a tier dir");
-            (dir.join(Self::file_name(key)), meta)
+            (dir.join(Self::file_name(key)), block)
         };
-        if offset >= meta.payload_len {
+        if offset >= block.meta.payload_len {
             return Ok(Some(Vec::new()));
         }
-        let want = max_len.min((meta.payload_len - offset) as usize);
-        let mut f = std::fs::File::open(&path)?;
-        f.seek(SeekFrom::Start(HEADER_LEN + offset))?;
-        let mut buf = vec![0u8; want];
-        f.read_exact(&mut buf)?;
-        self.counters.record_disk_read(want as u64, t0.elapsed());
-        Ok(Some(buf))
+        if block.codec == CODEC_LZ4 {
+            // One frame covers any logical offset; a read capped at the
+            // frame boundary is a legal short return (the cursor's
+            // contract only requires non-empty progress).
+            let frame_idx = (offset / RAW_FRAME as u64) as usize;
+            let (raw, comp) = block.frames[frame_idx];
+            let table = (4 + FRAME_ENTRY * block.frames.len()) as u64;
+            let skip: u64 = block.frames[..frame_idx].iter().map(|&(_, c)| c as u64).sum();
+            let mut f = std::fs::File::open(&path)?;
+            f.seek(SeekFrom::Start(HEADER_LEN + table + skip))?;
+            let mut buf = vec![0u8; comp as usize];
+            f.read_exact(&mut buf)?;
+            let frame = self.decode_frame(key, buf, raw, comp)?;
+            let inner = (offset - frame_idx as u64 * RAW_FRAME as u64) as usize;
+            let end = frame.len().min(inner + max_len);
+            self.counters.record_disk_read(comp as u64, t0.elapsed());
+            Ok(Some(frame[inner..end].to_vec()))
+        } else {
+            let want = max_len.min((block.meta.payload_len - offset) as usize);
+            let mut f = std::fs::File::open(&path)?;
+            f.seek(SeekFrom::Start(HEADER_LEN + offset))?;
+            let mut buf = vec![0u8; want];
+            f.read_exact(&mut buf)?;
+            self.counters.record_disk_read(want as u64, t0.elapsed());
+            Ok(Some(buf))
+        }
     }
 
     fn meta(&self, key: &CacheKey) -> Option<BlockMeta> {
-        self.index.lock().unwrap().blocks.get(key).copied()
+        self.index.lock().unwrap().blocks.get(key).map(|b| b.meta)
     }
 
     fn delete(&self, key: &CacheKey) -> bool {
         let mut index = self.index.lock().unwrap();
         match index.blocks.remove(key) {
-            Some(meta) => {
-                index.bytes -= meta.payload_len;
+            Some(block) => {
+                index.bytes -= block.stored_len;
                 Self::remove_file(&index, key);
                 true
             }
@@ -252,8 +443,8 @@ impl BlockStore for DiskTier {
             .copied()
             .collect();
         for key in &victims {
-            let meta = index.blocks.remove(key).unwrap();
-            index.bytes -= meta.payload_len;
+            let block = index.blocks.remove(key).unwrap();
+            index.bytes -= block.stored_len;
             Self::remove_file(&index, key);
         }
         victims.len()
@@ -292,6 +483,8 @@ mod tests {
     fn write_read_roundtrip() {
         let tier = DiskTier::new(None);
         assert!(tier.dir().is_none(), "directory is lazy");
+        // Sequential bytes have no 4-byte repeats, so compression cannot
+        // shrink the block and it stays codec-raw: stored == logical.
         let payload: Vec<u8> = (0..=255).collect();
         assert_eq!(tier.write(key(0), &payload).unwrap(), 256);
         assert!(tier.dir().is_some());
@@ -393,5 +586,122 @@ mod tests {
             assert!(dir.exists());
         }
         assert!(!dir.exists());
+    }
+
+    /// A repetitive multi-frame payload — the shape of a Zipf spill run.
+    fn zipfish(len: usize) -> Vec<u8> {
+        let mut data = Vec::with_capacity(len + 32);
+        let words: [&[u8]; 6] = [b"the ", b"of ", b"and ", b"spark ", b"mpi ", b"wordcount "];
+        let mut i = 0usize;
+        while data.len() < len {
+            data.extend_from_slice(words[[0, 0, 1, 0, 2, 3, 0, 4, 1, 5][i % 10]]);
+            i += 1;
+        }
+        data.truncate(len);
+        data
+    }
+
+    #[test]
+    fn compressed_block_shrinks_on_disk() {
+        let tier = DiskTier::new(None);
+        let payload = zipfish(3 * RAW_FRAME + 1234); // four frames
+        let logical = payload.len() as u64;
+        assert_eq!(tier.write(key(6), &payload).unwrap(), logical, "write returns logical len");
+        assert!(
+            tier.bytes_stored() * 2 < logical,
+            "expected >2x on-disk shrink, stored {} of {logical}",
+            tier.bytes_stored()
+        );
+        assert_eq!(tier.read(&key(6)).unwrap().unwrap(), payload);
+        let meta = tier.meta(&key(6)).unwrap();
+        assert_eq!(meta.payload_len, logical, "meta stays logical");
+        assert_eq!(meta.checksum, checksum(CHECKSUM_SEED, &payload));
+        let s = tier.counters().snapshot();
+        assert_eq!(s.disk_bytes_written, tier.bytes_stored(), "counters track stored bytes");
+        assert_eq!(s.compress_raw_bytes, logical);
+        assert_eq!(s.compress_stored_bytes, tier.bytes_stored());
+        assert!(s.decompress_secs >= 0.0);
+    }
+
+    #[test]
+    fn compressed_range_reads_match_logical_offsets() {
+        let tier = DiskTier::new(None);
+        let payload = zipfish(2 * RAW_FRAME + 999);
+        tier.write(key(7), &payload).unwrap();
+        // Stream the whole block in odd-sized chunks, verifying the
+        // incremental checksum exactly like the spill cursor does.
+        let mut got = Vec::new();
+        let mut offset = 0u64;
+        let mut sum = CHECKSUM_SEED;
+        loop {
+            let chunk = tier.read_range(&key(7), offset, 8192).unwrap().unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            sum = checksum(sum, &chunk);
+            offset += chunk.len() as u64;
+            got.extend_from_slice(&chunk);
+        }
+        assert_eq!(got, payload);
+        assert_eq!(sum, tier.meta(&key(7)).unwrap().checksum);
+        // A read straddling a frame boundary is capped at the frame end:
+        // short but non-empty.
+        let tail = tier.read_range(&key(7), RAW_FRAME as u64 - 10, 64).unwrap().unwrap();
+        assert_eq!(tail.len(), 10);
+        assert_eq!(tail[..], payload[RAW_FRAME - 10..RAW_FRAME]);
+    }
+
+    #[test]
+    fn compression_off_stores_raw() {
+        let tier = DiskTier::new(None).compression(false);
+        let payload = zipfish(RAW_FRAME);
+        tier.write(key(8), &payload).unwrap();
+        assert_eq!(tier.bytes_stored(), payload.len() as u64);
+        assert_eq!(tier.read(&key(8)).unwrap().unwrap(), payload);
+        let s = tier.counters().snapshot();
+        assert_eq!(s.compress_raw_bytes, 0, "no compression attempt when disabled");
+        assert_eq!(s.disk_bytes_written, payload.len() as u64);
+    }
+
+    #[test]
+    fn tiny_blocks_skip_compression() {
+        let tier = DiskTier::new(None);
+        tier.write(key(10), b"aaaaaaaaaaaa").unwrap();
+        assert_eq!(tier.bytes_stored(), 12);
+        assert_eq!(tier.counters().snapshot().compress_raw_bytes, 0);
+    }
+
+    #[test]
+    fn corrupt_compressed_frame_is_detected() {
+        let tier = DiskTier::new(None);
+        let payload = zipfish(RAW_FRAME / 2);
+        tier.write(key(11), &payload).unwrap();
+        assert!(tier.bytes_stored() < payload.len() as u64, "block must actually compress");
+        // Flip a byte inside the compressed frame body. Depending on
+        // where it lands this either breaks the LZ4 stream (frame error)
+        // or survives decode and trips the logical checksum — both must
+        // surface as an error plus a counter tick, never a panic.
+        let path = tier.dir().unwrap().join(DiskTier::file_name(&key(11)));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = (HEADER_LEN as usize + 12 + bytes.len()) / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(tier.read(&key(11)).is_err());
+        assert_eq!(tier.counters().snapshot().checksum_failures, 1);
+    }
+
+    #[test]
+    fn overwrite_mixed_codecs_keeps_accounting() {
+        let tier = DiskTier::new(None);
+        let compressible = zipfish(RAW_FRAME);
+        tier.write(key(12), &compressible).unwrap();
+        let stored = tier.bytes_stored();
+        assert!(stored < compressible.len() as u64);
+        // Overwrite with a tiny raw block: accounting must subtract the
+        // *stored* size of the old codec-1 block, not its logical size.
+        tier.write(key(12), &[7u8; 20]).unwrap();
+        assert_eq!(tier.bytes_stored(), 20);
+        assert!(tier.delete(&key(12)));
+        assert_eq!(tier.bytes_stored(), 0);
     }
 }

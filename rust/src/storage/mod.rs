@@ -37,9 +37,30 @@
 //!   ([`LoserTree`]), combining equal keys. Output is bit-identical to
 //!   the all-in-memory fold for any associative+commutative combiner, at
 //!   any budget down to zero.
+//! * [`compress`] — zero-dep LZ4-style block compression, applied
+//!   transparently by [`DiskTier`] on write/read (64 KiB frames so
+//!   `read_range` streaming still works; `--compress off` = ablation).
 //! * [`StorageStats`] / [`StorageCounters`] — spilled/demoted/promoted
-//!   bytes and disk read/write wall, threaded into
+//!   bytes, disk read/write wall, compression and key-dictionary
+//!   savings, threaded into
 //!   [`JobReport`](crate::mapreduce::JobReport) by both engines.
+//!
+//! # Logical vs stored bytes
+//!
+//! Compression makes "bytes" ambiguous, so every stat picks one side and
+//! says so:
+//!
+//! * **Logical bytes** — the encoded payload *before* compression: what
+//!   [`BlockStore::write`] returns, what [`BlockMeta::payload_len`] and
+//!   the block checksum describe, what `spilled_bytes` /
+//!   `shuffle_bytes` count, and the offset space `read_range` addresses.
+//!   Shuffle counters stay logical so combine/serialization comparisons
+//!   (the paper's subject) are not confounded by the codec.
+//! * **Stored bytes** — what actually hits the file system *after*
+//!   compression: what [`BlockStore::bytes_stored`],
+//!   `disk_bytes_written`/`disk_bytes_read`, and therefore tier budget
+//!   enforcement ([`TieredStore`]'s disk footprint) count.
+//!   `compress_raw_bytes` vs `compress_stored_bytes` carries the ratio.
 //!
 //! # Namespace map
 //!
@@ -55,6 +76,7 @@
 //! | `NS_SHUFFLE_BLOCKS + shuffle_id` | persisted shuffle blocks |
 //! | `NS_SPILL_BASE ..` | spill-run namespaces ([`fresh_spill_namespace`]) |
 
+pub mod compress;
 mod disk;
 mod memory;
 pub mod policy;
@@ -157,7 +179,9 @@ pub struct BlockMeta {
 /// in-memory or failure-injecting doubles.
 pub trait BlockStore: Send + Sync {
     /// Store a block, replacing any previous payload under `key`.
-    /// Returns the payload length written.
+    /// Returns the **logical** payload length written (what `read` will
+    /// hand back — implementations may store fewer bytes via
+    /// compression; that footprint shows up in [`bytes_stored`](BlockStore::bytes_stored)).
     fn write(&self, key: CacheKey, payload: &[u8]) -> std::io::Result<u64>;
 
     /// Read a whole block back, verifying its checksum (a mismatch is an
@@ -194,7 +218,9 @@ pub trait BlockStore: Send + Sync {
         self.len() == 0
     }
 
-    /// Total payload bytes currently stored.
+    /// Total **stored** bytes currently on disk (post-compression; the
+    /// number tier budgets enforce against). Equals the summed logical
+    /// payload lengths only for uncompressed implementations.
     fn bytes_stored(&self) -> u64;
 }
 
@@ -215,6 +241,14 @@ pub struct StorageCounters {
     disk_write_ns: AtomicU64,
     disk_read_ns: AtomicU64,
     checksum_failures: AtomicU64,
+    compress_raw_bytes: AtomicU64,
+    compress_stored_bytes: AtomicU64,
+    compress_ns: AtomicU64,
+    decompress_ns: AtomicU64,
+    dict_unique: AtomicU64,
+    dict_refs: AtomicU64,
+    dict_key_raw_bytes: AtomicU64,
+    dict_key_enc_bytes: AtomicU64,
 }
 
 impl StorageCounters {
@@ -251,6 +285,27 @@ impl StorageCounters {
         self.checksum_failures.fetch_add(1, Relaxed);
     }
 
+    /// One block compressed on write: `raw` logical bytes became
+    /// `stored` on-disk bytes in `wall`.
+    pub fn record_compress(&self, raw: u64, stored: u64, wall: std::time::Duration) {
+        self.compress_raw_bytes.fetch_add(raw, Relaxed);
+        self.compress_stored_bytes.fetch_add(stored, Relaxed);
+        self.compress_ns.fetch_add(wall.as_nanos() as u64, Relaxed);
+    }
+
+    /// Wall spent decompressing frames on the read path.
+    pub fn record_decompress(&self, wall: std::time::Duration) {
+        self.decompress_ns.fetch_add(wall.as_nanos() as u64, Relaxed);
+    }
+
+    /// Fold one run's/payload's key-dictionary savings in.
+    pub fn record_dict(&self, d: &crate::util::ser::DictStats) {
+        self.dict_unique.fetch_add(d.unique, Relaxed);
+        self.dict_refs.fetch_add(d.refs, Relaxed);
+        self.dict_key_raw_bytes.fetch_add(d.key_raw_bytes, Relaxed);
+        self.dict_key_enc_bytes.fetch_add(d.key_enc_bytes, Relaxed);
+    }
+
     pub fn snapshot(&self) -> StorageStats {
         StorageStats {
             spilled_bytes: self.spilled_bytes.load(Relaxed),
@@ -265,6 +320,14 @@ impl StorageCounters {
             disk_write_secs: self.disk_write_ns.load(Relaxed) as f64 / 1e9,
             disk_read_secs: self.disk_read_ns.load(Relaxed) as f64 / 1e9,
             checksum_failures: self.checksum_failures.load(Relaxed),
+            compress_raw_bytes: self.compress_raw_bytes.load(Relaxed),
+            compress_stored_bytes: self.compress_stored_bytes.load(Relaxed),
+            compress_secs: self.compress_ns.load(Relaxed) as f64 / 1e9,
+            decompress_secs: self.decompress_ns.load(Relaxed) as f64 / 1e9,
+            dict_unique: self.dict_unique.load(Relaxed),
+            dict_refs: self.dict_refs.load(Relaxed),
+            dict_key_raw_bytes: self.dict_key_raw_bytes.load(Relaxed),
+            dict_key_enc_bytes: self.dict_key_enc_bytes.load(Relaxed),
         }
     }
 }
@@ -292,14 +355,33 @@ pub struct StorageStats {
     /// not promotions).
     pub promoted_bytes: u64,
     pub promotions: u64,
-    /// Raw disk-tier traffic (spill runs + demotions + persisted shuffle
-    /// blocks all land here).
+    /// Disk-tier traffic in **stored** (post-compression) bytes — spill
+    /// runs + demotions + persisted shuffle blocks all land here; this
+    /// is what actually hit the file system (see the module docs on
+    /// logical vs stored bytes).
     pub disk_bytes_written: u64,
     pub disk_bytes_read: u64,
-    /// Wall spent in disk writes / reads.
+    /// Wall spent in disk writes / reads (excluding codec wall, which is
+    /// `compress_secs`/`decompress_secs`).
     pub disk_write_secs: f64,
     pub disk_read_secs: f64,
     pub checksum_failures: u64,
+    /// Logical bytes offered to the block compressor on write.
+    pub compress_raw_bytes: u64,
+    /// What those bytes became on disk (`stored/raw` = the ratio;
+    /// equals `raw` when `--compress off` or a block stayed raw).
+    pub compress_stored_bytes: u64,
+    /// Wall spent compressing / decompressing blocks.
+    pub compress_secs: f64,
+    pub decompress_secs: f64,
+    /// Distinct keys written inline by shuffle/spill key dictionaries.
+    pub dict_unique: u64,
+    /// Key occurrences written as dictionary back-references.
+    pub dict_refs: u64,
+    /// Key bytes as plain encoding would have written (logical) vs as
+    /// actually written through the dictionary.
+    pub dict_key_raw_bytes: u64,
+    pub dict_key_enc_bytes: u64,
 }
 
 impl StorageStats {
@@ -315,6 +397,33 @@ impl StorageStats {
             && self.disk_bytes_written == 0
             && self.disk_bytes_read == 0
             && self.checksum_failures == 0
+            && self.compress_raw_bytes == 0
+            && self.compress_stored_bytes == 0
+            && self.dict_unique == 0
+            && self.dict_refs == 0
+            && self.dict_key_raw_bytes == 0
+            && self.dict_key_enc_bytes == 0
+    }
+
+    /// Fold an exchange payload dictionary's savings in (the Blaze
+    /// in-memory shuffle has no counters cell; its per-node
+    /// [`DictStats`](crate::util::ser::DictStats) merge here).
+    pub fn add_dict(&mut self, d: &crate::util::ser::DictStats) {
+        self.dict_unique += d.unique;
+        self.dict_refs += d.refs;
+        self.dict_key_raw_bytes += d.key_raw_bytes;
+        self.dict_key_enc_bytes += d.key_enc_bytes;
+    }
+
+    /// The dictionary slice of these stats as a [`DictStats`] — what the
+    /// per-stage report rows carry.
+    pub fn dict_stats(&self) -> crate::util::ser::DictStats {
+        crate::util::ser::DictStats {
+            unique: self.dict_unique,
+            refs: self.dict_refs,
+            key_raw_bytes: self.dict_key_raw_bytes,
+            key_enc_bytes: self.dict_key_enc_bytes,
+        }
     }
 
     /// Field-wise sum — aggregate stats from several storage domains (a
@@ -334,6 +443,14 @@ impl StorageStats {
             disk_write_secs: self.disk_write_secs + other.disk_write_secs,
             disk_read_secs: self.disk_read_secs + other.disk_read_secs,
             checksum_failures: self.checksum_failures + other.checksum_failures,
+            compress_raw_bytes: self.compress_raw_bytes + other.compress_raw_bytes,
+            compress_stored_bytes: self.compress_stored_bytes + other.compress_stored_bytes,
+            compress_secs: self.compress_secs + other.compress_secs,
+            decompress_secs: self.decompress_secs + other.decompress_secs,
+            dict_unique: self.dict_unique + other.dict_unique,
+            dict_refs: self.dict_refs + other.dict_refs,
+            dict_key_raw_bytes: self.dict_key_raw_bytes + other.dict_key_raw_bytes,
+            dict_key_enc_bytes: self.dict_key_enc_bytes + other.dict_key_enc_bytes,
         }
     }
 
@@ -353,6 +470,14 @@ impl StorageStats {
             disk_write_secs: self.disk_write_secs - earlier.disk_write_secs,
             disk_read_secs: self.disk_read_secs - earlier.disk_read_secs,
             checksum_failures: self.checksum_failures - earlier.checksum_failures,
+            compress_raw_bytes: self.compress_raw_bytes - earlier.compress_raw_bytes,
+            compress_stored_bytes: self.compress_stored_bytes - earlier.compress_stored_bytes,
+            compress_secs: self.compress_secs - earlier.compress_secs,
+            decompress_secs: self.decompress_secs - earlier.decompress_secs,
+            dict_unique: self.dict_unique - earlier.dict_unique,
+            dict_refs: self.dict_refs - earlier.dict_refs,
+            dict_key_raw_bytes: self.dict_key_raw_bytes - earlier.dict_key_raw_bytes,
+            dict_key_enc_bytes: self.dict_key_enc_bytes - earlier.dict_key_enc_bytes,
         }
     }
 }
@@ -373,6 +498,27 @@ impl std::fmt::Display for StorageStats {
             self.disk_write_secs,
             self.disk_read_secs,
         )?;
+        if self.compress_raw_bytes > 0 {
+            write!(
+                f,
+                " compress={}→{} ({:.2}x, {:.3}s/{:.3}s)",
+                fmt_bytes(self.compress_raw_bytes),
+                fmt_bytes(self.compress_stored_bytes),
+                self.compress_raw_bytes as f64 / self.compress_stored_bytes.max(1) as f64,
+                self.compress_secs,
+                self.decompress_secs,
+            )?;
+        }
+        if self.dict_key_raw_bytes > 0 {
+            write!(
+                f,
+                " dict-keys={}→{} ({} uniq, {} refs)",
+                fmt_bytes(self.dict_key_raw_bytes),
+                fmt_bytes(self.dict_key_enc_bytes),
+                self.dict_unique,
+                self.dict_refs,
+            )?;
+        }
         if self.spill_write_failures > 0 || self.checksum_failures > 0 {
             write!(
                 f,
@@ -425,6 +571,39 @@ mod tests {
         assert_eq!(m.demoted_bytes, 7);
         assert!(!m.is_zero());
         assert!(StorageStats::default().is_zero());
+    }
+
+    #[test]
+    fn compress_and_dict_counters_flow_through() {
+        let c = StorageCounters::default();
+        c.record_compress(1000, 250, std::time::Duration::from_millis(1));
+        c.record_dict(&crate::util::ser::DictStats {
+            unique: 3,
+            refs: 7,
+            key_raw_bytes: 100,
+            key_enc_bytes: 40,
+        });
+        let s = c.snapshot();
+        assert_eq!(s.compress_raw_bytes, 1000);
+        assert_eq!(s.compress_stored_bytes, 250);
+        assert!(s.compress_secs > 0.0);
+        assert_eq!(s.dict_unique, 3);
+        assert_eq!(s.dict_refs, 7);
+        assert!(!s.is_zero());
+        let text = format!("{s}");
+        assert!(text.contains("compress="), "{text}");
+        assert!(text.contains("dict-keys="), "{text}");
+        let mut base = StorageStats::default();
+        base.add_dict(&crate::util::ser::DictStats {
+            unique: 1,
+            refs: 2,
+            key_raw_bytes: 10,
+            key_enc_bytes: 5,
+        });
+        let m = s.merged(&base);
+        assert_eq!(m.dict_unique, 4);
+        assert_eq!(m.dict_refs, 9);
+        assert_eq!(m.delta_since(&s).dict_refs, 2);
     }
 
     #[test]

@@ -8,15 +8,20 @@
 //! * [`insert`](ExternalMerger::insert) combines into an in-memory map,
 //!   tracking estimated heap bytes ([`HeapSize`]); crossing the budget
 //!   **sorts the resident entries by key and spills them as one run** to
-//!   the block store (encoded with the crate wire format, checksummed by
-//!   the [`DiskTier`](super::DiskTier));
+//!   the block store (keys dictionary-encoded per run via
+//!   [`DictWriter`], values in the crate wire format, checksummed and
+//!   transparently block-compressed by the
+//!   [`DiskTier`](super::DiskTier));
 //! * [`finish`](ExternalMerger::finish) merges every spilled run plus
 //!   the in-memory remainder with a **loser tree** ([`LoserTree`]) —
 //!   runs are streamed back in bounded chunks
-//!   ([`BlockStore::read_range`]), equal keys across runs are folded
-//!   with the combiner, and the result is bit-identical to the
-//!   all-in-memory fold for any associative + commutative combine, at
-//!   any budget down to zero (budget 0 spills every insert).
+//!   ([`BlockStore::read_range`]), decoded **zero-copy** into per-run
+//!   arena handles ([`DataKey::Ref`], 8 bytes for string keys) so the
+//!   merge compares and folds without allocating a `String` per record;
+//!   equal keys across runs are folded with the combiner, and the
+//!   result is bit-identical to the all-in-memory fold for any
+//!   associative + commutative combine, at any budget down to zero
+//!   (budget 0 spills every insert).
 //!
 //! A spill **write failure is not data loss**: the entries stay in
 //! memory, the failure is counted, and the effective budget doubles so
@@ -29,7 +34,7 @@ use std::marker::PhantomData;
 use std::sync::Arc;
 
 use crate::cache::CacheKey;
-use crate::util::ser::{Decode, DecodeError, Encode, Reader};
+use crate::util::ser::{DataKey, Decode, DecodeError, DictReader, DictWriter, Encode, Reader};
 
 use super::{checksum, BlockStore, HeapSize, StorageCounters, CHECKSUM_SEED};
 
@@ -66,11 +71,14 @@ pub struct ExternalMerger<K, V> {
     counters: Arc<StorageCounters>,
     namespace: u64,
     runs: u64,
+    /// Dictionary-encode string keys in spilled runs (`--dict-keys`;
+    /// off = ablation, every occurrence written inline).
+    dict_keys: bool,
 }
 
 impl<K, V> ExternalMerger<K, V>
 where
-    K: Ord + Hash + Eq + Encode + Decode + HeapSize,
+    K: Ord + Hash + Eq + DataKey + HeapSize,
     V: Encode + Decode + HeapSize,
 {
     /// A merger spilling runs beyond `threshold` estimated in-flight
@@ -94,7 +102,15 @@ where
             counters,
             namespace,
             runs: 0,
+            dict_keys: true,
         }
+    }
+
+    /// Toggle per-run key dictionaries (default on). The run format is
+    /// self-describing, so readers need no matching knob.
+    pub fn with_dict_keys(mut self, dict_keys: bool) -> Self {
+        self.dict_keys = dict_keys;
+        self
     }
 
     /// Estimated bytes currently held in memory.
@@ -132,6 +148,36 @@ where
                 e.insert(value);
             }
         }
+        self.after_insert();
+    }
+
+    /// Fold one *decoded* emission without materializing its key unless
+    /// it is new: a borrowed-key probe ([`DataKey::map_get_mut`]) hits
+    /// the accumulator directly and only a first-seen key is cloned out
+    /// of `dict`'s arena — the zero-copy half of the shuffle read path.
+    pub fn insert_ref(
+        &mut self,
+        kref: K::Ref,
+        dict: &DictReader,
+        value: V,
+        combine: impl Fn(&mut V, V),
+    ) {
+        match K::map_get_mut(&mut self.mem, &kref, dict) {
+            Some(slot) => {
+                self.mem_bytes += value.heap_bytes() as u64;
+                combine(slot, value);
+            }
+            None => {
+                let key = K::ref_materialize(&kref, dict);
+                self.mem_bytes +=
+                    key.heap_bytes() as u64 + value.heap_bytes() as u64 + PAIR_OVERHEAD;
+                self.mem.insert(key, value);
+            }
+        }
+        self.after_insert();
+    }
+
+    fn after_insert(&mut self) {
         self.inserts_since_sample += 1;
         if self.inserts_since_sample >= self.next_sample {
             self.resample();
@@ -153,9 +199,10 @@ where
             .sum();
     }
 
-    /// Sort the resident entries and write them as one run. On a write
-    /// failure the entries stay resident (no data loss) and the enforced
-    /// limit doubles until the next successful spill.
+    /// Sort the resident entries and write them as one run (keys through
+    /// a fresh per-run dictionary, savings charged to the counters). On
+    /// a write failure the entries stay resident (no data loss) and the
+    /// enforced limit doubles until the next successful spill.
     fn spill(&mut self) {
         if self.mem.is_empty() {
             return;
@@ -163,17 +210,20 @@ where
         let mut span = crate::trace::span(crate::trace::SpanCat::SpillRun, "spill-run");
         let mut batch: Vec<(K, V)> = self.mem.drain().collect();
         batch.sort_unstable_by(|a, b| a.0.cmp(&b.0));
-        // Concatenated pair encodings — no count prefix, so cursors can
-        // stream-decode until the payload is exhausted.
+        // Concatenated `key (dict) · value (plain)` encodings — no count
+        // prefix, so cursors can stream-decode until the payload is
+        // exhausted. Each run is its own dictionary scope.
+        let mut dict = DictWriter::new(self.dict_keys);
         let mut payload = Vec::new();
         for (k, v) in &batch {
-            k.encode(&mut payload);
+            k.dict_encode(&mut dict, &mut payload);
             v.encode(&mut payload);
         }
         span.set_arg(payload.len() as u64);
         match self.disk.write(self.run_key(self.runs), &payload) {
             Ok(written) => {
                 self.counters.record_spill(written);
+                self.counters.record_dict(&dict.stats());
                 self.runs += 1;
                 self.mem_bytes = 0;
                 self.limit = self.threshold;
@@ -193,8 +243,10 @@ where
 
     /// Merge every spilled run plus the in-memory remainder into the
     /// final combined entries (loser-tree k-way merge; equal keys folded
-    /// with `combine` in run order). Consumed runs are deleted from the
-    /// block store.
+    /// with `combine` in run order). Heads are compared as borrowed
+    /// [`DataKey::Ref`] handles against each run's own [`DictReader`];
+    /// a key is materialized exactly once, when it first wins. Consumed
+    /// runs are deleted from the block store.
     pub fn finish(mut self, combine: impl Fn(&mut V, V)) -> Vec<(K, V)> {
         if self.runs == 0 {
             return self.mem.drain().collect();
@@ -205,9 +257,7 @@ where
         last.sort_unstable_by(|a, b| a.0.cmp(&b.0));
 
         let mut sources: Vec<Run<K, V>> = (0..self.runs)
-            .map(|r| {
-                Run::from_disk(Arc::clone(&self.disk), self.run_key(r))
-            })
+            .map(|r| Run::from_disk(Arc::clone(&self.disk), self.run_key(r)))
             .collect();
         sources.push(Run::from_mem(last));
 
@@ -216,17 +266,18 @@ where
         let mut tree = LoserTree::build(sources.len(), |a, b| better(&sources, a, b));
         loop {
             let winner = tree.winner();
-            let Some((k, v)) = sources[winner].next() else {
+            let Some((kref, v)) = sources[winner].next() else {
                 break; // the best source is exhausted => all are
             };
             tree.replay(winner, |a, b| better(&sources, a, b));
+            let ctx = &sources[winner].ctx;
             match &mut current {
-                Some((ck, cv)) if *ck == k => combine(cv, v),
+                Some((ck, cv)) if K::ref_eq_owned(&kref, ctx, ck) => combine(cv, v),
                 _ => {
                     if let Some(done) = current.take() {
                         out.push(done);
                     }
-                    current = Some((k, v));
+                    current = Some((K::ref_materialize(&kref, ctx), v));
                 }
             }
         }
@@ -243,24 +294,34 @@ where
 /// `true` when source `a`'s head should be emitted before source `b`'s:
 /// smaller key first, exhausted sources last, ties by source index (so
 /// the merge — and therefore the combine order — is deterministic).
-fn better<K: Ord, V>(sources: &[Run<K, V>], a: usize, b: usize) -> bool {
-    match (sources[a].peek(), sources[b].peek()) {
-        (Some(ka), Some(kb)) => match ka.cmp(kb) {
-            std::cmp::Ordering::Less => true,
-            std::cmp::Ordering::Greater => false,
-            std::cmp::Ordering::Equal => a < b,
-        },
+/// Heads are compared as refs against their own run's dictionary
+/// ([`DataKey::ref_cmp`] must order exactly like `Ord` on owned keys).
+fn better<K: DataKey, V>(sources: &[Run<K, V>], a: usize, b: usize) -> bool {
+    match (&sources[a].head, &sources[b].head) {
+        (Some((ka, _)), Some((kb, _))) => {
+            match K::ref_cmp(ka, &sources[a].ctx, kb, &sources[b].ctx) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => a < b,
+            }
+        }
         (Some(_), None) => true,
         (None, Some(_)) => false,
         (None, None) => a < b,
     }
 }
 
-/// One sorted run being merged: a buffered head plus its tail (an
-/// in-memory batch or a streaming disk cursor).
-struct Run<K, V> {
-    head: Option<(K, V)>,
+/// One sorted run being merged: a buffered head (as a borrowed key
+/// handle + owned value) plus its tail (an in-memory batch or a
+/// streaming disk cursor) and the run's dictionary context resolving
+/// the handles.
+struct Run<K: DataKey, V> {
+    head: Option<(K::Ref, V)>,
     tail: RunTail<K, V>,
+    /// Dictionary + arena every `K::Ref` in this run points into. A
+    /// sibling field (not inside the cursor) so `next()` can borrow the
+    /// tail and the context disjointly.
+    ctx: DictReader,
 }
 
 enum RunTail<K, V> {
@@ -268,34 +329,41 @@ enum RunTail<K, V> {
     Disk(DiskRunCursor<K, V>),
 }
 
-impl<K: Decode, V: Decode> Run<K, V> {
+impl<K: DataKey, V: Decode> Run<K, V> {
     fn from_mem(batch: Vec<(K, V)>) -> Self {
+        let mut ctx = DictReader::new();
         let mut tail = batch.into_iter();
-        Run { head: tail.next(), tail: RunTail::Mem(tail) }
+        let head = match tail.next() {
+            Some((k, v)) => Some((K::ref_from_owned(k, &mut ctx), v)),
+            None => None,
+        };
+        Run { head, tail: RunTail::Mem(tail), ctx }
     }
 
     fn from_disk(store: Arc<dyn BlockStore>, key: CacheKey) -> Self {
         let mut cursor = DiskRunCursor::new(store, key);
-        Run { head: cursor.pull(), tail: RunTail::Disk(cursor) }
+        let mut ctx = DictReader::new();
+        let head = cursor.pull(&mut ctx);
+        Run { head, tail: RunTail::Disk(cursor), ctx }
     }
 
-    fn peek(&self) -> Option<&K> {
-        self.head.as_ref().map(|(k, _)| k)
-    }
-
-    fn next(&mut self) -> Option<(K, V)> {
+    fn next(&mut self) -> Option<(K::Ref, V)> {
         let out = self.head.take();
         self.head = match &mut self.tail {
-            RunTail::Mem(iter) => iter.next(),
-            RunTail::Disk(cursor) => cursor.pull(),
+            RunTail::Mem(iter) => match iter.next() {
+                Some((k, v)) => Some((K::ref_from_owned(k, &mut self.ctx), v)),
+                None => None,
+            },
+            RunTail::Disk(cursor) => cursor.pull(&mut self.ctx),
         };
         out
     }
 }
 
 /// Streaming decoder over one spilled run: fetches the payload in
-/// [`RUN_READ_CHUNK`]-sized ranges, decodes one `(K, V)` at a time, and
-/// verifies the run's checksum once the payload is exhausted. Run
+/// [`RUN_READ_CHUNK`]-sized ranges, decodes one `(K, V)` at a time
+/// (keys through the run's [`DictReader`], handed out as arena refs),
+/// and verifies the run's checksum once the payload is exhausted. Run
 /// corruption is unrecoverable (the spilled entries exist nowhere else),
 /// so it panics rather than silently dropping records.
 struct DiskRunCursor<K, V> {
@@ -314,7 +382,7 @@ struct DiskRunCursor<K, V> {
     _kv: PhantomData<(K, V)>,
 }
 
-impl<K: Decode, V: Decode> DiskRunCursor<K, V> {
+impl<K: DataKey, V: Decode> DiskRunCursor<K, V> {
     fn new(store: Arc<dyn BlockStore>, key: CacheKey) -> Self {
         let meta = store
             .meta(&key)
@@ -333,19 +401,26 @@ impl<K: Decode, V: Decode> DiskRunCursor<K, V> {
         }
     }
 
-    fn pull(&mut self) -> Option<(K, V)> {
+    fn pull(&mut self, dict: &mut DictReader) -> Option<(K::Ref, V)> {
         loop {
             let live = &self.buf[self.cursor..];
             if !live.is_empty() {
+                // Checkpoint the dictionary before every attempt: a
+                // record straddling the chunk boundary fails with
+                // `Truncated` *after* possibly interning a new entry,
+                // and the retry must not register it twice.
+                let cp = dict.checkpoint();
                 let mut reader = Reader::new(live);
-                match <(K, V)>::decode(&mut reader) {
+                let decoded = K::dict_decode(&mut reader, dict)
+                    .and_then(|kr| V::decode(&mut reader).map(|v| (kr, v)));
+                match decoded {
                     Ok(kv) => {
                         self.cursor += live.len() - reader.remaining();
                         return Some(kv);
                     }
                     Err(DecodeError::Truncated { .. }) if self.fetched < self.payload_len => {
-                        // A record straddles the chunk boundary: fall
-                        // through and fetch more.
+                        // Fall through and fetch more.
+                        dict.rollback(cp);
                     }
                     Err(e) => panic!("spill run {:?} is corrupt: {e}", self.key),
                 }
@@ -496,6 +571,44 @@ mod tests {
             assert!(stats.spill_runs >= 1);
             assert!(disk.is_empty(), "consumed runs are deleted");
         }
+    }
+
+    #[test]
+    fn dict_off_merge_is_identical() {
+        for dict_keys in [true, false] {
+            let (m, disk) = merger(64);
+            let mut m = m.with_dict_keys(dict_keys);
+            let input = pairs(300);
+            for (k, v) in input.clone() {
+                m.insert(k, v, sum);
+            }
+            assert!(m.runs() > 0);
+            let got: HashMap<String, u64> = m.finish(sum).into_iter().collect();
+            assert_eq!(got, reference(&input), "dict_keys {dict_keys}");
+            let stats = disk.counters().snapshot();
+            // Runs repeat few distinct keys, so the dictionary must have
+            // recorded savings exactly when enabled.
+            assert_eq!(stats.dict_refs > 0, dict_keys, "dict_keys {dict_keys}: {stats:?}");
+            assert!(stats.dict_key_enc_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn insert_ref_matches_owned_insert() {
+        let (mut owned, _d1) = merger(u64::MAX);
+        let (mut by_ref, _d2) = merger(u64::MAX);
+        let input = pairs(200);
+        let mut dict = DictReader::new();
+        for (k, v) in input.clone() {
+            owned.insert(k, v, sum);
+        }
+        for (k, v) in input {
+            let kref = String::ref_from_owned(k, &mut dict);
+            by_ref.insert_ref(kref, &dict, v, sum);
+        }
+        let a: HashMap<String, u64> = owned.finish(sum).into_iter().collect();
+        let b: HashMap<String, u64> = by_ref.finish(sum).into_iter().collect();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -70,6 +70,10 @@ pub enum SpanCat {
     Demote,
     /// A disk block promoted back into memory (`arg` = bytes).
     Promote,
+    /// Block compression on the disk-tier write path (`arg` = raw bytes).
+    Compress,
+    /// Frame decompression on the disk-tier read path (`arg` = raw bytes).
+    Decompress,
     /// A memory-tier cache lookup.
     CacheLookup,
     /// Driver-side work between chained stages (render + re-ingest).
@@ -93,6 +97,8 @@ impl SpanCat {
             SpanCat::SpillMerge => "spill-merge",
             SpanCat::Demote => "demote",
             SpanCat::Promote => "promote",
+            SpanCat::Compress => "compress",
+            SpanCat::Decompress => "decompress",
             SpanCat::CacheLookup => "cache-lookup",
             SpanCat::Bridge => "bridge",
             SpanCat::Round => "round",

@@ -54,16 +54,18 @@ impl StrArena {
         Self::default()
     }
 
-    /// Copy `s` into the arena and return a stable handle.
+    /// Copy `s` into the arena and return a stable handle. Strings larger
+    /// than the default slab get a dedicated exactly-sized slab; the hard
+    /// cap is the [`StrRef`] packing (1 MiB per string).
     pub fn intern(&mut self, s: &str) -> StrRef {
         let bytes = s.as_bytes();
-        assert!(bytes.len() < SLAB_BYTES, "string larger than slab");
+        assert!(bytes.len() < (1 << 20), "string larger than StrRef length field");
         let need_new = match self.slabs.last() {
             None => true,
             Some(slab) => slab.len() + bytes.len() > slab.capacity(),
         };
         if need_new {
-            self.slabs.push(Vec::with_capacity(SLAB_BYTES));
+            self.slabs.push(Vec::with_capacity(SLAB_BYTES.max(bytes.len())));
         }
         let slab_idx = self.slabs.len() - 1;
         let slab = &mut self.slabs[slab_idx];
@@ -93,6 +95,38 @@ impl StrArena {
     pub fn slab_count(&self) -> usize {
         self.slabs.len()
     }
+
+    /// Checkpoint for [`StrArena::truncate`]: everything interned after
+    /// the mark can be rolled back. Used by the dictionary decoder to
+    /// retry a partially-decoded record after a short read without
+    /// double-registering its strings.
+    pub fn mark(&self) -> ArenaMark {
+        ArenaMark {
+            slabs: self.slabs.len(),
+            last_len: self.slabs.last().map_or(0, Vec::len),
+            bytes_used: self.bytes_used,
+        }
+    }
+
+    /// Roll back to `mark`, invalidating every [`StrRef`] handed out
+    /// since. Handles issued before the mark stay valid (slabs are only
+    /// ever truncated back to their state at the mark).
+    pub fn truncate(&mut self, mark: ArenaMark) {
+        debug_assert!(mark.slabs <= self.slabs.len(), "mark from a different arena epoch");
+        self.slabs.truncate(mark.slabs);
+        if let Some(last) = self.slabs.last_mut() {
+            last.truncate(mark.last_len);
+        }
+        self.bytes_used = mark.bytes_used;
+    }
+}
+
+/// A rollback point in a [`StrArena`] — see [`StrArena::mark`].
+#[derive(Clone, Copy, Debug)]
+pub struct ArenaMark {
+    slabs: usize,
+    last_len: usize,
+    bytes_used: usize,
 }
 
 #[cfg(test)]
@@ -139,6 +173,34 @@ mod tests {
         let r = a.intern("x");
         let r2 = r; // Copy
         assert_eq!(a.get(r), a.get(r2));
+    }
+
+    #[test]
+    fn mark_and_truncate_roll_back_interns() {
+        let mut a = StrArena::new();
+        let keep = a.intern("stable");
+        let m = a.mark();
+        let _gone1 = a.intern("ephemeral-1");
+        // Force a slab boundary inside the rollback window.
+        let _gone2 = a.intern(&"x".repeat(SLAB_BYTES - 8));
+        assert!(a.slab_count() > 1);
+        a.truncate(m);
+        assert_eq!(a.get(keep), "stable");
+        assert_eq!(a.bytes_used(), "stable".len());
+        assert_eq!(a.slab_count(), 1);
+        // Re-interning after rollback reuses the space.
+        let again = a.intern("ephemeral-1");
+        assert_eq!(a.get(again), "ephemeral-1");
+    }
+
+    #[test]
+    fn truncate_on_empty_mark_clears_everything() {
+        let mut a = StrArena::new();
+        let m = a.mark();
+        a.intern("abc");
+        a.truncate(m);
+        assert_eq!(a.bytes_used(), 0);
+        assert_eq!(a.slab_count(), 0);
     }
 
     #[test]

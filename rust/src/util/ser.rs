@@ -17,6 +17,8 @@
 
 use std::collections::HashMap;
 
+use crate::util::arena::{ArenaMark, StrArena, StrRef};
+
 /// Serialize into a byte buffer.
 pub trait Encode {
     fn encode(&self, out: &mut Vec<u8>);
@@ -54,6 +56,8 @@ pub enum DecodeError {
     BadTag(u8),
     /// Bytes left over after a full decode.
     TrailingBytes(usize),
+    /// A dictionary back-reference named an id the stream never defined.
+    BadDictId(u64),
 }
 
 impl std::fmt::Display for DecodeError {
@@ -66,6 +70,7 @@ impl std::fmt::Display for DecodeError {
             DecodeError::Utf8 => write!(f, "invalid utf-8 in string payload"),
             DecodeError::BadTag(t) => write!(f, "unknown discriminant {t}"),
             DecodeError::TrailingBytes(n) => write!(f, "{n} trailing bytes after decode"),
+            DecodeError::BadDictId(id) => write!(f, "undefined dictionary id {id}"),
         }
     }
 }
@@ -284,6 +289,392 @@ impl<K: Decode + std::hash::Hash + Eq, V: Decode> Decode for HashMap<K, V> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Varints + the per-run key dictionary (PR 9's wire-format layer).
+// ---------------------------------------------------------------------------
+
+/// LEB128 unsigned varint — the dictionary wire format's integer shape
+/// (ids and counts are small and skewed, exactly what varints are for).
+pub fn encode_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode a LEB128 varint. Rejects encodings longer than 10 bytes or
+/// overflowing 64 bits.
+pub fn decode_varint(r: &mut Reader<'_>) -> Result<u64, DecodeError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = u8::decode(r)?;
+        if shift == 63 && b > 1 {
+            return Err(DecodeError::LengthOverflow(u64::MAX));
+        }
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(DecodeError::LengthOverflow(u64::MAX));
+        }
+    }
+}
+
+/// What a [`DictWriter`] saved: unique entries vs back-references, and
+/// key bytes as-written vs what plain (undictionaried) encoding would
+/// have cost. `key_enc_bytes / key_raw_bytes` is the key-stream ratio
+/// reported in `StageStats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DictStats {
+    /// Distinct strings written inline (dictionary insertions).
+    pub unique: u64,
+    /// Keys emitted as back-references to an earlier entry.
+    pub refs: u64,
+    /// Key bytes a plain encoding would have written (4-byte length
+    /// prefix + payload per occurrence) — the *logical* key volume.
+    pub key_raw_bytes: u64,
+    /// Key bytes actually written (tags + inline entries + references).
+    pub key_enc_bytes: u64,
+}
+
+impl DictStats {
+    pub fn is_zero(&self) -> bool {
+        *self == DictStats::default()
+    }
+
+    /// Field-wise sum — aggregate per-run dictionaries into a stage view.
+    pub fn merged(&self, other: &DictStats) -> DictStats {
+        DictStats {
+            unique: self.unique + other.unique,
+            refs: self.refs + other.refs,
+            key_raw_bytes: self.key_raw_bytes + other.key_raw_bytes,
+            key_enc_bytes: self.key_enc_bytes + other.key_enc_bytes,
+        }
+    }
+}
+
+/// Write side of the per-run string dictionary.
+///
+/// Wire format, self-describing (the reader needs no knob): each key is
+/// a varint *tag*. Tag `0` introduces a new entry — `[varint len][bytes]`
+/// — which implicitly receives the next 1-based id. Tag `n > 0` is a
+/// back-reference to entry `n`. A disabled writer (`--dict-keys off`)
+/// simply always emits tag-0 inline entries and registers nothing, so
+/// the same reader decodes both streams.
+pub struct DictWriter {
+    ids: HashMap<String, u64>,
+    enabled: bool,
+    stats: DictStats,
+}
+
+impl DictWriter {
+    pub fn new(enabled: bool) -> Self {
+        Self { ids: HashMap::new(), enabled, stats: DictStats::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn stats(&self) -> DictStats {
+        self.stats
+    }
+
+    /// Encode one string key occurrence.
+    pub fn encode_str(&mut self, s: &str, out: &mut Vec<u8>) {
+        let before = out.len();
+        match self.ids.get(s) {
+            Some(&id) => {
+                encode_varint(id, out);
+                self.stats.refs += 1;
+            }
+            None => {
+                if self.enabled {
+                    let id = self.ids.len() as u64 + 1;
+                    self.ids.insert(s.to_owned(), id);
+                }
+                encode_varint(0, out);
+                encode_varint(s.len() as u64, out);
+                out.extend_from_slice(s.as_bytes());
+                self.stats.unique += 1;
+            }
+        }
+        self.stats.key_raw_bytes += 4 + s.len() as u64;
+        self.stats.key_enc_bytes += (out.len() - before) as u64;
+    }
+}
+
+/// Read side of the dictionary: interns every inline entry into a
+/// [`StrArena`] and resolves back-references to the same [`StrRef`] — so
+/// a run's repeated keys decode to *one* arena string and the hot path
+/// hands out 8-byte handles instead of fresh `String`s (the zero-copy
+/// decode layer).
+#[derive(Default)]
+pub struct DictReader {
+    arena: StrArena,
+    ids: Vec<StrRef>,
+}
+
+impl DictReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode one key occurrence (inline entry or back-reference).
+    pub fn decode_str(&mut self, r: &mut Reader<'_>) -> Result<StrRef, DecodeError> {
+        let tag = decode_varint(r)?;
+        if tag == 0 {
+            let len = decode_varint(r)?;
+            if len > MAX_LEN {
+                return Err(DecodeError::LengthOverflow(len));
+            }
+            let bytes = r.take(len as usize)?;
+            let s = std::str::from_utf8(bytes).map_err(|_| DecodeError::Utf8)?;
+            let sref = self.arena.intern(s);
+            self.ids.push(sref);
+            Ok(sref)
+        } else {
+            let idx = (tag - 1) as usize;
+            self.ids.get(idx).copied().ok_or(DecodeError::BadDictId(tag))
+        }
+    }
+
+    /// Intern a string that did *not* come off the wire (e.g. the
+    /// merger's in-memory remainder joining disk runs in one loser
+    /// tree). Does not register a wire id.
+    pub fn intern(&mut self, s: &str) -> StrRef {
+        self.arena.intern(s)
+    }
+
+    /// Resolve a handle produced by this reader.
+    pub fn get(&self, r: StrRef) -> &str {
+        self.arena.get(r)
+    }
+
+    /// Bytes held by the arena (decoded key payloads).
+    pub fn bytes_used(&self) -> usize {
+        self.arena.bytes_used()
+    }
+
+    /// Checkpoint before decoding a record from a possibly-short buffer;
+    /// [`DictReader::rollback`] after a `Truncated` error un-registers
+    /// anything the failed attempt interned, so the retry (with more
+    /// bytes) doesn't define duplicate ids.
+    pub fn checkpoint(&self) -> DictCheckpoint {
+        DictCheckpoint { ids: self.ids.len(), arena: self.arena.mark() }
+    }
+
+    pub fn rollback(&mut self, cp: DictCheckpoint) {
+        self.ids.truncate(cp.ids);
+        self.arena.truncate(cp.arena);
+    }
+}
+
+/// Rollback point for [`DictReader::checkpoint`].
+#[derive(Clone, Copy, Debug)]
+pub struct DictCheckpoint {
+    ids: usize,
+    arena: ArenaMark,
+}
+
+/// Keys that can travel the dictionary-encoded, zero-copy data path.
+///
+/// The contract that keeps every engine bit-identical to the oracle:
+///
+/// * `dict_encode` → `dict_decode` round-trips through a fresh
+///   writer/reader pair processing the same occurrence sequence.
+/// * [`DataKey::ref_hash`] **must** equal
+///   [`MapKey::hash_with`](crate::concurrent::MapKey::hash_with) on the
+///   materialized key — shard routing and segment choice are computed on
+///   both forms.
+/// * `ref_cmp` must order refs exactly as `Ord` orders materialized keys
+///   (the loser-tree merge compares refs across runs).
+///
+/// String keys get the real dictionary + arena treatment; integer keys
+/// are their own ref (already cheap); composite/odd keys can fall back
+/// to `Ref = Self`.
+pub trait DataKey: Sized + Eq + std::hash::Hash {
+    /// Borrowed/handle form a decoded key takes before (if ever) being
+    /// materialized. `Copy` keeps merge heads and map probes allocation-free.
+    type Ref: Copy;
+
+    /// Encode one occurrence of `self` through the run dictionary.
+    fn dict_encode(&self, dict: &mut DictWriter, out: &mut Vec<u8>);
+
+    /// Decode one occurrence into a handle tied to `dict`.
+    fn dict_decode(r: &mut Reader<'_>, dict: &mut DictReader) -> Result<Self::Ref, DecodeError>;
+
+    /// Convert an owned key into a handle in `dict` (for merging owned
+    /// in-memory data with decoded runs under one comparator).
+    fn ref_from_owned(this: Self, dict: &mut DictReader) -> Self::Ref;
+
+    /// Order two handles, possibly from different runs' dictionaries.
+    fn ref_cmp(a: &Self::Ref, da: &DictReader, b: &Self::Ref, db: &DictReader)
+        -> std::cmp::Ordering;
+
+    /// Clone a handle back into an owned key.
+    fn ref_materialize(r: &Self::Ref, dict: &DictReader) -> Self;
+
+    /// Does this handle denote the same key as `owned`?
+    fn ref_eq_owned(r: &Self::Ref, dict: &DictReader, owned: &Self) -> bool;
+
+    /// Hash of the denoted key — must equal `MapKey::hash_with` on the
+    /// materialized key (routing happens on both forms).
+    fn ref_hash(r: &Self::Ref, dict: &DictReader, kind: crate::hash::HashKind) -> u64;
+
+    /// Borrowed-key map probe: look up `r` in an owned-key map without
+    /// materializing (the zero-copy combine hot path).
+    fn map_get_mut<'m, V>(
+        map: &'m mut HashMap<Self, V>,
+        r: &Self::Ref,
+        dict: &DictReader,
+    ) -> Option<&'m mut V>;
+}
+
+impl DataKey for String {
+    type Ref = StrRef;
+
+    fn dict_encode(&self, dict: &mut DictWriter, out: &mut Vec<u8>) {
+        dict.encode_str(self, out);
+    }
+
+    fn dict_decode(r: &mut Reader<'_>, dict: &mut DictReader) -> Result<Self::Ref, DecodeError> {
+        dict.decode_str(r)
+    }
+
+    fn ref_from_owned(this: Self, dict: &mut DictReader) -> Self::Ref {
+        dict.intern(&this)
+    }
+
+    fn ref_cmp(
+        a: &Self::Ref,
+        da: &DictReader,
+        b: &Self::Ref,
+        db: &DictReader,
+    ) -> std::cmp::Ordering {
+        da.get(*a).cmp(db.get(*b))
+    }
+
+    fn ref_materialize(r: &Self::Ref, dict: &DictReader) -> Self {
+        dict.get(*r).to_owned()
+    }
+
+    fn ref_eq_owned(r: &Self::Ref, dict: &DictReader, owned: &Self) -> bool {
+        dict.get(*r) == owned
+    }
+
+    fn ref_hash(r: &Self::Ref, dict: &DictReader, kind: crate::hash::HashKind) -> u64 {
+        kind.hash(dict.get(*r).as_bytes())
+    }
+
+    fn map_get_mut<'m, V>(
+        map: &'m mut HashMap<Self, V>,
+        r: &Self::Ref,
+        dict: &DictReader,
+    ) -> Option<&'m mut V> {
+        map.get_mut(dict.get(*r))
+    }
+}
+
+macro_rules! impl_datakey_int {
+    ($($t:ty),*) => {$(
+        impl DataKey for $t {
+            type Ref = $t;
+
+            fn dict_encode(&self, _dict: &mut DictWriter, out: &mut Vec<u8>) {
+                self.encode(out);
+            }
+
+            fn dict_decode(
+                r: &mut Reader<'_>,
+                _dict: &mut DictReader,
+            ) -> Result<Self::Ref, DecodeError> {
+                <$t>::decode(r)
+            }
+
+            fn ref_from_owned(this: Self, _dict: &mut DictReader) -> Self::Ref {
+                this
+            }
+
+            fn ref_cmp(
+                a: &Self::Ref,
+                _da: &DictReader,
+                b: &Self::Ref,
+                _db: &DictReader,
+            ) -> std::cmp::Ordering {
+                a.cmp(b)
+            }
+
+            fn ref_materialize(r: &Self::Ref, _dict: &DictReader) -> Self {
+                *r
+            }
+
+            fn ref_eq_owned(r: &Self::Ref, _dict: &DictReader, owned: &Self) -> bool {
+                r == owned
+            }
+
+            fn ref_hash(r: &Self::Ref, _dict: &DictReader, kind: crate::hash::HashKind) -> u64 {
+                crate::concurrent::MapKey::hash_with(r, kind)
+            }
+
+            fn map_get_mut<'m, V>(
+                map: &'m mut HashMap<Self, V>,
+                r: &Self::Ref,
+                _dict: &DictReader,
+            ) -> Option<&'m mut V> {
+                map.get_mut(r)
+            }
+        }
+    )*};
+}
+
+impl_datakey_int!(u32, u64, i64);
+
+/// Encode a `(K, V)` batch for the wire: varint pair count, then
+/// `key (dictionary) · value (plain)` per pair. Returns the bytes and
+/// the dictionary's savings stats. The batch is its own dictionary
+/// scope — decode with a fresh [`DictReader`] (or [`decode_pairs`]).
+pub fn encode_pairs<K: DataKey, V: Encode>(
+    pairs: &[(K, V)],
+    dict_keys: bool,
+) -> (Vec<u8>, DictStats) {
+    let mut dict = DictWriter::new(dict_keys);
+    let mut out = Vec::new();
+    encode_varint(pairs.len() as u64, &mut out);
+    for (k, v) in pairs {
+        k.dict_encode(&mut dict, &mut out);
+        v.encode(&mut out);
+    }
+    (out, dict.stats())
+}
+
+/// Decode an [`encode_pairs`] payload into owned pairs. The streaming
+/// consumers (shuffle read, external merge) decode incrementally against
+/// a live [`DictReader`] instead; this is the whole-buffer convenience.
+pub fn decode_pairs<K: DataKey, V: Decode>(bytes: &[u8]) -> Result<Vec<(K, V)>, DecodeError> {
+    let mut r = Reader::new(bytes);
+    let mut dict = DictReader::new();
+    let n = decode_varint(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n.min(r.remaining().max(1)));
+    for _ in 0..n {
+        let kr = K::dict_decode(&mut r, &mut dict)?;
+        let v = V::decode(&mut r)?;
+        out.push((K::ref_materialize(&kr, &dict), v));
+    }
+    if !r.is_empty() {
+        return Err(DecodeError::TrailingBytes(r.remaining()));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,5 +767,171 @@ mod tests {
             Option::<u8>::from_bytes(&[7]),
             Err(DecodeError::BadTag(7))
         ));
+    }
+
+    #[test]
+    fn varint_roundtrips() {
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut out = Vec::new();
+            encode_varint(v, &mut out);
+            let mut r = Reader::new(&out);
+            assert_eq!(decode_varint(&mut r).unwrap(), v);
+            assert!(r.is_empty());
+        }
+        // Single-byte values stay single-byte.
+        let mut out = Vec::new();
+        encode_varint(42, &mut out);
+        assert_eq!(out, [42]);
+    }
+
+    #[test]
+    fn varint_rejects_overlong_and_truncated() {
+        // 11 continuation bytes: > 64 bits of payload.
+        let overlong = [0xFFu8; 11];
+        assert!(matches!(
+            decode_varint(&mut Reader::new(&overlong)),
+            Err(DecodeError::LengthOverflow(_))
+        ));
+        // Continuation bit set, then nothing.
+        assert!(matches!(
+            decode_varint(&mut Reader::new(&[0x80])),
+            Err(DecodeError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn dict_roundtrip_shrinks_repeated_keys() {
+        let keys = ["the", "quick", "the", "the", "fox", "quick", "the"];
+        let mut dict = DictWriter::new(true);
+        let mut out = Vec::new();
+        for k in keys {
+            dict.encode_str(k, &mut out);
+        }
+        let stats = dict.stats();
+        assert_eq!(stats.unique, 3);
+        assert_eq!(stats.refs, 4);
+        assert!(stats.key_enc_bytes < stats.key_raw_bytes, "{stats:?}");
+
+        let mut reader = DictReader::new();
+        let mut r = Reader::new(&out);
+        let refs: Vec<StrRef> =
+            keys.iter().map(|_| reader.decode_str(&mut r).unwrap()).collect();
+        assert!(r.is_empty());
+        for (k, sref) in keys.iter().zip(&refs) {
+            assert_eq!(reader.get(*sref), *k);
+        }
+        // Repeats resolve to the same arena handle (zero-copy).
+        assert_eq!(refs[0], refs[2]);
+        assert_eq!(refs[0], refs[3]);
+        assert_eq!(reader.bytes_used(), "thequickfox".len());
+    }
+
+    #[test]
+    fn disabled_writer_streams_decode_identically() {
+        let keys = ["a", "b", "a"];
+        let mut dict = DictWriter::new(false);
+        let mut out = Vec::new();
+        for k in keys {
+            dict.encode_str(k, &mut out);
+        }
+        assert_eq!(dict.stats().refs, 0);
+        assert_eq!(dict.stats().unique, 3);
+        let mut reader = DictReader::new();
+        let mut r = Reader::new(&out);
+        for k in keys {
+            let sref = reader.decode_str(&mut r).unwrap();
+            assert_eq!(reader.get(sref), k);
+        }
+    }
+
+    #[test]
+    fn dict_checkpoint_rollback_prevents_double_registration() {
+        let mut dict = DictWriter::new(true);
+        let mut out = Vec::new();
+        dict.encode_str("alpha", &mut out);
+        dict.encode_str("beta", &mut out);
+        dict.encode_str("alpha", &mut out); // back-ref to id 1
+
+        let mut reader = DictReader::new();
+        let mut r = Reader::new(&out[..1]); // truncated mid-entry
+        let cp = reader.checkpoint();
+        assert!(reader.decode_str(&mut r).is_err());
+        reader.rollback(cp);
+
+        // Retry with the full buffer: ids must line up.
+        let mut r = Reader::new(&out);
+        let a = reader.decode_str(&mut r).unwrap();
+        let b = reader.decode_str(&mut r).unwrap();
+        let a2 = reader.decode_str(&mut r).unwrap();
+        assert_eq!(reader.get(a), "alpha");
+        assert_eq!(reader.get(b), "beta");
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn bad_dict_id_fails() {
+        // Back-reference to id 9 in an empty dictionary.
+        let mut out = Vec::new();
+        encode_varint(9, &mut out);
+        let mut reader = DictReader::new();
+        assert_eq!(
+            reader.decode_str(&mut Reader::new(&out)),
+            Err(DecodeError::BadDictId(9))
+        );
+    }
+
+    #[test]
+    fn encode_pairs_roundtrips_string_and_int_keys() {
+        let pairs: Vec<(String, u64)> = vec![
+            ("word".into(), 1),
+            ("count".into(), 2),
+            ("word".into(), 3),
+        ];
+        for dict_on in [true, false] {
+            let (bytes, stats) = encode_pairs(&pairs, dict_on);
+            let back: Vec<(String, u64)> = decode_pairs(&bytes).unwrap();
+            assert_eq!(back, pairs);
+            assert_eq!(stats.refs > 0, dict_on);
+        }
+
+        let ints: Vec<(u64, i64)> = vec![(7, -1), (8, 2)];
+        let (bytes, stats) = encode_pairs(&ints, true);
+        assert_eq!(decode_pairs::<u64, i64>(&bytes).unwrap(), ints);
+        // Integer keys bypass the dictionary entirely.
+        assert!(stats.is_zero());
+    }
+
+    #[test]
+    fn ref_hash_matches_mapkey_hash() {
+        use crate::concurrent::MapKey;
+        use crate::hash::HashKind;
+        let mut dict = DictReader::new();
+        for kind in [HashKind::Fx, HashKind::Fnv1a] {
+            let s = "consistency".to_string();
+            let sref = String::ref_from_owned(s.clone(), &mut dict);
+            assert_eq!(String::ref_hash(&sref, &dict, kind), s.hash_with(kind));
+            let n = 0xDEAD_BEEFu64;
+            let nref = u64::ref_from_owned(n, &mut dict);
+            assert_eq!(u64::ref_hash(&nref, &dict, kind), n.hash_with(kind));
+        }
+    }
+
+    #[test]
+    fn datakey_map_probe_and_cmp() {
+        let mut dict = DictReader::new();
+        let mut m: HashMap<String, u64> = HashMap::new();
+        m.insert("hit".into(), 10);
+        let hit = String::ref_from_owned("hit".into(), &mut dict);
+        let miss = String::ref_from_owned("miss".into(), &mut dict);
+        *String::map_get_mut(&mut m, &hit, &dict).unwrap() += 5;
+        assert_eq!(m["hit"], 15);
+        assert!(String::map_get_mut(&mut m, &miss, &dict).is_none());
+        assert!(String::ref_eq_owned(&hit, &dict, &"hit".to_string()));
+        assert!(!String::ref_eq_owned(&hit, &dict, &"miss".to_string()));
+        assert_eq!(
+            String::ref_cmp(&hit, &dict, &miss, &dict),
+            "hit".cmp("miss")
+        );
+        assert_eq!(String::ref_materialize(&hit, &dict), "hit");
     }
 }

@@ -71,6 +71,11 @@ pub struct WordCountJob {
     pub spill_threshold: Option<u64>,
     /// Directory spill files live under (`None` = system temp dir).
     pub spill_dir: Option<std::path::PathBuf>,
+    /// Block-compress disk-tier writes (see [`JobSpec::compress`]).
+    pub compress: bool,
+    /// Dictionary-encode repeated keys on the wire (see
+    /// [`JobSpec::dict_keys`]).
+    pub dict_keys: bool,
 }
 
 impl WordCountJob {
@@ -89,6 +94,8 @@ impl WordCountJob {
             failures: std::sync::Arc::new(FailurePlan::none()),
             spill_threshold: None,
             spill_dir: None,
+            compress: true,
+            dict_keys: true,
         }
     }
 
@@ -151,6 +158,18 @@ impl WordCountJob {
         self
     }
 
+    /// Toggle disk-tier block compression (see [`JobSpec::compress`]).
+    pub fn compress(mut self, on: bool) -> Self {
+        self.compress = on;
+        self
+    }
+
+    /// Toggle wire key dictionaries (see [`JobSpec::dict_keys`]).
+    pub fn dict_keys(mut self, on: bool) -> Self {
+        self.dict_keys = on;
+        self
+    }
+
     /// The equivalent generic job description.
     pub fn to_spec(&self) -> JobSpec {
         JobSpec {
@@ -171,6 +190,8 @@ impl WordCountJob {
             spill_threshold: self.spill_threshold,
             spill_dir: self.spill_dir.clone(),
             eviction_policy: None,
+            compress: self.compress,
+            dict_keys: self.dict_keys,
             trace: None,
         }
     }

@@ -119,6 +119,19 @@
 //!   demote to the disk tier under `--cache-budget` pressure instead of
 //!   being reparsed ([`PrParsed`] shows the tag-byte enum pattern).
 //!
+//! **Key cardinality shapes the data path.** Spill runs and shuffle
+//! payloads dictionary-encode repeated keys (`--dict-keys`, see
+//! [`crate::util::ser::DictWriter`]): each distinct key is written once
+//! per run, repeats cost a varint back-reference. A Zipf-skewed string
+//! domain like [`WordCount`]'s compresses dramatically — most key bytes
+//! on the wire are repeats — while a near-unique domain (the doc-id-
+//! tagged emissions of [`Sessionize`] stage 1, or [`Grep`]'s one-shot
+//! keys) gains nothing and pays only the per-run dictionary's memory.
+//! Dense integer keys ([`LengthHistogram`]) skip the dictionary
+//! entirely — integers are their own wire form. The `dict keys` column
+//! of the stage table (and `StageStats::dict`) shows per-stage savings,
+//! so you can see which regime your workload lands in.
+//!
 //! # Writing an iterative workload
 //!
 //! An iterative job is a loop of step jobs with feedback:

@@ -60,6 +60,7 @@ fn prop_dist_map_routing_and_totals() {
             }).collect()
         };
         let words_ref = &words;
+        let dict_keys = g.bool();
         let results = spawn_cluster(nnodes, NetModel::ideal(), move |comm| {
             let map: DistHashMap<String, u64> =
                 DistHashMap::new(comm.rank, nnodes, nthreads, HashKind::Fx, combine);
@@ -67,7 +68,7 @@ fn prop_dist_map_routing_and_totals() {
             parallel_for(nthreads, words_ref.len(), Schedule::Static, |ctx, i| {
                 map.upsert(ctx.worker, words_ref[i].clone(), 1, reducer::sum);
             });
-            map.shuffle(comm, reducer::sum);
+            map.shuffle(comm, reducer::sum, dict_keys);
             let owned = map.to_vec_local();
             // Routing invariant: we own only keys whose owner is us.
             let misrouted = owned.iter().filter(|(k, _)| map.owner_of(k) != comm.rank).count();
@@ -145,6 +146,84 @@ fn prop_ser_roundtrip() {
             Ok(_) => fail("roundtrip changed value"),
             Err(e) => fail(format!("decode error: {e}")),
         }
+    });
+}
+
+/// The LZ4-style block codec round-trips arbitrary payloads byte-exactly:
+/// empty, incompressible (pseudo-random bytes), and highly repetitive
+/// ones alike.
+#[test]
+fn prop_compress_roundtrip() {
+    use blaze::storage::compress::{compress, decompress};
+
+    check("compress-roundtrip", |g| {
+        let kind = g.usize_in(0, 2);
+        let len = g.usize_in(0, 4096);
+        let src: Vec<u8> = match kind {
+            0 => Vec::new(),
+            1 => (0..len).map(|_| g.below(256) as u8).collect(),
+            _ => {
+                // Repetitive: a single short word tiled out, the shape
+                // that must compress (and stress overlapping copies).
+                let word = g.word(6);
+                let mut s = Vec::new();
+                while s.len() < len {
+                    s.extend_from_slice(word.as_bytes());
+                    s.push(b' ');
+                }
+                s.truncate(len);
+                s
+            }
+        };
+        let mut packed = Vec::new();
+        let n = compress(&src, &mut packed);
+        if n != packed.len() {
+            return fail(format!("compress reported {n} but wrote {}", packed.len()));
+        }
+        match decompress(&packed, src.len()) {
+            Ok(back) if back == src => Ok(()),
+            Ok(_) => fail(format!("roundtrip changed bytes (kind {kind}, len {len})")),
+            Err(e) => fail(format!("decode error on kind-{kind} len-{len} input: {e}")),
+        }
+    });
+}
+
+/// The dictionary pair codec round-trips random keyed streams with the
+/// dictionary on or off; with it on, every key is either a first sight
+/// or a back-ref and the encoded key bytes never exceed the plain form.
+#[test]
+fn prop_dict_codec_roundtrip() {
+    use blaze::util::ser::{decode_pairs, encode_pairs};
+
+    check("dict-codec-roundtrip", |g| {
+        let distinct = g.usize_in(1, 20);
+        let pairs: Vec<(String, u64)> = (0..g.usize_in(0, 300))
+            .map(|_| (format!("key{}", g.usize_in(0, distinct - 1)), g.below(1 << 20)))
+            .collect();
+        for dict in [false, true] {
+            let (bytes, stats) = encode_pairs(&pairs, dict);
+            let back: Vec<(String, u64)> = match decode_pairs(&bytes) {
+                Ok(back) => back,
+                Err(e) => return fail(format!("decode error (dict={dict}): {e}")),
+            };
+            if back != pairs {
+                return fail(format!("roundtrip changed pairs (dict={dict})"));
+            }
+            if dict {
+                if stats.unique as usize > distinct {
+                    return fail(format!("{} unique ids for <= {distinct} keys", stats.unique));
+                }
+                if stats.unique + stats.refs != pairs.len() as u64 {
+                    return fail("every key must be a first sight or a back-ref");
+                }
+                if stats.key_enc_bytes > stats.key_raw_bytes {
+                    return fail("dictionary expanded the key bytes");
+                }
+            } else if stats.refs != 0 || stats.unique != pairs.len() as u64 {
+                return fail(format!("disabled dict still deduplicated: {stats:?}"));
+            }
+        }
+        Ok(())
     });
 }
 
@@ -644,6 +723,11 @@ fn prop_spill_run_parity() {
         let threshold = *g.choose(&[0u64, 64, 1024, 64 << 10]);
         let threads = g.usize_in(1, 8);
         let policy = *g.choose(&PolicySpec::all());
+        // The data-path knobs are pure representation choices: parity
+        // must hold for every combination of compression and key
+        // dictionaries against the same serial oracle.
+        let compress = g.bool();
+        let dict_keys = g.bool();
         let spec = || {
             JobSpec::new(engine)
                 .nodes(2)
@@ -652,9 +736,14 @@ fn prop_spill_run_parity() {
                 .net(NetModel::ideal())
                 .spill_threshold(threshold)
                 .eviction_policy(policy)
+                .compress(compress)
+                .dict_keys(dict_keys)
         };
-        let ctx =
-            format!("{} threshold={threshold} threads={threads} {policy}", engine.label());
+        let ctx = format!(
+            "{} threshold={threshold} threads={threads} {policy} \
+             compress={compress} dict={dict_keys}",
+            engine.label()
+        );
 
         let tok = blaze::corpus::Tokenizer::Spaces;
         let wc = Arc::new(WordCount::new(tok));
