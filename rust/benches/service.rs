@@ -1,0 +1,224 @@
+//! Experiment SV1: open-loop arrival sweep through the job service.
+//!
+//! Three tenants share one service: `short` submits zero-shuffle greps,
+//! `heavy-a` multi-round pageranks, `heavy-b` shuffle-heavy joins. Jobs
+//! arrive open-loop (on the schedule's clock, not when the service is
+//! ready) at increasing rates; every completed job's latency is
+//! submit → done, queue wait included. Per rate we report jobs/sec, p50
+//! and p99 latency (overall and for the short class), and the Jain
+//! fairness index over per-tenant mean queue-wait per stage (1.0 = every
+//! tenant waits equally for the scheduler).
+//!
+//! At the highest rate the sweep runs twice — weighted-fair and FIFO —
+//! and asserts the headline claim: stage-granular fair scheduling beats
+//! the single-queue baseline on short-job p99, because a grep no longer
+//! waits for every earlier-submitted pagerank to drain. Rows land in
+//! `target/bench-results/BENCH_10.json`.
+//!
+//! Scale knobs: BLAZE_BENCH_SVC_JOBS (default 16 arrivals per run),
+//! BLAZE_BENCH_SVC_BYTES (default 48KB heavy-job corpus).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use blaze::service::{
+    JobRequest, JobService, JobStatus, SchedPolicy, ServiceConf, WorkloadKind,
+};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Jain fairness index: `(Σx)² / (n·Σx²)`; 1.0 = perfectly equal.
+fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// The mixed-tenant arrival list: every other job a short grep, the rest
+/// alternating pagerank / join from the two heavy tenants.
+fn schedule(jobs: usize, heavy_bytes: u64) -> Vec<JobRequest> {
+    (0..jobs)
+        .map(|i| {
+            let seed = i as u64 + 1;
+            match i % 4 {
+                0 | 2 => JobRequest::new("short", WorkloadKind::Grep)
+                    .bytes(heavy_bytes / 4)
+                    .seed(seed),
+                1 => JobRequest::new("heavy-a", WorkloadKind::PageRank)
+                    .bytes(heavy_bytes)
+                    .rounds(3)
+                    .seed(seed),
+                _ => JobRequest::new("heavy-b", WorkloadKind::Join).bytes(heavy_bytes).seed(seed),
+            }
+        })
+        .collect()
+}
+
+struct RunStats {
+    policy: SchedPolicy,
+    gap_ms: u64,
+    completed: u64,
+    preemptions: u64,
+    wall_secs: f64,
+    jobs_per_sec: f64,
+    p50_all: f64,
+    p99_all: f64,
+    p50_short: f64,
+    p99_short: f64,
+    jain_wait: f64,
+}
+
+fn run(policy: SchedPolicy, gap_ms: u64, jobs: usize, heavy_bytes: u64) -> RunStats {
+    let svc = JobService::new(
+        ServiceConf::new().threads(2).slots(2).queue_cap(jobs.max(1)).policy(policy),
+    );
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for (i, req) in schedule(jobs, heavy_bytes).into_iter().enumerate() {
+        let due = Duration::from_millis(i as u64 * gap_ms);
+        if let Some(sleep) = due.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        handles.push(svc.submit(req).expect("open-loop run is sized under the admission cap"));
+    }
+    let mut all = Vec::new();
+    let mut short = Vec::new();
+    for h in &handles {
+        match h.wait() {
+            JobStatus::Done(s) => {
+                all.push(s.latency_secs);
+                if h.kind().is_short() {
+                    short.push(s.latency_secs);
+                }
+            }
+            other => panic!("bench job {} ended {}", h.id(), other.label()),
+        }
+    }
+    let report = svc.shutdown();
+    assert!(report.balances(), "admission ledger must balance:\n{}", report.render());
+    all.sort_by(f64::total_cmp);
+    short.sort_by(f64::total_cmp);
+    // Fairness of scheduler attention: each tenant's mean queue-wait per
+    // completed stage.
+    let waits: BTreeMap<&str, f64> = report
+        .tenants
+        .iter()
+        .map(|t| {
+            let stages = t.metrics.count("sched.stages").max(1) as f64;
+            (t.name.as_str(), t.metrics.value("sched.queue_wait") / stages)
+        })
+        .collect();
+    let per_tenant: Vec<f64> = waits.values().copied().collect();
+    RunStats {
+        policy,
+        gap_ms,
+        completed: report.completed,
+        preemptions: report.preemptions,
+        wall_secs: report.wall_secs,
+        jobs_per_sec: report.completed as f64 / report.wall_secs.max(1e-9),
+        p50_all: percentile(&all, 50.0),
+        p99_all: percentile(&all, 99.0),
+        p50_short: percentile(&short, 50.0),
+        p99_short: percentile(&short, 99.0),
+        jain_wait: jain(&per_tenant),
+    }
+}
+
+fn row_json(r: &RunStats) -> String {
+    format!(
+        "{{\"bench\": \"service\", \"policy\": \"{}\", \"gap_ms\": {}, \"completed\": {}, \
+         \"preemptions\": {}, \"wall_secs\": {:.4}, \"jobs_per_sec\": {:.4}, \
+         \"p50_secs\": {:.4}, \"p99_secs\": {:.4}, \"p50_short_secs\": {:.4}, \
+         \"p99_short_secs\": {:.4}, \"jain_fairness\": {:.4}}}",
+        r.policy.name(),
+        r.gap_ms,
+        r.completed,
+        r.preemptions,
+        r.wall_secs,
+        r.jobs_per_sec,
+        r.p50_all,
+        r.p99_all,
+        r.p50_short,
+        r.p99_short,
+        r.jain_wait,
+    )
+}
+
+fn print_row(r: &RunStats) {
+    println!(
+        "  {:<5} gap={:>3}ms  {:>5.2} jobs/s  p50 {:>7.3}s  p99 {:>7.3}s  \
+         short p50 {:>7.3}s p99 {:>7.3}s  jain {:.3}  ({} preemption(s))",
+        r.policy.name(),
+        r.gap_ms,
+        r.jobs_per_sec,
+        r.p50_all,
+        r.p99_all,
+        r.p50_short,
+        r.p99_short,
+        r.jain_wait,
+        r.preemptions,
+    );
+}
+
+fn main() {
+    let jobs = env_u64("BLAZE_BENCH_SVC_JOBS", 16) as usize;
+    let heavy_bytes = env_u64("BLAZE_BENCH_SVC_BYTES", 48 << 10);
+    // Arrival gaps, fastest last: the sweep tightens until the service is
+    // saturated and queueing dominates.
+    let gaps: [u64; 3] = [60, 25, 8];
+    println!(
+        "SV1: open-loop arrivals, {jobs} job(s)/run, heavy corpus {heavy_bytes} B, \
+         3 tenants (grep / pagerank / join), 2 slots x 2 threads"
+    );
+
+    let mut rows = Vec::new();
+    for gap in gaps {
+        let r = run(SchedPolicy::Fair, gap, jobs, heavy_bytes);
+        print_row(&r);
+        rows.push(r);
+    }
+    let fifo = run(SchedPolicy::Fifo, gaps[gaps.len() - 1], jobs, heavy_bytes);
+    print_row(&fifo);
+
+    let fair_high = &rows[rows.len() - 1];
+    println!(
+        "\nhighest rate, short-job p99: fair {:.3}s vs fifo {:.3}s ({:.1}x)",
+        fair_high.p99_short,
+        fifo.p99_short,
+        fifo.p99_short / fair_high.p99_short.max(1e-9),
+    );
+    assert!(
+        fair_high.p99_short < fifo.p99_short,
+        "fair scheduling must beat FIFO on short-job p99 at the highest arrival rate \
+         (fair {:.3}s >= fifo {:.3}s)",
+        fair_high.p99_short,
+        fifo.p99_short,
+    );
+
+    rows.push(fifo);
+    let json: String =
+        rows.iter().map(row_json).collect::<Vec<_>>().join(",\n  ");
+    let out = format!("[\n  {json}\n]\n");
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir).expect("create target/bench-results");
+    let path = dir.join("BENCH_10.json");
+    std::fs::write(&path, out).expect("write BENCH_10.json");
+    println!("wrote {}", path.display());
+}

@@ -355,6 +355,25 @@ impl<K: MapKey, V: MapValue> ConcurrentHashMap<K, V> {
         out
     }
 
+    /// Drain **everything** — thread caches and segments — one lock at a
+    /// time, without the pool-parallel [`sync`](Self::sync) pass. Safe to
+    /// call while writers keep upserting: they block only on the single
+    /// table being drained and land in the freshly emptied one, so the
+    /// same key may come back once from this drain and again from a later
+    /// one (callers merge through their associative + commutative
+    /// `reduce`). This is the map-phase spill path, which runs *inside* a
+    /// mapper task and therefore cannot nest another pool dispatch.
+    pub fn drain_all(&self) -> Vec<Entry<K, V>> {
+        let mut out = Vec::new();
+        for c in &self.caches {
+            out.extend(c.0.lock().unwrap().drain());
+        }
+        for s in &self.segments {
+            out.extend(s.0.lock().unwrap().drain());
+        }
+        out
+    }
+
     /// Aggregate contention statistics (only tracked in debug builds).
     pub fn stats(&self) -> MapStats {
         let mut agg = MapStats::default();

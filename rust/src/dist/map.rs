@@ -14,18 +14,57 @@
 //! With [`CombineMode::None`] the map phase instead buffers every raw
 //! `(K, V)` emission per thread and the shuffle ships them all — the
 //! ablation that quantifies the paper's local-reduce claim.
+//!
+//! The map phase itself can be memory-bounded
+//! ([`DistHashMap::with_map_bound`]): beyond a spill threshold of
+//! estimated in-flight bytes, pending entries drain into owner-bucketed
+//! encoded frames parked on the disk tier, and the next shuffle ships
+//! each owner's parked frames ahead of the fresh payload (every frame is
+//! self-delimiting, so receivers just keep decoding). This closes the
+//! ROADMAP 2b hole where `--spill-threshold` bounded only the
+//! reduce-side merge while the map-side combine grew without limit.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
+use crate::cache::CacheKey;
 use crate::cluster::Comm;
 use crate::concurrent::{default_segments, CachePolicy, ConcurrentHashMap, MapKey, MapValue};
 use crate::hash::{bucket_of, HashKind};
 use crate::storage::{fresh_spill_namespace, BlockStore, DiskTier, ExternalMerger, HeapSize};
+use crate::trace::{self, SpanCat};
 use crate::util::ser::{
     decode_varint, encode_pairs, DataKey, Decode, DictReader, DictStats, Encode, Reader,
 };
 
 use super::CombineMode;
+
+/// Conservative per-pair bookkeeping overhead (hash + table slot) added
+/// to the heap estimate when charging the map-phase budget.
+const PAIR_OVERHEAD: u64 = 32;
+
+/// Map-phase spill state (see the module docs): a byte budget, the disk
+/// tier frames park on, and the per-owner frame keys awaiting the next
+/// shuffle. Attached only on shuffle stages — an elided stage's map
+/// output *is* the job result, so there is nothing to bound there.
+struct MapBound {
+    threshold: u64,
+    disk: Arc<DiskTier>,
+    dict: bool,
+    /// Frame namespace on `disk` (fresh per map, like a merger's runs).
+    namespace: u64,
+    /// Estimated heap bytes upserted since the last spill.
+    bytes: AtomicU64,
+    /// Next frame id (the block key's partition field).
+    seq: AtomicU64,
+    /// Single-spiller gate: contenders skip — their bytes are already
+    /// charged, so the winner's drain covers them.
+    gate: Mutex<()>,
+    /// Per-owner spilled frame keys, in write order.
+    frames: Mutex<Vec<Vec<CacheKey>>>,
+    /// Dictionary stats accumulated across spilled frames.
+    stats: Mutex<DictStats>,
+}
 
 pub struct DistHashMap<K: MapKey, V: MapValue> {
     rank: usize,
@@ -38,6 +77,8 @@ pub struct DistHashMap<K: MapKey, V: MapValue> {
     local: ConcurrentHashMap<K, V>,
     /// Per-thread raw emission buffers (`CombineMode::None` only).
     raw: Vec<Mutex<Vec<(K, V)>>>,
+    /// Map-phase spill budget, when bounded.
+    bound: Option<MapBound>,
 }
 
 impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
@@ -73,7 +114,27 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
                 policy,
             ),
             raw: (0..nthreads).map(|_| Mutex::new(Vec::new())).collect(),
+            bound: None,
         }
+    }
+
+    /// Attach the map-phase spill budget: beyond `threshold` estimated
+    /// in-flight bytes, [`upsert_spillable`](Self::upsert_spillable)
+    /// parks pending entries on `disk` as owner-bucketed frames until the
+    /// shuffle ships them.
+    pub fn with_map_bound(mut self, threshold: u64, disk: Arc<DiskTier>, dict: bool) -> Self {
+        self.bound = Some(MapBound {
+            threshold,
+            disk,
+            dict,
+            namespace: fresh_spill_namespace(),
+            bytes: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            gate: Mutex::new(()),
+            frames: Mutex::new((0..self.nnodes).map(|_| Vec::new()).collect()),
+            stats: Mutex::new(DictStats::default()),
+        });
+        self
     }
 
     pub fn rank(&self) -> usize {
@@ -120,6 +181,13 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
     /// them (still globally disjoint under the uniqueness contract) and
     /// nothing touches the fabric.
     pub fn settle_local(&self, reduce: impl Fn(&mut V, V) + Sync) {
+        if let Some(b) = &self.bound {
+            debug_assert!(
+                b.frames.lock().unwrap().iter().all(Vec::is_empty),
+                "settle_local would lose parked map-spill frames; \
+                 elided stages must not attach a map bound"
+            );
+        }
         if self.combine == CombineMode::None {
             for cell in &self.raw {
                 for (k, v) in cell.lock().unwrap().drain(..) {
@@ -158,6 +226,57 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         by_owner
     }
 
+    /// Take this map's parked spill frames, read back per owner, plus the
+    /// dictionary stats their encoding accumulated. `None` when no bound
+    /// is attached or nothing spilled. Blocks are deleted as they are
+    /// consumed.
+    fn take_spilled_frames(&self) -> Option<(Vec<Vec<Vec<u8>>>, DictStats)> {
+        let b = self.bound.as_ref()?;
+        let mut frames = b.frames.lock().unwrap();
+        if frames.iter().all(Vec::is_empty) {
+            return None;
+        }
+        let out = frames
+            .iter_mut()
+            .map(|keys| {
+                keys.drain(..)
+                    .map(|key| {
+                        let buf = b
+                            .disk
+                            .read(&key)
+                            .expect("map-spill frame read")
+                            .expect("map-spill frame missing");
+                        b.disk.delete(&key);
+                        buf
+                    })
+                    .collect()
+            })
+            .collect();
+        Some((out, std::mem::take(&mut *b.stats.lock().unwrap())))
+    }
+
+    /// Prepend `dst`'s parked frames to its fresh payload (frames are
+    /// self-delimiting, so the receiver just keeps decoding).
+    fn frames_plus(
+        spilled: &Option<(Vec<Vec<Vec<u8>>>, DictStats)>,
+        dst: usize,
+        fresh: Vec<u8>,
+    ) -> Vec<u8> {
+        match spilled {
+            Some((frames, _)) if !frames[dst].is_empty() => {
+                let mut payload = Vec::with_capacity(
+                    frames[dst].iter().map(Vec::len).sum::<usize>() + fresh.len(),
+                );
+                for f in &frames[dst] {
+                    payload.extend_from_slice(f);
+                }
+                payload.extend_from_slice(&fresh);
+                payload
+            }
+            _ => fresh,
+        }
+    }
+
     /// The all-to-all re-shard: collect every pending entry, ship each to
     /// its owner (self-delivery stays typed and off the wire), merge what
     /// arrives. After this, the map holds exactly this rank's shard.
@@ -181,11 +300,13 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
     {
         assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
         let mut by_owner = self.drain_by_owner(&reduce);
+        let spilled = self.take_spilled_frames();
 
         // 3. Exchange. The local shard bypasses serialization and the
         //    wire — that asymmetry is the measurable local-reduce saving.
+        //    Parked map-spill frames ride ahead of each fresh payload.
         let mine = std::mem::take(&mut by_owner[self.rank]);
-        let mut stats = DictStats::default();
+        let mut stats = spilled.as_ref().map(|(_, s)| *s).unwrap_or_default();
         let outgoing: Vec<Vec<u8>> = by_owner
             .iter()
             .enumerate()
@@ -195,36 +316,47 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
                 }
                 let (bytes, s) = encode_pairs(shard, dict);
                 stats = stats.merged(&s);
-                bytes
+                Self::frames_plus(&spilled, dst, bytes)
             })
             .collect();
         let incoming = comm.all_to_all(outgoing);
 
-        // 4. Merge own + received into the (now empty) local table.
+        // 4. Merge own + received into the (now empty) local table. A
+        //    payload is a sequence of self-delimiting frames, each with
+        //    its own dictionary arena.
         for (k, v) in mine {
             self.local.upsert(0, k, v, &reduce);
+        }
+        let absorb = |buf: &[u8]| {
+            let mut r = Reader::new(buf);
+            while !r.is_empty() {
+                let mut ctx = DictReader::new();
+                let count = decode_varint(&mut r).expect("dist shuffle decode");
+                for _ in 0..count {
+                    let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
+                    let v = V::decode(&mut r).expect("dist shuffle decode");
+                    let h = K::ref_hash(&kr, &ctx, self.hash);
+                    self.local.upsert_borrowed(
+                        0,
+                        h,
+                        |k: &K| K::ref_eq_owned(&kr, &ctx, k),
+                        || K::ref_materialize(&kr, &ctx),
+                        v,
+                        &reduce,
+                    );
+                }
+            }
+        };
+        if let Some((frames, _)) = &spilled {
+            for buf in &frames[self.rank] {
+                absorb(buf);
+            }
         }
         for (src, buf) in incoming.into_iter().enumerate() {
             if src == self.rank {
                 continue;
             }
-            let mut r = Reader::new(&buf);
-            let mut ctx = DictReader::new();
-            let count = decode_varint(&mut r).expect("dist shuffle decode");
-            for _ in 0..count {
-                let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
-                let v = V::decode(&mut r).expect("dist shuffle decode");
-                let h = K::ref_hash(&kr, &ctx, self.hash);
-                self.local.upsert_borrowed(
-                    0,
-                    h,
-                    |k: &K| K::ref_eq_owned(&kr, &ctx, k),
-                    || K::ref_materialize(&kr, &ctx),
-                    v,
-                    &reduce,
-                );
-            }
-            assert!(r.is_empty(), "dist shuffle decode: trailing bytes");
+            absorb(&buf);
         }
         self.local.sync(self.nthreads, &reduce);
         stats
@@ -253,10 +385,12 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
     {
         assert_eq!(comm.nnodes(), self.nnodes, "comm/map cluster size mismatch");
         let mut by_owner = self.drain_by_owner(&reduce);
+        let spilled = self.take_spilled_frames();
 
-        // 3. Exchange — byte-for-byte the same protocol as `shuffle`.
+        // 3. Exchange — byte-for-byte the same protocol as `shuffle`
+        //    (parked map-spill frames ride ahead of each fresh payload).
         let mine = std::mem::take(&mut by_owner[self.rank]);
-        let mut stats = DictStats::default();
+        let mut stats = spilled.as_ref().map(|(_, s)| *s).unwrap_or_default();
         let outgoing: Vec<Vec<u8>> = by_owner
             .iter()
             .enumerate()
@@ -266,7 +400,7 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
                 }
                 let (bytes, s) = encode_pairs(shard, dict);
                 stats = stats.merged(&s);
-                bytes
+                Self::frames_plus(&spilled, dst, bytes)
             })
             .collect();
         let incoming = comm.all_to_all(outgoing);
@@ -285,21 +419,120 @@ impl<K: MapKey, V: MapValue> DistHashMap<K, V> {
         for (k, v) in mine {
             merger.insert(k, v, &reduce);
         }
+        let mut absorb = |buf: &[u8]| {
+            let mut r = Reader::new(buf);
+            while !r.is_empty() {
+                let mut ctx = DictReader::new();
+                let count = decode_varint(&mut r).expect("dist shuffle decode");
+                for _ in 0..count {
+                    let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
+                    let v = V::decode(&mut r).expect("dist shuffle decode");
+                    merger.insert_ref(kr, &ctx, v, &reduce);
+                }
+            }
+        };
+        if let Some((frames, _)) = &spilled {
+            for buf in &frames[self.rank] {
+                absorb(buf);
+            }
+        }
         for (src, buf) in incoming.into_iter().enumerate() {
             if src == self.rank {
                 continue;
             }
-            let mut r = Reader::new(&buf);
-            let mut ctx = DictReader::new();
-            let count = decode_varint(&mut r).expect("dist shuffle decode");
-            for _ in 0..count {
-                let kr = K::dict_decode(&mut r, &mut ctx).expect("dist shuffle decode");
-                let v = V::decode(&mut r).expect("dist shuffle decode");
-                merger.insert_ref(kr, &ctx, v, &reduce);
-            }
-            assert!(r.is_empty(), "dist shuffle decode: trailing bytes");
+            absorb(&buf);
         }
+        drop(absorb);
         (merger.finish(&reduce), stats)
+    }
+}
+
+/// The budgeted map phase. The spill path encodes pending pairs into
+/// disk frames, so these methods carry the full data-key bounds — every
+/// [`crate::mapreduce::Workload`] key/value type already satisfies them.
+impl<K, V> DistHashMap<K, V>
+where
+    K: MapKey + DataKey + HeapSize,
+    V: MapValue + Encode + HeapSize,
+{
+    /// [`upsert`](Self::upsert) that charges the map-phase budget and
+    /// spills pending entries to disk past the bound's threshold. Plain
+    /// upsert when no bound is attached.
+    #[inline]
+    pub fn upsert_spillable(&self, tid: usize, key: K, value: V, reduce: impl Fn(&mut V, V)) {
+        let est = if self.bound.is_some() {
+            (key.heap_bytes() + value.heap_bytes()) as u64 + PAIR_OVERHEAD
+        } else {
+            0
+        };
+        self.upsert(tid, key, value, reduce);
+        self.charge(est);
+    }
+
+    /// Charge `est` freshly upserted bytes against the bound; spill once
+    /// over threshold. The estimate deliberately counts combined-in-place
+    /// upserts too (over-counting only spills earlier, never later, so
+    /// the bound holds).
+    #[inline]
+    fn charge(&self, est: u64) {
+        if let Some(b) = &self.bound {
+            if b.bytes.fetch_add(est, Relaxed) + est > b.threshold {
+                self.spill_pending();
+            }
+        }
+    }
+
+    /// Drain pending entries (thread caches + segments, or the raw
+    /// buffers) into owner-bucketed encoded frames on the disk tier. One
+    /// spiller at a time; contenders return immediately — their bytes are
+    /// already charged, so the winner's drain covers them.
+    fn spill_pending(&self) {
+        let Some(b) = &self.bound else { return };
+        let Ok(_gate) = b.gate.try_lock() else { return };
+        if b.bytes.load(Relaxed) <= b.threshold {
+            return; // another spiller just drained
+        }
+        let n = self.nnodes;
+        let mut by_owner: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+        match self.combine {
+            CombineMode::Eager => {
+                for e in self.local.drain_all() {
+                    by_owner[bucket_of(e.hash, n)].push((e.key, e.value));
+                }
+            }
+            CombineMode::None => {
+                for cell in &self.raw {
+                    for (k, v) in cell.lock().unwrap().drain(..) {
+                        let h = k.hash_with(self.hash);
+                        by_owner[bucket_of(h, n)].push((k, v));
+                    }
+                }
+            }
+        }
+        b.bytes.store(0, Relaxed);
+        let mut frames = b.frames.lock().unwrap();
+        for (owner, shard) in by_owner.iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let (bytes, s) = encode_pairs(shard, b.dict);
+            let _sp = trace::span_arg(SpanCat::SpillRun, "map-spill", bytes.len() as u64);
+            let key = CacheKey {
+                namespace: b.namespace,
+                generation: 0,
+                partition: b.seq.fetch_add(1, Relaxed),
+                splits: 0,
+            };
+            match b.disk.write(key, &bytes) {
+                Ok(_) => {
+                    b.disk.counters().record_spill(bytes.len() as u64);
+                    frames[owner].push(key);
+                    let mut stats = b.stats.lock().unwrap();
+                    *stats = stats.merged(&s);
+                }
+                Err(_) => b.disk.counters().record_spill_failure(),
+            }
+        }
     }
 }
 
@@ -322,6 +555,31 @@ impl<V: MapValue> DistHashMap<String, V> {
             }
             CombineMode::None => self.raw[tid].lock().unwrap().push((key.to_string(), value)),
         }
+    }
+}
+
+impl<V> DistHashMap<String, V>
+where
+    V: MapValue + Encode + HeapSize,
+{
+    /// Borrowed-key [`upsert_str`](Self::upsert_str) with the map-phase
+    /// budget charge (see [`upsert_spillable`](Self::upsert_spillable)).
+    #[inline]
+    pub fn upsert_str_spillable(
+        &self,
+        tid: usize,
+        key: &str,
+        value: V,
+        reduce: impl Fn(&mut V, V),
+    ) {
+        let est = if self.bound.is_some() {
+            // Mirrors `String`'s `HeapSize` (len + 24) without owning.
+            (key.len() + 24 + value.heap_bytes()) as u64 + PAIR_OVERHEAD
+        } else {
+            0
+        };
+        self.upsert_str(tid, key, value, reduce);
+        self.charge(est);
     }
 }
 

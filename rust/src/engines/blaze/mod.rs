@@ -236,7 +236,7 @@ pub fn run_workload_multi<W: Workload>(
                     let mut n = 0u64;
                     w.map_rel(rel, i as u64, line, &mut |k, v| {
                         n += 1;
-                        map.upsert(ctx.worker, k, v, W::combine);
+                        map.upsert_spillable(ctx.worker, k, v, W::combine);
                     });
                     n
                 })?;
@@ -320,7 +320,7 @@ pub fn run_workload_cached<W: CacheableWorkload>(
                     let mut n = 0u64;
                     w.map_parsed(rel, &parsed[i], &mut |k, v| {
                         n += 1;
-                        map.upsert(ctx.worker, k, v, W::combine);
+                        map.upsert_spillable(ctx.worker, k, v, W::combine);
                     });
                     emitted.fetch_add(n, Ordering::Relaxed);
                 })?;
@@ -421,7 +421,7 @@ pub fn run_workload_str_lines<W: StrWorkload>(
                 let mut n = 0u64;
                 w.map_str(i as u64, line, &mut |t, v| {
                     n += 1;
-                    map.upsert_str(ctx.worker, t, v, W::combine);
+                    map.upsert_str_spillable(ctx.worker, t, v, W::combine);
                 });
                 n
             })
@@ -587,7 +587,7 @@ where
     // workers carry ([`ExecCtx::worker`]) always index in range.
     let exec = Executor::for_threads(conf.threads);
     let run_node = |comm: &Comm| -> NodeOutcome<K, V> {
-        let map: DistHashMap<K, V> = DistHashMap::with_policy(
+        let mut map: DistHashMap<K, V> = DistHashMap::with_policy(
             comm.rank,
             conf.nnodes,
             exec.width(),
@@ -595,6 +595,12 @@ where
             conf.combine,
             conf.cache_policy,
         );
+        // The spill budget bounds the map phase too (ROADMAP 2b): past
+        // the threshold, pending combine state parks on the job's spill
+        // tier and rejoins at the exchange.
+        if let Some(sp) = spill {
+            map = map.with_map_bound(sp.threshold, Arc::clone(&sp.disk), conf.dict_keys);
+        }
         comm.barrier();
         let job_sw = Stopwatch::start();
 

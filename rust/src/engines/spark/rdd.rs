@@ -599,20 +599,48 @@ impl<K: ShuffleKey, V: ShuffleVal> ShuffleDep<K, V> {
         // Bucket (and combine) by reduce partition.
         let mut buckets: Vec<Vec<(K, V)>> = (0..r_parts).map(|_| Vec::new()).collect();
         if conf.map_side_combine {
-            let mut combined: Vec<HashMap<K, V>> = (0..r_parts).map(|_| HashMap::new()).collect();
-            for (k, v) in pairs {
-                let r = bucket_of(k.hash_with(HashKind::Fx), r_parts);
-                match combined[r].entry(k) {
-                    std::collections::hash_map::Entry::Occupied(mut e) => {
-                        (self.reduce)(e.get_mut(), v)
-                    }
-                    std::collections::hash_map::Entry::Vacant(e) => {
-                        e.insert(v);
+            if let Some(threshold) = self.spill_threshold {
+                // Bounded map-side combine (ROADMAP 2b): the combiners
+                // share the stage's spill budget, so a skew-heavy map
+                // partition sort-and-spills instead of growing without
+                // limit. Each merger's sorted output still encodes as one
+                // block, so the read side is unchanged.
+                let per_part = (threshold / r_parts as u64).max(1);
+                let mut combined: Vec<ExternalMerger<K, V>> = (0..r_parts)
+                    .map(|_| {
+                        ExternalMerger::new(
+                            per_part,
+                            Arc::clone(&inner.disk) as Arc<dyn BlockStore>,
+                            Arc::clone(inner.disk.counters()),
+                            fresh_spill_namespace(),
+                        )
+                        .with_dict_keys(conf.dict_keys)
+                    })
+                    .collect();
+                for (k, v) in pairs {
+                    let r = bucket_of(k.hash_with(HashKind::Fx), r_parts);
+                    combined[r].insert(k, v, self.reduce);
+                }
+                for (r, merger) in combined.into_iter().enumerate() {
+                    buckets[r] = merger.finish(self.reduce);
+                }
+            } else {
+                let mut combined: Vec<HashMap<K, V>> =
+                    (0..r_parts).map(|_| HashMap::new()).collect();
+                for (k, v) in pairs {
+                    let r = bucket_of(k.hash_with(HashKind::Fx), r_parts);
+                    match combined[r].entry(k) {
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            (self.reduce)(e.get_mut(), v)
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(v);
+                        }
                     }
                 }
-            }
-            for (r, map) in combined.into_iter().enumerate() {
-                buckets[r] = map.into_iter().collect();
+                for (r, map) in combined.into_iter().enumerate() {
+                    buckets[r] = map.into_iter().collect();
+                }
             }
         } else {
             for (k, v) in pairs {

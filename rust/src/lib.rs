@@ -81,6 +81,19 @@
 //! [`mapreduce::JobReport`]), and report `detail` fields are typed
 //! [`trace::MetricSet`]s rather than strings.
 //!
+//! ## The service layer
+//!
+//! [`service`] turns the single-job CLI into a multi-tenant job service:
+//! [`service::JobService`] admits a stream of tenant-tagged
+//! [`service::JobRequest`]s, schedules their stages under weighted fair
+//! queueing over a bounded slot pool (stage-granular, so long iterative
+//! jobs interleave with short scans), isolates tenants in the shared
+//! [`storage::TieredStore`] via namespace ranges and per-tenant byte
+//! quotas, and refuses work with a typed
+//! [`service::AdmissionError`] when saturated. `blaze serve` replays
+//! arrival traces through it; queue waits, admissions, and preemptions
+//! are trace spans.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
@@ -95,6 +108,7 @@ pub mod hash;
 pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod storage;
 pub mod trace;
 pub mod util;

@@ -17,6 +17,10 @@
 //!   (same options as `run`).
 //! * `trace-check` — validate a Chrome trace-event JSON file written by
 //!   `--trace-out` and summarize its tracks.
+//! * `serve`     — the multi-tenant job service: replay an arrival trace
+//!   (`--script <arrivals.json>`, or a synthetic `--tenants/--jobs/--mix`
+//!   schedule) through the stage-granular fair scheduler over one shared
+//!   store, with per-tenant quotas and typed admission control.
 //! * `generate`  — synthesize a corpus to a file.
 //! * `fault`     — fault-tolerance demo (inject failures on both engines).
 //! * `xla`       — run the XLA/PJRT-accelerated combiner on a corpus.
@@ -60,6 +64,7 @@ fn main() {
         Some("compare") => dispatch(cmd_compare(), &argv[1..], do_compare),
         Some("profile") => dispatch(cmd_profile(), &argv[1..], do_profile),
         Some("trace-check") => dispatch(cmd_trace_check(), &argv[1..], do_trace_check),
+        Some("serve") => dispatch(cmd_serve(), &argv[1..], do_serve),
         Some("generate") => dispatch(cmd_generate(), &argv[1..], do_generate),
         Some("fault") => dispatch(cmd_fault(), &argv[1..], do_fault),
         Some("xla") => dispatch(cmd_xla(), &argv[1..], do_xla),
@@ -79,7 +84,7 @@ fn main() {
 fn print_usage() {
     println!(
         "blaze — Spark vs MPI/OpenMP word-count MapReduce (Li 2018), reproduced\n\n\
-         Usage: blaze <run|plan|compare|profile|trace-check|generate|fault|xla> [options]\n\
+         Usage: blaze <run|plan|compare|profile|trace-check|serve|generate|fault|xla> [options]\n\
          Try `blaze run --help`."
     );
 }
@@ -737,6 +742,11 @@ fn cmd_plan() -> Command {
         Some("unbounded"),
         "iterative workloads: cache budget (none = every cache point elided)",
     )
+    .opt(
+        "tenant",
+        None,
+        "render cache-point keys in this service tenant index's namespace range",
+    )
     .flag("force-shuffle", "run the exchange even for zero-shuffle workloads");
     cluster_opts(spill_opts(cmd))
 }
@@ -773,7 +783,15 @@ fn iterative_step_plan<I: IterativeWorkload>(
 }
 
 fn do_plan(args: &Args) -> Result<(), String> {
-    let spec = spec_from_args(args)?;
+    let mut spec = spec_from_args(args)?;
+    if let Some(t) = parse_tenant(args)? {
+        let base = blaze::service::tenant_namespace_base(t);
+        println!(
+            "tenant {t}: cache-key namespaces [{base}, {}) in the shared service store\n",
+            base + blaze::service::TENANT_NS_SPAN
+        );
+        spec = spec.namespace_base(base);
+    }
     let tokenizer = Tokenizer::parse(&args.get_str("tokenizer")).ok_or("bad --tokenizer")?;
     let k = args.get_usize("top").map_err(|e| e.to_string())?;
     let name = args.get_str("workload");
@@ -862,6 +880,17 @@ fn cmd_profile() -> Command {
         "run one job under the tracer; print per-stage phase breakdown, \
          worker utilization, and the critical path",
     ))
+    .opt(
+        "script",
+        None,
+        "profile a service replay of this arrival trace instead of a single job",
+    )
+    .opt(
+        "tenant",
+        None,
+        "keep only this tenant index's queue-wait/admission/preemption spans \
+         in the breakdown and trace export",
+    )
 }
 
 fn do_profile(args: &Args) -> Result<(), String> {
@@ -869,15 +898,65 @@ fn do_profile(args: &Args) -> Result<(), String> {
     let before = exec.metrics();
     let session = blaze::trace::TraceSession::start();
     let sw = blaze::util::stats::Stopwatch::start();
-    let result = run_workload(args);
+    let result = match args.get("script") {
+        Some(path) => profile_service_replay(args, path),
+        None => run_workload(args),
+    };
     let wall_secs = sw.elapsed_secs();
-    let trace = session.finish();
+    let mut trace = session.finish();
     result?;
+    if let Some(t) = parse_tenant(args)? {
+        filter_service_spans(&mut trace, t as u64);
+    }
     print_profile(&trace, &exec.metrics().delta_since(&before), wall_secs);
     if let Some(path) = args.get("trace-out") {
         write_trace(path, &trace)?;
     }
     Ok(())
+}
+
+/// `--tenant <idx>` on `plan`/`profile` (absent = no tenant view).
+fn parse_tenant(args: &Args) -> Result<Option<usize>, String> {
+    match args.get("tenant") {
+        None => Ok(None),
+        Some(raw) => raw
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| format!("bad --tenant {raw} (a tenant index)")),
+    }
+}
+
+/// Keep only `tenant`'s service-scheduling spans (queue-wait, admission,
+/// preemption — their arg is the tenant index); every other span category
+/// passes through untouched.
+fn filter_service_spans(trace: &mut blaze::trace::Trace, tenant: u64) {
+    use blaze::trace::SpanCat;
+    for thread in &mut trace.threads {
+        thread.spans.retain(|s| {
+            !matches!(s.cat, SpanCat::QueueWait | SpanCat::Admission | SpanCat::Preemption)
+                || s.arg == tenant
+        });
+    }
+}
+
+/// `blaze profile --script`: drive the job service from an arrival trace
+/// under the tracer, so queue-wait/admission/preemption show up in the
+/// phase breakdown alongside engine phases.
+fn profile_service_replay(args: &Args, path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let events = blaze::service::parse_script(&text)?;
+    let mut conf = blaze::service::ServiceConf::new()
+        .engine(Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?);
+    if let Some(t) = parse_threads(args)? {
+        conf = conf.threads(t);
+    }
+    if let Some(bytes) = parse_spill_threshold(&args.get_str("spill-threshold"))? {
+        conf = conf.spill_threshold(bytes);
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        conf = conf.spill_dir(std::path::PathBuf::from(dir));
+    }
+    replay_schedule(blaze::service::JobService::new(conf), &events)
 }
 
 /// The `blaze profile` tables: phase breakdown, executor utilization,
@@ -960,6 +1039,191 @@ fn do_trace_check(args: &Args) -> Result<(), String> {
     }
     if !summary.counter_tracks.is_empty() {
         println!("  counter track(s): {}", summary.counter_tracks.join(", "));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve ----
+
+fn cmd_serve() -> Command {
+    Command::new(
+        "serve",
+        "multi-tenant job service: replay an arrival trace (or a synthetic \
+         schedule) through the fair scheduler over one shared store",
+    )
+    .opt(
+        "script",
+        None,
+        "arrival trace JSON, one event per line: \
+         {\"at_ms\":..,\"tenant\":..,\"workload\":..,\"bytes\":..,\"weight\":..} \
+         (default: a synthetic schedule from the options below)",
+    )
+    .opt("tenants", Some("3"), "synthetic schedule: tenant count")
+    .opt("jobs", Some("12"), "synthetic schedule: total arrivals")
+    .opt(
+        "mix",
+        Some("grep,wordcount,pagerank"),
+        "synthetic schedule: workload cycle (grep|wordcount|join|pagerank)",
+    )
+    .opt("gap-ms", Some("20"), "synthetic schedule: inter-arrival gap")
+    .opt("bytes", Some("64KB"), "synthetic schedule: per-job corpus size")
+    .opt("engine", Some("blaze-tcm"), "blaze|blaze-tcm|spark|spark-stripped")
+    .opt("threads", Some("auto"), "executor threads per job: auto|<n>")
+    .opt("slots", Some("2"), "concurrent stage slots the scheduler hands out")
+    .opt("queue-cap", Some("32"), "max jobs in flight before admission rejects")
+    .opt("policy", Some("fair"), "stage scheduling across tenants: fair|fifo")
+    .opt("store-budget", Some("unbounded"), "shared store memory budget")
+    .opt(
+        "tenant-quota",
+        Some("none"),
+        "per-tenant resident-byte quota in the shared store; over-quota \
+         inserts demote to disk at birth (none = unlimited)",
+    )
+    .opt(
+        "spill-threshold",
+        Some("none"),
+        "bounded-memory exchange budget per job (none = unbounded)",
+    )
+    .opt("spill-dir", None, "spill/demotion directory (default: system temp)")
+    .opt("trace-out", None, "write the service timeline as Chrome trace-event JSON")
+    .flag("verify", "check every job against its serial oracle in-job")
+}
+
+fn do_serve(args: &Args) -> Result<(), String> {
+    use blaze::service::{self, JobService, SchedPolicy, ServiceConf};
+
+    let events = match args.get("script") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+            service::parse_script(&text)?
+        }
+        None => service::synthetic(
+            args.get_usize("tenants").map_err(|e| e.to_string())?.max(1),
+            args.get_usize("jobs").map_err(|e| e.to_string())?,
+            &service::parse_mix(&args.get_str("mix"))?,
+            args.get_u64("gap-ms").map_err(|e| e.to_string())?,
+            args.get_bytes("bytes").map_err(|e| e.to_string())?,
+            args.has_flag("verify"),
+        ),
+    };
+    if events.is_empty() {
+        return Err("empty arrival schedule".into());
+    }
+    let policy = SchedPolicy::parse(&args.get_str("policy"))
+        .ok_or_else(|| format!("bad --policy {} (fair|fifo)", args.get_str("policy")))?;
+    let budget_raw = args.get_str("store-budget");
+    let mut conf = ServiceConf::new()
+        .engine(Engine::parse(&args.get_str("engine")).ok_or("bad --engine")?)
+        .slots(args.get_usize("slots").map_err(|e| e.to_string())?)
+        .queue_cap(args.get_usize("queue-cap").map_err(|e| e.to_string())?)
+        .policy(policy)
+        .store_budget(
+            CacheBudget::parse(&budget_raw)
+                .ok_or_else(|| format!("bad --store-budget {budget_raw}"))?,
+        );
+    if let Some(t) = parse_threads(args)? {
+        conf = conf.threads(t);
+    }
+    let quota_raw = args.get_str("tenant-quota");
+    match quota_raw.to_ascii_lowercase().as_str() {
+        "none" | "off" | "unlimited" => {}
+        other => {
+            let quota = blaze::util::cli::parse_bytes(other)
+                .ok_or_else(|| format!("bad --tenant-quota {quota_raw}"))?;
+            conf = conf.tenant_quota(quota);
+        }
+    }
+    if let Some(bytes) = parse_spill_threshold(&args.get_str("spill-threshold"))? {
+        conf = conf.spill_threshold(bytes);
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        conf = conf.spill_dir(std::path::PathBuf::from(dir));
+    }
+
+    let tenants: std::collections::BTreeSet<&str> =
+        events.iter().map(|e| e.tenant.as_str()).collect();
+    println!(
+        "serving {} arrival(s) from {} tenant(s); policy={}, {} slot(s), queue cap {}",
+        events.len(),
+        tenants.len(),
+        policy.name(),
+        args.get_str("slots"),
+        args.get_str("queue-cap"),
+    );
+
+    let session = args.get("trace-out").map(|_| blaze::trace::TraceSession::start());
+    let result = replay_schedule(JobService::new(conf), &events);
+    if let Some(session) = session {
+        let trace = session.finish();
+        if let Some(path) = args.get("trace-out") {
+            write_trace(path, &trace)?;
+        }
+    }
+    result
+}
+
+/// Replay `events` (already sorted by `at_ms`) against a running
+/// service: open-loop submission on the script's clock, then drain,
+/// shut down, and print the service report. Errors if any job failed.
+fn replay_schedule(
+    svc: blaze::service::JobService,
+    events: &[blaze::service::ScriptEvent],
+) -> Result<(), String> {
+    use blaze::service::JobStatus;
+
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ev in events {
+        let due = std::time::Duration::from_millis(ev.at_ms);
+        if let Some(sleep) = due.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match svc.submit(ev.request()) {
+            Ok(h) => handles.push(h),
+            Err(e) => println!(
+                "  t+{:>5}ms  {:<12} {:<9} rejected: {e}",
+                ev.at_ms,
+                ev.tenant,
+                ev.workload.name()
+            ),
+        }
+    }
+    let mut failed = 0usize;
+    for h in &handles {
+        match h.wait() {
+            JobStatus::Done(s) => println!(
+                "  job {:>3}  {:<12} {:<9} done in {:>8.3}s (exec {:.3}s, {} record(s){})",
+                h.id(),
+                h.tenant(),
+                h.kind().name(),
+                s.latency_secs,
+                s.exec_secs,
+                s.records,
+                if s.verified { ", verified" } else { "" },
+            ),
+            JobStatus::Failed(e) => {
+                failed += 1;
+                println!(
+                    "  job {:>3}  {:<12} {:<9} FAILED: {e}",
+                    h.id(),
+                    h.tenant(),
+                    h.kind().name()
+                );
+            }
+            JobStatus::Cancelled => println!(
+                "  job {:>3}  {:<12} {:<9} cancelled",
+                h.id(),
+                h.tenant(),
+                h.kind().name()
+            ),
+            JobStatus::Queued | JobStatus::Running => unreachable!("wait() returns terminal"),
+        }
+    }
+    let report = svc.shutdown();
+    println!("\n{}", report.render());
+    if failed > 0 {
+        return Err(format!("{failed} job(s) failed"));
     }
     Ok(())
 }

@@ -234,21 +234,30 @@ pub fn run_iterative<I: IterativeWorkload>(
 
     // With the spill knob set, the shared cache gets a disk tier: evicted
     // parsed splits demote instead of forcing a reparse (disk-backed
-    // persist rather than the PR 3 evict+recompute).
+    // persist rather than the PR 3 evict+recompute). A cache already
+    // attached to the spec (the job service's store, shared across
+    // tenants) is used as-is — its budget and policy govern, not
+    // `it.cache_budget`.
     let policy = spec.eviction_policy.unwrap_or_default();
-    let cache = Arc::new(match spec.spill_threshold {
-        Some(_) => PartitionCache::with_spill_policy(
-            it.cache_budget,
-            Arc::new(DiskTier::new(spec.spill_dir.clone())),
-            policy,
-        ),
-        None => PartitionCache::with_policy(it.cache_budget, policy),
-    });
+    let cache = match &spec.cache {
+        Some(shared) => Arc::clone(shared),
+        None => Arc::new(match spec.spill_threshold {
+            Some(_) => PartitionCache::with_spill_policy(
+                it.cache_budget,
+                Arc::new(DiskTier::new(spec.spill_dir.clone())),
+                policy,
+            ),
+            None => PartitionCache::with_policy(it.cache_budget, policy),
+        }),
+    };
     if let Some(rec) = &spec.trace {
         cache.attach_recorder(Arc::clone(rec));
     }
     let mut spec = spec.clone().shared_cache(Arc::clone(&cache));
     let nrels = inputs.len() + 1;
+    // Delta the cache stats around the run: with a pre-attached shared
+    // store the lifetime totals belong to everyone, not this job.
+    let cache_before = cache.stats();
 
     let sw = Stopwatch::start();
     let mut iters = Vec::new();
@@ -266,8 +275,13 @@ pub fn run_iterative<I: IterativeWorkload>(
         let report = spec.run_inputs_cached(&step, &round_inputs(inputs, &state))?;
         // Older state generations can never be read again; free them now
         // rather than leaving an unbounded cache to accumulate one dead
-        // parsed state per round (bounded budgets would also LRU them out).
-        cache.invalidate_generations_below((nrels - 1) as u64, round as u64);
+        // parsed state per round (bounded budgets would also LRU them
+        // out). The keys carry the spec's namespace/generation bases
+        // (see `plan_cached`), so mirror them here.
+        cache.invalidate_generations_below(
+            spec.namespace_base + (nrels - 1) as u64,
+            spec.generation_base + round as u64,
+        );
         // `advance` is driver-side wall between rounds — span it so it
         // shows up as its own phase rather than hiding in the round gap.
         let (next, delta) = {
@@ -298,7 +312,7 @@ pub fn run_iterative<I: IterativeWorkload>(
         converged,
         wall_secs: sw.elapsed_secs(),
         iters,
-        cache: cache.stats(),
+        cache: cache.stats().delta_since(&cache_before),
         storage,
     })
 }

@@ -314,6 +314,26 @@ impl std::fmt::Display for MapReduceError {
 
 impl std::error::Error for MapReduceError {}
 
+/// Per-stage scheduling hook threaded through a [`JobSpec`] by the job
+/// service ([`crate::service`]): before an engine executes a stage, the
+/// job layer calls [`begin_stage`](Self::begin_stage) — which blocks
+/// until the scheduler grants the job a stage slot — and releases the
+/// slot with the stage's wall time afterwards. Stage granularity is the
+/// point: a long iterative job re-acquires between rounds, so short jobs
+/// from other tenants interleave instead of starving.
+pub trait StageGate: Send + Sync + std::fmt::Debug {
+    /// Block until the job may run its next stage. `Err` means the job
+    /// was cancelled while waiting — the stage is never executed and the
+    /// error propagates as the job's failure.
+    fn begin_stage(&self, stage: u64) -> Result<(), MapReduceError>;
+
+    /// Release the slot acquired by [`begin_stage`](Self::begin_stage),
+    /// charging `wall_secs` of stage time to the job's tenant (the fair
+    /// scheduler's virtual-time accounting). Called exactly once per
+    /// successful `begin_stage`, whether the stage succeeded or failed.
+    fn end_stage(&self, stage: u64, wall_secs: f64);
+}
+
 /// Everything needed to run one job on one engine, minus the workload.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
@@ -383,6 +403,21 @@ pub struct JobSpec {
     /// real get/put the run issues lands in the recorder's access log
     /// (see [`crate::storage::trace`]). `None` = no recording overhead.
     pub trace: Option<Arc<TraceRecorder>>,
+    /// Per-stage scheduling gate (see [`StageGate`]): every engine stage
+    /// this spec runs first acquires a slot through it. `None` = run
+    /// immediately (every non-service path).
+    pub gate: Option<Arc<dyn StageGate>>,
+    /// Offset added to every relation index when forming cache-key
+    /// namespaces ([`plan_cached`](Self::plan_cached)). The job service
+    /// gives each tenant a disjoint namespace range so one shared
+    /// [`PartitionCache`] can never cross-serve tenants; 0 (the default)
+    /// reproduces the single-tenant key scheme exactly.
+    pub namespace_base: u64,
+    /// Offset added to every relation generation in cache keys — the
+    /// service keys it by job sequence number so two jobs over
+    /// same-shaped inputs still resolve to distinct entries. 0 outside
+    /// the service.
+    pub generation_base: u64,
 }
 
 impl JobSpec {
@@ -408,6 +443,9 @@ impl JobSpec {
             dict_keys: true,
             eviction_policy: None,
             trace: None,
+            gate: None,
+            namespace_base: 0,
+            generation_base: 0,
         }
     }
 
@@ -524,6 +562,40 @@ impl JobSpec {
         self
     }
 
+    /// Attach a per-stage scheduling gate (see [`StageGate`]).
+    pub fn stage_gate(mut self, gate: Arc<dyn StageGate>) -> Self {
+        self.gate = Some(gate);
+        self
+    }
+
+    /// Offset cache-key namespaces by `base` (see [`Self::namespace_base`]).
+    pub fn namespace_base(mut self, base: u64) -> Self {
+        self.namespace_base = base;
+        self
+    }
+
+    /// Offset cache-key generations by `base` (see [`Self::generation_base`]).
+    pub fn generation_base(mut self, base: u64) -> Self {
+        self.generation_base = base;
+        self
+    }
+
+    /// Run `f` (one stage's engine call) under the spec's stage gate: a
+    /// no-op passthrough without one, otherwise acquire a slot, run, and
+    /// release with the stage's measured wall.
+    pub(crate) fn gated<T>(
+        &self,
+        stage: u64,
+        f: impl FnOnce() -> Result<T, MapReduceError>,
+    ) -> Result<T, MapReduceError> {
+        let Some(gate) = &self.gate else { return f() };
+        gate.begin_stage(stage)?;
+        let sw = Stopwatch::start();
+        let out = f();
+        gate.end_stage(stage, sw.elapsed_secs());
+        out
+    }
+
     /// Run `w` on this spec's engine (owned-key emission path everywhere)
     /// over a single input relation.
     pub fn run<W: Workload>(
@@ -546,7 +618,8 @@ impl JobSpec {
         self.check_arity(w.as_ref(), inputs)?;
         let graph = self.plan(w.as_ref(), inputs);
         let (exec, before) = self.exec_snapshot();
-        let run = engine_for::<W>(self.engine).run_plan(self, &graph, 0, w, inputs)?;
+        let run =
+            self.gated(0, || engine_for::<W>(self.engine).run_plan(self, &graph, 0, w, inputs))?;
         Ok(self.finish(w, run, inputs, exec.metrics().delta_since(&before)))
     }
 
@@ -573,7 +646,7 @@ impl JobSpec {
         let before_storage = cache.storage_stats();
         let rels = inputs.line_sets();
         let (exec, exec_before) = self.exec_snapshot();
-        let run = match self.engine {
+        let run = self.gated(0, || match self.engine {
             Engine::Blaze | Engine::BlazeTcm => {
                 let conf = self.blaze_conf(KeyPath::AllocPerToken);
                 let r = crate::engines::blaze::run_workload_cached(
@@ -585,7 +658,7 @@ impl JobSpec {
                     w.as_ref(),
                 )
                 .map_err(|e| MapReduceError(e.to_string()))?;
-                blaze_job_run(r)
+                Ok(blaze_job_run(r))
             }
             Engine::Spark | Engine::SparkStripped => {
                 let ctx = self.spark_context();
@@ -593,9 +666,9 @@ impl JobSpec {
                 let (entries, records) =
                     crate::engines::spark::run_workload_cached(&ctx, stage, &rels, w)
                         .map_err(|e| MapReduceError(e.to_string()))?;
-                spark_job_run(&ctx, entries, records, sw.elapsed_secs())
+                Ok(spark_job_run(&ctx, entries, records, sw.elapsed_secs()))
             }
-        };
+        })?;
         let mut report =
             self.finish(w, run, inputs, exec.metrics().delta_since(&exec_before));
         report.cache = cache.stats().delta_since(&before);
@@ -619,7 +692,9 @@ impl JobSpec {
         self.check_arity(w.as_ref(), &inputs)?;
         let graph = self.plan(w.as_ref(), &inputs);
         let (exec, before) = self.exec_snapshot();
-        let run = engine_for_str::<W>(self.engine).run_plan(self, &graph, 0, w, &inputs)?;
+        let run = self.gated(0, || {
+            engine_for_str::<W>(self.engine).run_plan(self, &graph, 0, w, &inputs)
+        })?;
         Ok(self.finish(w, run, &inputs, exec.metrics().delta_since(&before)))
     }
 

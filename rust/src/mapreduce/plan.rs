@@ -314,9 +314,14 @@ impl JobSpec {
         let mut graph = self.plan(w, inputs);
         if cache_on {
             for (rel, input) in graph.stages[0].inputs.iter_mut().enumerate() {
+                // The spec's bases offset the whole key scheme: the job
+                // service keys namespaces by tenant and generations by
+                // job, so one shared store never cross-serves entries.
+                // Both are 0 outside the service.
                 input.cache = Some(CachePoint {
-                    namespace: rel as u64,
-                    generation: self.relation_gens.get(rel).copied().unwrap_or(0),
+                    namespace: self.namespace_base + rel as u64,
+                    generation: self.generation_base
+                        + self.relation_gens.get(rel).copied().unwrap_or(0),
                 });
             }
         }
@@ -634,7 +639,10 @@ pub fn run_chained<C: ChainedWorkload + ?Sized>(
     let mut storage = StorageStats::default();
     for (i, st) in stages.iter().enumerate() {
         let records_in: u64 = current.relations.iter().map(|r| r.lines.len() as u64).sum();
-        let outcome = st.execute(spec, &graph, i, &current)?;
+        // Each chain stage re-acquires the spec's scheduling gate (when
+        // one is attached), so concurrent jobs interleave at stage
+        // granularity instead of holding a slot for the whole pipeline.
+        let outcome = spec.gated(i as u64, || st.execute(spec, &graph, i, &current))?;
         records += outcome.records;
         shuffle_bytes += outcome.shuffle_bytes;
         bridge_secs += outcome.render_secs;

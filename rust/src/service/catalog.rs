@@ -1,0 +1,282 @@
+//! Workload catalog: the named job types a tenant can submit.
+//!
+//! A [`JobRequest`] describes *what* to run (workload kind, synthesized
+//! input size, seed) without touching *how* (engine, threads, store,
+//! scheduling) — the service owns the how and hands the catalog a fully
+//! provisioned [`JobSpec`]. Every kind synthesizes its own input from
+//! `(bytes, seed)` so a request is reproducible from its fields alone,
+//! and every kind can self-verify against the repo's serial oracles
+//! (`verify: true` turns an output divergence into a job failure).
+//!
+//! The kinds span the service's scheduling envelope: [`Grep`] is the
+//! short zero-shuffle probe, [`WordCount`] the paper's one-exchange
+//! workload, [`Join`] the two-relation shuffle-heavy case, and
+//! [`PageRank`] the long multi-round iterative job whose rounds the fair
+//! scheduler interleaves with everything else.
+
+use std::sync::Arc;
+
+use crate::cluster::FailurePlan;
+use crate::corpus::{Corpus, CorpusSpec, Tokenizer};
+use crate::mapreduce::{
+    run_iterative, run_iterative_serial, run_serial, run_serial_inputs, IterativeSpec, JobInputs,
+    JobSpec, MapReduceError,
+};
+use crate::workloads::{Grep, Join, JoinSides, PageRank, WordCount};
+
+/// Workloads the service can build from a byte budget and a seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Zero-shuffle scan — the short job the fairness bench protects.
+    Grep,
+    /// The paper's workload: one map + one exchange.
+    WordCount,
+    /// Two-relation equi-join (relations seeded `seed` / `seed + 1`).
+    Join,
+    /// Multi-round iterative job over the corpus-as-graph.
+    PageRank,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "grep" => Some(Self::Grep),
+            "wordcount" | "wc" => Some(Self::WordCount),
+            "join" => Some(Self::Join),
+            "pagerank" | "pr" => Some(Self::PageRank),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Grep => "grep",
+            Self::WordCount => "wordcount",
+            Self::Join => "join",
+            Self::PageRank => "pagerank",
+        }
+    }
+
+    /// Single-stage jobs the latency benches bucket as "short".
+    pub fn is_short(self) -> bool {
+        matches!(self, Self::Grep)
+    }
+}
+
+/// One tenant's job: what to run and over how much synthesized input.
+#[derive(Debug)]
+pub struct JobRequest {
+    pub tenant: String,
+    pub kind: WorkloadKind,
+    /// Target size of the synthesized input corpus.
+    pub bytes: u64,
+    pub seed: u64,
+    /// Fair-share weight of the tenant (fixed at first submission).
+    pub weight: u64,
+    /// Round cap for iterative kinds (ignored by the others).
+    pub rounds: usize,
+    /// Check the output against the serial oracle inside the job; a
+    /// divergence fails the job.
+    pub verify: bool,
+    /// Injected failures, delivered to the engine's retry machinery —
+    /// used by the isolation tests to crash one tenant's job on purpose.
+    pub failures: Option<FailurePlan>,
+    /// Override the spec's job-level rerun budget (e.g. `Some(0)` turns
+    /// any injected failure into a hard job failure).
+    pub max_job_reruns: Option<usize>,
+}
+
+impl JobRequest {
+    pub fn new(tenant: impl Into<String>, kind: WorkloadKind) -> Self {
+        Self {
+            tenant: tenant.into(),
+            kind,
+            bytes: 64 << 10,
+            seed: 7,
+            weight: 1,
+            rounds: 4,
+            verify: false,
+            failures: None,
+            max_job_reruns: None,
+        }
+    }
+
+    pub fn bytes(mut self, bytes: u64) -> Self {
+        self.bytes = bytes;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn weight(mut self, weight: u64) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    pub fn failures(mut self, plan: FailurePlan) -> Self {
+        self.failures = Some(plan);
+        self
+    }
+
+    pub fn max_job_reruns(mut self, n: usize) -> Self {
+        self.max_job_reruns = Some(n);
+        self
+    }
+}
+
+/// Canonical result of a job: a sorted line rendering of the output,
+/// comparable across engines, runs, and thread counts.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub lines: Vec<String>,
+    pub records: u64,
+    /// Wall inside the engine (excludes queue wait).
+    pub exec_secs: f64,
+    /// True when the in-job oracle check ran (and passed — a mismatch
+    /// fails the job instead).
+    pub verified: bool,
+}
+
+fn corpus(bytes: u64, seed: u64) -> Corpus {
+    let mut spec = CorpusSpec::with_bytes(bytes.max(1 << 10));
+    spec.seed = seed;
+    Corpus::generate(&spec)
+}
+
+fn mismatch(kind: WorkloadKind) -> MapReduceError {
+    MapReduceError(format!(
+        "verification failed: {} output diverges from the serial oracle",
+        kind.name()
+    ))
+}
+
+fn grep_lines(out: &[(u64, String)]) -> Vec<String> {
+    let mut v: Vec<String> = out.iter().map(|(doc, line)| format!("{doc}\t{line}")).collect();
+    v.sort_unstable();
+    v
+}
+
+fn count_lines(out: &std::collections::HashMap<String, u64>) -> Vec<String> {
+    let mut v: Vec<String> = out.iter().map(|(k, n)| format!("{k}\t{n}")).collect();
+    v.sort_unstable();
+    v
+}
+
+fn join_lines(out: &std::collections::HashMap<String, JoinSides>) -> Vec<String> {
+    let mut v: Vec<String> = out
+        .iter()
+        .map(|(k, s)| format!("{k}\t{}|{}", s.left.join(","), s.right.join(",")))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Run `req` on a service-provisioned spec (gate, shared store, and
+/// tenant key bases already attached).
+pub(crate) fn execute(req: JobRequest, mut spec: JobSpec) -> Result<JobOutcome, MapReduceError> {
+    if let Some(n) = req.max_job_reruns {
+        spec.max_job_reruns = n;
+    }
+    if let Some(plan) = req.failures {
+        spec = spec.failures(plan);
+    }
+    match req.kind {
+        WorkloadKind::Grep => {
+            let c = corpus(req.bytes, req.seed);
+            let w = Arc::new(Grep::new("the"));
+            let r = spec.run(&w, &c)?;
+            let lines = grep_lines(&r.output);
+            let verified = req.verify;
+            if verified && lines != grep_lines(&run_serial(w.as_ref(), &c)) {
+                return Err(mismatch(req.kind));
+            }
+            Ok(JobOutcome { lines, records: r.records, exec_secs: r.wall_secs, verified })
+        }
+        WorkloadKind::WordCount => {
+            let c = corpus(req.bytes, req.seed);
+            let w = Arc::new(WordCount::new(Tokenizer::Spaces));
+            let r = spec.run(&w, &c)?;
+            let lines = count_lines(&r.output);
+            let verified = req.verify;
+            if verified && lines != count_lines(&run_serial(w.as_ref(), &c)) {
+                return Err(mismatch(req.kind));
+            }
+            Ok(JobOutcome { lines, records: r.records, exec_secs: r.wall_secs, verified })
+        }
+        WorkloadKind::Join => {
+            let left = corpus(req.bytes, req.seed);
+            let right = corpus(req.bytes, req.seed.wrapping_add(1));
+            let w = Arc::new(Join::new());
+            let inputs = JobInputs::new().relation("left", &left).relation("right", &right);
+            let r = spec.run_inputs(&w, &inputs)?;
+            let lines = join_lines(&r.output);
+            let verified = req.verify;
+            if verified && lines != join_lines(&run_serial_inputs(w.as_ref(), &inputs)) {
+                return Err(mismatch(req.kind));
+            }
+            Ok(JobOutcome { lines, records: r.records, exec_secs: r.wall_secs, verified })
+        }
+        WorkloadKind::PageRank => {
+            let c = corpus(req.bytes, req.seed);
+            let w = PageRank::new();
+            let inputs = JobInputs::new().relation("edges", &c);
+            let it = IterativeSpec::new(req.rounds.max(1));
+            let r = run_iterative(&spec, &it, &w, &inputs)?;
+            let verified = req.verify;
+            if verified {
+                let oracle = run_iterative_serial(&it, &w, &inputs);
+                if r.state != oracle.state || r.iterations != oracle.iterations {
+                    return Err(mismatch(req.kind));
+                }
+            }
+            let mut lines = r.state.clone();
+            lines.sort_unstable();
+            let records = r.iters.iter().map(|round| round.records).sum();
+            Ok(JobOutcome { lines, records, exec_secs: r.wall_secs, verified })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::Engine;
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for kind in
+            [WorkloadKind::Grep, WorkloadKind::WordCount, WorkloadKind::Join, WorkloadKind::PageRank]
+        {
+            assert_eq!(WorkloadKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(WorkloadKind::parse("kmeanz"), None);
+    }
+
+    /// Every kind runs standalone on a bare spec and passes its own
+    /// oracle check.
+    #[test]
+    fn every_kind_self_verifies() {
+        for kind in
+            [WorkloadKind::Grep, WorkloadKind::WordCount, WorkloadKind::Join, WorkloadKind::PageRank]
+        {
+            let req = JobRequest::new("t", kind).bytes(8 << 10).rounds(2).verify(true);
+            let spec = JobSpec::new(Engine::BlazeTcm).threads(2);
+            let out = execute(req, spec).expect("job runs");
+            assert!(out.verified);
+            assert!(!out.lines.is_empty());
+        }
+    }
+}

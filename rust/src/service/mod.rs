@@ -1,0 +1,706 @@
+//! Multi-tenant job service: many tenants, one executor, one store.
+//!
+//! [`JobService`] accepts a stream of [`JobRequest`]s tagged with a
+//! tenant name and fair-share weight, compiles each through the existing
+//! planner ([`JobSpec`] → `StageGraph`), and runs them *concurrently*
+//! over the process-wide [`runtime`](crate::runtime) executor and one
+//! shared [`TieredStore`](crate::storage::TieredStore). Three mechanisms
+//! keep tenants from hurting each other:
+//!
+//! * **Stage-granular fair scheduling** ([`sched`]): every stage boundary
+//!   re-contends a bounded pool of stage slots under weighted fair
+//!   queueing across tenants ([`SchedPolicy::Fair`]) — a 40-round
+//!   pagerank yields to a freshly-arrived grep at its next round
+//!   boundary instead of draining first. [`SchedPolicy::Fifo`] keeps the
+//!   single-queue baseline for comparison.
+//! * **Tenant-namespaced storage**: tenant `i` owns cache-key namespaces
+//!   `[(i+1)·2³², (i+2)·2³²)` and each job offsets generations by
+//!   `seq · 2²⁰`, so jobs share one store without key collisions, and
+//!   [`TieredStore::set_namespace_quota`] caps each tenant's resident
+//!   bytes (over-quota inserts demote to disk at birth rather than
+//!   evicting a neighbour).
+//! * **Admission control**: `submit` rejects with a typed
+//!   [`AdmissionError`] once `queue_cap` jobs are in flight or shutdown
+//!   has begun — saturation is a refusal, not an OOM.
+//!
+//! Every decision is observable: admissions, queue waits, and
+//! preemptions are trace spans ([`SpanCat::Admission`] /
+//! [`SpanCat::QueueWait`] / [`SpanCat::Preemption`], arg = tenant
+//! index), and [`JobService::report`] returns per-tenant
+//! [`MetricSet`] rows. `blaze serve --script <arrivals.json>` replays an
+//! arrival trace through all of it.
+
+pub mod catalog;
+pub mod script;
+mod sched;
+
+pub use catalog::{JobOutcome, JobRequest, WorkloadKind};
+pub use sched::{SchedPolicy, TenantSchedStats};
+pub use script::{parse_mix, parse_script, synthetic, ScriptEvent};
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cache::{CacheBudget, PartitionCache};
+use crate::engines::Engine;
+use crate::mapreduce::{JobSpec, MapReduceError, StageGate};
+use crate::trace::metrics::MetricSet;
+use crate::trace::{span_arg, SpanCat};
+
+use sched::SchedCore;
+
+/// Width of each tenant's cache-key namespace range. Tenant indices stay
+/// well below the spill-namespace base (`2⁴²`), so service keys never
+/// collide with engine spill namespaces.
+pub const TENANT_NS_SPAN: u64 = 1 << 32;
+
+/// First namespace of tenant `idx`'s range. Tenant 0 starts at `2³²`,
+/// leaving the low namespaces for un-namespaced standalone jobs.
+pub fn tenant_namespace_base(idx: usize) -> u64 {
+    (idx as u64 + 1) * TENANT_NS_SPAN
+}
+
+/// Generation offset of the service's `seq`-th job: iterative drivers
+/// bump per-round generations in the 2²⁰ space below this, so no two
+/// jobs ever reuse a `(namespace, generation)` pair.
+fn job_generation_base(seq: u64) -> u64 {
+    seq << 20
+}
+
+// --------------------------------------------------------------- conf ----
+
+/// Service-wide configuration: the "how" every admitted job inherits.
+#[derive(Clone, Debug)]
+pub struct ServiceConf {
+    pub engine: Engine,
+    /// Executor threads per job (`None` = the spec default).
+    pub threads: Option<usize>,
+    /// Concurrent stage slots the scheduler hands out.
+    pub slots: usize,
+    /// Max jobs in flight (queued + running); beyond it `submit` rejects.
+    pub queue_cap: usize,
+    pub policy: SchedPolicy,
+    /// Memory budget of the shared store.
+    pub store_budget: CacheBudget,
+    /// Per-tenant cap on resident store bytes (see
+    /// [`TieredStore::set_namespace_quota`](crate::storage::TieredStore::set_namespace_quota)).
+    pub tenant_quota: Option<u64>,
+    /// Bound each job's exchange memory (spills beyond it).
+    pub spill_threshold: Option<u64>,
+    /// Spill/demotion directory; also gives the shared store a disk tier
+    /// so over-quota inserts demote instead of being refused.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl ServiceConf {
+    pub fn new() -> Self {
+        Self {
+            engine: Engine::BlazeTcm,
+            threads: None,
+            slots: 2,
+            queue_cap: 32,
+            policy: SchedPolicy::Fair,
+            store_budget: CacheBudget::Unbounded,
+            tenant_quota: None,
+            spill_threshold: None,
+            spill_dir: None,
+        }
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    pub fn slots(mut self, slots: usize) -> Self {
+        self.slots = slots.max(1);
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    pub fn policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn store_budget(mut self, budget: CacheBudget) -> Self {
+        self.store_budget = budget;
+        self
+    }
+
+    pub fn tenant_quota(mut self, bytes: u64) -> Self {
+        self.tenant_quota = Some(bytes);
+        self
+    }
+
+    pub fn spill_threshold(mut self, bytes: u64) -> Self {
+        self.spill_threshold = Some(bytes);
+        self
+    }
+
+    pub fn spill_dir(mut self, dir: PathBuf) -> Self {
+        self.spill_dir = Some(dir);
+        self
+    }
+}
+
+impl Default for ServiceConf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------- admission ----
+
+/// Why the service refused a [`JobRequest`] at the door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// In-flight jobs (queued + running) already at the cap.
+    Saturated { in_flight: usize, cap: usize },
+    /// `shutdown` has begun; no new work is admitted.
+    ShuttingDown,
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::Saturated { in_flight, cap } => {
+                write!(f, "service saturated: {in_flight} job(s) in flight (cap {cap})")
+            }
+            AdmissionError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+// --------------------------------------------------------- job states ----
+
+/// What a submitted job resolved to (the terminal variants carry why).
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Admitted, waiting for its first stage slot.
+    Queued,
+    Running,
+    Done(JobSummary),
+    Failed(String),
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done(_) | JobStatus::Failed(_) | JobStatus::Cancelled)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done(_) => "done",
+            JobStatus::Failed(_) => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// A completed job's result.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    /// Submit → completion, queue wait included.
+    pub latency_secs: f64,
+    /// Wall inside the engine (stage execution only).
+    pub exec_secs: f64,
+    pub records: u64,
+    /// Canonical sorted-line rendering of the output (see
+    /// [`JobOutcome::lines`]).
+    pub lines: Vec<String>,
+    /// The in-job oracle check ran and passed.
+    pub verified: bool,
+}
+
+#[derive(Debug)]
+struct JobState {
+    /// Submission sequence number — doubles as the FIFO rank.
+    id: u64,
+    tenant: usize,
+    tenant_name: String,
+    kind: WorkloadKind,
+    submitted_at: Instant,
+    cancelled: AtomicBool,
+    status: Mutex<JobStatus>,
+    done: Condvar,
+}
+
+impl JobState {
+    fn set_status(&self, s: JobStatus) {
+        *self.status.lock().unwrap() = s;
+        self.done.notify_all();
+    }
+}
+
+/// Caller-side handle for a submitted job.
+#[derive(Clone, Debug)]
+pub struct JobHandle {
+    state: Arc<JobState>,
+    shared: Arc<Shared>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.state.id
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.state.tenant_name
+    }
+
+    pub fn kind(&self) -> WorkloadKind {
+        self.state.kind
+    }
+
+    pub fn poll(&self) -> JobStatus {
+        self.state.status.lock().unwrap().clone()
+    }
+
+    /// Block until the job reaches a terminal status.
+    pub fn wait(&self) -> JobStatus {
+        let mut st = self.state.status.lock().unwrap();
+        while !st.is_terminal() {
+            st = self.state.done.wait(st).unwrap();
+        }
+        st.clone()
+    }
+
+    /// Request cancellation; the job stops at its next stage boundary.
+    /// Returns false if it had already reached a terminal status.
+    pub fn cancel(&self) -> bool {
+        if self.poll().is_terminal() {
+            return false;
+        }
+        self.state.cancelled.store(true, Relaxed);
+        self.shared.core.kick();
+        true
+    }
+}
+
+// ------------------------------------------------------------ service ----
+
+#[derive(Debug, Default)]
+struct TenantCounters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    cancelled: u64,
+    rejected: u64,
+}
+
+#[derive(Debug)]
+struct TenantEntry {
+    name: String,
+    counters: TenantCounters,
+}
+
+#[derive(Debug)]
+struct Shared {
+    conf: ServiceConf,
+    core: SchedCore,
+    store: Arc<PartitionCache>,
+    tenants: Mutex<Vec<TenantEntry>>,
+    in_flight: AtomicU64,
+    next_seq: AtomicU64,
+    shutting_down: AtomicBool,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+}
+
+impl Shared {
+    fn tenant_counter(&self, idx: usize, f: impl FnOnce(&mut TenantCounters)) {
+        f(&mut self.tenants.lock().unwrap()[idx].counters)
+    }
+}
+
+/// The job's stage-boundary hook: acquire a slot from the scheduler on
+/// entry, charge the measured wall to the tenant's vtime on exit.
+#[derive(Debug)]
+struct ServiceGate {
+    shared: Arc<Shared>,
+    state: Arc<JobState>,
+}
+
+impl StageGate for ServiceGate {
+    fn begin_stage(&self, _stage: u64) -> Result<(), MapReduceError> {
+        self.shared
+            .core
+            .acquire(self.state.tenant, self.state.id, &self.state.cancelled)
+            .map_err(|()| MapReduceError(format!("job {} cancelled while queued", self.state.id)))
+    }
+
+    fn end_stage(&self, _stage: u64, wall_secs: f64) {
+        self.shared.core.release(self.state.tenant, wall_secs);
+    }
+}
+
+/// The multi-tenant job service. See the [module docs](self).
+#[derive(Debug)]
+pub struct JobService {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    started: Instant,
+}
+
+impl JobService {
+    pub fn new(conf: ServiceConf) -> Self {
+        // Quota demotion and low-budget operation both need somewhere to
+        // demote to, so any of the pressure knobs implies a disk tier
+        // (`None` spill dir = the system temp directory).
+        let want_disk =
+            conf.spill_dir.is_some() || conf.spill_threshold.is_some() || conf.tenant_quota.is_some();
+        let store = if want_disk {
+            Arc::new(PartitionCache::with_spill(
+                conf.store_budget,
+                Arc::new(crate::storage::DiskTier::new(conf.spill_dir.clone())),
+            ))
+        } else {
+            Arc::new(PartitionCache::new(conf.store_budget))
+        };
+        let core = SchedCore::new(conf.slots, conf.policy);
+        Self {
+            shared: Arc::new(Shared {
+                conf,
+                core,
+                store,
+                tenants: Mutex::new(Vec::new()),
+                in_flight: AtomicU64::new(0),
+                next_seq: AtomicU64::new(0),
+                shutting_down: AtomicBool::new(false),
+                submitted: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+                cancelled: AtomicU64::new(0),
+            }),
+            workers: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
+    }
+
+    /// The shared store (tests inspect per-tenant residency through it).
+    pub fn store(&self) -> &Arc<PartitionCache> {
+        &self.shared.store
+    }
+
+    /// Jobs admitted but not yet terminal.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Relaxed) as usize
+    }
+
+    /// Index of `name` in the tenant table, registering it (scheduler
+    /// row + store quota) on first sight. The weight is fixed at first
+    /// registration.
+    fn tenant_index(&self, name: &str, weight: u64) -> usize {
+        let mut tenants = self.shared.tenants.lock().unwrap();
+        if let Some(idx) = tenants.iter().position(|t| t.name == name) {
+            return idx;
+        }
+        let idx = self.shared.core.register_tenant(weight);
+        debug_assert_eq!(idx, tenants.len());
+        if let Some(quota) = self.shared.conf.tenant_quota {
+            let base = tenant_namespace_base(idx);
+            self.shared.store.set_namespace_quota(base, base + TENANT_NS_SPAN, quota);
+        }
+        tenants.push(TenantEntry { name: name.to_string(), counters: TenantCounters::default() });
+        idx
+    }
+
+    /// Admit `req` or refuse it with a typed reason. Admitted jobs run
+    /// on their own worker thread, contending for stage slots through
+    /// the scheduler; the returned handle polls, waits, and cancels.
+    pub fn submit(&self, req: JobRequest) -> Result<JobHandle, AdmissionError> {
+        let tenant = self.tenant_index(&req.tenant, req.weight);
+        let _adm = span_arg(SpanCat::Admission, "admission", tenant as u64);
+        self.shared.submitted.fetch_add(1, Relaxed);
+        self.shared.tenant_counter(tenant, |c| c.submitted += 1);
+        if self.shared.shutting_down.load(Relaxed) {
+            self.shared.rejected.fetch_add(1, Relaxed);
+            self.shared.tenant_counter(tenant, |c| c.rejected += 1);
+            return Err(AdmissionError::ShuttingDown);
+        }
+        let in_flight = self.shared.in_flight.load(Relaxed) as usize;
+        if in_flight >= self.shared.conf.queue_cap {
+            self.shared.rejected.fetch_add(1, Relaxed);
+            self.shared.tenant_counter(tenant, |c| c.rejected += 1);
+            return Err(AdmissionError::Saturated { in_flight, cap: self.shared.conf.queue_cap });
+        }
+        self.shared.in_flight.fetch_add(1, Relaxed);
+        let seq = self.shared.next_seq.fetch_add(1, Relaxed);
+        let state = Arc::new(JobState {
+            id: seq,
+            tenant,
+            tenant_name: req.tenant.clone(),
+            kind: req.kind,
+            submitted_at: Instant::now(),
+            cancelled: AtomicBool::new(false),
+            status: Mutex::new(JobStatus::Queued),
+            done: Condvar::new(),
+        });
+        let handle = JobHandle { state: Arc::clone(&state), shared: Arc::clone(&self.shared) };
+        let shared = Arc::clone(&self.shared);
+        let worker = std::thread::Builder::new()
+            .name(format!("blaze-svc-{seq}"))
+            .spawn(move || run_job(shared, state, req))
+            .expect("spawn service job thread");
+        self.workers.lock().unwrap().push(worker);
+        Ok(handle)
+    }
+
+    /// Stop admitting, drain every in-flight job, and report.
+    pub fn shutdown(self) -> ServiceReport {
+        self.shared.shutting_down.store(true, Relaxed);
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
+            let _ = w.join();
+        }
+        self.report()
+    }
+
+    /// Snapshot the admission ledger and per-tenant metrics.
+    pub fn report(&self) -> ServiceReport {
+        let sh = &self.shared;
+        let sched = sh.core.tenant_stats();
+        let tenants = sh.tenants.lock().unwrap();
+        let rows = tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut m = MetricSet::new();
+                m.set_count("jobs.submitted", t.counters.submitted);
+                m.set_count("jobs.completed", t.counters.completed);
+                m.set_count("jobs.failed", t.counters.failed);
+                m.set_count("jobs.cancelled", t.counters.cancelled);
+                m.set_count("jobs.rejected", t.counters.rejected);
+                if let Some(s) = sched.get(i) {
+                    m.set_count("sched.weight", s.weight);
+                    m.set_secs("sched.queue_wait", s.queue_wait_secs);
+                    m.set_secs("sched.stage_wall", s.stage_secs);
+                    m.set_count("sched.stages", s.stages);
+                    m.set_count("sched.bypassed", s.bypassed);
+                }
+                let base = tenant_namespace_base(i);
+                m.set_bytes("store.resident", sh.store.bytes_in_namespace_range(base, base + TENANT_NS_SPAN));
+                if let Some(q) = sh.store.namespace_quota_bytes(base) {
+                    m.set_bytes("store.quota", q);
+                }
+                TenantReport { name: t.name.clone(), metrics: m }
+            })
+            .collect();
+        ServiceReport {
+            wall_secs: self.started.elapsed().as_secs_f64(),
+            submitted: sh.submitted.load(Relaxed),
+            rejected: sh.rejected.load(Relaxed),
+            completed: sh.completed.load(Relaxed),
+            failed: sh.failed.load(Relaxed),
+            cancelled: sh.cancelled.load(Relaxed),
+            in_flight: sh.in_flight.load(Relaxed),
+            preemptions: sh.core.preemptions(),
+            tenants: rows,
+        }
+    }
+}
+
+/// Body of a job's worker thread: provision the spec with the tenant's
+/// key bases, the shared store, and the scheduling gate, then run the
+/// catalog workload and settle the ledger.
+fn run_job(shared: Arc<Shared>, state: Arc<JobState>, req: JobRequest) {
+    state.set_status(JobStatus::Running);
+    let gate: Arc<dyn StageGate> =
+        Arc::new(ServiceGate { shared: Arc::clone(&shared), state: Arc::clone(&state) });
+    let mut spec = JobSpec::new(shared.conf.engine)
+        .shared_cache(Arc::clone(&shared.store))
+        .stage_gate(gate)
+        .namespace_base(tenant_namespace_base(state.tenant))
+        .generation_base(job_generation_base(state.id));
+    if let Some(t) = shared.conf.threads {
+        spec = spec.threads(t);
+    }
+    if let Some(b) = shared.conf.spill_threshold {
+        spec = spec.spill_threshold(b);
+    }
+    if let Some(d) = &shared.conf.spill_dir {
+        spec = spec.spill_dir(d.clone());
+    }
+    let outcome = catalog::execute(req, spec);
+    let latency = state.submitted_at.elapsed().as_secs_f64();
+    let status = match outcome {
+        Ok(out) => {
+            shared.completed.fetch_add(1, Relaxed);
+            shared.tenant_counter(state.tenant, |c| c.completed += 1);
+            JobStatus::Done(JobSummary {
+                latency_secs: latency,
+                exec_secs: out.exec_secs,
+                records: out.records,
+                lines: out.lines,
+                verified: out.verified,
+            })
+        }
+        Err(_) if state.cancelled.load(Relaxed) => {
+            shared.cancelled.fetch_add(1, Relaxed);
+            shared.tenant_counter(state.tenant, |c| c.cancelled += 1);
+            JobStatus::Cancelled
+        }
+        Err(e) => {
+            shared.failed.fetch_add(1, Relaxed);
+            shared.tenant_counter(state.tenant, |c| c.failed += 1);
+            JobStatus::Failed(e.to_string())
+        }
+    };
+    shared.in_flight.fetch_sub(1, Relaxed);
+    state.set_status(status);
+}
+
+// ------------------------------------------------------------- report ----
+
+/// One tenant's row in the service report.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub metrics: MetricSet,
+}
+
+/// The service's admission ledger plus per-tenant metrics.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub wall_secs: f64,
+    /// Every `submit` call, including refused ones.
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Jobs still running when the snapshot was taken (0 after
+    /// [`JobService::shutdown`]).
+    pub in_flight: u64,
+    pub preemptions: u64,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl ServiceReport {
+    /// The admission ledger balances: every submitted job is accounted
+    /// for exactly once. The property suite enforces this invariant over
+    /// random arrival schedules.
+    pub fn balances(&self) -> bool {
+        self.in_flight == 0
+            && self.submitted
+                == self.completed + self.failed + self.cancelled + self.rejected
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "service: {} submitted = {} completed + {} failed + {} cancelled + {} rejected \
+             ({} in flight) in {:.2}s; {} preemption(s)\n",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.cancelled,
+            self.rejected,
+            self.in_flight,
+            self.wall_secs,
+            self.preemptions,
+        );
+        for t in &self.tenants {
+            out.push_str(&format!("  tenant {:<12} {}\n", t.name, t.metrics));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conf() -> ServiceConf {
+        ServiceConf::new().threads(2).slots(2)
+    }
+
+    /// Two tenants' verified jobs run concurrently to completion and the
+    /// ledger balances.
+    #[test]
+    fn mixed_tenants_complete_and_balance() {
+        let svc = JobService::new(conf());
+        let mut handles = Vec::new();
+        for (tenant, kind) in [
+            ("alpha", WorkloadKind::Grep),
+            ("beta", WorkloadKind::WordCount),
+            ("alpha", WorkloadKind::PageRank),
+            ("beta", WorkloadKind::Grep),
+        ] {
+            let req = JobRequest::new(tenant, kind).bytes(8 << 10).rounds(2).verify(true);
+            handles.push(svc.submit(req).expect("admitted"));
+        }
+        for h in &handles {
+            match h.wait() {
+                JobStatus::Done(s) => assert!(s.verified),
+                other => panic!("job {} ({}) ended {other:?}", h.id(), h.tenant()),
+            }
+        }
+        let report = svc.shutdown();
+        assert_eq!(report.completed, 4);
+        assert!(report.balances(), "{}", report.render());
+        assert_eq!(report.tenants.len(), 2);
+        assert_eq!(report.tenants[0].metrics.count("jobs.submitted"), 2);
+    }
+
+    /// Saturation is a typed refusal, not a hang or an OOM.
+    #[test]
+    fn saturated_service_rejects_with_reason() {
+        let svc = JobService::new(conf().queue_cap(1));
+        let first = svc
+            .submit(JobRequest::new("a", WorkloadKind::PageRank).bytes(32 << 10).rounds(3))
+            .expect("first admitted");
+        let refused = svc.submit(JobRequest::new("b", WorkloadKind::Grep).bytes(4 << 10));
+        assert_eq!(
+            refused.expect_err("cap reached"),
+            AdmissionError::Saturated { in_flight: 1, cap: 1 }
+        );
+        first.wait();
+        let report = svc.shutdown();
+        assert_eq!((report.completed, report.rejected), (1, 1));
+        assert!(report.balances());
+    }
+
+    /// Cancellation lands at a stage boundary and settles as Cancelled.
+    #[test]
+    fn cancelled_job_settles_as_cancelled() {
+        // One slot shared by two multi-stage jobs: the victim cannot
+        // finish its dozen stage-boundary gate crossings before the
+        // cancel flag lands, so cancellation reaches it mid-flight.
+        let svc = JobService::new(conf().slots(1));
+        let long = svc
+            .submit(JobRequest::new("a", WorkloadKind::PageRank).bytes(64 << 10).rounds(6))
+            .expect("admitted");
+        let victim = svc
+            .submit(JobRequest::new("b", WorkloadKind::PageRank).bytes(64 << 10).rounds(6))
+            .expect("admitted");
+        assert!(victim.cancel());
+        assert!(matches!(victim.wait(), JobStatus::Cancelled));
+        assert!(matches!(long.wait(), JobStatus::Done(_)));
+        let report = svc.shutdown();
+        assert_eq!((report.completed, report.cancelled), (1, 1));
+        assert!(report.balances(), "{}", report.render());
+    }
+}

@@ -1,0 +1,382 @@
+//! Stage-granular scheduler core for the job service.
+//!
+//! Jobs never own the executor: every stage boundary passes through
+//! [`SchedCore::acquire`], which parks the calling job thread until the
+//! scheduler grants one of `slots` concurrent stage permits. Because the
+//! permit is re-contended *per stage*, a long iterative job yields to a
+//! newly-arrived short job at its next round boundary instead of holding
+//! the service until it finishes. Two policies:
+//!
+//! * [`SchedPolicy::Fifo`] — waiters are ranked by job sequence number:
+//!   the oldest submitted job wins every grant, so an early long job
+//!   drains to completion before anything behind it runs. This is the
+//!   single-queue baseline `benches/service.rs` measures against.
+//! * [`SchedPolicy::Fair`] — weighted fair queueing across tenants. A
+//!   tenant accrues virtual time `vtime += stage_wall / weight` for each
+//!   stage it completes; the waiter whose tenant has the smallest vtime
+//!   runs next. A tenant that went idle re-enters at the busy minimum
+//!   (`vtime = max(own, min busy vtime)`) so sleeping never banks credit.
+//!
+//! Every decision is observable: the park inside `acquire` is wrapped in
+//! a [`SpanCat::QueueWait`] span (arg = tenant index), and a fair grant
+//! that jumps an older waiter emits a [`SpanCat::Preemption`] span whose
+//! arg is the bypassed tenant's index.
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::trace::{span_arg, SpanCat};
+
+/// How the service orders waiting stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Weighted fair queueing across tenants (the default).
+    Fair,
+    /// Strict job-submission order — the single-queue baseline.
+    Fifo,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fair" | "wfq" => Some(Self::Fair),
+            "fifo" => Some(Self::Fifo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Fair => "fair",
+            Self::Fifo => "fifo",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct TenantSched {
+    vtime: f64,
+    weight: u64,
+    /// Stages currently holding a slot.
+    active: usize,
+    /// Stages parked in `acquire`.
+    waiting: usize,
+    queue_wait_secs: f64,
+    stage_secs: f64,
+    stages: u64,
+    /// Times an older waiter of this tenant was jumped by a fair grant.
+    bypassed: u64,
+}
+
+#[derive(Debug)]
+struct Waiter {
+    /// Arrival order of this *stage* request (tie-breaker).
+    ticket: u64,
+    /// Submission order of the owning job (FIFO rank).
+    job_seq: u64,
+    tenant: usize,
+}
+
+#[derive(Debug)]
+struct SchedState {
+    slots_free: usize,
+    next_ticket: u64,
+    waiters: Vec<Waiter>,
+    tenants: Vec<TenantSched>,
+    preemptions: u64,
+}
+
+/// Per-tenant scheduling totals for the service report.
+#[derive(Clone, Debug)]
+pub struct TenantSchedStats {
+    pub weight: u64,
+    pub queue_wait_secs: f64,
+    pub stage_secs: f64,
+    pub stages: u64,
+    pub bypassed: u64,
+}
+
+#[derive(Debug)]
+pub(crate) struct SchedCore {
+    policy: SchedPolicy,
+    state: Mutex<SchedState>,
+    cond: Condvar,
+}
+
+impl SchedCore {
+    pub(crate) fn new(slots: usize, policy: SchedPolicy) -> Self {
+        Self {
+            policy,
+            state: Mutex::new(SchedState {
+                slots_free: slots.max(1),
+                next_ticket: 0,
+                waiters: Vec::new(),
+                tenants: Vec::new(),
+                preemptions: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Register a tenant; returns its dense scheduler index. The tenant
+    /// starts at the busy minimum vtime, not zero, so late arrivals get
+    /// no retroactive credit for time before they existed.
+    pub(crate) fn register_tenant(&self, weight: u64) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let vtime = busy_min_vtime(&st).unwrap_or(0.0);
+        st.tenants.push(TenantSched {
+            vtime,
+            weight: weight.max(1),
+            active: 0,
+            waiting: 0,
+            queue_wait_secs: 0.0,
+            stage_secs: 0.0,
+            stages: 0,
+            bypassed: 0,
+        });
+        st.tenants.len() - 1
+    }
+
+    /// Block until the scheduler grants a stage slot. Returns `Err(())`
+    /// if `cancelled` is raised while parked (the caller must [`kick`]
+    /// after raising the flag so parked waiters recheck it).
+    ///
+    /// [`kick`]: Self::kick
+    pub(crate) fn acquire(
+        &self,
+        tenant: usize,
+        job_seq: u64,
+        cancelled: &AtomicBool,
+    ) -> Result<(), ()> {
+        let _wait = span_arg(SpanCat::QueueWait, "queue-wait", tenant as u64);
+        let started = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        // Idle catch-up: a tenant with nothing running or queued re-enters
+        // at the busy minimum so time spent idle never banks credit.
+        if st.tenants[tenant].active + st.tenants[tenant].waiting == 0 {
+            if let Some(min) = busy_min_vtime(&st) {
+                let t = &mut st.tenants[tenant];
+                if t.vtime < min {
+                    t.vtime = min;
+                }
+            }
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.waiters.push(Waiter { ticket, job_seq, tenant });
+        st.tenants[tenant].waiting += 1;
+        loop {
+            if cancelled.load(Relaxed) {
+                st.waiters.retain(|w| w.ticket != ticket);
+                st.tenants[tenant].waiting -= 1;
+                drop(st);
+                // Our departure may unblock the pick for someone else.
+                self.cond.notify_all();
+                return Err(());
+            }
+            if st.slots_free > 0 && self.pick(&st) == Some(ticket) {
+                break;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+        // Granted. A fair grant that jumps the oldest waiting job is a
+        // preemption of that job's turn — record whose. (Ranked by job
+        // submission order, so FIFO grants never count as preemptions.)
+        if let Some(oldest) = st.waiters.iter().min_by_key(|w| (w.job_seq, w.ticket)) {
+            if oldest.ticket != ticket {
+                let bypassed = oldest.tenant;
+                st.preemptions += 1;
+                st.tenants[bypassed].bypassed += 1;
+                drop(span_arg(SpanCat::Preemption, "preemption", bypassed as u64));
+            }
+        }
+        st.slots_free -= 1;
+        st.waiters.retain(|w| w.ticket != ticket);
+        let t = &mut st.tenants[tenant];
+        t.waiting -= 1;
+        t.active += 1;
+        t.queue_wait_secs += started.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Release a stage slot, charging `wall_secs / weight` to the
+    /// tenant's virtual time.
+    pub(crate) fn release(&self, tenant: usize, wall_secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.slots_free += 1;
+        let t = &mut st.tenants[tenant];
+        t.active -= 1;
+        t.vtime += wall_secs / t.weight as f64;
+        t.stage_secs += wall_secs;
+        t.stages += 1;
+        drop(st);
+        self.cond.notify_all();
+    }
+
+    /// Wake every parked waiter so cancellation flags get rechecked.
+    pub(crate) fn kick(&self) {
+        self.cond.notify_all();
+    }
+
+    pub(crate) fn preemptions(&self) -> u64 {
+        self.state.lock().unwrap().preemptions
+    }
+
+    pub(crate) fn tenant_stats(&self) -> Vec<TenantSchedStats> {
+        self.state
+            .lock()
+            .unwrap()
+            .tenants
+            .iter()
+            .map(|t| TenantSchedStats {
+                weight: t.weight,
+                queue_wait_secs: t.queue_wait_secs,
+                stage_secs: t.stage_secs,
+                stages: t.stages,
+                bypassed: t.bypassed,
+            })
+            .collect()
+    }
+
+    /// The ticket that should run next, or `None` with no waiters.
+    fn pick(&self, st: &SchedState) -> Option<u64> {
+        match self.policy {
+            SchedPolicy::Fifo => {
+                st.waiters.iter().min_by_key(|w| (w.job_seq, w.ticket)).map(|w| w.ticket)
+            }
+            SchedPolicy::Fair => st
+                .waiters
+                .iter()
+                .min_by(|a, b| {
+                    let (va, vb) = (st.tenants[a.tenant].vtime, st.tenants[b.tenant].vtime);
+                    va.partial_cmp(&vb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.ticket.cmp(&b.ticket))
+                })
+                .map(|w| w.ticket),
+        }
+    }
+
+    #[cfg(test)]
+    fn waiting_count(&self) -> usize {
+        self.state.lock().unwrap().waiters.len()
+    }
+}
+
+/// Minimum vtime over tenants with work in the system (running or
+/// waiting); `None` when the service is idle.
+fn busy_min_vtime(st: &SchedState) -> Option<f64> {
+    st.tenants
+        .iter()
+        .filter(|t| t.active + t.waiting > 0)
+        .map(|t| t.vtime)
+        .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn park_until(core: &SchedCore, waiters: usize) {
+        for _ in 0..2000 {
+            if core.waiting_count() >= waiters {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("waiters never parked");
+    }
+
+    /// FIFO ranks by job submission order even when the younger job's
+    /// stage request arrived first.
+    #[test]
+    fn fifo_grants_in_job_order() {
+        let core = Arc::new(SchedCore::new(1, SchedPolicy::Fifo));
+        let t0 = core.register_tenant(1);
+        let flag = Arc::new(AtomicBool::new(false));
+        core.acquire(t0, 0, &flag).unwrap();
+
+        let (tx, rx) = mpsc::channel();
+        let mut joins = Vec::new();
+        // Job 5's stage request is registered before job 2's.
+        for job in [5u64, 2] {
+            let (core, flag, tx) = (Arc::clone(&core), Arc::clone(&flag), tx.clone());
+            joins.push(std::thread::spawn(move || {
+                core.acquire(t0, job, &flag).unwrap();
+                tx.send(job).unwrap();
+                core.release(t0, 0.0);
+            }));
+            park_until(&core, joins.len());
+        }
+        core.release(t0, 1.0);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 2);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 5);
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(core.preemptions(), 0, "fifo never jumps the oldest waiter");
+    }
+
+    /// Fair picks the tenant with less accrued service even when its
+    /// waiter (and job) is younger, and records the bypass.
+    #[test]
+    fn fair_prefers_lighter_tenant_and_counts_preemption() {
+        let core = Arc::new(SchedCore::new(1, SchedPolicy::Fair));
+        let heavy = core.register_tenant(1);
+        let light = core.register_tenant(1);
+        let flag = Arc::new(AtomicBool::new(false));
+
+        // Tenant `heavy` completes a long stage, accruing vtime, then
+        // holds the slot again.
+        core.acquire(heavy, 0, &flag).unwrap();
+        core.release(heavy, 10.0);
+        core.acquire(heavy, 0, &flag).unwrap();
+
+        let (tx, rx) = mpsc::channel();
+        let mut joins = Vec::new();
+        // heavy's next stage parks first (older ticket, older job)...
+        for (tenant, job, tag) in [(heavy, 1u64, "heavy"), (light, 7, "light")] {
+            let (core, flag, tx) = (Arc::clone(&core), Arc::clone(&flag), tx.clone());
+            joins.push(std::thread::spawn(move || {
+                core.acquire(tenant, job, &flag).unwrap();
+                tx.send(tag).unwrap();
+                core.release(tenant, 0.1);
+            }));
+            park_until(&core, joins.len());
+        }
+        core.release(heavy, 1.0);
+        // ...but light has ~0 vtime and wins the grant.
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), "light");
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), "heavy");
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(core.preemptions(), 1);
+        let stats = core.tenant_stats();
+        assert_eq!(stats[heavy].bypassed, 1);
+        assert_eq!(stats[light].bypassed, 0);
+    }
+
+    /// A parked waiter whose job is cancelled returns `Err` after a kick.
+    #[test]
+    fn cancelled_waiter_unparks_with_err() {
+        let core = Arc::new(SchedCore::new(1, SchedPolicy::Fair));
+        let t0 = core.register_tenant(1);
+        let flag = Arc::new(AtomicBool::new(false));
+        core.acquire(t0, 0, &flag).unwrap();
+
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (core2, cancel2) = (Arc::clone(&core), Arc::clone(&cancel));
+        let j = std::thread::spawn(move || core2.acquire(t0, 1, &cancel2));
+        park_until(&core, 1);
+        cancel.store(true, Relaxed);
+        core.kick();
+        assert_eq!(j.join().unwrap(), Err(()));
+        assert_eq!(core.waiting_count(), 0);
+        core.release(t0, 0.0);
+    }
+}

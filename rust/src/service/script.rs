@@ -1,0 +1,175 @@
+//! Arrival-trace scripts for `blaze serve --script`.
+//!
+//! A script is JSON with **one event object per line** (the same
+//! line-oriented discipline as the bench-report files, so the parser
+//! stays dependency-free). Surrounding `[` / `]` lines and trailing
+//! commas are tolerated:
+//!
+//! ```json
+//! [
+//!   {"at_ms": 0,  "tenant": "ads",    "workload": "pagerank", "bytes": 262144},
+//!   {"at_ms": 10, "tenant": "search", "workload": "grep", "bytes": 16384, "weight": 2},
+//!   {"at_ms": 40, "tenant": "search", "workload": "grep", "verify": true}
+//! ]
+//! ```
+//!
+//! `tenant` and `workload` are required; `at_ms` defaults to 0, `bytes`
+//! to 64 KiB, `weight` to 1, `seed` to the line number, `verify` to
+//! false. Events replay in `at_ms` order regardless of file order.
+
+use super::catalog::{JobRequest, WorkloadKind};
+
+/// One arrival in a replayable schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScriptEvent {
+    /// Submission time, milliseconds from replay start.
+    pub at_ms: u64,
+    pub tenant: String,
+    pub workload: WorkloadKind,
+    pub bytes: u64,
+    pub weight: u64,
+    pub seed: u64,
+    pub verify: bool,
+}
+
+impl ScriptEvent {
+    pub fn request(&self) -> JobRequest {
+        JobRequest::new(self.tenant.clone(), self.workload)
+            .bytes(self.bytes)
+            .seed(self.seed)
+            .weight(self.weight)
+            .verify(self.verify)
+    }
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\"");
+    let rest = &line[line.find(&tag)? + tag.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn num_field(line: &str, key: &str) -> Option<u64> {
+    let tag = format!("\"{key}\"");
+    let rest = &line[line.find(&tag)? + tag.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn bool_field(line: &str, key: &str) -> Option<bool> {
+    let tag = format!("\"{key}\"");
+    let rest = &line[line.find(&tag)? + tag.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    if rest.starts_with("true") {
+        Some(true)
+    } else if rest.starts_with("false") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Parse a script file's text into a schedule, sorted by `at_ms`.
+pub fn parse_script(text: &str) -> Result<Vec<ScriptEvent>, String> {
+    let mut events = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let err = |what: &str| format!("script line {}: {what} in {line:?}", i + 1);
+        let tenant = str_field(line, "tenant").ok_or_else(|| err("missing \"tenant\""))?;
+        let name = str_field(line, "workload").ok_or_else(|| err("missing \"workload\""))?;
+        let workload =
+            WorkloadKind::parse(&name).ok_or_else(|| err("unknown \"workload\""))?;
+        events.push(ScriptEvent {
+            at_ms: num_field(line, "at_ms").unwrap_or(0),
+            tenant,
+            workload,
+            bytes: num_field(line, "bytes").unwrap_or(64 << 10),
+            weight: num_field(line, "weight").unwrap_or(1).max(1),
+            seed: num_field(line, "seed").unwrap_or(i as u64 + 1),
+            verify: bool_field(line, "verify").unwrap_or(false),
+        });
+    }
+    events.sort_by_key(|e| e.at_ms);
+    Ok(events)
+}
+
+/// Parse a comma-separated workload mix (`"grep,pagerank"`).
+pub fn parse_mix(s: &str) -> Result<Vec<WorkloadKind>, String> {
+    let mut mix = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        mix.push(WorkloadKind::parse(part).ok_or_else(|| format!("unknown workload '{part}'"))?);
+    }
+    if mix.is_empty() {
+        return Err("empty workload mix".into());
+    }
+    Ok(mix)
+}
+
+/// Synthesize an open-loop schedule: `jobs` arrivals `gap_ms` apart,
+/// tenants round-robin, workloads cycling through `mix`.
+pub fn synthetic(
+    tenants: usize,
+    jobs: usize,
+    mix: &[WorkloadKind],
+    gap_ms: u64,
+    bytes: u64,
+    verify: bool,
+) -> Vec<ScriptEvent> {
+    assert!(!mix.is_empty(), "synthetic schedule needs a non-empty mix");
+    (0..jobs)
+        .map(|i| ScriptEvent {
+            at_ms: i as u64 * gap_ms,
+            tenant: format!("tenant-{}", i % tenants.max(1)),
+            workload: mix[i % mix.len()],
+            bytes,
+            weight: 1,
+            seed: i as u64 + 1,
+            verify,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_array_with_defaults_and_sorts() {
+        let text = r#"[
+            {"at_ms": 20, "tenant": "b", "workload": "grep"},
+            {"tenant":"a","workload":"pagerank","bytes":1024,"weight":3,"seed":9,"verify":true},
+        ]"#;
+        let events = parse_script(text).unwrap();
+        assert_eq!(events.len(), 2);
+        // Sorted by at_ms: the defaulted (0) event first.
+        assert_eq!(events[0].tenant, "a");
+        assert_eq!(events[0].workload, WorkloadKind::PageRank);
+        assert_eq!((events[0].bytes, events[0].weight, events[0].seed), (1024, 3, 9));
+        assert!(events[0].verify);
+        assert_eq!(events[1].at_ms, 20);
+        assert_eq!(events[1].bytes, 64 << 10);
+        assert!(!events[1].verify);
+    }
+
+    #[test]
+    fn rejects_unknown_workload_and_missing_tenant() {
+        assert!(parse_script(r#"{"tenant": "a", "workload": "mystery"}"#).is_err());
+        assert!(parse_script(r#"{"workload": "grep"}"#).is_err());
+    }
+
+    #[test]
+    fn synthetic_cycles_tenants_and_mix() {
+        let mix = parse_mix("grep, pagerank").unwrap();
+        let events = synthetic(2, 4, &mix, 10, 4096, false);
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[3].at_ms, 30);
+        assert_eq!(events[2].tenant, "tenant-0");
+        assert_eq!(events[3].workload, WorkloadKind::PageRank);
+        assert_eq!(events[1].workload, WorkloadKind::PageRank);
+    }
+}

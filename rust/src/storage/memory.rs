@@ -245,6 +245,33 @@ impl MemoryTier {
         self.inner.lock().unwrap().bytes
     }
 
+    /// Estimated bytes resident across every namespace in `[lo, hi)` —
+    /// the per-tenant accounting behind [`super::TieredStore`] namespace
+    /// quotas (a tenant's datasets live in one contiguous namespace
+    /// range). Linear in the number of resident entries.
+    pub fn bytes_in_namespace_range(&self, lo: u64, hi: u64) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .filter(|(k, _)| k.namespace >= lo && k.namespace < hi)
+            .map(|(_, slot)| slot.bytes)
+            .sum()
+    }
+
+    /// The size estimate a resident entry was admitted under (`None`
+    /// when absent). Does not touch recency or stats.
+    pub fn entry_bytes(&self, key: &CacheKey) -> Option<u64> {
+        self.inner.lock().unwrap().slots.get(key).map(|slot| slot.bytes)
+    }
+
+    /// Count a rejection decided by a wrapper above this tier (the
+    /// tiered store's namespace quotas refuse entries before they reach
+    /// [`put`](Self::put), but the refusal belongs in these stats).
+    pub(crate) fn count_rejection(&self) {
+        self.rejected.fetch_add(1, Relaxed);
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().slots.len()
     }

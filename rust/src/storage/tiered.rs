@@ -23,6 +23,17 @@
 //!
 //! Plain [`put`](TieredStore::put)/[`get_typed`](TieredStore::get_typed)
 //! entries (no serializer) keep the PR 3 semantics: evicted means gone.
+//!
+//! # Namespace quotas
+//!
+//! [`set_namespace_quota`](TieredStore::set_namespace_quota) caps the
+//! memory tier's residency over a half-open namespace range — the job
+//! service gives each tenant a contiguous namespace range, so this is
+//! the per-tenant memory quota. An insert that would push its range
+//! over the cap is demoted to the disk tier at birth (or rejected when
+//! no disk tier is attached), and promotion out of the disk tier
+//! respects the cap too. The global budget and the eviction policy are
+//! unchanged — quotas only decide *whose* entries may occupy memory.
 
 use std::any::Any;
 use std::collections::HashMap;
@@ -35,10 +46,23 @@ use crate::util::ser::{Decode, Encode};
 use super::trace::{TraceOp, TraceRecorder};
 use super::{BlockStore, DiskTier, EncodeFn, MemoryTier, PolicySpec, StorageStats, Victim};
 
+/// One per-tenant memory cap: at most `bytes` of the memory tier may
+/// be occupied by entries whose namespace falls in `[lo, hi)`.
+#[derive(Clone, Copy, Debug)]
+struct NamespaceQuota {
+    lo: u64,
+    hi: u64,
+    bytes: u64,
+}
+
 /// Memory tier + optional disk tier (see module docs).
 pub struct TieredStore {
     mem: MemoryTier,
     disk: Option<Arc<DiskTier>>,
+    /// Per-namespace-range memory caps (see module docs). The lock is
+    /// held across the quota check *and* the memory insert so two racing
+    /// writers of one tenant cannot both squeeze under the cap.
+    quotas: Mutex<Vec<NamespaceQuota>>,
     /// Original `HeapSize` estimates of entries currently parked on
     /// disk. Promotion re-admits an entry at the estimate it was first
     /// admitted under — wire size and heap estimate are different units,
@@ -73,6 +97,7 @@ impl TieredStore {
         Self {
             mem: MemoryTier::with_policy(budget, policy),
             disk: None,
+            quotas: Mutex::new(Vec::new()),
             demoted_est: Mutex::new(HashMap::new()),
             trace: Mutex::new(None),
             trace_active: AtomicBool::new(false),
@@ -90,6 +115,7 @@ impl TieredStore {
         Self {
             mem: MemoryTier::with_policy(budget, policy),
             disk: Some(disk),
+            quotas: Mutex::new(Vec::new()),
             demoted_est: Mutex::new(HashMap::new()),
             trace: Mutex::new(None),
             trace_active: AtomicBool::new(false),
@@ -103,6 +129,45 @@ impl TieredStore {
     /// The eviction policy the memory tier was built with.
     pub fn policy(&self) -> PolicySpec {
         self.mem.policy()
+    }
+
+    /// Cap memory-tier residency for namespaces in `[lo, hi)` at
+    /// `bytes` (see module docs — this is the service layer's per-tenant
+    /// quota). Replaces an existing quota over the identical range.
+    /// Entries already resident are not expelled; the cap binds from the
+    /// next insert on.
+    pub fn set_namespace_quota(&self, lo: u64, hi: u64, bytes: u64) {
+        let mut quotas = self.quotas.lock().unwrap();
+        if let Some(q) = quotas.iter_mut().find(|q| q.lo == lo && q.hi == hi) {
+            q.bytes = bytes;
+        } else {
+            quotas.push(NamespaceQuota { lo, hi, bytes });
+        }
+    }
+
+    /// The quota cap covering `namespace`, if one is set.
+    pub fn namespace_quota_bytes(&self, namespace: u64) -> Option<u64> {
+        let quotas = self.quotas.lock().unwrap();
+        quotas.iter().find(|q| namespace >= q.lo && namespace < q.hi).map(|q| q.bytes)
+    }
+
+    /// Estimated memory-tier bytes resident across namespaces `[lo, hi)`
+    /// — the usage side of [`set_namespace_quota`](Self::set_namespace_quota).
+    pub fn bytes_in_namespace_range(&self, lo: u64, hi: u64) -> u64 {
+        self.mem.bytes_in_namespace_range(lo, hi)
+    }
+
+    /// Would admitting `est` bytes under `key` keep its namespace range
+    /// within quota? Ranges without a quota always pass. An overwrite is
+    /// credited the bytes of the entry it replaces.
+    fn quota_allows(&self, quotas: &[NamespaceQuota], key: &CacheKey, est: u64) -> bool {
+        let Some(q) = quotas.iter().find(|q| key.namespace >= q.lo && key.namespace < q.hi)
+        else {
+            return true;
+        };
+        let resident = self.mem.bytes_in_namespace_range(q.lo, q.hi);
+        let replaced = self.mem.entry_bytes(key).unwrap_or(0);
+        resident.saturating_sub(replaced) + est <= q.bytes
     }
 
     /// Attach an access-trace recorder: every subsequent `get`/`put`
@@ -178,7 +243,15 @@ impl TieredStore {
     /// key — the tiers never hold two versions of one entry.
     pub fn put(&self, key: CacheKey, value: Arc<dyn Any + Send + Sync>, bytes: u64) -> bool {
         self.trace(TraceOp::Put, key, bytes);
+        let quotas = self.quotas.lock().unwrap();
+        if !self.quota_allows(&quotas, &key, bytes) {
+            // No serializer, so there is nothing to demote at birth: an
+            // over-quota plain entry is simply refused.
+            self.mem.count_rejection();
+            return false;
+        }
         let (admitted, victims) = self.mem.put(key, value, bytes, None);
+        drop(quotas);
         if admitted {
             self.drop_disk_copy(&key);
         }
@@ -211,16 +284,26 @@ impl TieredStore {
             // No disk (or storage off): degrade to the memory-only path,
             // keeping the serializer so a later spill attachment — or a
             // plain-put eviction — can still demote it.
+            let quotas = self.quotas.lock().unwrap();
+            if !self.quota_allows(&quotas, &key, bytes) {
+                self.mem.count_rejection();
+                return false;
+            }
             let encode = self.encoder(&value);
             let erased: Arc<dyn Any + Send + Sync> = value;
             let (admitted, victims) = self.mem.put(key, erased, bytes, Some(encode));
+            drop(quotas);
             self.demote(victims);
             return admitted;
         }
         let disk = self.disk.as_ref().unwrap();
-        if !self.mem.fits(bytes) {
-            // Too large for the whole memory tier: straight to disk. Any
-            // older in-memory version of the key is superseded.
+        let quotas = self.quotas.lock().unwrap();
+        if !self.mem.fits(bytes) || !self.quota_allows(&quotas, &key, bytes) {
+            // Too large for the whole memory tier, or the key's namespace
+            // range is out of quota headroom: straight to disk (a
+            // demotion at birth). Any older in-memory version of the key
+            // is superseded — removing it also releases its quota share.
+            drop(quotas);
             let payload = value.to_bytes();
             return match disk.write(key, &payload) {
                 Ok(_) => {
@@ -238,6 +321,7 @@ impl TieredStore {
         let encode = self.encoder(&value);
         let erased: Arc<dyn Any + Send + Sync> = value;
         let (admitted, victims) = self.mem.put(key, erased, bytes, Some(Arc::clone(&encode)));
+        drop(quotas);
         if admitted {
             // The fresh insert supersedes any demoted copy of this key.
             self.drop_disk_copy(&key);
@@ -310,11 +394,15 @@ impl TieredStore {
             .copied()
             .unwrap_or(payload.len() as u64);
         self.mem.reclassify_miss_as_hit();
-        if self.mem.fits(est) {
+        let quotas = self.quotas.lock().unwrap();
+        // Promotion respects the namespace quota too: an out-of-quota
+        // tenant's blocks are served from disk without re-entering memory.
+        if self.mem.fits(est) && self.quota_allows(&quotas, key, est) {
             let _span = crate::trace::span_arg(crate::trace::SpanCat::Promote, "promote", est);
             let encode = self.encoder(&value);
             let erased: Arc<dyn Any + Send + Sync> = Arc::clone(&value);
             let (admitted, victims) = self.mem.put(*key, erased, est, Some(encode));
+            drop(quotas);
             self.demote(victims);
             if admitted {
                 // Tiers stay exclusive: the promoted copy owns the entry
@@ -547,6 +635,43 @@ mod tests {
         assert!(s.put_encoded(key(1), Arc::new(vec![7u64; 50]), 500));
         assert_eq!(s.len(), 0, "shadowed memory copy removed");
         assert_eq!(*s.get_encoded::<Vec<u64>>(&key(1)).unwrap(), vec![7u64; 50]);
+    }
+
+    #[test]
+    fn namespace_quota_demotes_at_birth_and_gates_promotion() {
+        let s = store(1000);
+        // Tenant A = namespaces [100, 200), capped at 100 bytes.
+        s.set_namespace_quota(100, 200, 100);
+        let k = |ns, p| CacheKey { namespace: ns, generation: 0, partition: p, splits: 1 };
+        assert!(s.put_encoded(k(100, 0), Arc::new(vec![1u64]), 80));
+        assert_eq!(s.len(), 1, "within quota: resident in memory");
+        // The second insert would put the range at 160 > 100: demoted at
+        // birth even though the global budget (1000) has plenty of room.
+        assert!(s.put_encoded(k(150, 1), Arc::new(vec![2u64]), 80));
+        assert_eq!(s.len(), 1, "over-quota entry parked on disk");
+        assert!(s.bytes_in_namespace_range(100, 200) <= 100);
+        assert_eq!(s.storage_stats().demotions, 1);
+        // A read serves it from disk but must not promote it past quota.
+        assert_eq!(*s.get_encoded::<Vec<u64>>(&k(150, 1)).unwrap(), vec![2]);
+        assert!(s.bytes_in_namespace_range(100, 200) <= 100);
+        assert_eq!(s.storage_stats().promotions, 0);
+        // Another tenant's namespaces are unaffected.
+        assert!(s.put_encoded(k(300, 2), Arc::new(vec![3u64]), 80));
+        assert_eq!(s.len(), 2);
+        // Overwriting a resident key at the same size stays in quota.
+        assert!(s.put_encoded(k(100, 0), Arc::new(vec![9u64]), 80));
+        assert_eq!(*s.get_encoded::<Vec<u64>>(&k(100, 0)).unwrap(), vec![9]);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn namespace_quota_without_disk_rejects() {
+        let s = TieredStore::new(CacheBudget::Bytes(1000));
+        s.set_namespace_quota(0, 10, 50);
+        assert!(s.put_encoded(key(1), Arc::new(vec![1u64]), 40));
+        assert!(!s.put_encoded(key(2), Arc::new(vec![2u64]), 40), "no disk: refused");
+        assert_eq!(s.stats().rejected, 1);
+        assert!(!s.contains(&key(2)));
     }
 
     #[test]

@@ -82,6 +82,14 @@ pub enum SpanCat {
     Round,
     /// Driver-side `advance`/state fold of an iterative round.
     Driver,
+    /// Time a job's stage spent waiting for a scheduler slot (`arg` =
+    /// tenant id).
+    QueueWait,
+    /// One admission decision by the job service (`arg` = tenant id).
+    Admission,
+    /// A fair-queue pick that bypassed an older waiter from another
+    /// tenant (`arg` = the bypassed tenant's id).
+    Preemption,
 }
 
 impl SpanCat {
@@ -103,6 +111,9 @@ impl SpanCat {
             SpanCat::Bridge => "bridge",
             SpanCat::Round => "round",
             SpanCat::Driver => "driver",
+            SpanCat::QueueWait => "queue-wait",
+            SpanCat::Admission => "admission",
+            SpanCat::Preemption => "preemption",
         }
     }
 }

@@ -238,6 +238,25 @@
 //! optimizing. See the README's Observability section for the span
 //! taxonomy.
 //!
+//! # Running under the service layer
+//!
+//! Workloads need nothing special to run multi-tenant: the service
+//! ([`crate::service`]) isolates tenants entirely through the cache-key
+//! scheme every workload already uses. Each tenant owns a contiguous
+//! **namespace range** (`[(i+1)·2³², (i+2)·2³²)`, set on the spec via
+//! [`crate::mapreduce::JobSpec::namespace_base`]) and each submitted
+//! job offsets **generations** by `job_seq · 2²⁰`
+//! ([`crate::mapreduce::JobSpec::generation_base`]) — iterative drivers bump
+//! per-round generations inside that window, so no two jobs in one
+//! shared [`crate::storage::TieredStore`] ever reuse a
+//! `(namespace, generation)` pair. The only contract a workload author
+//! inherits: derive cache keys from the spec's bases (the engines and
+//! drivers already do), never from hard-coded namespaces. If your
+//! workload caches aggressively, note that a tenant over its
+//! `--tenant-quota` has inserts demoted to disk at birth — correctness
+//! is unaffected (the catalog's oracle checks run under quotas in
+//! `tests/integration_service.rs`), only locality.
+//!
 //! [`mapreduce::run_serial`]: crate::mapreduce::run_serial
 //! [`mapreduce::run_serial_inputs`]: crate::mapreduce::run_serial_inputs
 //! [`mapreduce::run_iterative_serial`]: crate::mapreduce::run_iterative_serial

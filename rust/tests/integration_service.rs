@@ -1,0 +1,200 @@
+//! The service layer's acceptance gate: a job submitted through the
+//! multi-tenant [`JobService`] must be **bit-identical** to the same
+//! workload run serially — under concurrent mixed-tenant load, at
+//! executor widths 1 and 8, with the shared store squeezed to a 2 KB
+//! budget and every exchange forced onto the spill path. Each request
+//! carries `verify(true)`, so the in-job oracle check (serial
+//! `run_serial*` / `run_iterative_serial` comparison inside the catalog)
+//! turns any divergence into a `Failed` status; on top of that the
+//! tests assert cross-tenant determinism (same request → same canonical
+//! lines regardless of which tenant ran it and what ran beside it) and
+//! that the admission ledger balances.
+
+use blaze::cache::CacheBudget;
+use blaze::cluster::FailurePlan;
+use blaze::service::{
+    JobRequest, JobService, JobStatus, SchedPolicy, ServiceConf, WorkloadKind, TENANT_NS_SPAN,
+};
+
+/// Far below every test corpus's working set: shuffles spill, the shared
+/// store demotes.
+const TINY: u64 = 2 << 10;
+
+fn squeezed(threads: usize) -> ServiceConf {
+    ServiceConf::new()
+        .threads(threads)
+        .slots(2)
+        .store_budget(CacheBudget::Bytes(TINY))
+        .spill_threshold(TINY)
+        .tenant_quota(TINY)
+}
+
+const KINDS: [WorkloadKind; 4] =
+    [WorkloadKind::Grep, WorkloadKind::WordCount, WorkloadKind::Join, WorkloadKind::PageRank];
+
+/// N tenants × every workload kind, all in flight at once, each
+/// self-verified against the serial oracle, at widths 1 and 8.
+#[test]
+fn concurrent_mixed_tenants_match_serial_oracle() {
+    for threads in [1usize, 8] {
+        let svc = JobService::new(squeezed(threads));
+        let mut handles = Vec::new();
+        for tenant in ["alpha", "beta", "gamma"] {
+            for kind in KINDS {
+                let req = JobRequest::new(tenant, kind)
+                    .bytes(12 << 10)
+                    .seed(41)
+                    .rounds(2)
+                    .verify(true);
+                handles.push(svc.submit(req).expect("under the admission cap"));
+            }
+        }
+        // Same request, different tenants: outputs must be byte-equal, so
+        // collect per-kind line renderings and compare across tenants.
+        let mut lines_by_kind: Vec<Vec<(String, Vec<String>)>> = vec![Vec::new(); KINDS.len()];
+        for h in &handles {
+            match h.wait() {
+                JobStatus::Done(s) => {
+                    assert!(s.verified, "job {} ({}) skipped its oracle check", h.id(), h.tenant());
+                    assert!(!s.lines.is_empty(), "job {} produced no output", h.id());
+                    let slot = KINDS.iter().position(|k| *k == h.kind()).unwrap();
+                    lines_by_kind[slot].push((h.tenant().to_string(), s.lines));
+                }
+                other => panic!(
+                    "@{threads}T job {} ({} {}) ended {}",
+                    h.id(),
+                    h.tenant(),
+                    h.kind().name(),
+                    other.label()
+                ),
+            }
+        }
+        for (kind, runs) in KINDS.iter().zip(&lines_by_kind) {
+            let (_, first) = &runs[0];
+            for (tenant, lines) in runs {
+                assert_eq!(
+                    lines,
+                    first,
+                    "@{threads}T {}: tenant {tenant} diverged from tenant {}",
+                    kind.name(),
+                    runs[0].0
+                );
+            }
+        }
+        let report = svc.shutdown();
+        assert_eq!(report.completed, 12, "@{threads}T:\n{}", report.render());
+        assert!(report.balances(), "@{threads}T:\n{}", report.render());
+    }
+}
+
+/// Tenant quotas hold under load: while squeezed jobs run, no tenant's
+/// resident bytes in the shared store ever exceed its quota.
+#[test]
+fn tenant_store_residency_stays_under_quota() {
+    let svc = JobService::new(squeezed(2));
+    let mut handles = Vec::new();
+    for tenant in ["alpha", "beta"] {
+        for _ in 0..2 {
+            let req =
+                JobRequest::new(tenant, WorkloadKind::PageRank).bytes(24 << 10).rounds(3);
+            handles.push(svc.submit(req).expect("under the admission cap"));
+        }
+    }
+    // Poll residency while jobs are in flight, then once more after.
+    while svc.in_flight() > 0 {
+        for idx in 0..2u64 {
+            let base = (idx + 1) * TENANT_NS_SPAN;
+            let resident = svc.store().bytes_in_namespace_range(base, base + TENANT_NS_SPAN);
+            assert!(
+                resident <= TINY,
+                "tenant {idx} resident {resident} B exceeds quota {TINY} B"
+            );
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    for h in &handles {
+        assert!(matches!(h.wait(), JobStatus::Done(_)));
+    }
+    let report = svc.shutdown();
+    assert!(report.balances(), "{}", report.render());
+    for t in &report.tenants {
+        assert!(
+            t.metrics.count("store.resident") <= t.metrics.count("store.quota"),
+            "tenant {}: {}",
+            t.name,
+            t.metrics
+        );
+    }
+}
+
+/// Failure isolation: injected failures that kill one tenant's job leave
+/// every other tenant's concurrently-running verified jobs untouched.
+#[test]
+fn one_tenants_failure_does_not_touch_other_tenants() {
+    for policy in [SchedPolicy::Fair, SchedPolicy::Fifo] {
+        let svc = JobService::new(squeezed(2).policy(policy));
+        // The doomed job: an unrecoverable node loss (no reruns allowed).
+        let doomed = svc
+            .submit(
+                JobRequest::new("victim", WorkloadKind::WordCount)
+                    .bytes(16 << 10)
+                    .failures(FailurePlan::none().fail_node(0, 0))
+                    .max_job_reruns(0),
+            )
+            .expect("admitted");
+        let mut healthy = Vec::new();
+        for tenant in ["alpha", "beta"] {
+            for kind in KINDS {
+                let req =
+                    JobRequest::new(tenant, kind).bytes(8 << 10).rounds(2).verify(true);
+                healthy.push(svc.submit(req).expect("admitted"));
+            }
+        }
+        assert!(
+            matches!(doomed.wait(), JobStatus::Failed(_)),
+            "unrecoverable node loss must fail the job"
+        );
+        for h in &healthy {
+            match h.wait() {
+                JobStatus::Done(s) => assert!(s.verified),
+                other => panic!(
+                    "{policy:?}: healthy job {} ({} {}) ended {}",
+                    h.id(),
+                    h.tenant(),
+                    h.kind().name(),
+                    other.label()
+                ),
+            }
+        }
+        let report = svc.shutdown();
+        assert_eq!((report.completed, report.failed), (8, 1), "{}", report.render());
+        assert!(report.balances(), "{}", report.render());
+    }
+}
+
+/// A recoverable failure inside one tenant's job is invisible at the
+/// service surface: the job retries internally and still verifies.
+#[test]
+fn recoverable_failure_inside_a_job_still_verifies() {
+    let svc = JobService::new(squeezed(2));
+    let flaky = svc
+        .submit(
+            JobRequest::new("flaky", WorkloadKind::WordCount)
+                .bytes(16 << 10)
+                .failures(FailurePlan::none().fail_node(0, 0))
+                .verify(true),
+        )
+        .expect("admitted");
+    let calm = svc
+        .submit(JobRequest::new("calm", WorkloadKind::Grep).bytes(8 << 10).verify(true))
+        .expect("admitted");
+    for h in [&flaky, &calm] {
+        match h.wait() {
+            JobStatus::Done(s) => assert!(s.verified),
+            other => panic!("job {} ended {}", h.id(), other.label()),
+        }
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.completed, 2);
+    assert!(report.balances(), "{}", report.render());
+}

@@ -1345,3 +1345,125 @@ fn prop_executor_panic_injection() {
         Ok(())
     });
 }
+
+/// Random arrival schedules through the multi-tenant job service vs the
+/// reference accounting model: no job is lost or duplicated (every
+/// admitted handle reaches exactly one stable terminal state), the
+/// admission ledger balances (`submitted == completed + failed +
+/// cancelled + rejected`), and no tenant's resident bytes in the shared
+/// store exceed its quota.
+#[test]
+fn prop_service_random_arrivals_balance() {
+    use blaze::cache::CacheBudget;
+    use blaze::service::{
+        AdmissionError, JobRequest, JobService, JobStatus, SchedPolicy, ServiceConf,
+        WorkloadKind, TENANT_NS_SPAN,
+    };
+
+    const QUOTA: u64 = 2 << 10;
+    const KINDS: [WorkloadKind; 4] = [
+        WorkloadKind::Grep,
+        WorkloadKind::WordCount,
+        WorkloadKind::Join,
+        WorkloadKind::PageRank,
+    ];
+
+    check_with(Config { cases: 6, ..Default::default() }, "service-random-arrivals", |g| {
+        let policy = if g.bool() { SchedPolicy::Fair } else { SchedPolicy::Fifo };
+        let conf = ServiceConf::new()
+            .threads(g.usize_in(1, 4))
+            .slots(g.usize_in(1, 3))
+            .queue_cap(g.usize_in(2, 6))
+            .policy(policy)
+            .store_budget(CacheBudget::Bytes(QUOTA))
+            .spill_threshold(QUOTA)
+            .tenant_quota(QUOTA);
+        let svc = JobService::new(conf);
+        let ntenants = g.usize_in(1, 3);
+        let jobs = g.usize_in(3, 10);
+
+        // Reference model: count what we observed at the submit surface.
+        let mut submitted = 0u64;
+        let mut rejected = 0u64;
+        let mut handles = Vec::new();
+        let mut cancel_asked = std::collections::HashSet::new();
+        for i in 0..jobs {
+            let tenant = format!("t{}", g.usize_in(0, ntenants - 1));
+            let kind = *g.choose(&KINDS);
+            let req = JobRequest::new(tenant, kind)
+                .bytes(g.usize_in(2 << 10, 12 << 10) as u64)
+                .rounds(2)
+                .seed(i as u64 + 1);
+            submitted += 1;
+            match svc.submit(req) {
+                Ok(h) => {
+                    if g.chance(0.2) && h.cancel() {
+                        cancel_asked.insert(h.id());
+                    }
+                    handles.push(h);
+                }
+                Err(AdmissionError::Saturated { in_flight, cap }) => {
+                    if in_flight < cap {
+                        return fail(format!("saturated below cap: {in_flight} < {cap}"));
+                    }
+                    rejected += 1;
+                }
+                Err(e) => return fail(format!("unexpected refusal: {e}")),
+            }
+        }
+
+        // Every admitted job reaches exactly one *stable* terminal state.
+        let (mut done, mut cancelled) = (0u64, 0u64);
+        for h in &handles {
+            let first = h.wait();
+            match &first {
+                JobStatus::Done(s) => {
+                    if s.lines.is_empty() {
+                        return fail(format!("job {} completed with no output", h.id()));
+                    }
+                    done += 1;
+                }
+                JobStatus::Cancelled => {
+                    if !cancel_asked.contains(&h.id()) {
+                        return fail(format!("job {} cancelled unasked", h.id()));
+                    }
+                    cancelled += 1;
+                }
+                JobStatus::Failed(e) => return fail(format!("job {} failed: {e}", h.id())),
+                other => return fail(format!("wait returned non-terminal {}", other.label())),
+            }
+            if h.poll().label() != first.label() {
+                return fail(format!("job {} changed terminal state", h.id()));
+            }
+        }
+
+        let store = std::sync::Arc::clone(svc.store());
+        let report = svc.shutdown();
+        if !report.balances() {
+            return fail(format!("ledger out of balance:\n{}", report.render()));
+        }
+        let want = (submitted, rejected, done, cancelled, 0);
+        let got = (
+            report.submitted,
+            report.rejected,
+            report.completed,
+            report.cancelled,
+            report.failed,
+        );
+        if got != want {
+            return fail(format!("ledger {got:?} != observed {want:?}:\n{}", report.render()));
+        }
+        let per_tenant: u64 = report.tenants.iter().map(|t| t.metrics.count("jobs.submitted")).sum();
+        if per_tenant != submitted {
+            return fail(format!("tenant rows sum to {per_tenant}, submitted {submitted}"));
+        }
+        for (i, t) in report.tenants.iter().enumerate() {
+            let base = (i as u64 + 1) * TENANT_NS_SPAN;
+            let resident = store.bytes_in_namespace_range(base, base + TENANT_NS_SPAN);
+            if resident > QUOTA {
+                return fail(format!("tenant {} resident {resident} B > quota {QUOTA} B", t.name));
+            }
+        }
+        Ok(())
+    });
+}
